@@ -1,0 +1,18 @@
+use anyhow::Result;
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    for name in ["r_only", "pow_only", "pallas_only"] {
+        let proto = xla::HloModuleProto::from_text_file(&format!("/tmp/bisect_{name}.hlo.txt"))?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let x: Vec<f32> = (0..24).map(|i| ((i%5) as f32 - 2.0)*0.3).collect();
+        let mut w = vec![0.0f32; 12];
+        for i in 0..4 { w[i*3] = 1.0; }
+        let xl = xla::Literal::vec1(&x).reshape(&[8, 3])?;
+        let wl = xla::Literal::vec1(&w).reshape(&[4, 3])?;
+        let out = exe.execute::<xla::Literal>(&[xl, wl])?[0][0].to_literal_sync()?;
+        let v = out.to_tuple1()?.to_vec::<f32>()?;
+        let nz = v.iter().filter(|&&a| a != 0.0).count();
+        println!("{name}: nonzero {}/{} first6 {:?}", nz, v.len(), &v[..6]);
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Table-3-style workload: kernel k-means on the UCI-geometry clustering
+//! datasets via random Gegenbauer features.
+//!
+//! Run: cargo run --release --example kmeans_uci [-- --dataset abalone --m 512]
+
+use gzk::cli::Args;
+use gzk::data::{clustering_dataset, CLUSTERING_SPECS};
+use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+use gzk::kmeans::{greedy_accuracy, kmeans};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let name = args.get("dataset").unwrap_or("abalone").to_string();
+    let m = args.get_usize("m", 512);
+    let scale = args.get_f64("scale", 0.25);
+    let seed = args.get_u64("seed", 1);
+
+    let spec = *CLUSTERING_SPECS
+        .iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("unknown dataset {name}; options: {:?}",
+            CLUSTERING_SPECS.iter().map(|s| s.name).collect::<Vec<_>>()));
+    let scaled = gzk::data::ClusteringSpec {
+        name: spec.name,
+        n: ((spec.n as f64 * scale) as usize).max(50 * spec.k),
+        d: spec.d,
+        k: spec.k,
+    };
+    println!("== kernel k-means on {} (n={}, d={}, k={}) ==", spec.name, scaled.n, spec.d, spec.k);
+    let ds = clustering_dataset(scaled, seed);
+
+    let s = if spec.d > 16 { 1 } else { 2 };
+    let q = (spec.d / 2 + 6).min(12);
+    let feat = GegenbauerFeatures::new(RadialTable::gaussian(spec.d, q, s), m / s, seed);
+    let t0 = std::time::Instant::now();
+    let z = feat.featurize(&ds.x);
+    println!("featurized in {:.2}s -> Z {}x{}", t0.elapsed().as_secs_f64(), z.rows(), z.cols());
+
+    let res = kmeans(&z, spec.k, 50, seed);
+    println!(
+        "k-means objective {:.4} after {} Lloyd iterations",
+        res.objective, res.iterations
+    );
+    let acc = greedy_accuracy(&res.assignments, &ds.labels, spec.k);
+    println!("greedy label accuracy vs generator ground truth: {:.1}%", 100.0 * acc);
+}

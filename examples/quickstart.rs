@@ -1,0 +1,50 @@
+//! Quickstart: approximate a Gaussian kernel with random Gegenbauer
+//! features, fit ridge regression, and verify against the exact kernel.
+//!
+//! Run: cargo run --release --example quickstart
+
+use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+use gzk::kernels::Kernel;
+use gzk::krr::{mse, ExactKrr, FeatureRidge};
+use gzk::linalg::Mat;
+use gzk::rng::Rng;
+use gzk::spectral::spectral_epsilon;
+
+fn main() {
+    // 1. a toy dataset: y = sin(2 x0) + x1 * x2 + noise
+    let mut rng = Rng::new(7);
+    let n = 400;
+    let x = Mat::from_fn(n, 3, |_, _| rng.normal() * 0.6);
+    let y: Vec<f64> =
+        (0..n).map(|i| (2.0 * x[(i, 0)]).sin() + x[(i, 1)] * x[(i, 2)] + 0.05 * rng.normal()).collect();
+
+    // 2. the paper's feature map: Gaussian kernel as a GZK, truncated at
+    //    (q, s), m random directions on S^2
+    // points here have norms up to ~2, so keep enough radial channels
+    // (s) for the Gaussian GZK truncation to stay unbiased (Thm 12)
+    let table = RadialTable::gaussian(/*d=*/ 3, /*q=*/ 14, /*s=*/ 5);
+    let feat = GegenbauerFeatures::new(table, /*m=*/ 1024, /*seed=*/ 42);
+    let z = feat.featurize(&x);
+    println!("featurized {} points -> Z is {}x{}", n, z.rows(), z.cols());
+
+    // 3. how good is the kernel approximation? (Eq. 1)
+    let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+    let eps = spectral_epsilon(&k, &z.matmul_nt(&z), 0.1);
+    println!("(eps, lambda=0.1)-spectral approximation: eps = {eps:.3}");
+
+    // 4. ridge regression in feature space vs the exact kernel solver
+    let lam = 1e-2;
+    let model = FeatureRidge::fit(&z, &y, lam);
+    let exact = ExactKrr::fit(Kernel::Gaussian { bandwidth: 1.0 }, x.clone(), &y, lam);
+
+    let x_test = Mat::from_fn(100, 3, |_, _| rng.normal() * 0.6);
+    let y_test: Vec<f64> = (0..100)
+        .map(|i| (2.0 * x_test[(i, 0)]).sin() + x_test[(i, 1)] * x_test[(i, 2)])
+        .collect();
+    let z_test = feat.featurize(&x_test);
+    let mse_feat = mse(&model.predict(&z_test), &y_test);
+    let mse_exact = mse(&exact.predict(&x_test), &y_test);
+    println!("test MSE: gegenbauer features {mse_feat:.4} vs exact KRR {mse_exact:.4}");
+    assert!(mse_feat < 2.0 * mse_exact + 0.01, "features should track the exact solver");
+    println!("quickstart OK");
+}

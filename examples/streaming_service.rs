@@ -1,0 +1,151 @@
+//! END-TO-END DRIVER (DESIGN.md §4): exercises every layer of the system on
+//! a real small workload —
+//!
+//!   1. synthetic Earth-elevation dataset (S^2 regression);
+//!   2. one-round distributed featurization + KRR across worker threads,
+//!      featurizing through the AOT jax/Pallas PJRT executables when the
+//!      artifacts are present (falling back to the native path otherwise);
+//!   3. single-pass STREAMING ingestion of a second data wave;
+//!   4. batched prediction serving with latency/throughput reporting.
+//!
+//! Run: make e2e   (or: cargo run --release --example streaming_service)
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use gzk::cli::Args;
+use gzk::coordinator::{
+    fit_one_round, Backend, Family, FeatureSpec, PredictionService, StreamBatch, StreamingKrr,
+};
+use gzk::data;
+use gzk::krr::mse;
+use gzk::runtime::default_artifact_dir;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let n = args.get_usize("n", 30_000);
+    let m = args.get_usize("m", 512);
+    let n_workers = args.get_usize("workers", 4);
+    let n_requests = args.get_usize("requests", 4_000);
+    let seed = args.get_u64("seed", 1);
+
+    println!("=== gzk end-to-end: distributed train -> stream -> serve ===\n");
+
+    // ---- data -----------------------------------------------------------
+    let ds = data::elevation(n, seed);
+    let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed);
+    println!("[data] elevation: {} train / {} test points on S^2", x_tr.rows(), x_te.rows());
+
+    let spec = FeatureSpec {
+        family: Family::Gaussian { bandwidth: 1.0 },
+        d: 3,
+        q: 12,
+        s: 2,
+        m: m / 2,
+        seed,
+    };
+
+    // ---- phase 1: one-round distributed fit (PJRT backend if available) --
+    let artifact_dir = default_artifact_dir();
+    let have_artifacts = artifact_dir.join("manifest.json").exists();
+    let backend = if have_artifacts && !args.has("native") {
+        println!("[train] using PJRT backend (AOT jax/Pallas artifacts at {artifact_dir:?})");
+        Backend::Pjrt { artifact_dir }
+    } else {
+        println!("[train] using native backend (no artifacts found — run `make artifacts`)");
+        Backend::Native
+    };
+    let half = x_tr.rows() / 2;
+    let x_wave1 = x_tr.row_block(0, half);
+    let y_wave1 = &y_tr[..half];
+    let t0 = Instant::now();
+    let fit = fit_one_round(&spec, &x_wave1, y_wave1, 1e-2, n_workers, 2048, backend);
+    println!(
+        "[train] one-round fit: {} rows, {} shards, {} workers, wall {:.2}s (featurize CPU {:.2}s)",
+        fit.stats.n,
+        fit.n_shards,
+        fit.n_workers,
+        t0.elapsed().as_secs_f64(),
+        fit.featurize_secs_total,
+    );
+
+    // ---- phase 2: stream the second wave into the same sufficient stats --
+    let stream = StreamingKrr::start(spec.clone(), 4);
+    let t1 = Instant::now();
+    for lo in (half..x_tr.rows()).step_by(1024) {
+        let hi = (lo + 1024).min(x_tr.rows());
+        stream
+            .handle()
+            .push(StreamBatch { x: x_tr.row_block(lo, hi), y: y_tr[lo..hi].to_vec() })
+            .expect("stream open");
+    }
+    let (_, wave2_stats) = stream.finalize(1e-2);
+    println!(
+        "[stream] single-pass ingested {} more rows in {:.2}s (O(F^2) memory)",
+        wave2_stats.n,
+        t1.elapsed().as_secs_f64()
+    );
+
+    // merge both waves and resolve
+    let mut all_stats = fit.stats;
+    all_stats.merge(&wave2_stats);
+    let lam = 1e-2 * all_stats.n as f64 / 1000.0;
+    let model = all_stats.solve(lam);
+    println!("[train] merged model over {} rows (lambda {lam:.3})", all_stats.n);
+
+    // ---- phase 2b: streaming k-means over the same feature stream --------
+    let feat = spec.build();
+    let mut skm = gzk::kmeans::StreamingKmeans::new(6, spec.feature_dim());
+    let t_km = Instant::now();
+    for lo in (0..x_tr.rows().min(8192)).step_by(1024) {
+        let hi = (lo + 1024).min(x_tr.rows());
+        use gzk::features::Featurizer;
+        skm.absorb(&feat.featurize(&x_tr.row_block(lo, hi)));
+    }
+    {
+        use gzk::features::Featurizer;
+        let z_probe = feat.featurize(&x_te.row_block(0, x_te.rows().min(1024)));
+        println!(
+            "[stream] mini-batch kernel k-means (k=6) over the same stream: objective {:.4} in {:.2}s",
+            skm.objective(&z_probe),
+            t_km.elapsed().as_secs_f64()
+        );
+    }
+
+    // ---- phase 3: serve -------------------------------------------------
+    let svc = PredictionService::start(spec.clone(), model, 64, Duration::ZERO);
+    let client = svc.client();
+    let _ = client.predict(x_te.row(0)); // warmup
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut preds = Vec::with_capacity(n_requests);
+    let t2 = Instant::now();
+    for r in 0..n_requests {
+        let i = r % x_te.rows();
+        let t = Instant::now();
+        preds.push(client.predict(x_te.row(i)).expect("served"));
+        latencies.push(t.elapsed().as_secs_f64());
+    }
+    let wall = t2.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let truth: Vec<f64> = (0..n_requests).map(|r| y_te[r % y_te.len()]).collect();
+    let metrics = svc.metrics();
+
+    println!(
+        "[serve] {} requests in {:.2}s -> {:.0} req/s; p50 {:.1}us p99 {:.1}us; {} batches (max {})",
+        n_requests,
+        wall,
+        n_requests as f64 / wall,
+        latencies[n_requests / 2] * 1e6,
+        latencies[n_requests * 99 / 100] * 1e6,
+        metrics.batches,
+        metrics.max_batch_seen
+    );
+    let test_mse = mse(&preds, &truth);
+    println!("[serve] test MSE over served predictions: {test_mse:.4}");
+
+    // target variance as the trivial baseline — the model must beat it
+    let ybar = y_te.iter().sum::<f64>() / y_te.len() as f64;
+    let var = y_te.iter().map(|v| (v - ybar) * (v - ybar)).sum::<f64>() / y_te.len() as f64;
+    println!("[serve] baseline (predict mean) MSE: {var:.4}");
+    assert!(test_mse < 0.5 * var, "model must clearly beat the mean baseline");
+    println!("\nend-to-end OK");
+}

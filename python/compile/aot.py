@@ -1,0 +1,130 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts + manifest.json.
+
+HLO text (NOT proto .serialize()) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`:  cd python && python -m compile.aot --out ../artifacts
+
+Artifact set (fixed shapes; rust pads/slices):
+  featurize_<family>_d<d>_q<q>_s<s>   — (B=256, d) x (M=128, d) -> (256, 128*s)
+  krr_solve_f<F>                      — (F,F),(F,),() -> (F,)
+The manifest records every artifact's geometry so rust/src/runtime/manifest.rs
+can pick the right executable per dataset dimension.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import radial
+from .model import build_featurize, build_krr_solve
+
+BLOCK_B = 256
+BLOCK_M = 128
+
+# (family, d, q, s) — covers the Table-2 (d=3,4,9) and Table-3
+# (d=8,10,16,21,42; unit-norm inputs) dataset geometries.
+FEATURIZE_CONFIGS = [
+    ("ntk", 3, 16, 1),
+    ("gaussian", 3, 12, 2),
+    ("gaussian", 4, 10, 2),
+    ("gaussian", 8, 8, 2),
+    ("gaussian", 9, 8, 2),
+    ("gaussian", 10, 8, 2),
+    ("gaussian", 16, 6, 2),
+    ("gaussian", 21, 6, 1),
+    ("gaussian", 42, 4, 1),
+]
+
+KRR_SOLVE_DIMS = [512, 1024]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: print with full constant literals. The default printer
+    # elides arrays above a small size threshold as `constant({...})`,
+    # which the C++ text parser silently reads back as ALL ZEROS — the
+    # baked-in radial coefficient tables would vanish (this produced
+    # all-zero features end-to-end before the fix; guarded by
+    # tests/test_model_aot.py::test_no_elided_constants and the rust
+    # parity suite).
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # ... and WITHOUT per-op metadata: new jaxlib emits source_end_line /
+    # source_end_column attributes the 0.5.1 text parser rejects.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def make_table(family: str, d: int, q: int, s: int) -> radial.RadialTable:
+    if family == "gaussian":
+        return radial.gaussian_table(d, q, s)
+    if family == "exponential":
+        return radial.exponential_table(d, q, s)
+    if family == "ntk":
+        return radial.ntk_table(d, q)
+    raise ValueError(family)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"block_b": BLOCK_B, "block_m": BLOCK_M, "artifacts": []}
+
+    for family, d, q, s in FEATURIZE_CONFIGS:
+        table = make_table(family, d, q, s)
+        # m_total = BLOCK_M: the graph scales by 1/sqrt(BLOCK_M); the rust
+        # runtime rescales by sqrt(BLOCK_M / m_total) when chunking a larger
+        # direction set through this executable.
+        fn = build_featurize(table, BLOCK_B, BLOCK_M, BLOCK_M)
+        x_spec = jax.ShapeDtypeStruct((BLOCK_B, d), jnp.float32)
+        w_spec = jax.ShapeDtypeStruct((BLOCK_M, d), jnp.float32)
+        text = to_hlo_text(jax.jit(fn).lower(x_spec, w_spec))
+        assert "{...}" not in text, "HLO printer elided constants"
+        name = f"featurize_{family}_d{d}_q{q}_s{s}"
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name, "kind": "featurize", "family": family,
+            "d": d, "q": q, "s": s, "block_b": BLOCK_B, "block_m": BLOCK_M,
+            "file": fname,
+        })
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    for f_dim in KRR_SOLVE_DIMS:
+        fn = build_krr_solve(f_dim)
+        g_spec = jax.ShapeDtypeStruct((f_dim, f_dim), jnp.float32)
+        b_spec = jax.ShapeDtypeStruct((f_dim,), jnp.float32)
+        l_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        text = to_hlo_text(jax.jit(fn).lower(g_spec, b_spec, l_spec))
+        assert "{...}" not in text, "HLO printer elided constants"
+        assert "custom-call" not in text, "krr_solve must be custom-call free"
+        name = f"krr_solve_f{f_dim}"
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name, "kind": "krr_solve", "f": f_dim, "file": fname,
+        })
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

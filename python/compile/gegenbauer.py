@@ -1,0 +1,107 @@
+"""Gegenbauer polynomial machinery (build-time python mirror of rust/src/special).
+
+Normalized Gegenbauer polynomials P_d^l(t) with P_d^l(1) = 1:
+  d = 2   -> Chebyshev polynomials of the first kind T_l
+  d = 3   -> Legendre polynomials
+  d = inf -> monomials t^l
+
+Three-term recurrence (derived from the classical C_l^{(a)} recurrence with
+a = (d-2)/2 and the normalization C_l^{(a)}(1) = binom(l+2a-1, l)):
+
+  P_0 = 1,  P_1 = t,
+  P_l = A_l * t * P_{l-1} + B_l * P_{l-2}
+  A_l = (2l + d - 4) / (l + d - 3),   B_l = -(l - 1) / (l + d - 3)
+
+which at d=2 degenerates to the Chebyshev recurrence A_l = 2, B_l = -1
+(the formula hits 0/0 at l=1, d=2; l=1 is always P_1 = t).
+"""
+
+import math
+
+import numpy as np
+
+__all__ = [
+    "recurrence_coeffs",
+    "gegenbauer_all",
+    "alpha_dim",
+    "log_alpha_dim",
+    "gegenbauer_series_coeffs",
+    "surface_ratio",
+]
+
+
+def recurrence_coeffs(q: int, d: int) -> tuple[np.ndarray, np.ndarray]:
+    """(A, B) recurrence coefficient arrays of length q+1 (index l; entries
+    for l < 2 are unused placeholders)."""
+    if d < 2:
+        raise ValueError(f"dimension d must be >= 2, got {d}")
+    A = np.zeros(q + 1)
+    B = np.zeros(q + 1)
+    for l in range(2, q + 1):
+        if d == 2:
+            A[l], B[l] = 2.0, -1.0
+        else:
+            A[l] = (2 * l + d - 4) / (l + d - 3)
+            B[l] = -(l - 1) / (l + d - 3)
+    return A, B
+
+
+def gegenbauer_all(q: int, d: int, t: np.ndarray) -> np.ndarray:
+    """Evaluate [P_d^0(t), ..., P_d^q(t)] -> shape (q+1, *t.shape)."""
+    t = np.asarray(t, dtype=np.float64)
+    A, B = recurrence_coeffs(q, d)
+    out = np.empty((q + 1,) + t.shape, dtype=np.float64)
+    out[0] = 1.0
+    if q >= 1:
+        out[1] = t
+    for l in range(2, q + 1):
+        out[l] = A[l] * t * out[l - 1] + B[l] * out[l - 2]
+    return out
+
+
+def alpha_dim(l: int, d: int) -> float:
+    """alpha_{l,d}: dimension of degree-l spherical harmonics in R^d (Eq. 4)."""
+    return math.exp(log_alpha_dim(l, d))
+
+
+def log_alpha_dim(l: int, d: int) -> float:
+    """log alpha_{l,d}, stable for large l/d via lgamma."""
+    if l == 0:
+        return 0.0
+    if l == 1:
+        return math.log(d)
+    # binom(d+l-1, l) - binom(d+l-3, l-2)
+    #   = binom(d+l-3, l) * [ (d+l-1)(d+l-2)/((d-1+l-... )) ... ]; do it directly
+    def log_binom(n: int, k: int) -> float:
+        return math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1)
+
+    a = log_binom(d + l - 1, l)
+    b = log_binom(d + l - 3, l - 2) if d + l - 3 >= l - 2 else -math.inf
+    # a > b always (alpha > 0); use log-sub-exp
+    return a + math.log1p(-math.exp(b - a)) if b > -math.inf else a
+
+
+def surface_ratio(d: int) -> float:
+    """|S^{d-2}| / |S^{d-1}| = Gamma(d/2) / (sqrt(pi) Gamma((d-1)/2))."""
+    return math.exp(math.lgamma(d / 2) - 0.5 * math.log(math.pi) - math.lgamma((d - 1) / 2))
+
+
+def gegenbauer_series_coeffs(fn, q: int, d: int, n_quad: int = 256) -> np.ndarray:
+    """Gegenbauer series coefficients c_0..c_q of a scalar function on [-1,1]
+    (Eq. 8):  c_l = alpha_{l,d} * |S^{d-2}|/|S^{d-1}|
+                    * int_{-1}^{1} fn(t) P_d^l(t) (1-t^2)^{(d-3)/2} dt.
+
+    Uses Gauss-Jacobi quadrature with weight (1-t^2)^{(d-3)/2} so the weight
+    singularity at d=2 (Chebyshev measure) is exact.
+    """
+    from scipy.special import roots_jacobi
+
+    a = (d - 3) / 2.0
+    nodes, weights = roots_jacobi(n_quad, a, a)
+    fvals = np.asarray([fn(t) for t in nodes], dtype=np.float64)
+    P = gegenbauer_all(q, d, nodes)  # (q+1, n_quad)
+    ratio = surface_ratio(d)
+    coeffs = np.empty(q + 1)
+    for l in range(q + 1):
+        coeffs[l] = alpha_dim(l, d) * ratio * np.sum(weights * fvals * P[l])
+    return coeffs

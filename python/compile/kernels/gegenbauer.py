@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: fused random-Gegenbauer feature tile.
+
+Computes one (B, M*s) output tile of the feature matrix Z (Def. 8):
+
+    T = U @ W^T                                  # one MXU matmul per tile
+    P_0 = 1, P_1 = T, P_l = A_l T P_{l-1} + B_l P_{l-2}   # VPU recurrence
+    Z[b, k, i] = sum_l P_l[b, k] * R[b, l, i]    # fused accumulate
+
+Inputs are pre-normalized on the L2 side: U unit rows, R the radial values
+(already folded with sqrt(alpha_{l,d}) and the 1/sqrt(m) scaling).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): blocks of B=256 data rows by
+M=128 directions keep T, the two recurrence carries and the (B, M*s)
+accumulator resident in VMEM (~0.75 MB at s=2, f32); the l-loop is unrolled
+at trace time since (q, s, d) are artifact-compile-time constants. The only
+MXU op is the [B,d]x[d,M] contraction; everything else is elementwise VPU
+work on (B, M) tiles.
+
+MUST run with interpret=True on CPU PJRT — real TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import gegenbauer as geg
+
+__all__ = ["gegenbauer_feature_tile", "gegenbauer_features_pallas"]
+
+
+def _feature_kernel(u_ref, r_ref, w_ref, o_ref, *, q: int, s: int, A, B):
+    u = u_ref[...]  # [Bb, d]
+    r = r_ref[...]  # [Bb, (q+1)*s]
+    w = w_ref[...]  # [Mb, d]
+    bb = u.shape[0]
+    mb = w.shape[0]
+
+    t = jnp.dot(u, w.T, preferred_element_type=jnp.float32)  # [Bb, Mb]
+
+    # l = 0 term: P_0 = 1
+    acc = jnp.broadcast_to(r[:, None, 0:s], (bb, mb, s)).astype(jnp.float32)
+    if q >= 1:
+        p_prev = jnp.ones_like(t)
+        p_cur = t
+        for l in range(1, q + 1):
+            rl = r[:, l * s : (l + 1) * s]  # [Bb, s]
+            acc = acc + p_cur[:, :, None] * rl[:, None, :]
+            if l < q:
+                p_nxt = (A[l + 1] * t) * p_cur + B[l + 1] * p_prev
+                p_prev, p_cur = p_cur, p_nxt
+    o_ref[...] = acc.reshape(bb, mb * s)
+
+
+def gegenbauer_feature_tile(u, r, w, *, q: int, s: int, d: int,
+                            block_b: int | None = None, block_m: int | None = None):
+    """Tiled pallas_call over the full (n, m) feature matrix.
+
+    u [n, d] unit rows; r [n, (q+1)*s] radial values; w [m, d] directions.
+    Returns Z [n, m*s] in direction-major / radial-minor column order.
+    """
+    n, dd = u.shape
+    m = w.shape[0]
+    assert dd == d and r.shape == (n, (q + 1) * s), (u.shape, r.shape)
+    bb = block_b or min(n, 256)
+    mb = block_m or min(m, 128)
+    assert n % bb == 0 and m % mb == 0, "caller pads to tile multiples"
+
+    A, B = geg.recurrence_coeffs(q, d)
+    kern = functools.partial(_feature_kernel, q=q, s=s,
+                             A=tuple(float(a) for a in A),
+                             B=tuple(float(b) for b in B))
+    grid = (n // bb, m // mb)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, (q + 1) * s), lambda i, j: (i, 0)),
+            pl.BlockSpec((mb, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, mb * s), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m * s), jnp.float32),
+        interpret=True,
+    )(u, r, w)
+
+
+def gegenbauer_features_pallas(x, w, coef, expo, decay: bool,
+                               block_b: int | None = None, block_m: int | None = None):
+    """Full feature map from raw points: L2 pre-processing (norms, radial
+    table evaluation) in jnp + L1 pallas tile. Matches ref.py bit-for-bit up
+    to f32 rounding."""
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    coef = jnp.asarray(coef, jnp.float32)
+    expo = jnp.asarray(expo, jnp.float32)
+    q = coef.shape[0] - 1
+    s = coef.shape[1]
+    n, d = x.shape
+    m = w.shape[0]
+
+    norms = jnp.maximum(jnp.linalg.norm(x, axis=1), 1e-30)
+    u = x / norms[:, None]
+    r = coef[None] * jnp.power(norms[:, None, None], expo[None])
+    if decay:
+        r = r * jnp.exp(-0.5 * norms * norms)[:, None, None]
+    r = (r / jnp.sqrt(jnp.float32(m))).reshape(n, (q + 1) * s)
+    return gegenbauer_feature_tile(u, r, w, q=q, s=s, d=d,
+                                   block_b=block_b, block_m=block_m)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for the random Gegenbauer feature map (Def. 8).
+
+This is the correctness reference the Pallas kernel (gegenbauer.py) and the
+rust native featurizer are tested against. It evaluates the feature map
+directly with stacked recurrence matrices — no tiling, no fusion.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import gegenbauer as geg
+
+__all__ = ["gegenbauer_features_ref", "exact_gram"]
+
+
+def gegenbauer_features_ref(x, w, coef, expo, decay: bool):
+    """Z [n, m*s] with Z[j, k*s + i] = (1/sqrt(m)) * sum_l R[j,l,i] * P_l(t_jk).
+
+    x    [n, d]  raw data points
+    w    [m, d]  unit directions
+    coef [q+1, s], expo [q+1, s] — RadialTable contents
+    """
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    coef = jnp.asarray(coef, dtype=x.dtype)
+    expo = jnp.asarray(expo, dtype=x.dtype)
+    q = coef.shape[0] - 1
+    s = coef.shape[1]
+    n, d = x.shape
+    m = w.shape[0]
+
+    norms = jnp.maximum(jnp.linalg.norm(x, axis=1), 1e-30)  # [n]
+    u = x / norms[:, None]
+    t = u @ w.T  # [n, m]
+
+    # radial values R [n, q+1, s]
+    r = coef[None] * jnp.power(norms[:, None, None], expo[None])
+    if decay:
+        r = r * jnp.exp(-0.5 * norms * norms)[:, None, None]
+
+    # stacked Gegenbauer values P [q+1, n, m]
+    A, B = geg.recurrence_coeffs(q, d)
+    ps = [jnp.ones_like(t)]
+    if q >= 1:
+        ps.append(t)
+    for l in range(2, q + 1):
+        ps.append(A[l] * t * ps[l - 1] + B[l] * ps[l - 2])
+    p = jnp.stack(ps)  # [q+1, n, m]
+
+    z = jnp.einsum("lnm,nls->nms", p, r) / np.sqrt(m)
+    return z.reshape(n, m * s)
+
+
+def exact_gram(x, kind: str = "gaussian", **kw):
+    """Exact kernel Gram matrix (ground truth for unbiasedness tests)."""
+    x = np.asarray(x, dtype=np.float64)
+    if kind == "gaussian":
+        sq = np.sum(x * x, axis=1)
+        return np.exp(-0.5 * (sq[:, None] + sq[None, :] - 2.0 * x @ x.T))
+    if kind == "exponential":
+        gamma = kw.get("gamma", 1.0)
+        return np.exp(gamma * (x @ x.T))
+    if kind == "polynomial":
+        p, c = kw["p"], kw["c"]
+        return (x @ x.T + c) ** p
+    if kind == "ntk":
+        from ..radial import ntk_kappa
+
+        depth = kw.get("depth", 2)
+        norms = np.maximum(np.linalg.norm(x, axis=1), 1e-30)
+        cos = (x @ x.T) / np.outer(norms, norms)
+        return np.outer(norms, norms) * ntk_kappa(np.clip(cos, -1, 1), depth)
+    raise ValueError(f"unknown kernel kind {kind!r}")

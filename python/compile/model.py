@@ -1,0 +1,87 @@
+"""L2: the jax compute graphs that get AOT-lowered to HLO text.
+
+Two graph families:
+
+  featurize(X, W) -> Z    raw data block (B, d) + direction block (M, d) ->
+                          feature tile (B, M*s). Radial tables are baked in
+                          as constants at trace time; the hot inner loop is
+                          the L1 pallas kernel.
+
+  krr_solve(G, b, lam) -> w   Cholesky solve of (G + lam*I) w = b, used by
+                          the L3 leader after the one-round reduction.
+
+Shapes are fixed per artifact (see aot.py); the rust runtime pads inputs to
+the tile shape and slices the outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gegenbauer import gegenbauer_feature_tile
+from .radial import RadialTable
+
+__all__ = ["build_featurize", "build_krr_solve"]
+
+
+def build_featurize(table: RadialTable, block_b: int, block_m: int, m_total: int):
+    """Return f(x[B,d], w[M,d]) -> z[B, M*s] with the 1/sqrt(m_total)
+    Def.-8 scaling baked in (m_total = total directions across all calls)."""
+    coef = jnp.asarray(table.coef, jnp.float32)
+    expo = jnp.asarray(table.expo, jnp.float32)
+    q, s, d = table.q, table.s, table.d
+    inv_sqrt_m = 1.0 / jnp.sqrt(jnp.float32(m_total))
+
+    def featurize(x, w):
+        norms = jnp.maximum(jnp.linalg.norm(x, axis=1), 1e-30)
+        u = x / norms[:, None]
+        r = coef[None] * jnp.power(norms[:, None, None], expo[None])
+        if table.decay:
+            r = r * jnp.exp(-0.5 * norms * norms)[:, None, None]
+        r = (r * inv_sqrt_m).reshape(x.shape[0], (q + 1) * s)
+        z = gegenbauer_feature_tile(u, r, w, q=q, s=s, d=d,
+                                    block_b=block_b, block_m=block_m)
+        return (z,)
+
+    return featurize
+
+
+def build_krr_solve(f: int, iters: int = 128):
+    """Return f(g[F,F], b[F], lam[]) -> w[F]: (G + lam I)^-1 b.
+
+    Implemented as Jacobi-preconditioned conjugate gradient with a fixed
+    iteration count. Why not jnp.linalg.cholesky: jax >= 0.5 lowers the
+    dense factorizations to typed-FFI custom-calls (LAPACK), which the
+    xla_extension 0.5.1 runtime behind the rust `xla` crate rejects
+    ("Unknown custom-call API version ... API_VERSION_TYPED_FFI"). CG
+    lowers to plain HLO (dots + a while loop) and runs everywhere.
+    """
+
+    def krr_solve(g, b, lam):
+        minv = 1.0 / jnp.maximum(jnp.diagonal(g) + lam, 1e-12)
+
+        def matvec(v):
+            return g @ v + lam * v
+
+        x0 = jnp.zeros_like(b)
+        r0 = b
+        z0 = minv * r0
+        p0 = z0
+        rz0 = r0 @ z0
+
+        def body(_, state):
+            x, r, p, rz = state
+            ap = matvec(p)
+            alpha = rz / jnp.maximum(p @ ap, 1e-30)
+            x = x + alpha * p
+            r = r - alpha * ap
+            z = minv * r
+            rz_new = r @ z
+            beta = rz_new / jnp.maximum(rz, 1e-30)
+            p = z + beta * p
+            return (x, r, p, rz_new)
+
+        x, _, _, _ = jax.lax.fori_loop(0, iters, body, (x0, r0, p0, rz0))
+        return (x,)
+
+    _ = f
+    return krr_solve

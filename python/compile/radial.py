@@ -1,0 +1,174 @@
+"""Radial-factor tables h_l(t) for the GZK family (paper Eqs. 12, 22, 23; Lemma 16).
+
+A `RadialTable` captures, for a given kernel family and truncation (q, s), the
+full per-(l, i) weight applied in the feature map (Def. 8 / Eq. 13):
+
+    phi_x(w)[i] = sum_l  sqrt(alpha_{l,d}) * [h_l(||x||)]_i * P_d^l(<x,w>/||x||)
+                = sum_l  R[x][l, i] * P_d^l(<x,w>/||x||)
+
+with R[x][l, i] = coef[l, i] * ||x||^expo[l, i] * (exp(-||x||^2 / 2) if decay).
+
+`coef` folds BOTH the sqrt(alpha) of Eq. (13) and the per-family Mercer
+coefficient of h_l; it is computed in log-domain (lgamma) for stability.
+
+Families:
+  gaussian     — Eq. (23); unit bandwidth (rescale inputs by 1/sigma for others)
+  exponential  — kappa(t) = exp(gamma * t), Eq. (12) with kappa^(j)(0) = gamma^j
+  polynomial   — kappa(t) = (t + c)^p, kappa^(j)(0) = p!/(p-j)! c^(p-j), j <= p
+  ntk          — depth-L ReLU NTK, Lemma 16 (s is forced to 1, expo = 1)
+"""
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import gegenbauer as geg
+
+__all__ = [
+    "RadialTable",
+    "gaussian_table",
+    "exponential_table",
+    "polynomial_table",
+    "ntk_table",
+    "radial_values",
+    "suggest_q",
+    "ntk_kappa",
+]
+
+_LOG_SQRT_PI = 0.5 * math.log(math.pi)
+
+
+@dataclass(frozen=True)
+class RadialTable:
+    """Truncated radial weights for one GZK family in dimension d."""
+
+    family: str
+    d: int
+    q: int
+    s: int
+    coef: np.ndarray  # (q+1, s) linear-domain weights (incl. sqrt(alpha_{l,d}))
+    expo: np.ndarray  # (q+1, s) exponents of ||x||
+    decay: bool  # multiply by exp(-||x||^2/2)?
+
+
+def _base_log_coef(l: int, i: int, d: int) -> float:
+    """log of sqrt(alpha_{l,d}) * sqrt(alpha_{l,d}/2^l * Gamma(d/2)/(sqrt(pi)(2i)!)
+    * Gamma(i+1/2)/Gamma(i+l+d/2)) — the kappa-independent part of Eq. (12)."""
+    la = geg.log_alpha_dim(l, d)
+    return la - 0.5 * l * math.log(2.0) + 0.5 * (
+        math.lgamma(d / 2.0)
+        - _LOG_SQRT_PI
+        - math.lgamma(2 * i + 1)
+        + math.lgamma(i + 0.5)
+        - math.lgamma(i + l + d / 2.0)
+    )
+
+
+def gaussian_table(d: int, q: int, s: int) -> RadialTable:
+    """Unit-bandwidth Gaussian kernel e^{-||x-y||^2/2} (Eq. 23)."""
+    coef = np.zeros((q + 1, s))
+    expo = np.zeros((q + 1, s))
+    for l in range(q + 1):
+        for i in range(s):
+            coef[l, i] = math.exp(_base_log_coef(l, i, d))
+            expo[l, i] = l + 2 * i
+    return RadialTable("gaussian", d, q, s, coef, expo, True)
+
+
+def exponential_table(d: int, q: int, s: int, gamma: float = 1.0) -> RadialTable:
+    """Dot-product kernel kappa(t) = exp(gamma * t)."""
+    if gamma <= 0:
+        raise ValueError("gamma must be > 0 for a PSD exponential kernel")
+    coef = np.zeros((q + 1, s))
+    expo = np.zeros((q + 1, s))
+    for l in range(q + 1):
+        for i in range(s):
+            lg = _base_log_coef(l, i, d) + 0.5 * (l + 2 * i) * math.log(gamma)
+            coef[l, i] = math.exp(lg)
+            expo[l, i] = l + 2 * i
+    return RadialTable("exponential", d, q, s, coef, expo, False)
+
+
+def polynomial_table(d: int, p: int, c: float, q: int | None = None, s: int | None = None) -> RadialTable:
+    """Dot-product kernel kappa(t) = (t + c)^p, c >= 0. Exact at q = p,
+    s = p//2 + 1 (derivatives above order p vanish)."""
+    if c < 0:
+        raise ValueError("c must be >= 0 (Schoenberg PSD condition)")
+    q = p if q is None else min(q, p)
+    s = p // 2 + 1 if s is None else s
+    coef = np.zeros((q + 1, s))
+    expo = np.zeros((q + 1, s))
+    for l in range(q + 1):
+        for i in range(s):
+            j = l + 2 * i
+            if j > p:
+                continue
+            # kappa^(j)(0) = p!/(p-j)! * c^(p-j)
+            lk = math.lgamma(p + 1) - math.lgamma(p - j + 1)
+            lk += (p - j) * math.log(c) if c > 0 else (0.0 if j == p else -math.inf)
+            if lk == -math.inf:
+                continue
+            coef[l, i] = math.exp(_base_log_coef(l, i, d) + 0.5 * lk)
+            expo[l, i] = j
+    return RadialTable("polynomial", d, q, s, coef, expo, False)
+
+
+# --- NTK ------------------------------------------------------------------
+
+def _arccos_a0(x: np.ndarray) -> np.ndarray:
+    return 1.0 - np.arccos(np.clip(x, -1.0, 1.0)) / math.pi
+
+
+def _arccos_a1(x: np.ndarray) -> np.ndarray:
+    xc = np.clip(x, -1.0, 1.0)
+    return (np.sqrt(1.0 - xc * xc) + xc * (math.pi - np.arccos(xc))) / math.pi
+
+
+def ntk_kappa(x: np.ndarray, depth: int = 2) -> np.ndarray:
+    """Normalized depth-L ReLU NTK K_relu^{(L)} on [-1,1] ([ZHA+21] recursion).
+
+    sigma_0 = x; sigma_h = a1(sigma_{h-1});
+    theta_0 = x; theta_h = sigma_h + theta_{h-1} * a0(sigma_{h-1}).
+    Runs depth-1 recursion steps, so kappa(1) = depth; the paper's Fig.-1
+    two-layer formula a1(a1(x)) + (a1(x) + x a0(x)) * a0(a1(x)) is depth=3
+    in this indexing (two nested a1 applications).
+    """
+    sigma = np.asarray(x, dtype=np.float64)
+    theta = sigma
+    for _ in range(depth - 1):
+        theta = _arccos_a1(sigma) + theta * _arccos_a0(sigma)
+        sigma = _arccos_a1(sigma)
+    return theta
+
+
+def ntk_table(d: int, q: int, depth: int = 2, n_quad: int = 512) -> RadialTable:
+    """Depth-`depth` ReLU NTK as a GZK (Lemma 16): h_l(t) = sqrt(c_l) * t,
+    s = 1, with c_l the Gegenbauer coefficients of K_relu^{(L)}."""
+    c = geg.gegenbauer_series_coeffs(lambda t: ntk_kappa(np.asarray(t), depth), q, d, n_quad)
+    c = np.maximum(c, 0.0)  # clip quadrature noise; Schoenberg guarantees c_l >= 0
+    coef = np.zeros((q + 1, 1))
+    expo = np.ones((q + 1, 1))
+    for l in range(q + 1):
+        coef[l, 0] = math.sqrt(geg.alpha_dim(l, d) * c[l]) if c[l] > 0 else 0.0
+    return RadialTable("ntk", d, q, 1, coef, expo, False)
+
+
+# --- evaluation -----------------------------------------------------------
+
+def radial_values(table: RadialTable, norms: np.ndarray) -> np.ndarray:
+    """R[j, l, i] = coef[l,i] * norms[j]^expo[l,i] * (envelope). Shape
+    (n, q+1, s). Pure numpy (host-side mirror of the jnp version in model.py)."""
+    t = np.maximum(np.asarray(norms, dtype=np.float64), 1e-30)[:, None, None]
+    r = table.coef[None] * np.power(t, table.expo[None])
+    if table.decay:
+        r = r * np.exp(-0.5 * t * t)
+    return r
+
+
+def suggest_q(r: float, d: int, n: int, lam: float, eps: float = 0.5) -> int:
+    """Theorem-12-style truncation degree for the Gaussian kernel:
+    q = max(3.7 r^2, (d/2) log(2.8 (r^2 + log(n/(eps*lam)) + d)/d) + log(n/(eps*lam)))."""
+    t = math.log(max(n / (eps * lam), math.e))
+    q = max(3.7 * r * r, (d / 2.0) * math.log(2.8 * (r * r + t + d) / d) + t)
+    return max(2, int(math.ceil(q)))

@@ -1,0 +1,43 @@
+"""The AOT artifact set must cover every dataset geometry the experiments
+use — a drift guard between python/compile/aot.py and the rust benches."""
+
+from compile.aot import BLOCK_B, BLOCK_M, FEATURIZE_CONFIGS, KRR_SOLVE_DIMS
+
+# Table 2: elevation S^2 (d=3), CO2/Climate [S^2,R] (d=4), protein R^9
+TABLE2_DIMS = {3, 4, 9}
+# Table 3: abalone 8, pendigits 16, mushroom 21, magic 10, statlog 9,
+# connect-4 42
+TABLE3_DIMS = {8, 16, 21, 10, 9, 42}
+
+
+def test_gaussian_artifacts_cover_experiment_dims():
+    covered = {d for (fam, d, _, _) in FEATURIZE_CONFIGS if fam == "gaussian"}
+    missing = (TABLE2_DIMS | TABLE3_DIMS) - covered
+    assert not missing, f"no gaussian artifact for input dims {missing}"
+
+
+def test_ntk_artifact_present():
+    assert any(fam == "ntk" for (fam, *_rest) in FEATURIZE_CONFIGS)
+
+
+def test_block_geometry_sane():
+    # rust runtime pads rows to BLOCK_B and chunks directions by BLOCK_M;
+    # both must be powers of two so padding stays cheap and the pallas
+    # BlockSpec tiles evenly
+    assert BLOCK_B & (BLOCK_B - 1) == 0
+    assert BLOCK_M & (BLOCK_M - 1) == 0
+    assert BLOCK_B >= BLOCK_M
+
+
+def test_truncation_decreases_with_dimension():
+    # the q chosen per artifact must not grow with d (alpha_{l,d} explodes);
+    # this mirrors the Theorem-12 guidance and keeps artifact sizes sane
+    gaussian = sorted((d, q) for (fam, d, q, _) in FEATURIZE_CONFIGS if fam == "gaussian")
+    qs = [q for _, q in gaussian]
+    assert all(qs[i] >= qs[i + 1] for i in range(len(qs) - 1)), gaussian
+
+
+def test_krr_solver_dims_cover_feature_budgets():
+    # the paper uses m=1024 (Table 2) and m=512 (Table 3)
+    assert 512 in KRR_SOLVE_DIMS
+    assert 1024 in KRR_SOLVE_DIMS

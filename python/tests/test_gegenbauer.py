@@ -1,0 +1,158 @@
+"""Unit tests for the Gegenbauer polynomial machinery."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import gegenbauer as geg
+
+
+def chebyshev_t(l, t):
+    return np.cos(l * np.arccos(np.clip(t, -1, 1)))
+
+
+def legendre(l, t):
+    # explicit Bonnet recurrence, independent implementation
+    p0, p1 = np.ones_like(t), t
+    if l == 0:
+        return p0
+    for k in range(2, l + 1):
+        p0, p1 = p1, ((2 * k - 1) * t * p1 - (k - 1) * p0) / k
+    return p1 if l >= 1 else p0
+
+
+class TestRecurrence:
+    def test_d2_is_chebyshev(self):
+        t = np.linspace(-1, 1, 101)
+        P = geg.gegenbauer_all(10, 2, t)
+        for l in range(11):
+            np.testing.assert_allclose(P[l], chebyshev_t(l, t), atol=1e-10)
+
+    def test_d3_is_legendre(self):
+        t = np.linspace(-1, 1, 101)
+        P = geg.gegenbauer_all(10, 3, t)
+        for l in range(11):
+            np.testing.assert_allclose(P[l], legendre(l, t), atol=1e-10)
+
+    def test_large_d_approaches_monomials(self):
+        t = np.linspace(-1, 1, 11)
+        P = geg.gegenbauer_all(5, 100000, t)
+        for l in range(6):
+            np.testing.assert_allclose(P[l], t**l, atol=1e-3)
+
+    @pytest.mark.parametrize("d", [2, 3, 4, 8, 32])
+    def test_normalized_at_one(self, d):
+        P = geg.gegenbauer_all(15, d, np.array([1.0]))
+        np.testing.assert_allclose(P[:, 0], 1.0, atol=1e-12)
+
+    @pytest.mark.parametrize("d", [2, 3, 4, 8])
+    def test_parity(self, d):
+        # P_l(-t) = (-1)^l P_l(t)
+        t = np.linspace(0, 1, 33)
+        Pp = geg.gegenbauer_all(9, d, t)
+        Pm = geg.gegenbauer_all(9, d, -t)
+        for l in range(10):
+            np.testing.assert_allclose(Pm[l], (-1) ** l * Pp[l], atol=1e-12)
+
+    @given(st.integers(3, 40), st.integers(0, 20),
+           st.floats(-1.0, 1.0, allow_nan=False))
+    @settings(max_examples=100, deadline=None)
+    def test_bounded_on_interval(self, d, l, t):
+        # |P_d^l(t)| <= 1 on [-1,1] (AH12 Eq. 2.116)
+        P = geg.gegenbauer_all(l, d, np.array([t]))
+        assert abs(P[l, 0]) <= 1.0 + 1e-9
+
+    def test_matches_explicit_formula_eq2(self):
+        # Eq. (2) of the paper: P_d^l(t) = sum_j c_j t^{l-2j} (1-t^2)^j
+        rng = np.random.default_rng(0)
+        for d in (3, 5, 8):
+            for l in (2, 3, 5, 8):
+                c = [1.0]
+                for j in range(l // 2):
+                    c.append(-c[-1] * (l - 2 * j) * (l - 2 * j - 1)
+                             / (2 * (j + 1) * (d - 1 + 2 * j)))
+                t = rng.uniform(-1, 1, 17)
+                direct = sum(cj * t ** (l - 2 * j) * (1 - t * t) ** j
+                             for j, cj in enumerate(c))
+                P = geg.gegenbauer_all(l, d, t)
+                np.testing.assert_allclose(P[l], direct, atol=1e-10)
+
+
+class TestAlpha:
+    def test_small_values(self):
+        # alpha_{0,d}=1, alpha_{1,d}=d, alpha_{2,3}=5 (2l+1 for d=3)
+        assert geg.alpha_dim(0, 3) == pytest.approx(1)
+        assert geg.alpha_dim(1, 3) == pytest.approx(3)
+        for l in range(8):
+            assert geg.alpha_dim(l, 3) == pytest.approx(2 * l + 1)
+
+    def test_d2_is_two(self):
+        for l in range(1, 10):
+            assert geg.alpha_dim(l, 2) == pytest.approx(2.0)
+
+    @pytest.mark.parametrize("d", [3, 4, 7, 12])
+    def test_binomial_identity(self, d):
+        def binom(n, k):
+            return math.comb(n, k) if 0 <= k <= n else 0
+        for l in range(2, 12):
+            expect = binom(d + l - 1, l) - binom(d + l - 3, l - 2)
+            assert geg.alpha_dim(l, d) == pytest.approx(expect, rel=1e-10)
+
+
+class TestOrthogonalityAndReproducing:
+    @pytest.mark.parametrize("d", [2, 3, 5, 9])
+    def test_quadrature_orthogonality(self, d):
+        # Eq. (3): weighted integral of P_l P_l' is diagonal with value
+        # |S^{d-1}| / (alpha_{l,d} |S^{d-2}|).
+        from scipy.special import roots_jacobi
+        a = (d - 3) / 2
+        nodes, wts = roots_jacobi(128, a, a)
+        P = geg.gegenbauer_all(8, d, nodes)
+        ratio = geg.surface_ratio(d)  # |S^{d-2}|/|S^{d-1}|
+        G = (P * wts) @ P.T
+        for l in range(9):
+            for lp in range(9):
+                if l == lp:
+                    expect = 1.0 / (geg.alpha_dim(l, d) * ratio)
+                    assert G[l, lp] == pytest.approx(expect, rel=1e-8)
+                else:
+                    assert abs(G[l, lp]) < 1e-10
+
+    def test_reproducing_property_monte_carlo(self):
+        # Lemma 1: P_l(<x,y>) = alpha_{l,d} E_w[P_l(<x,w>) P_l(<y,w>)]
+        rng = np.random.default_rng(1)
+        d, l, n_mc = 4, 3, 400_000
+        x = rng.normal(size=d); x /= np.linalg.norm(x)
+        y = rng.normal(size=d); y /= np.linalg.norm(y)
+        w = rng.normal(size=(n_mc, d))
+        w /= np.linalg.norm(w, axis=1, keepdims=True)
+        Px = geg.gegenbauer_all(l, d, w @ x)[l]
+        Py = geg.gegenbauer_all(l, d, w @ y)[l]
+        est = geg.alpha_dim(l, d) * np.mean(Px * Py)
+        expect = geg.gegenbauer_all(l, d, np.array([x @ y]))[l, 0]
+        assert est == pytest.approx(expect, abs=0.02)
+
+
+class TestSeries:
+    @pytest.mark.parametrize("d", [2, 3, 4, 8, 32])
+    def test_exp_series_converges(self, d):
+        # kappa(t)=exp(2t), degree-15 Gegenbauer series max error well below
+        # the Taylor tail (Fig. 1 behaviour).
+        c = geg.gegenbauer_series_coeffs(lambda t: math.exp(2 * t), 15, d)
+        t = np.linspace(-1, 1, 501)
+        P = geg.gegenbauer_all(15, d, t)
+        approx = c @ P
+        err = np.max(np.abs(approx - np.exp(2 * t)))
+        assert err < 1e-6
+        assert np.all(c >= -1e-9)  # Schoenberg: PSD kernel -> c_l >= 0
+
+    def test_series_recovers_polynomial_exactly(self):
+        # t^3 has an exact degree-3 expansion in any d
+        d = 5
+        c = geg.gegenbauer_series_coeffs(lambda t: t**3, 8, d)
+        assert np.allclose(c[4:], 0, atol=1e-12)
+        t = np.linspace(-1, 1, 101)
+        P = geg.gegenbauer_all(8, d, t)
+        np.testing.assert_allclose(c @ P, t**3, atol=1e-12)

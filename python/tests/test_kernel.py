@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernel vs pure-jnp ref oracle, plus statistical
+properties of the feature map (unbiasedness E[Z Z^T] = K)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import radial
+from compile.kernels.gegenbauer import (gegenbauer_feature_tile,
+                                        gegenbauer_features_pallas)
+from compile.kernels.ref import exact_gram, gegenbauer_features_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def sphere(rng, m, d):
+    w = rng.normal(size=(m, d))
+    return w / np.linalg.norm(w, axis=1, keepdims=True)
+
+
+class TestPallasVsRef:
+    @pytest.mark.parametrize("d,q,s", [(3, 12, 2), (4, 8, 3), (9, 6, 2), (2, 10, 1)])
+    def test_matches_ref_gaussian(self, d, q, s):
+        rng = np.random.default_rng(7)
+        n, m = 8, 16
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        w = sphere(rng, m, d).astype(np.float32)
+        table = radial.gaussian_table(d, q, s)
+        z_ref = gegenbauer_features_ref(x, w, table.coef, table.expo, table.decay)
+        z_pal = gegenbauer_features_pallas(x, w, table.coef, table.expo,
+                                           table.decay, block_b=n, block_m=m)
+        np.testing.assert_allclose(np.asarray(z_pal), np.asarray(z_ref),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_matches_ref_ntk(self):
+        rng = np.random.default_rng(8)
+        d, q = 4, 12
+        x = rng.normal(size=(8, d)).astype(np.float32)
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+        w = sphere(rng, 8, d).astype(np.float32)
+        table = radial.ntk_table(d, q)
+        z_ref = gegenbauer_features_ref(x, w, table.coef, table.expo, table.decay)
+        z_pal = gegenbauer_features_pallas(x, w, table.coef, table.expo,
+                                           table.decay, block_b=8, block_m=8)
+        np.testing.assert_allclose(np.asarray(z_pal), np.asarray(z_ref),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_tiling_invariance(self):
+        # gridding over (n, m) blocks must not change the result
+        rng = np.random.default_rng(9)
+        d, q, s = 3, 8, 2
+        n, m = 32, 32
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        w = sphere(rng, m, d).astype(np.float32)
+        table = radial.gaussian_table(d, q, s)
+        z1 = gegenbauer_features_pallas(x, w, table.coef, table.expo,
+                                        table.decay, block_b=32, block_m=32)
+        z2 = gegenbauer_features_pallas(x, w, table.coef, table.expo,
+                                        table.decay, block_b=8, block_m=8)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
+                                   rtol=1e-5, atol=1e-6)
+
+    @given(
+        d=st.integers(2, 8),
+        q=st.integers(1, 10),
+        s=st.integers(1, 3),
+        nb=st.sampled_from([4, 8]),
+        mb=st.sampled_from([4, 8]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_hypothesis_shape_sweep(self, d, q, s, nb, mb):
+        rng = np.random.default_rng(q * 100 + d * 10 + s)
+        x = rng.normal(size=(nb, d)).astype(np.float32)
+        w = sphere(rng, mb, d).astype(np.float32)
+        table = radial.gaussian_table(d, q, s)
+        z_ref = gegenbauer_features_ref(x, w, table.coef, table.expo, table.decay)
+        z_pal = gegenbauer_features_pallas(x, w, table.coef, table.expo,
+                                           table.decay, block_b=nb, block_m=mb)
+        assert z_pal.shape == (nb, mb * s)
+        np.testing.assert_allclose(np.asarray(z_pal), np.asarray(z_ref),
+                                   rtol=5e-4, atol=5e-5)
+
+    def test_raw_tile_entry_formula(self):
+        # check one entry of the tile against a scalar-by-scalar evaluation
+        from compile import gegenbauer as geg
+        rng = np.random.default_rng(10)
+        d, q, s = 3, 5, 2
+        u = sphere(rng, 4, d).astype(np.float32)
+        w = sphere(rng, 4, d).astype(np.float32)
+        r = rng.uniform(0.1, 1.0, size=(4, (q + 1) * s)).astype(np.float32)
+        z = gegenbauer_feature_tile(jnp.asarray(u), jnp.asarray(r),
+                                    jnp.asarray(w), q=q, s=s, d=d,
+                                    block_b=4, block_m=4)
+        b, k, i = 2, 3, 1
+        t = float(u[b] @ w[k])
+        P = geg.gegenbauer_all(q, d, np.array([t]))[:, 0]
+        expect = sum(P[l] * r[b, l * s + i] for l in range(q + 1))
+        assert float(z[b, k * s + i]) == pytest.approx(expect, rel=1e-4)
+
+
+class TestOtherFamiliesThroughPallas:
+    @pytest.mark.parametrize("table_fn", [
+        lambda d: radial.exponential_table(d, 10, 3, gamma=0.7),
+        lambda d: radial.polynomial_table(d, 3, 1.0),
+        lambda d: radial.ntk_table(d, 14),
+    ])
+    def test_family_matches_ref(self, table_fn):
+        rng = np.random.default_rng(20)
+        d = 4
+        table = table_fn(d)
+        x = rng.normal(size=(8, d)).astype(np.float32) * 0.6
+        w = sphere(rng, 8, d).astype(np.float32)
+        z_ref = gegenbauer_features_ref(x, w, table.coef, table.expo, table.decay)
+        z_pal = gegenbauer_features_pallas(x, w, table.coef, table.expo,
+                                           table.decay, block_b=8, block_m=8)
+        np.testing.assert_allclose(np.asarray(z_pal), np.asarray(z_ref),
+                                   rtol=5e-4, atol=5e-5)
+
+    def test_float32_inputs_stay_finite_at_radius(self):
+        # larger-radius inputs exercise the log-domain radial tables in f32
+        rng = np.random.default_rng(21)
+        table = radial.gaussian_table(3, 16, 6)
+        x = (rng.normal(size=(16, 3)) * 2.0).astype(np.float32)
+        w = sphere(rng, 16, 3).astype(np.float32)
+        z = gegenbauer_features_pallas(x, w, table.coef, table.expo,
+                                       table.decay, block_b=16, block_m=16)
+        assert np.all(np.isfinite(np.asarray(z)))
+
+
+class TestKrrSolveCg:
+    def test_cg_residual_on_conditioned_system(self):
+        from compile.model import build_krr_solve
+        import jax
+        rng = np.random.default_rng(22)
+        F = 64
+        a = rng.normal(size=(F, F)).astype(np.float32) / np.sqrt(F)
+        g = a @ a.T
+        b = rng.normal(size=F).astype(np.float32)
+        lam = np.float32(0.3)
+        (w,) = jax.jit(build_krr_solve(F))(g, b, lam)
+        resid = (g + lam * np.eye(F)) @ np.asarray(w, np.float64) - b
+        assert np.max(np.abs(resid)) < 1e-3, np.max(np.abs(resid))
+
+    def test_cg_graph_has_no_custom_calls(self):
+        from compile.aot import to_hlo_text
+        from compile.model import build_krr_solve
+        import jax
+        text = to_hlo_text(jax.jit(build_krr_solve(32)).lower(
+            jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            jax.ShapeDtypeStruct((32,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32)))
+        assert "custom-call" not in text
+
+
+class TestUnbiasedness:
+    @pytest.mark.parametrize("kind,kw,table_fn", [
+        ("gaussian", {}, lambda d: radial.gaussian_table(d, 14, 6)),
+        ("exponential", {"gamma": 1.0}, lambda d: radial.exponential_table(d, 14, 6)),
+    ])
+    def test_zzt_approximates_k(self, kind, kw, table_fn):
+        rng = np.random.default_rng(11)
+        d, n, m = 3, 24, 4096
+        x = (rng.normal(size=(n, d)) * 0.6).astype(np.float32)
+        w = sphere(rng, m, d).astype(np.float32)
+        table = table_fn(d)
+        z = np.asarray(gegenbauer_features_ref(
+            x, w, table.coef, table.expo, table.decay), dtype=np.float64)
+        K_hat = z @ z.T
+        K = exact_gram(x, kind, **kw)
+        err = np.max(np.abs(K_hat - K)) / np.max(np.abs(K))
+        assert err < 0.15, f"max relative-to-scale error {err}"

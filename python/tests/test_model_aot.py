@@ -1,0 +1,122 @@
+"""L2 graph tests + AOT round-trip: the lowered HLO text must reload through
+XlaComputation and reproduce the jit-executed numerics (same path rust uses)."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import radial
+from compile.aot import to_hlo_text
+from compile.kernels.ref import gegenbauer_features_ref
+from compile.model import build_featurize, build_krr_solve
+
+
+def sphere(rng, m, d):
+    w = rng.normal(size=(m, d))
+    return (w / np.linalg.norm(w, axis=1, keepdims=True)).astype(np.float32)
+
+
+class TestFeaturizeGraph:
+    def test_matches_ref_with_scaling(self):
+        rng = np.random.default_rng(12)
+        d, q, s, B, M = 3, 10, 2, 16, 8
+        table = radial.gaussian_table(d, q, s)
+        fn = build_featurize(table, B, M, m_total=M)
+        x = rng.normal(size=(B, d)).astype(np.float32)
+        w = sphere(rng, M, d)
+        (z,) = jax.jit(fn)(x, w)
+        z_ref = gegenbauer_features_ref(x, w, table.coef, table.expo, table.decay)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_m_total_rescaling(self):
+        # chunking a 2M direction set through an M-direction graph: the rust
+        # runtime rescales by sqrt(M / m_total); verify the identity here.
+        rng = np.random.default_rng(13)
+        d, q, s, B, M = 3, 6, 2, 8, 8
+        table = radial.gaussian_table(d, q, s)
+        x = rng.normal(size=(B, d)).astype(np.float32)
+        w = sphere(rng, 2 * M, d)
+        fn_m = jax.jit(build_featurize(table, B, M, m_total=M))
+        (z0,) = fn_m(x, w[:M])
+        (z1,) = fn_m(x, w[M:])
+        z_chunked = np.concatenate([np.asarray(z0), np.asarray(z1)], axis=1)
+        z_chunked *= np.sqrt(M / (2 * M))
+        z_full = gegenbauer_features_ref(x, w, table.coef, table.expo, table.decay)
+        np.testing.assert_allclose(z_chunked, np.asarray(z_full),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestKrrSolveGraph:
+    def test_solves_spd_system(self):
+        rng = np.random.default_rng(14)
+        F = 16
+        a = rng.normal(size=(F, F)).astype(np.float32)
+        g = a @ a.T
+        b = rng.normal(size=F).astype(np.float32)
+        lam = np.float32(0.5)
+        (w,) = jax.jit(build_krr_solve(F))(g, b, lam)
+        resid = (g + lam * np.eye(F)) @ np.asarray(w, dtype=np.float64) - b
+        assert np.max(np.abs(resid)) < 1e-3
+
+
+class TestAotRoundTrip:
+    def test_hlo_text_parses_back(self):
+        # Lower -> HLO text -> HloModule parse (the same C++ text parser the
+        # rust xla crate calls via HloModuleProto::from_text_file). Execution
+        # of the parsed module is covered by the rust integration tests —
+        # jaxlib's python client only accepts stablehlo payloads.
+        d, q, s, B, M = 3, 8, 2, 8, 8
+        table = radial.gaussian_table(d, q, s)
+        fn = build_featurize(table, B, M, m_total=M)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((B, d), jnp.float32),
+            jax.ShapeDtypeStruct((M, d), jnp.float32))
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text and "HloModule" in text
+        hlo = xc._xla.hlo_module_from_text(text)
+        # parse must preserve the entry computation signature
+        reparsed = hlo.to_string()
+        assert f"f32[{B},{d}]" in reparsed
+        assert f"f32[{B},{M * s}]" in reparsed
+
+    def test_no_elided_constants(self):
+        # REGRESSION: the default HLO printer elides large constant arrays
+        # as `constant({...})`, which the text parser reads back as zeros —
+        # wiping out the baked radial tables. to_hlo_text must print full
+        # literals.
+        d, q, s, B, M = 3, 12, 2, 16, 8
+        table = radial.gaussian_table(d, q, s)
+        fn = build_featurize(table, B, M, m_total=M)
+        text = to_hlo_text(jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((B, d), jnp.float32),
+            jax.ShapeDtypeStruct((M, d), jnp.float32)))
+        assert "{...}" not in text, "HLO text contains elided constants"
+        # one recognizable radial coefficient must appear verbatim-ish:
+        # coef[1*s+0] = alpha_{1,3}/sqrt(2)-ish value; just check a long
+        # float array is present
+        assert text.count("constant(") >= 2
+
+    def test_manifest_configs_lower(self):
+        # every manifest featurize config must lower to HLO text with the
+        # expected entry signature (fast smoke: first two + krr_solve)
+        from compile.aot import FEATURIZE_CONFIGS, BLOCK_B, BLOCK_M, make_table
+        family, d, q, s = FEATURIZE_CONFIGS[0]
+        table = make_table(family, d, q, s)
+        fn = build_featurize(table, BLOCK_B, BLOCK_M, BLOCK_M)
+        text = to_hlo_text(jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((BLOCK_B, d), jnp.float32),
+            jax.ShapeDtypeStruct((BLOCK_M, d), jnp.float32)))
+        assert f"f32[{BLOCK_B},{d}]" in text
+        assert f"f32[{BLOCK_B},{BLOCK_M * s}]" in text
+
+        text = to_hlo_text(jax.jit(build_krr_solve(64)).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32)))
+        assert "f32[64,64]" in text

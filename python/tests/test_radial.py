@@ -1,0 +1,114 @@
+"""Tests for the radial tables: the GZK truncations must reconstruct their
+exact kernels via k(x,y) = sum_l <h_l(|x|),h_l(|y|)> P_l(cos) (Def. 3)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile import gegenbauer as geg
+from compile import radial
+from compile.kernels.ref import exact_gram
+
+
+def gzk_kernel_from_table(table, x, y):
+    """Evaluate the truncated GZK k_{q,s}(x,y) directly from Def. 3.
+
+    radial_values folds sqrt(alpha_{l,d}) into R, so
+    <R_x[l], R_y[l]> = alpha * <h_l,h_l> and we divide it back out."""
+    nx = max(np.linalg.norm(x), 1e-30)
+    ny = max(np.linalg.norm(y), 1e-30)
+    cos = float(np.clip(x @ y / (nx * ny), -1, 1))
+    rx = radial.radial_values(table, np.array([nx]))[0]  # (q+1, s)
+    ry = radial.radial_values(table, np.array([ny]))[0]
+    P = geg.gegenbauer_all(table.q, table.d, np.array([cos]))[:, 0]
+    total = 0.0
+    for l in range(table.q + 1):
+        alpha = geg.alpha_dim(l, table.d)
+        total += (rx[l] @ ry[l]) / alpha * P[l]
+    return total
+
+
+@pytest.mark.parametrize("d", [3, 4, 6])
+def test_gaussian_truncation_converges(d):
+    rng = np.random.default_rng(2)
+    table = radial.gaussian_table(d, q=20, s=10)
+    for _ in range(20):
+        x = rng.normal(size=d) * 0.7
+        y = rng.normal(size=d) * 0.7
+        k_exact = math.exp(-0.5 * np.sum((x - y) ** 2))
+        k_gzk = gzk_kernel_from_table(table, x, y)
+        assert k_gzk == pytest.approx(k_exact, abs=1e-6)
+
+
+@pytest.mark.parametrize("d,gamma", [(3, 1.0), (5, 0.5), (4, 2.0)])
+def test_exponential_truncation_converges(d, gamma):
+    rng = np.random.default_rng(3)
+    table = radial.exponential_table(d, q=22, s=11, gamma=gamma)
+    for _ in range(20):
+        x = rng.normal(size=d) * 0.6
+        y = rng.normal(size=d) * 0.6
+        k_exact = math.exp(gamma * (x @ y))
+        k_gzk = gzk_kernel_from_table(table, x, y)
+        assert k_gzk == pytest.approx(k_exact, rel=1e-5, abs=1e-6)
+
+
+@pytest.mark.parametrize("p,c", [(2, 1.0), (3, 0.5), (4, 1.0), (3, 0.0)])
+def test_polynomial_is_exact(p, c):
+    d = 4
+    rng = np.random.default_rng(4)
+    table = radial.polynomial_table(d, p, c)
+    for _ in range(20):
+        x = rng.normal(size=d)
+        y = rng.normal(size=d)
+        k_exact = (x @ y + c) ** p
+        k_gzk = gzk_kernel_from_table(table, x, y)
+        assert k_gzk == pytest.approx(k_exact, rel=1e-8, abs=1e-8)
+
+
+def test_ntk_kappa_fixed_points():
+    # K_relu is a normalized kernel: kappa(1) = depth (each layer contributes 1)
+    assert radial.ntk_kappa(np.array([1.0]), depth=2)[0] == pytest.approx(2.0)
+    assert radial.ntk_kappa(np.array([1.0]), depth=3)[0] == pytest.approx(3.0)
+
+
+@pytest.mark.parametrize("depth", [2, 3])
+def test_ntk_truncation_converges_on_sphere(depth):
+    d = 4
+    rng = np.random.default_rng(5)
+    table = radial.ntk_table(d, q=40, depth=depth)
+    for _ in range(10):
+        x = rng.normal(size=d); x /= np.linalg.norm(x)
+        y = rng.normal(size=d); y /= np.linalg.norm(y)
+        cos = np.clip(x @ y, -1, 1)
+        k_exact = radial.ntk_kappa(np.array([cos]), depth)[0]
+        k_gzk = gzk_kernel_from_table(table, x, y)
+        # NTK kappa is non-smooth at |t|=1 -> algebraic Gegenbauer decay
+        assert k_gzk == pytest.approx(k_exact, abs=5e-3)
+
+
+def test_radial_decay_in_l():
+    # Section 5: sum_j |h_l|^2 decays fast in l for bounded radius
+    table = radial.gaussian_table(4, q=16, s=4)
+    r = radial.radial_values(table, np.array([1.5]))[0]  # (q+1, s)
+    energy = np.sum(r * r, axis=1)
+    assert energy[12] < energy[2] * 1e-4
+
+
+def test_suggest_q_monotone():
+    q1 = radial.suggest_q(r=1.0, d=3, n=1000, lam=1e-3)
+    q2 = radial.suggest_q(r=2.0, d=3, n=1000, lam=1e-3)
+    q3 = radial.suggest_q(r=1.0, d=3, n=100000, lam=1e-6)
+    assert q2 >= q1 and q3 >= q1
+
+
+def test_exact_gram_kinds():
+    rng = np.random.default_rng(6)
+    x = rng.normal(size=(5, 3))
+    for kind, kw in [("gaussian", {}), ("exponential", {"gamma": 0.5}),
+                     ("polynomial", {"p": 2, "c": 1.0}), ("ntk", {"depth": 2})]:
+        K = exact_gram(x, kind, **kw)
+        assert K.shape == (5, 5)
+        np.testing.assert_allclose(K, K.T, atol=1e-12)
+        evals = np.linalg.eigvalsh(K)
+        assert evals.min() > -1e-8 * max(1, evals.max())

@@ -1,0 +1,67 @@
+//! Ablation bench: the design choices behind the Gegenbauer features —
+//! truncation degree q, radial order s, and direction count m — swept
+//! independently on the elevation workload. This is the empirical face of
+//! Theorems 11/12: q and s control truncation BIAS, m controls VARIANCE.
+//!
+//! Run: cargo bench --bench ablation
+
+use gzk::bench::Table;
+use gzk::data;
+use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+use gzk::kernels::Kernel;
+use gzk::krr::{mse, FeatureRidge};
+use gzk::linalg::Mat;
+use gzk::rng::Rng;
+use gzk::spectral::spectral_epsilon;
+
+fn elevation_task(n: usize) -> (Mat, Vec<f64>, Mat, Vec<f64>) {
+    let ds = data::elevation(n, 3);
+    data::split(&ds.x, &ds.y, 0.2, 3)
+}
+
+fn krr_mse(q: usize, s: usize, m: usize, xtr: &Mat, ytr: &[f64], xte: &Mat, yte: &[f64]) -> f64 {
+    let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, q, s), m / s.max(1), 7);
+    let ztr = feat.featurize(xtr);
+    let zte = feat.featurize(xte);
+    let model = FeatureRidge::fit(&ztr, ytr, 1e-2 * ytr.len() as f64 / 1000.0);
+    mse(&model.predict(&zte), yte)
+}
+
+fn main() {
+    let (xtr, ytr, xte, yte) = elevation_task(6000);
+
+    println!("== ablation: truncation degree q (s = 2, m = 512) ==");
+    let mut t = Table::new(vec!["q", "test mse"]);
+    for q in [2usize, 4, 6, 8, 12, 16] {
+        t.row(vec![q.to_string(), format!("{:.4}", krr_mse(q, 2, 512, &xtr, &ytr, &xte, &yte))]);
+    }
+    t.print();
+
+    println!("\n== ablation: radial order s (q = 12, m = 512) ==");
+    let mut t = Table::new(vec!["s", "test mse"]);
+    for s in [1usize, 2, 3, 4] {
+        t.row(vec![s.to_string(), format!("{:.4}", krr_mse(12, s, 512, &xtr, &ytr, &xte, &yte))]);
+    }
+    t.print();
+
+    println!("\n== ablation: direction count m (q = 12, s = 2) ==");
+    let mut t = Table::new(vec!["features", "test mse"]);
+    for m in [64usize, 128, 256, 512, 1024, 2048] {
+        t.row(vec![m.to_string(), format!("{:.4}", krr_mse(12, 2, m, &xtr, &ytr, &xte, &yte))]);
+    }
+    t.print();
+
+    // spectral eps vs (q, s) at fixed m — truncation bias floor
+    println!("\n== ablation: eps (Eq. 1) vs truncation at m = 4096, lambda = 0.1 ==");
+    let mut rng = Rng::new(9);
+    let x = Mat::from_fn(48, 3, |_, _| rng.normal() * 0.8);
+    let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+    let mut t = Table::new(vec!["q", "s", "eps"]);
+    for (q, s) in [(4usize, 1usize), (8, 1), (8, 2), (12, 2), (14, 4), (16, 6)] {
+        let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, q, s), 4096 / s, 11);
+        let z = feat.featurize(&x);
+        let eps = spectral_epsilon(&k, &z.matmul_nt(&z), 0.1);
+        t.row(vec![q.to_string(), s.to_string(), format!("{:.3}", eps)]);
+    }
+    t.print();
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate Figure 1 (function approximation error of Taylor vs
+//! Chebyshev vs Gegenbauer series, degree <= 15).
+//! Run: cargo bench --bench fig1_series
+
+use gzk::bench::time_it;
+use gzk::experiments::fig1;
+
+fn main() {
+    let t = time_it(0, 1, || fig1::run(15));
+    let curves = fig1::run(15);
+    fig1::print(&curves);
+    println!("\n[fig1] computed in {}", t.pretty());
+
+    // headline checks mirrored from the paper's discussion
+    let exp = &curves[0];
+    println!(
+        "[fig1] exp(2x) degree-15:  taylor {:.2e}  cheb(d=2) {:.2e}  d=4 {:.2e}  d=8 {:.2e}  d=32 {:.2e}",
+        exp.taylor[15],
+        exp.gegenbauer[0][15],
+        exp.gegenbauer[1][15],
+        exp.gegenbauer[2][15],
+        exp.gegenbauer[3][15]
+    );
+    assert!(exp.gegenbauer[0][15] < exp.taylor[15], "Chebyshev must beat Taylor");
+}

@@ -1,0 +1,95 @@
+//! Bench: hot-path microbenchmarks for the §Perf pass — native Gegenbauer
+//! featurization throughput vs a pure-matmul roofline of equal flop count,
+//! plus the serving batcher's latency under load.
+//! Run: cargo bench --bench hotpath
+
+use gzk::bench::{fmt_secs, time_it, Table};
+use gzk::coordinator::{Family, FeatureSpec, PredictionService};
+use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+use gzk::krr::FeatureRidge;
+use gzk::linalg::Mat;
+use gzk::rng::Rng;
+use std::time::Duration;
+
+fn featurize_bench() {
+    println!("== featurize hot path ==");
+    let mut t = Table::new(vec!["config", "rows/s", "Mfeat/s", "time/call"]);
+    for (d, q, s, m, n) in [(3usize, 12usize, 2usize, 512usize, 2048usize), (9, 8, 2, 512, 2048), (42, 4, 1, 512, 1024)] {
+        let table = RadialTable::gaussian(d, q, s);
+        let feat = GegenbauerFeatures::new(table, m, 1);
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.5);
+        let timing = time_it(1, 5, || feat.featurize(&x));
+        let rows_per_s = n as f64 / timing.median;
+        let feats_per_s = rows_per_s * (m * s) as f64 / 1e6;
+        t.row(vec![
+            format!("d={d} q={q} s={s} m={m}"),
+            format!("{rows_per_s:.0}"),
+            format!("{feats_per_s:.1}"),
+            fmt_secs(timing.median),
+        ]);
+    }
+    t.print();
+
+    // roofline comparison: featurize vs equal-flop matmul
+    // featurize flops ~= n * m * (d + 3q + 2qs); matmul (n x k)(k x m): 2nkm
+    let (d, q, s, m, n) = (3usize, 12usize, 2usize, 512usize, 2048usize);
+    let feat = GegenbauerFeatures::new(RadialTable::gaussian(d, q, s), m, 1);
+    let mut rng = Rng::new(3);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.5);
+    let tf = time_it(1, 5, || feat.featurize(&x));
+    let flops_feat = (n * m * (d + 3 * q + 2 * q * s)) as f64;
+    let k = (flops_feat / (2.0 * (n * m) as f64)).ceil() as usize;
+    let a = Mat::from_fn(n, k, |_, _| rng.normal());
+    let b = Mat::from_fn(k, m, |_, _| rng.normal());
+    let tm = time_it(1, 5, || a.matmul(&b));
+    println!(
+        "\nroofline: featurize {} vs equal-flop matmul {} -> efficiency {:.2}x",
+        fmt_secs(tf.median),
+        fmt_secs(tm.median),
+        tm.median / tf.median
+    );
+}
+
+fn serving_bench() {
+    println!("\n== serving batcher ==");
+    let spec = FeatureSpec {
+        family: Family::Gaussian { bandwidth: 1.0 },
+        d: 3,
+        q: 12,
+        s: 2,
+        m: 256,
+        seed: 1,
+    };
+    let mut rng = Rng::new(4);
+    let x = Mat::from_fn(512, 3, |_, _| rng.normal() * 0.5);
+    let y: Vec<f64> = (0..512).map(|i| x[(i, 0)]).collect();
+    let z = spec.build().featurize(&x);
+    let model = FeatureRidge::fit(&z, &y, 1e-3);
+    let svc = PredictionService::start(spec, model, 64, Duration::ZERO);
+    let client = svc.client();
+    let _ = client.predict(x.row(0));
+    let n_req = 5000;
+    let t0 = std::time::Instant::now();
+    let mut lat = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let t = std::time::Instant::now();
+        let _ = client.predict(x.row(i % 512)).unwrap();
+        lat.push(t.elapsed().as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "sequential client: {:.0} req/s, p50 {} p99 {}",
+        n_req as f64 / wall,
+        fmt_secs(lat[n_req / 2]),
+        fmt_secs(lat[n_req * 99 / 100])
+    );
+    let m = svc.metrics();
+    println!("batches {} (max batch {})", m.batches, m.max_batch_seen);
+}
+
+fn main() {
+    featurize_bench();
+    serving_bench();
+}

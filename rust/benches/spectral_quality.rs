@@ -1,0 +1,10 @@
+//! Bench: Eq.-1 spectral-approximation quality vs feature count (the
+//! empirical companion of Theorems 9/12).
+//! Run: cargo bench --bench spectral_quality
+
+use gzk::experiments::spectral_quality;
+
+fn main() {
+    let (s_lambda, rows) = spectral_quality::run(96, 3, 0.1, 1);
+    spectral_quality::print(s_lambda, &rows);
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate Table 1 — feature-dimension bounds per method plus an
+//! empirical features-needed-for-eps sweep.
+//! Run: cargo bench --bench table1_bounds
+
+use gzk::experiments::table1;
+
+fn main() {
+    let rows = table1::run_bounds();
+    table1::print_bounds(&rows);
+
+    let (n, d, lam) = (64usize, 3usize, 0.5f64);
+    println!("\nempirical sweep on n={n} d={d} lambda={lam}:");
+    let emp = table1::run_empirical(n, d, lam, 0.5, 1);
+    table1::print_empirical(&emp, 0.5);
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Table 2 — Gaussian-kernel KRR over the four regression
+//! datasets, six methods, m = 1024 features.
+//!
+//! Run: cargo bench --bench table2_krr
+//! Scale the dataset sizes with GZK_SCALE (fraction of the paper's n;
+//! default 0.05 keeps the full 6-method sweep to a few minutes).
+
+use gzk::experiments::table2;
+
+fn main() {
+    let scale: f64 = std::env::var("GZK_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let m: usize = std::env::var("GZK_M").ok().and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let rows = table2::run_all(scale, m, 1);
+    table2::print(&rows);
+    println!("\n(scale {scale} of the paper's dataset sizes; m = {m})");
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Table 3 — kernel k-means over the six UCI-geometry
+//! clustering datasets, six methods, m = 512 features.
+//!
+//! Run: cargo bench --bench table3_kmeans   (GZK_SCALE to resize)
+
+use gzk::experiments::table3;
+
+fn main() {
+    let scale: f64 = std::env::var("GZK_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let m: usize = std::env::var("GZK_M").ok().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let rows = table3::run_all(scale, m, 1);
+    table3::print(&rows);
+    println!("\n(scale {scale} of the paper's dataset sizes; m = {m})");
+}

@@ -1,0 +1,113 @@
+//! Minimal timing harness for the `harness = false` benches (criterion is
+//! not available in the offline registry).
+
+use std::time::Instant;
+
+/// Time a closure: median and mean over `reps` runs after `warmup` runs.
+pub fn time_it<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing { median: samples[samples.len() / 2], mean, min: samples[0], reps }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub reps: usize,
+}
+
+impl Timing {
+    pub fn pretty(&self) -> String {
+        format!("{} (median of {}, min {})", fmt_secs(self.median), self.reps, fmt_secs(self.min))
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Fixed-width table printer for bench outputs (mirrors the paper's table
+/// layout so EXPERIMENTS.md can diff directly).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Table {
+        Table { headers: headers.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{:>width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs() {
+        let t = time_it(1, 5, || (0..1000).sum::<usize>());
+        assert!(t.median >= 0.0 && t.mean >= t.min);
+        assert_eq!(t.reps, 5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(2.5e-5).ends_with("us"));
+        assert!(fmt_secs(2.5e-2).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(vec!["method", "mse"]);
+        t.row(vec!["gegenbauer", "1.15"]);
+        t.print(); // must not panic
+    }
+}

@@ -1,0 +1,95 @@
+//! Tiny CLI argument parser (clap is not in the offline registry).
+//!
+//! Grammar: `gzk <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut args = Args { subcommand, ..Default::default() };
+        while let Some(tok) = it.next() {
+            let name = tok
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {tok:?}"))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    args.flags.insert(name, it.next().unwrap());
+                }
+                _ => args.switches.push(name),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table2 --dataset elevation --m 1024 --fast");
+        assert_eq!(a.subcommand, "table2");
+        assert_eq!(a.get("dataset"), Some("elevation"));
+        assert_eq!(a.get_usize("m", 0), 1024);
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("fig1");
+        assert_eq!(a.get_usize("degree", 15), 15);
+        assert_eq!(a.get_f64("lambda", 1e-3), 1e-3);
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = parse("x --shift -3.5");
+        assert_eq!(a.get_f64("shift", 0.0), -3.5);
+    }
+
+    #[test]
+    fn rejects_bare_positional() {
+        assert!(Args::parse(vec!["cmd".into(), "oops".into()]).is_err());
+    }
+}

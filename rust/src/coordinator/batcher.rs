@@ -1,0 +1,239 @@
+//! Dynamic batcher for serving predictions (the vLLM-router-shaped piece
+//! of L3): requests queue up, the service thread drains up to `max_batch`
+//! of them or waits at most `max_wait`, featurizes the batch in one shot
+//! (amortizing the Gegenbauer recurrence across rows) and answers each
+//! request on its own reply channel.
+
+use super::protocol::FeatureSpec;
+use crate::features::{Featurizer, GegenbauerFeatures};
+use crate::krr::FeatureRidge;
+use crate::linalg::Mat;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+struct Request {
+    x: Vec<f64>,
+    reply: Sender<f64>,
+}
+
+/// Telemetry the serving bench reads.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub batches: usize,
+    /// sum of per-batch sizes (== requests) and of batch latencies
+    pub batch_secs_total: f64,
+    pub max_batch_seen: usize,
+}
+
+/// Client handle: cheap to clone, safe to use from many threads.
+#[derive(Clone)]
+pub struct ServiceClient {
+    tx: Sender<Request>,
+}
+
+impl ServiceClient {
+    /// Blocking predict for one point.
+    pub fn predict(&self, x: &[f64]) -> Result<f64, &'static str> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request { x: x.to_vec(), reply: reply_tx })
+            .map_err(|_| "service stopped")?;
+        reply_rx.recv().map_err(|_| "service dropped request")
+    }
+}
+
+/// A running prediction service.
+pub struct PredictionService {
+    client: ServiceClient,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PredictionService {
+    /// Spawn the service thread around a trained model.
+    pub fn start(
+        spec: FeatureSpec,
+        model: FeatureRidge,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> PredictionService {
+        assert!(max_batch >= 1);
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let metrics_thread = Arc::clone(&metrics);
+        let handle = std::thread::spawn(move || {
+            let feat: GegenbauerFeatures = spec.build();
+            let d = spec.d;
+            let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
+            'serve: loop {
+                // block for the first request of a batch
+                match rx.recv() {
+                    Ok(req) => pending.push(req),
+                    Err(_) => break 'serve,
+                }
+                // Drain whatever is already queued, up to max_batch, without
+                // blocking: while the previous batch was being featurized,
+                // new requests piled up — that IS the batching window
+                // (vLLM-style continuous batching). `max_wait` only applies
+                // as an optional extra wait for the SECOND request when the
+                // queue was empty, to help bursty low-rate clients; with
+                // max_wait = 0 the service is pure drain-available.
+                // Perf note (EXPERIMENTS.md §Perf): the previous
+                // fixed-deadline version put max_wait on every request's
+                // critical path (p50 ~ max_wait + compute).
+                if pending.len() < max_batch && !max_wait.is_zero() {
+                    match rx.recv_timeout(max_wait) {
+                        Ok(req) => pending.push(req),
+                        Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {}
+                    }
+                }
+                while pending.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(req) => pending.push(req),
+                        Err(_) => break,
+                    }
+                }
+                // featurize the whole batch at once
+                let t0 = Instant::now();
+                let mut x = Mat::zeros(pending.len(), d);
+                for (i, req) in pending.iter().enumerate() {
+                    x.row_mut(i).copy_from_slice(&req.x);
+                }
+                let xs = spec.scale_inputs(&x);
+                let z = feat.featurize(&xs);
+                let preds = model.predict(&z);
+                // metrics BEFORE replying: once a client holds its answer,
+                // the request is guaranteed to be counted (tested by
+                // prop_service_answers_every_request_exactly_once)
+                let dt = t0.elapsed().as_secs_f64();
+                {
+                    let mut m = metrics_thread.lock().unwrap();
+                    m.requests += pending.len();
+                    m.batches += 1;
+                    m.batch_secs_total += dt;
+                    m.max_batch_seen = m.max_batch_seen.max(pending.len());
+                }
+                for (req, &p) in pending.iter().zip(&preds) {
+                    let _ = req.reply.send(p); // client may have gone away
+                }
+                pending.clear();
+            }
+        });
+        PredictionService { client: ServiceClient { tx }, metrics, handle: Some(handle) }
+    }
+
+    pub fn client(&self) -> ServiceClient {
+        self.client.clone()
+    }
+
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop the service thread (drops the queue).
+    pub fn shutdown(mut self) -> ServeMetrics {
+        // drop our client sender; thread exits when all clients are gone
+        let ServiceClient { tx } = self.client.clone();
+        drop(tx);
+        // replace internal client to drop the original sender
+        self.client = ServiceClient { tx: channel().0 };
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        // detach: leave the thread to exit once all clients drop
+        self.handle.take();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Family;
+    use crate::rng::Rng;
+
+    fn trained() -> (FeatureSpec, FeatureRidge, Mat, Vec<f64>) {
+        let spec = FeatureSpec {
+            family: Family::Gaussian { bandwidth: 1.0 },
+            d: 2,
+            q: 6,
+            s: 2,
+            m: 32,
+            seed: 21,
+        };
+        let mut rng = Rng::new(22);
+        let x = Mat::from_fn(80, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..80).map(|i| x[(i, 0)] + x[(i, 1)]).collect();
+        let z = spec.build().featurize(&x);
+        let model = FeatureRidge::fit(&z, &y, 1e-4);
+        (spec, model, x, y)
+    }
+
+    #[test]
+    fn serves_correct_predictions() {
+        let (spec, model, x, _) = trained();
+        // reference: direct featurize + predict
+        let z = spec.build().featurize(&x);
+        let expect = model.predict(&z);
+        let svc = PredictionService::start(spec, model, 8, Duration::from_millis(1));
+        let client = svc.client();
+        for i in 0..20 {
+            let p = client.predict(x.row(i)).unwrap();
+            assert!((p - expect[i]).abs() < 1e-10, "req {i}");
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 20);
+        assert!(m.batches >= 1);
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered() {
+        let (spec, model, x, _) = trained();
+        let z = spec.build().featurize(&x);
+        let expect = model.predict(&z);
+        let svc = PredictionService::start(spec, model, 16, Duration::from_millis(2));
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let client = svc.client();
+            let rows: Vec<Vec<f64>> = (0..10).map(|i| x.row((t * 10 + i) % 80).to_vec()).collect();
+            let exp: Vec<f64> = (0..10).map(|i| expect[(t * 10 + i) % 80]).collect();
+            joins.push(std::thread::spawn(move || {
+                for (row, e) in rows.iter().zip(&exp) {
+                    let p = client.predict(row).unwrap();
+                    assert!((p - e).abs() < 1e-10);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 80);
+        // batching actually happened under concurrency (not 1 req/batch)
+        assert!(m.batches <= 80);
+    }
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let (spec, model, x, _) = trained();
+        let svc = PredictionService::start(spec, model, 4, Duration::from_millis(5));
+        let client = svc.client();
+        let mut joins = Vec::new();
+        for i in 0..12 {
+            let c = client.clone();
+            let row = x.row(i).to_vec();
+            joins.push(std::thread::spawn(move || c.predict(&row).unwrap()));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert!(svc.metrics().max_batch_seen <= 4);
+    }
+}

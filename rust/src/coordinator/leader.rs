@@ -1,0 +1,200 @@
+//! Leader side of the one-round distributed KRR protocol.
+//!
+//! Round trip:
+//!   1. leader picks `FeatureSpec` (incl. the shared seed) — the broadcast;
+//!   2. shards the dataset round-robin to worker threads;
+//!   3. workers reply once with additive `(Z^T Z, Z^T y, n)` partials;
+//!   4. leader merges and solves `(G + lambda I) w = b`.
+//!
+//! No iteration, no second round — the property the paper highlights over
+//! data-dependent methods like Nystrom (§1.2 / Related Work).
+
+use super::protocol::{FeatureSpec, ShardStats, ShardTask};
+use super::worker::{worker_loop, Backend, WorkerConfig};
+use crate::krr::{FeatureRidge, RidgeStats};
+use crate::linalg::Mat;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Outcome of a distributed fit, with enough telemetry for the benches.
+pub struct DistributedFit {
+    pub model: FeatureRidge,
+    pub stats: RidgeStats,
+    pub n_shards: usize,
+    pub n_workers: usize,
+    /// wall time of the whole round (seconds)
+    pub wall_secs: f64,
+    /// sum of per-worker featurize seconds (CPU time proxy)
+    pub featurize_secs_total: f64,
+    /// shards whose replies never arrived and were recomputed by the
+    /// leader (fault tolerance path)
+    pub recovered_shards: usize,
+}
+
+/// Run the one-round protocol on an in-memory dataset.
+///
+/// `rows_per_shard` controls task granularity; `n_workers` the thread pool
+/// width. Deterministic: the result is a pure function of
+/// (spec, x, y, lambda), independent of `n_workers` and shard order
+/// (property-tested in `rust/tests/coordinator_props.rs`).
+pub fn fit_one_round(
+    spec: &FeatureSpec,
+    x: &Mat,
+    y: &[f64],
+    lambda: f64,
+    n_workers: usize,
+    rows_per_shard: usize,
+    backend: Backend,
+) -> DistributedFit {
+    assert_eq!(x.rows(), y.len());
+    assert!(n_workers >= 1 && rows_per_shard >= 1);
+    let t0 = Instant::now();
+    let n = x.rows();
+    let f_dim = spec.feature_dim();
+
+    let (res_tx, res_rx) = mpsc::channel::<ShardStats>();
+    let mut task_txs = Vec::with_capacity(n_workers);
+    let mut handles = Vec::with_capacity(n_workers);
+    for worker_id in 0..n_workers {
+        let (task_tx, task_rx) = mpsc::channel::<ShardTask>();
+        let cfg = WorkerConfig { worker_id, spec: spec.clone(), backend: backend.clone() };
+        let res_tx = res_tx.clone();
+        handles.push(std::thread::spawn(move || worker_loop(cfg, task_rx, res_tx)));
+        task_txs.push(task_tx);
+    }
+    drop(res_tx);
+
+    // shard round-robin, remembering each shard's row range so the leader
+    // can recompute any shard whose reply never arrives
+    let mut shard_ranges = Vec::new();
+    for (sid, lo) in (0..n).step_by(rows_per_shard).enumerate() {
+        let hi = (lo + rows_per_shard).min(n);
+        let task = ShardTask { shard_id: sid, x: x.row_block(lo, hi), y: y[lo..hi].to_vec() };
+        task_txs[sid % n_workers].send(task).expect("worker alive");
+        shard_ranges.push((lo, hi));
+    }
+    let n_shards = shard_ranges.len();
+    drop(task_txs); // close channels -> workers terminate after draining
+
+    // the single reduction
+    let mut merged = RidgeStats::new(f_dim);
+    let mut featurize_secs_total = 0.0;
+    let mut seen = vec![false; n_shards];
+    for reply in res_rx.iter() {
+        merged.merge(&reply.stats);
+        featurize_secs_total += reply.featurize_secs;
+        seen[reply.shard_id] = true;
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+
+    // fault tolerance: recompute missing shards locally. Because the
+    // feature map is data-oblivious the leader can produce byte-identical
+    // statistics for a lost shard — no coordination with the (possibly
+    // dead) worker required.
+    let mut recovered_shards = 0;
+    if seen.iter().any(|&s| !s) {
+        use crate::features::Featurizer;
+        let feat = spec.build();
+        for (sid, &(lo, hi)) in shard_ranges.iter().enumerate() {
+            if !seen[sid] {
+                let xs = spec.scale_inputs(&x.row_block(lo, hi));
+                let z = feat.featurize(&xs);
+                merged.absorb(&z, &y[lo..hi]);
+                recovered_shards += 1;
+            }
+        }
+    }
+    assert_eq!(merged.n, n, "lost rows even after shard recovery");
+
+    let model = merged.solve(lambda);
+    DistributedFit {
+        model,
+        stats: merged,
+        n_shards,
+        n_workers,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        featurize_secs_total,
+        recovered_shards,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Family;
+    use crate::features::Featurizer;
+    use crate::krr::FeatureRidge;
+    use crate::rng::Rng;
+
+    fn spec() -> FeatureSpec {
+        FeatureSpec {
+            family: Family::Gaussian { bandwidth: 1.0 },
+            d: 3,
+            q: 8,
+            s: 2,
+            m: 48,
+            seed: 5,
+        }
+    }
+
+    fn dataset(n: usize) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(4);
+        let x = Mat::from_fn(n, 3, |_, _| rng.normal() * 0.7);
+        let y: Vec<f64> = (0..n).map(|i| (x[(i, 0)] * 2.0).sin() + 0.05 * rng.normal()).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn matches_single_node_fit() {
+        let (x, y) = dataset(60);
+        let fit = fit_one_round(&spec(), &x, &y, 0.01, 3, 7, Backend::Native);
+        // single-node reference
+        let z = spec().build().featurize(&x);
+        let reference = FeatureRidge::fit(&z, &y, 0.01);
+        for (a, b) in fit.model.weights.iter().zip(&reference.weights) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert_eq!(fit.stats.n, 60);
+        assert_eq!(fit.n_workers, 3);
+    }
+
+    #[test]
+    fn worker_count_invariance() {
+        let (x, y) = dataset(50);
+        let f1 = fit_one_round(&spec(), &x, &y, 0.1, 1, 9, Backend::Native);
+        let f4 = fit_one_round(&spec(), &x, &y, 0.1, 4, 9, Backend::Native);
+        for (a, b) in f1.model.weights.iter().zip(&f4.model.weights) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn recovers_dropped_shards() {
+        // failure injection: every 3rd shard reply is lost; the leader must
+        // recompute them locally and produce the exact single-node result
+        let (x, y) = dataset(55);
+        let flaky = fit_one_round(
+            &spec(), &x, &y, 0.05, 2, 5, Backend::Flaky { drop_every: 3 },
+        );
+        assert!(flaky.recovered_shards > 0, "injection did not trigger");
+        assert_eq!(flaky.stats.n, 55);
+        let clean = fit_one_round(&spec(), &x, &y, 0.05, 2, 5, Backend::Native);
+        assert_eq!(clean.recovered_shards, 0);
+        for (a, b) in flaky.model.weights.iter().zip(&clean.model.weights) {
+            assert!((a - b).abs() < 1e-9, "recovered fit differs: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn shard_size_invariance() {
+        let (x, y) = dataset(40);
+        let fa = fit_one_round(&spec(), &x, &y, 0.1, 2, 3, Backend::Native);
+        let fb = fit_one_round(&spec(), &x, &y, 0.1, 2, 40, Backend::Native);
+        for (a, b) in fa.model.weights.iter().zip(&fb.model.weights) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert!(fa.n_shards > fb.n_shards);
+    }
+}

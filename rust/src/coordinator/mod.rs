@@ -1,0 +1,37 @@
+//! L3 coordinator — the system the paper's data-oblivious features enable.
+//!
+//! * [`protocol`] — the broadcast `FeatureSpec` and the shard/stats types;
+//! * [`worker`] — worker threads (native or PJRT featurization backend);
+//! * [`leader`] — one-round distributed KRR: broadcast seed, one reduction;
+//! * [`streaming`] — single-pass streaming KRR with backpressure;
+//! * [`batcher`] — dynamic batcher serving predictions.
+//!
+//! ```
+//! use gzk::coordinator::{fit_one_round, Backend, Family, FeatureSpec};
+//! use gzk::linalg::Mat;
+//! use gzk::rng::Rng;
+//!
+//! let spec = FeatureSpec {
+//!     family: Family::Gaussian { bandwidth: 1.0 },
+//!     d: 3, q: 8, s: 2, m: 32, seed: 5,
+//! };
+//! let mut rng = Rng::new(1);
+//! let x = Mat::from_fn(40, 3, |_, _| rng.normal());
+//! let y: Vec<f64> = (0..40).map(|i| x[(i, 0)]).collect();
+//! // broadcast the spec, featurize shards on 2 workers, reduce once, solve
+//! let fit = fit_one_round(&spec, &x, &y, 1e-3, 2, 8, Backend::Native);
+//! assert_eq!(fit.stats.n, 40);
+//! assert_eq!(fit.recovered_shards, 0);
+//! ```
+
+pub mod batcher;
+pub mod leader;
+pub mod protocol;
+pub mod streaming;
+pub mod worker;
+
+pub use batcher::{PredictionService, ServeMetrics, ServiceClient};
+pub use leader::{fit_one_round, DistributedFit};
+pub use protocol::{Family, FeatureSpec, ShardStats, ShardTask};
+pub use streaming::{StreamBatch, StreamHandle, StreamingKrr};
+pub use worker::{Backend, WorkerConfig};

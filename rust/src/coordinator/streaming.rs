@@ -1,0 +1,157 @@
+//! Single-pass streaming KRR — the second system property data-oblivious
+//! features buy (paper §1.2): each example is featurized once, folded into
+//! `(Z^T Z, Z^T y)`, and discarded. Memory is O(F^2) regardless of stream
+//! length.
+//!
+//! A bounded channel provides backpressure: producers block when the
+//! consumer (featurize + absorb) falls behind.
+
+use super::protocol::FeatureSpec;
+use crate::features::{Featurizer, GegenbauerFeatures};
+use crate::krr::{FeatureRidge, RidgeStats};
+use crate::linalg::Mat;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+
+/// One streamed batch of rows.
+pub struct StreamBatch {
+    pub x: Mat,
+    pub y: Vec<f64>,
+}
+
+/// Handle used by producers to push batches into the stream.
+pub struct StreamHandle {
+    tx: SyncSender<StreamBatch>,
+}
+
+impl StreamHandle {
+    /// Blocking push (backpressure applies).
+    pub fn push(&self, batch: StreamBatch) -> Result<(), &'static str> {
+        self.tx.send(batch).map_err(|_| "stream closed")
+    }
+
+    /// Non-blocking push; returns the batch back if the queue is full.
+    pub fn try_push(&self, batch: StreamBatch) -> Result<(), Option<StreamBatch>> {
+        match self.tx.try_send(batch) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(b)) => Err(Some(b)),
+            Err(TrySendError::Disconnected(_)) => Err(None),
+        }
+    }
+}
+
+/// Streaming KRR accumulator: owns the consumer thread.
+pub struct StreamingKrr {
+    handle: Option<StreamHandle>,
+    consumer: Option<std::thread::JoinHandle<RidgeStats>>,
+}
+
+impl StreamingKrr {
+    /// Start the consumer with a queue of `queue_batches` in-flight batches.
+    pub fn start(spec: FeatureSpec, queue_batches: usize) -> StreamingKrr {
+        let (tx, rx): (SyncSender<StreamBatch>, Receiver<StreamBatch>) =
+            sync_channel(queue_batches.max(1));
+        let consumer = std::thread::spawn(move || {
+            let feat: GegenbauerFeatures = spec.build();
+            let mut stats = RidgeStats::new(spec.feature_dim());
+            for batch in rx {
+                let xs = spec.scale_inputs(&batch.x);
+                let z = feat.featurize(&xs);
+                stats.absorb(&z, &batch.y);
+            }
+            stats
+        });
+        StreamingKrr { handle: Some(StreamHandle { tx }), consumer: Some(consumer) }
+    }
+
+    pub fn handle(&self) -> &StreamHandle {
+        self.handle.as_ref().expect("stream still open")
+    }
+
+    /// Close the stream and solve the ridge system.
+    pub fn finalize(mut self, lambda: f64) -> (FeatureRidge, RidgeStats) {
+        drop(self.handle.take()); // close channel
+        let stats = self.consumer.take().expect("not finalized twice").join().expect("consumer");
+        (stats.solve(lambda), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Family;
+    use crate::krr::FeatureRidge;
+    use crate::rng::Rng;
+
+    fn spec() -> FeatureSpec {
+        FeatureSpec {
+            family: Family::Gaussian { bandwidth: 1.0 },
+            d: 2,
+            q: 6,
+            s: 2,
+            m: 24,
+            seed: 8,
+        }
+    }
+
+    #[test]
+    fn stream_equals_batch() {
+        let mut rng = Rng::new(9);
+        let x = Mat::from_fn(37, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..37).map(|_| rng.normal()).collect();
+
+        let stream = StreamingKrr::start(spec(), 2);
+        for lo in (0..37).step_by(5) {
+            let hi = (lo + 5).min(37);
+            stream
+                .handle()
+                .push(StreamBatch { x: x.row_block(lo, hi), y: y[lo..hi].to_vec() })
+                .unwrap();
+        }
+        let (model, stats) = stream.finalize(0.05);
+        assert_eq!(stats.n, 37);
+
+        let z = spec().build().featurize(&x);
+        let reference = FeatureRidge::fit(&z, &y, 0.05);
+        for (a, b) in model.weights.iter().zip(&reference.weights) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn backpressure_try_push() {
+        let stream = StreamingKrr::start(spec(), 1);
+        let mut rng = Rng::new(10);
+        // hammer with try_push; everything either lands or is returned,
+        // nothing is lost silently
+        let mut pushed = 0;
+        for _ in 0..50 {
+            let x = Mat::from_fn(3, 2, |_, _| rng.normal());
+            let y = vec![1.0; 3];
+            let mut batch = StreamBatch { x, y };
+            loop {
+                match stream.handle().try_push(batch) {
+                    Ok(()) => {
+                        pushed += 3;
+                        break;
+                    }
+                    Err(Some(b)) => {
+                        batch = b;
+                        std::thread::yield_now();
+                    }
+                    Err(None) => panic!("stream closed early"),
+                }
+            }
+        }
+        let (_, stats) = stream.finalize(0.1);
+        assert_eq!(stats.n, pushed);
+    }
+
+    #[test]
+    fn empty_stream_finalizes() {
+        let stream = StreamingKrr::start(spec(), 4);
+        let (model, stats) = stream.finalize(1.0);
+        assert_eq!(stats.n, 0);
+        // all-zero stats -> zero weights
+        assert!(model.weights.iter().all(|&w| w == 0.0));
+    }
+}

@@ -1,0 +1,164 @@
+//! Worker side of the one-round protocol: featurize shards, return
+//! additive sufficient statistics.
+//!
+//! Each worker is a plain OS thread (tokio is not available offline and the
+//! workload is CPU-bound). A worker may featurize through either backend:
+//!
+//! * native — the pure-rust hot path in `features::gegenbauer`;
+//! * PJRT   — the AOT jax/Pallas executable, one `Runtime` per worker
+//!            thread (PJRT handles are not Send).
+//!
+//! Both backends produce the same feature map for the same `FeatureSpec`
+//! (checked in `rust/tests/pjrt_roundtrip.rs`).
+
+use super::protocol::{FeatureSpec, ShardStats, ShardTask};
+use crate::features::{Featurizer, GegenbauerFeatures};
+use crate::krr::RidgeStats;
+use crate::linalg::Mat;
+use crate::runtime::Runtime;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Which compute backend a worker should use for featurization.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    Native,
+    /// artifact directory; the worker opens its own PJRT client
+    Pjrt { artifact_dir: PathBuf },
+    /// failure injection for tests: behaves like Native but silently drops
+    /// the reply for every `drop_every`-th shard — exercises the leader's
+    /// missing-shard recovery path.
+    Flaky { drop_every: usize },
+}
+
+pub struct WorkerConfig {
+    pub worker_id: usize,
+    pub spec: FeatureSpec,
+    pub backend: Backend,
+}
+
+enum BackendState {
+    Native(GegenbauerFeatures),
+    Pjrt { runtime: Runtime, w: Mat, family: &'static str, native: GegenbauerFeatures },
+}
+
+impl BackendState {
+    fn new(cfg: &WorkerConfig) -> Self {
+        let native = cfg.spec.build();
+        match &cfg.backend {
+            Backend::Native | Backend::Flaky { .. } => BackendState::Native(native),
+            Backend::Pjrt { artifact_dir } => {
+                let runtime = Runtime::open(artifact_dir).expect("open PJRT runtime");
+                let w = native.directions().clone();
+                BackendState::Pjrt { runtime, w, family: cfg.spec.family.name(), native }
+            }
+        }
+    }
+
+    fn featurize(&self, spec: &FeatureSpec, x: &Mat) -> Mat {
+        let xs = spec.scale_inputs(x);
+        match self {
+            BackendState::Native(feat) => feat.featurize(&xs),
+            BackendState::Pjrt { runtime, w, family, native } => {
+                // PJRT artifacts exist for specific (family, d, q, s); if
+                // the runtime can't serve this spec fall back to native so
+                // the protocol still completes.
+                match runtime.featurize(family, &xs, w) {
+                    Ok(z) => z,
+                    Err(_) => native.featurize(&xs),
+                }
+            }
+        }
+    }
+}
+
+/// Run a worker loop: consume `ShardTask`s, emit `ShardStats`. Terminates
+/// when the task channel closes. This is the function each worker thread
+/// executes.
+pub fn worker_loop(cfg: WorkerConfig, tasks: Receiver<ShardTask>, results: Sender<ShardStats>) {
+    let backend = BackendState::new(&cfg);
+    let f_dim = cfg.spec.feature_dim();
+    for task in tasks {
+        if let Backend::Flaky { drop_every } = cfg.backend {
+            if drop_every > 0 && task.shard_id % drop_every == drop_every - 1 {
+                continue; // inject a lost shard
+            }
+        }
+        let t0 = Instant::now();
+        let z = backend.featurize(&cfg.spec, &task.x);
+        let featurize_secs = t0.elapsed().as_secs_f64();
+        let mut stats = RidgeStats::new(f_dim);
+        stats.absorb(&z, &task.y);
+        let reply = ShardStats {
+            shard_id: task.shard_id,
+            worker_id: cfg.worker_id,
+            stats,
+            featurize_secs,
+        };
+        if results.send(reply).is_err() {
+            break; // leader went away
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Family;
+    use crate::rng::Rng;
+    use std::sync::mpsc;
+
+    fn spec() -> FeatureSpec {
+        FeatureSpec {
+            family: Family::Gaussian { bandwidth: 1.0 },
+            d: 3,
+            q: 8,
+            s: 2,
+            m: 32,
+            seed: 77,
+        }
+    }
+
+    #[test]
+    fn worker_produces_correct_stats() {
+        let (task_tx, task_rx) = mpsc::channel();
+        let (res_tx, res_rx) = mpsc::channel();
+        let cfg = WorkerConfig { worker_id: 0, spec: spec(), backend: Backend::Native };
+        let handle = std::thread::spawn(move || worker_loop(cfg, task_rx, res_tx));
+
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(10, 3, |_, _| rng.normal());
+        let y: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        task_tx.send(ShardTask { shard_id: 0, x: x.clone(), y: y.clone() }).unwrap();
+        drop(task_tx);
+        let reply = res_rx.recv().unwrap();
+        handle.join().unwrap();
+
+        // reference: featurize locally with the same spec
+        let z = spec().build().featurize(&x);
+        let mut expect = RidgeStats::new(64);
+        expect.absorb(&z, &y);
+        assert!(reply.stats.g.max_abs_diff(&expect.g) < 1e-12);
+        assert_eq!(reply.stats.n, 10);
+    }
+
+    #[test]
+    fn worker_handles_multiple_shards() {
+        let (task_tx, task_rx) = mpsc::channel();
+        let (res_tx, res_rx) = mpsc::channel();
+        let cfg = WorkerConfig { worker_id: 3, spec: spec(), backend: Backend::Native };
+        let handle = std::thread::spawn(move || worker_loop(cfg, task_rx, res_tx));
+        let mut rng = Rng::new(3);
+        for sid in 0..4 {
+            let x = Mat::from_fn(5, 3, |_, _| rng.normal());
+            let y: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+            task_tx.send(ShardTask { shard_id: sid, x, y }).unwrap();
+        }
+        drop(task_tx);
+        let mut got: Vec<usize> = res_rx.iter().map(|r| r.shard_id).collect();
+        handle.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,126 @@
+//! Dataset substrate.
+//!
+//! The paper's evaluation uses proprietary/remote datasets (ETOPO elevation,
+//! ODIAC CO2, Berkeley Earth climate, UCI CASP protein, six UCI
+//! classification sets). Those are not available in this offline
+//! environment, so `synthetic` builds deterministic generators that match
+//! each dataset's domain geometry (S^2, [S^2, R], R^9, ...), size and task
+//! character — see DESIGN.md §6 for the substitution argument.
+
+mod synthetic;
+
+pub use synthetic::{
+    clustering_dataset, co2, climate, elevation, protein, ClusteringSpec, Dataset,
+    CLUSTERING_SPECS,
+};
+
+/// Train/test split by deterministic shuffle.
+pub fn split(
+    x: &crate::linalg::Mat,
+    y: &[f64],
+    test_frac: f64,
+    seed: u64,
+) -> (crate::linalg::Mat, Vec<f64>, crate::linalg::Mat, Vec<f64>) {
+    let n = x.rows();
+    let d = x.cols();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = crate::rng::Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let n_train = n - n_test;
+    let mut xtr = crate::linalg::Mat::zeros(n_train, d);
+    let mut xte = crate::linalg::Mat::zeros(n_test, d);
+    let mut ytr = Vec::with_capacity(n_train);
+    let mut yte = Vec::with_capacity(n_test);
+    for (pos, &i) in idx.iter().enumerate() {
+        if pos < n_train {
+            xtr.row_mut(pos).copy_from_slice(x.row(i));
+            ytr.push(y[i]);
+        } else {
+            xte.row_mut(pos - n_train).copy_from_slice(x.row(i));
+            yte.push(y[i]);
+        }
+    }
+    (xtr, ytr, xte, yte)
+}
+
+/// Standardize columns to zero mean / unit variance (paper's Protein prep).
+pub fn standardize(x: &mut crate::linalg::Mat) {
+    let (n, d) = (x.rows(), x.cols());
+    for j in 0..d {
+        let mut mean = 0.0;
+        for i in 0..n {
+            mean += x[(i, j)];
+        }
+        mean /= n as f64;
+        let mut var = 0.0;
+        for i in 0..n {
+            let v = x[(i, j)] - mean;
+            var += v * v;
+        }
+        let std = (var / n as f64).sqrt().max(1e-12);
+        for i in 0..n {
+            x[(i, j)] = (x[(i, j)] - mean) / std;
+        }
+    }
+}
+
+/// Normalize every row to unit l2 norm (paper's k-means prep).
+pub fn normalize_rows(x: &mut crate::linalg::Mat) {
+    for i in 0..x.rows() {
+        let row = x.row_mut(i);
+        let norm: f64 = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for v in row.iter_mut() {
+                *v /= norm;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn split_partitions() {
+        let x = Mat::from_fn(100, 2, |i, j| (i * 2 + j) as f64);
+        let y: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let (xtr, ytr, xte, yte) = split(&x, &y, 0.1, 7);
+        assert_eq!(xtr.rows(), 90);
+        assert_eq!(xte.rows(), 10);
+        // every y value appears exactly once across the two splits
+        let mut all: Vec<f64> = ytr.iter().chain(yte.iter()).cloned().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, v) in all.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+        // x rows stay paired with their y
+        for i in 0..90 {
+            assert_eq!(xtr[(i, 0)], ytr[i] * 2.0);
+        }
+    }
+
+    #[test]
+    fn standardize_moments() {
+        let mut x = Mat::from_fn(200, 3, |i, j| (i as f64) * (j as f64 + 1.0) + 5.0);
+        standardize(&mut x);
+        for j in 0..3 {
+            let mean: f64 = (0..200).map(|i| x[(i, j)]).sum::<f64>() / 200.0;
+            let var: f64 = (0..200).map(|i| x[(i, j)] * x[(i, j)]).sum::<f64>() / 200.0;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn normalize_rows_unit() {
+        let mut x = Mat::from_fn(10, 4, |i, j| (i + j) as f64 + 1.0);
+        normalize_rows(&mut x);
+        for i in 0..10 {
+            let norm: f64 = x.row(i).iter().map(|v| v * v).sum::<f64>();
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+}

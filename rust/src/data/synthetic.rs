@@ -1,0 +1,332 @@
+//! Deterministic synthetic generators matched to the paper's datasets.
+//!
+//! Regression (Table 2):
+//!   elevation — band-limited "terrain" on S^2 built from randomly oriented
+//!               Legendre lobes (the S^2 analogue of band-limited spherical-
+//!               harmonic fields); n = 64,800 (the 1-degree ETOPO grid).
+//!   co2       — spatio-temporal plume field on [S^2, R]: point sources with
+//!               seasonal modulation plus a secular trend; n = 146,040.
+//!   climate   — smoother large-scale field on [S^2, R] with latitudinal
+//!               gradient and seasonal cycle; n = 223,656.
+//!   protein   — nonlinear feature-interaction regression in R^9 (CASP-like
+//!               physicochemical features); n = 45,730.
+//!
+//! Clustering (Table 3): Gaussian mixtures matched in (n, d, k) to the six
+//! UCI sets, l2-normalized to the sphere exactly as the paper preprocesses.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::special::gegenbauer_eval;
+
+/// A regression or clustering dataset.
+pub struct Dataset {
+    pub name: &'static str,
+    pub x: Mat,
+    pub y: Vec<f64>,
+    /// class labels for clustering sets (empty for regression)
+    pub labels: Vec<usize>,
+    /// number of classes (clustering) or 0
+    pub k: usize,
+}
+
+fn sphere_points(rng: &mut Rng, n: usize, d: usize) -> Mat {
+    let mut x = Mat::zeros(n, d);
+    for i in 0..n {
+        rng.sphere(x.row_mut(i));
+    }
+    x
+}
+
+/// Band-limited random field on S^2: f(x) = sum_k a_k P_3^{l_k}(<x, c_k>).
+/// This is a positive-combination of zonal kernels — exactly the function
+/// class the paper's kernels model well, and a faithful stand-in for
+/// spherical-harmonic terrain.
+fn zonal_field(rng: &mut Rng, n_lobes: usize, max_degree: usize) -> impl Fn(&[f64]) -> f64 {
+    let d = 3;
+    let mut centers = Vec::with_capacity(n_lobes);
+    let mut degrees = Vec::with_capacity(n_lobes);
+    let mut amps = Vec::with_capacity(n_lobes);
+    for _ in 0..n_lobes {
+        let mut c = vec![0.0; d];
+        rng.sphere(&mut c);
+        centers.push(c);
+        let l = 1 + rng.below(max_degree);
+        degrees.push(l);
+        // higher-degree lobes get smaller amplitude (red spectrum, like
+        // real topography)
+        amps.push(rng.normal() / (1.0 + l as f64).sqrt());
+    }
+    move |x: &[f64]| {
+        let mut v = 0.0;
+        for k in 0..centers.len() {
+            let t: f64 = x.iter().zip(&centers[k]).map(|(&a, &b)| a * b).sum();
+            v += amps[k] * gegenbauer_eval(degrees[k], 3, t.clamp(-1.0, 1.0));
+        }
+        v
+    }
+}
+
+/// Earth-elevation stand-in: n points on S^2, band-limited terrain target.
+pub fn elevation(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xE1E7);
+    let x = sphere_points(&mut rng, n, 3);
+    let field = zonal_field(&mut rng, 40, 12);
+    let mut noise = rng.fork(1);
+    let y: Vec<f64> = (0..n)
+        .map(|i| 2.0 * field(x.row(i)) + 0.05 * noise.normal())
+        .collect();
+    Dataset { name: "elevation", x, y, labels: vec![], k: 0 }
+}
+
+fn spatio_temporal(
+    n: usize,
+    seed: u64,
+    name: &'static str,
+    n_sources: usize,
+    sharpness: f64,
+    trend: f64,
+    season_amp: f64,
+    noise_sd: f64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    // spatial part on S^2, temporal coordinate in 12 discrete months scaled
+    // to [0, 1] (the paper appends the temporal value to the S^2 coords)
+    let sp = sphere_points(&mut rng, n, 3);
+    let mut x = Mat::zeros(n, 4);
+    let mut tchoice = rng.fork(2);
+    for i in 0..n {
+        x.row_mut(i)[..3].copy_from_slice(sp.row(i));
+        x.row_mut(i)[3] = tchoice.below(12) as f64 / 11.0;
+    }
+    // point sources with seasonal phase
+    let mut src = rng.fork(3);
+    let mut sources = Vec::new();
+    for _ in 0..n_sources {
+        let mut c = vec![0.0; 3];
+        src.sphere(&mut c);
+        let amp = src.uniform_in(0.5, 2.0);
+        let phase = src.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+        sources.push((c, amp, phase));
+    }
+    let mut noise = rng.fork(4);
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let row = x.row(i);
+            let tau = row[3];
+            let mut v = trend * tau;
+            for (c, amp, phase) in &sources {
+                let cos: f64 = row[..3].iter().zip(c).map(|(&a, &b)| a * b).sum();
+                let bump = (sharpness * (cos - 1.0)).exp(); // von-Mises-like plume
+                let seasonal = 1.0 + season_amp * (2.0 * std::f64::consts::PI * tau + phase).sin();
+                v += amp * bump * seasonal;
+            }
+            v + noise_sd * noise.normal()
+        })
+        .collect();
+    Dataset { name, x, y, labels: vec![], k: 0 }
+}
+
+/// ODIAC-CO2 stand-in on [S^2, R]: sharp plumes + trend + seasonality.
+pub fn co2(n: usize, seed: u64) -> Dataset {
+    spatio_temporal(n, seed ^ 0xC02, "co2", 25, 12.0, 0.8, 0.5, 0.05)
+}
+
+/// Berkeley-Earth climate stand-in on [S^2, R]: smooth latitudinal field.
+pub fn climate(n: usize, seed: u64) -> Dataset {
+    let mut ds = spatio_temporal(n, seed ^ 0xC11A, "climate", 8, 3.0, 0.3, 1.0, 0.1);
+    // add the dominant latitudinal temperature gradient (z-coordinate)
+    for i in 0..ds.x.rows() {
+        let z = ds.x[(i, 2)];
+        ds.y[i] += 3.0 * (1.0 - z * z); // warm equator, cold poles
+    }
+    ds
+}
+
+/// CASP-protein stand-in in R^9: standardized features, smooth nonlinear
+/// interaction target (RMSD-like, strictly positive).
+pub fn protein(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x9607);
+    let d = 9;
+    // correlated features: z = L g with a fixed random mixing matrix
+    let mix = Mat::from_fn(d, d, |_, _| rng.normal() * 0.4);
+    let mut x = Mat::zeros(n, d);
+    let mut g = vec![0.0; d];
+    for i in 0..n {
+        rng.fill_normal(&mut g);
+        let row = x.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r = g[j] + mix.row(j).iter().zip(&g).map(|(&a, &b)| a * b).sum::<f64>();
+        }
+    }
+    super::standardize(&mut x);
+    let mut noise = rng.fork(5);
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            let v = (r[0] * r[1]).tanh() + 0.8 * (r[2] + 0.5 * r[3] * r[3]).sin()
+                + 0.6 * (r[4] - r[5]).abs().sqrt()
+                + 0.4 * r[6] * (r[7] * 0.7).cos()
+                + 0.2 * r[8];
+            5.0 + 2.0 * v + 0.3 * noise.normal()
+        })
+        .collect();
+    Dataset { name: "protein", x, y, labels: vec![], k: 0 }
+}
+
+/// Geometry of one Table-3 clustering dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusteringSpec {
+    pub name: &'static str,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+}
+
+/// The six UCI datasets of Table 3, matched in (n, d, #classes).
+pub const CLUSTERING_SPECS: [ClusteringSpec; 6] = [
+    ClusteringSpec { name: "abalone", n: 4_177, d: 8, k: 3 },
+    ClusteringSpec { name: "pendigits", n: 7_494, d: 16, k: 10 },
+    ClusteringSpec { name: "mushroom", n: 8_124, d: 21, k: 2 },
+    ClusteringSpec { name: "magic", n: 19_020, d: 10, k: 2 },
+    ClusteringSpec { name: "statlog", n: 43_500, d: 9, k: 7 },
+    ClusteringSpec { name: "connect4", n: 67_557, d: 42, k: 3 },
+];
+
+/// Gaussian-mixture clustering dataset, l2-normalized to S^{d-1} (the
+/// paper's preprocessing). Cluster separation chosen so the problem is
+/// non-trivial but solvable (overlapping mixtures).
+pub fn clustering_dataset(spec: ClusteringSpec, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xC105);
+    let ClusteringSpec { name, n, d, k } = spec;
+    let mut centers = Mat::zeros(k, d);
+    for c in 0..k {
+        rng.sphere(centers.row_mut(c));
+    }
+    let mut x = Mat::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    let spread = 0.55;
+    for i in 0..n {
+        let c = i % k; // balanced classes
+        labels.push(c);
+        let row = x.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r = centers[(c, j)] + spread * rng.normal();
+        }
+    }
+    super::normalize_rows(&mut x);
+    Dataset { name, x, y: vec![], labels, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elevation_geometry() {
+        let ds = elevation(500, 1);
+        assert_eq!(ds.x.rows(), 500);
+        assert_eq!(ds.x.cols(), 3);
+        for i in 0..500 {
+            let norm: f64 = ds.x.row(i).iter().map(|v| v * v).sum::<f64>();
+            assert!((norm - 1.0).abs() < 1e-10, "points must lie on S^2");
+        }
+        // target must have signal (not constant)
+        let mean = ds.y.iter().sum::<f64>() / 500.0;
+        let var = ds.y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 500.0;
+        assert!(var > 0.01, "target variance {var}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = elevation(100, 42);
+        let b = elevation(100, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = elevation(100, 43);
+        assert!(a.x.max_abs_diff(&c.x) > 1e-6);
+    }
+
+    #[test]
+    fn co2_and_climate_geometry() {
+        for ds in [co2(300, 2), climate(300, 2)] {
+            assert_eq!(ds.x.cols(), 4);
+            for i in 0..300 {
+                let s: f64 = ds.x.row(i)[..3].iter().map(|v| v * v).sum::<f64>();
+                assert!((s - 1.0).abs() < 1e-10);
+                let tau = ds.x.row(i)[3];
+                assert!((0.0..=1.0).contains(&tau));
+            }
+        }
+    }
+
+    #[test]
+    fn co2_is_seasonal() {
+        // the target must actually depend on the temporal coordinate
+        let ds = co2(4000, 3);
+        let mut by_month = vec![(0.0, 0usize); 12];
+        for i in 0..4000 {
+            let m = (ds.x[(i, 3)] * 11.0).round() as usize;
+            by_month[m].0 += ds.y[i];
+            by_month[m].1 += 1;
+        }
+        let means: Vec<f64> = by_month.iter().map(|&(s, c)| s / c.max(1) as f64).collect();
+        let lo = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(hi - lo > 0.1, "seasonal amplitude {}", hi - lo);
+    }
+
+    #[test]
+    fn protein_standardized() {
+        let ds = protein(2000, 4);
+        assert_eq!(ds.x.cols(), 9);
+        for j in 0..9 {
+            let mean: f64 = (0..2000).map(|i| ds.x[(i, j)]).sum::<f64>() / 2000.0;
+            assert!(mean.abs() < 0.1);
+        }
+        assert!(ds.y.iter().all(|&v| v.is_finite()));
+    }
+
+    #[test]
+    fn clustering_specs_and_labels() {
+        let spec = CLUSTERING_SPECS[0];
+        let ds = clustering_dataset(spec, 5);
+        assert_eq!(ds.x.rows(), spec.n);
+        assert_eq!(ds.x.cols(), spec.d);
+        assert_eq!(ds.labels.len(), spec.n);
+        assert!(ds.labels.iter().all(|&l| l < spec.k));
+        for i in 0..50 {
+            let norm: f64 = ds.x.row(i).iter().map(|v| v * v).sum::<f64>();
+            assert!((norm - 1.0).abs() < 1e-10);
+        }
+        // every class present
+        for c in 0..spec.k {
+            assert!(ds.labels.iter().any(|&l| l == c));
+        }
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        // same-class pairs must be closer on average than cross-class pairs
+        let ds = clustering_dataset(ClusteringSpec { name: "t", n: 600, d: 8, k: 3 }, 6);
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0.0, 0usize, 0.0, 0usize);
+        for i in 0..200 {
+            for j in 0..i {
+                let d2: f64 = ds
+                    .x
+                    .row(i)
+                    .iter()
+                    .zip(ds.x.row(j))
+                    .map(|(&a, &b)| (a - b) * (a - b))
+                    .sum();
+                if ds.labels[i] == ds.labels[j] {
+                    same += d2;
+                    same_n += 1;
+                } else {
+                    diff += d2;
+                    diff_n += 1;
+                }
+            }
+        }
+        assert!(same / same_n as f64 + 0.05 < diff / diff_n as f64);
+    }
+}

@@ -1,0 +1,131 @@
+//! Figure 1: max-error of polynomial approximations on [-1, 1] vs degree,
+//! comparing the Taylor expansion (d = infinity) against Gegenbauer series
+//! with d in {2, 4, 8, 32} (d = 2 being the Chebyshev series), for
+//! kappa(x) = exp(2x) and the two-layer ReLU NTK.
+
+use crate::bench::Table;
+use crate::kernels::ntk_kappa;
+use crate::special::series::{exp_maclaurin, ntk_maclaurin};
+use crate::special::{gegenbauer_all, gegenbauer_series_coeffs};
+
+pub const DIMS: [usize; 4] = [2, 4, 8, 32];
+
+/// Error curves for one target function.
+pub struct Fig1Curves {
+    pub function: &'static str,
+    /// taylor[q] = max error of the degree-q Maclaurin truncation
+    pub taylor: Vec<f64>,
+    /// gegenbauer[di][q] for DIMS[di]
+    pub gegenbauer: Vec<Vec<f64>>,
+}
+
+fn max_err_poly(coeffs: &[f64], d: usize, f: &dyn Fn(f64) -> f64, grid: &[f64]) -> f64 {
+    let q = coeffs.len() - 1;
+    let p = gegenbauer_all(q, d, grid);
+    let mut max_err: f64 = 0.0;
+    for (j, &t) in grid.iter().enumerate() {
+        let approx: f64 = (0..=q).map(|l| coeffs[l] * p[l * grid.len() + j]).sum();
+        max_err = max_err.max((approx - f(t)).abs());
+    }
+    max_err
+}
+
+fn max_err_taylor(coeffs: &[f64], f: &dyn Fn(f64) -> f64, grid: &[f64]) -> f64 {
+    let mut max_err: f64 = 0.0;
+    for &t in grid {
+        let mut acc = 0.0;
+        for &c in coeffs.iter().rev() {
+            acc = acc * t + c;
+        }
+        max_err = max_err.max((acc - f(t)).abs());
+    }
+    max_err
+}
+
+/// Compute the Fig.-1 curves up to `max_degree` for both target functions.
+pub fn run(max_degree: usize) -> Vec<Fig1Curves> {
+    let grid: Vec<f64> = (0..2001).map(|i| -1.0 + 2.0 * i as f64 / 2000.0).collect();
+    let targets: Vec<(&'static str, Box<dyn Fn(f64) -> f64>, Vec<f64>)> = vec![
+        ("exp(2x)", Box::new(|t: f64| (2.0 * t).exp()), exp_maclaurin(2.0, max_degree + 1).c),
+        // the paper's two-layer ReLU NTK a1(a1(x)) + (a1(x)+x a0(x)) a0(a1(x))
+        // is depth = 3 in our kappa indexing (two nested a1 applications)
+        ("ntk-2layer", Box::new(|t: f64| ntk_kappa(t, 3)), ntk_maclaurin(3, max_degree + 1).c),
+    ];
+    let mut out = Vec::new();
+    for (name, f, taylor_coef) in targets {
+        let mut taylor = Vec::with_capacity(max_degree + 1);
+        for q in 0..=max_degree {
+            taylor.push(max_err_taylor(&taylor_coef[..=q], f.as_ref(), &grid));
+        }
+        let mut geg = Vec::new();
+        for &d in DIMS.iter() {
+            let coeffs = gegenbauer_series_coeffs(|t| f(t), max_degree, d, 512);
+            let mut errs = Vec::with_capacity(max_degree + 1);
+            for q in 0..=max_degree {
+                errs.push(max_err_poly(&coeffs[..=q], d, f.as_ref(), &grid));
+            }
+            geg.push(errs);
+        }
+        out.push(Fig1Curves { function: name, taylor, gegenbauer: geg });
+    }
+    out
+}
+
+/// Print the curves as a table (degree x method), the textual Fig. 1.
+pub fn print(curves: &[Fig1Curves]) {
+    for c in curves {
+        println!("\nFigure 1 — {} : max error on [-1,1]", c.function);
+        let mut headers = vec!["degree".to_string(), "taylor".to_string()];
+        for &d in DIMS.iter() {
+            headers.push(if d == 2 { "geg d=2 (cheb)".into() } else { format!("geg d={d}") });
+        }
+        let mut table = Table::new(headers);
+        for q in 0..c.taylor.len() {
+            let mut row = vec![q.to_string(), format!("{:.2e}", c.taylor[q])];
+            for di in 0..DIMS.len() {
+                row.push(format!("{:.2e}", c.gegenbauer[di][q]));
+            }
+            table.row(row);
+        }
+        table.print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chebyshev_beats_taylor_for_exp() {
+        // the figure's headline: at degree 15, Chebyshev (d=2) crushes
+        // Taylor, and the Gegenbauer family interpolates between them
+        let curves = run(15);
+        let exp = &curves[0];
+        let cheb = exp.gegenbauer[0][15];
+        let taylor = exp.taylor[15];
+        assert!(cheb < taylor * 1e-2, "cheb {cheb} vs taylor {taylor}");
+        // interpolation: error at d=4 between d=2 and taylor
+        let d4 = exp.gegenbauer[1][15];
+        assert!(cheb <= d4 * 10.0 && d4 <= taylor, "{cheb} {d4} {taylor}");
+    }
+
+    #[test]
+    fn errors_decrease_with_degree() {
+        let curves = run(12);
+        for c in &curves {
+            for errs in c.gegenbauer.iter() {
+                assert!(errs[12] <= errs[2] + 1e-12, "{}", c.function);
+            }
+        }
+    }
+
+    #[test]
+    fn ntk_taylor_is_poor() {
+        // NTK is non-analytic at |t| = 1 -> Taylor converges slowly there
+        let curves = run(15);
+        let ntk = &curves[1];
+        assert!(ntk.taylor[15] > 1e-3, "{}", ntk.taylor[15]);
+        // Chebyshev still improves markedly over Taylor
+        assert!(ntk.gegenbauer[0][15] < ntk.taylor[15]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment drivers shared by the CLI (`gzk <exp>`) and the bench
+//! binaries (`cargo bench`). One function per paper table/figure; each
+//! returns structured rows so benches and EXPERIMENTS.md stay in sync.
+
+pub mod fig1;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod spectral_quality;

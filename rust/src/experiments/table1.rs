@@ -1,0 +1,129 @@
+//! Table 1: feature-dimension bounds of each Gaussian-kernel approximation
+//! for an (eps, lambda)-spectral guarantee, evaluated over a grid of
+//! problem geometries, plus an *empirical* companion: the measured feature
+//! count each random method needs to reach eps <= 0.5 on a small dataset.
+
+use crate::bench::Table;
+use crate::features::{Featurizer, FourierFeatures, GegenbauerFeatures, RadialTable};
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::spectral::{spectral_epsilon, statistical_dimension, table1_bounds, BoundRow};
+
+/// The analytic half: print the bound formulas across geometries.
+pub fn run_bounds() -> Vec<(String, Vec<BoundRow>)> {
+    let geoms = [
+        (1e5f64, 1e-3f64, 1.0f64, 3.0f64),
+        (1e6, 1e-6, 1.0, 3.0),
+        (1e6, 1e-6, 4.0, 3.0),
+        (1e6, 1e-6, 1.0, 8.0),
+        (1e6, 1e-6, 1.0, 24.0),
+    ];
+    let mut out = Vec::new();
+    for (n, lam, r, d) in geoms {
+        // s_lambda estimate for a Gaussian kernel at this geometry: use the
+        // paper's sub-poly proxy min(n, (log(n/lam))^d / d!)
+        let s_est = ((n / lam).ln().powf(d) / (1..=(d as usize)).map(|k| k as f64).product::<f64>())
+            .min(n);
+        let rows = table1_bounds(n, lam, r, d, s_est.max(2.0));
+        out.push((format!("n={n:.0e} lam={lam:.0e} r={r} d={d}"), rows));
+    }
+    out
+}
+
+pub fn print_bounds(rows: &[(String, Vec<BoundRow>)]) {
+    println!("\nTable 1 — log10(feature-dimension bound) per method\n");
+    let methods: Vec<&str> = rows[0].1.iter().map(|r| r.method).collect();
+    let mut headers = vec!["geometry".to_string()];
+    headers.extend(methods.iter().map(|m| m.to_string()));
+    let mut t = Table::new(headers);
+    for (geom, brs) in rows {
+        let mut row = vec![geom.clone()];
+        row.extend(brs.iter().map(|b| format!("{:.1}", b.log10_features)));
+        t.row(row);
+    }
+    t.print();
+}
+
+/// The empirical half: measured features needed for eps <= target on a
+/// small synthetic set, Gegenbauer vs Fourier (the two oblivious methods).
+pub struct EmpiricalRow {
+    pub method: &'static str,
+    pub m_needed: Option<usize>,
+    pub final_eps: f64,
+}
+
+pub fn run_empirical(n: usize, d: usize, lambda: f64, eps_target: f64, seed: u64) -> Vec<EmpiricalRow> {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.6);
+    let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+    let s_lam = statistical_dimension(&k, lambda);
+    println!("  (statistical dimension s_lambda = {s_lam:.1})");
+    let table = RadialTable::gaussian(d, 12, 3);
+    let mut out = Vec::new();
+    for method in ["gegenbauer", "fourier"] {
+        let mut m_needed = None;
+        let mut final_eps = f64::INFINITY;
+        for &m in &[64usize, 128, 256, 512, 1024, 2048, 4096] {
+            let z = match method {
+                "gegenbauer" => {
+                    GegenbauerFeatures::new(table.clone(), m / table.s, seed + m as u64)
+                        .featurize(&x)
+                }
+                _ => FourierFeatures::new(d, m, 1.0, seed + m as u64).featurize(&x),
+            };
+            let eps = spectral_epsilon(&k, &z.matmul_nt(&z), lambda);
+            final_eps = eps;
+            if eps <= eps_target {
+                m_needed = Some(m);
+                break;
+            }
+        }
+        out.push(EmpiricalRow {
+            method: if method == "gegenbauer" { "gegenbauer" } else { "fourier" },
+            m_needed,
+            final_eps,
+        });
+    }
+    out
+}
+
+pub fn print_empirical(rows: &[EmpiricalRow], eps_target: f64) {
+    println!("\nTable 1 (empirical) — features needed for eps <= {eps_target}\n");
+    let mut t = Table::new(vec!["method", "m needed", "eps at stop"]);
+    for r in rows {
+        t.row(vec![
+            r.method.to_string(),
+            r.m_needed.map(|m| m.to_string()).unwrap_or_else(|| ">4096".into()),
+            format!("{:.3}", r.final_eps),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_table_has_shape() {
+        let rows = run_bounds();
+        assert_eq!(rows.len(), 5);
+        for (_, brs) in &rows {
+            assert_eq!(brs.len(), 7);
+        }
+    }
+
+    #[test]
+    fn empirical_both_methods_converge() {
+        let rows = run_empirical(48, 3, 0.5, 0.6, 3);
+        for r in &rows {
+            assert!(
+                r.m_needed.is_some() || r.final_eps < 1.0,
+                "{}: eps {}",
+                r.method,
+                r.final_eps
+            );
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Table 2: kernel ridge regression with the Gaussian kernel on the four
+//! regression datasets (Elevation, CO2, Climate, Protein), comparing all
+//! six approximation methods at feature dimension m = 1024.
+//!
+//! Reported per (dataset, method): test MSE and featurization wall time —
+//! the same two columns as the paper. Datasets are the synthetic
+//! stand-ins of `data::synthetic` (DESIGN.md §6); `scale` subsamples each
+//! dataset to scale * n_paper rows to keep bench wall time sane.
+
+use crate::bench::Table;
+use crate::data::{self, Dataset};
+use crate::features::{
+    FastFoodFeatures, Featurizer, FourierFeatures, GegenbauerFeatures, MaclaurinFeatures,
+    NystromFeatures, PolySketchFeatures, RadialTable,
+};
+use crate::kernels::Kernel;
+use crate::krr::{mse, RidgeStats};
+use crate::linalg::Mat;
+use std::time::Instant;
+
+pub struct Table2Row {
+    pub dataset: &'static str,
+    pub method: &'static str,
+    pub mse: f64,
+    pub featurize_secs: f64,
+    pub fit_secs: f64,
+}
+
+/// Dataset geometry of the paper's Table 2 (n before scaling).
+pub const PAPER_SIZES: [(&str, usize); 4] =
+    [("elevation", 64_800), ("co2", 146_040), ("climate", 223_656), ("protein", 45_730)];
+
+pub fn make_dataset(name: &str, scale: f64, seed: u64) -> Dataset {
+    let n_full = PAPER_SIZES.iter().find(|(n, _)| *n == name).expect("dataset").1;
+    let n = ((n_full as f64 * scale) as usize).max(500);
+    match name {
+        "elevation" => data::elevation(n, seed),
+        "co2" => data::co2(n, seed),
+        "climate" => data::climate(n, seed),
+        "protein" => data::protein(n, seed),
+        _ => unreachable!(),
+    }
+}
+
+/// Bandwidth heuristic: median pairwise distance on a probe subsample.
+pub fn median_bandwidth(x: &Mat, seed: u64) -> f64 {
+    let mut rng = crate::rng::Rng::new(seed);
+    let n = x.rows().min(500);
+    let idx = rng.sample_indices(x.rows(), n);
+    let mut d2 = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in 0..i {
+            let (a, b) = (x.row(idx[i]), x.row(idx[j]));
+            d2.push(a.iter().zip(b).map(|(&u, &v)| (u - v) * (u - v)).sum::<f64>());
+        }
+    }
+    d2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (d2[d2.len() / 2]).sqrt().max(1e-6)
+}
+
+const LAMBDA_GRID: [f64; 5] = [1e-6, 1e-4, 1e-2, 1e0, 1e2];
+
+/// Fit on train (with lambda chosen on a validation split), evaluate MSE on
+/// test. Returns (mse, fit_secs).
+fn fit_eval(z_tr: &Mat, y_tr: &[f64], z_te: &Mat, y_te: &[f64]) -> (f64, f64) {
+    let t0 = Instant::now();
+    let n = z_tr.rows();
+    let n_val = (n / 10).max(1);
+    let n_fit = n - n_val;
+    let mut stats_fit = RidgeStats::new(z_tr.cols());
+    stats_fit.absorb(&z_tr.row_block(0, n_fit), &y_tr[..n_fit]);
+    let z_val = z_tr.row_block(n_fit, n);
+    let mut best = (f64::INFINITY, LAMBDA_GRID[0]);
+    for &lam in &LAMBDA_GRID {
+        let model = stats_fit.solve(lam * n_fit as f64 / 1000.0);
+        let e = mse(&model.predict(&z_val), &y_tr[n_fit..]);
+        if e < best.0 {
+            best = (e, lam);
+        }
+    }
+    // refit on all training rows at the chosen lambda
+    let mut stats = stats_fit;
+    stats.absorb(&z_val, &y_tr[n_fit..]);
+    let model = stats.solve(best.1 * n as f64 / 1000.0);
+    let fit_secs = t0.elapsed().as_secs_f64();
+    (mse(&model.predict(z_te), y_te), fit_secs)
+}
+
+/// Run one dataset through all six methods at feature dim `m_features`.
+pub fn run_dataset(name: &'static str, scale: f64, m_features: usize, seed: u64) -> Vec<Table2Row> {
+    let ds = make_dataset(name, scale, seed);
+    let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed ^ 0x5EED);
+    let d = x_tr.cols();
+    let bw = median_bandwidth(&x_tr, seed);
+    let kernel = Kernel::Gaussian { bandwidth: bw };
+
+    // scale inputs once for the unit-bandwidth GZK path
+    let mut x_tr_s = x_tr.clone();
+    x_tr_s.scale(1.0 / bw);
+    let mut x_te_s = x_te.clone();
+    x_te_s.scale(1.0 / bw);
+    let r_max = (0..x_tr_s.rows())
+        .map(|i| x_tr_s.row(i).iter().map(|v| v * v).sum::<f64>().sqrt())
+        .fold(0.0f64, f64::max);
+    // truncation: enough degrees for the scaled radius, s = 2 channels
+    let s = if d > 16 { 1 } else { 2 };
+    let q = crate::features::radial::suggest_q(r_max.min(3.0), d, x_tr.rows(), 1e-3, 0.5)
+        .min(16)
+        .max(4);
+    let table = RadialTable::gaussian(d, q, s);
+
+    let mut rows = Vec::new();
+    let methods: Vec<(&'static str, Box<dyn Featurizer>)> = vec![
+        (
+            "nystrom",
+            Box::new(NystromFeatures::fit(kernel.clone(), &x_tr, m_features, 1e-3, seed + 1)),
+        ),
+        ("fourier", Box::new(FourierFeatures::new(d, m_features, bw, seed + 2))),
+        ("fastfood", Box::new(FastFoodFeatures::new(d, m_features, bw, seed + 3))),
+        ("maclaurin", Box::new(MaclaurinFeatures::new_gaussian(d, m_features, bw, seed + 4))),
+        ("polysketch", Box::new(PolySketchFeatures::new(d, m_features, 6, bw, seed + 5))),
+        ("gegenbauer", Box::new(GegenbauerFeatures::new(table, m_features / s, seed + 6))),
+    ];
+    for (mname, feat) in methods {
+        let gz = mname == "gegenbauer";
+        let t0 = Instant::now();
+        // gegenbauer consumes pre-scaled inputs; all others take raw inputs
+        let z_tr = feat.featurize(if gz { &x_tr_s } else { &x_tr });
+        let featurize_secs = t0.elapsed().as_secs_f64();
+        let z_te = feat.featurize(if gz { &x_te_s } else { &x_te });
+        let (err, fit_secs) = fit_eval(&z_tr, &y_tr, &z_te, &y_te);
+        rows.push(Table2Row { dataset: name, method: mname, mse: err, featurize_secs, fit_secs });
+    }
+    rows
+}
+
+pub fn run_all(scale: f64, m_features: usize, seed: u64) -> Vec<Table2Row> {
+    let mut rows = Vec::new();
+    for (name, _) in PAPER_SIZES {
+        eprintln!("table2: running {name} (scale {scale}) ...");
+        rows.extend(run_dataset(name, scale, m_features, seed));
+    }
+    rows
+}
+
+pub fn print(rows: &[Table2Row]) {
+    println!("\nTable 2 — KRR with the Gaussian kernel (test MSE / featurize time)\n");
+    let mut t = Table::new(vec!["dataset", "method", "mse", "featurize", "fit"]);
+    for r in rows {
+        t.row(vec![
+            r.dataset.to_string(),
+            r.method.to_string(),
+            format!("{:.4}", r.mse),
+            format!("{:.2}s", r.featurize_secs),
+            format!("{:.2}s", r.fit_secs),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elevation_small_scale_ordering() {
+        // the paper's shape on S^2 data: gegenbauer and nystrom are the
+        // strong pair; maclaurin is the weak one
+        let rows = run_dataset("elevation", 0.02, 256, 7);
+        let get = |m: &str| rows.iter().find(|r| r.method == m).unwrap().mse;
+        let geg = get("gegenbauer");
+        let mac = get("maclaurin");
+        assert!(geg.is_finite() && mac.is_finite());
+        assert!(geg <= mac * 1.5, "gegenbauer {geg} vs maclaurin {mac}");
+    }
+
+    #[test]
+    fn bandwidth_heuristic_positive() {
+        let ds = make_dataset("protein", 0.02, 1);
+        let bw = median_bandwidth(&ds.x, 1);
+        assert!(bw > 0.1 && bw < 100.0, "{bw}");
+    }
+}

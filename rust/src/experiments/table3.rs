@@ -1,0 +1,107 @@
+//! Table 3: kernel k-means objective with the Gaussian kernel on the six
+//! UCI-geometry clustering datasets at feature dimension m = 512.
+//!
+//! Inputs are l2-normalized (the paper's preprocessing), so all points live
+//! on S^{d-1} and the Gaussian kernel becomes a zonal kernel — the
+//! best-case regime for Gegenbauer features at low d.
+
+use crate::bench::Table;
+use crate::data::{clustering_dataset, ClusteringSpec, CLUSTERING_SPECS};
+use crate::features::{
+    FastFoodFeatures, Featurizer, FourierFeatures, GegenbauerFeatures, MaclaurinFeatures,
+    NystromFeatures, PolySketchFeatures, RadialTable,
+};
+use crate::kernels::Kernel;
+use crate::kmeans::kmeans;
+use std::time::Instant;
+
+pub struct Table3Row {
+    pub dataset: &'static str,
+    pub method: &'static str,
+    pub objective: f64,
+    pub secs: f64,
+}
+
+pub fn run_dataset(spec: ClusteringSpec, scale: f64, m_features: usize, seed: u64) -> Vec<Table3Row> {
+    let scaled = ClusteringSpec {
+        name: spec.name,
+        n: ((spec.n as f64 * scale) as usize).max(50 * spec.k),
+        d: spec.d,
+        k: spec.k,
+    };
+    let ds = clustering_dataset(scaled, seed);
+    let d = spec.d;
+    let bw = 1.0; // unit-norm inputs; the paper uses a fixed Gaussian kernel
+    let kernel = Kernel::Gaussian { bandwidth: bw };
+    let s = if d > 16 { 1 } else { 2 };
+    // points on the sphere: radius exactly 1 -> modest q suffices
+    let q = (d / 2 + 6).min(12);
+    let table = RadialTable::gaussian(d, q, s);
+
+    let methods: Vec<(&'static str, Box<dyn Featurizer>)> = vec![
+        (
+            "nystrom",
+            Box::new(NystromFeatures::fit(kernel.clone(), &ds.x, m_features, 1e-3, seed + 1)),
+        ),
+        ("fourier", Box::new(FourierFeatures::new(d, m_features, bw, seed + 2))),
+        ("fastfood", Box::new(FastFoodFeatures::new(d, m_features, bw, seed + 3))),
+        ("maclaurin", Box::new(MaclaurinFeatures::new_gaussian(d, m_features, bw, seed + 4))),
+        ("polysketch", Box::new(PolySketchFeatures::new(d, m_features, 6, bw, seed + 5))),
+        ("gegenbauer", Box::new(GegenbauerFeatures::new(table, m_features / s, seed + 6))),
+    ];
+    let mut rows = Vec::new();
+    for (mname, feat) in methods {
+        let t0 = Instant::now();
+        let z = feat.featurize(&ds.x);
+        let res = kmeans(&z, spec.k, 50, seed ^ 0xB00);
+        rows.push(Table3Row {
+            dataset: spec.name,
+            method: mname,
+            objective: res.objective,
+            secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+    rows
+}
+
+pub fn run_all(scale: f64, m_features: usize, seed: u64) -> Vec<Table3Row> {
+    let mut rows = Vec::new();
+    for spec in CLUSTERING_SPECS {
+        eprintln!("table3: running {} (scale {scale}) ...", spec.name);
+        rows.extend(run_dataset(spec, scale, m_features, seed));
+    }
+    rows
+}
+
+pub fn print(rows: &[Table3Row]) {
+    println!("\nTable 3 — kernel k-means objective with the Gaussian kernel\n");
+    let mut t = Table::new(vec!["dataset", "method", "objective", "time"]);
+    for r in rows {
+        t.row(vec![
+            r.dataset.to_string(),
+            r.method.to_string(),
+            format!("{:.4}", r.objective),
+            format!("{:.2}s", r.secs),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abalone_small_runs_all_methods() {
+        let spec = CLUSTERING_SPECS[0]; // abalone, d=8
+        let rows = run_dataset(spec, 0.1, 128, 11);
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(r.objective.is_finite() && r.objective >= 0.0, "{}", r.method);
+        }
+        // the strong methods (gegenbauer / nystrom / fourier) should not be
+        // far worse than the weakest
+        let get = |m: &str| rows.iter().find(|r| r.method == m).unwrap().objective;
+        assert!(get("gegenbauer") <= get("maclaurin") * 2.0 + 0.1);
+    }
+}

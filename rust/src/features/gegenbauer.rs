@@ -1,0 +1,390 @@
+//! The paper's contribution: random Gegenbauer features for GZKs (Def. 8).
+//!
+//! Sample m i.i.d. directions w_k ~ U(S^{d-1}) and emit
+//!
+//!   Z[j, k*s + i] = (1/sqrt(m)) sum_l R[x_j][l, i] * P_d^l(<x_j, w_k>/||x_j||)
+//!
+//! where R folds the radial factors h_l and sqrt(alpha_{l,d}) (see
+//! [`RadialTable`]). The column order (direction-major, radial-minor)
+//! matches the L1 Pallas kernel so the PJRT path and this native path are
+//! interchangeable bit-for-bit up to f32 rounding.
+//!
+//! This file is the native (pure-rust) hot path used by coordinator
+//! workers; the AOT/PJRT path lives in `runtime`.
+
+use super::radial::RadialTable;
+use super::Featurizer;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::special::recurrence_coeffs;
+
+/// Random Gegenbauer featurizer (the paper's Definition 8).
+#[derive(Clone, Debug)]
+pub struct GegenbauerFeatures {
+    table: RadialTable,
+    /// directions, row-major (m x d)
+    w: Mat,
+    /// recurrence coefficient arrays
+    rec_a: Vec<f64>,
+    rec_b: Vec<f64>,
+}
+
+impl GegenbauerFeatures {
+    /// Sample `m` directions on S^{d-1} from `seed`. The same (table, m,
+    /// seed) always produces the same feature map — the data-oblivious
+    /// property the one-round distributed protocol relies on.
+    pub fn new(table: RadialTable, m: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed).fork(0x6E6);
+        let d = table.d;
+        let w = Mat::from_vec(m, d, rng.sphere_matrix(m, d));
+        let (rec_a, rec_b) = recurrence_coeffs(table.q, d);
+        GegenbauerFeatures { table, w, rec_a, rec_b }
+    }
+
+    /// Build around explicit directions (used by tests and the PJRT parity
+    /// harness).
+    pub fn with_directions(table: RadialTable, w: Mat) -> Self {
+        assert_eq!(w.cols(), table.d);
+        let (rec_a, rec_b) = recurrence_coeffs(table.q, table.d);
+        GegenbauerFeatures { table, w, rec_a, rec_b }
+    }
+
+    pub fn directions(&self) -> &Mat {
+        &self.w
+    }
+
+    pub fn table(&self) -> &RadialTable {
+        &self.table
+    }
+
+    pub fn num_directions(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// Featurize one point into `z_row` (length m*s). `t_buf` is scratch of
+    /// length m; `r_buf` of length (q+1)*s.
+    fn featurize_row(&self, x: &[f64], z_row: &mut [f64], t_buf: &mut [f64], r_buf: &mut [f64]) {
+        let m = self.w.rows();
+        let d = self.table.d;
+        let q = self.table.q;
+        let s = self.table.s;
+        let inv_sqrt_m = 1.0 / (m as f64).sqrt();
+
+        let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+        self.table.values_into(norm, r_buf); // (q+1)*s, allocation-free
+        let r = &*r_buf;
+
+        // t_k = <x, w_k> / ||x||
+        let inv = 1.0 / norm;
+        for k in 0..m {
+            let wrow = self.w.row(k);
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += x[j] * wrow[j];
+            }
+            t_buf[k] = (acc * inv).clamp(-1.0, 1.0);
+        }
+
+        // Perf notes (EXPERIMENTS.md §Perf, three iterations):
+        //  v1 (l-outer): streamed the (m*s) output row q times — memory
+        //     bound, 0.39x of the equal-flop matmul roofline.
+        //  v2 (k-outer, recurrence in registers): each z cell written once,
+        //     but the three-term recurrence is a serial FMA chain per k —
+        //     latency bound, no better.
+        //  v3 (this): 8-lane chunks over directions; the recurrence runs on
+        //     [f64; 8] lanes so the FMA chain has 8-way ILP and the
+        //     compiler vectorizes it.
+        const LANES: usize = 8;
+        let rs = r;
+        let aq = &self.rec_a;
+        let bq = &self.rec_b;
+        assert!(s <= 16, "radial order s > 16 not supported on the fast path");
+        let mut k0 = 0;
+        while k0 < m {
+            let lanes = LANES.min(m - k0);
+            let mut t = [0.0f64; LANES];
+            t[..lanes].copy_from_slice(&t_buf[k0..k0 + lanes]);
+            let mut pm1 = [1.0f64; LANES];
+            let mut pc = t;
+            // acc[i] holds the s radial channels, each on 8 lanes
+            let mut acc = [[0.0f64; LANES]; 16];
+            for (i, a) in acc.iter_mut().enumerate().take(s) {
+                *a = [rs[i]; LANES]; // l = 0, P_0 = 1
+            }
+            for l in 1..=q {
+                for i in 0..s {
+                    let ri = rs[l * s + i];
+                    if ri != 0.0 {
+                        for j in 0..LANES {
+                            acc[i][j] += ri * pc[j];
+                        }
+                    }
+                }
+                if l < q {
+                    let (a, b) = (aq[l + 1], bq[l + 1]);
+                    for j in 0..LANES {
+                        let nxt = a * t[j] * pc[j] + b * pm1[j];
+                        pm1[j] = pc[j];
+                        pc[j] = nxt;
+                    }
+                }
+            }
+            for j in 0..lanes {
+                for (i, a) in acc.iter().enumerate().take(s) {
+                    z_row[(k0 + j) * s + i] = a[j] * inv_sqrt_m;
+                }
+            }
+            k0 += lanes;
+        }
+    }
+
+    /// Featurize a batch into a preallocated output (rows n, cols m*s).
+    pub fn featurize_into(&self, x: &Mat, out: &mut Mat) {
+        let m = self.w.rows();
+        let s = self.table.s;
+        assert_eq!(x.cols(), self.table.d);
+        assert_eq!(out.rows(), x.rows());
+        assert_eq!(out.cols(), m * s);
+        let mut t_buf = vec![0.0; m];
+        let mut r_buf = vec![0.0; (self.table.q + 1) * s];
+        for i in 0..x.rows() {
+            self.featurize_row(x.row(i), out.row_mut(i), &mut t_buf, &mut r_buf);
+        }
+    }
+}
+
+impl GegenbauerFeatures {
+    /// Multi-threaded batch featurization: splits rows across `n_threads`
+    /// scoped threads (rayon is unavailable offline). Bit-identical to the
+    /// sequential path — each row's computation is independent.
+    pub fn featurize_par(&self, x: &Mat, n_threads: usize) -> Mat {
+        let n = x.rows();
+        let cols = self.dim();
+        if n_threads <= 1 || n < 2 * n_threads {
+            return self.featurize(x);
+        }
+        let mut out = Mat::zeros(n, cols);
+        let chunk = n.div_ceil(n_threads);
+        // split the output buffer into disjoint row ranges per thread
+        let out_data = out.data_mut();
+        let mut slices: Vec<&mut [f64]> = Vec::with_capacity(n_threads);
+        let mut rest = out_data;
+        for _ in 0..n_threads {
+            let take = (chunk * cols).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            slices.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            for (t, slice) in slices.into_iter().enumerate() {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                if lo >= hi {
+                    continue;
+                }
+                let this = &*self;
+                scope.spawn(move || {
+                    let m = this.w.rows();
+                    let mut t_buf = vec![0.0; m];
+                    let mut r_buf = vec![0.0; (this.table.q + 1) * this.table.s];
+                    for (r, i) in (lo..hi).enumerate() {
+                        this.featurize_row(
+                            x.row(i),
+                            &mut slice[r * cols..(r + 1) * cols],
+                            &mut t_buf,
+                            &mut r_buf,
+                        );
+                    }
+                });
+            }
+        });
+        out
+    }
+}
+
+impl Featurizer for GegenbauerFeatures {
+    fn dim(&self) -> usize {
+        self.w.rows() * self.table.s
+    }
+
+    fn featurize(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows(), self.dim());
+        self.featurize_into(x, &mut out);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "gegenbauer"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::test_support::check_gram_approx;
+    use crate::kernels::Kernel;
+    use crate::special::{alpha_dim, gegenbauer_eval};
+
+    #[test]
+    fn single_entry_formula() {
+        // Z[j, k*s+i] must equal the scalar-by-scalar Def.-8 evaluation
+        let table = RadialTable::gaussian(3, 5, 2);
+        let feat = GegenbauerFeatures::new(table.clone(), 4, 9);
+        let mut rng = crate::rng::Rng::new(64);
+        let x = Mat::from_fn(3, 3, |_, _| rng.normal() * 0.8);
+        let z = feat.featurize(&x);
+        let (j, k, i) = (2usize, 3usize, 1usize);
+        let xr = x.row(j);
+        let norm = xr.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let r = table.values(&[norm]);
+        let t: f64 =
+            xr.iter().zip(feat.directions().row(k)).map(|(&a, &b)| a * b).sum::<f64>() / norm;
+        let mut expect = 0.0;
+        for l in 0..=table.q {
+            expect += r[l * table.s + i] * gegenbauer_eval(l, 3, t);
+        }
+        expect /= (4.0f64).sqrt();
+        assert!((z[(j, k * table.s + i)] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_concentrates_gaussian() {
+        let table = RadialTable::gaussian(3, 14, 6);
+        let feat = GegenbauerFeatures::new(table, 4096, 11);
+        check_gram_approx(&feat, &Kernel::Gaussian { bandwidth: 1.0 }, 16, 3, 0.6, 65, 0.12);
+    }
+
+    #[test]
+    fn gram_concentrates_exponential() {
+        let table = RadialTable::exponential(3, 14, 6, 1.0);
+        let feat = GegenbauerFeatures::new(table, 4096, 12);
+        check_gram_approx(&feat, &Kernel::Exponential { gamma: 1.0 }, 12, 3, 0.6, 66, 0.15);
+    }
+
+    #[test]
+    fn gram_concentrates_ntk_on_sphere() {
+        let table = RadialTable::ntk(4, 24, 2);
+        let feat = GegenbauerFeatures::new(table, 4096, 13);
+        // points on the sphere: use scale trick then normalize inside check
+        let mut rng = crate::rng::Rng::new(67);
+        let mut x = Mat::zeros(10, 4);
+        for i in 0..10 {
+            rng.sphere(x.row_mut(i));
+        }
+        let z = feat.featurize(&x);
+        let k_hat = z.matmul_nt(&z);
+        let k = Kernel::Ntk { depth: 2 }.gram(&x);
+        let err = k_hat.max_abs_diff(&k) / 2.0; // kappa(1) = 2 is the scale
+        assert!(err < 0.12, "{err}");
+    }
+
+    #[test]
+    fn unbiasedness_in_expectation() {
+        // average Z Z^T over many seeds approaches K much closer than any
+        // single draw: variance shrinks, bias stays (truncation only)
+        let mut rng = crate::rng::Rng::new(68);
+        let x = Mat::from_fn(6, 3, |_, _| rng.normal() * 0.5);
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        let table = RadialTable::gaussian(3, 12, 5);
+        let mut mean = Mat::zeros(6, 6);
+        let reps = 48;
+        for rep in 0..reps {
+            let feat = GegenbauerFeatures::new(table.clone(), 256, 1000 + rep);
+            let z = feat.featurize(&x);
+            mean.add_assign(&z.matmul_nt(&z));
+        }
+        mean.scale(1.0 / reps as f64);
+        assert!(mean.max_abs_diff(&k) < 0.03, "{}", mean.max_abs_diff(&k));
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let table = RadialTable::gaussian(4, 8, 2);
+        let f1 = GegenbauerFeatures::new(table.clone(), 64, 5);
+        let f2 = GegenbauerFeatures::new(table, 64, 5);
+        assert_eq!(f1.directions(), f2.directions());
+        let mut rng = crate::rng::Rng::new(69);
+        let x = Mat::from_fn(5, 4, |_, _| rng.normal());
+        assert_eq!(f1.featurize(&x), f2.featurize(&x));
+    }
+
+    #[test]
+    fn polynomial_features_match_exact_kernel_tightly() {
+        // polynomial GZK truncation is exact, so only MC error remains —
+        // and with enough directions ZZ^T -> K
+        let table = RadialTable::polynomial(4, 2, 1.0);
+        let feat = GegenbauerFeatures::new(table, 8192, 14);
+        check_gram_approx(&feat, &Kernel::Polynomial { p: 2, c: 1.0 }, 10, 4, 0.8, 70, 0.1);
+    }
+
+    #[test]
+    fn chebyshev_d2_path() {
+        // d = 2 exercises the Chebyshev recurrence special case
+        let table = RadialTable::gaussian(2, 12, 5);
+        let feat = GegenbauerFeatures::new(table, 4096, 15);
+        check_gram_approx(&feat, &Kernel::Gaussian { bandwidth: 1.0 }, 10, 2, 0.6, 71, 0.12);
+    }
+
+    #[test]
+    fn parallel_featurize_bit_identical() {
+        let table = RadialTable::gaussian(3, 10, 2);
+        let feat = GegenbauerFeatures::new(table, 128, 17);
+        let mut rng = crate::rng::Rng::new(73);
+        let x = Mat::from_fn(101, 3, |_, _| rng.normal()); // odd row count
+        let seq = feat.featurize(&x);
+        for threads in [2usize, 3, 4, 8] {
+            let par = feat.featurize_par(&x, threads);
+            assert_eq!(seq, par, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn zonal_rotation_invariance() {
+        // on the sphere the Gaussian kernel is zonal: K(Rx, Ry) = K(x, y).
+        // the feature gram (with the SAME directions) is only invariant in
+        // expectation, so compare gram errors against the exact kernel.
+        let mut rng = crate::rng::Rng::new(74);
+        let n = 10;
+        let mut x = Mat::zeros(n, 3);
+        for i in 0..n {
+            rng.sphere(x.row_mut(i));
+        }
+        // a rotation: orthonormalize a random 3x3 via Gram-Schmidt
+        let mut rot = Mat::from_fn(3, 3, |_, _| rng.normal());
+        for i in 0..3 {
+            for j in 0..i {
+                let dot: f64 = (0..3).map(|k| rot[(i, k)] * rot[(j, k)]).sum();
+                for k in 0..3 {
+                    rot[(i, k)] -= dot * rot[(j, k)];
+                }
+            }
+            let norm: f64 = (0..3).map(|k| rot[(i, k)] * rot[(i, k)]).sum::<f64>().sqrt();
+            for k in 0..3 {
+                rot[(i, k)] /= norm;
+            }
+        }
+        let xr = x.matmul_nt(&rot);
+        let k = Kernel::Gaussian { bandwidth: 1.0 };
+        // exact kernel invariant
+        assert!(k.gram(&x).max_abs_diff(&k.gram(&xr)) < 1e-10);
+        // feature gram errors comparable before/after rotation
+        let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, 10, 1), 4096, 75);
+        let e1 = feat.featurize(&x).matmul_nt(&feat.featurize(&x)).max_abs_diff(&k.gram(&x));
+        let e2 = feat.featurize(&xr).matmul_nt(&feat.featurize(&xr)).max_abs_diff(&k.gram(&xr));
+        assert!(e1 < 0.25 && e2 < 0.25, "{e1} {e2}");
+        assert!((e1 - e2).abs() < 0.1, "invariance broken: {e1} vs {e2}");
+    }
+
+    #[test]
+    fn alpha_energy_sanity() {
+        // feature column norms relate to alpha-weighted radial energy; just
+        // assert all entries are finite and the scale is sane
+        let table = RadialTable::gaussian(3, 10, 3);
+        let feat = GegenbauerFeatures::new(table, 128, 16);
+        let mut rng = crate::rng::Rng::new(72);
+        let x = Mat::from_fn(4, 3, |_, _| rng.normal());
+        let z = feat.featurize(&x);
+        assert!(z.data().iter().all(|v| v.is_finite()));
+        assert!(alpha_dim(2, 3) > 0.0);
+    }
+}

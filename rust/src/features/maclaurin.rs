@@ -1,0 +1,149 @@
+//! Random Maclaurin features [KK12] for dot-product kernels, with the
+//! standard Gaussian-kernel adaptation via the radial factorization
+//! exp(-|x-y|^2/2) = e^{-|x|^2/2} e^{-|y|^2/2} e^{<x,y>}.
+//!
+//! Per output coordinate: sample degree N with P[N] = p^{-(N+1)} (p = 2),
+//! then z(x) = sqrt(a_N p^{N+1}) prod_{k<=N} (w_k^T x) with Rademacher w_k,
+//! where a_N is the kernel's Maclaurin coefficient (1/N! for exp).
+
+use super::Featurizer;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MaclaurinFeatures {
+    d: usize,
+    /// for each feature: its degree and the packed Rademacher vectors
+    degrees: Vec<usize>,
+    omegas: Vec<Vec<f64>>, // degree * d entries each
+    coeffs: Vec<f64>,
+    /// Gaussian-kernel mode: multiply by e^{-|x|^2/(2 sigma^2)} and scale
+    /// inputs by 1/sigma
+    bandwidth: f64,
+    max_degree: usize,
+}
+
+impl MaclaurinFeatures {
+    /// Features for the Gaussian kernel of given bandwidth.
+    pub fn new_gaussian(d: usize, f_dim: usize, bandwidth: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed).fork(0x3AC1);
+        let p = 2.0f64;
+        let max_degree = 24;
+        let mut degrees = Vec::with_capacity(f_dim);
+        let mut omegas = Vec::with_capacity(f_dim);
+        let mut coeffs = Vec::with_capacity(f_dim);
+        // Maclaurin coefficients of exp: a_N = 1/N!
+        let mut log_fact = vec![0.0f64; max_degree + 1];
+        for k in 1..=max_degree {
+            log_fact[k] = log_fact[k - 1] + (k as f64).ln();
+        }
+        for _ in 0..f_dim {
+            // geometric degree: P[N] = 2^{-(N+1)}
+            let mut n_deg = 0usize;
+            while n_deg < max_degree && rng.next_u64() & 1 == 0 {
+                n_deg += 1;
+            }
+            let omega: Vec<f64> = (0..n_deg * d).map(|_| rng.rademacher()).collect();
+            // sqrt(a_N p^{N+1}) = sqrt(2^{N+1} / N!)
+            let c = (0.5 * ((n_deg as f64 + 1.0) * p.ln() - log_fact[n_deg])).exp();
+            degrees.push(n_deg);
+            omegas.push(omega);
+            coeffs.push(c);
+        }
+        MaclaurinFeatures { d, degrees, omegas, coeffs, bandwidth, max_degree }
+    }
+}
+
+impl Featurizer for MaclaurinFeatures {
+    fn dim(&self) -> usize {
+        self.degrees.len()
+    }
+
+    fn featurize(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols(), self.d);
+        let n = x.rows();
+        let f_dim = self.dim();
+        let inv_sqrt_f = 1.0 / (f_dim as f64).sqrt();
+        let inv_bw = 1.0 / self.bandwidth;
+        let mut out = Mat::zeros(n, f_dim);
+        let mut xs = vec![0.0; self.d];
+        for i in 0..n {
+            // scale by bandwidth and compute the Gaussian envelope
+            let xr = x.row(i);
+            let mut sq = 0.0;
+            for (j, &v) in xr.iter().enumerate() {
+                xs[j] = v * inv_bw;
+                sq += xs[j] * xs[j];
+            }
+            let env = (-0.5 * sq).exp();
+            let orow = out.row_mut(i);
+            for (f, orow_f) in orow.iter_mut().enumerate() {
+                let deg = self.degrees[f];
+                let omega = &self.omegas[f];
+                let mut prod = 1.0;
+                for k in 0..deg {
+                    let mut dot = 0.0;
+                    let wk = &omega[k * self.d..(k + 1) * self.d];
+                    for j in 0..self.d {
+                        dot += wk[j] * xs[j];
+                    }
+                    prod *= dot;
+                }
+                *orow_f = env * self.coeffs[f] * prod * inv_sqrt_f;
+            }
+        }
+        let _ = self.max_degree;
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "maclaurin"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn gram_concentrates_loosely() {
+        // Maclaurin features are high-variance (the paper's Tables 2/3 show
+        // it as the weakest method) — test with a generous tolerance
+        let feat = MaclaurinFeatures::new_gaussian(3, 16384, 1.0, 9);
+        let mut rng = crate::rng::Rng::new(100);
+        let x = Mat::from_fn(10, 3, |_, _| rng.normal() * 0.5);
+        let z = feat.featurize(&x);
+        let k_hat = z.matmul_nt(&z);
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        let err = k_hat.max_abs_diff(&k);
+        assert!(err < 0.35, "{err}");
+    }
+
+    #[test]
+    fn degree_distribution_geometric() {
+        let feat = MaclaurinFeatures::new_gaussian(2, 20000, 1.0, 10);
+        let zero = feat.degrees.iter().filter(|&&d| d == 0).count() as f64;
+        let one = feat.degrees.iter().filter(|&&d| d == 1).count() as f64;
+        assert!((zero / 20000.0 - 0.5).abs() < 0.02);
+        assert!((one / 20000.0 - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn deterministic() {
+        let f1 = MaclaurinFeatures::new_gaussian(3, 128, 1.0, 11);
+        let f2 = MaclaurinFeatures::new_gaussian(3, 128, 1.0, 11);
+        let mut rng = crate::rng::Rng::new(101);
+        let x = Mat::from_fn(4, 3, |_, _| rng.normal());
+        assert_eq!(f1.featurize(&x), f2.featurize(&x));
+    }
+
+    #[test]
+    fn finite_output() {
+        let feat = MaclaurinFeatures::new_gaussian(5, 512, 2.0, 12);
+        let mut rng = crate::rng::Rng::new(102);
+        let x = Mat::from_fn(6, 5, |_, _| rng.normal() * 2.0);
+        let z = feat.featurize(&x);
+        assert!(z.data().iter().all(|v| v.is_finite()));
+    }
+}

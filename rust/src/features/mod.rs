@@ -1,0 +1,67 @@
+//! Feature maps: the paper's random Gegenbauer features plus every baseline
+//! in Tables 2/3.
+//!
+//! All featurizers implement [`Featurizer`]: map a batch of raw points
+//! (n x d) to a feature matrix Z (n x F) such that Z Z^T approximates the
+//! target kernel's Gram matrix.
+
+mod fastfood;
+mod gegenbauer;
+mod maclaurin;
+mod nystrom;
+mod polysketch;
+pub mod radial;
+mod rff;
+
+pub use fastfood::FastFoodFeatures;
+pub use gegenbauer::GegenbauerFeatures;
+pub use maclaurin::MaclaurinFeatures;
+pub use nystrom::NystromFeatures;
+pub use polysketch::PolySketchFeatures;
+pub use radial::RadialTable;
+pub use rff::FourierFeatures;
+
+use crate::linalg::Mat;
+
+/// A (possibly random) finite-dimensional feature map for a kernel.
+pub trait Featurizer {
+    /// Output feature dimension F.
+    fn dim(&self) -> usize;
+    /// Map points (n x d) to features (n x F).
+    fn featurize(&self, x: &Mat) -> Mat;
+    /// Human-readable method name (bench tables).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::kernels::Kernel;
+    use crate::rng::Rng;
+
+    /// Shared concentration check: max |Z Z^T - K| / max |K| below tol.
+    pub fn check_gram_approx(
+        feat: &dyn Featurizer,
+        kernel: &Kernel,
+        n: usize,
+        d: usize,
+        scale: f64,
+        seed: u64,
+        tol: f64,
+    ) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal() * scale);
+        let z = feat.featurize(&x);
+        assert_eq!(z.rows(), n);
+        assert_eq!(z.cols(), feat.dim());
+        let k_hat = z.matmul_nt(&z);
+        let k = kernel.gram(&x);
+        let kmax = k.data().iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        let err = k_hat.max_abs_diff(&k) / kmax;
+        assert!(
+            err < tol,
+            "{}: relative gram error {err:.4} >= {tol}",
+            feat.name()
+        );
+    }
+}

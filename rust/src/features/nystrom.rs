@@ -1,0 +1,177 @@
+//! Nystrom features with recursive ridge-leverage-score landmark sampling
+//! [MM17, WS01] — the data-*dependent* baseline the paper contrasts its
+//! data-oblivious features against.
+//!
+//! Landmarks L of size m; Z(x) = Lchol^{-1} k_L(x) with K_LL = Lchol
+//! Lchol^T, so Z Z^T = K_nL K_LL^{-1} K_Ln — the classic Nystrom
+//! approximation. Landmarks are drawn uniformly, then refined one level by
+//! approximate ridge leverage scores (the two-level core of MM17's
+//! recursive scheme).
+
+use super::Featurizer;
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Mat};
+use crate::rng::Rng;
+
+pub struct NystromFeatures {
+    kernel: Kernel,
+    /// landmark points (m x d)
+    landmarks: Mat,
+    /// Cholesky factor of K_LL (+ jitter)
+    chol: Cholesky,
+}
+
+impl NystromFeatures {
+    /// Fit on the training set: two-level approximate ridge-leverage-score
+    /// sampling (the core step of MM17's recursive scheme). To keep the fit
+    /// at O(m^3) instead of O(n m^2), leverage scores are estimated on a
+    /// candidate pool of min(n, 4m) uniform rows against a pilot of
+    /// min(n, m) — the recursive-halving trick applied once.
+    pub fn fit(kernel: Kernel, x_train: &Mat, m: usize, lambda: f64, seed: u64) -> Self {
+        let n = x_train.rows();
+        let d = x_train.cols();
+        let mut rng = Rng::new(seed).fork(0x9957);
+        let m = m.min(n);
+
+        // candidate pool (what we will sample landmarks from)
+        let n_cand = (4 * m).min(n);
+        let cand_idx = rng.sample_indices(n, n_cand);
+
+        // level 0: uniform pilot of size min(n, m)
+        let m0 = m.min(n);
+        let idx0 = rng.sample_indices(n, m0);
+        let mut pilot = Mat::zeros(m0, d);
+        for (r, &i) in idx0.iter().enumerate() {
+            pilot.row_mut(r).copy_from_slice(x_train.row(i));
+        }
+
+        // approximate ridge leverage scores of the candidates against the
+        // pilot: tau_i ~ (1/lambda)(k(x_i,x_i) - k_i^T (K_pp + l I)^{-1} k_i)
+        let mut kpp = kernel.gram(&pilot);
+        kpp.add_diag(lambda.max(1e-10));
+        let (chol_p, _) = Cholesky::new_with_jitter(&kpp, 1e-10);
+        let mut scores = Vec::with_capacity(n_cand);
+        let mut ki = vec![0.0; m0];
+        for &ci in &cand_idx {
+            for (j, kij) in ki.iter_mut().enumerate() {
+                *kij = kernel.eval(x_train.row(ci), pilot.row(j));
+            }
+            let sol = chol_p.solve(&ki);
+            let quad: f64 = ki.iter().zip(&sol).map(|(&a, &b)| a * b).sum();
+            let kii = kernel.eval(x_train.row(ci), x_train.row(ci));
+            scores.push(((kii - quad) / lambda.max(1e-10)).max(1e-12));
+        }
+
+        // level 1: sample m landmarks proportional to leverage scores
+        let total: f64 = scores.iter().sum();
+        let mut chosen = Vec::with_capacity(m);
+        let mut used = vec![false; n_cand];
+        while chosen.len() < m {
+            let mut u = rng.uniform() * total;
+            let mut pick = n_cand - 1;
+            for (i, &sc) in scores.iter().enumerate() {
+                if u < sc {
+                    pick = i;
+                    break;
+                }
+                u -= sc;
+            }
+            if !used[pick] {
+                used[pick] = true;
+                chosen.push(cand_idx[pick]);
+            }
+        }
+        let mut landmarks = Mat::zeros(m, d);
+        for (r, &i) in chosen.iter().enumerate() {
+            landmarks.row_mut(r).copy_from_slice(x_train.row(i));
+        }
+
+        let kll = kernel.gram(&landmarks);
+        let (chol, _) = Cholesky::new_with_jitter(&kll, 1e-8);
+        NystromFeatures { kernel, landmarks, chol }
+    }
+
+    pub fn landmarks(&self) -> &Mat {
+        &self.landmarks
+    }
+}
+
+impl Featurizer for NystromFeatures {
+    fn dim(&self) -> usize {
+        self.landmarks.rows()
+    }
+
+    fn featurize(&self, x: &Mat) -> Mat {
+        let m = self.landmarks.rows();
+        let n = x.rows();
+        let mut out = Mat::zeros(n, m);
+        let mut k_row = vec![0.0; m];
+        for i in 0..n {
+            for (j, kij) in k_row.iter_mut().enumerate() {
+                *kij = self.kernel.eval(x.row(i), self.landmarks.row(j));
+            }
+            let z = self.chol.solve_lower(&k_row);
+            out.row_mut(i).copy_from_slice(&z);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "nystrom"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_when_m_equals_n() {
+        // with all points as landmarks, Z Z^T = K exactly
+        let mut rng = crate::rng::Rng::new(120);
+        let x = Mat::from_fn(20, 3, |_, _| rng.normal() * 0.7);
+        let k = Kernel::Gaussian { bandwidth: 1.0 };
+        let feat = NystromFeatures::fit(k.clone(), &x, 20, 1e-6, 1);
+        let z = feat.featurize(&x);
+        let k_hat = z.matmul_nt(&z);
+        let kg = k.gram(&x);
+        assert!(k_hat.max_abs_diff(&kg) < 1e-4, "{}", k_hat.max_abs_diff(&kg));
+    }
+
+    #[test]
+    fn good_approximation_with_few_landmarks() {
+        // smooth kernel + clustered data -> low effective rank
+        let mut rng = crate::rng::Rng::new(121);
+        let x = Mat::from_fn(100, 2, |_, _| rng.normal() * 0.4);
+        let k = Kernel::Gaussian { bandwidth: 1.0 };
+        let feat = NystromFeatures::fit(k.clone(), &x, 30, 1e-4, 2);
+        let z = feat.featurize(&x);
+        let k_hat = z.matmul_nt(&z);
+        let kg = k.gram(&x);
+        assert!(k_hat.max_abs_diff(&kg) < 0.05, "{}", k_hat.max_abs_diff(&kg));
+    }
+
+    #[test]
+    fn nystrom_never_overestimates_diagonal() {
+        // K - Z Z^T is PSD for Nystrom; check diagonal entries
+        let mut rng = crate::rng::Rng::new(122);
+        let x = Mat::from_fn(40, 3, |_, _| rng.normal());
+        let k = Kernel::Gaussian { bandwidth: 1.0 };
+        let feat = NystromFeatures::fit(k.clone(), &x, 10, 1e-4, 3);
+        let z = feat.featurize(&x);
+        for i in 0..40 {
+            let zi: f64 = z.row(i).iter().map(|v| v * v).sum();
+            assert!(zi <= 1.0 + 1e-6, "diag {zi}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = crate::rng::Rng::new(123);
+        let x = Mat::from_fn(30, 3, |_, _| rng.normal());
+        let k = Kernel::Gaussian { bandwidth: 1.0 };
+        let f1 = NystromFeatures::fit(k.clone(), &x, 8, 1e-4, 4);
+        let f2 = NystromFeatures::fit(k, &x, 8, 1e-4, 4);
+        assert_eq!(f1.featurize(&x), f2.featurize(&x));
+    }
+}

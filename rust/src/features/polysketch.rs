@@ -1,0 +1,204 @@
+//! PolySketch-style features [AKK+20]: sketch the Taylor expansion of the
+//! Gaussian kernel degree by degree with TensorSketch [PP13].
+//!
+//! e^{<x,y>} = sum_j <x,y>^j / j!  and  <x^{tensor j}, y^{tensor j}> =
+//! <x,y>^j, so concatenating sqrt(1/j!) * TS_j(x) over j = 0..deg (plus the
+//! radial envelope e^{-|x|^2/2}) gives an unbiased sketch of the Gaussian
+//! kernel truncated at degree `deg`. TS_j is the FFT-composed CountSketch
+//! of the j-fold tensor power.
+
+use super::Featurizer;
+use crate::linalg::{fft_inplace, ifft_inplace, Mat};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+struct CountSketch {
+    /// hash bucket per input coordinate
+    h: Vec<usize>,
+    /// sign per input coordinate
+    s: Vec<f64>,
+}
+
+impl CountSketch {
+    fn new(rng: &mut Rng, d: usize, m: usize) -> Self {
+        CountSketch {
+            h: (0..d).map(|_| rng.below(m)).collect(),
+            s: (0..d).map(|_| rng.rademacher()).collect(),
+        }
+    }
+
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        for (j, &v) in x.iter().enumerate() {
+            out[self.h[j]] += self.s[j] * v;
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PolySketchFeatures {
+    d: usize,
+    /// Taylor truncation degree
+    deg: usize,
+    /// sketch size per degree (power of two)
+    m_per: usize,
+    bandwidth: f64,
+    /// sketches[j] holds the j CountSketches composing TS_j (degree j >= 1)
+    sketches: Vec<Vec<CountSketch>>,
+    /// sqrt(1/j!) scalings
+    coeff: Vec<f64>,
+}
+
+impl PolySketchFeatures {
+    pub fn new(d: usize, f_dim: usize, deg: usize, bandwidth: f64, seed: u64) -> Self {
+        assert!(deg >= 1);
+        let mut rng = Rng::new(seed).fork(0x9017);
+        // degree 0 uses a single constant coordinate; split the rest evenly
+        // and round down to a power of two for the FFT composition
+        let per = ((f_dim - 1) / deg).max(2);
+        let m_per = if per.is_power_of_two() { per } else { per.next_power_of_two() / 2 };
+        let mut sketches = Vec::with_capacity(deg);
+        for j in 1..=deg {
+            sketches.push((0..j).map(|_| CountSketch::new(&mut rng, d, m_per)).collect());
+        }
+        let mut coeff = vec![1.0];
+        let mut log_fact = 0.0;
+        for j in 1..=deg {
+            log_fact += (j as f64).ln();
+            coeff.push((-0.5 * log_fact).exp());
+        }
+        PolySketchFeatures { d, deg, m_per, bandwidth, sketches, coeff }
+    }
+
+    /// TS_j(x): FFT-domain product of the j CountSketches.
+    fn tensor_sketch(&self, j: usize, x: &[f64], scratch: &mut SketchScratch) -> Vec<f64> {
+        let m = self.m_per;
+        let cs = &self.sketches[j - 1];
+        // accumulate product in FFT domain
+        let (ar, ai) = (&mut scratch.acc_re, &mut scratch.acc_im);
+        let (br, bi) = (&mut scratch.buf_re, &mut scratch.buf_im);
+        cs[0].apply(x, ar);
+        ai.fill(0.0);
+        fft_inplace(ar, ai);
+        for sketch in cs.iter().skip(1) {
+            sketch.apply(x, br);
+            bi.fill(0.0);
+            fft_inplace(br, bi);
+            for k in 0..m {
+                let (r, i) = (ar[k] * br[k] - ai[k] * bi[k], ar[k] * bi[k] + ai[k] * br[k]);
+                ar[k] = r;
+                ai[k] = i;
+            }
+        }
+        let mut out_re = ar.clone();
+        let mut out_im = ai.clone();
+        ifft_inplace(&mut out_re, &mut out_im);
+        out_re
+    }
+}
+
+struct SketchScratch {
+    acc_re: Vec<f64>,
+    acc_im: Vec<f64>,
+    buf_re: Vec<f64>,
+    buf_im: Vec<f64>,
+}
+
+impl Featurizer for PolySketchFeatures {
+    fn dim(&self) -> usize {
+        1 + self.deg * self.m_per
+    }
+
+    fn featurize(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols(), self.d);
+        let n = x.rows();
+        let mut out = Mat::zeros(n, self.dim());
+        let inv_bw = 1.0 / self.bandwidth;
+        let mut scratch = SketchScratch {
+            acc_re: vec![0.0; self.m_per],
+            acc_im: vec![0.0; self.m_per],
+            buf_re: vec![0.0; self.m_per],
+            buf_im: vec![0.0; self.m_per],
+        };
+        let mut xs = vec![0.0; self.d];
+        for i in 0..n {
+            let xr = x.row(i);
+            let mut sq = 0.0;
+            for (j, &v) in xr.iter().enumerate() {
+                xs[j] = v * inv_bw;
+                sq += xs[j] * xs[j];
+            }
+            let env = (-0.5 * sq).exp();
+            // degree 0: constant 1 coordinate
+            out[(i, 0)] = env * self.coeff[0];
+            for j in 1..=self.deg {
+                let ts = self.tensor_sketch(j, &xs, &mut scratch);
+                let base = 1 + (j - 1) * self.m_per;
+                let c = env * self.coeff[j];
+                let orow = out.row_mut(i);
+                for (k, &v) in ts.iter().enumerate() {
+                    orow[base + k] = c * v;
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "polysketch"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn tensorsketch_degree2_unbiased() {
+        // E[<TS_2(x), TS_2(y)>] = <x,y>^2; average over independent sketches
+        let d = 6;
+        let mut rng = crate::rng::Rng::new(110);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let exact = x.iter().zip(&y).map(|(&a, &b)| a * b).sum::<f64>().powi(2);
+        let mut est = 0.0;
+        let reps = 600;
+        for rep in 0..reps {
+            let ps = PolySketchFeatures::new(d, 65, 2, 1.0, 2000 + rep);
+            let mut scratch = SketchScratch {
+                acc_re: vec![0.0; ps.m_per],
+                acc_im: vec![0.0; ps.m_per],
+                buf_re: vec![0.0; ps.m_per],
+                buf_im: vec![0.0; ps.m_per],
+            };
+            let tx = ps.tensor_sketch(2, &x, &mut scratch);
+            let ty = ps.tensor_sketch(2, &y, &mut scratch);
+            est += tx.iter().zip(&ty).map(|(&a, &b)| a * b).sum::<f64>();
+        }
+        est /= reps as f64;
+        assert!((est - exact).abs() < 0.15 * exact.abs().max(1.0), "{est} vs {exact}");
+    }
+
+    #[test]
+    fn gram_concentrates() {
+        let feat = PolySketchFeatures::new(3, 8193, 6, 1.0, 13);
+        let mut rng = crate::rng::Rng::new(111);
+        let x = Mat::from_fn(10, 3, |_, _| rng.normal() * 0.5);
+        let z = feat.featurize(&x);
+        let k_hat = z.matmul_nt(&z);
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        let err = k_hat.max_abs_diff(&k);
+        assert!(err < 0.2, "{err}");
+    }
+
+    #[test]
+    fn dims_and_determinism() {
+        let f1 = PolySketchFeatures::new(4, 257, 4, 1.0, 14);
+        assert!(f1.dim() <= 257 + 64);
+        let f2 = PolySketchFeatures::new(4, 257, 4, 1.0, 14);
+        let mut rng = crate::rng::Rng::new(112);
+        let x = Mat::from_fn(3, 4, |_, _| rng.normal());
+        assert_eq!(f1.featurize(&x), f2.featurize(&x));
+    }
+}

@@ -1,0 +1,313 @@
+//! Radial-factor tables h_l(t) for the GZK family — exact rust mirror of
+//! `python/compile/radial.py` (paper Eqs. 12, 22, 23; Lemma 16).
+//!
+//! `coef[l][i]` folds both the sqrt(alpha_{l,d}) of the feature map
+//! (Eq. 13) and the Mercer coefficient of h_l; radial values are
+//!
+//!   R[x][l, i] = coef[l,i] * ||x||^expo[l,i] * (e^{-||x||^2/2} if decay).
+
+use crate::special::{alpha_dim, gegenbauer_series_coeffs, lgamma, log_alpha_dim};
+use crate::kernels::ntk_kappa;
+
+const LOG_SQRT_PI: f64 = 0.572_364_942_924_700_1; // 0.5 * ln(pi)
+
+/// Truncated radial weights for one GZK family in dimension d.
+#[derive(Clone, Debug)]
+pub struct RadialTable {
+    pub family: &'static str,
+    pub d: usize,
+    pub q: usize,
+    pub s: usize,
+    /// (q+1) x s linear-domain weights, row-major
+    pub coef: Vec<f64>,
+    /// (q+1) x s exponents of ||x||
+    pub expo: Vec<f64>,
+    /// multiply by exp(-||x||^2 / 2)?
+    pub decay: bool,
+}
+
+fn base_log_coef(l: usize, i: usize, d: usize) -> f64 {
+    let la = log_alpha_dim(l, d);
+    la - 0.5 * l as f64 * std::f64::consts::LN_2
+        + 0.5
+            * (lgamma(d as f64 / 2.0) - LOG_SQRT_PI - lgamma(2.0 * i as f64 + 1.0)
+                + lgamma(i as f64 + 0.5)
+                - lgamma(i as f64 + l as f64 + d as f64 / 2.0))
+}
+
+impl RadialTable {
+    /// Unit-bandwidth Gaussian kernel e^{-||x-y||^2/2} (Eq. 23). For other
+    /// bandwidths rescale the inputs by 1/sigma.
+    pub fn gaussian(d: usize, q: usize, s: usize) -> RadialTable {
+        let mut coef = vec![0.0; (q + 1) * s];
+        let mut expo = vec![0.0; (q + 1) * s];
+        for l in 0..=q {
+            for i in 0..s {
+                coef[l * s + i] = base_log_coef(l, i, d).exp();
+                expo[l * s + i] = (l + 2 * i) as f64;
+            }
+        }
+        RadialTable { family: "gaussian", d, q, s, coef, expo, decay: true }
+    }
+
+    /// Dot-product kernel kappa(t) = exp(gamma t) (Eq. 12 with
+    /// kappa^(j)(0) = gamma^j).
+    pub fn exponential(d: usize, q: usize, s: usize, gamma: f64) -> RadialTable {
+        assert!(gamma > 0.0);
+        let mut coef = vec![0.0; (q + 1) * s];
+        let mut expo = vec![0.0; (q + 1) * s];
+        for l in 0..=q {
+            for i in 0..s {
+                let lg = base_log_coef(l, i, d) + 0.5 * (l + 2 * i) as f64 * gamma.ln();
+                coef[l * s + i] = lg.exp();
+                expo[l * s + i] = (l + 2 * i) as f64;
+            }
+        }
+        RadialTable { family: "exponential", d, q, s, coef, expo, decay: false }
+    }
+
+    /// Dot-product kernel kappa(t) = (t + c)^p, exact at q = p.
+    pub fn polynomial(d: usize, p: usize, c: f64) -> RadialTable {
+        assert!(c >= 0.0, "Schoenberg PSD condition requires c >= 0");
+        let q = p;
+        let s = p / 2 + 1;
+        let mut coef = vec![0.0; (q + 1) * s];
+        let mut expo = vec![0.0; (q + 1) * s];
+        for l in 0..=q {
+            for i in 0..s {
+                let j = l + 2 * i;
+                if j > p {
+                    continue;
+                }
+                // kappa^(j)(0) = p!/(p-j)! c^{p-j}
+                let mut lk = lgamma(p as f64 + 1.0) - lgamma((p - j) as f64 + 1.0);
+                if c > 0.0 {
+                    lk += (p - j) as f64 * c.ln();
+                } else if j != p {
+                    continue;
+                }
+                coef[l * s + i] = (base_log_coef(l, i, d) + 0.5 * lk).exp();
+                expo[l * s + i] = j as f64;
+            }
+        }
+        RadialTable { family: "polynomial", d, q, s, coef, expo, decay: false }
+    }
+
+    /// Depth-`depth` ReLU NTK as a GZK (Lemma 16): h_l(t) = sqrt(c_l) t.
+    pub fn ntk(d: usize, q: usize, depth: usize) -> RadialTable {
+        let c = gegenbauer_series_coeffs(|t| ntk_kappa(t, depth), q, d, 512);
+        let mut coef = vec![0.0; q + 1];
+        for l in 0..=q {
+            let cl = c[l].max(0.0); // clip quadrature noise
+            coef[l] = (alpha_dim(l, d) * cl).sqrt();
+        }
+        RadialTable { family: "ntk", d, q, s: 1, coef, expo: vec![1.0; q + 1], decay: false }
+    }
+
+    /// Radial values for a batch of norms: (n, (q+1)*s) row-major.
+    pub fn values(&self, norms: &[f64]) -> Vec<f64> {
+        let width = (self.q + 1) * self.s;
+        let mut out = vec![0.0; norms.len() * width];
+        for (j, &nrm) in norms.iter().enumerate() {
+            self.values_into(nrm, &mut out[j * width..(j + 1) * width]);
+        }
+        out
+    }
+
+    /// Radial values for one norm into a caller-provided buffer of length
+    /// (q+1)*s — the allocation-free hot-path variant.
+    pub fn values_into(&self, norm: f64, row: &mut [f64]) {
+        debug_assert_eq!(row.len(), (self.q + 1) * self.s);
+        let t = norm.max(1e-30);
+        let lt = t.ln();
+        let env = if self.decay { (-0.5 * t * t).exp() } else { 1.0 };
+        for (k, out) in row.iter_mut().enumerate() {
+            *out = if self.coef[k] == 0.0 {
+                0.0
+            } else {
+                self.coef[k] * (self.expo[k] * lt).exp() * env
+            };
+        }
+    }
+
+    /// Energy sum_i coef-weighted |h_l|^2 at a given norm, per degree l —
+    /// the quantity the Lemma-7 leverage bound depends on.
+    pub fn degree_energy(&self, norm: f64) -> Vec<f64> {
+        let vals = self.values(&[norm]);
+        (0..=self.q)
+            .map(|l| {
+                (0..self.s)
+                    .map(|i| {
+                        let v = vals[l * self.s + i];
+                        // undo the folded sqrt(alpha) to get |h_l|^2
+                        v * v / alpha_dim(l, self.d)
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Exact truncated-GZK kernel value k_{q,s}(x, y) per Definition 3:
+    /// sum_l <h_l(|x|), h_l(|y|)> P_d^l(cos). This is the kernel the random
+    /// features are unbiased FOR (the Theorem-11/12 approximand).
+    pub fn gzk_eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        let nx = x.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+        let ny = y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+        let cos =
+            (x.iter().zip(y).map(|(&a, &b)| a * b).sum::<f64>() / (nx * ny)).clamp(-1.0, 1.0);
+        let rx = self.values(&[nx]);
+        let ry = self.values(&[ny]);
+        let p = crate::special::gegenbauer_all(self.q, self.d, &[cos]);
+        let mut total = 0.0;
+        for l in 0..=self.q {
+            let mut dot = 0.0;
+            for i in 0..self.s {
+                dot += rx[l * self.s + i] * ry[l * self.s + i];
+            }
+            // values() folds sqrt(alpha) into each factor; divide one back out
+            total += dot / alpha_dim(l, self.d) * p[l];
+        }
+        total
+    }
+
+    /// Gram matrix of the truncated GZK on a point set.
+    pub fn gzk_gram(&self, x: &crate::linalg::Mat) -> crate::linalg::Mat {
+        let n = x.rows();
+        let mut k = crate::linalg::Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.gzk_eval(x.row(i), x.row(j));
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        k
+    }
+}
+
+/// Theorem-12-style truncation degree for the Gaussian kernel.
+pub fn suggest_q(r: f64, d: usize, n: usize, lam: f64, eps: f64) -> usize {
+    let t = (n as f64 / (eps * lam)).max(std::f64::consts::E).ln();
+    let df = d as f64;
+    let q = (3.7 * r * r).max(df / 2.0 * (2.8 * (r * r + t + df) / df).ln() + t);
+    (q.ceil() as usize).max(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::special::gegenbauer_eval;
+
+    /// Evaluate the truncated GZK k_{q,s}(x, y) directly from Def. 3.
+    fn gzk_kernel(table: &RadialTable, x: &[f64], y: &[f64]) -> f64 {
+        let nx = x.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+        let ny = y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+        let cos = (x.iter().zip(y).map(|(&a, &b)| a * b).sum::<f64>() / (nx * ny)).clamp(-1.0, 1.0);
+        let rx = table.values(&[nx]);
+        let ry = table.values(&[ny]);
+        let mut total = 0.0;
+        for l in 0..=table.q {
+            let mut dot = 0.0;
+            for i in 0..table.s {
+                dot += rx[l * table.s + i] * ry[l * table.s + i];
+            }
+            total += dot / alpha_dim(l, table.d) * gegenbauer_eval(l, table.d, cos);
+        }
+        total
+    }
+
+    #[test]
+    fn gaussian_reconstruction() {
+        let table = RadialTable::gaussian(4, 20, 10);
+        let mut rng = crate::rng::Rng::new(60);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..4).map(|_| rng.normal() * 0.7).collect();
+            let y: Vec<f64> = (0..4).map(|_| rng.normal() * 0.7).collect();
+            let exact =
+                (-0.5 * x.iter().zip(&y).map(|(&a, &b)| (a - b) * (a - b)).sum::<f64>()).exp();
+            let got = gzk_kernel(&table, &x, &y);
+            assert!((got - exact).abs() < 1e-6, "{got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn exponential_reconstruction() {
+        let table = RadialTable::exponential(3, 22, 11, 0.8);
+        let mut rng = crate::rng::Rng::new(61);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..3).map(|_| rng.normal() * 0.6).collect();
+            let y: Vec<f64> = (0..3).map(|_| rng.normal() * 0.6).collect();
+            let exact = (0.8 * x.iter().zip(&y).map(|(&a, &b)| a * b).sum::<f64>()).exp();
+            let got = gzk_kernel(&table, &x, &y);
+            assert!((got - exact).abs() < 1e-5 * exact.max(1.0), "{got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn polynomial_exact() {
+        for (p, c) in [(2usize, 1.0), (3, 0.5), (4, 1.0), (3, 0.0)] {
+            let table = RadialTable::polynomial(4, p, c);
+            let mut rng = crate::rng::Rng::new(62);
+            for _ in 0..10 {
+                let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+                let y: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+                let exact =
+                    (x.iter().zip(&y).map(|(&a, &b)| a * b).sum::<f64>() + c).powi(p as i32);
+                let got = gzk_kernel(&table, &x, &y);
+                assert!(
+                    (got - exact).abs() < 1e-8 * exact.abs().max(1.0),
+                    "p={p} c={c}: {got} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ntk_reconstruction_on_sphere() {
+        let table = RadialTable::ntk(4, 40, 2);
+        let mut rng = crate::rng::Rng::new(63);
+        let mut x = vec![0.0; 4];
+        let mut y = vec![0.0; 4];
+        for _ in 0..10 {
+            rng.sphere(&mut x);
+            rng.sphere(&mut y);
+            let cos = x.iter().zip(&y).map(|(&a, &b)| a * b).sum::<f64>().clamp(-1.0, 1.0);
+            let exact = ntk_kappa(cos, 2);
+            let got = gzk_kernel(&table, &x, &y);
+            assert!((got - exact).abs() < 5e-3, "{got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn energy_decays_in_degree() {
+        let table = RadialTable::gaussian(4, 16, 4);
+        let e = table.degree_energy(1.5);
+        assert!(e[12] < e[2] * 1e-4, "{:?}", e);
+    }
+
+    #[test]
+    fn matches_python_values() {
+        // spot values computed by python/compile/radial.py (gaussian d=3,q=2,s=2)
+        // python: radial.gaussian_table(3,2,2).coef
+        let t = RadialTable::gaussian(3, 2, 2);
+        // coef[0,0] = exp(base_log_coef(0,0,3)); check internal consistency
+        // against the closed form sqrt(alpha) * sqrt(alpha * G(1.5)*G(0.5)/
+        // (sqrt(pi)*1*G(1.5)))  = sqrt(G(0.5)/sqrt(pi)) = 1
+        assert!((t.coef[0] - 1.0).abs() < 1e-12, "{}", t.coef[0]);
+        // l=1: alpha=3; coef = 3^1 * sqrt(2^-1 * G(1.5) G(0.5) / (sqrt(pi) G(2.5)))
+        let expect = 3.0
+            * (0.5 * (lgamma(1.5) + lgamma(0.5) - 0.5 * std::f64::consts::PI.ln()
+                - lgamma(2.5)
+                - std::f64::consts::LN_2))
+                .exp();
+        assert!((t.coef[2] - expect).abs() < 1e-12, "{} vs {expect}", t.coef[2]);
+    }
+
+    #[test]
+    fn suggest_q_monotone() {
+        let q1 = suggest_q(1.0, 3, 1000, 1e-3, 0.5);
+        let q2 = suggest_q(2.0, 3, 1000, 1e-3, 0.5);
+        let q3 = suggest_q(1.0, 3, 100_000, 1e-6, 0.5);
+        assert!(q2 >= q1 && q3 >= q1);
+    }
+}

@@ -1,0 +1,89 @@
+//! Random Fourier features [RR09] for the Gaussian kernel — the classic
+//! baseline of Tables 1-3.
+//!
+//! z(x) = sqrt(2/F) [cos(w_1^T x + b_1), ..., cos(w_F^T x + b_F)],
+//! w ~ N(0, I/sigma^2), b ~ U[0, 2pi). E[z(x)^T z(y)] = k(x, y).
+
+use super::Featurizer;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FourierFeatures {
+    /// frequencies (F x d)
+    w: Mat,
+    /// phases (F)
+    b: Vec<f64>,
+}
+
+impl FourierFeatures {
+    pub fn new(d: usize, f_dim: usize, bandwidth: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed).fork(0xF0F);
+        let w = Mat::from_fn(f_dim, d, |_, _| rng.normal() / bandwidth);
+        let b = (0..f_dim).map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI)).collect();
+        FourierFeatures { w, b }
+    }
+}
+
+impl Featurizer for FourierFeatures {
+    fn dim(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn featurize(&self, x: &Mat) -> Mat {
+        let f_dim = self.w.rows();
+        let scale = (2.0 / f_dim as f64).sqrt();
+        let mut out = x.matmul_nt(&self.w); // (n x F) of w^T x
+        for i in 0..out.rows() {
+            let row = out.row_mut(i);
+            for (k, v) in row.iter_mut().enumerate() {
+                *v = scale * (*v + self.b[k]).cos();
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "fourier"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::test_support::check_gram_approx;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn gram_concentrates() {
+        let feat = FourierFeatures::new(3, 8192, 1.0, 1);
+        check_gram_approx(&feat, &Kernel::Gaussian { bandwidth: 1.0 }, 16, 3, 0.8, 80, 0.1);
+    }
+
+    #[test]
+    fn bandwidth_respected() {
+        let feat = FourierFeatures::new(2, 16384, 2.0, 2);
+        check_gram_approx(&feat, &Kernel::Gaussian { bandwidth: 2.0 }, 10, 2, 1.2, 81, 0.1);
+    }
+
+    #[test]
+    fn diagonal_is_near_one() {
+        let feat = FourierFeatures::new(4, 4096, 1.0, 3);
+        let mut rng = crate::rng::Rng::new(82);
+        let x = Mat::from_fn(8, 4, |_, _| rng.normal());
+        let z = feat.featurize(&x);
+        for i in 0..8 {
+            let d: f64 = z.row(i).iter().map(|v| v * v).sum();
+            assert!((d - 1.0).abs() < 0.1, "{d}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let f1 = FourierFeatures::new(3, 64, 1.0, 7);
+        let f2 = FourierFeatures::new(3, 64, 1.0, 7);
+        let mut rng = crate::rng::Rng::new(83);
+        let x = Mat::from_fn(4, 3, |_, _| rng.normal());
+        assert_eq!(f1.featurize(&x), f2.featurize(&x));
+    }
+}

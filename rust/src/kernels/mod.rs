@@ -1,0 +1,195 @@
+//! Exact kernel functions and Gram matrices — the ground truth every
+//! random-feature method is measured against.
+//!
+//! Families mirror the paper's experiments: Gaussian (Tables 2/3),
+//! dot-product kernels (Lemma 4; exponential & polynomial instances) and
+//! the depth-L ReLU Neural Tangent Kernel (Lemma 16 / Fig. 1).
+
+use crate::linalg::Mat;
+
+/// A kernel function with an exact pointwise evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Kernel {
+    /// exp(-||x-y||^2 / (2 sigma^2))
+    Gaussian { bandwidth: f64 },
+    /// exp(gamma <x,y>)
+    Exponential { gamma: f64 },
+    /// (<x,y> + c)^p
+    Polynomial { p: u32, c: f64 },
+    /// depth-L ReLU NTK, Theta(x,y) = ||x|| ||y|| K_relu^{(L)}(cos)
+    Ntk { depth: usize },
+}
+
+impl Kernel {
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match *self {
+            Kernel::Gaussian { bandwidth } => {
+                let sq: f64 = x.iter().zip(y).map(|(&a, &b)| (a - b) * (a - b)).sum();
+                (-0.5 * sq / (bandwidth * bandwidth)).exp()
+            }
+            Kernel::Exponential { gamma } => (gamma * dot(x, y)).exp(),
+            Kernel::Polynomial { p, c } => (dot(x, y) + c).powi(p as i32),
+            Kernel::Ntk { depth } => {
+                let nx = norm(x).max(1e-30);
+                let ny = norm(y).max(1e-30);
+                let cos = (dot(x, y) / (nx * ny)).clamp(-1.0, 1.0);
+                nx * ny * ntk_kappa(cos, depth)
+            }
+        }
+    }
+
+    /// Dense Gram matrix K[i][j] = k(x_i, x_j) for row-major points (n x d).
+    pub fn gram(&self, x: &Mat) -> Mat {
+        let n = x.rows();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.eval(x.row(i), x.row(j));
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        k
+    }
+
+    /// Cross Gram K[i][j] = k(a_i, b_j).
+    pub fn cross_gram(&self, a: &Mat, b: &Mat) -> Mat {
+        let mut k = Mat::zeros(a.rows(), b.rows());
+        for i in 0..a.rows() {
+            for j in 0..b.rows() {
+                k[(i, j)] = self.eval(a.row(i), b.row(j));
+            }
+        }
+        k
+    }
+}
+
+#[inline]
+fn dot(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).map(|(&a, &b)| a * b).sum()
+}
+
+#[inline]
+fn norm(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Arc-cosine kernel of degree 0: a0(t) = 1 - acos(t)/pi.
+pub fn arccos_a0(t: f64) -> f64 {
+    1.0 - t.clamp(-1.0, 1.0).acos() / std::f64::consts::PI
+}
+
+/// Arc-cosine kernel of degree 1:
+/// a1(t) = (sqrt(1-t^2) + t (pi - acos(t))) / pi.
+pub fn arccos_a1(t: f64) -> f64 {
+    let tc = t.clamp(-1.0, 1.0);
+    ((1.0 - tc * tc).sqrt() + tc * (std::f64::consts::PI - tc.acos())) / std::f64::consts::PI
+}
+
+/// Normalized ReLU NTK K_relu on [-1, 1] ([ZHA+21] recursion), with
+/// `depth - 1` recursion steps so that kappa(1) = depth. The paper's
+/// Fig.-1 "two-layer ReLU" target
+/// `a1(a1(x)) + (a1(x) + x a0(x)) a0(a1(x))` is `depth = 3` in this
+/// indexing (two nested applications of a1).
+pub fn ntk_kappa(t: f64, depth: usize) -> f64 {
+    let mut sigma = t;
+    let mut theta = t;
+    for _ in 0..depth.saturating_sub(1) {
+        theta = arccos_a1(sigma) + theta * arccos_a0(sigma);
+        sigma = arccos_a1(sigma);
+    }
+    theta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sym_eigen;
+    use crate::rng::Rng;
+
+    #[test]
+    fn gaussian_basics() {
+        let k = Kernel::Gaussian { bandwidth: 1.0 };
+        assert!((k.eval(&[0.0, 0.0], &[0.0, 0.0]) - 1.0).abs() < 1e-15);
+        let v = k.eval(&[1.0, 0.0], &[0.0, 0.0]);
+        assert!((v - (-0.5f64).exp()).abs() < 1e-15);
+        // bandwidth scaling: k_sigma(x,y) = k_1(x/sigma, y/sigma)
+        let k2 = Kernel::Gaussian { bandwidth: 2.0 };
+        let a = [0.7, -0.3];
+        let b = [0.1, 0.9];
+        let scaled = Kernel::Gaussian { bandwidth: 1.0 }
+            .eval(&[a[0] / 2.0, a[1] / 2.0], &[b[0] / 2.0, b[1] / 2.0]);
+        assert!((k2.eval(&a, &b) - scaled).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gaussian_factorization() {
+        // exp(-|x-y|^2/2) = exp(-|x|^2/2) exp(-|y|^2/2) exp(<x,y>)
+        let g = Kernel::Gaussian { bandwidth: 1.0 };
+        let e = Kernel::Exponential { gamma: 1.0 };
+        let x = [0.4, -0.2, 0.9];
+        let y = [-0.5, 0.3, 0.1];
+        let nx2: f64 = x.iter().map(|v| v * v).sum();
+        let ny2: f64 = y.iter().map(|v| v * v).sum();
+        let lhs = g.eval(&x, &y);
+        let rhs = (-0.5 * nx2).exp() * (-0.5 * ny2).exp() * e.eval(&x, &y);
+        assert!((lhs - rhs).abs() < 1e-14);
+    }
+
+    #[test]
+    fn polynomial_values() {
+        let k = Kernel::Polynomial { p: 2, c: 1.0 };
+        assert!((k.eval(&[1.0, 2.0], &[3.0, 4.0]) - 144.0).abs() < 1e-12); // (11+1)^2
+    }
+
+    #[test]
+    fn ntk_fixed_points() {
+        // kappa(1) = depth (each recursion level contributes 1)
+        assert!((ntk_kappa(1.0, 2) - 2.0).abs() < 1e-12);
+        assert!((ntk_kappa(1.0, 3) - 3.0).abs() < 1e-12);
+        // the paper's Fig.-1 two-layer formula is depth = 3 here
+        for &t in &[-0.9, -0.2, 0.3, 0.8] {
+            let expect = arccos_a1(arccos_a1(t))
+                + (arccos_a1(t) + t * arccos_a0(t)) * arccos_a0(arccos_a1(t));
+            assert!((ntk_kappa(t, 3) - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arccos_endpoints() {
+        assert!((arccos_a0(1.0) - 1.0).abs() < 1e-12);
+        assert!(arccos_a0(-1.0).abs() < 1e-12);
+        assert!((arccos_a1(1.0) - 1.0).abs() < 1e-12);
+        assert!(arccos_a1(-1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grams_are_psd() {
+        let mut rng = Rng::new(50);
+        let x = Mat::from_fn(12, 3, |_, _| rng.normal() * 0.7);
+        for k in [
+            Kernel::Gaussian { bandwidth: 1.0 },
+            Kernel::Exponential { gamma: 0.5 },
+            Kernel::Polynomial { p: 3, c: 1.0 },
+            Kernel::Ntk { depth: 2 },
+        ] {
+            let g = k.gram(&x);
+            // symmetry
+            assert!(g.max_abs_diff(&g.transpose()) < 1e-12);
+            let (w, _) = sym_eigen(&g);
+            let wmax = w[0].max(1.0);
+            assert!(w.iter().all(|&v| v > -1e-8 * wmax), "{k:?}: {:?}", &w[w.len() - 3..]);
+        }
+    }
+
+    #[test]
+    fn cross_gram_consistency() {
+        let mut rng = Rng::new(51);
+        let x = Mat::from_fn(6, 4, |_, _| rng.normal());
+        let k = Kernel::Gaussian { bandwidth: 1.3 };
+        let g = k.gram(&x);
+        let c = k.cross_gram(&x, &x);
+        assert!(g.max_abs_diff(&c) < 1e-14);
+    }
+}

@@ -1,0 +1,359 @@
+//! Kernel k-means in random-feature space (paper §6.3 / Appendix A.2).
+//!
+//! k-means++ initialization + Lloyd iterations on the feature rows; the
+//! reported objective is the average squared distance to the assigned
+//! centroid — exactly the quantity of the paper's Table 3. Theorem 10
+//! (projection-cost preservation) is what licenses solving k-means on Z
+//! instead of the kernel matrix.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Result of a k-means run.
+pub struct KmeansResult {
+    pub assignments: Vec<usize>,
+    pub centroids: Mat,
+    /// average of squared distances to assigned centroid
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means++ seeding [AV06].
+fn kmeanspp_init(z: &Mat, k: usize, rng: &mut Rng) -> Mat {
+    let n = z.rows();
+    let f = z.cols();
+    let mut centroids = Mat::zeros(k, f);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(z.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| sq_dist(z.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut u = rng.uniform() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if u < w {
+                    pick = i;
+                    break;
+                }
+                u -= w;
+            }
+            pick
+        };
+        centroids.row_mut(c).copy_from_slice(z.row(pick));
+        for i in 0..n {
+            let nd = sq_dist(z.row(i), centroids.row(c));
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centroids
+}
+
+/// Lloyd's algorithm with k-means++ seeding on feature rows.
+pub fn kmeans(z: &Mat, k: usize, max_iters: usize, seed: u64) -> KmeansResult {
+    assert!(k >= 1 && z.rows() >= k);
+    let n = z.rows();
+    let f = z.cols();
+    let mut rng = Rng::new(seed).fork(0x4B3A);
+    let mut centroids = kmeanspp_init(z, k, &mut rng);
+    let mut assignments = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // assignment step
+        let mut changed = false;
+        for i in 0..n {
+            let row = z.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..k {
+                let d = sq_dist(row, centroids.row(c));
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if assignments[i] != best.1 {
+                assignments[i] = best.1;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // update step
+        let mut counts = vec![0usize; k];
+        let mut sums = Mat::zeros(k, f);
+        for i in 0..n {
+            let c = assignments[i];
+            counts[c] += 1;
+            let srow = sums.row_mut(c);
+            for (sv, &zv) in srow.iter_mut().zip(z.row(i)) {
+                *sv += zv;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        sq_dist(z.row(a), centroids.row(assignments[a]))
+                            .partial_cmp(&sq_dist(z.row(b), centroids.row(assignments[b])))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(z.row(far));
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                let crow = centroids.row_mut(c);
+                for (cv, &sv) in crow.iter_mut().zip(sums.row(c)) {
+                    *cv = sv * inv;
+                }
+            }
+        }
+    }
+    let objective = (0..n)
+        .map(|i| sq_dist(z.row(i), centroids.row(assignments[i])))
+        .sum::<f64>()
+        / n as f64;
+    KmeansResult { assignments, centroids, objective, iterations }
+}
+
+/// The kernel-space k-means objective for a given clustering, computed from
+/// the exact Gram matrix (Appendix A.2):
+/// (1/n) Tr(K - C C^T K C C^T) = (1/n) [sum_i K_ii - sum_c (1/|C_c|) sum_{i,j in C_c} K_ij].
+pub fn kernel_objective(k_gram: &Mat, assignments: &[usize], k: usize) -> f64 {
+    let n = k_gram.rows();
+    assert_eq!(assignments.len(), n);
+    let mut within = vec![0.0; k];
+    let mut counts = vec![0usize; k];
+    for (i, &ci) in assignments.iter().enumerate() {
+        counts[ci] += 1;
+        for (j, &cj) in assignments.iter().enumerate() {
+            if ci == cj {
+                within[ci] += k_gram[(i, j)] / 2.0; // count pairs once, fix below
+            }
+            let _ = j;
+        }
+    }
+    // we added each ordered pair half -> within[c] = 0.5 sum_{i,j in c} K_ij
+    let trace: f64 = (0..n).map(|i| k_gram[(i, i)]).sum();
+    let mut obj = trace;
+    for c in 0..k {
+        if counts[c] > 0 {
+            obj -= 2.0 * within[c] / counts[c] as f64;
+        }
+    }
+    obj / n as f64
+}
+
+/// Mini-batch k-means [Sculley-style] over a feature stream — the
+/// clustering companion of the coordinator's single-pass KRR: O(k F)
+/// state, each batch touched once.
+pub struct StreamingKmeans {
+    centroids: Mat,
+    counts: Vec<usize>,
+    initialized: usize,
+}
+
+impl StreamingKmeans {
+    pub fn new(k: usize, f_dim: usize) -> StreamingKmeans {
+        StreamingKmeans { centroids: Mat::zeros(k, f_dim), counts: vec![0; k], initialized: 0 }
+    }
+
+    pub fn k(&self) -> usize {
+        self.centroids.rows()
+    }
+
+    pub fn centroids(&self) -> &Mat {
+        &self.centroids
+    }
+
+    /// Absorb one featurized mini-batch: assign to nearest centroid, move
+    /// each centroid by the per-cluster learning rate 1/count.
+    pub fn absorb(&mut self, z: &Mat) {
+        let k = self.centroids.rows();
+        for i in 0..z.rows() {
+            let row = z.row(i);
+            // bootstrap: first k distinct rows become the centroids
+            if self.initialized < k {
+                self.centroids.row_mut(self.initialized).copy_from_slice(row);
+                self.counts[self.initialized] = 1;
+                self.initialized += 1;
+                continue;
+            }
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..k {
+                let d = sq_dist(row, self.centroids.row(c));
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            let c = best.1;
+            self.counts[c] += 1;
+            let eta = 1.0 / self.counts[c] as f64;
+            let crow = self.centroids.row_mut(c);
+            for (cv, &zv) in crow.iter_mut().zip(row) {
+                *cv += eta * (zv - *cv);
+            }
+        }
+    }
+
+    /// Assign a batch to the current centroids.
+    pub fn assign(&self, z: &Mat) -> Vec<usize> {
+        (0..z.rows())
+            .map(|i| {
+                let row = z.row(i);
+                (0..self.centroids.rows())
+                    .min_by(|&a, &b| {
+                        sq_dist(row, self.centroids.row(a))
+                            .partial_cmp(&sq_dist(row, self.centroids.row(b)))
+                            .unwrap()
+                    })
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Average squared distance of a batch to its assigned centroids.
+    pub fn objective(&self, z: &Mat) -> f64 {
+        let assign = self.assign(z);
+        (0..z.rows())
+            .map(|i| sq_dist(z.row(i), self.centroids.row(assign[i])))
+            .sum::<f64>()
+            / z.rows() as f64
+    }
+}
+
+/// Clustering accuracy against ground-truth labels via greedy cluster-to-
+/// class matching (diagnostic only; the paper reports the objective).
+pub fn greedy_accuracy(assignments: &[usize], labels: &[usize], k: usize) -> f64 {
+    let n = assignments.len();
+    let mut conf = vec![vec![0usize; k]; k];
+    for i in 0..n {
+        conf[assignments[i]][labels[i]] += 1;
+    }
+    let mut used = vec![false; k];
+    let mut correct = 0usize;
+    for row in conf.iter() {
+        let mut best = (0usize, 0usize);
+        for (c, &v) in row.iter().enumerate() {
+            if !used[c] && v >= best.1 {
+                best = (c, v);
+            }
+        }
+        used[best.0] = true;
+        correct += best.1;
+    }
+    correct as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blobs(n_per: usize) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::new(140);
+        let mut z = Mat::zeros(2 * n_per, 2);
+        let mut labels = Vec::new();
+        for i in 0..2 * n_per {
+            let c = i % 2;
+            labels.push(c);
+            let cx = if c == 0 { -2.0 } else { 2.0 };
+            z[(i, 0)] = cx + 0.3 * rng.normal();
+            z[(i, 1)] = 0.3 * rng.normal();
+        }
+        (z, labels)
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let (z, labels) = two_blobs(100);
+        let res = kmeans(&z, 2, 50, 1);
+        let acc = greedy_accuracy(&res.assignments, &labels, 2);
+        assert!(acc > 0.98, "accuracy {acc}");
+        assert!(res.objective < 0.5, "objective {}", res.objective);
+    }
+
+    #[test]
+    fn objective_decreases_with_k() {
+        let (z, _) = two_blobs(80);
+        let o1 = kmeans(&z, 1, 30, 2).objective;
+        let o2 = kmeans(&z, 2, 30, 2).objective;
+        let o4 = kmeans(&z, 4, 30, 2).objective;
+        assert!(o2 < o1);
+        assert!(o4 <= o2 + 1e-9);
+    }
+
+    #[test]
+    fn kernel_objective_matches_feature_objective_for_linear_kernel() {
+        // with K = Z Z^T the kernel objective equals the feature-space
+        // objective at the optimal (mean) centroids
+        let (z, _) = two_blobs(40);
+        let res = kmeans(&z, 2, 50, 3);
+        let k = z.matmul_nt(&z);
+        let ko = kernel_objective(&k, &res.assignments, 2);
+        assert!(
+            (ko - res.objective).abs() < 1e-8,
+            "kernel {ko} vs feature {}",
+            res.objective
+        );
+    }
+
+    #[test]
+    fn handles_k_equals_one_and_n() {
+        let (z, _) = two_blobs(10);
+        let r1 = kmeans(&z, 1, 10, 4);
+        assert!(r1.objective > 0.0);
+        let rn = kmeans(&z, z.rows(), 10, 4);
+        assert!(rn.objective < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (z, _) = two_blobs(50);
+        let a = kmeans(&z, 3, 25, 9);
+        let b = kmeans(&z, 3, 25, 9);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.objective, b.objective);
+    }
+
+    #[test]
+    fn streaming_kmeans_tracks_batch_kmeans() {
+        let (z, labels) = two_blobs(200);
+        let mut sk = StreamingKmeans::new(2, 2);
+        for lo in (0..z.rows()).step_by(32) {
+            let hi = (lo + 32).min(z.rows());
+            sk.absorb(&z.row_block(lo, hi));
+        }
+        let batch = kmeans(&z, 2, 50, 5);
+        let stream_obj = sk.objective(&z);
+        assert!(
+            stream_obj < 2.0 * batch.objective + 0.05,
+            "stream {stream_obj} vs batch {}",
+            batch.objective
+        );
+        let acc = greedy_accuracy(&sk.assign(&z), &labels, 2);
+        assert!(acc > 0.95, "{acc}");
+    }
+
+    #[test]
+    fn streaming_kmeans_state_is_constant_size() {
+        let mut sk = StreamingKmeans::new(3, 4);
+        let mut rng = Rng::new(141);
+        for _ in 0..20 {
+            let z = Mat::from_fn(50, 4, |_, _| rng.normal());
+            sk.absorb(&z);
+        }
+        assert_eq!(sk.centroids().rows(), 3);
+        assert_eq!(sk.centroids().cols(), 4);
+        let z = Mat::from_fn(10, 4, |_, _| rng.normal());
+        assert_eq!(sk.assign(&z).len(), 10);
+    }
+}

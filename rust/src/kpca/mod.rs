@@ -1,0 +1,182 @@
+//! Kernel principal component analysis through random features — the
+//! second downstream application licensed by Theorem 10 (projection-cost
+//! preservation): the top-r principal subspace of the feature matrix Z is
+//! a near-optimal rank-r approximation of the kernel's eigenspace.
+//!
+//! PCA is done on the (F x F) feature covariance — O(n F^2 + F^3) instead
+//! of the exact kernel method's O(n^3).
+
+use crate::linalg::{sym_eigen, Mat};
+
+/// Fitted kernel-PCA model: mean in feature space + top-r directions.
+pub struct KernelPca {
+    mean: Vec<f64>,
+    /// (F x r) principal directions, columns orthonormal
+    components: Mat,
+    /// explained variance per component (descending)
+    pub eigenvalues: Vec<f64>,
+}
+
+impl KernelPca {
+    /// Fit on a featurized dataset Z (n x F), keeping r components.
+    pub fn fit(z: &Mat, r: usize) -> KernelPca {
+        let (n, f) = (z.rows(), z.cols());
+        assert!(r <= f && n > 1);
+        // column means
+        let mut mean = vec![0.0; f];
+        for i in 0..n {
+            for (m, &v) in mean.iter_mut().zip(z.row(i)) {
+                *m += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        // covariance C = (Zc^T Zc) / n via syrk on centered rows
+        let mut zc = z.clone();
+        for i in 0..n {
+            for (v, &m) in zc.row_mut(i).iter_mut().zip(&mean) {
+                *v -= m;
+            }
+        }
+        let mut cov = Mat::zeros(f, f);
+        zc.syrk_into(&mut cov);
+        cov.symmetrize_from_upper();
+        cov.scale(1.0 / n as f64);
+        let (evals, evecs) = sym_eigen(&cov);
+        let mut components = Mat::zeros(f, r);
+        for j in 0..r {
+            for i in 0..f {
+                components[(i, j)] = evecs[(i, j)];
+            }
+        }
+        KernelPca { mean, components, eigenvalues: evals[..r].to_vec() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.components.cols()
+    }
+
+    /// Project featurized points onto the principal subspace: (n x r).
+    pub fn transform(&self, z: &Mat) -> Mat {
+        let mut zc = z.clone();
+        for i in 0..z.rows() {
+            for (v, &m) in zc.row_mut(i).iter_mut().zip(&self.mean) {
+                *v -= m;
+            }
+        }
+        zc.matmul(&self.components)
+    }
+
+    /// Reconstruction error: mean squared distance between centered rows
+    /// and their projection onto the subspace. Equals the mean of the
+    /// discarded eigenvalue mass on the training set.
+    pub fn reconstruction_error(&self, z: &Mat) -> f64 {
+        let proj = self.transform(z); // (n x r)
+        let mut total = 0.0;
+        for i in 0..z.rows() {
+            let zr = z.row(i);
+            let centered_sq: f64 = zr
+                .iter()
+                .zip(&self.mean)
+                .map(|(&v, &m)| (v - m) * (v - m))
+                .sum();
+            let proj_sq: f64 = proj.row(i).iter().map(|v| v * v).sum();
+            total += centered_sq - proj_sq;
+        }
+        total / z.rows() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{Featurizer, GegenbauerFeatures, RadialTable};
+    use crate::rng::Rng;
+
+    #[test]
+    fn recovers_planted_low_rank_structure() {
+        // data concentrated on a 2-D subspace of feature space
+        let mut rng = Rng::new(180);
+        let n = 200;
+        let mut z = Mat::zeros(n, 10);
+        for i in 0..n {
+            let (a, b) = (rng.normal() * 3.0, rng.normal());
+            for j in 0..10 {
+                z[(i, j)] = a * (j as f64 / 10.0) + b * ((j % 2) as f64) + 0.01 * rng.normal();
+            }
+        }
+        let pca = KernelPca::fit(&z, 2);
+        assert!(pca.eigenvalues[0] >= pca.eigenvalues[1]);
+        let err = pca.reconstruction_error(&z);
+        assert!(err < 0.01, "{err}");
+    }
+
+    #[test]
+    fn transform_shapes_and_orthogonality() {
+        let mut rng = Rng::new(181);
+        let z = Mat::from_fn(50, 8, |_, _| rng.normal());
+        let pca = KernelPca::fit(&z, 3);
+        let t = pca.transform(&z);
+        assert_eq!((t.rows(), t.cols()), (50, 3));
+        // components orthonormal
+        let ctc = pca.components.matmul_tn(&pca.components);
+        assert!(ctc.max_abs_diff(&Mat::eye(3)) < 1e-8);
+    }
+
+    #[test]
+    fn error_decreases_with_rank() {
+        let mut rng = Rng::new(182);
+        let z = Mat::from_fn(80, 12, |_, _| rng.normal());
+        let e2 = KernelPca::fit(&z, 2).reconstruction_error(&z);
+        let e6 = KernelPca::fit(&z, 6).reconstruction_error(&z);
+        let e12 = KernelPca::fit(&z, 12).reconstruction_error(&z);
+        assert!(e6 < e2);
+        assert!(e12 < 1e-8, "{e12}");
+    }
+
+    #[test]
+    fn kernel_pca_through_gegenbauer_features() {
+        // clustered data on S^2 -> kernel PCA separates the clusters in
+        // a low-dimensional embedding
+        let mut rng = Rng::new(183);
+        let n = 120;
+        let mut x = Mat::zeros(n, 3);
+        let mut c0 = vec![0.0; 3];
+        let mut c1 = vec![0.0; 3];
+        rng.sphere(&mut c0);
+        rng.sphere(&mut c1);
+        for i in 0..n {
+            let c = if i % 2 == 0 { &c0 } else { &c1 };
+            let row = x.row_mut(i);
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = c[j] + 0.2 * rng.normal();
+            }
+            let norm: f64 = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+            for r in row.iter_mut() {
+                *r /= norm;
+            }
+        }
+        let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, 8, 2), 256, 184);
+        let z = feat.featurize(&x);
+        let pca = KernelPca::fit(&z, 2);
+        let emb = pca.transform(&z);
+        // the first principal coordinate must separate the two clusters
+        let mean0: f64 =
+            (0..n).step_by(2).map(|i| emb[(i, 0)]).sum::<f64>() / (n / 2) as f64;
+        let mean1: f64 =
+            (1..n).step_by(2).map(|i| emb[(i, 0)]).sum::<f64>() / (n / 2) as f64;
+        let spread: f64 = (0..n)
+            .map(|i| {
+                let m = if i % 2 == 0 { mean0 } else { mean1 };
+                (emb[(i, 0)] - m).powi(2)
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!(
+            (mean0 - mean1).abs() > 2.0 * spread.sqrt(),
+            "clusters not separated: means {mean0} vs {mean1}, sd {}",
+            spread.sqrt()
+        );
+    }
+}

@@ -1,0 +1,303 @@
+//! Kernel ridge regression, in both forms the paper compares:
+//!
+//! * [`FeatureRidge`] — feature-space KRR on a random-feature matrix Z
+//!   (n x F): w = (Z^T Z + lambda I)^{-1} Z^T y; O(n F^2 + F^3). This is
+//!   what the coordinator's one-round protocol assembles from per-worker
+//!   sufficient statistics.
+//! * [`ExactKrr`] — ground truth: alpha = (K + lambda I)^{-1} y with the
+//!   exact Gram matrix; O(n^3). Used by tests and the spectral validators.
+
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Mat};
+
+/// Sufficient statistics for feature-space ridge regression: G = Z^T Z,
+/// b = Z^T y, n rows seen. Additive across shards/batches — the heart of
+/// the one-round distributed protocol and the streaming path.
+#[derive(Clone, Debug)]
+pub struct RidgeStats {
+    pub g: Mat,
+    pub b: Vec<f64>,
+    pub n: usize,
+    /// running sum of squared targets (for residual diagnostics)
+    pub yy: f64,
+}
+
+impl RidgeStats {
+    pub fn new(f_dim: usize) -> Self {
+        RidgeStats { g: Mat::zeros(f_dim, f_dim), b: vec![0.0; f_dim], n: 0, yy: 0.0 }
+    }
+
+    /// Absorb a featurized batch (rows of z paired with y).
+    pub fn absorb(&mut self, z: &Mat, y: &[f64]) {
+        assert_eq!(z.rows(), y.len());
+        assert_eq!(z.cols(), self.b.len());
+        z.syrk_into(&mut self.g);
+        for (i, &yi) in y.iter().enumerate() {
+            let row = z.row(i);
+            for (bj, &zj) in self.b.iter_mut().zip(row) {
+                *bj += zj * yi;
+            }
+            self.yy += yi * yi;
+        }
+        self.n += y.len();
+    }
+
+    /// Merge another shard's statistics (the one-round reduction).
+    pub fn merge(&mut self, other: &RidgeStats) {
+        self.g.add_assign(&other.g);
+        for (a, &b) in self.b.iter_mut().zip(&other.b) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.yy += other.yy;
+    }
+
+    /// Solve for the ridge weights at regularization lambda.
+    pub fn solve(&self, lambda: f64) -> FeatureRidge {
+        let mut g = self.g.clone();
+        g.symmetrize_from_upper();
+        g.add_diag(lambda);
+        let (chol, jitter) = Cholesky::new_with_jitter(&g, 1e-10);
+        let weights = chol.solve(&self.b);
+        FeatureRidge { weights, lambda: lambda + jitter }
+    }
+}
+
+/// Trained feature-space ridge model.
+#[derive(Clone, Debug)]
+pub struct FeatureRidge {
+    pub weights: Vec<f64>,
+    pub lambda: f64,
+}
+
+impl FeatureRidge {
+    /// Fit directly from a feature matrix (convenience; the coordinator
+    /// path goes through RidgeStats).
+    pub fn fit(z: &Mat, y: &[f64], lambda: f64) -> Self {
+        let mut stats = RidgeStats::new(z.cols());
+        stats.absorb(z, y);
+        stats.solve(lambda)
+    }
+
+    /// Predict from featurized inputs.
+    pub fn predict(&self, z: &Mat) -> Vec<f64> {
+        z.matvec(&self.weights)
+    }
+
+    pub fn predict_row(&self, z_row: &[f64]) -> f64 {
+        z_row.iter().zip(&self.weights).map(|(&a, &b)| a * b).sum()
+    }
+}
+
+/// Gaussian-process regression through random features (Appendix A of the
+/// paper lists GPs among the downstream tasks; Theorem 10 licenses the
+/// low-rank surrogate). Predictive mean equals feature-ridge; predictive
+/// variance is sigma^2 * z(x)^T (Z^T Z + lambda I)^{-1} z(x).
+pub struct FeatureGp {
+    chol: Cholesky,
+    weights: Vec<f64>,
+    noise_var: f64,
+}
+
+impl FeatureGp {
+    /// Fit from accumulated sufficient statistics (same inputs the
+    /// coordinator's one-round reduction produces).
+    pub fn fit(stats: &RidgeStats, lambda: f64, noise_var: f64) -> FeatureGp {
+        let mut g = stats.g.clone();
+        g.symmetrize_from_upper();
+        g.add_diag(lambda);
+        let (chol, _) = Cholesky::new_with_jitter(&g, 1e-10);
+        let weights = chol.solve(&stats.b);
+        FeatureGp { chol, weights, noise_var }
+    }
+
+    /// Predictive mean and variance for one featurized point.
+    pub fn predict_row(&self, z_row: &[f64]) -> (f64, f64) {
+        let mean: f64 = z_row.iter().zip(&self.weights).map(|(&a, &b)| a * b).sum();
+        let sol = self.chol.solve(z_row);
+        let quad: f64 = z_row.iter().zip(&sol).map(|(&a, &b)| a * b).sum();
+        (mean, self.noise_var * quad.max(0.0))
+    }
+
+    /// Batch prediction: (means, variances).
+    pub fn predict(&self, z: &Mat) -> (Vec<f64>, Vec<f64>) {
+        let mut means = Vec::with_capacity(z.rows());
+        let mut vars = Vec::with_capacity(z.rows());
+        for i in 0..z.rows() {
+            let (m, v) = self.predict_row(z.row(i));
+            means.push(m);
+            vars.push(v);
+        }
+        (means, vars)
+    }
+}
+
+/// Exact kernel ridge regression (ground truth).
+pub struct ExactKrr {
+    kernel: Kernel,
+    x_train: Mat,
+    alpha: Vec<f64>,
+}
+
+impl ExactKrr {
+    pub fn fit(kernel: Kernel, x_train: Mat, y: &[f64], lambda: f64) -> Self {
+        let mut k = kernel.gram(&x_train);
+        k.add_diag(lambda);
+        let (chol, _) = Cholesky::new_with_jitter(&k, 1e-10);
+        let alpha = chol.solve(y);
+        ExactKrr { kernel, x_train, alpha }
+    }
+
+    pub fn predict(&self, x: &Mat) -> Vec<f64> {
+        let kx = self.kernel.cross_gram(x, &self.x_train);
+        kx.matvec(&self.alpha)
+    }
+}
+
+/// Mean squared error.
+pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    pred.iter().zip(truth).map(|(&p, &t)| (p - t) * (p - t)).sum::<f64>() / pred.len() as f64
+}
+
+/// 2-fold cross-validation over a grid of lambdas on featurized data
+/// (the paper tunes the ridge parameter this way).
+pub fn cv_lambda(z: &Mat, y: &[f64], grid: &[f64]) -> f64 {
+    let n = z.rows();
+    let half = n / 2;
+    let z1 = z.row_block(0, half);
+    let z2 = z.row_block(half, n);
+    let (y1, y2) = (&y[..half], &y[half..]);
+    let mut best = (f64::INFINITY, grid[0]);
+    for &lam in grid {
+        let m1 = FeatureRidge::fit(&z1, y1, lam);
+        let m2 = FeatureRidge::fit(&z2, y2, lam);
+        let e = mse(&m1.predict(&z2), y2) + mse(&m2.predict(&z1), y1);
+        if e < best.0 {
+            best = (e, lam);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{Featurizer, GegenbauerFeatures, RadialTable};
+    use crate::rng::Rng;
+
+    #[test]
+    fn ridge_recovers_linear_model() {
+        // y = Z w* exactly, tiny lambda -> recover w*
+        let mut rng = Rng::new(130);
+        let z = Mat::from_fn(50, 5, |_, _| rng.normal());
+        let w_star: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let y = z.matvec(&w_star);
+        let model = FeatureRidge::fit(&z, &y, 1e-10);
+        for (a, b) in model.weights.iter().zip(&w_star) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn stats_absorb_equals_direct() {
+        let mut rng = Rng::new(131);
+        let z = Mat::from_fn(30, 4, |_, _| rng.normal());
+        let y: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        // two-batch absorb == one-shot fit
+        let mut stats = RidgeStats::new(4);
+        stats.absorb(&z.row_block(0, 13), &y[..13]);
+        stats.absorb(&z.row_block(13, 30), &y[13..]);
+        let m1 = stats.solve(0.1);
+        let m2 = FeatureRidge::fit(&z, &y, 0.1);
+        for (a, b) in m1.weights.iter().zip(&m2.weights) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn merge_is_partition_invariant() {
+        let mut rng = Rng::new(132);
+        let z = Mat::from_fn(24, 3, |_, _| rng.normal());
+        let y: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let mut a = RidgeStats::new(3);
+        a.absorb(&z, &y);
+        let mut b = RidgeStats::new(3);
+        for lo in (0..24).step_by(6) {
+            let mut shard = RidgeStats::new(3);
+            shard.absorb(&z.row_block(lo, lo + 6), &y[lo..lo + 6]);
+            b.merge(&shard);
+        }
+        assert!(a.g.max_abs_diff(&b.g) < 1e-10);
+        assert_eq!(a.n, b.n);
+    }
+
+    #[test]
+    fn feature_krr_approaches_exact_krr() {
+        // random Gegenbauer features + ridge ~ exact Gaussian KRR
+        let mut rng = Rng::new(133);
+        let n = 80;
+        let x = Mat::from_fn(n, 3, |_, _| rng.normal() * 0.6);
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let r = x.row(i);
+                (2.0 * r[0]).sin() + r[1] * r[2] + 0.01 * rng.normal()
+            })
+            .collect();
+        let lam = 1e-2;
+        let exact = ExactKrr::fit(Kernel::Gaussian { bandwidth: 1.0 }, x.clone(), &y, lam);
+        let feat =
+            GegenbauerFeatures::new(RadialTable::gaussian(3, 12, 4), 2048, 7);
+        let z = feat.featurize(&x);
+        let approx = FeatureRidge::fit(&z, &y, lam);
+        // compare predictions on fresh points
+        let xt = Mat::from_fn(20, 3, |_, _| rng.normal() * 0.6);
+        let zt = feat.featurize(&xt);
+        let pe = exact.predict(&xt);
+        let pa = approx.predict(&zt);
+        let diff = mse(&pa, &pe);
+        assert!(diff < 5e-3, "{diff}");
+    }
+
+    #[test]
+    fn cv_picks_reasonable_lambda() {
+        let mut rng = Rng::new(134);
+        let z = Mat::from_fn(100, 8, |_, _| rng.normal());
+        let w_star: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = z.matvec(&w_star).iter().map(|v| v + 0.1 * rng.normal()).collect();
+        let lam = cv_lambda(&z, &y, &[1e-6, 1e-3, 1e0, 1e3]);
+        assert!(lam <= 1.0, "clean linear data should prefer small lambda, got {lam}");
+    }
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(mse(&[1.0, 3.0], &[1.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn gp_mean_matches_ridge_and_variance_behaves() {
+        let mut rng = Rng::new(135);
+        let z = Mat::from_fn(60, 6, |_, _| rng.normal());
+        let y: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+        let mut stats = RidgeStats::new(6);
+        stats.absorb(&z, &y);
+        let lam = 0.5;
+        let gp = FeatureGp::fit(&stats, lam, 1.0);
+        let ridge = stats.solve(lam);
+        // mean == ridge prediction
+        let (m0, v0) = gp.predict_row(z.row(0));
+        assert!((m0 - ridge.predict_row(z.row(0))).abs() < 1e-10);
+        assert!(v0 > 0.0);
+        // variance shrinks with more data: refit with twice the rows
+        let mut stats2 = stats.clone();
+        stats2.absorb(&z, &y);
+        let gp2 = FeatureGp::fit(&stats2, lam, 1.0);
+        let (_, v2) = gp2.predict_row(z.row(0));
+        assert!(v2 < v0, "{v2} !< {v0}");
+        // variance is larger far from the data than on it
+        let far = vec![50.0; 6];
+        let (_, v_far) = gp.predict_row(&far);
+        assert!(v_far > v0);
+    }
+}

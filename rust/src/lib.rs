@@ -1,0 +1,64 @@
+//! # gzk — Random Gegenbauer Features for Scalable Kernel Methods
+//!
+//! Rust + JAX + Pallas reproduction of Han, Zandieh & Avron (ICML 2022).
+//!
+//! The crate is organized in three layers (see `DESIGN.md`):
+//!
+//! * **Substrates** — everything the paper's system depends on, built from
+//!   scratch: special functions ([`special`]), a PRNG ([`rng`]), dense
+//!   linear algebra ([`linalg`]), exact kernels ([`kernels`]), synthetic
+//!   datasets ([`data`]).
+//! * **The paper's contribution** — random Gegenbauer features for the
+//!   Generalized Zonal Kernel family ([`features::gegenbauer`]), baselines
+//!   ([`features`]), downstream learners ([`krr`], [`kmeans`]) and the
+//!   spectral-approximation validators ([`spectral`]).
+//! * **The serving system** — the PJRT runtime that executes the AOT
+//!   jax/Pallas artifacts ([`runtime`]) and the L3 coordinator implementing
+//!   the one-round distributed protocol, single-pass streaming KRR and a
+//!   dynamic prediction batcher ([`coordinator`]).
+//!
+//! # Quick example
+//!
+//! ```
+//! use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+//! use gzk::krr::FeatureRidge;
+//! use gzk::linalg::Mat;
+//! use gzk::rng::Rng;
+//!
+//! // toy data: y = x0 + x1 on S^2-ish points
+//! let mut rng = Rng::new(7);
+//! let x = Mat::from_fn(64, 3, |_, _| rng.normal() * 0.5);
+//! let y: Vec<f64> = (0..64).map(|i| x[(i, 0)] + x[(i, 1)]).collect();
+//!
+//! // Gaussian kernel as a GZK (Eq. 23), 256 random directions (Def. 8)
+//! let table = RadialTable::gaussian(/*d=*/ 3, /*q=*/ 10, /*s=*/ 2);
+//! let feat = GegenbauerFeatures::new(table, 256, /*seed=*/ 42);
+//! let z = feat.featurize(&x);
+//! assert_eq!((z.rows(), z.cols()), (64, 512));
+//!
+//! // ridge regression in feature space
+//! let model = FeatureRidge::fit(&z, &y, 1e-3);
+//! let pred = model.predict(&z);
+//! let mse: f64 =
+//!     pred.iter().zip(&y).map(|(&p, &t)| (p - t) * (p - t)).sum::<f64>() / 64.0;
+//! assert!(mse < 1e-2);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod features;
+pub mod kernels;
+pub mod kmeans;
+pub mod kpca;
+pub mod krr;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod special;
+pub mod spectral;
+pub mod testutil;
+
+pub use linalg::Mat;

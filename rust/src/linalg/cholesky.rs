@@ -1,0 +1,220 @@
+//! Cholesky factorization and SPD solves — the workhorse behind KRR
+//! (both the rust-native path and the ground-truth exact-kernel solves).
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor L with A = L L^T.
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Returns None if a non-positive pivot appears
+    /// (matrix not PD to working precision).
+    pub fn new(a: &Mat) -> Option<Cholesky> {
+        assert_eq!(a.rows(), a.cols(), "Cholesky needs a square matrix");
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Factor A + jitter*I, escalating jitter until PD. Returns the factor
+    /// and the jitter actually used.
+    pub fn new_with_jitter(a: &Mat, mut jitter: f64) -> (Cholesky, f64) {
+        let mut m = a.clone();
+        if let Some(c) = Cholesky::new(&m) {
+            return (c, 0.0);
+        }
+        loop {
+            m = a.clone();
+            m.add_diag(jitter);
+            if let Some(c) = Cholesky::new(&m) {
+                return (c, jitter);
+            }
+            jitter *= 10.0;
+            assert!(jitter.is_finite(), "Cholesky jitter escalation diverged");
+        }
+    }
+
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve L y = b (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let mut sum = y[i];
+            let row = self.l.row(i);
+            for k in 0..i {
+                sum -= row[k] * y[k];
+            }
+            y[i] = sum / row[i];
+        }
+        y
+    }
+
+    /// Solve L^T x = y (back substitution).
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(y.len(), n);
+        let mut x = y.to_vec();
+        for i in (0..n).rev() {
+            let mut sum = x[i];
+            for k in i + 1..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// Solve A X = B column-by-column.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b[(i, j)];
+            }
+            let x = self.solve(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// L^{-1} B — whitening transform, used for Nystrom features and the
+    /// spectral-approximation certificate.
+    pub fn whiten(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b[(i, j)];
+            }
+            let y = self.solve_lower(&col);
+            for i in 0..n {
+                out[(i, j)] = y[i];
+            }
+        }
+        out
+    }
+
+    /// log determinant of A (2 * sum log diag L).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut g = a.matmul_tn(&a);
+        g.add_diag(0.5);
+        g
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::new(10);
+        let a = spd(&mut rng, 12);
+        let c = Cholesky::new(&a).expect("SPD");
+        let l = c.factor();
+        let llt = l.matmul_nt(l);
+        assert!(llt.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_residual() {
+        let mut rng = Rng::new(11);
+        let a = spd(&mut rng, 20);
+        let c = Cholesky::new(&a).unwrap();
+        let b: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let x = c.solve(&b);
+        let r = a.matvec(&x);
+        for (ri, bi) in r.iter().zip(&b) {
+            assert!((ri - bi).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn jitter_escalation() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1e-9;
+        let (c, jitter) = Cholesky::new_with_jitter(&a, 1e-10);
+        assert!(jitter > 0.0);
+        assert!(c.factor().rows() == 3);
+    }
+
+    #[test]
+    fn whiten_identity() {
+        // L^{-1} A L^{-T} = I when A = L L^T
+        let mut rng = Rng::new(12);
+        let a = spd(&mut rng, 8);
+        let c = Cholesky::new(&a).unwrap();
+        let w = c.whiten(&a); // L^{-1} A
+        // (L^{-1} A) L^{-T}: whiten the transpose again
+        let w2 = c.whiten(&w.transpose());
+        assert!(w2.max_abs_diff(&Mat::eye(8)) < 1e-9);
+    }
+
+    #[test]
+    fn log_det_diag() {
+        let mut a = Mat::eye(3);
+        a[(0, 0)] = 4.0;
+        a[(1, 1)] = 9.0;
+        let c = Cholesky::new(&a).unwrap();
+        assert!((c.log_det() - (36.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_mat_matches_columns() {
+        let mut rng = Rng::new(13);
+        let a = spd(&mut rng, 6);
+        let b = Mat::from_fn(6, 3, |_, _| rng.normal());
+        let c = Cholesky::new(&a).unwrap();
+        let x = c.solve_mat(&b);
+        let back = a.matmul(&x);
+        assert!(back.max_abs_diff(&b) < 1e-9);
+    }
+}

@@ -1,0 +1,149 @@
+//! Symmetric eigendecomposition by cyclic Jacobi rotations.
+//!
+//! Used by the spectral validators (statistical dimension, (eps,lambda)
+//! certificates, projection-cost checks) where matrices are at most a few
+//! hundred rows — Jacobi's O(n^3) per sweep is fine and its accuracy on
+//! symmetric problems is excellent.
+
+use super::Mat;
+
+/// Eigen-decomposition of a symmetric matrix: returns (eigenvalues
+/// descending, eigenvectors as columns of V with A = V diag(w) V^T).
+pub fn sym_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 * (1.0 + m.frobenius()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // apply rotation J(p,q,theta) on both sides: M <- J^T M J
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&a, &b| diag[b].partial_cmp(&diag[a]).unwrap());
+    let evals: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            vecs[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    (evals, vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 5.0;
+        a[(2, 2)] = 3.0;
+        let (w, _) = sym_eigen(&a);
+        assert!((w[0] - 5.0).abs() < 1e-12);
+        assert!((w[1] - 3.0).abs() < 1e-12);
+        assert!((w[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let a = Mat::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let (w, v) = sym_eigen(&a);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        // eigenvector for 3 is (1,1)/sqrt(2)
+        assert!((v[(0, 0)].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_random() {
+        let mut rng = Rng::new(20);
+        for n in [4usize, 16, 48] {
+            let b = Mat::from_fn(n, n, |_, _| rng.normal());
+            let mut a = b.matmul_tn(&b);
+            a.symmetrize_from_upper();
+            let (w, v) = sym_eigen(&a);
+            // A ?= V diag(w) V^T
+            let mut vd = v.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vd[(i, j)] *= w[j];
+                }
+            }
+            let recon = vd.matmul(&v.transpose());
+            assert!(recon.max_abs_diff(&a) < 1e-8 * (1.0 + a.frobenius()), "n={n}");
+            // eigenvalues descending, PSD
+            for i in 1..n {
+                assert!(w[i] <= w[i - 1] + 1e-10);
+            }
+            assert!(w[n - 1] > -1e-8);
+        }
+    }
+
+    #[test]
+    fn orthonormal_vectors() {
+        let mut rng = Rng::new(21);
+        let b = Mat::from_fn(10, 10, |_, _| rng.normal());
+        let mut a = b.matmul_tn(&b);
+        a.symmetrize_from_upper();
+        let (_, v) = sym_eigen(&a);
+        let vtv = v.matmul_tn(&v);
+        assert!(vtv.max_abs_diff(&Mat::eye(10)) < 1e-9);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Rng::new(22);
+        let b = Mat::from_fn(8, 8, |_, _| rng.normal());
+        let mut a = b.matmul_tn(&b);
+        a.symmetrize_from_upper();
+        let tr: f64 = (0..8).map(|i| a[(i, i)]).sum();
+        let (w, _) = sym_eigen(&a);
+        assert!((w.iter().sum::<f64>() - tr).abs() < 1e-9 * tr.abs());
+    }
+}

@@ -1,0 +1,145 @@
+//! Iterative radix-2 complex FFT — the polynomial-convolution engine behind
+//! the TensorSketch / PolySketch baseline [PP13, AKK+20].
+
+/// In-place forward FFT on interleaved (re, im) pairs; length power of two.
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64]) {
+    fft_dir(re, im, false);
+}
+
+/// In-place inverse FFT (includes the 1/n normalization).
+pub fn ifft_inplace(re: &mut [f64], im: &mut [f64]) {
+    fft_dir(re, im, true);
+    let n = re.len() as f64;
+    for v in re.iter_mut() {
+        *v /= n;
+    }
+    for v in im.iter_mut() {
+        *v /= n;
+    }
+}
+
+fn fft_dir(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "FFT length must be a power of two");
+    // bit reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let (mut cr, mut ci) = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let (ar, ai) = (re[start + k], im[start + k]);
+                let (br, bi) = (re[start + k + len / 2], im[start + k + len / 2]);
+                let (tr, ti) = (br * cr - bi * ci, br * ci + bi * cr);
+                re[start + k] = ar + tr;
+                im[start + k] = ai + ti;
+                re[start + k + len / 2] = ar - tr;
+                im[start + k + len / 2] = ai - ti;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Circular convolution of two real vectors via FFT (lengths must match and
+/// be a power of two). Exactly what TensorSketch composes per degree.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = a.len();
+    assert_eq!(n, b.len());
+    let (mut ar, mut ai) = (a.to_vec(), vec![0.0; n]);
+    let (mut br, mut bi) = (b.to_vec(), vec![0.0; n]);
+    fft_inplace(&mut ar, &mut ai);
+    fft_inplace(&mut br, &mut bi);
+    for k in 0..n {
+        let (r, i) = (ar[k] * br[k] - ai[k] * bi[k], ar[k] * bi[k] + ai[k] * br[k]);
+        ar[k] = r;
+        ai[k] = i;
+    }
+    ifft_inplace(&mut ar, &mut ai);
+    ar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::new(40);
+        let n = 32;
+        let re0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let im0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (mut re, mut im) = (re0.clone(), im0.clone());
+        fft_inplace(&mut re, &mut im);
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0, 0.0);
+            for t in 0..n {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                let (c, s) = (ang.cos(), ang.sin());
+                sr += re0[t] * c - im0[t] * s;
+                si += re0[t] * s + im0[t] * c;
+            }
+            assert!((re[k] - sr).abs() < 1e-9, "k={k}");
+            assert!((im[k] - si).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(41);
+        let n = 64;
+        let re0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let im0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (mut re, mut im) = (re0.clone(), im0.clone());
+        fft_inplace(&mut re, &mut im);
+        ifft_inplace(&mut re, &mut im);
+        for i in 0..n {
+            assert!((re[i] - re0[i]).abs() < 1e-10);
+            assert!((im[i] - im0[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn convolution_matches_naive() {
+        let mut rng = Rng::new(42);
+        let n = 16;
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let fast = circular_convolve(&a, &b);
+        for k in 0..n {
+            let slow: f64 = (0..n).map(|i| a[i] * b[(k + n - i) % n]).sum();
+            assert!((fast[k] - slow).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn convolution_delta_is_identity() {
+        let mut delta = vec![0.0; 8];
+        delta[0] = 1.0;
+        let b = vec![1., 2., 3., 4., 5., 6., 7., 8.];
+        let out = circular_convolve(&delta, &b);
+        for (o, e) in out.iter().zip(&b) {
+            assert!((o - e).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! In-place fast Walsh-Hadamard transform (unnormalized), the core of the
+//! FastFood baseline [LSS+13].
+
+/// Unnormalized FWHT; `x.len()` must be a power of two.
+pub fn fwht_inplace(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let step = h * 2;
+        for block in (0..n).step_by(step) {
+            for i in block..block + h {
+                let (a, b) = (x[i], x[i + h]);
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+        }
+        h = step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn hand_case_n4() {
+        let mut x = vec![1.0, 0.0, 1.0, 0.0];
+        fwht_inplace(&mut x);
+        assert_eq!(x, vec![2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn involution_up_to_n() {
+        // H (H x) = n x
+        let mut rng = Rng::new(30);
+        for &n in &[2usize, 8, 64, 256] {
+            let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut x = orig.clone();
+            fwht_inplace(&mut x);
+            fwht_inplace(&mut x);
+            for (a, b) in x.iter().zip(&orig) {
+                assert!((a - b * n as f64).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_hadamard() {
+        // dense H entries: (-1)^{popcount(i & j)}
+        let n = 16;
+        let mut rng = Rng::new(31);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut fast = v.clone();
+        fwht_inplace(&mut fast);
+        for i in 0..n {
+            let slow: f64 = (0..n)
+                .map(|j: usize| {
+                    let sign = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                    sign * v[j]
+                })
+                .sum();
+            assert!((fast[i] - slow).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn preserves_energy_scaled() {
+        // ||Hx||^2 = n ||x||^2
+        let mut rng = Rng::new(32);
+        let n = 128;
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let e0: f64 = v.iter().map(|x| x * x).sum();
+        let mut h = v;
+        fwht_inplace(&mut h);
+        let e1: f64 = h.iter().map(|x| x * x).sum();
+        assert!((e1 - n as f64 * e0).abs() < 1e-8 * e1);
+    }
+}

@@ -1,0 +1,359 @@
+//! Row-major dense f64 matrix with blocked kernels.
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Sub-block of whole rows [r0, r1).
+    pub fn row_block(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// self * other, blocked over k for cache friendliness.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // i-k-j loop order: streams `other` rows, accumulates into out rows.
+        for i in 0..m {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &aik) in a_row.iter().enumerate().take(k) {
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// self * other^T — the featurizer's shape (rows x rows dot products).
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n, k) = (self.rows, other.rows, self.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let b = other.row(j);
+                let mut acc = 0.0;
+                for t in 0..k {
+                    acc += a[t] * b[t];
+                }
+                out_row[j] = acc;
+            }
+        }
+        out
+    }
+
+    /// self^T * other (k x m)(k x n) -> (m x n); used for Z^T Z reductions.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for t in 0..k {
+            let a = self.row(t);
+            let b = other.row(t);
+            for (i, &ai) in a.iter().enumerate().take(m) {
+                if ai == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bj) in out_row.iter_mut().zip(b) {
+                    *o += ai * bj;
+                }
+            }
+        }
+        out
+    }
+
+    /// Symmetric rank-k update: out += self^T self (Gram of the rows).
+    pub fn syrk_into(&self, out: &mut Mat) {
+        assert_eq!(out.rows, self.cols);
+        assert_eq!(out.cols, self.cols);
+        let f = self.cols;
+        for t in 0..self.rows {
+            let z = self.row(t);
+            for i in 0..f {
+                let zi = z[i];
+                if zi == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * f..i * f + f];
+                // only upper triangle, mirrored below
+                for j in i..f {
+                    out_row[j] += zi * z[j];
+                }
+            }
+        }
+    }
+
+    /// Mirror the upper triangle into the lower (companion to syrk_into).
+    pub fn symmetrize_from_upper(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..i {
+                self.data[i * self.cols + j] = self.data[j * self.cols + i];
+            }
+        }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(&a, &b)| a * b).sum())
+            .collect()
+    }
+
+    /// self^T x (length rows) -> length cols.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut out = vec![0.0; self.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += xi * a;
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn add_diag(&mut self, v: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += v;
+        }
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Operator (spectral) norm via power iteration on self^T self.
+    pub fn op_norm_est(&self, iters: usize) -> f64 {
+        let n = self.cols;
+        if n == 0 || self.rows == 0 {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 + 0.1).collect();
+        let mut norm = 0.0;
+        for _ in 0..iters {
+            let av = self.matvec(&v);
+            let atav = self.matvec_t(&av);
+            norm = atav.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                return 0.0;
+            }
+            for (vi, &a) in v.iter_mut().zip(&atav) {
+                *vi = a / norm;
+            }
+        }
+        norm.sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matmul_hand_case() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = random(&mut rng, 5, 5);
+        let c = a.matmul(&Mat::eye(5));
+        assert!(a.max_abs_diff(&c) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(2);
+        let a = random(&mut rng, 7, 4);
+        let b = random(&mut rng, 9, 4);
+        let c1 = a.matmul(&b.transpose());
+        let c2 = a.matmul_nt(&b);
+        assert!(c1.max_abs_diff(&c2) < 1e-12);
+
+        let d = random(&mut rng, 7, 6);
+        let e1 = a.transpose().matmul(&d);
+        let e2 = a.matmul_tn(&d);
+        assert!(e1.max_abs_diff(&e2) < 1e-12);
+    }
+
+    #[test]
+    fn syrk_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let z = random(&mut rng, 11, 6);
+        let mut g = Mat::zeros(6, 6);
+        z.syrk_into(&mut g);
+        g.symmetrize_from_upper();
+        let expect = z.matmul_tn(&z);
+        assert!(g.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let mut rng = Rng::new(4);
+        let a = random(&mut rng, 6, 4);
+        let x: Vec<f64> = (0..4).map(|i| i as f64 + 0.5).collect();
+        let y1 = a.matvec(&x);
+        let y2 = a.transpose().matvec_t(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn op_norm_of_diagonal() {
+        let mut m = Mat::zeros(4, 4);
+        m[(0, 0)] = 3.0;
+        m[(1, 1)] = -7.0;
+        m[(2, 2)] = 2.0;
+        let est = m.op_norm_est(50);
+        assert!((est - 7.0).abs() < 1e-6, "{est}");
+    }
+
+    #[test]
+    fn row_block() {
+        let a = Mat::from_fn(6, 3, |i, j| (i * 3 + j) as f64);
+        let b = a.row_block(2, 4);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.row(0), &[6., 7., 8.]);
+        assert_eq!(b.row(1), &[9., 10., 11.]);
+    }
+}

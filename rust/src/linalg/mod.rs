@@ -1,0 +1,19 @@
+//! Dense linear-algebra substrate (built from scratch; no external BLAS).
+//!
+//! [`Mat`] is a row-major f64 matrix with the operations the rest of the
+//! system needs: blocked matmul / syrk, Cholesky factorization and SPD
+//! solves, a cyclic Jacobi symmetric eigensolver, the fast Walsh-Hadamard
+//! transform (FastFood baseline) and a radix-2 complex FFT (TensorSketch
+//! baseline).
+
+mod cholesky;
+mod eigen;
+mod fft;
+mod fwht;
+mod matrix;
+
+pub use cholesky::Cholesky;
+pub use eigen::sym_eigen;
+pub use fft::{circular_convolve, fft_inplace, ifft_inplace};
+pub use fwht::fwht_inplace;
+pub use matrix::Mat;

@@ -1,0 +1,203 @@
+//! `gzk` — CLI for the Random Gegenbauer Features system.
+//!
+//! Subcommands map 1:1 to the paper's experiments plus the serving system:
+//!
+//!   gzk fig1      [--degree 15]                      Figure 1
+//!   gzk table1    [--n 64 --d 3 --lambda 0.5]        Table 1 (bounds + empirical)
+//!   gzk table2    [--scale 0.05 --m 1024]            Table 2 (KRR, 4 datasets)
+//!   gzk table3    [--scale 0.05 --m 512]             Table 3 (k-means, 6 datasets)
+//!   gzk spectral  [--n 64 --d 3 --lambda 0.1]        Eq.-1 quality sweep
+//!   gzk leverage  [--n 24 --d 3 --lambda 0.1]        Lemma-7 leverage-score check
+//!   gzk serve     [--n 20000 --m 512 --requests 2000] end-to-end serving demo
+//!   gzk info                                          artifact manifest summary
+
+use gzk::cli::Args;
+use gzk::coordinator::{fit_one_round, Backend, Family, FeatureSpec, PredictionService};
+use gzk::data;
+use gzk::experiments::{fig1, spectral_quality, table1, table2, table3};
+use gzk::krr::mse;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    match args.subcommand.as_str() {
+        "fig1" => {
+            let curves = fig1::run(args.get_usize("degree", 15));
+            fig1::print(&curves);
+        }
+        "table1" => {
+            let rows = table1::run_bounds();
+            table1::print_bounds(&rows);
+            let n = args.get_usize("n", 64);
+            let d = args.get_usize("d", 3);
+            let lam = args.get_f64("lambda", 0.5);
+            let emp = table1::run_empirical(n, d, lam, 0.5, args.get_u64("seed", 1));
+            table1::print_empirical(&emp, 0.5);
+        }
+        "table2" => {
+            let rows = table2::run_all(
+                args.get_f64("scale", 0.05),
+                args.get_usize("m", 1024),
+                args.get_u64("seed", 1),
+            );
+            table2::print(&rows);
+        }
+        "table3" => {
+            let rows = table3::run_all(
+                args.get_f64("scale", 0.05),
+                args.get_usize("m", 512),
+                args.get_u64("seed", 1),
+            );
+            table3::print(&rows);
+        }
+        "spectral" => {
+            let (s_lambda, rows) = spectral_quality::run(
+                args.get_usize("n", 64),
+                args.get_usize("d", 3),
+                args.get_f64("lambda", 0.1),
+                args.get_u64("seed", 1),
+            );
+            spectral_quality::print(s_lambda, &rows);
+        }
+        "leverage" => leverage_demo(&args),
+        "serve" => serve_demo(&args),
+        "info" => info(),
+        other => {
+            eprintln!("unknown subcommand {other:?}; see rust/src/main.rs header for usage");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Lemma-7 validator: exact ridge leverage scores over random directions
+/// vs the uniform bound, plus the Theorem-9 feature-count it implies.
+fn leverage_demo(args: &Args) {
+    use gzk::features::RadialTable;
+    use gzk::linalg::Mat;
+    use gzk::rng::Rng;
+    use gzk::spectral::{lemma7_bound, leverage_score, statistical_dimension, theorem9_feature_count};
+
+    let n = args.get_usize("n", 24);
+    let d = args.get_usize("d", 3);
+    let lambda = args.get_f64("lambda", 0.1);
+    let mut rng = Rng::new(args.get_u64("seed", 1));
+    let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.6);
+    let table = RadialTable::gaussian(d, 10, 3);
+
+    let bound = lemma7_bound(&table, &x, lambda);
+    let k = table.gzk_gram(&x);
+    let s_lam = statistical_dimension(&k, lambda);
+    println!("n={n} d={d} lambda={lambda}: s_lambda = {s_lam:.2}, Lemma-7 bound = {bound:.2}");
+    let mut w = vec![0.0; d];
+    let mut max_tau: f64 = 0.0;
+    let mut sum_tau = 0.0;
+    let n_mc = 200;
+    for _ in 0..n_mc {
+        rng.sphere(&mut w);
+        let tau = leverage_score(&table, &x, &w, lambda);
+        max_tau = max_tau.max(tau);
+        sum_tau += tau;
+    }
+    println!(
+        "over {n_mc} random directions: max tau = {max_tau:.3} (<= bound {bound:.3}), \
+         mean tau = {:.3} (~ s_lambda {s_lam:.3})",
+        sum_tau / n_mc as f64
+    );
+    let m9 = theorem9_feature_count(&table, &x, lambda, 0.5, 0.1, s_lam);
+    println!("Theorem-9 feature count for (eps=0.5, delta=0.1): m >= {m9:.0}");
+}
+
+/// End-to-end demo: train on synthetic elevation via the one-round
+/// protocol, then serve batched prediction requests and report latency.
+fn serve_demo(args: &Args) {
+    let n = args.get_usize("n", 20_000);
+    let m = args.get_usize("m", 512);
+    let n_requests = args.get_usize("requests", 2_000);
+    let n_workers = args.get_usize("workers", 4);
+    let seed = args.get_u64("seed", 1);
+
+    println!("== gzk serve: one-round distributed KRR + batched serving ==");
+    let ds = data::elevation(n, seed);
+    let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed);
+    let spec = FeatureSpec {
+        family: Family::Gaussian { bandwidth: 1.0 },
+        d: 3,
+        q: 12,
+        s: 2,
+        m: m / 2,
+        seed,
+    };
+    let backend = if args.has("pjrt") {
+        Backend::Pjrt { artifact_dir: gzk::runtime::default_artifact_dir() }
+    } else {
+        Backend::Native
+    };
+    let t0 = Instant::now();
+    let fit = fit_one_round(&spec, &x_tr, &y_tr, 1e-2, n_workers, 2048, backend);
+    println!(
+        "trained on {} rows across {} workers / {} shards in {:.2}s (featurize CPU {:.2}s)",
+        fit.stats.n,
+        fit.n_workers,
+        fit.n_shards,
+        t0.elapsed().as_secs_f64(),
+        fit.featurize_secs_total
+    );
+
+    let svc = PredictionService::start(spec, fit.model, 64, Duration::ZERO);
+    let client = svc.client();
+    // warm
+    let _ = client.predict(x_te.row(0));
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut preds = Vec::with_capacity(n_requests);
+    let t1 = Instant::now();
+    for r in 0..n_requests {
+        let i = r % x_te.rows();
+        let t = Instant::now();
+        preds.push(client.predict(x_te.row(i)).expect("served"));
+        latencies.push(t.elapsed().as_secs_f64());
+    }
+    let wall = t1.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let truth: Vec<f64> = (0..n_requests).map(|r| y_te[r % y_te.len()]).collect();
+    let metrics = svc.metrics();
+    println!(
+        "served {} requests in {:.2}s  ({:.0} req/s)",
+        n_requests,
+        wall,
+        n_requests as f64 / wall
+    );
+    println!(
+        "latency p50 {:.2}us  p99 {:.2}us   batches {} (max size {})",
+        latencies[n_requests / 2] * 1e6,
+        latencies[(n_requests * 99) / 100] * 1e6,
+        metrics.batches,
+        metrics.max_batch_seen
+    );
+    println!("test MSE over served predictions: {:.4}", mse(&preds, &truth));
+}
+
+fn info() {
+    let dir = gzk::runtime::default_artifact_dir();
+    println!("artifact dir: {dir:?}");
+    match gzk::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("{} featurize artifacts, {} krr_solve artifacts", m.featurize.len(), m.krr_solve.len());
+            for f in &m.featurize {
+                println!(
+                    "  featurize {} d={} q={} s={} tile {}x{}",
+                    f.family, f.d, f.q, f.s, f.block_b, f.block_m
+                );
+            }
+            for k in &m.krr_solve {
+                println!("  krr_solve F={}", k.f);
+            }
+        }
+        Err(e) => println!("no manifest: {e} (run `make artifacts`)"),
+    }
+}

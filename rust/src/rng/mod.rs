@@ -1,0 +1,296 @@
+//! PRNG substrate: xoshiro256++ with splitmix64 seeding.
+//!
+//! The coordinator's one-round protocol relies on *identical streams* from a
+//! shared seed: the leader broadcasts `(seed, m)` and every worker derives
+//! the same direction set `w_1..w_m ~ U(S^{d-1})` without communication.
+//! Determinism across threads/processes is therefore load-bearing and is
+//! covered by tests below and by property tests in the coordinator.
+
+/// xoshiro256++ by Blackman & Vigna — fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal from the Box-Muller pair
+    spare: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent stream (e.g. per worker / per subsystem) from a
+    /// label. Used so the broadcast seed yields decorrelated substreams.
+    pub fn fork(&self, label: u64) -> Rng {
+        let mut sm = self
+            .s[0]
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(label.wrapping_mul(0xD134_2543_DE82_EF95))
+            .wrapping_add(self.s[3]);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free-enough for our sizes
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Rademacher +/-1.
+    #[inline]
+    pub fn rademacher(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Uniform direction on S^{d-1} written into `out` (length d).
+    pub fn sphere(&mut self, out: &mut [f64]) {
+        loop {
+            self.fill_normal(out);
+            let norm: f64 = out.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for v in out.iter_mut() {
+                    *v /= norm;
+                }
+                return;
+            }
+        }
+    }
+
+    /// m uniform directions on S^{d-1}, row-major (m x d).
+    pub fn sphere_matrix(&mut self, m: usize, d: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m * d];
+        for row in out.chunks_mut(d) {
+            self.sphere(row);
+        }
+        out
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from 0..n (k <= n) by partial shuffle.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Chi-distributed sample with k degrees of freedom (norm of k normals).
+    pub fn chi(&mut self, k: usize) -> f64 {
+        (0..k).map(|_| { let z = self.normal(); z * z }).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same == 0);
+    }
+
+    #[test]
+    fn fork_is_deterministic_and_decorrelated() {
+        let base = Rng::new(7);
+        let mut f1 = base.fork(0);
+        let mut f1b = base.fork(0);
+        let mut f2 = base.fork(1);
+        for _ in 0..100 {
+            assert_eq!(f1.next_u64(), f1b.next_u64());
+        }
+        let mut f1 = base.fork(0);
+        let same = (0..1000).filter(|_| f1.next_u64() == f2.next_u64()).count();
+        assert!(same == 0);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut rng = Rng::new(3);
+        let n = 200_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+            sumsq += u * u;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(4);
+        let n = 400_000;
+        let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m1 += z;
+            m2 += z * z;
+            m4 += z * z * z * z;
+        }
+        assert!((m1 / n as f64).abs() < 0.01);
+        assert!((m2 / n as f64 - 1.0).abs() < 0.02);
+        assert!((m4 / n as f64 - 3.0).abs() < 0.1); // kurtosis of N(0,1)
+    }
+
+    #[test]
+    fn sphere_is_unit_and_isotropic() {
+        let mut rng = Rng::new(5);
+        let d = 6;
+        let n = 50_000;
+        let mut mean = vec![0.0; d];
+        let mut buf = vec![0.0; d];
+        for _ in 0..n {
+            rng.sphere(&mut buf);
+            let norm: f64 = buf.iter().map(|v| v * v).sum::<f64>();
+            assert!((norm - 1.0).abs() < 1e-10);
+            for (m, v) in mean.iter_mut().zip(&buf) {
+                *m += v;
+            }
+        }
+        for m in &mean {
+            assert!((m / n as f64).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Rng::new(6);
+        for _ in 0..50 {
+            let idx = rng.sample_indices(100, 30);
+            assert_eq!(idx.len(), 30);
+            let mut seen = [false; 100];
+            for &i in &idx {
+                assert!(i < 100);
+                assert!(!seen[i], "duplicate index");
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(8);
+        let mut xs: Vec<usize> = (0..64).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chi_mean_approx() {
+        // E[chi_k] = sqrt(2) Gamma((k+1)/2)/Gamma(k/2); for k=4 ~ 1.8800
+        let mut rng = Rng::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.chi(4)).sum::<f64>() / n as f64;
+        assert!((mean - 1.8800).abs() < 0.01, "{mean}");
+    }
+}

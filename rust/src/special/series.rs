@@ -1,0 +1,283 @@
+//! Truncated power-series arithmetic — the substrate for the Fig.-1
+//! "Taylor" baseline. The NTK's Maclaurin coefficients are not tabulated
+//! anywhere, so we compute them exactly by composing the series of the
+//! arc-cosine kernels a0/a1 through the [ZHA+21] recursion.
+//!
+//! All series are Maclaurin (around 0) with `n` coefficients; composition
+//! g(f(x)) handles f(0) != 0 by Taylor-shifting g analytically (binomial
+//! expansions of sqrt(1 - t^2) and 1/sqrt(1 - t^2) around the constant).
+
+/// Truncated Maclaurin series: c[0] + c[1] x + ... + c[n-1] x^{n-1}.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub c: Vec<f64>,
+}
+
+impl Series {
+    pub fn zero(n: usize) -> Series {
+        Series { c: vec![0.0; n] }
+    }
+
+    pub fn constant(v: f64, n: usize) -> Series {
+        let mut s = Series::zero(n);
+        s.c[0] = v;
+        s
+    }
+
+    pub fn identity(n: usize) -> Series {
+        let mut s = Series::zero(n);
+        if n > 1 {
+            s.c[1] = 1.0;
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.c.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.c.is_empty()
+    }
+
+    pub fn add(&self, other: &Series) -> Series {
+        let n = self.len().min(other.len());
+        Series { c: (0..n).map(|i| self.c[i] + other.c[i]).collect() }
+    }
+
+    pub fn scale(&self, v: f64) -> Series {
+        Series { c: self.c.iter().map(|&x| x * v).collect() }
+    }
+
+    pub fn mul(&self, other: &Series) -> Series {
+        let n = self.len().min(other.len());
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            if self.c[i] == 0.0 {
+                continue;
+            }
+            for j in 0..n - i {
+                out[i + j] += self.c[i] * other.c[j];
+            }
+        }
+        Series { c: out }
+    }
+
+    /// Antiderivative with constant 0.
+    pub fn integrate(&self) -> Series {
+        let n = self.len();
+        let mut out = vec![0.0; n];
+        for i in 0..n - 1 {
+            out[i + 1] = self.c[i] / (i + 1) as f64;
+        }
+        Series { c: out }
+    }
+
+    /// Compose self(g(x)) where g has ZERO constant term.
+    pub fn compose0(&self, g: &Series) -> Series {
+        assert!(g.c[0].abs() < 1e-14, "compose0 requires g(0) = 0");
+        let n = self.len().min(g.len());
+        // Horner on series: result = c[n-1]; result = result*g + c[i]
+        let mut out = Series::constant(self.c[n - 1], n);
+        for i in (0..n - 1).rev() {
+            out = out.mul(g);
+            out.c[0] += self.c[i];
+        }
+        out
+    }
+
+    /// Evaluate the truncated polynomial at t.
+    pub fn eval(&self, t: f64) -> f64 {
+        let mut acc = 0.0;
+        for &ci in self.c.iter().rev() {
+            acc = acc * t + ci;
+        }
+        acc
+    }
+}
+
+/// Series of (1 + a x)^alpha (binomial series), n coefficients.
+pub fn binomial_series(alpha: f64, a: f64, n: usize) -> Series {
+    let mut c = vec![0.0; n];
+    c[0] = 1.0;
+    let mut term = 1.0;
+    for k in 1..n {
+        term *= (alpha - (k as f64 - 1.0)) / k as f64 * a;
+        c[k] = term;
+    }
+    Series { c }
+}
+
+/// Series of acos(x0 + u) in u (|x0| < 1), n coefficients:
+/// acos(x0 + u) = acos(x0) - integral of (1 - (x0+u)^2)^{-1/2} du, with
+/// (1-(x0+u)^2)^{-1/2} = ((1-x0)(1+x0))^{-1/2} (1 - u/(1-x0))^{-1/2}
+///                       (1 + u/(1+x0))^{-1/2}.
+pub fn acos_series(x0: f64, n: usize) -> Series {
+    assert!(x0.abs() < 1.0, "acos series needs |x0| < 1");
+    let pref = 1.0 / ((1.0 - x0) * (1.0 + x0)).sqrt();
+    let f1 = binomial_series(-0.5, -1.0 / (1.0 - x0), n);
+    let f2 = binomial_series(-0.5, 1.0 / (1.0 + x0), n);
+    let integrand = f1.mul(&f2).scale(pref);
+    let mut out = integrand.integrate().scale(-1.0);
+    out.c[0] = x0.acos();
+    out
+}
+
+/// Series of sqrt(1 - (x0 + u)^2) in u, n coefficients.
+pub fn sqrt_one_minus_sq_series(x0: f64, n: usize) -> Series {
+    assert!(x0.abs() < 1.0);
+    let pref = ((1.0 - x0) * (1.0 + x0)).sqrt();
+    let f1 = binomial_series(0.5, -1.0 / (1.0 - x0), n);
+    let f2 = binomial_series(0.5, 1.0 / (1.0 + x0), n);
+    f1.mul(&f2).scale(pref)
+}
+
+/// Series of the arc-cosine kernel a0 at x0: a0(t) = 1 - acos(t)/pi.
+pub fn a0_series(x0: f64, n: usize) -> Series {
+    let mut s = acos_series(x0, n).scale(-1.0 / std::f64::consts::PI);
+    s.c[0] += 1.0;
+    s
+}
+
+/// Series of the arc-cosine kernel a1 at x0:
+/// a1(t) = (sqrt(1-t^2) + t (pi - acos t)) / pi.
+pub fn a1_series(x0: f64, n: usize) -> Series {
+    let pi = std::f64::consts::PI;
+    let sq = sqrt_one_minus_sq_series(x0, n);
+    // t as a series in u around x0: x0 + u
+    let mut t = Series::zero(n);
+    t.c[0] = x0;
+    if n > 1 {
+        t.c[1] = 1.0;
+    }
+    let mut pia = acos_series(x0, n).scale(-1.0);
+    pia.c[0] += pi;
+    sq.add(&t.mul(&pia)).scale(1.0 / pi)
+}
+
+/// Compose `outer_at(c)` with an inner series f (general constant term):
+/// result(u) = outer(f(u)) where outer_at builds outer's series at f(0).
+fn compose_shifted(outer_at: impl Fn(f64, usize) -> Series, f: &Series) -> Series {
+    let n = f.len();
+    let c = f.c[0];
+    let outer = outer_at(c, n);
+    let mut f0 = f.clone();
+    f0.c[0] = 0.0;
+    outer.compose0(&f0)
+}
+
+/// Maclaurin coefficients (length n) of the depth-L ReLU NTK
+/// K_relu^{(L)}(t) from the [ZHA+21] recursion — the Fig.-1 "Taylor"
+/// baseline at d = infinity.
+pub fn ntk_maclaurin(depth: usize, n: usize) -> Series {
+    // sigma = theta = t
+    let mut sigma = Series::identity(n);
+    let mut theta = Series::identity(n);
+    for _ in 0..depth.saturating_sub(1) {
+        let a1s = compose_shifted(a1_series, &sigma);
+        let a0s = compose_shifted(a0_series, &sigma);
+        theta = a1s.add(&theta.mul(&a0s));
+        sigma = compose_shifted(a1_series, &sigma);
+    }
+    theta
+}
+
+/// Maclaurin series of exp(a x).
+pub fn exp_maclaurin(a: f64, n: usize) -> Series {
+    let mut c = vec![0.0; n];
+    c[0] = 1.0;
+    for k in 1..n {
+        c[k] = c[k - 1] * a / k as f64;
+    }
+    Series { c }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{arccos_a0, arccos_a1, ntk_kappa};
+
+    #[test]
+    fn binomial_matches_function() {
+        let s = binomial_series(0.5, 0.3, 20);
+        for &u in &[-0.5f64, -0.1, 0.2, 0.8] {
+            let exact = (1.0 + 0.3 * u).powf(0.5);
+            assert!((s.eval(u) - exact).abs() < 1e-10, "u={u}");
+        }
+    }
+
+    #[test]
+    fn acos_series_matches() {
+        for &x0 in &[0.0, 0.3, -0.4, 0.318] {
+            let s = acos_series(x0, 24);
+            for &u in &[-0.1, 0.0, 0.05, 0.15] {
+                let exact = (x0 + u).acos();
+                assert!((s.eval(u) - exact).abs() < 1e-9, "x0={x0} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn a0_a1_series_match() {
+        for &x0 in &[0.0, 0.25, -0.3] {
+            let s0 = a0_series(x0, 24);
+            let s1 = a1_series(x0, 24);
+            for &u in &[-0.1, 0.08] {
+                assert!((s0.eval(u) - arccos_a0(x0 + u)).abs() < 1e-9);
+                assert!((s1.eval(u) - arccos_a1(x0 + u)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn exp_series() {
+        let s = exp_maclaurin(2.0, 30);
+        for &t in &[-1.0, -0.2, 0.5, 1.0] {
+            assert!((s.eval(t) - (2.0 * t).exp()).abs() < 1e-9, "t={t}");
+        }
+    }
+
+    #[test]
+    fn ntk_maclaurin_matches_function_near_zero() {
+        // inside the radius of convergence the truncated Maclaurin series
+        // must match the NTK recursion
+        for depth in [2usize, 3] {
+            let s = ntk_maclaurin(depth, 24);
+            for &t in &[-0.3, -0.1, 0.0, 0.2, 0.4] {
+                let exact = ntk_kappa(t, depth);
+                assert!(
+                    (s.eval(t) - exact).abs() < 2e-5,
+                    "depth={depth} t={t}: {} vs {exact}",
+                    s.eval(t)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ntk_maclaurin_value_at_zero() {
+        // one recursion step (depth 2): K(0) = a1(0) + 0 * a0(0) = 1/pi
+        let s2 = ntk_maclaurin(2, 10);
+        assert!((s2.c[0] - 1.0 / std::f64::consts::PI).abs() < 1e-12);
+        // two steps (depth 3, the Fig.-1 formula):
+        // K(0) = a1(a1(0)) + (a1(0) + 0) a0(a1(0))
+        let s3 = ntk_maclaurin(3, 10);
+        let c = 1.0 / std::f64::consts::PI;
+        let expect = arccos_a1(c) + c * arccos_a0(c);
+        assert!((s3.c[0] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compose0_matches_direct() {
+        // exp(2 * sin-like polynomial)
+        let mut g = Series::zero(16);
+        g.c[1] = 1.0;
+        g.c[3] = -1.0 / 6.0;
+        let e = exp_maclaurin(1.0, 16);
+        let comp = e.compose0(&g);
+        for &t in &[-0.4, 0.1, 0.3] {
+            let gval = t - t * t * t / 6.0;
+            assert!((comp.eval(t) - gval.exp()).abs() < 1e-6, "t={t}");
+        }
+    }
+}

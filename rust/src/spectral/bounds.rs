@@ -1,0 +1,119 @@
+//! Table 1 of the paper: feature-dimension bounds of each Gaussian-kernel
+//! approximation method for an (eps, lambda)-spectral guarantee, evaluated
+//! as formulas (log-domain to survive the exponents).
+
+use crate::special::lgamma;
+
+/// One row of the reproduced Table 1.
+#[derive(Clone, Debug)]
+pub struct BoundRow {
+    pub method: &'static str,
+    /// log10 of the feature-dimension bound
+    pub log10_features: f64,
+}
+
+fn log_binomf(n: f64, k: f64) -> f64 {
+    lgamma(n + 1.0) - lgamma(k + 1.0) - lgamma(n - k + 1.0)
+}
+
+/// Evaluate every method's feature-dimension bound (Table 1, constants as
+/// printed in the paper; log n factors dropped exactly as the paper does).
+pub fn table1_bounds(n: f64, lambda: f64, r: f64, d: f64, s_lambda: f64) -> Vec<BoundRow> {
+    let ln10 = std::f64::consts::LN_10;
+    let nl = (n / lambda).ln(); // log(n/lambda)
+
+    // Fourier [RR09]: n / lambda
+    let fourier = (n / lambda).ln() / ln10;
+
+    // Modified Fourier [AKM+17]:
+    // (248 r)^d (log n/l)^{d/2} + (200 log n/l)^{2d}, over Gamma(d/2+1)
+    let t1 = d * (248.0 * r).ln() + 0.5 * d * nl.max(1.0).ln();
+    let t2 = 2.0 * d * (200.0 * nl.max(1.0)).ln();
+    let mf = (log_add(t1, t2) - lgamma(d / 2.0 + 1.0)) / ln10;
+
+    // Nystrom [MM17]: s_lambda
+    let nystrom = s_lambda.ln() / ln10;
+
+    // PolySketch [AKK+20]: r^10 s_lambda
+    let poly = (10.0 * r.ln() + s_lambda.ln()) / ln10;
+
+    // Adaptive sketch [WZ20]: s_lambda
+    let adaptive = s_lambda.ln() / ln10;
+
+    // Gegenbauer (this work): ((2 log n/l)^d + (1.93 r)^{2d}) / (d-1)!
+    let g1 = d * (2.0 * nl.max(1.0)).ln();
+    let g2 = 2.0 * d * (1.93 * r).ln();
+    let geg = (log_add(g1, g2) - lgamma(d)) / ln10;
+
+    // Theorem-12 exact bound: m = (5 q^2 / 4 eps^2) C(q+d-1, q) log(16 s_l/delta)
+    let eps = 0.5;
+    let delta = 0.1;
+    let q = (3.7 * r * r)
+        .max(d / 2.0 * (2.8 * (r * r + nl.max(1.0) + d) / d).ln() + nl.max(1.0))
+        .max(2.0);
+    let thm12 = ((5.0 * q * q / (4.0 * eps * eps)).ln()
+        + log_binomf(q + d - 1.0, q)
+        + (16.0 * s_lambda / delta).ln().max(1.0).ln())
+        / ln10;
+
+    vec![
+        BoundRow { method: "fourier", log10_features: fourier },
+        BoundRow { method: "modified-fourier", log10_features: mf },
+        BoundRow { method: "nystrom", log10_features: nystrom },
+        BoundRow { method: "polysketch", log10_features: poly },
+        BoundRow { method: "adaptive-sketch", log10_features: adaptive },
+        BoundRow { method: "gegenbauer", log10_features: geg },
+        BoundRow { method: "gegenbauer-thm12", log10_features: thm12 },
+    ]
+}
+
+fn log_add(a: f64, b: f64) -> f64 {
+    let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(rows: &[BoundRow], m: &str) -> f64 {
+        rows.iter().find(|r| r.method == m).unwrap().log10_features
+    }
+
+    #[test]
+    fn gegenbauer_beats_fourier_in_low_dim() {
+        // the paper's headline: for d = o(log n/lambda), Gegenbauer's bound
+        // is sub-polynomial in n/lambda while Fourier is linear
+        let rows = table1_bounds(1e6, 1e-6, 1.0, 3.0, 1e3);
+        assert!(get(&rows, "gegenbauer") < get(&rows, "fourier"));
+        assert!(get(&rows, "gegenbauer") < get(&rows, "modified-fourier"));
+    }
+
+    #[test]
+    fn gegenbauer_beats_polysketch_at_large_radius() {
+        // r^10 hurts PolySketch at moderate radius, small d
+        let rows = table1_bounds(1e5, 1e-3, 6.0, 3.0, 1e2);
+        assert!(get(&rows, "gegenbauer-thm12") < get(&rows, "polysketch") + 10.0);
+        assert!(get(&rows, "polysketch") > get(&rows, "nystrom"));
+    }
+
+    #[test]
+    fn gegenbauer_degrades_in_high_dim() {
+        // the paper's own caveat (and Tables 2/3): the bound explodes with d
+        let low = get(&table1_bounds(1e5, 1e-3, 1.0, 3.0, 1e2), "gegenbauer");
+        let high = get(&table1_bounds(1e5, 1e-3, 1.0, 40.0, 1e2), "gegenbauer");
+        assert!(high > low);
+    }
+
+    #[test]
+    fn all_rows_finite() {
+        for rows in [
+            table1_bounds(1e4, 1e-2, 0.5, 2.0, 10.0),
+            table1_bounds(1e8, 1e-8, 10.0, 64.0, 1e5),
+        ] {
+            for r in rows {
+                assert!(r.log10_features.is_finite(), "{}", r.method);
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Ridge leverage scores of the GZK feature operator (paper §4) and the
+//! Lemma-7 uniform upper bound — the quantity that drives every sample-
+//! complexity theorem in the paper.
+//!
+//! For a direction w on S^{d-1}, Definition 6 gives
+//!
+//!   tau_lambda(w) = Tr( Phi_w^T (K + lambda I)^{-1} Phi_w ),
+//!
+//! where Phi_w in R^{n x s} stacks phi_{x_j}(w) and K is the (truncated)
+//! GZK Gram matrix. Lemma 7 bounds it uniformly by
+//!
+//!   sum_l alpha_{l,d} * min( pi^2 (l+1)^2 / (6 lambda) * sum_j ||h_l(|x_j|)||^2 , s ),
+//!
+//! and Eq. (18) says E_w[tau_lambda(w)] equals the statistical dimension.
+
+use crate::features::RadialTable;
+use crate::linalg::{Cholesky, Mat};
+use crate::special::{alpha_dim, gegenbauer_all};
+
+/// Phi_w in R^{n x s}: the w-th "row" of the feature operator (Eq. 16).
+/// Unlike Def. 8's Z this carries NO 1/sqrt(m) scaling.
+pub fn phi_w(table: &RadialTable, x: &Mat, w: &[f64]) -> Mat {
+    let n = x.rows();
+    let (q, s) = (table.q, table.s);
+    let mut out = Mat::zeros(n, s);
+    for j in 0..n {
+        let xr = x.row(j);
+        let norm = xr.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+        let cos =
+            (xr.iter().zip(w).map(|(&a, &b)| a * b).sum::<f64>() / norm).clamp(-1.0, 1.0);
+        let r = table.values(&[norm]);
+        let p = gegenbauer_all(q, table.d, &[cos]);
+        for i in 0..s {
+            let mut acc = 0.0;
+            for l in 0..=q {
+                acc += r[l * s + i] * p[l];
+            }
+            out[(j, i)] = acc;
+        }
+    }
+    out
+}
+
+/// Exact ridge leverage score tau_lambda(w) (Definition 6), computed
+/// against the truncated-GZK Gram matrix.
+pub fn leverage_score(table: &RadialTable, x: &Mat, w: &[f64], lambda: f64) -> f64 {
+    let mut k = table.gzk_gram(x);
+    k.add_diag(lambda);
+    let (chol, _) = Cholesky::new_with_jitter(&k, 1e-12);
+    let phi = phi_w(table, x, w);
+    // Tr(Phi^T (K+lI)^{-1} Phi) = sum_i phi_i^T solve(phi_i)
+    let mut tau = 0.0;
+    let mut col = vec![0.0; x.rows()];
+    for i in 0..table.s {
+        for j in 0..x.rows() {
+            col[j] = phi[(j, i)];
+        }
+        let sol = chol.solve(&col);
+        tau += col.iter().zip(&sol).map(|(&a, &b)| a * b).sum::<f64>();
+    }
+    tau
+}
+
+/// The Lemma-7 uniform upper bound on tau_lambda(w).
+pub fn lemma7_bound(table: &RadialTable, x: &Mat, lambda: f64) -> f64 {
+    let n = x.rows();
+    let s = table.s as f64;
+    // sum_j ||h_l(|x_j|)||^2 per degree l
+    let mut energy = vec![0.0; table.q + 1];
+    for j in 0..n {
+        let norm = x.row(j).iter().map(|v| v * v).sum::<f64>().sqrt();
+        for (l, e) in table.degree_energy(norm).into_iter().enumerate() {
+            energy[l] += e;
+        }
+    }
+    let pi2_6 = std::f64::consts::PI * std::f64::consts::PI / 6.0;
+    (0..=table.q)
+        .map(|l| {
+            let variance_term = pi2_6 * ((l + 1) * (l + 1)) as f64 / lambda * energy[l];
+            alpha_dim(l, table.d) * variance_term.min(s)
+        })
+        .sum()
+}
+
+/// Theorem-9 feature-count bound m >= (8 / 3 eps^2) log(16 s_lambda / delta) * Lemma7.
+pub fn theorem9_feature_count(
+    table: &RadialTable,
+    x: &Mat,
+    lambda: f64,
+    eps: f64,
+    delta: f64,
+    s_lambda: f64,
+) -> f64 {
+    8.0 / (3.0 * eps * eps) * (16.0 * s_lambda / delta).ln().max(1.0) * lemma7_bound(table, x, lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::spectral::statistical_dimension;
+
+    fn setup(n: usize, d: usize, scale: f64) -> (RadialTable, Mat, Rng) {
+        let mut rng = Rng::new(170);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal() * scale);
+        (RadialTable::gaussian(d, 10, 3), x, rng)
+    }
+
+    #[test]
+    fn gzk_gram_matches_gaussian_at_high_truncation() {
+        let mut rng = Rng::new(171);
+        let x = Mat::from_fn(8, 3, |_, _| rng.normal() * 0.5);
+        let table = RadialTable::gaussian(3, 18, 9);
+        let kg = table.gzk_gram(&x);
+        let ke = crate::kernels::Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        assert!(kg.max_abs_diff(&ke) < 1e-6, "{}", kg.max_abs_diff(&ke));
+    }
+
+    #[test]
+    fn leverage_bounded_by_lemma7() {
+        let (table, x, mut rng) = setup(20, 3, 0.6);
+        let lambda = 0.1;
+        let bound = lemma7_bound(&table, &x, lambda);
+        let mut w = vec![0.0; 3];
+        for _ in 0..25 {
+            rng.sphere(&mut w);
+            let tau = leverage_score(&table, &x, &w, lambda);
+            assert!(tau <= bound * (1.0 + 1e-9), "tau {tau} > bound {bound}");
+            assert!(tau >= 0.0);
+        }
+    }
+
+    #[test]
+    fn average_leverage_equals_statistical_dimension() {
+        // Eq. (18): E_w[tau_lambda(w)] = s_lambda, Monte-Carlo check
+        let (table, x, mut rng) = setup(12, 3, 0.5);
+        let lambda = 0.2;
+        let k = table.gzk_gram(&x);
+        let s_lam = statistical_dimension(&k, lambda);
+        let mut w = vec![0.0; 3];
+        let n_mc = 600;
+        let mean: f64 = (0..n_mc)
+            .map(|_| {
+                rng.sphere(&mut w);
+                leverage_score(&table, &x, &w, lambda)
+            })
+            .sum::<f64>()
+            / n_mc as f64;
+        assert!(
+            (mean - s_lam).abs() < 0.15 * s_lam.max(1.0),
+            "E[tau] = {mean} vs s_lambda = {s_lam}"
+        );
+    }
+
+    #[test]
+    fn bound_tightens_with_lambda() {
+        let (table, x, _) = setup(16, 3, 0.5);
+        let b1 = lemma7_bound(&table, &x, 0.01);
+        let b2 = lemma7_bound(&table, &x, 1.0);
+        assert!(b2 <= b1);
+    }
+
+    #[test]
+    fn theorem9_count_scales_with_eps() {
+        let (table, x, _) = setup(16, 3, 0.5);
+        let k = table.gzk_gram(&x);
+        let s_lam = statistical_dimension(&k, 0.1);
+        let m_half = theorem9_feature_count(&table, &x, 0.1, 0.5, 0.1, s_lam);
+        let m_tenth = theorem9_feature_count(&table, &x, 0.1, 0.1, 0.1, s_lam);
+        assert!((m_tenth / m_half - 25.0).abs() < 1e-6, "1/eps^2 scaling");
+    }
+
+    #[test]
+    fn phi_w_reproduces_kernel_in_expectation() {
+        // Lemma 5: E_w[<phi_x(w), phi_y(w)>] = k(x, y)
+        let (table, x, mut rng) = setup(6, 3, 0.5);
+        let k = table.gzk_gram(&x);
+        let n_mc = 4000;
+        let mut acc = Mat::zeros(6, 6);
+        let mut w = vec![0.0; 3];
+        for _ in 0..n_mc {
+            rng.sphere(&mut w);
+            let phi = phi_w(&table, &x, &w);
+            let pp = phi.matmul_nt(&phi);
+            acc.add_assign(&pp);
+        }
+        acc.scale(1.0 / n_mc as f64);
+        let err = acc.max_abs_diff(&k);
+        assert!(err < 0.05, "{err}");
+    }
+}

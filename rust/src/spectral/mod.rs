@@ -1,0 +1,178 @@
+//! Spectral-approximation validators — the certificates behind Theorems 9,
+//! 10, 11, 12 and the Table-1 bound formulas.
+
+mod bounds;
+mod leverage;
+
+pub use bounds::{table1_bounds, BoundRow};
+pub use leverage::{lemma7_bound, leverage_score, phi_w, theorem9_feature_count};
+
+use crate::linalg::{sym_eigen, Cholesky, Mat};
+
+/// The smallest epsilon such that Z^T Z + lambda I is an (eps, lambda)
+/// spectral approximation of K + lambda I (paper Eq. 1):
+///
+///   (K + lI)/(1+e) <= Z^T Z + lI <= (K + lI)/(1-e)
+///
+/// Computed from the generalized eigenvalues mu of
+/// (K+lI)^{-1/2} (Z^T Z + lI) (K+lI)^{-1/2}: eps = max(1/mu_min - 1,
+/// 1 - 1/mu_max). Returns +inf when the approximation fails entirely.
+pub fn spectral_epsilon(k: &Mat, zt_z: &Mat, lambda: f64) -> f64 {
+    let n = k.rows();
+    assert_eq!(zt_z.rows(), n);
+    let mut k_reg = k.clone();
+    k_reg.add_diag(lambda);
+    let (chol, _) = Cholesky::new_with_jitter(&k_reg, 1e-12);
+    let mut z_reg = zt_z.clone();
+    z_reg.add_diag(lambda);
+    // M = L^{-1} (Z^T Z + l I) L^{-T}
+    let li_z = chol.whiten(&z_reg); // L^{-1} A
+    let m = chol.whiten(&li_z.transpose()); // L^{-1} A^T L^{-T} = (L^{-1} A L^{-T})^T; symmetric
+    let mut msym = m.clone();
+    // enforce symmetry against roundoff
+    for i in 0..n {
+        for j in 0..i {
+            let v = 0.5 * (msym[(i, j)] + msym[(j, i)]);
+            msym[(i, j)] = v;
+            msym[(j, i)] = v;
+        }
+    }
+    let (mu, _) = sym_eigen(&msym);
+    let mu_max = mu[0];
+    let mu_min = mu[n - 1];
+    if mu_min <= 0.0 {
+        return f64::INFINITY;
+    }
+    let eps_low = 1.0 / mu_min - 1.0; // from lower PSD bound
+    let eps_high = 1.0 - 1.0 / mu_max; // from upper PSD bound
+    eps_low.max(eps_high).max(0.0)
+}
+
+/// Statistical dimension s_lambda = Tr(K (K + lambda I)^{-1}).
+pub fn statistical_dimension(k: &Mat, lambda: f64) -> f64 {
+    let (evals, _) = sym_eigen(k);
+    evals.iter().map(|&l| (l.max(0.0)) / (l.max(0.0) + lambda)).sum()
+}
+
+/// Projection-cost preservation check (Theorem 10): for the rank-r
+/// eigenprojector P of K, compare Tr(K - P K P) against
+/// Tr(Z^T Z - P Z^T Z P). Returns (exact_cost, approx_cost, rel_err).
+pub fn projection_cost_check(k: &Mat, zt_z: &Mat, r: usize) -> (f64, f64, f64) {
+    let n = k.rows();
+    let (evals, vecs) = sym_eigen(k);
+    // P = V_r V_r^T
+    let mut vr = Mat::zeros(n, r);
+    for j in 0..r {
+        for i in 0..n {
+            vr[(i, j)] = vecs[(i, j)];
+        }
+    }
+    // Tr(K - P K P) = Tr(K) - Tr(V_r^T K V_r) = sum_{i>r} lambda_i
+    let exact: f64 = evals.iter().skip(r).sum();
+    // Tr(Z^T Z) - Tr(V_r^T Z^T Z V_r)
+    let tr_z: f64 = (0..n).map(|i| zt_z[(i, i)]).sum();
+    let zv = zt_z.matmul(&vr);
+    let vzv = vr.matmul_tn(&zv);
+    let tr_pz: f64 = (0..r).map(|i| vzv[(i, i)]).sum();
+    let approx = tr_z - tr_pz;
+    let rel = (approx - exact).abs() / exact.abs().max(1e-12);
+    (exact, approx, rel)
+}
+
+/// Empirical-risk bound ingredients for approximate KRR (Lemma 13):
+/// risk(f~) <= risk(f)/(1-eps) + eps/(1+eps) * rank(Z)/n * sigma^2.
+pub fn krr_risk_bound(base_risk: f64, eps: f64, rank_z: usize, n: usize, sigma2: f64) -> f64 {
+    base_risk / (1.0 - eps) + eps / (1.0 + eps) * rank_z as f64 / n as f64 * sigma2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{Featurizer, GegenbauerFeatures, RadialTable};
+    use crate::kernels::Kernel;
+    use crate::rng::Rng;
+
+    #[test]
+    fn epsilon_zero_for_exact() {
+        let mut rng = Rng::new(150);
+        let x = Mat::from_fn(16, 3, |_, _| rng.normal() * 0.6);
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        let eps = spectral_epsilon(&k, &k, 0.1);
+        assert!(eps < 1e-8, "{eps}");
+    }
+
+    #[test]
+    fn epsilon_detects_scaling() {
+        // Z^T Z = c K with c = 1.25 -> eps must reflect ~25% deviation on
+        // the top of the spectrum
+        let mut rng = Rng::new(151);
+        let x = Mat::from_fn(12, 3, |_, _| rng.normal() * 0.6);
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        let mut k2 = k.clone();
+        k2.scale(1.25);
+        let eps = spectral_epsilon(&k, &k2, 1e-6);
+        assert!(eps > 0.15 && eps < 0.35, "{eps}");
+    }
+
+    #[test]
+    fn epsilon_decreases_with_more_features() {
+        let mut rng = Rng::new(152);
+        let x = Mat::from_fn(24, 3, |_, _| rng.normal() * 0.5);
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        let table = RadialTable::gaussian(3, 12, 4);
+        let lambda = 0.1;
+        let mut prev = f64::INFINITY;
+        for (m, seed) in [(64usize, 1u64), (512, 2), (4096, 3)] {
+            let feat = GegenbauerFeatures::new(table.clone(), m, seed);
+            let z = feat.featurize(&x);
+            let eps = spectral_epsilon(&k, &z.matmul_nt(&z), lambda);
+            assert!(eps < prev * 1.5, "m={m}: eps={eps}, prev={prev}");
+            prev = eps;
+        }
+        assert!(prev < 0.3, "final eps {prev}");
+    }
+
+    #[test]
+    fn stat_dim_limits() {
+        let mut rng = Rng::new(153);
+        let x = Mat::from_fn(10, 3, |_, _| rng.normal());
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        // lambda -> 0: s_lambda -> rank ~ n; lambda -> inf: -> 0
+        let s_small = statistical_dimension(&k, 1e-12);
+        let s_big = statistical_dimension(&k, 1e12);
+        assert!(s_small > 9.0, "{s_small}");
+        assert!(s_big < 1e-6, "{s_big}");
+        // monotone in lambda
+        let s1 = statistical_dimension(&k, 0.01);
+        let s2 = statistical_dimension(&k, 0.1);
+        assert!(s1 > s2);
+    }
+
+    #[test]
+    fn projection_cost_exact_for_k_itself() {
+        let mut rng = Rng::new(154);
+        let x = Mat::from_fn(14, 3, |_, _| rng.normal() * 0.7);
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        let (e, a, rel) = projection_cost_check(&k, &k, 3);
+        assert!(rel < 1e-8, "exact={e} approx={a} rel={rel}");
+    }
+
+    #[test]
+    fn projection_cost_preserved_by_features() {
+        let mut rng = Rng::new(155);
+        let x = Mat::from_fn(24, 3, |_, _| rng.normal() * 0.5);
+        let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+        let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, 12, 4), 4096, 5);
+        let z = feat.featurize(&x);
+        let (_, _, rel) = projection_cost_check(&k, &z.matmul_nt(&z), 4);
+        assert!(rel < 0.25, "{rel}");
+    }
+
+    #[test]
+    fn risk_bound_degenerates_correctly() {
+        // eps = 0 -> bound equals base risk
+        assert!((krr_risk_bound(0.5, 0.0, 100, 1000, 1.0) - 0.5).abs() < 1e-12);
+        // larger eps -> larger bound
+        assert!(krr_risk_bound(0.5, 0.5, 100, 1000, 1.0) > 0.5);
+    }
+}

@@ -1,0 +1,70 @@
+//! Mini property-testing runner (proptest is not in the offline registry).
+//!
+//! `for_random_cases` draws `n` seeded cases from a generator and runs the
+//! property; on failure it reports the seed so the case is reproducible.
+
+use crate::rng::Rng;
+
+/// Run `prop` on `n` random cases produced by `gen` from forked seeds.
+/// Panics with the offending seed on the first failure.
+pub fn for_random_cases<T>(
+    base_seed: u64,
+    n: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..n {
+        let mut rng = Rng::new(base_seed).fork(case as u64);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!("property failed on case {case} (base_seed {base_seed}): {msg}");
+        }
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        for_random_cases(1, 25, |rng| rng.uniform(), |&u| {
+            if (0.0..1.0).contains(&u) {
+                Ok(())
+            } else {
+                Err(format!("{u} out of range"))
+            }
+        });
+        count += 25;
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        for_random_cases(2, 10, |rng| rng.uniform(), |&u| {
+            if u < 0.5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9, "ok");
+    }
+}

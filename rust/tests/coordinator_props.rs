@@ -1,0 +1,206 @@
+//! Property tests on the coordinator invariants (DESIGN.md §7), using the
+//! in-crate mini property runner (proptest is unavailable offline).
+
+use gzk::coordinator::{fit_one_round, Backend, Family, FeatureSpec};
+use gzk::coordinator::{PredictionService, StreamBatch, StreamingKrr};
+use gzk::features::Featurizer;
+use gzk::krr::{FeatureRidge, RidgeStats};
+use gzk::linalg::Mat;
+use gzk::rng::Rng;
+use gzk::testutil::for_random_cases;
+use std::time::Duration;
+
+struct Case {
+    spec: FeatureSpec,
+    x: Mat,
+    y: Vec<f64>,
+    lambda: f64,
+    workers_a: usize,
+    workers_b: usize,
+    shard_a: usize,
+    shard_b: usize,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let d = 2 + rng.below(4);
+    let n = 20 + rng.below(60);
+    let spec = FeatureSpec {
+        family: Family::Gaussian { bandwidth: 0.5 + rng.uniform() },
+        d,
+        q: 3 + rng.below(8),
+        s: 1 + rng.below(3),
+        m: 8 * (1 + rng.below(6)),
+        seed: rng.next_u64(),
+    };
+    let x = Mat::from_fn(n, d, |_, _| rng.normal());
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    Case {
+        spec,
+        x,
+        y,
+        lambda: 10f64.powf(rng.uniform_in(-4.0, 0.0)),
+        workers_a: 1 + rng.below(4),
+        workers_b: 1 + rng.below(4),
+        shard_a: 1 + rng.below(20),
+        shard_b: 1 + rng.below(20),
+    }
+}
+
+#[test]
+fn prop_fit_invariant_to_workers_and_sharding() {
+    for_random_cases(0xC0FFEE, 12, gen_case, |c| {
+        let fa = fit_one_round(
+            &c.spec, &c.x, &c.y, c.lambda, c.workers_a, c.shard_a, Backend::Native,
+        );
+        let fb = fit_one_round(
+            &c.spec, &c.x, &c.y, c.lambda, c.workers_b, c.shard_b, Backend::Native,
+        );
+        for (i, (a, b)) in fa.model.weights.iter().zip(&fb.model.weights).enumerate() {
+            if (a - b).abs() > 1e-8 * (1.0 + a.abs()) {
+                return Err(format!("weight[{i}] differs: {a} vs {b}"));
+            }
+        }
+        if fa.stats.n != c.x.rows() {
+            return Err(format!("row count {} != {}", fa.stats.n, c.x.rows()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_distributed_equals_single_node() {
+    for_random_cases(0xBEEF, 10, gen_case, |c| {
+        let fit = fit_one_round(&c.spec, &c.x, &c.y, c.lambda, c.workers_a, c.shard_a, Backend::Native);
+        let z = c.spec.build().featurize(&c.spec.scale_inputs(&c.x));
+        let reference = FeatureRidge::fit(&z, &c.y, c.lambda);
+        for (a, b) in fit.model.weights.iter().zip(&reference.weights) {
+            if (a - b).abs() > 1e-8 * (1.0 + a.abs()) {
+                return Err(format!("distributed {a} vs single {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_equals_batch() {
+    for_random_cases(0xFEED, 8, gen_case, |c| {
+        let stream = StreamingKrr::start(c.spec.clone(), 2);
+        let mut lo = 0;
+        let mut step = 3;
+        while lo < c.x.rows() {
+            let hi = (lo + step).min(c.x.rows());
+            stream
+                .handle()
+                .push(StreamBatch { x: c.x.row_block(lo, hi), y: c.y[lo..hi].to_vec() })
+                .map_err(|e| e.to_string())?;
+            lo = hi;
+            step = step % 7 + 2; // irregular batch sizes
+        }
+        let (model, stats) = stream.finalize(c.lambda);
+        if stats.n != c.x.rows() {
+            return Err("row loss in stream".into());
+        }
+        let z = c.spec.build().featurize(&c.spec.scale_inputs(&c.x));
+        let reference = FeatureRidge::fit(&z, &c.y, c.lambda);
+        for (a, b) in model.weights.iter().zip(&reference.weights) {
+            if (a - b).abs() > 1e-8 * (1.0 + a.abs()) {
+                return Err(format!("stream {a} vs batch {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stats_merge_commutative_associative() {
+    for_random_cases(0xABBA, 15, gen_case, |c| {
+        let z = c.spec.build().featurize(&c.x);
+        let f = z.cols();
+        let third = c.x.rows() / 3;
+        if third == 0 {
+            return Ok(());
+        }
+        let mk = |lo: usize, hi: usize| {
+            let mut s = RidgeStats::new(f);
+            s.absorb(&z.row_block(lo, hi), &c.y[lo..hi]);
+            s
+        };
+        let (s1, s2, s3) = (mk(0, third), mk(third, 2 * third), mk(2 * third, c.x.rows()));
+        // (s1 + s2) + s3
+        let mut a = RidgeStats::new(f);
+        a.merge(&s1);
+        a.merge(&s2);
+        a.merge(&s3);
+        // s3 + (s2 + s1)
+        let mut b = RidgeStats::new(f);
+        b.merge(&s3);
+        b.merge(&s2);
+        b.merge(&s1);
+        if a.g.max_abs_diff(&b.g) > 1e-9 {
+            return Err("merge not order-invariant".into());
+        }
+        if a.n != b.n || (a.yy - b.yy).abs() > 1e-9 {
+            return Err("counters differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_service_answers_every_request_exactly_once() {
+    for_random_cases(0xD00D, 6, gen_case, |c| {
+        let z = c.spec.build().featurize(&c.spec.scale_inputs(&c.x));
+        let model = FeatureRidge::fit(&z, &c.y, c.lambda);
+        let expect = model.predict(&z);
+        let svc = PredictionService::start(
+            c.spec.clone(),
+            model,
+            1 + (c.shard_a % 8),
+            Duration::from_micros(300),
+        );
+        // concurrent clients with interleaved indices
+        let mut joins = Vec::new();
+        for t in 0..3usize {
+            let client = svc.client();
+            let rows: Vec<Vec<f64>> =
+                (0..c.x.rows()).skip(t).step_by(3).map(|i| c.x.row(i).to_vec()).collect();
+            let exp: Vec<f64> = (0..c.x.rows()).skip(t).step_by(3).map(|i| expect[i]).collect();
+            joins.push(std::thread::spawn(move || {
+                for (row, e) in rows.iter().zip(&exp) {
+                    let p = client.predict(row).expect("served");
+                    assert!((p - e).abs() < 1e-9, "prediction mismatch");
+                }
+                rows.len()
+            }));
+        }
+        let mut answered = 0;
+        for j in joins {
+            answered += j.join().map_err(|_| "client thread panicked".to_string())?;
+        }
+        if answered != c.x.rows() {
+            return Err(format!("answered {answered} of {}", c.x.rows()));
+        }
+        let m = svc.metrics();
+        if m.requests != c.x.rows() {
+            return Err(format!("service counted {} requests", m.requests));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feature_map_oblivious_reconstruction() {
+    // the broadcast property: two independent builders of the same spec
+    // featurize identically — across every random spec
+    for_random_cases(0x0B11, 20, gen_case, |c| {
+        let f1 = c.spec.build();
+        let f2 = c.spec.build();
+        let z1 = f1.featurize(&c.x);
+        let z2 = f2.featurize(&c.x);
+        if z1 != z2 {
+            return Err("same spec produced different features".into());
+        }
+        Ok(())
+    });
+}

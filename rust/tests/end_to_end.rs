@@ -1,0 +1,137 @@
+//! Cross-module integration tests: featurizers -> KRR/k-means -> spectral
+//! validators on the synthetic datasets, at test-friendly sizes.
+
+use gzk::data;
+use gzk::features::{
+    FastFoodFeatures, Featurizer, FourierFeatures, GegenbauerFeatures, MaclaurinFeatures,
+    NystromFeatures, PolySketchFeatures, RadialTable,
+};
+use gzk::kernels::Kernel;
+use gzk::kmeans::{greedy_accuracy, kmeans};
+use gzk::krr::{mse, ExactKrr, FeatureRidge};
+use gzk::spectral::spectral_epsilon;
+
+#[test]
+fn all_methods_learn_elevation() {
+    // every featurizer must beat the predict-the-mean baseline on the
+    // S^2 elevation task (Table-2 smoke at small n)
+    let ds = data::elevation(1200, 3);
+    let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.2, 3);
+    let ybar = y_tr.iter().sum::<f64>() / y_tr.len() as f64;
+    let base = y_te.iter().map(|v| (v - ybar) * (v - ybar)).sum::<f64>() / y_te.len() as f64;
+
+    let d = 3;
+    let m = 512;
+    let kernel = Kernel::Gaussian { bandwidth: 1.0 };
+    let methods: Vec<(&str, Box<dyn Featurizer>)> = vec![
+        ("gegenbauer", Box::new(GegenbauerFeatures::new(RadialTable::gaussian(d, 10, 2), m / 2, 1))),
+        ("fourier", Box::new(FourierFeatures::new(d, m, 1.0, 2))),
+        ("fastfood", Box::new(FastFoodFeatures::new(d, m, 1.0, 3))),
+        ("maclaurin", Box::new(MaclaurinFeatures::new_gaussian(d, m, 1.0, 4))),
+        ("polysketch", Box::new(PolySketchFeatures::new(d, m, 6, 1.0, 5))),
+        ("nystrom", Box::new(NystromFeatures::fit(kernel, &x_tr, m / 2, 1e-3, 6))),
+    ];
+    for (name, feat) in methods {
+        let z_tr = feat.featurize(&x_tr);
+        let z_te = feat.featurize(&x_te);
+        let model = FeatureRidge::fit(&z_tr, &y_tr, 1e-2);
+        let err = mse(&model.predict(&z_te), &y_te);
+        assert!(err < 0.8 * base, "{name}: mse {err} vs baseline {base}");
+    }
+}
+
+#[test]
+fn gegenbauer_tracks_exact_krr_on_co2() {
+    let ds = data::co2(700, 5);
+    let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.2, 5);
+    let lam = 1e-2;
+    let exact = ExactKrr::fit(Kernel::Gaussian { bandwidth: 1.0 }, x_tr.clone(), &y_tr, lam);
+    let feat = GegenbauerFeatures::new(RadialTable::gaussian(4, 10, 3), 1024, 7);
+    let z_tr = feat.featurize(&x_tr);
+    let z_te = feat.featurize(&x_te);
+    let model = FeatureRidge::fit(&z_tr, &y_tr, lam);
+    let mse_feat = mse(&model.predict(&z_te), &y_te);
+    let mse_exact = mse(&exact.predict(&x_te), &y_te);
+    assert!(
+        mse_feat < 1.5 * mse_exact + 5e-3,
+        "features {mse_feat} vs exact {mse_exact}"
+    );
+}
+
+#[test]
+fn kmeans_recovers_clusters_through_features() {
+    let spec = gzk::data::ClusteringSpec { name: "itest", n: 900, d: 8, k: 3 };
+    let ds = data::clustering_dataset(spec, 9);
+    let feat = GegenbauerFeatures::new(RadialTable::gaussian(8, 8, 2), 256, 10);
+    let z = feat.featurize(&ds.x);
+    let res = kmeans(&z, 3, 50, 11);
+    let acc = greedy_accuracy(&res.assignments, &ds.labels, 3);
+    // unit-norm mixtures overlap by construction; well above chance (1/3)
+    // is what the feature map must preserve
+    assert!(acc > 0.70, "accuracy {acc}");
+}
+
+#[test]
+fn spectral_certificate_on_protein_subset() {
+    let ds = data::protein(80, 13);
+    let mut x = ds.x.clone();
+    // protein is standardized; scale down so the Gaussian kernel has mass
+    x.scale(0.35);
+    let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+    let feat = GegenbauerFeatures::new(RadialTable::gaussian(9, 10, 3), 4096, 14);
+    let z = feat.featurize(&x);
+    let eps = spectral_epsilon(&k, &z.matmul_nt(&z), 0.5);
+    assert!(eps < 0.8, "eps {eps}");
+}
+
+#[test]
+fn ntk_features_track_exact_ntk_krr() {
+    // the paper's NTK claim end-to-end: random Gegenbauer features for the
+    // depth-2 ReLU NTK approximate exact NTK kernel regression on S^3 data
+    let mut rng = gzk::rng::Rng::new(40);
+    let n = 150;
+    let d = 4;
+    let mut x = gzk::linalg::Mat::zeros(n, d);
+    for i in 0..n {
+        rng.sphere(x.row_mut(i));
+    }
+    let y: Vec<f64> =
+        (0..n).map(|i| (3.0 * x[(i, 0)]).sin() + x[(i, 1)] * x[(i, 2)] + 0.02 * rng.normal()).collect();
+    let lam = 1e-2;
+    let exact = ExactKrr::fit(Kernel::Ntk { depth: 2 }, x.clone(), &y, lam);
+    let feat = GegenbauerFeatures::new(gzk::features::RadialTable::ntk(d, 24, 2), 4096, 41);
+    let z = feat.featurize(&x);
+    let model = FeatureRidge::fit(&z, &y, lam);
+    let mut xt = gzk::linalg::Mat::zeros(40, d);
+    for i in 0..40 {
+        rng.sphere(xt.row_mut(i));
+    }
+    let pe = exact.predict(&xt);
+    let pa = model.predict(&feat.featurize(&xt));
+    let diff = mse(&pa, &pe);
+    assert!(diff < 1e-2, "feature-NTK vs exact-NTK prediction gap {diff}");
+}
+
+#[test]
+fn parallel_featurize_in_krr_pipeline() {
+    // featurize_par must be a drop-in replacement on a real workload
+    let ds = data::elevation(2000, 21);
+    let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, 10, 2), 256, 22);
+    let z_seq = feat.featurize(&ds.x);
+    let z_par = feat.featurize_par(&ds.x, 4);
+    assert_eq!(z_seq, z_par);
+}
+
+#[test]
+fn synthetic_datasets_have_documented_sizes() {
+    // DESIGN.md promises the paper's (n, d) geometry; spot-check generators
+    let e = data::elevation(100, 1);
+    assert_eq!(e.x.cols(), 3);
+    let c = data::co2(100, 1);
+    assert_eq!(c.x.cols(), 4);
+    let p = data::protein(100, 1);
+    assert_eq!(p.x.cols(), 9);
+    assert_eq!(data::CLUSTERING_SPECS.len(), 6);
+    let total: usize = data::CLUSTERING_SPECS.iter().map(|s| s.n).sum();
+    assert_eq!(total, 4_177 + 7_494 + 8_124 + 19_020 + 43_500 + 67_557);
+}

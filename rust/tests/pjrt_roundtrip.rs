@@ -1,0 +1,117 @@
+//! Integration: the AOT jax/Pallas PJRT path must agree with the native
+//! rust featurizer and with the python ref oracle (transitively, since the
+//! python tests pin pallas == ref).
+//!
+//! Requires `make artifacts` to have run; tests are skipped (pass
+//! trivially) when the manifest is missing so `cargo test` works in a
+//! fresh checkout.
+
+use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+use gzk::linalg::Mat;
+use gzk::rng::Rng;
+use gzk::runtime::{default_artifact_dir, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping PJRT test: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open runtime"))
+}
+
+#[test]
+fn featurize_matches_native_d3() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().find_featurize("gaussian", 3).expect("d3 artifact").clone();
+    let table = RadialTable::gaussian(3, art.q, art.s);
+    let m = art.block_m * 2; // two direction chunks
+    let native = GegenbauerFeatures::new(table, m, 424242);
+    let mut rng = Rng::new(9);
+    let x = Mat::from_fn(50, 3, |_, _| rng.normal() * 0.7); // odd row count -> padding path
+    let z_native = native.featurize(&x);
+    let z_pjrt = rt.featurize("gaussian", &x, native.directions()).expect("pjrt featurize");
+    assert_eq!(z_pjrt.rows(), 50);
+    assert_eq!(z_pjrt.cols(), m * art.s);
+    // f32 vs f64 tolerance
+    let scale = z_native.data().iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+    let err = z_native.max_abs_diff(&z_pjrt);
+    assert!(err < 1e-4 * scale.max(1.0), "max diff {err} (scale {scale})");
+}
+
+#[test]
+fn featurize_matches_native_d9() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().find_featurize("gaussian", 9).expect("d9 artifact").clone();
+    let table = RadialTable::gaussian(9, art.q, art.s);
+    let native = GegenbauerFeatures::new(table, art.block_m, 77);
+    let mut rng = Rng::new(10);
+    let x = Mat::from_fn(300, 9, |_, _| rng.normal() * 0.3); // > one row block
+    let z_native = native.featurize(&x);
+    let z_pjrt = rt.featurize("gaussian", &x, native.directions()).expect("pjrt featurize");
+    let err = z_native.max_abs_diff(&z_pjrt);
+    assert!(err < 1e-4, "max diff {err}");
+}
+
+#[test]
+fn gram_from_pjrt_features_approximates_kernel() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let art = rt.manifest().find_featurize("gaussian", 3).unwrap().clone();
+    let table = RadialTable::gaussian(3, art.q, art.s);
+    let m = art.block_m * 8;
+    let native = GegenbauerFeatures::new(table, m, 5);
+    let mut rng = Rng::new(11);
+    let x = Mat::from_fn(24, 3, |_, _| rng.normal() * 0.5);
+    let z = rt.featurize("gaussian", &x, native.directions()).unwrap();
+    let k_hat = z.matmul_nt(&z);
+    let k = gzk::kernels::Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
+    let err = k_hat.max_abs_diff(&k);
+    assert!(err < 0.25, "gram error {err}");
+}
+
+#[test]
+fn krr_solve_artifact_matches_native_cholesky() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let f = rt.manifest().krr_solve.first().expect("krr artifact").f;
+    let mut rng = Rng::new(12);
+    let a = Mat::from_fn(f, f, |_, _| rng.normal() / (f as f64).sqrt());
+    let mut g = a.matmul_tn(&a);
+    g.symmetrize_from_upper();
+    let b: Vec<f64> = (0..f).map(|_| rng.normal()).collect();
+    let lambda = 0.5;
+    let w_pjrt = rt.krr_solve(&g, &b, lambda).expect("pjrt solve");
+    let mut g_reg = g.clone();
+    g_reg.add_diag(lambda);
+    let chol = gzk::linalg::Cholesky::new(&g_reg).unwrap();
+    let w_native = chol.solve(&b);
+    // f32 solve tolerance on a well-conditioned system
+    let wmax = w_native.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+    for (i, (p, n)) in w_pjrt.iter().zip(&w_native).enumerate() {
+        assert!((p - n).abs() < 5e-3 * wmax.max(1.0), "w[{i}]: {p} vs {n}");
+    }
+}
+
+#[test]
+fn all_manifest_featurize_artifacts_load_and_run() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(13);
+    for art in rt.manifest().featurize.clone() {
+        let x = Mat::from_fn(8, art.d, |_, _| rng.normal() * 0.4);
+        // table family must match the artifact — this also cross-checks the
+        // rust Gauss-Jacobi NTK coefficients against scipy's (python side)
+        let table = match art.family.as_str() {
+            "gaussian" => RadialTable::gaussian(art.d, art.q, art.s),
+            "ntk" => RadialTable::ntk(art.d, art.q, 2),
+            other => panic!("unknown artifact family {other}"),
+        };
+        let native = GegenbauerFeatures::new(table, art.block_m, 1000 + art.d as u64);
+        let z = rt
+            .featurize(&art.family, &x, native.directions())
+            .unwrap_or_else(|e| panic!("{}: {e}", art.name));
+        assert_eq!(z.cols(), art.block_m * art.s, "{}", art.name);
+        assert!(z.data().iter().all(|v| v.is_finite()), "{}", art.name);
+        let z_native = native.featurize(&x);
+        let err = z_native.max_abs_diff(&z);
+        assert!(err < 2e-4, "{}: {err}", art.name);
+    }
+}
