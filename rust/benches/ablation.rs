@@ -1,30 +1,49 @@
 //! Ablation bench: the design choices behind the Gegenbauer features —
-//! truncation degree q, radial order s, and direction count m — swept
-//! independently on the elevation workload. This is the empirical face of
-//! Theorems 11/12: q and s control truncation BIAS, m controls VARIANCE.
+//! truncation degree q, radial order s, and feature budget m — swept
+//! independently on the elevation workload, plus a registry-wide method
+//! comparison at a fixed budget. This is the empirical face of Theorems
+//! 11/12: q and s control truncation BIAS, m controls VARIANCE.
+//!
+//! All featurizers are built through `FeatureSpec`, so the final table
+//! automatically covers any newly registered method.
 //!
 //! Run: cargo bench --bench ablation
 
 use gzk::bench::Table;
 use gzk::data;
-use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use gzk::kernels::Kernel;
 use gzk::krr::{mse, FeatureRidge};
 use gzk::linalg::Mat;
 use gzk::rng::Rng;
 use gzk::spectral::spectral_epsilon;
 
+fn gaussian() -> KernelSpec {
+    KernelSpec::Gaussian { bandwidth: 1.0 }
+}
+
 fn elevation_task(n: usize) -> (Mat, Vec<f64>, Mat, Vec<f64>) {
     let ds = data::elevation(n, 3);
     data::split(&ds.x, &ds.y, 0.2, 3)
 }
 
-fn krr_mse(q: usize, s: usize, m: usize, xtr: &Mat, ytr: &[f64], xte: &Mat, yte: &[f64]) -> f64 {
-    let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, q, s), m / s.max(1), 7);
+fn spec_mse(
+    spec: &FeatureSpec,
+    xtr: &Mat,
+    ytr: &[f64],
+    xte: &Mat,
+    yte: &[f64],
+) -> f64 {
+    let feat = spec.build_with_data(xtr);
     let ztr = feat.featurize(xtr);
     let zte = feat.featurize(xte);
     let model = FeatureRidge::fit(&ztr, ytr, 1e-2 * ytr.len() as f64 / 1000.0);
     mse(&model.predict(&zte), yte)
+}
+
+fn krr_mse(q: usize, s: usize, m: usize, xtr: &Mat, ytr: &[f64], xte: &Mat, yte: &[f64]) -> f64 {
+    let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q, s }, m, 7);
+    spec_mse(&spec, xtr, ytr, xte, yte)
 }
 
 fn main() {
@@ -44,7 +63,7 @@ fn main() {
     }
     t.print();
 
-    println!("\n== ablation: direction count m (q = 12, s = 2) ==");
+    println!("\n== ablation: feature budget m (q = 12, s = 2) ==");
     let mut t = Table::new(vec!["features", "test mse"]);
     for m in [64usize, 128, 256, 512, 1024, 2048] {
         t.row(vec![m.to_string(), format!("{:.4}", krr_mse(12, 2, m, &xtr, &ytr, &xte, &yte))]);
@@ -58,10 +77,22 @@ fn main() {
     let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
     let mut t = Table::new(vec!["q", "s", "eps"]);
     for (q, s) in [(4usize, 1usize), (8, 1), (8, 2), (12, 2), (14, 4), (16, 6)] {
-        let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, q, s), 4096 / s, 11);
-        let z = feat.featurize(&x);
+        let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q, s }, 4096, 11);
+        let z = spec.build(3).featurize(&x);
         let eps = spectral_epsilon(&k, &z.matmul_nt(&z), 0.1);
         t.row(vec![q.to_string(), s.to_string(), format!("{:.3}", eps)]);
+    }
+    t.print();
+
+    // every registered method at the ablation's default budget — the
+    // cross-method face of the same workload
+    println!("\n== registry sweep: test mse per method (m = 512) ==");
+    let mut t = Table::new(vec!["method", "F", "test mse"]);
+    for (i, method) in Method::registry().into_iter().enumerate() {
+        let spec = FeatureSpec::new(gaussian(), method.tuned(12, 2), 512, 20 + i as u64);
+        let feat_dim = spec.feature_dim();
+        let err = spec_mse(&spec, &xtr, &ytr, &xte, &yte);
+        t.row(vec![spec.method.name().to_string(), feat_dim.to_string(), format!("{err:.4}")]);
     }
     t.print();
 }

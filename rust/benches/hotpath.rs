@@ -1,29 +1,62 @@
-//! Bench: hot-path microbenchmarks for the §Perf pass — native Gegenbauer
-//! featurization throughput vs a pure-matmul roofline of equal flop count,
-//! plus the serving batcher's latency under load.
+//! Bench: hot-path microbenchmarks for the §Perf pass — featurization
+//! throughput for every method in the registry, the native Gegenbauer
+//! config sweep vs a pure-matmul roofline of equal flop count, plus the
+//! serving batcher's latency under load.
 //! Run: cargo bench --bench hotpath
 
 use gzk::bench::{fmt_secs, time_it, Table};
-use gzk::coordinator::{Family, FeatureSpec, PredictionService};
-use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+use gzk::coordinator::PredictionService;
+use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use gzk::krr::FeatureRidge;
 use gzk::linalg::Mat;
 use gzk::rng::Rng;
 use std::time::Duration;
 
+fn gaussian() -> KernelSpec {
+    KernelSpec::Gaussian { bandwidth: 1.0 }
+}
+
+/// Every registered method at one budget — a newly registered featurizer
+/// shows up here with no bench changes.
+fn registry_bench() {
+    println!("== featurize throughput, every registered method ==");
+    let (d, n, budget) = (3usize, 2048usize, 512usize);
+    let mut rng = Rng::new(2);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.5);
+    let mut t = Table::new(vec!["method", "F", "rows/s", "Mfeat/s", "time/call"]);
+    for method in Method::registry() {
+        let spec = FeatureSpec::new(gaussian(), method.tuned(12, 2), budget, 1);
+        let feat = spec.build_with_data(&x);
+        let timing = time_it(1, 5, || feat.featurize(&x));
+        let rows_per_s = n as f64 / timing.median;
+        t.row(vec![
+            feat.name().to_string(),
+            feat.dim().to_string(),
+            format!("{rows_per_s:.0}"),
+            format!("{:.1}", rows_per_s * feat.dim() as f64 / 1e6),
+            fmt_secs(timing.median),
+        ]);
+    }
+    t.print();
+}
+
 fn featurize_bench() {
-    println!("== featurize hot path ==");
+    println!("\n== gegenbauer hot path (budget = directions x s) ==");
     let mut t = Table::new(vec!["config", "rows/s", "Mfeat/s", "time/call"]);
-    for (d, q, s, m, n) in [(3usize, 12usize, 2usize, 512usize, 2048usize), (9, 8, 2, 512, 2048), (42, 4, 1, 512, 1024)] {
-        let table = RadialTable::gaussian(d, q, s);
-        let feat = GegenbauerFeatures::new(table, m, 1);
+    for (d, q, s, budget, n) in [
+        (3usize, 12usize, 2usize, 1024usize, 2048usize),
+        (9, 8, 2, 1024, 2048),
+        (42, 4, 1, 512, 1024),
+    ] {
+        let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q, s }, budget, 1);
+        let feat = spec.build(d);
         let mut rng = Rng::new(2);
         let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.5);
         let timing = time_it(1, 5, || feat.featurize(&x));
         let rows_per_s = n as f64 / timing.median;
-        let feats_per_s = rows_per_s * (m * s) as f64 / 1e6;
+        let feats_per_s = rows_per_s * feat.dim() as f64 / 1e6;
         t.row(vec![
-            format!("d={d} q={q} s={s} m={m}"),
+            format!("d={d} q={q} s={s} F={}", feat.dim()),
             format!("{rows_per_s:.0}"),
             format!("{feats_per_s:.1}"),
             fmt_secs(timing.median),
@@ -34,7 +67,8 @@ fn featurize_bench() {
     // roofline comparison: featurize vs equal-flop matmul
     // featurize flops ~= n * m * (d + 3q + 2qs); matmul (n x k)(k x m): 2nkm
     let (d, q, s, m, n) = (3usize, 12usize, 2usize, 512usize, 2048usize);
-    let feat = GegenbauerFeatures::new(RadialTable::gaussian(d, q, s), m, 1);
+    let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q, s }, m * s, 1);
+    let feat = spec.build(d);
     let mut rng = Rng::new(3);
     let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.5);
     let tf = time_it(1, 5, || feat.featurize(&x));
@@ -53,14 +87,7 @@ fn featurize_bench() {
 
 fn serving_bench() {
     println!("\n== serving batcher ==");
-    let spec = FeatureSpec {
-        family: Family::Gaussian { bandwidth: 1.0 },
-        d: 3,
-        q: 12,
-        s: 2,
-        m: 256,
-        seed: 1,
-    };
+    let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 12, s: 2 }, 512, 1).bind(3);
     let mut rng = Rng::new(4);
     let x = Mat::from_fn(512, 3, |_, _| rng.normal() * 0.5);
     let y: Vec<f64> = (0..512).map(|i| x[(i, 0)]).collect();
@@ -90,6 +117,7 @@ fn serving_bench() {
 }
 
 fn main() {
+    registry_bench();
     featurize_bench();
     serving_bench();
 }

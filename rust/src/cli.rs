@@ -1,7 +1,14 @@
 //! Tiny CLI argument parser (clap is not in the offline registry).
 //!
 //! Grammar: `gzk <subcommand> [--flag value]... [--switch]...`
+//!
+//! Besides generic flag access, this module owns the shared featurizer
+//! flag group — `--kernel/--method/--m/--seed` plus the per-kernel and
+//! per-method tuning knobs — parsed once into a
+//! [`FeatureSpec`](crate::features::FeatureSpec) by [`Args::feature_spec`],
+//! so no subcommand re-implements featurizer construction.
 
+use crate::features::{FeatureSpec, KernelSpec, Method};
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default)]
@@ -40,20 +47,79 @@ impl Args {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Parse a flag value, panicking (with the flag name) on malformed
+    /// input instead of silently falling back to the default — a typo'd
+    /// `--m 10k24` must not quietly run with m = 1024.
+    fn parsed<T: std::str::FromStr>(&self, name: &str, default: T, kind: &str) -> T {
+        match self.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("flag --{name}: cannot parse {v:?} as {kind}")
+            }),
+        }
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed(name, default, "an unsigned integer")
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed(name, default, "a number")
     }
 
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed(name, default, "an unsigned integer")
     }
 
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
+    }
+
+    /// The shared featurizer flag group, parsed once into a `FeatureSpec`:
+    ///
+    /// ```text
+    /// --kernel gaussian|exponential|polynomial|ntk   (default gaussian)
+    ///   --bandwidth F   Gaussian bandwidth            (default 1.0)
+    ///   --gamma F       exponential rate              (default 1.0)
+    ///   --poly-p N --poly-c F   polynomial degree/offset
+    ///   --depth N       NTK depth                     (default 2)
+    /// --method <registry name>                        (default gegenbauer)
+    ///   --q N --s N     Gegenbauer truncation / radial order
+    ///   --taylor-deg N  PolySketch Taylor degree      (default 6)
+    ///   --nystrom-lambda F                            (default 1e-3)
+    /// --m N             feature budget                (default per command)
+    /// --seed N                                        (default per command)
+    /// ```
+    pub fn feature_spec(&self, default_m: usize, default_seed: u64) -> Result<FeatureSpec, String> {
+        let kernel = match self.get("kernel").unwrap_or("gaussian") {
+            "gaussian" => KernelSpec::Gaussian { bandwidth: self.get_f64("bandwidth", 1.0) },
+            "exponential" => KernelSpec::Exponential { gamma: self.get_f64("gamma", 1.0) },
+            "polynomial" => KernelSpec::Polynomial {
+                p: self.get_usize("poly-p", 2),
+                c: self.get_f64("poly-c", 1.0),
+            },
+            "ntk" => KernelSpec::Ntk { depth: self.get_usize("depth", 2) },
+            other => return Err(format!("unknown --kernel {other:?}")),
+        };
+        let method = match Method::from_name(self.get("method").unwrap_or(Method::GEGENBAUER))? {
+            Method::Gegenbauer { .. } => Method::Gegenbauer {
+                q: self.get_usize("q", 12),
+                s: self.get_usize("s", 2),
+            },
+            Method::PolySketch { .. } => {
+                Method::PolySketch { degree: self.get_usize("taylor-deg", 6) }
+            }
+            Method::Nystrom { .. } => {
+                Method::Nystrom { lambda: self.get_f64("nystrom-lambda", 1e-3) }
+            }
+            other => other,
+        };
+        Ok(FeatureSpec::new(
+            kernel,
+            method,
+            self.get_usize("m", default_m),
+            self.get_u64("seed", default_seed),
+        ))
     }
 }
 
@@ -91,5 +157,55 @@ mod tests {
     #[test]
     fn rejects_bare_positional() {
         assert!(Args::parse(vec!["cmd".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "flag --m")]
+    fn malformed_usize_panics_with_flag_name() {
+        parse("serve --m 10k24").get_usize("m", 512);
+    }
+
+    #[test]
+    #[should_panic(expected = "flag --lambda")]
+    fn malformed_f64_panics_with_flag_name() {
+        parse("spectral --lambda o.1").get_f64("lambda", 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "flag --seed")]
+    fn malformed_u64_panics_with_flag_name() {
+        parse("serve --seed -3").get_u64("seed", 1);
+    }
+
+    #[test]
+    fn feature_spec_defaults_to_gegenbauer_gaussian() {
+        let a = parse("serve");
+        let spec = a.feature_spec(512, 7).unwrap();
+        assert_eq!(spec.kernel, KernelSpec::Gaussian { bandwidth: 1.0 });
+        assert_eq!(spec.method, Method::Gegenbauer { q: 12, s: 2 });
+        assert_eq!((spec.m, spec.seed), (512, 7));
+    }
+
+    #[test]
+    fn feature_spec_parses_full_flag_group() {
+        let a = parse("serve --kernel exponential --gamma 0.5 --method gegenbauer --q 9 --s 3 --m 256 --seed 11");
+        let spec = a.feature_spec(512, 7).unwrap();
+        assert_eq!(spec.kernel, KernelSpec::Exponential { gamma: 0.5 });
+        assert_eq!(spec.method, Method::Gegenbauer { q: 9, s: 3 });
+        assert_eq!((spec.m, spec.seed), (256, 11));
+    }
+
+    #[test]
+    fn feature_spec_method_knobs() {
+        let a = parse("x --method polysketch --taylor-deg 4");
+        assert_eq!(a.feature_spec(64, 1).unwrap().method, Method::PolySketch { degree: 4 });
+        let a = parse("x --method nystrom --nystrom-lambda 0.01");
+        assert_eq!(a.feature_spec(64, 1).unwrap().method, Method::Nystrom { lambda: 0.01 });
+    }
+
+    #[test]
+    fn feature_spec_rejects_unknown_names() {
+        assert!(parse("x --kernel sobolev").feature_spec(64, 1).is_err());
+        assert!(parse("x --method svm").feature_spec(64, 1).is_err());
     }
 }

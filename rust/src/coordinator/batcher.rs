@@ -5,7 +5,7 @@
 //! request on its own reply channel.
 
 use super::protocol::FeatureSpec;
-use crate::features::{Featurizer, GegenbauerFeatures};
+use crate::features::Featurizer;
 use crate::krr::FeatureRidge;
 use crate::linalg::Mat;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -64,7 +64,8 @@ impl PredictionService {
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let metrics_thread = Arc::clone(&metrics);
         let handle = std::thread::spawn(move || {
-            let feat: GegenbauerFeatures = spec.build();
+            // registry-built: serves any oblivious method's model
+            let feat: Box<dyn Featurizer> = spec.build();
             let d = spec.d;
             let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
             'serve: loop {
@@ -101,8 +102,7 @@ impl PredictionService {
                 for (i, req) in pending.iter().enumerate() {
                     x.row_mut(i).copy_from_slice(&req.x);
                 }
-                let xs = spec.scale_inputs(&x);
-                let z = feat.featurize(&xs);
+                let z = feat.featurize(&x);
                 let preds = model.predict(&z);
                 // metrics BEFORE replying: once a client holds its answer,
                 // the request is guaranteed to be counted (tested by
@@ -156,18 +156,17 @@ impl Drop for PredictionService {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::protocol::Family;
+    use crate::coordinator::protocol::{KernelSpec, Method};
     use crate::rng::Rng;
 
     fn trained() -> (FeatureSpec, FeatureRidge, Mat, Vec<f64>) {
-        let spec = FeatureSpec {
-            family: Family::Gaussian { bandwidth: 1.0 },
-            d: 2,
-            q: 6,
-            s: 2,
-            m: 32,
-            seed: 21,
-        };
+        let spec = crate::features::FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 6, s: 2 },
+            64,
+            21,
+        )
+        .bind(2);
         let mut rng = Rng::new(22);
         let x = Mat::from_fn(80, 2, |_, _| rng.normal());
         let y: Vec<f64> = (0..80).map(|i| x[(i, 0)] + x[(i, 1)]).collect();

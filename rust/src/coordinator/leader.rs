@@ -99,8 +99,7 @@ pub fn fit_one_round(
         let feat = spec.build();
         for (sid, &(lo, hi)) in shard_ranges.iter().enumerate() {
             if !seen[sid] {
-                let xs = spec.scale_inputs(&x.row_block(lo, hi));
-                let z = feat.featurize(&xs);
+                let z = feat.featurize(&x.row_block(lo, hi));
                 merged.absorb(&z, &y[lo..hi]);
                 recovered_shards += 1;
             }
@@ -123,20 +122,19 @@ pub fn fit_one_round(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::protocol::Family;
+    use crate::coordinator::protocol::{KernelSpec, Method};
     use crate::features::Featurizer;
     use crate::krr::FeatureRidge;
     use crate::rng::Rng;
 
     fn spec() -> FeatureSpec {
-        FeatureSpec {
-            family: Family::Gaussian { bandwidth: 1.0 },
-            d: 3,
-            q: 8,
-            s: 2,
-            m: 48,
-            seed: 5,
-        }
+        crate::features::FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 8, s: 2 },
+            96,
+            5,
+        )
+        .bind(3)
     }
 
     fn dataset(n: usize) -> (Mat, Vec<f64>) {
@@ -185,6 +183,27 @@ mod tests {
         for (a, b) in flaky.model.weights.iter().zip(&clean.model.weights) {
             assert!((a - b).abs() < 1e-9, "recovered fit differs: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn non_gegenbauer_method_over_the_wire() {
+        // the widened protocol: a Fourier spec broadcast through the same
+        // one-round machinery reproduces the single-node fit exactly
+        let (x, y) = dataset(48);
+        let spec = crate::features::FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Fourier,
+            64,
+            9,
+        )
+        .bind(3);
+        let fit = fit_one_round(&spec, &x, &y, 0.01, 3, 7, Backend::Native);
+        let z = spec.build().featurize(&x);
+        let reference = FeatureRidge::fit(&z, &y, 0.01);
+        for (a, b) in fit.model.weights.iter().zip(&reference.weights) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert_eq!(fit.stats.n, 48);
     }
 
     #[test]

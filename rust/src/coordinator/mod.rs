@@ -1,20 +1,26 @@
-//! L3 coordinator — the system the paper's data-oblivious features enable.
+//! L3 coordinator — the system the registry's data-oblivious features
+//! enable.
 //!
-//! * [`protocol`] — the broadcast `FeatureSpec` and the shard/stats types;
+//! * [`protocol`] — the broadcast `FeatureSpec` (a re-export of
+//!   [`crate::features::BoundSpec`]) and the shard/stats types;
 //! * [`worker`] — worker threads (native or PJRT featurization backend);
-//! * [`leader`] — one-round distributed KRR: broadcast seed, one reduction;
+//! * [`leader`] — one-round distributed KRR: broadcast spec, one reduction;
 //! * [`streaming`] — single-pass streaming KRR with backpressure;
 //! * [`batcher`] — dynamic batcher serving predictions.
 //!
 //! ```
-//! use gzk::coordinator::{fit_one_round, Backend, Family, FeatureSpec};
+//! use gzk::coordinator::{fit_one_round, Backend};
+//! use gzk::features::{FeatureSpec, KernelSpec, Method};
 //! use gzk::linalg::Mat;
 //! use gzk::rng::Rng;
 //!
-//! let spec = FeatureSpec {
-//!     family: Family::Gaussian { bandwidth: 1.0 },
-//!     d: 3, q: 8, s: 2, m: 32, seed: 5,
-//! };
+//! let spec = FeatureSpec::new(
+//!     KernelSpec::Gaussian { bandwidth: 1.0 },
+//!     Method::Gegenbauer { q: 8, s: 2 },
+//!     /* feature budget */ 64,
+//!     /* seed */ 5,
+//! )
+//! .bind(/* d = */ 3);
 //! let mut rng = Rng::new(1);
 //! let x = Mat::from_fn(40, 3, |_, _| rng.normal());
 //! let y: Vec<f64> = (0..40).map(|i| x[(i, 0)]).collect();
@@ -32,6 +38,6 @@ pub mod worker;
 
 pub use batcher::{PredictionService, ServeMetrics, ServiceClient};
 pub use leader::{fit_one_round, DistributedFit};
-pub use protocol::{Family, FeatureSpec, ShardStats, ShardTask};
+pub use protocol::{FeatureSpec, KernelSpec, Method, ShardStats, ShardTask};
 pub use streaming::{StreamBatch, StreamHandle, StreamingKrr};
 pub use worker::{Backend, WorkerConfig};

@@ -1,89 +1,23 @@
 //! Typed protocol of the one-round distributed featurization system.
 //!
-//! The paper's random features are *data-oblivious*: the entire feature map
-//! is determined by `(FeatureSpec)` — table parameters plus a seed. That is
-//! the whole point of the protocol: the leader broadcasts the spec (a few
-//! bytes), workers derive identical direction sets locally, and the only
-//! data that ever travels is the additive sufficient statistics
-//! `(Z^T Z, Z^T y, n)` of size O(F^2), independent of shard size.
+//! The registry's feature maps are *data-oblivious*: the entire feature
+//! map is determined by a [`FeatureSpec`] — kernel + method + budget +
+//! seed, bound to an input dimension. That is the whole point of the
+//! protocol: the leader broadcasts the spec (a few bytes of JSON — see
+//! [`FeatureSpec::to_json`]), workers derive identical feature maps
+//! locally through the `features::spec` registry, and the only data that
+//! ever travels is the additive sufficient statistics `(Z^T Z, Z^T y, n)`
+//! of size O(F^2), independent of shard size.
+//!
+//! The wire spec is a thin re-export of [`crate::features::BoundSpec`]:
+//! any registered *oblivious* method (Gegenbauer, Fourier, FastFood,
+//! PolySketch, Maclaurin) can be broadcast; the data-dependent Nystrom
+//! baseline cannot — which is exactly the paper's §1.2 contrast.
 
-use crate::features::{GegenbauerFeatures, RadialTable};
+pub use crate::features::{BoundSpec as FeatureSpec, KernelSpec, Method};
+
 use crate::krr::RidgeStats;
 use crate::linalg::Mat;
-
-/// Kernel family selector for the GZK radial tables.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Family {
-    /// Gaussian with bandwidth sigma (inputs are scaled by 1/sigma).
-    Gaussian { bandwidth: f64 },
-    /// exp(gamma <x,y>)
-    Exponential { gamma: f64 },
-    /// (<x,y> + c)^p — exact GZK of degree p (q/s are derived from p)
-    Polynomial { p: usize, c: f64 },
-    /// depth-L ReLU NTK
-    Ntk { depth: usize },
-}
-
-impl Family {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Family::Gaussian { .. } => "gaussian",
-            Family::Exponential { .. } => "exponential",
-            Family::Polynomial { .. } => "polynomial",
-            Family::Ntk { .. } => "ntk",
-        }
-    }
-}
-
-/// Everything needed to reconstruct the feature map anywhere — the
-/// broadcast message of the one-round protocol.
-#[derive(Clone, Debug)]
-pub struct FeatureSpec {
-    pub family: Family,
-    pub d: usize,
-    /// Gegenbauer truncation degree
-    pub q: usize,
-    /// radial order
-    pub s: usize,
-    /// number of random directions (feature dim = m * s)
-    pub m: usize,
-    pub seed: u64,
-}
-
-impl FeatureSpec {
-    pub fn feature_dim(&self) -> usize {
-        self.m * self.s
-    }
-
-    pub fn radial_table(&self) -> RadialTable {
-        match self.family {
-            Family::Gaussian { .. } => RadialTable::gaussian(self.d, self.q, self.s),
-            Family::Exponential { gamma } => {
-                RadialTable::exponential(self.d, self.q, self.s, gamma)
-            }
-            Family::Polynomial { p, c } => RadialTable::polynomial(self.d, p, c),
-            Family::Ntk { depth } => RadialTable::ntk(self.d, self.q, depth),
-        }
-    }
-
-    /// Input preprocessing implied by the family (bandwidth folding).
-    pub fn scale_inputs(&self, x: &Mat) -> Mat {
-        match self.family {
-            Family::Gaussian { bandwidth } if bandwidth != 1.0 => {
-                let mut y = x.clone();
-                y.scale(1.0 / bandwidth);
-                y
-            }
-            _ => x.clone(),
-        }
-    }
-
-    /// Build the native featurizer. Every holder of the same spec builds a
-    /// bit-identical map (tested in `determinism_across_builders`).
-    pub fn build(&self) -> GegenbauerFeatures {
-        GegenbauerFeatures::new(self.radial_table(), self.m, self.seed)
-    }
-}
 
 /// Work item sent to a worker: a shard of rows plus targets.
 pub struct ShardTask {
@@ -104,37 +38,62 @@ pub struct ShardStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::features::Featurizer as _;
-    use crate::rng::Rng;
+    use crate::features::{FeatureSpec as Spec, Featurizer as _};
+
+    fn gaussian_geg(m: usize, seed: u64) -> Spec {
+        Spec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 8, s: 2 },
+            m,
+            seed,
+        )
+    }
 
     #[test]
     fn determinism_across_builders() {
-        let spec = FeatureSpec {
-            family: Family::Gaussian { bandwidth: 1.0 },
-            d: 3,
-            q: 8,
-            s: 2,
-            m: 64,
-            seed: 99,
-        };
+        // the broadcast invariant: every holder of the same spec builds a
+        // bit-identical feature map — including a holder that received the
+        // spec over the wire (encode -> decode -> build)
+        let spec = gaussian_geg(128, 99).bind(3);
         let f1 = spec.build();
         let f2 = spec.build();
-        assert_eq!(f1.directions(), f2.directions());
-        let mut rng = Rng::new(1);
+        let wire = FeatureSpec::from_json(&spec.to_json()).expect("wire decode");
+        assert_eq!(wire, spec);
+        let f3 = wire.build();
+        let mut rng = crate::rng::Rng::new(1);
         let x = Mat::from_fn(5, 3, |_, _| rng.normal());
-        assert_eq!(f1.featurize(&x), f2.featurize(&x));
+        let z1 = f1.featurize(&x);
+        assert_eq!(z1, f2.featurize(&x));
+        assert_eq!(z1, f3.featurize(&x));
+    }
+
+    #[test]
+    fn determinism_for_non_gegenbauer_methods() {
+        // the same invariant for every other oblivious registry method
+        let mut rng = crate::rng::Rng::new(2);
+        let x = Mat::from_fn(6, 4, |_, _| rng.normal());
+        for method in Method::registry().into_iter().filter(|m| m.is_oblivious()) {
+            let spec =
+                Spec::new(KernelSpec::Gaussian { bandwidth: 1.0 }, method, 64, 7).bind(4);
+            let wire = FeatureSpec::from_json(&spec.to_json()).expect("wire decode");
+            assert_eq!(
+                spec.build().featurize(&x),
+                wire.build().featurize(&x),
+                "{}",
+                spec.spec.method.name()
+            );
+        }
     }
 
     #[test]
     fn bandwidth_scaling() {
-        let spec = FeatureSpec {
-            family: Family::Gaussian { bandwidth: 2.0 },
-            d: 2,
-            q: 6,
-            s: 2,
-            m: 16,
-            seed: 1,
-        };
+        let spec = Spec::new(
+            KernelSpec::Gaussian { bandwidth: 2.0 },
+            Method::Gegenbauer { q: 6, s: 2 },
+            32,
+            1,
+        )
+        .bind(2);
         let x = Mat::from_vec(1, 2, vec![4.0, 2.0]);
         let xs = spec.scale_inputs(&x);
         assert_eq!(xs.row(0), &[2.0, 1.0]);
@@ -142,15 +101,15 @@ mod tests {
 
     #[test]
     fn feature_dim() {
-        let spec = FeatureSpec {
-            family: Family::Ntk { depth: 2 },
-            d: 4,
-            q: 10,
-            s: 1,
-            m: 128,
-            seed: 0,
-        };
+        let spec = Spec::new(
+            KernelSpec::Ntk { depth: 2 },
+            Method::Gegenbauer { q: 10, s: 1 },
+            128,
+            0,
+        )
+        .bind(4);
         assert_eq!(spec.feature_dim(), 128);
-        assert_eq!(spec.radial_table().s, 1);
+        // NTK tables are single-channel regardless of the requested s
+        assert_eq!(spec.spec.radial_table(4).unwrap().s, 1);
     }
 }

@@ -7,7 +7,7 @@
 //! consumer (featurize + absorb) falls behind.
 
 use super::protocol::FeatureSpec;
-use crate::features::{Featurizer, GegenbauerFeatures};
+use crate::features::Featurizer;
 use crate::krr::{FeatureRidge, RidgeStats};
 use crate::linalg::Mat;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -51,11 +51,12 @@ impl StreamingKrr {
         let (tx, rx): (SyncSender<StreamBatch>, Receiver<StreamBatch>) =
             sync_channel(queue_batches.max(1));
         let consumer = std::thread::spawn(move || {
-            let feat: GegenbauerFeatures = spec.build();
+            // any registered oblivious method: the registry-built
+            // featurizer consumes raw rows (bandwidth folding included)
+            let feat: Box<dyn Featurizer> = spec.build();
             let mut stats = RidgeStats::new(spec.feature_dim());
             for batch in rx {
-                let xs = spec.scale_inputs(&batch.x);
-                let z = feat.featurize(&xs);
+                let z = feat.featurize(&batch.x);
                 stats.absorb(&z, &batch.y);
             }
             stats
@@ -78,19 +79,18 @@ impl StreamingKrr {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::protocol::Family;
+    use crate::coordinator::protocol::{KernelSpec, Method};
     use crate::krr::FeatureRidge;
     use crate::rng::Rng;
 
     fn spec() -> FeatureSpec {
-        FeatureSpec {
-            family: Family::Gaussian { bandwidth: 1.0 },
-            d: 2,
-            q: 6,
-            s: 2,
-            m: 24,
-            seed: 8,
-        }
+        crate::features::FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 6, s: 2 },
+            48,
+            8,
+        )
+        .bind(2)
     }
 
     #[test]

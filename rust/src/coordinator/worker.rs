@@ -2,11 +2,14 @@
 //! additive sufficient statistics.
 //!
 //! Each worker is a plain OS thread (tokio is not available offline and the
-//! workload is CPU-bound). A worker may featurize through either backend:
+//! workload is CPU-bound). A worker rebuilds its featurizer from the
+//! broadcast [`FeatureSpec`] through the `features::spec` registry — any
+//! data-oblivious method works — and may featurize through either backend:
 //!
-//! * native — the pure-rust hot path in `features::gegenbauer`;
+//! * native — the registry-built featurizer (the pure-rust hot path);
 //! * PJRT   — the AOT jax/Pallas executable, one `Runtime` per worker
-//!            thread (PJRT handles are not Send).
+//!            thread (PJRT handles are not Send). Only the Gegenbauer
+//!            method has AOT artifacts; other methods fall back to native.
 //!
 //! Both backends produce the same feature map for the same `FeatureSpec`
 //! (checked in `rust/tests/pjrt_roundtrip.rs`).
@@ -39,34 +42,50 @@ pub struct WorkerConfig {
 }
 
 enum BackendState {
-    Native(GegenbauerFeatures),
-    Pjrt { runtime: Runtime, w: Mat, family: &'static str, native: GegenbauerFeatures },
+    Native(Box<dyn Featurizer>),
+    Pjrt {
+        runtime: Runtime,
+        /// unscaled Gegenbauer map (the artifact consumes raw directions)
+        geg: GegenbauerFeatures,
+        family: &'static str,
+        /// registry-built native featurizer for artifact-miss fallback
+        fallback: Box<dyn Featurizer>,
+    },
 }
 
 impl BackendState {
     fn new(cfg: &WorkerConfig) -> Self {
-        let native = cfg.spec.build();
         match &cfg.backend {
-            Backend::Native | Backend::Flaky { .. } => BackendState::Native(native),
-            Backend::Pjrt { artifact_dir } => {
-                let runtime = Runtime::open(artifact_dir).expect("open PJRT runtime");
-                let w = native.directions().clone();
-                BackendState::Pjrt { runtime, w, family: cfg.spec.family.name(), native }
-            }
+            Backend::Native | Backend::Flaky { .. } => BackendState::Native(cfg.spec.build()),
+            Backend::Pjrt { artifact_dir } => match cfg.spec.build_gegenbauer() {
+                Some(geg) => {
+                    let runtime = Runtime::open(artifact_dir).expect("open PJRT runtime");
+                    BackendState::Pjrt {
+                        runtime,
+                        geg,
+                        family: cfg.spec.kernel_name(),
+                        fallback: cfg.spec.build(),
+                    }
+                }
+                // PJRT artifacts exist only for the Gegenbauer method;
+                // every other registry method runs native.
+                None => BackendState::Native(cfg.spec.build()),
+            },
         }
     }
 
     fn featurize(&self, spec: &FeatureSpec, x: &Mat) -> Mat {
-        let xs = spec.scale_inputs(x);
         match self {
-            BackendState::Native(feat) => feat.featurize(&xs),
-            BackendState::Pjrt { runtime, w, family, native } => {
-                // PJRT artifacts exist for specific (family, d, q, s); if
-                // the runtime can't serve this spec fall back to native so
-                // the protocol still completes.
-                match runtime.featurize(family, &xs, w) {
+            BackendState::Native(feat) => feat.featurize(x),
+            BackendState::Pjrt { runtime, geg, family, fallback } => {
+                // the artifact consumes pre-scaled inputs (registry-built
+                // featurizers fold the bandwidth in themselves); if the
+                // runtime can't serve this spec fall back to native so the
+                // protocol still completes.
+                let xs = spec.scale_inputs(x);
+                match runtime.featurize(family, &xs, geg.directions()) {
                     Ok(z) => z,
-                    Err(_) => native.featurize(&xs),
+                    Err(_) => fallback.featurize(x),
                 }
             }
         }
@@ -105,19 +124,18 @@ pub fn worker_loop(cfg: WorkerConfig, tasks: Receiver<ShardTask>, results: Sende
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::protocol::Family;
+    use crate::coordinator::protocol::{KernelSpec, Method};
     use crate::rng::Rng;
     use std::sync::mpsc;
 
     fn spec() -> FeatureSpec {
-        FeatureSpec {
-            family: Family::Gaussian { bandwidth: 1.0 },
-            d: 3,
-            q: 8,
-            s: 2,
-            m: 32,
-            seed: 77,
-        }
+        crate::features::FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 8, s: 2 },
+            64,
+            77,
+        )
+        .bind(3)
     }
 
     #[test]
@@ -160,5 +178,38 @@ mod tests {
         handle.join().unwrap();
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn worker_runs_every_oblivious_method() {
+        // the widened wire: any oblivious registry method works end to end
+        let mut rng = Rng::new(4);
+        let x = Mat::from_fn(9, 3, |_, _| rng.normal());
+        let y: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        for method in Method::registry().into_iter().filter(|m| m.is_oblivious()) {
+            let spec = crate::features::FeatureSpec::new(
+                KernelSpec::Gaussian { bandwidth: 1.0 },
+                method,
+                32,
+                5,
+            )
+            .bind(3);
+            let (task_tx, task_rx) = mpsc::channel();
+            let (res_tx, res_rx) = mpsc::channel();
+            let cfg = WorkerConfig { worker_id: 0, spec: spec.clone(), backend: Backend::Native };
+            let handle = std::thread::spawn(move || worker_loop(cfg, task_rx, res_tx));
+            task_tx.send(ShardTask { shard_id: 0, x: x.clone(), y: y.clone() }).unwrap();
+            drop(task_tx);
+            let reply = res_rx.recv().unwrap();
+            handle.join().unwrap();
+            let z = spec.build().featurize(&x);
+            let mut expect = RidgeStats::new(spec.feature_dim());
+            expect.absorb(&z, &y);
+            assert!(
+                reply.stats.g.max_abs_diff(&expect.g) < 1e-12,
+                "{}",
+                spec.spec.method.name()
+            );
+        }
     }
 }

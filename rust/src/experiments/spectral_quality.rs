@@ -3,7 +3,7 @@
 //! method, on a dataset small enough to eigendecompose exactly.
 
 use crate::bench::Table;
-use crate::features::{Featurizer, FourierFeatures, GegenbauerFeatures, NystromFeatures, RadialTable};
+use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::rng::Rng;
@@ -20,34 +20,23 @@ pub fn run(n: usize, d: usize, lambda: f64, seed: u64) -> (f64, Vec<SpectralRow>
     let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.6);
     let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
     let s_lambda = statistical_dimension(&k, lambda);
-    let table = RadialTable::gaussian(d, 12, 2);
+    let kernel = KernelSpec::Gaussian { bandwidth: 1.0 };
+    // the paper's three-way comparison: the oblivious pair plus the
+    // data-dependent Nystrom reference (fit with the sweep's lambda)
+    let methods =
+        [Method::Gegenbauer { q: 12, s: 2 }, Method::Fourier, Method::Nystrom { lambda }];
     let mut rows = Vec::new();
     for &m in &[64usize, 128, 256, 512, 1024, 2048] {
-        let zg = GegenbauerFeatures::new(table.clone(), m / 2, seed + m as u64).featurize(&x);
-        rows.push(SpectralRow {
-            method: "gegenbauer",
-            m,
-            eps: spectral_epsilon(&k, &zg.matmul_nt(&zg), lambda),
-        });
-        let zf = FourierFeatures::new(d, m, 1.0, seed + m as u64).featurize(&x);
-        rows.push(SpectralRow {
-            method: "fourier",
-            m,
-            eps: spectral_epsilon(&k, &zf.matmul_nt(&zf), lambda),
-        });
-        let zn = NystromFeatures::fit(
-            Kernel::Gaussian { bandwidth: 1.0 },
-            &x,
-            m.min(n),
-            lambda,
-            seed + m as u64,
-        )
-        .featurize(&x);
-        rows.push(SpectralRow {
-            method: "nystrom",
-            m: m.min(n),
-            eps: spectral_epsilon(&k, &zn.matmul_nt(&zn), lambda),
-        });
+        for method in &methods {
+            let spec = FeatureSpec::new(kernel.clone(), method.clone(), m, seed + m as u64);
+            let feat = spec.try_build(d, Some(&x)).expect("spectral sweep build");
+            let z = feat.featurize(&x);
+            rows.push(SpectralRow {
+                method: feat.name(),
+                m: feat.dim(),
+                eps: spectral_epsilon(&k, &z.matmul_nt(&z), lambda),
+            });
+        }
     }
     (s_lambda, rows)
 }
@@ -69,7 +58,11 @@ mod tests {
     #[test]
     fn eps_improves_with_m_for_each_method() {
         let (_, rows) = run(40, 3, 0.3, 17);
-        for method in ["gegenbauer", "fourier", "nystrom"] {
+        let mut methods: Vec<&'static str> = rows.iter().map(|r| r.method).collect();
+        methods.sort_unstable();
+        methods.dedup();
+        assert_eq!(methods.len(), 3);
+        for method in methods {
             let eps: Vec<f64> =
                 rows.iter().filter(|r| r.method == method).map(|r| r.eps).collect();
             let first = eps.first().copied().unwrap();

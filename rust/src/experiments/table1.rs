@@ -4,7 +4,7 @@
 //! count each random method needs to reach eps <= 0.5 on a small dataset.
 
 use crate::bench::Table;
-use crate::features::{Featurizer, FourierFeatures, GegenbauerFeatures, RadialTable};
+use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::rng::Rng;
@@ -59,19 +59,15 @@ pub fn run_empirical(n: usize, d: usize, lambda: f64, eps_target: f64, seed: u64
     let k = Kernel::Gaussian { bandwidth: 1.0 }.gram(&x);
     let s_lam = statistical_dimension(&k, lambda);
     println!("  (statistical dimension s_lambda = {s_lam:.1})");
-    let table = RadialTable::gaussian(d, 12, 3);
+    let kernel = KernelSpec::Gaussian { bandwidth: 1.0 };
     let mut out = Vec::new();
-    for method in ["gegenbauer", "fourier"] {
+    // the two data-oblivious contenders of the paper's empirical half
+    for method in [Method::Gegenbauer { q: 12, s: 3 }, Method::Fourier] {
         let mut m_needed = None;
         let mut final_eps = f64::INFINITY;
         for &m in &[64usize, 128, 256, 512, 1024, 2048, 4096] {
-            let z = match method {
-                "gegenbauer" => {
-                    GegenbauerFeatures::new(table.clone(), m / table.s, seed + m as u64)
-                        .featurize(&x)
-                }
-                _ => FourierFeatures::new(d, m, 1.0, seed + m as u64).featurize(&x),
-            };
+            let spec = FeatureSpec::new(kernel.clone(), method.clone(), m, seed + m as u64);
+            let z = spec.build(d).featurize(&x);
             let eps = spectral_epsilon(&k, &z.matmul_nt(&z), lambda);
             final_eps = eps;
             if eps <= eps_target {
@@ -79,11 +75,7 @@ pub fn run_empirical(n: usize, d: usize, lambda: f64, eps_target: f64, seed: u64
                 break;
             }
         }
-        out.push(EmpiricalRow {
-            method: if method == "gegenbauer" { "gegenbauer" } else { "fourier" },
-            m_needed,
-            final_eps,
-        });
+        out.push(EmpiricalRow { method: method.name(), m_needed, final_eps });
     }
     out
 }

@@ -1,19 +1,19 @@
 //! Table 2: kernel ridge regression with the Gaussian kernel on the four
-//! regression datasets (Elevation, CO2, Climate, Protein), comparing all
-//! six approximation methods at feature dimension m = 1024.
+//! regression datasets (Elevation, CO2, Climate, Protein), comparing every
+//! method in the featurizer registry at feature dimension m = 1024.
 //!
 //! Reported per (dataset, method): test MSE and featurization wall time —
 //! the same two columns as the paper. Datasets are the synthetic
 //! stand-ins of `data::synthetic` (DESIGN.md §6); `scale` subsamples each
 //! dataset to scale * n_paper rows to keep bench wall time sane.
+//!
+//! Methods come from [`Method::registry`], each built through
+//! [`FeatureSpec::build_with_data`] — registering a new featurizer adds a
+//! row to this table with no changes here.
 
 use crate::bench::Table;
 use crate::data::{self, Dataset};
-use crate::features::{
-    FastFoodFeatures, Featurizer, FourierFeatures, GegenbauerFeatures, MaclaurinFeatures,
-    NystromFeatures, PolySketchFeatures, RadialTable,
-};
-use crate::kernels::Kernel;
+use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use crate::krr::{mse, RidgeStats};
 use crate::linalg::Mat;
 use std::time::Instant;
@@ -86,50 +86,46 @@ fn fit_eval(z_tr: &Mat, y_tr: &[f64], z_te: &Mat, y_te: &[f64]) -> (f64, f64) {
     (mse(&model.predict(z_te), y_te), fit_secs)
 }
 
-/// Run one dataset through all six methods at feature dim `m_features`.
-pub fn run_dataset(name: &'static str, scale: f64, m_features: usize, seed: u64) -> Vec<Table2Row> {
-    let ds = make_dataset(name, scale, seed);
-    let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed ^ 0x5EED);
+/// Gegenbauer truncation knobs for a dataset: enough degrees for the
+/// bandwidth-scaled data radius, s = 2 radial channels at moderate d.
+fn gegenbauer_tuning(x_tr: &Mat, bw: f64) -> (usize, usize) {
     let d = x_tr.cols();
-    let bw = median_bandwidth(&x_tr, seed);
-    let kernel = Kernel::Gaussian { bandwidth: bw };
-
-    // scale inputs once for the unit-bandwidth GZK path
-    let mut x_tr_s = x_tr.clone();
-    x_tr_s.scale(1.0 / bw);
-    let mut x_te_s = x_te.clone();
-    x_te_s.scale(1.0 / bw);
-    let r_max = (0..x_tr_s.rows())
-        .map(|i| x_tr_s.row(i).iter().map(|v| v * v).sum::<f64>().sqrt())
+    let r_max = (0..x_tr.rows())
+        .map(|i| x_tr.row(i).iter().map(|v| v * v).sum::<f64>().sqrt() / bw)
         .fold(0.0f64, f64::max);
-    // truncation: enough degrees for the scaled radius, s = 2 channels
     let s = if d > 16 { 1 } else { 2 };
     let q = crate::features::radial::suggest_q(r_max.min(3.0), d, x_tr.rows(), 1e-3, 0.5)
         .min(16)
         .max(4);
-    let table = RadialTable::gaussian(d, q, s);
+    (q, s)
+}
+
+/// Run one dataset through every registered method at feature budget
+/// `m_features`.
+pub fn run_dataset(name: &'static str, scale: f64, m_features: usize, seed: u64) -> Vec<Table2Row> {
+    let ds = make_dataset(name, scale, seed);
+    let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed ^ 0x5EED);
+    let bw = median_bandwidth(&x_tr, seed);
+    let kernel = KernelSpec::Gaussian { bandwidth: bw };
+    let (q, s) = gegenbauer_tuning(&x_tr, bw);
 
     let mut rows = Vec::new();
-    let methods: Vec<(&'static str, Box<dyn Featurizer>)> = vec![
-        (
-            "nystrom",
-            Box::new(NystromFeatures::fit(kernel.clone(), &x_tr, m_features, 1e-3, seed + 1)),
-        ),
-        ("fourier", Box::new(FourierFeatures::new(d, m_features, bw, seed + 2))),
-        ("fastfood", Box::new(FastFoodFeatures::new(d, m_features, bw, seed + 3))),
-        ("maclaurin", Box::new(MaclaurinFeatures::new_gaussian(d, m_features, bw, seed + 4))),
-        ("polysketch", Box::new(PolySketchFeatures::new(d, m_features, 6, bw, seed + 5))),
-        ("gegenbauer", Box::new(GegenbauerFeatures::new(table, m_features / s, seed + 6))),
-    ];
-    for (mname, feat) in methods {
-        let gz = mname == "gegenbauer";
+    for (i, method) in Method::registry().into_iter().enumerate() {
+        let spec =
+            FeatureSpec::new(kernel.clone(), method.tuned(q, s), m_features, seed + 1 + i as u64);
+        let feat = spec.build_with_data(&x_tr);
         let t0 = Instant::now();
-        // gegenbauer consumes pre-scaled inputs; all others take raw inputs
-        let z_tr = feat.featurize(if gz { &x_tr_s } else { &x_tr });
+        let z_tr = feat.featurize(&x_tr);
         let featurize_secs = t0.elapsed().as_secs_f64();
-        let z_te = feat.featurize(if gz { &x_te_s } else { &x_te });
+        let z_te = feat.featurize(&x_te);
         let (err, fit_secs) = fit_eval(&z_tr, &y_tr, &z_te, &y_te);
-        rows.push(Table2Row { dataset: name, method: mname, mse: err, featurize_secs, fit_secs });
+        rows.push(Table2Row {
+            dataset: name,
+            method: feat.name(),
+            mse: err,
+            featurize_secs,
+            fit_secs,
+        });
     }
     rows
 }
@@ -163,13 +159,14 @@ mod tests {
     use super::*;
 
     #[test]
-    fn elevation_small_scale_ordering() {
-        // the paper's shape on S^2 data: gegenbauer and nystrom are the
-        // strong pair; maclaurin is the weak one
+    fn elevation_small_scale_covers_registry() {
+        // every registered method produces a row, and the paper's shape on
+        // S^2 data holds: gegenbauer is no worse than the weak maclaurin
         let rows = run_dataset("elevation", 0.02, 256, 7);
+        assert_eq!(rows.len(), Method::registry().len());
         let get = |m: &str| rows.iter().find(|r| r.method == m).unwrap().mse;
-        let geg = get("gegenbauer");
-        let mac = get("maclaurin");
+        let geg = get(Method::GEGENBAUER);
+        let mac = get(Method::MACLAURIN);
         assert!(geg.is_finite() && mac.is_finite());
         assert!(geg <= mac * 1.5, "gegenbauer {geg} vs maclaurin {mac}");
     }

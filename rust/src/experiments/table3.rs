@@ -4,14 +4,13 @@
 //! Inputs are l2-normalized (the paper's preprocessing), so all points live
 //! on S^{d-1} and the Gaussian kernel becomes a zonal kernel — the
 //! best-case regime for Gegenbauer features at low d.
+//!
+//! Methods come from [`Method::registry`], each built through
+//! [`FeatureSpec::build_with_data`].
 
 use crate::bench::Table;
 use crate::data::{clustering_dataset, ClusteringSpec, CLUSTERING_SPECS};
-use crate::features::{
-    FastFoodFeatures, Featurizer, FourierFeatures, GegenbauerFeatures, MaclaurinFeatures,
-    NystromFeatures, PolySketchFeatures, RadialTable,
-};
-use crate::kernels::Kernel;
+use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use crate::kmeans::kmeans;
 use std::time::Instant;
 
@@ -22,7 +21,12 @@ pub struct Table3Row {
     pub secs: f64,
 }
 
-pub fn run_dataset(spec: ClusteringSpec, scale: f64, m_features: usize, seed: u64) -> Vec<Table3Row> {
+pub fn run_dataset(
+    spec: ClusteringSpec,
+    scale: f64,
+    m_features: usize,
+    seed: u64,
+) -> Vec<Table3Row> {
     let scaled = ClusteringSpec {
         name: spec.name,
         n: ((spec.n as f64 * scale) as usize).max(50 * spec.k),
@@ -31,32 +35,23 @@ pub fn run_dataset(spec: ClusteringSpec, scale: f64, m_features: usize, seed: u6
     };
     let ds = clustering_dataset(scaled, seed);
     let d = spec.d;
-    let bw = 1.0; // unit-norm inputs; the paper uses a fixed Gaussian kernel
-    let kernel = Kernel::Gaussian { bandwidth: bw };
+    // unit-norm inputs; the paper uses a fixed unit-bandwidth Gaussian
+    let kernel = KernelSpec::Gaussian { bandwidth: 1.0 };
     let s = if d > 16 { 1 } else { 2 };
     // points on the sphere: radius exactly 1 -> modest q suffices
     let q = (d / 2 + 6).min(12);
-    let table = RadialTable::gaussian(d, q, s);
 
-    let methods: Vec<(&'static str, Box<dyn Featurizer>)> = vec![
-        (
-            "nystrom",
-            Box::new(NystromFeatures::fit(kernel.clone(), &ds.x, m_features, 1e-3, seed + 1)),
-        ),
-        ("fourier", Box::new(FourierFeatures::new(d, m_features, bw, seed + 2))),
-        ("fastfood", Box::new(FastFoodFeatures::new(d, m_features, bw, seed + 3))),
-        ("maclaurin", Box::new(MaclaurinFeatures::new_gaussian(d, m_features, bw, seed + 4))),
-        ("polysketch", Box::new(PolySketchFeatures::new(d, m_features, 6, bw, seed + 5))),
-        ("gegenbauer", Box::new(GegenbauerFeatures::new(table, m_features / s, seed + 6))),
-    ];
     let mut rows = Vec::new();
-    for (mname, feat) in methods {
+    for (i, method) in Method::registry().into_iter().enumerate() {
+        let fspec =
+            FeatureSpec::new(kernel.clone(), method.tuned(q, s), m_features, seed + 1 + i as u64);
+        let feat = fspec.build_with_data(&ds.x);
         let t0 = Instant::now();
         let z = feat.featurize(&ds.x);
         let res = kmeans(&z, spec.k, 50, seed ^ 0xB00);
         rows.push(Table3Row {
             dataset: spec.name,
-            method: mname,
+            method: feat.name(),
             objective: res.objective,
             secs: t0.elapsed().as_secs_f64(),
         });
@@ -92,16 +87,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn abalone_small_runs_all_methods() {
+    fn abalone_small_runs_all_registered_methods() {
         let spec = CLUSTERING_SPECS[0]; // abalone, d=8
         let rows = run_dataset(spec, 0.1, 128, 11);
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), Method::registry().len());
         for r in &rows {
             assert!(r.objective.is_finite() && r.objective >= 0.0, "{}", r.method);
         }
         // the strong methods (gegenbauer / nystrom / fourier) should not be
         // far worse than the weakest
         let get = |m: &str| rows.iter().find(|r| r.method == m).unwrap().objective;
-        assert!(get("gegenbauer") <= get("maclaurin") * 2.0 + 0.1);
+        assert!(get(Method::GEGENBAUER) <= get(Method::MACLAURIN) * 2.0 + 0.1);
     }
 }

@@ -137,9 +137,22 @@ impl GegenbauerFeatures {
             k0 += lanes;
         }
     }
+}
 
-    /// Featurize a batch into a preallocated output (rows n, cols m*s).
-    pub fn featurize_into(&self, x: &Mat, out: &mut Mat) {
+impl Featurizer for GegenbauerFeatures {
+    fn dim(&self) -> usize {
+        self.w.rows() * self.table.s
+    }
+
+    fn featurize(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows(), self.dim());
+        self.featurize_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free override: streams rows through the shared scratch
+    /// buffers instead of materializing an intermediate matrix.
+    fn featurize_into(&self, x: &Mat, out: &mut Mat) {
         let m = self.w.rows();
         let s = self.table.s;
         assert_eq!(x.cols(), self.table.d);
@@ -151,13 +164,11 @@ impl GegenbauerFeatures {
             self.featurize_row(x.row(i), out.row_mut(i), &mut t_buf, &mut r_buf);
         }
     }
-}
 
-impl GegenbauerFeatures {
-    /// Multi-threaded batch featurization: splits rows across `n_threads`
-    /// scoped threads (rayon is unavailable offline). Bit-identical to the
-    /// sequential path — each row's computation is independent.
-    pub fn featurize_par(&self, x: &Mat, n_threads: usize) -> Mat {
+    /// Override of the chunk-parallel default: per-thread scratch buffers
+    /// write straight into the shared output (no per-chunk matrices).
+    /// Bit-identical to the sequential path — each row is independent.
+    fn featurize_par(&self, x: &Mat, n_threads: usize) -> Mat {
         let n = x.rows();
         let cols = self.dim();
         if n_threads <= 1 || n < 2 * n_threads {
@@ -198,18 +209,6 @@ impl GegenbauerFeatures {
                 });
             }
         });
-        out
-    }
-}
-
-impl Featurizer for GegenbauerFeatures {
-    fn dim(&self) -> usize {
-        self.w.rows() * self.table.s
-    }
-
-    fn featurize(&self, x: &Mat) -> Mat {
-        let mut out = Mat::zeros(x.rows(), self.dim());
-        self.featurize_into(x, &mut out);
         out
     }
 

@@ -1,9 +1,12 @@
 //! Feature maps: the paper's random Gegenbauer features plus every baseline
-//! in Tables 2/3.
+//! in Tables 2/3, all constructed through one spec-driven registry.
 //!
 //! All featurizers implement [`Featurizer`]: map a batch of raw points
 //! (n x d) to a feature matrix Z (n x F) such that Z Z^T approximates the
-//! target kernel's Gram matrix.
+//! target kernel's Gram matrix. A featurizer is *described* by a
+//! [`FeatureSpec`] — `(kernel, method, m, seed)` — and every construction
+//! site in the crate (experiments, coordinator, CLI, benches) goes through
+//! [`FeatureSpec::build`] rather than naming concrete types; see [`spec`].
 
 mod fastfood;
 mod gegenbauer;
@@ -12,6 +15,7 @@ mod nystrom;
 mod polysketch;
 pub mod radial;
 mod rff;
+pub mod spec;
 
 pub use fastfood::FastFoodFeatures;
 pub use gegenbauer::GegenbauerFeatures;
@@ -20,16 +24,72 @@ pub use nystrom::NystromFeatures;
 pub use polysketch::PolySketchFeatures;
 pub use radial::RadialTable;
 pub use rff::FourierFeatures;
+pub use spec::{BoundSpec, FeatureSpec, KernelSpec, Method};
 
 use crate::linalg::Mat;
 
 /// A (possibly random) finite-dimensional feature map for a kernel.
-pub trait Featurizer {
+///
+/// `Send + Sync` is part of the contract: featurizers are broadcast to
+/// worker threads by the coordinator and shared across chunk-parallel
+/// featurization, so every implementation must be freely shareable.
+///
+/// The two batch variants have default implementations in terms of
+/// [`featurize`](Featurizer::featurize), so a new featurizer only has to
+/// supply the per-batch map; implementations with a cheaper path (e.g. the
+/// Gegenbauer hot loop) override them.
+pub trait Featurizer: Send + Sync {
     /// Output feature dimension F.
     fn dim(&self) -> usize;
+
     /// Map points (n x d) to features (n x F).
     fn featurize(&self, x: &Mat) -> Mat;
-    /// Human-readable method name (bench tables).
+
+    /// Zero-copy variant: featurize into a preallocated (n x F) buffer.
+    fn featurize_into(&self, x: &Mat, out: &mut Mat) {
+        let z = self.featurize(x);
+        assert_eq!(out.rows(), z.rows(), "{}: featurize_into row mismatch", self.name());
+        assert_eq!(out.cols(), z.cols(), "{}: featurize_into col mismatch", self.name());
+        out.data_mut().copy_from_slice(z.data());
+    }
+
+    /// Chunk-parallel batch featurization: splits rows across `n_threads`
+    /// scoped threads. Bit-identical to the sequential path because every
+    /// featurizer maps rows independently.
+    fn featurize_par(&self, x: &Mat, n_threads: usize) -> Mat {
+        let n = x.rows();
+        if n_threads <= 1 || n < 2 * n_threads {
+            return self.featurize(x);
+        }
+        let cols = self.dim();
+        let mut out = Mat::zeros(n, cols);
+        let chunk = n.div_ceil(n_threads);
+        // split the output buffer into disjoint row ranges per thread
+        let mut slices: Vec<&mut [f64]> = Vec::with_capacity(n_threads);
+        let mut rest: &mut [f64] = out.data_mut();
+        for _ in 0..n_threads {
+            let take = (chunk * cols).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            slices.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            for (t, slice) in slices.into_iter().enumerate() {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                if lo >= hi {
+                    continue;
+                }
+                scope.spawn(move || {
+                    let z = self.featurize(&x.row_block(lo, hi));
+                    slice[..z.data().len()].copy_from_slice(z.data());
+                });
+            }
+        });
+        out
+    }
+
+    /// Human-readable method name (bench tables, registry lookups).
     fn name(&self) -> &'static str;
 }
 

@@ -35,6 +35,20 @@ impl CountSketch {
     }
 }
 
+/// Sketch size per degree for a target feature budget: split the budget
+/// (minus the constant coordinate) evenly across degrees and round down to
+/// a power of two for the FFT composition. Shared with
+/// `FeatureSpec::feature_dim` so the output dimension is derivable from a
+/// spec without construction.
+pub(crate) fn sketch_size(f_dim: usize, deg: usize) -> usize {
+    let per = (f_dim.saturating_sub(1) / deg).max(2);
+    if per.is_power_of_two() {
+        per
+    } else {
+        per.next_power_of_two() / 2
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct PolySketchFeatures {
     d: usize,
@@ -55,8 +69,7 @@ impl PolySketchFeatures {
         let mut rng = Rng::new(seed).fork(0x9017);
         // degree 0 uses a single constant coordinate; split the rest evenly
         // and round down to a power of two for the FFT composition
-        let per = ((f_dim - 1) / deg).max(2);
-        let m_per = if per.is_power_of_two() { per } else { per.next_power_of_two() / 2 };
+        let m_per = sketch_size(f_dim, deg);
         let mut sketches = Vec::with_capacity(deg);
         for j in 1..=deg {
             sketches.push((0..j).map(|_| CountSketch::new(&mut rng, d, m_per)).collect());

@@ -1,0 +1,698 @@
+//! The spec-driven featurizer registry: one serializable description —
+//! `(kernel, method, m, seed)` — constructs *any* featurizer in the crate.
+//!
+//! The paper's one-round distributed protocol (§5) works because a
+//! featurizer is fully determined by a small spec: broadcast the spec, and
+//! every holder derives a bit-identical feature map. The Gegenbauer path
+//! always had that property; this module extends it to every baseline so
+//! experiments, benches, the CLI and the coordinator share one
+//! construction API:
+//!
+//! * [`KernelSpec`] — which kernel is being approximated;
+//! * [`Method`] — which approximation constructs the features (the
+//!   registry: [`Method::registry`] enumerates every implementation);
+//! * [`FeatureSpec`] — kernel + method + feature budget `m` + seed. Builds
+//!   a boxed [`Featurizer`] via [`FeatureSpec::build`], reports its feature
+//!   dimension without construction, and round-trips through JSON
+//!   ([`FeatureSpec::to_json`] / [`FeatureSpec::from_json`]) for wire/CLI
+//!   use;
+//! * [`BoundSpec`] — a `FeatureSpec` bound to an input dimension `d`: the
+//!   complete broadcast message of the coordinator protocol
+//!   (re-exported there as `coordinator::FeatureSpec`).
+//!
+//! Built featurizers consume **raw** inputs for every method: Gaussian
+//! bandwidth folding (the GZK convention of scaling inputs by 1/sigma) is
+//! wrapped into the returned featurizer, so call sites never special-case
+//! the Gegenbauer path.
+
+use super::polysketch::sketch_size;
+use super::radial::RadialTable;
+use super::{
+    FastFoodFeatures, Featurizer, FourierFeatures, GegenbauerFeatures, MaclaurinFeatures,
+    NystromFeatures, PolySketchFeatures,
+};
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::runtime::Json;
+
+/// Serializable kernel selector (mirrors [`Kernel`], which stays the
+/// evaluation type; this is the description type).
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelSpec {
+    /// exp(-||x-y||^2 / (2 sigma^2))
+    Gaussian { bandwidth: f64 },
+    /// exp(gamma <x,y>)
+    Exponential { gamma: f64 },
+    /// (<x,y> + c)^p — exact GZK of degree p (q/s are derived from p)
+    Polynomial { p: usize, c: f64 },
+    /// depth-L ReLU NTK
+    Ntk { depth: usize },
+}
+
+impl KernelSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelSpec::Gaussian { .. } => "gaussian",
+            KernelSpec::Exponential { .. } => "exponential",
+            KernelSpec::Polynomial { .. } => "polynomial",
+            KernelSpec::Ntk { .. } => "ntk",
+        }
+    }
+
+    /// The exact kernel this spec describes (ground truth / Nystrom input).
+    pub fn to_kernel(&self) -> Kernel {
+        match *self {
+            KernelSpec::Gaussian { bandwidth } => Kernel::Gaussian { bandwidth },
+            KernelSpec::Exponential { gamma } => Kernel::Exponential { gamma },
+            KernelSpec::Polynomial { p, c } => Kernel::Polynomial { p: p as u32, c },
+            KernelSpec::Ntk { depth } => Kernel::Ntk { depth },
+        }
+    }
+
+    /// Multiplicative input preprocessing implied by the family: the GZK
+    /// tables are unit-bandwidth, so Gaussian inputs are scaled by 1/sigma.
+    pub fn input_scale(&self) -> f64 {
+        match *self {
+            KernelSpec::Gaussian { bandwidth } => 1.0 / bandwidth,
+            _ => 1.0,
+        }
+    }
+
+    /// Input preprocessing implied by the family (bandwidth folding).
+    pub fn scale_inputs(&self, x: &Mat) -> Mat {
+        let mut y = x.clone();
+        let sc = self.input_scale();
+        if sc != 1.0 {
+            y.scale(sc);
+        }
+        y
+    }
+
+    /// Effective Gegenbauer truncation for this kernel: the polynomial
+    /// family fixes (q, s) = (p, p/2 + 1) exactly and the NTK tables are
+    /// single-channel; other families use the requested knobs.
+    pub fn gegenbauer_order(&self, q: usize, s: usize) -> (usize, usize) {
+        match *self {
+            KernelSpec::Polynomial { p, .. } => (p, p / 2 + 1),
+            KernelSpec::Ntk { .. } => (q, 1),
+            _ => (q, s),
+        }
+    }
+
+    /// The radial-factor table of the GZK expansion of this kernel.
+    pub fn radial_table(&self, d: usize, q: usize, s: usize) -> RadialTable {
+        match *self {
+            KernelSpec::Gaussian { .. } => RadialTable::gaussian(d, q, s),
+            KernelSpec::Exponential { gamma } => RadialTable::exponential(d, q, s, gamma),
+            KernelSpec::Polynomial { p, c } => RadialTable::polynomial(d, p, c),
+            KernelSpec::Ntk { depth } => RadialTable::ntk(d, q, depth),
+        }
+    }
+
+    fn to_json(&self) -> String {
+        match *self {
+            KernelSpec::Gaussian { bandwidth } => {
+                format!(r#"{{"family":"gaussian","bandwidth":{bandwidth:?}}}"#)
+            }
+            KernelSpec::Exponential { gamma } => {
+                format!(r#"{{"family":"exponential","gamma":{gamma:?}}}"#)
+            }
+            KernelSpec::Polynomial { p, c } => {
+                format!(r#"{{"family":"polynomial","p":{p},"c":{c:?}}}"#)
+            }
+            KernelSpec::Ntk { depth } => format!(r#"{{"family":"ntk","depth":{depth}}}"#),
+        }
+    }
+
+    fn from_json_value(j: &Json) -> Result<KernelSpec, String> {
+        let family = j
+            .get("family")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "kernel spec: missing \"family\"".to_string())?;
+        match family {
+            "gaussian" => Ok(KernelSpec::Gaussian { bandwidth: req_f64(j, "bandwidth")? }),
+            "exponential" => Ok(KernelSpec::Exponential { gamma: req_f64(j, "gamma")? }),
+            "polynomial" => {
+                Ok(KernelSpec::Polynomial { p: req_usize(j, "p")?, c: req_f64(j, "c")? })
+            }
+            "ntk" => Ok(KernelSpec::Ntk { depth: req_usize(j, "depth")? }),
+            other => Err(format!("kernel spec: unknown family {other:?}")),
+        }
+    }
+}
+
+/// Which approximation method constructs the feature map. Tuning knobs that
+/// belong to the method (not the kernel or the budget) live here, so a
+/// `Method` value is everything the registry needs besides `(m, seed, d)`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// The paper's random Gegenbauer features (Def. 8); truncation degree
+    /// `q`, radial order `s`.
+    Gegenbauer { q: usize, s: usize },
+    /// Random Fourier features [RR09] (Gaussian kernel only).
+    Fourier,
+    /// FastFood structured Fourier features [LSS+13] (Gaussian only).
+    FastFood,
+    /// Random Maclaurin features [KK12] (Gaussian only).
+    Maclaurin,
+    /// TensorSketch of the Taylor expansion [AKK+20] (Gaussian only).
+    PolySketch { degree: usize },
+    /// Data-DEPENDENT Nystrom with leverage-score landmarks [MM17]; needs
+    /// training rows at build time (any kernel).
+    Nystrom { lambda: f64 },
+}
+
+impl Method {
+    pub const GEGENBAUER: &'static str = "gegenbauer";
+    pub const FOURIER: &'static str = "fourier";
+    pub const FASTFOOD: &'static str = "fastfood";
+    pub const MACLAURIN: &'static str = "maclaurin";
+    pub const POLYSKETCH: &'static str = "polysketch";
+    pub const NYSTROM: &'static str = "nystrom";
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Gegenbauer { .. } => Self::GEGENBAUER,
+            Method::Fourier => Self::FOURIER,
+            Method::FastFood => Self::FASTFOOD,
+            Method::Maclaurin => Self::MACLAURIN,
+            Method::PolySketch { .. } => Self::POLYSKETCH,
+            Method::Nystrom { .. } => Self::NYSTROM,
+        }
+    }
+
+    /// Look a method up by registry name, with default tuning knobs.
+    pub fn from_name(name: &str) -> Result<Method, String> {
+        match name {
+            Self::GEGENBAUER => Ok(Method::Gegenbauer { q: 10, s: 2 }),
+            Self::FOURIER => Ok(Method::Fourier),
+            Self::FASTFOOD => Ok(Method::FastFood),
+            Self::MACLAURIN => Ok(Method::Maclaurin),
+            Self::POLYSKETCH => Ok(Method::PolySketch { degree: 6 }),
+            Self::NYSTROM => Ok(Method::Nystrom { lambda: 1e-3 }),
+            other => Err(format!(
+                "unknown method {other:?}; registered: {}",
+                Self::registry().iter().map(|m| m.name()).collect::<Vec<_>>().join(", ")
+            )),
+        }
+    }
+
+    /// Every registered method, with default tuning. Experiments, benches
+    /// and tests iterate this list so a newly registered featurizer is
+    /// picked up everywhere without touching call sites.
+    pub fn registry() -> Vec<Method> {
+        vec![
+            Method::Gegenbauer { q: 10, s: 2 },
+            Method::Fourier,
+            Method::FastFood,
+            Method::Nystrom { lambda: 1e-3 },
+            Method::PolySketch { degree: 6 },
+            Method::Maclaurin,
+        ]
+    }
+
+    /// Re-parameterize the data-geometry tuning knobs (Gegenbauer's q/s),
+    /// keeping the method identity — used when sweeping the registry with
+    /// per-dataset truncation choices.
+    pub fn tuned(self, q: usize, s: usize) -> Method {
+        match self {
+            Method::Gegenbauer { .. } => Method::Gegenbauer { q, s },
+            other => other,
+        }
+    }
+
+    /// Data-oblivious methods can be built from the spec alone (and hence
+    /// broadcast by the coordinator); data-dependent ones need rows.
+    pub fn is_oblivious(&self) -> bool {
+        !matches!(self, Method::Nystrom { .. })
+    }
+
+    fn to_json(&self) -> String {
+        match *self {
+            Method::Gegenbauer { q, s } => {
+                format!(r#"{{"name":"gegenbauer","q":{q},"s":{s}}}"#)
+            }
+            Method::Fourier => r#"{"name":"fourier"}"#.to_string(),
+            Method::FastFood => r#"{"name":"fastfood"}"#.to_string(),
+            Method::Maclaurin => r#"{"name":"maclaurin"}"#.to_string(),
+            Method::PolySketch { degree } => {
+                format!(r#"{{"name":"polysketch","degree":{degree}}}"#)
+            }
+            Method::Nystrom { lambda } => format!(r#"{{"name":"nystrom","lambda":{lambda:?}}}"#),
+        }
+    }
+
+    fn from_json_value(j: &Json) -> Result<Method, String> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "method spec: missing \"name\"".to_string())?;
+        match name {
+            Self::GEGENBAUER => {
+                Ok(Method::Gegenbauer { q: req_usize(j, "q")?, s: req_usize(j, "s")? })
+            }
+            Self::POLYSKETCH => Ok(Method::PolySketch { degree: req_usize(j, "degree")? }),
+            Self::NYSTROM => Ok(Method::Nystrom { lambda: req_f64(j, "lambda")? }),
+            other => Method::from_name(other),
+        }
+    }
+}
+
+/// Everything needed to reconstruct a feature map anywhere: the value type
+/// of the registry. `m` is the **feature budget** — the target output
+/// dimension. The Gegenbauer method spends it as `m / s` directions of `s`
+/// radial channels each; every other method emits `~m` features directly
+/// (see [`FeatureSpec::feature_dim`] for the exact count).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureSpec {
+    pub kernel: KernelSpec,
+    pub method: Method,
+    /// feature budget (target output dimension)
+    pub m: usize,
+    pub seed: u64,
+}
+
+impl FeatureSpec {
+    pub fn new(kernel: KernelSpec, method: Method, m: usize, seed: u64) -> FeatureSpec {
+        FeatureSpec { kernel, method, m, seed }
+    }
+
+    /// Bind to an input dimension, producing the coordinator's wire form.
+    pub fn bind(self, d: usize) -> BoundSpec {
+        BoundSpec { spec: self, d }
+    }
+
+    /// Exact output dimension of [`build`](FeatureSpec::build), derived
+    /// without constructing the featurizer. (For the data-dependent Nystrom
+    /// method this is the nominal landmark count; a fit on fewer than `m`
+    /// training rows caps it at the row count.)
+    pub fn feature_dim(&self) -> usize {
+        match self.method {
+            Method::Gegenbauer { q, s } => {
+                let (_, s) = self.kernel.gegenbauer_order(q, s);
+                (self.m / s).max(1) * s
+            }
+            Method::Fourier | Method::FastFood | Method::Maclaurin => self.m,
+            Method::PolySketch { degree } => 1 + degree * sketch_size(self.m, degree),
+            Method::Nystrom { .. } => self.m,
+        }
+    }
+
+    /// The single construction registry: every featurizer in the crate is
+    /// built here and nowhere else. `x_train` is consulted only by
+    /// data-dependent methods (Nystrom); oblivious methods ignore it.
+    pub fn try_build(
+        &self,
+        d: usize,
+        x_train: Option<&Mat>,
+    ) -> Result<Box<dyn Featurizer>, String> {
+        match self.method {
+            Method::Gegenbauer { .. } => {
+                let feat = self.build_gegenbauer(d).expect("method is gegenbauer");
+                let scale = self.kernel.input_scale();
+                if scale != 1.0 {
+                    Ok(Box::new(InputScaled { inner: feat, scale }))
+                } else {
+                    Ok(Box::new(feat))
+                }
+            }
+            Method::Fourier => {
+                let bw = self.gaussian_bandwidth()?;
+                Ok(Box::new(FourierFeatures::new(d, self.m, bw, self.seed)))
+            }
+            Method::FastFood => {
+                let bw = self.gaussian_bandwidth()?;
+                Ok(Box::new(FastFoodFeatures::new(d, self.m, bw, self.seed)))
+            }
+            Method::Maclaurin => {
+                let bw = self.gaussian_bandwidth()?;
+                Ok(Box::new(MaclaurinFeatures::new_gaussian(d, self.m, bw, self.seed)))
+            }
+            Method::PolySketch { degree } => {
+                let bw = self.gaussian_bandwidth()?;
+                Ok(Box::new(PolySketchFeatures::new(d, self.m, degree, bw, self.seed)))
+            }
+            Method::Nystrom { lambda } => {
+                let x = x_train.ok_or_else(|| {
+                    "nystrom is data-dependent: pass training rows (build_with_data)".to_string()
+                })?;
+                if x.cols() != d {
+                    return Err(format!(
+                        "nystrom: training rows have d={}, spec bound to d={d}",
+                        x.cols()
+                    ));
+                }
+                Ok(Box::new(NystromFeatures::fit(
+                    self.kernel.to_kernel(),
+                    x,
+                    self.m,
+                    lambda,
+                    self.seed,
+                )))
+            }
+        }
+    }
+
+    /// Build a data-oblivious featurizer for inputs of dimension `d`.
+    /// Every holder of the same spec builds a bit-identical map — the
+    /// broadcast property the one-round protocol relies on. Panics for
+    /// data-dependent methods and unsupported kernel/method pairs; use
+    /// [`try_build`](FeatureSpec::try_build) to handle those gracefully.
+    pub fn build(&self, d: usize) -> Box<dyn Featurizer> {
+        self.try_build(d, None).unwrap_or_else(|e| panic!("FeatureSpec::build: {e}"))
+    }
+
+    /// Build any featurizer, fitting data-dependent methods on `x_train`
+    /// (`d` is taken from the training rows).
+    pub fn build_with_data(&self, x_train: &Mat) -> Box<dyn Featurizer> {
+        self.try_build(x_train.cols(), Some(x_train))
+            .unwrap_or_else(|e| panic!("FeatureSpec::build_with_data: {e}"))
+    }
+
+    /// The concrete (unscaled) Gegenbauer featurizer of this spec, if its
+    /// method is Gegenbauer — the single place the direction budget is
+    /// spent (`try_build` wraps this; the PJRT backend reads its raw
+    /// direction set).
+    pub fn build_gegenbauer(&self, d: usize) -> Option<GegenbauerFeatures> {
+        let table = self.radial_table(d)?;
+        let dirs = (self.m / table.s).max(1);
+        Some(GegenbauerFeatures::new(table, dirs, self.seed))
+    }
+
+    /// The radial table the Gegenbauer path of this spec uses (independent
+    /// of `m`/`seed`); `None` for non-Gegenbauer methods.
+    pub fn radial_table(&self, d: usize) -> Option<RadialTable> {
+        match self.method {
+            Method::Gegenbauer { q, s } => {
+                let (q, s) = self.kernel.gegenbauer_order(q, s);
+                Some(self.kernel.radial_table(d, q, s))
+            }
+            _ => None,
+        }
+    }
+
+    fn gaussian_bandwidth(&self) -> Result<f64, String> {
+        match &self.kernel {
+            KernelSpec::Gaussian { bandwidth } => Ok(*bandwidth),
+            other => Err(format!(
+                "method {:?} supports only the gaussian kernel, got {}",
+                self.method.name(),
+                other.name()
+            )),
+        }
+    }
+
+    /// Serialize for the wire / CLI. The seed is a decimal *string* so the
+    /// full u64 range survives the f64-backed JSON number type.
+    pub fn to_json(&self) -> String {
+        format!(
+            r#"{{"kernel":{},"method":{},"m":{},"seed":"{}"}}"#,
+            self.kernel.to_json(),
+            self.method.to_json(),
+            self.m,
+            self.seed
+        )
+    }
+
+    pub fn from_json(text: &str) -> Result<FeatureSpec, String> {
+        Self::from_json_value(&Json::parse(text)?)
+    }
+
+    fn from_json_value(j: &Json) -> Result<FeatureSpec, String> {
+        let kernel = KernelSpec::from_json_value(
+            j.get("kernel").ok_or_else(|| "spec json: missing \"kernel\"".to_string())?,
+        )?;
+        let method = Method::from_json_value(
+            j.get("method").ok_or_else(|| "spec json: missing \"method\"".to_string())?,
+        )?;
+        let m = req_usize(j, "m")?;
+        let seed = j
+            .get("seed")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "spec json: missing string \"seed\"".to_string())?
+            .parse::<u64>()
+            .map_err(|e| format!("spec json: bad seed: {e}"))?;
+        Ok(FeatureSpec { kernel, method, m, seed })
+    }
+}
+
+/// A [`FeatureSpec`] bound to an input dimension `d` — the complete,
+/// serializable broadcast message of the one-round protocol (a few bytes,
+/// for *any* registered method). Re-exported as `coordinator::FeatureSpec`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoundSpec {
+    pub spec: FeatureSpec,
+    pub d: usize,
+}
+
+impl BoundSpec {
+    pub fn feature_dim(&self) -> usize {
+        self.spec.feature_dim()
+    }
+
+    /// Build the featurizer. Every holder of the same spec builds a
+    /// bit-identical map (tested in `determinism_across_builders`).
+    pub fn build(&self) -> Box<dyn Featurizer> {
+        self.spec.build(self.d)
+    }
+
+    /// The concrete Gegenbauer featurizer, if applicable (PJRT backend).
+    pub fn build_gegenbauer(&self) -> Option<GegenbauerFeatures> {
+        self.spec.build_gegenbauer(self.d)
+    }
+
+    /// Input preprocessing implied by the kernel family (bandwidth
+    /// folding). Built featurizers already apply this internally; only the
+    /// PJRT path, which bypasses [`build`](BoundSpec::build), needs it.
+    pub fn scale_inputs(&self, x: &Mat) -> Mat {
+        self.spec.kernel.scale_inputs(x)
+    }
+
+    pub fn kernel_name(&self) -> &'static str {
+        self.spec.kernel.name()
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            r#"{{"d":{},"kernel":{},"method":{},"m":{},"seed":"{}"}}"#,
+            self.d,
+            self.spec.kernel.to_json(),
+            self.spec.method.to_json(),
+            self.spec.m,
+            self.spec.seed
+        )
+    }
+
+    pub fn from_json(text: &str) -> Result<BoundSpec, String> {
+        let j = Json::parse(text)?;
+        let d = req_usize(&j, "d")?;
+        Ok(BoundSpec { spec: FeatureSpec::from_json_value(&j)?, d })
+    }
+}
+
+/// Bandwidth folding wrapper: scales inputs by `scale` before delegating to
+/// the unit-bandwidth inner featurizer. Keeps every registry-built
+/// featurizer raw-input-compatible.
+struct InputScaled<F: Featurizer> {
+    inner: F,
+    scale: f64,
+}
+
+impl<F: Featurizer> InputScaled<F> {
+    fn scaled(&self, x: &Mat) -> Mat {
+        let mut y = x.clone();
+        y.scale(self.scale);
+        y
+    }
+}
+
+impl<F: Featurizer> Featurizer for InputScaled<F> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn featurize(&self, x: &Mat) -> Mat {
+        self.inner.featurize(&self.scaled(x))
+    }
+
+    fn featurize_into(&self, x: &Mat, out: &mut Mat) {
+        self.inner.featurize_into(&self.scaled(x), out)
+    }
+
+    fn featurize_par(&self, x: &Mat, n_threads: usize) -> Mat {
+        self.inner.featurize_par(&self.scaled(x), n_threads)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("spec json: missing number {key:?}"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| format!("spec json: missing integer {key:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::test_support::check_gram_approx;
+    use crate::rng::Rng;
+
+    fn gaussian(bandwidth: f64) -> KernelSpec {
+        KernelSpec::Gaussian { bandwidth }
+    }
+
+    #[test]
+    fn registry_names_roundtrip() {
+        for method in Method::registry() {
+            let back = Method::from_name(method.name()).unwrap();
+            assert_eq!(back.name(), method.name());
+        }
+        assert!(Method::from_name("no-such-method").is_err());
+    }
+
+    #[test]
+    fn registry_gram_concentration() {
+        // every registered method approximates the Gaussian Gram matrix;
+        // per-method tolerances reflect their known variance (Tables 2/3:
+        // maclaurin is the weak method, polysketch mid, the rest strong).
+        let (n, d, scale, seed) = (12usize, 3usize, 0.5f64, 65u64);
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal() * scale);
+        for method in Method::registry() {
+            let (budget, tol) = match method.name() {
+                Method::MACLAURIN => (16384, 0.6),
+                Method::POLYSKETCH => (8192, 0.3),
+                Method::FASTFOOD => (8192, 0.2),
+                Method::NYSTROM => (8192, 0.05), // m >= n: near-exact
+                _ => (8192, 0.25),
+            };
+            let spec = FeatureSpec::new(gaussian(1.0), method.tuned(14, 6), budget, 99);
+            let feat = spec.build_with_data(&x);
+            check_gram_approx(feat.as_ref(), &spec.kernel.to_kernel(), n, d, scale, seed, tol);
+        }
+    }
+
+    #[test]
+    fn trait_defaults_match_featurize_for_every_method() {
+        // featurize_into and featurize_par must agree bit-for-bit with
+        // featurize for every registered method (default impls + overrides)
+        let d = 3;
+        let mut rng = Rng::new(200);
+        let x = Mat::from_fn(31, d, |_, _| rng.normal() * 0.6);
+        for method in Method::registry() {
+            // bandwidth != 1 exercises the InputScaled wrapper
+            let spec = FeatureSpec::new(gaussian(1.3), method, 96, 7);
+            let feat = spec.build_with_data(&x);
+            let z = feat.featurize(&x);
+            assert_eq!(z.cols(), feat.dim(), "{}", feat.name());
+            let mut out = Mat::zeros(x.rows(), feat.dim());
+            feat.featurize_into(&x, &mut out);
+            assert_eq!(z, out, "{}: featurize_into differs", feat.name());
+            for threads in [2usize, 3, 5] {
+                let zp = feat.featurize_par(&x, threads);
+                assert_eq!(z, zp, "{}: featurize_par({threads}) differs", feat.name());
+            }
+        }
+    }
+
+    #[test]
+    fn feature_dim_matches_built_dim() {
+        let mut rng = Rng::new(201);
+        let x = Mat::from_fn(300, 4, |_, _| rng.normal());
+        for method in Method::registry() {
+            let spec = FeatureSpec::new(gaussian(1.0), method, 256, 3);
+            let feat = spec.build_with_data(&x);
+            assert_eq!(spec.feature_dim(), feat.dim(), "{}", feat.name());
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic_per_spec() {
+        let mut rng = Rng::new(202);
+        let x = Mat::from_fn(7, 3, |_, _| rng.normal());
+        for method in Method::registry().into_iter().filter(|m| m.is_oblivious()) {
+            let spec = FeatureSpec::new(gaussian(0.8), method, 64, 11);
+            let z1 = spec.build(3).featurize(&x);
+            let z2 = spec.build(3).featurize(&x);
+            assert_eq!(z1, z2, "{:?}", spec.method.name());
+        }
+    }
+
+    #[test]
+    fn scaled_wrapper_equals_manual_bandwidth_folding() {
+        // gegenbauer at bandwidth sigma == unit-bandwidth gegenbauer on
+        // inputs scaled by 1/sigma (the old call-site convention)
+        let mut rng = Rng::new(203);
+        let x = Mat::from_fn(9, 3, |_, _| rng.normal());
+        let spec = FeatureSpec::new(gaussian(2.0), Method::Gegenbauer { q: 8, s: 2 }, 64, 5);
+        let z = spec.build(3).featurize(&x);
+        let unit = FeatureSpec::new(gaussian(1.0), Method::Gegenbauer { q: 8, s: 2 }, 64, 5);
+        let mut xs = x.clone();
+        xs.scale(0.5);
+        let z_manual = unit.build(3).featurize(&xs);
+        assert_eq!(z, z_manual);
+    }
+
+    #[test]
+    fn polynomial_kernel_overrides_gegenbauer_order() {
+        let spec = FeatureSpec::new(
+            KernelSpec::Polynomial { p: 3, c: 0.5 },
+            Method::Gegenbauer { q: 12, s: 2 },
+            64,
+            1,
+        );
+        // s_eff = p/2 + 1 = 2, q_eff = 3
+        let table = spec.radial_table(4).unwrap();
+        assert_eq!((table.q, table.s), (3, 2));
+        assert_eq!(spec.feature_dim(), (64 / 2) * 2);
+    }
+
+    #[test]
+    fn unsupported_pairs_and_missing_data_error() {
+        let exp = KernelSpec::Exponential { gamma: 1.0 };
+        let spec = FeatureSpec::new(exp, Method::Fourier, 32, 1);
+        assert!(spec.try_build(3, None).is_err());
+        let ny = FeatureSpec::new(gaussian(1.0), Method::Nystrom { lambda: 1e-3 }, 32, 1);
+        assert!(ny.try_build(3, None).is_err());
+        assert!(!Method::Nystrom { lambda: 1e-3 }.is_oblivious());
+    }
+
+    #[test]
+    fn json_roundtrip_all_methods() {
+        for method in Method::registry() {
+            let spec = FeatureSpec::new(gaussian(1.5), method, 128, u64::MAX - 12345);
+            let back = FeatureSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, back);
+        }
+        for kernel in [
+            gaussian(0.7),
+            KernelSpec::Exponential { gamma: 0.4 },
+            KernelSpec::Polynomial { p: 3, c: 1.0 },
+            KernelSpec::Ntk { depth: 2 },
+        ] {
+            let spec = FeatureSpec::new(kernel, Method::Gegenbauer { q: 7, s: 3 }, 96, 42);
+            let bound = spec.bind(5);
+            let back = BoundSpec::from_json(&bound.to_json()).unwrap();
+            assert_eq!(bound, back);
+        }
+    }
+
+    #[test]
+    fn json_rejects_malformed_specs() {
+        assert!(FeatureSpec::from_json("{}").is_err());
+        assert!(FeatureSpec::from_json("not json").is_err());
+        let no_seed = r#"{"kernel":{"family":"gaussian","bandwidth":1.0},"method":{"name":"fourier"},"m":8}"#;
+        assert!(FeatureSpec::from_json(no_seed).is_err());
+        let bad_family = r#"{"kernel":{"family":"sobolev"},"method":{"name":"fourier"},"m":8,"seed":"1"}"#;
+        assert!(FeatureSpec::from_json(bad_family).is_err());
+    }
+}

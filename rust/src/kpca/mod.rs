@@ -91,7 +91,7 @@ impl KernelPca {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::features::{Featurizer, GegenbauerFeatures, RadialTable};
+    use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
     use crate::rng::Rng;
 
     #[test]
@@ -157,8 +157,13 @@ mod tests {
                 *r /= norm;
             }
         }
-        let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, 8, 2), 256, 184);
-        let z = feat.featurize(&x);
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 8, s: 2 },
+            512,
+            184,
+        );
+        let z = spec.build(3).featurize(&x);
         let pca = KernelPca::fit(&z, 2);
         let emb = pca.transform(&z);
         // the first principal coordinate must separate the two clusters

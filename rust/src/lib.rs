@@ -10,17 +10,25 @@
 //!   datasets ([`data`]).
 //! * **The paper's contribution** — random Gegenbauer features for the
 //!   Generalized Zonal Kernel family ([`features::gegenbauer`]), baselines
-//!   ([`features`]), downstream learners ([`krr`], [`kmeans`]) and the
-//!   spectral-approximation validators ([`spectral`]).
+//!   ([`features`]), the spec-driven registry that constructs them all
+//!   ([`features::spec`]), downstream learners ([`krr`], [`kmeans`]) and
+//!   the spectral-approximation validators ([`spectral`]).
 //! * **The serving system** — the PJRT runtime that executes the AOT
-//!   jax/Pallas artifacts ([`runtime`]) and the L3 coordinator implementing
-//!   the one-round distributed protocol, single-pass streaming KRR and a
-//!   dynamic prediction batcher ([`coordinator`]).
+//!   jax/Pallas artifacts ([`runtime`], behind the `pjrt` feature) and the
+//!   L3 coordinator implementing the one-round distributed protocol,
+//!   single-pass streaming KRR and a dynamic prediction batcher
+//!   ([`coordinator`]).
+//!
+//! Every featurizer — the paper's and all baselines — is described by a
+//! serializable [`features::FeatureSpec`] `(kernel, method, m, seed)` and
+//! built through its registry; the coordinator broadcasts exactly that
+//! spec, so "what the CLI parses" and "what goes over the wire" are the
+//! same value.
 //!
 //! # Quick example
 //!
 //! ```
-//! use gzk::features::{Featurizer, GegenbauerFeatures, RadialTable};
+//! use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 //! use gzk::krr::FeatureRidge;
 //! use gzk::linalg::Mat;
 //! use gzk::rng::Rng;
@@ -30,11 +38,29 @@
 //! let x = Mat::from_fn(64, 3, |_, _| rng.normal() * 0.5);
 //! let y: Vec<f64> = (0..64).map(|i| x[(i, 0)] + x[(i, 1)]).collect();
 //!
-//! // Gaussian kernel as a GZK (Eq. 23), 256 random directions (Def. 8)
-//! let table = RadialTable::gaussian(/*d=*/ 3, /*q=*/ 10, /*s=*/ 2);
-//! let feat = GegenbauerFeatures::new(table, 256, /*seed=*/ 42);
+//! // Gaussian kernel as a GZK (Eq. 23) via the paper's random Gegenbauer
+//! // features (Def. 8): a 512-feature budget = 256 directions x s = 2
+//! let spec = FeatureSpec::new(
+//!     KernelSpec::Gaussian { bandwidth: 1.0 },
+//!     Method::Gegenbauer { q: 10, s: 2 },
+//!     /* feature budget m = */ 512,
+//!     /* seed = */ 42,
+//! );
+//! let feat = spec.build(/* d = */ 3);
 //! let z = feat.featurize(&x);
 //! assert_eq!((z.rows(), z.cols()), (64, 512));
+//! assert_eq!(spec.feature_dim(), 512); // derivable without building
+//!
+//! // the same spec round-trips through JSON (what the coordinator
+//! // broadcasts) and rebuilds the identical map anywhere
+//! let wire = FeatureSpec::from_json(&spec.to_json()).unwrap();
+//! assert_eq!(wire.build(3).featurize(&x), z);
+//!
+//! // swap one field to benchmark a baseline through the same API
+//! let rff = FeatureSpec::new(
+//!     KernelSpec::Gaussian { bandwidth: 1.0 }, Method::Fourier, 512, 42,
+//! );
+//! assert_eq!(rff.build(3).featurize(&x).cols(), 512);
 //!
 //! // ridge regression in feature space
 //! let model = FeatureRidge::fit(&z, &y, 1e-3);

@@ -10,11 +10,19 @@
 //!   gzk leverage  [--n 24 --d 3 --lambda 0.1]        Lemma-7 leverage-score check
 //!   gzk serve     [--n 20000 --m 512 --requests 2000] end-to-end serving demo
 //!   gzk info                                          artifact manifest summary
+//!
+//! Subcommands that build a single featurizer (`serve`, `leverage`) share
+//! one flag group — `--kernel/--method/--m/--seed` plus tuning knobs —
+//! parsed once by `cli::Args::feature_spec` into a `features::FeatureSpec`
+//! (run `gzk serve --method fourier` to broadcast a non-Gegenbauer map).
+//! The table/spectral sweeps iterate the whole method registry and reject
+//! those flags rather than silently ignoring them.
 
 use gzk::cli::Args;
-use gzk::coordinator::{fit_one_round, Backend, Family, FeatureSpec, PredictionService};
+use gzk::coordinator::{fit_one_round, Backend, PredictionService};
 use gzk::data;
 use gzk::experiments::{fig1, spectral_quality, table1, table2, table3};
+use gzk::features::FeatureSpec;
 use gzk::krr::mse;
 use std::time::{Duration, Instant};
 
@@ -32,6 +40,8 @@ fn main() {
             fig1::print(&curves);
         }
         "table1" => {
+            // sweeps its own method pair and feature ladder
+            reject_sweep_flags(&args, "table1", &["kernel", "method", "m"]);
             let rows = table1::run_bounds();
             table1::print_bounds(&rows);
             let n = args.get_usize("n", 64);
@@ -41,6 +51,8 @@ fn main() {
             table1::print_empirical(&emp, 0.5);
         }
         "table2" => {
+            // sweeps the whole registry with per-dataset gaussian kernels
+            reject_sweep_flags(&args, "table2", &["kernel", "method"]);
             let rows = table2::run_all(
                 args.get_f64("scale", 0.05),
                 args.get_usize("m", 1024),
@@ -49,6 +61,7 @@ fn main() {
             table2::print(&rows);
         }
         "table3" => {
+            reject_sweep_flags(&args, "table3", &["kernel", "method"]);
             let rows = table3::run_all(
                 args.get_f64("scale", 0.05),
                 args.get_usize("m", 512),
@@ -57,6 +70,7 @@ fn main() {
             table3::print(&rows);
         }
         "spectral" => {
+            reject_sweep_flags(&args, "spectral", &["kernel", "method", "m"]);
             let (s_lambda, rows) = spectral_quality::run(
                 args.get_usize("n", 64),
                 args.get_usize("d", 3),
@@ -75,10 +89,35 @@ fn main() {
     }
 }
 
+/// Parse the shared featurizer flag group, exiting with a usage error on
+/// bad input (the one place CLI featurizer parsing happens).
+fn parse_spec(args: &Args, default_m: usize) -> FeatureSpec {
+    match args.feature_spec(default_m, 1) {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Registry-sweep subcommands construct their own spec ladders; reject the
+/// single-featurizer flags instead of silently ignoring them.
+fn reject_sweep_flags(args: &Args, subcommand: &str, flags: &[&str]) {
+    for f in flags {
+        if args.get(f).is_some() {
+            eprintln!(
+                "argument error: --{f} does not apply to {subcommand} \
+                 (it sweeps the method registry with its own kernels)"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
 /// Lemma-7 validator: exact ridge leverage scores over random directions
 /// vs the uniform bound, plus the Theorem-9 feature-count it implies.
 fn leverage_demo(args: &Args) {
-    use gzk::features::RadialTable;
     use gzk::linalg::Mat;
     use gzk::rng::Rng;
     use gzk::spectral::{lemma7_bound, leverage_score, statistical_dimension, theorem9_feature_count};
@@ -86,9 +125,12 @@ fn leverage_demo(args: &Args) {
     let n = args.get_usize("n", 24);
     let d = args.get_usize("d", 3);
     let lambda = args.get_f64("lambda", 0.1);
-    let mut rng = Rng::new(args.get_u64("seed", 1));
+    let spec = parse_spec(args, 512);
+    let mut rng = Rng::new(spec.seed);
     let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.6);
-    let table = RadialTable::gaussian(d, 10, 3);
+    let table = spec
+        .radial_table(d)
+        .expect("leverage demo analyses the Gegenbauer method (--method gegenbauer)");
 
     let bound = lemma7_bound(&table, &x, lambda);
     let k = table.gzk_gram(&x);
@@ -114,25 +156,27 @@ fn leverage_demo(args: &Args) {
 }
 
 /// End-to-end demo: train on synthetic elevation via the one-round
-/// protocol, then serve batched prediction requests and report latency.
+/// protocol with the spec from the shared flag group (any oblivious
+/// method), then serve batched prediction requests and report latency.
 fn serve_demo(args: &Args) {
     let n = args.get_usize("n", 20_000);
-    let m = args.get_usize("m", 512);
     let n_requests = args.get_usize("requests", 2_000);
     let n_workers = args.get_usize("workers", 4);
-    let seed = args.get_u64("seed", 1);
+    let spec = parse_spec(args, 512).bind(3);
+    if !spec.spec.method.is_oblivious() {
+        eprintln!(
+            "argument error: --method {} is data-dependent and cannot be broadcast \
+             by the one-round protocol; pick an oblivious method",
+            spec.spec.method.name()
+        );
+        std::process::exit(2);
+    }
+    let seed = spec.spec.seed;
 
     println!("== gzk serve: one-round distributed KRR + batched serving ==");
+    println!("spec: {}", spec.to_json());
     let ds = data::elevation(n, seed);
     let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed);
-    let spec = FeatureSpec {
-        family: Family::Gaussian { bandwidth: 1.0 },
-        d: 3,
-        q: 12,
-        s: 2,
-        m: m / 2,
-        seed,
-    };
     let backend = if args.has("pjrt") {
         Backend::Pjrt { artifact_dir: gzk::runtime::default_artifact_dir() }
     } else {

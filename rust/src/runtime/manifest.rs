@@ -33,18 +33,19 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read {:?}: {e}", dir.join("manifest.json")))?;
         Self::parse(&text, dir)
     }
 
-    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| format!("manifest parse: {e}"))?;
         let mut m = Manifest::default();
         let arts = j
             .get("artifacts")
             .and_then(|a| a.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?;
+            .ok_or_else(|| "manifest missing artifacts[]".to_string())?;
         for a in arts {
             let kind = a.get("kind").and_then(|k| k.as_str()).unwrap_or("");
             let name = a.get("name").and_then(|k| k.as_str()).unwrap_or("").to_string();
@@ -66,7 +67,7 @@ impl Manifest {
                     f: a.get("f").and_then(|k| k.as_usize()).unwrap_or(0),
                     path,
                 }),
-                other => anyhow::bail!("unknown artifact kind {other:?}"),
+                other => return Err(format!("unknown artifact kind {other:?}")),
             }
         }
         Ok(m)

@@ -5,164 +5,30 @@
 //! jax >= 0.5 protos with 64-bit ids; the text parser reassigns ids — see
 //! /opt/xla-example/README.md). Python never runs here: the executables are
 //! compiled once per process by the PJRT CPU client and cached.
+//!
+//! The XLA bindings are not available in the offline registry, so the real
+//! execution path (`runtime::pjrt`) lives behind the `pjrt` cargo feature.
+//! The default build uses `runtime::stub`: the same `Runtime` API, manifest
+//! loading included, whose execute methods return `Err` so callers (the
+//! coordinator worker, the CLI) fall back to the native featurizer.
 
 mod json;
 mod manifest;
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
+
 pub use json::Json;
 pub use manifest::{FeaturizeArtifact, KrrSolveArtifact, Manifest};
 
-use crate::linalg::Mat;
-use anyhow::{Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-
-/// A PJRT CPU client plus a cache of compiled executables.
-///
-/// Not `Send`: each coordinator worker thread builds its own `Runtime`
-/// (PJRT handles are raw pointers). Compilation happens lazily on first
-/// use of each artifact and is amortized across the run.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    dir: PathBuf,
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
-
-impl Runtime {
-    /// Open the artifact directory (must contain manifest.json).
-    pub fn open(dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let manifest = Manifest::load(dir)?;
-        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), exes: RefCell::new(HashMap::new()) })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn artifact_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    fn executable(&self, name: &str, path: &Path) -> Result<()> {
-        if self.exes.borrow().contains_key(name) {
-            return Ok(());
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parse HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
-        self.exes.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    fn run2(&self, name: &str, a: xla::Literal, b: xla::Literal) -> Result<xla::Literal> {
-        let exes = self.exes.borrow();
-        let exe = exes.get(name).expect("executable cached");
-        let out = exe.execute::<xla::Literal>(&[a, b])?;
-        let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple1()?)
-    }
-
-    fn run3(
-        &self,
-        name: &str,
-        a: xla::Literal,
-        b: xla::Literal,
-        c: xla::Literal,
-    ) -> Result<xla::Literal> {
-        let exes = self.exes.borrow();
-        let exe = exes.get(name).expect("executable cached");
-        let out = exe.execute::<xla::Literal>(&[a, b, c])?;
-        let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple1()?)
-    }
-
-    /// Featurize `x` (n x d) against `w` (m x d) through the AOT executable
-    /// for (family, d). Pads rows to the artifact's block_b and chunks
-    /// directions in block_m groups; output is (n, m*s) scaled for a total
-    /// direction count of m (Def.-8 1/sqrt(m)).
-    pub fn featurize(&self, family: &str, x: &Mat, w: &Mat) -> Result<Mat> {
-        let d = x.cols();
-        let art = self
-            .manifest
-            .find_featurize(family, d)
-            .with_context(|| format!("no featurize artifact for family={family} d={d}"))?
-            .clone();
-        anyhow::ensure!(w.cols() == d, "direction dimension mismatch");
-        anyhow::ensure!(
-            w.rows() % art.block_m == 0,
-            "direction count {} must be a multiple of artifact block_m {}",
-            w.rows(),
-            art.block_m
-        );
-        self.executable(&art.name, &art.path)?;
-
-        let (n, m, s) = (x.rows(), w.rows(), art.s);
-        let (bb, bm) = (art.block_b, art.block_m);
-        let n_pad = n.div_ceil(bb) * bb;
-        // the graph embeds 1/sqrt(block_m); rescale for m total directions
-        let rescale = ((bm as f64) / (m as f64)).sqrt() as f32;
-
-        let mut out = Mat::zeros(n, m * s);
-        let mut x_block = vec![0.0f32; bb * d];
-        for rb in (0..n_pad).step_by(bb) {
-            let rows_here = bb.min(n.saturating_sub(rb));
-            if rows_here == 0 {
-                break;
-            }
-            x_block.fill(0.0);
-            for r in 0..rows_here {
-                for c in 0..d {
-                    x_block[r * d + c] = x[(rb + r, c)] as f32;
-                }
-            }
-            let x_lit = xla::Literal::vec1(&x_block).reshape(&[bb as i64, d as i64])?;
-            for mb in (0..m).step_by(bm) {
-                let mut w_block = vec![0.0f32; bm * d];
-                for r in 0..bm {
-                    for c in 0..d {
-                        w_block[r * d + c] = w[(mb + r, c)] as f32;
-                    }
-                }
-                let w_lit = xla::Literal::vec1(&w_block).reshape(&[bm as i64, d as i64])?;
-                let z = self.run2(&art.name, x_lit.clone(), w_lit)?;
-                let zv = z.to_vec::<f32>()?;
-                debug_assert_eq!(zv.len(), bb * bm * s);
-                for r in 0..rows_here {
-                    let orow = out.row_mut(rb + r);
-                    for c in 0..bm * s {
-                        orow[mb * s + c] = (zv[r * bm * s + c] * rescale) as f64;
-                    }
-                }
-            }
-        }
-        Ok(out)
-    }
-
-    /// Solve (G + lambda I) w = b through the AOT Cholesky graph. G must be
-    /// exactly the artifact dimension.
-    pub fn krr_solve(&self, g: &Mat, b: &[f64], lambda: f64) -> Result<Vec<f64>> {
-        let f = g.rows();
-        let art = self
-            .manifest
-            .find_krr_solve(f)
-            .with_context(|| format!("no krr_solve artifact for F={f}"))?
-            .clone();
-        self.executable(&art.name, &art.path)?;
-        let gf: Vec<f32> = g.data().iter().map(|&v| v as f32).collect();
-        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
-        let g_lit = xla::Literal::vec1(&gf).reshape(&[f as i64, f as i64])?;
-        let b_lit = xla::Literal::vec1(&bf).reshape(&[f as i64])?;
-        let l_lit = xla::Literal::scalar(lambda as f32);
-        let wout = self.run3(&art.name, g_lit, b_lit, l_lit)?;
-        Ok(wout.to_vec::<f32>()?.into_iter().map(|v| v as f64).collect())
-    }
-}
 
 /// Default artifact directory: `$GZK_ARTIFACTS` or `<crate>/artifacts`.
 pub fn default_artifact_dir() -> PathBuf {

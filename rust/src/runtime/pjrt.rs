@@ -1,0 +1,166 @@
+//! The real PJRT execution path, compiled only with `--features pjrt`
+//! (requires the `xla` bindings, which are not in the offline registry —
+//! add the dependency in Cargo.toml when building on a machine that has
+//! them). API-identical to `runtime::stub::Runtime`.
+
+use super::manifest::Manifest;
+use crate::linalg::Mat;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus a cache of compiled executables.
+///
+/// Not `Send`: each coordinator worker thread builds its own `Runtime`
+/// (PJRT handles are raw pointers). Compilation happens lazily on first
+/// use of each artifact and is amortized across the run.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    #[allow(dead_code)]
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+fn err<E: std::fmt::Debug>(what: &str) -> impl Fn(E) -> String + '_ {
+    move |e| format!("{what}: {e:?}")
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> Result<Runtime, String> {
+        let client = xla::PjRtClient::cpu().map_err(err("PJRT CPU client"))?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), exes: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, name: &str, path: &Path) -> Result<(), String> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| "artifact path not utf-8".to_string())?,
+        )
+        .map_err(err("parse HLO text"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(err("compile"))?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn run2(&self, name: &str, a: xla::Literal, b: xla::Literal) -> Result<xla::Literal, String> {
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("executable cached");
+        let out = exe.execute::<xla::Literal>(&[a, b]).map_err(err("execute"))?;
+        let lit = out[0][0].to_literal_sync().map_err(err("fetch output"))?;
+        lit.to_tuple1().map_err(err("untuple output"))
+    }
+
+    fn run3(
+        &self,
+        name: &str,
+        a: xla::Literal,
+        b: xla::Literal,
+        c: xla::Literal,
+    ) -> Result<xla::Literal, String> {
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("executable cached");
+        let out = exe.execute::<xla::Literal>(&[a, b, c]).map_err(err("execute"))?;
+        let lit = out[0][0].to_literal_sync().map_err(err("fetch output"))?;
+        lit.to_tuple1().map_err(err("untuple output"))
+    }
+
+    /// Featurize `x` (n x d) against `w` (m x d) through the AOT executable
+    /// for (family, d). Pads rows to the artifact's block_b and chunks
+    /// directions in block_m groups; output is (n, m*s) scaled for a total
+    /// direction count of m (Def.-8 1/sqrt(m)).
+    pub fn featurize(&self, family: &str, x: &Mat, w: &Mat) -> Result<Mat, String> {
+        let d = x.cols();
+        let art = self
+            .manifest
+            .find_featurize(family, d)
+            .ok_or_else(|| format!("no featurize artifact for family={family} d={d}"))?
+            .clone();
+        if w.cols() != d {
+            return Err("direction dimension mismatch".to_string());
+        }
+        if w.rows() % art.block_m != 0 {
+            return Err(format!(
+                "direction count {} must be a multiple of artifact block_m {}",
+                w.rows(),
+                art.block_m
+            ));
+        }
+        self.executable(&art.name, &art.path)?;
+
+        let (n, m, s) = (x.rows(), w.rows(), art.s);
+        let (bb, bm) = (art.block_b, art.block_m);
+        let n_pad = n.div_ceil(bb) * bb;
+        // the graph embeds 1/sqrt(block_m); rescale for m total directions
+        let rescale = ((bm as f64) / (m as f64)).sqrt() as f32;
+
+        let mut out = Mat::zeros(n, m * s);
+        let mut x_block = vec![0.0f32; bb * d];
+        for rb in (0..n_pad).step_by(bb) {
+            let rows_here = bb.min(n.saturating_sub(rb));
+            if rows_here == 0 {
+                break;
+            }
+            x_block.fill(0.0);
+            for r in 0..rows_here {
+                for c in 0..d {
+                    x_block[r * d + c] = x[(rb + r, c)] as f32;
+                }
+            }
+            let x_lit = xla::Literal::vec1(&x_block)
+                .reshape(&[bb as i64, d as i64])
+                .map_err(err("reshape x"))?;
+            for mb in (0..m).step_by(bm) {
+                let mut w_block = vec![0.0f32; bm * d];
+                for r in 0..bm {
+                    for c in 0..d {
+                        w_block[r * d + c] = w[(mb + r, c)] as f32;
+                    }
+                }
+                let w_lit = xla::Literal::vec1(&w_block)
+                    .reshape(&[bm as i64, d as i64])
+                    .map_err(err("reshape w"))?;
+                let z = self.run2(&art.name, x_lit.clone(), w_lit)?;
+                let zv = z.to_vec::<f32>().map_err(err("read z"))?;
+                debug_assert_eq!(zv.len(), bb * bm * s);
+                for r in 0..rows_here {
+                    let orow = out.row_mut(rb + r);
+                    for c in 0..bm * s {
+                        orow[mb * s + c] = (zv[r * bm * s + c] * rescale) as f64;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Solve (G + lambda I) w = b through the AOT Cholesky graph. G must be
+    /// exactly the artifact dimension.
+    pub fn krr_solve(&self, g: &Mat, b: &[f64], lambda: f64) -> Result<Vec<f64>, String> {
+        let f = g.rows();
+        let art = self
+            .manifest
+            .find_krr_solve(f)
+            .ok_or_else(|| format!("no krr_solve artifact for F={f}"))?
+            .clone();
+        self.executable(&art.name, &art.path)?;
+        let gf: Vec<f32> = g.data().iter().map(|&v| v as f32).collect();
+        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let g_lit = xla::Literal::vec1(&gf)
+            .reshape(&[f as i64, f as i64])
+            .map_err(err("reshape g"))?;
+        let b_lit = xla::Literal::vec1(&bf).reshape(&[f as i64]).map_err(err("reshape b"))?;
+        let l_lit = xla::Literal::scalar(lambda as f32);
+        let wout = self.run3(&art.name, g_lit, b_lit, l_lit)?;
+        Ok(wout.to_vec::<f32>().map_err(err("read w"))?.into_iter().map(|v| v as f64).collect())
+    }
+}

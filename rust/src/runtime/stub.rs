@@ -1,0 +1,60 @@
+//! Std-only stand-in for the PJRT runtime, compiled when the `pjrt` cargo
+//! feature is off (the offline registry has no XLA bindings).
+//!
+//! The API mirrors `runtime::pjrt::Runtime` exactly: opening a manifest
+//! works (so `gzk info` and artifact tooling keep functioning), but every
+//! execute method returns `Err`, which the coordinator worker treats as
+//! "fall back to the native featurizer". This keeps the `Backend::Pjrt`
+//! plumbing testable without the accelerator stack.
+
+use super::manifest::Manifest;
+use crate::linalg::Mat;
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: gzk was built without the `pjrt` cargo feature";
+
+/// Stub runtime: manifest-aware, execution-free.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> Result<Runtime, String> {
+        Ok(Runtime { manifest: Manifest::load(dir)? })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Always errors in the stub build; callers fall back to native.
+    pub fn featurize(&self, _family: &str, _x: &Mat, _w: &Mat) -> Result<Mat, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Always errors in the stub build; callers fall back to native.
+    pub fn krr_solve(&self, _g: &Mat, _b: &[f64], _lambda: f64) -> Result<Vec<f64>, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_fails_without_manifest() {
+        assert!(Runtime::open(Path::new("/definitely/not/a/dir")).is_err());
+    }
+
+    #[test]
+    fn execute_methods_error() {
+        let rt = Runtime { manifest: Manifest::default() };
+        let x = Mat::zeros(2, 3);
+        let w = Mat::zeros(4, 3);
+        assert!(rt.featurize("gaussian", &x, &w).is_err());
+        assert!(rt.krr_solve(&Mat::zeros(2, 2), &[0.0, 0.0], 0.1).is_err());
+    }
+}

@@ -1,9 +1,13 @@
 //! Property tests on the coordinator invariants (DESIGN.md §7), using the
 //! in-crate mini property runner (proptest is unavailable offline).
+//!
+//! Cases are drawn across *every* data-oblivious registry method — the
+//! protocol invariants (worker/shard invariance, distributed == single
+//! node, stream == batch, broadcast determinism) are method-agnostic.
 
-use gzk::coordinator::{fit_one_round, Backend, Family, FeatureSpec};
+use gzk::coordinator::{fit_one_round, Backend, FeatureSpec, KernelSpec, Method};
 use gzk::coordinator::{PredictionService, StreamBatch, StreamingKrr};
-use gzk::features::Featurizer;
+use gzk::features::{FeatureSpec as Spec, Featurizer as _};
 use gzk::krr::{FeatureRidge, RidgeStats};
 use gzk::linalg::Mat;
 use gzk::rng::Rng;
@@ -21,17 +25,28 @@ struct Case {
     shard_b: usize,
 }
 
+fn gen_method(rng: &mut Rng) -> Method {
+    // any oblivious registry method, with randomized gegenbauer knobs
+    let oblivious: Vec<Method> =
+        Method::registry().into_iter().filter(|m| m.is_oblivious()).collect();
+    match oblivious[rng.below(oblivious.len())].clone() {
+        Method::Gegenbauer { .. } => {
+            Method::Gegenbauer { q: 3 + rng.below(8), s: 1 + rng.below(3) }
+        }
+        other => other,
+    }
+}
+
 fn gen_case(rng: &mut Rng) -> Case {
     let d = 2 + rng.below(4);
     let n = 20 + rng.below(60);
-    let spec = FeatureSpec {
-        family: Family::Gaussian { bandwidth: 0.5 + rng.uniform() },
-        d,
-        q: 3 + rng.below(8),
-        s: 1 + rng.below(3),
-        m: 8 * (1 + rng.below(6)),
-        seed: rng.next_u64(),
-    };
+    let spec = Spec::new(
+        KernelSpec::Gaussian { bandwidth: 0.5 + rng.uniform() },
+        gen_method(rng),
+        8 * (1 + rng.below(6)),
+        rng.next_u64(),
+    )
+    .bind(d);
     let x = Mat::from_fn(n, d, |_, _| rng.normal());
     let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     Case {
@@ -71,7 +86,7 @@ fn prop_fit_invariant_to_workers_and_sharding() {
 fn prop_distributed_equals_single_node() {
     for_random_cases(0xBEEF, 10, gen_case, |c| {
         let fit = fit_one_round(&c.spec, &c.x, &c.y, c.lambda, c.workers_a, c.shard_a, Backend::Native);
-        let z = c.spec.build().featurize(&c.spec.scale_inputs(&c.x));
+        let z = c.spec.build().featurize(&c.x);
         let reference = FeatureRidge::fit(&z, &c.y, c.lambda);
         for (a, b) in fit.model.weights.iter().zip(&reference.weights) {
             if (a - b).abs() > 1e-8 * (1.0 + a.abs()) {
@@ -101,7 +116,7 @@ fn prop_streaming_equals_batch() {
         if stats.n != c.x.rows() {
             return Err("row loss in stream".into());
         }
-        let z = c.spec.build().featurize(&c.spec.scale_inputs(&c.x));
+        let z = c.spec.build().featurize(&c.x);
         let reference = FeatureRidge::fit(&z, &c.y, c.lambda);
         for (a, b) in model.weights.iter().zip(&reference.weights) {
             if (a - b).abs() > 1e-8 * (1.0 + a.abs()) {
@@ -150,7 +165,7 @@ fn prop_stats_merge_commutative_associative() {
 #[test]
 fn prop_service_answers_every_request_exactly_once() {
     for_random_cases(0xD00D, 6, gen_case, |c| {
-        let z = c.spec.build().featurize(&c.spec.scale_inputs(&c.x));
+        let z = c.spec.build().featurize(&c.x);
         let model = FeatureRidge::fit(&z, &c.y, c.lambda);
         let expect = model.predict(&z);
         let svc = PredictionService::start(
@@ -191,11 +206,14 @@ fn prop_service_answers_every_request_exactly_once() {
 
 #[test]
 fn prop_feature_map_oblivious_reconstruction() {
-    // the broadcast property: two independent builders of the same spec
-    // featurize identically — across every random spec
+    // the broadcast property: two independent builders of the same spec —
+    // one from the value, one from its wire encoding — featurize
+    // identically, across every random (method, kernel, m, seed) spec
     for_random_cases(0x0B11, 20, gen_case, |c| {
         let f1 = c.spec.build();
-        let f2 = c.spec.build();
+        let f2 = FeatureSpec::from_json(&c.spec.to_json())
+            .map_err(|e| format!("wire decode: {e}"))?
+            .build();
         let z1 = f1.featurize(&c.x);
         let z2 = f2.featurize(&c.x);
         if z1 != z2 {

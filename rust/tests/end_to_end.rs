@@ -2,41 +2,34 @@
 //! validators on the synthetic datasets, at test-friendly sizes.
 
 use gzk::data;
-use gzk::features::{
-    FastFoodFeatures, Featurizer, FourierFeatures, GegenbauerFeatures, MaclaurinFeatures,
-    NystromFeatures, PolySketchFeatures, RadialTable,
-};
+use gzk::features::{FeatureSpec, Featurizer, GegenbauerFeatures, KernelSpec, Method, RadialTable};
 use gzk::kernels::Kernel;
 use gzk::kmeans::{greedy_accuracy, kmeans};
 use gzk::krr::{mse, ExactKrr, FeatureRidge};
 use gzk::spectral::spectral_epsilon;
 
 #[test]
-fn all_methods_learn_elevation() {
-    // every featurizer must beat the predict-the-mean baseline on the
-    // S^2 elevation task (Table-2 smoke at small n)
+fn all_registered_methods_learn_elevation() {
+    // every featurizer in the registry must beat the predict-the-mean
+    // baseline on the S^2 elevation task (Table-2 smoke at small n)
     let ds = data::elevation(1200, 3);
     let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.2, 3);
     let ybar = y_tr.iter().sum::<f64>() / y_tr.len() as f64;
     let base = y_te.iter().map(|v| (v - ybar) * (v - ybar)).sum::<f64>() / y_te.len() as f64;
 
-    let d = 3;
-    let m = 512;
-    let kernel = Kernel::Gaussian { bandwidth: 1.0 };
-    let methods: Vec<(&str, Box<dyn Featurizer>)> = vec![
-        ("gegenbauer", Box::new(GegenbauerFeatures::new(RadialTable::gaussian(d, 10, 2), m / 2, 1))),
-        ("fourier", Box::new(FourierFeatures::new(d, m, 1.0, 2))),
-        ("fastfood", Box::new(FastFoodFeatures::new(d, m, 1.0, 3))),
-        ("maclaurin", Box::new(MaclaurinFeatures::new_gaussian(d, m, 1.0, 4))),
-        ("polysketch", Box::new(PolySketchFeatures::new(d, m, 6, 1.0, 5))),
-        ("nystrom", Box::new(NystromFeatures::fit(kernel, &x_tr, m / 2, 1e-3, 6))),
-    ];
-    for (name, feat) in methods {
+    for (i, method) in Method::registry().into_iter().enumerate() {
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            method.tuned(10, 2),
+            512,
+            1 + i as u64,
+        );
+        let feat = spec.build_with_data(&x_tr);
         let z_tr = feat.featurize(&x_tr);
         let z_te = feat.featurize(&x_te);
         let model = FeatureRidge::fit(&z_tr, &y_tr, 1e-2);
         let err = mse(&model.predict(&z_te), &y_te);
-        assert!(err < 0.8 * base, "{name}: mse {err} vs baseline {base}");
+        assert!(err < 0.8 * base, "{}: mse {err} vs baseline {base}", feat.name());
     }
 }
 

@@ -12,6 +12,10 @@ use gzk::rng::Rng;
 use gzk::runtime::{default_artifact_dir, Runtime};
 
 fn runtime_or_skip() -> Option<Runtime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping PJRT test: built without the `pjrt` feature");
+        return None;
+    }
     let dir = default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping PJRT test: no artifacts at {dir:?} (run `make artifacts`)");

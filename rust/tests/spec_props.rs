@@ -1,0 +1,90 @@
+//! Property tests for the `features::spec` registry: JSON round-tripping
+//! (`encode -> decode -> build`) and the determinism invariant the
+//! coordinator protocol relies on — two builds from the same spec produce
+//! bit-identical feature matrices, even when one build happened on the far
+//! side of a wire encoding. Extends the fixed-spec check in
+//! `coordinator::protocol::tests::determinism_across_builders` to random
+//! specs across every kernel family and oblivious method.
+
+use gzk::coordinator::FeatureSpec as WireSpec;
+use gzk::features::{FeatureSpec, Featurizer as _, KernelSpec, Method};
+use gzk::linalg::Mat;
+use gzk::rng::Rng;
+use gzk::testutil::for_random_cases;
+
+struct Case {
+    spec: WireSpec,
+    x: Mat,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let d = 2 + rng.below(4);
+    let kernel = match rng.below(4) {
+        0 => KernelSpec::Gaussian { bandwidth: 0.5 + rng.uniform() },
+        1 => KernelSpec::Exponential { gamma: 0.4 + 0.5 * rng.uniform() },
+        2 => KernelSpec::Polynomial { p: 2 + rng.below(3), c: rng.uniform() },
+        _ => KernelSpec::Ntk { depth: 2 + rng.below(2) },
+    };
+    // non-gaussian kernels pair with the Gegenbauer method only; the
+    // gaussian kernel exercises every oblivious registry method
+    let method = if matches!(kernel, KernelSpec::Gaussian { .. }) {
+        let oblivious: Vec<Method> =
+            Method::registry().into_iter().filter(|m| m.is_oblivious()).collect();
+        match oblivious[rng.below(oblivious.len())].clone() {
+            Method::Gegenbauer { .. } => {
+                Method::Gegenbauer { q: 3 + rng.below(8), s: 1 + rng.below(3) }
+            }
+            other => other,
+        }
+    } else {
+        Method::Gegenbauer { q: 3 + rng.below(8), s: 1 + rng.below(3) }
+    };
+    let spec = FeatureSpec::new(kernel, method, 8 + rng.below(64), rng.next_u64()).bind(d);
+    let x = Mat::from_fn(9, d, |_, _| rng.normal() * 0.6);
+    Case { spec, x }
+}
+
+#[test]
+fn prop_spec_json_roundtrip_is_lossless() {
+    for_random_cases(0x5EC0, 24, gen_case, |c| {
+        let text = c.spec.to_json();
+        let decoded = WireSpec::from_json(&text).map_err(|e| format!("decode {text}: {e}"))?;
+        if decoded != c.spec {
+            return Err(format!("roundtrip changed the spec: {text}"));
+        }
+        // the unbound form round-trips too
+        let unbound = FeatureSpec::from_json(&c.spec.spec.to_json())
+            .map_err(|e| format!("unbound decode: {e}"))?;
+        if unbound != c.spec.spec {
+            return Err("unbound roundtrip changed the spec".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decoded_spec_builds_bit_identical_features() {
+    for_random_cases(0x5EC1, 16, gen_case, |c| {
+        let z_local = c.spec.build().featurize(&c.x);
+        if z_local.cols() != c.spec.feature_dim() {
+            return Err(format!(
+                "feature_dim {} != built dim {}",
+                c.spec.feature_dim(),
+                z_local.cols()
+            ));
+        }
+        let decoded = WireSpec::from_json(&c.spec.to_json()).map_err(|e| e.to_string())?;
+        let z_wire = decoded.build().featurize(&c.x);
+        if z_local != z_wire {
+            return Err(format!(
+                "wire rebuild differs for {}",
+                c.spec.spec.method.name()
+            ));
+        }
+        // and a second local build agrees as well (pure determinism)
+        if z_local != c.spec.build().featurize(&c.x) {
+            return Err("two local builds differ".into());
+        }
+        Ok(())
+    });
+}
