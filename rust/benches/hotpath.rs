@@ -2,6 +2,13 @@
 //! throughput for every method in the registry, the native Gegenbauer
 //! config sweep vs a pure-matmul roofline of equal flop count, plus the
 //! serving batcher's latency under load.
+//!
+//! Besides the human-readable tables, the run emits a machine-readable
+//! `BENCH_hotpath.json` (path overridable via `GZK_BENCH_JSON`) with the
+//! per-method throughput rows and the batcher latency percentiles, so the
+//! perf trajectory is tracked across PRs instead of scraped from stdout —
+//! CI uploads the file as a build artifact.
+//!
 //! Run: cargo bench --bench hotpath
 
 use gzk::bench::{fmt_secs, time_it, Table};
@@ -16,14 +23,30 @@ fn gaussian() -> KernelSpec {
     KernelSpec::Gaussian { bandwidth: 1.0 }
 }
 
+struct MethodRow {
+    method: &'static str,
+    f_dim: usize,
+    rows_per_s: f64,
+    secs_per_call: f64,
+}
+
+struct ServingStats {
+    req_per_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    batches: usize,
+    max_batch: usize,
+}
+
 /// Every registered method at one budget — a newly registered featurizer
 /// shows up here with no bench changes.
-fn registry_bench() {
+fn registry_bench() -> Vec<MethodRow> {
     println!("== featurize throughput, every registered method ==");
     let (d, n, budget) = (3usize, 2048usize, 512usize);
     let mut rng = Rng::new(2);
     let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.5);
     let mut t = Table::new(vec!["method", "F", "rows/s", "Mfeat/s", "time/call"]);
+    let mut rows = Vec::new();
     for method in Method::registry() {
         let spec = FeatureSpec::new(gaussian(), method.tuned(12, 2), budget, 1);
         let feat = spec.build_with_data(&x);
@@ -36,8 +59,15 @@ fn registry_bench() {
             format!("{:.1}", rows_per_s * feat.dim() as f64 / 1e6),
             fmt_secs(timing.median),
         ]);
+        rows.push(MethodRow {
+            method: feat.name(),
+            f_dim: feat.dim(),
+            rows_per_s,
+            secs_per_call: timing.median,
+        });
     }
     t.print();
+    rows
 }
 
 fn featurize_bench() {
@@ -85,7 +115,7 @@ fn featurize_bench() {
     );
 }
 
-fn serving_bench() {
+fn serving_bench() -> ServingStats {
     println!("\n== serving batcher ==");
     let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 12, s: 2 }, 512, 1).bind(3);
     let mut rng = Rng::new(4);
@@ -106,18 +136,54 @@ fn serving_bench() {
     }
     let wall = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat[n_req / 2];
+    let p99 = lat[n_req * 99 / 100];
     println!(
         "sequential client: {:.0} req/s, p50 {} p99 {}",
         n_req as f64 / wall,
-        fmt_secs(lat[n_req / 2]),
-        fmt_secs(lat[n_req * 99 / 100])
+        fmt_secs(p50),
+        fmt_secs(p99)
     );
     let m = svc.metrics();
     println!("batches {} (max batch {})", m.batches, m.max_batch_seen);
+    ServingStats {
+        req_per_s: n_req as f64 / wall,
+        p50_us: p50 * 1e6,
+        p99_us: p99 * 1e6,
+        batches: m.batches,
+        max_batch: m.max_batch_seen,
+    }
+}
+
+/// Emit the machine-readable results (CI uploads this as an artifact).
+fn write_json(methods: &[MethodRow], serving: &ServingStats) {
+    let path =
+        std::env::var("GZK_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let method_rows: Vec<String> = methods
+        .iter()
+        .map(|r| {
+            format!(
+                r#"{{"method":"{}","f":{},"rows_per_s":{:.1},"secs_per_call":{:e}}}"#,
+                r.method, r.f_dim, r.rows_per_s, r.secs_per_call
+            )
+        })
+        .collect();
+    let text = format!(
+        r#"{{"format":1,"bench":"hotpath","methods":[{}],"serving":{{"req_per_s":{:.1},"p50_us":{:.2},"p99_us":{:.2},"batches":{},"max_batch":{}}}}}"#,
+        method_rows.join(","),
+        serving.req_per_s,
+        serving.p50_us,
+        serving.p99_us,
+        serving.batches,
+        serving.max_batch
+    );
+    std::fs::write(&path, text).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("\nwrote {path}");
 }
 
 fn main() {
-    registry_bench();
+    let methods = registry_bench();
     featurize_bench();
-    serving_bench();
+    let serving = serving_bench();
+    write_json(&methods, &serving);
 }

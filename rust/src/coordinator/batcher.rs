@@ -1,20 +1,27 @@
 //! Dynamic batcher for serving predictions (the vLLM-router-shaped piece
 //! of L3): requests queue up, the service thread drains up to `max_batch`
-//! of them or waits at most `max_wait`, featurizes the batch in one shot
-//! (amortizing the Gegenbauer recurrence across rows) and answers each
-//! request on its own reply channel.
+//! of them or waits at most `max_wait`, runs the whole batch through the
+//! model in one shot (amortizing the Gegenbauer recurrence across rows)
+//! and answers each request on its own reply channel.
+//!
+//! The service is generic over the fitted-model subsystem: any
+//! [`Model`](crate::model::Model) — ridge, k-means assignment, KPCA
+//! embedding, loaded fresh from a [`ModelStore`](crate::model::ModelStore)
+//! artifact or fitted in-process — serves through the same loop via
+//! [`PredictionService::serve`]. [`PredictionService::start`] remains the
+//! scalar-ridge convenience used by the KRR demos.
 
 use super::protocol::FeatureSpec;
-use crate::features::Featurizer;
 use crate::krr::FeatureRidge;
 use crate::linalg::Mat;
+use crate::model::{FittedMap, Model, RidgeModel};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 struct Request {
     x: Vec<f64>,
-    reply: Sender<f64>,
+    reply: Sender<Vec<f64>>,
 }
 
 /// Telemetry the serving bench reads.
@@ -34,8 +41,14 @@ pub struct ServiceClient {
 }
 
 impl ServiceClient {
-    /// Blocking predict for one point.
+    /// Blocking predict for one point; the model's first output (the
+    /// regression value / cluster index / first principal coordinate).
     pub fn predict(&self, x: &[f64]) -> Result<f64, &'static str> {
+        self.predict_vec(x).map(|v| v[0])
+    }
+
+    /// Blocking predict for one point, all `output_dim` values.
+    pub fn predict_vec(&self, x: &[f64]) -> Result<Vec<f64>, &'static str> {
         let (reply_tx, reply_rx) = channel();
         self.tx
             .send(Request { x: x.to_vec(), reply: reply_tx })
@@ -52,21 +65,31 @@ pub struct PredictionService {
 }
 
 impl PredictionService {
-    /// Spawn the service thread around a trained model.
+    /// Spawn the service thread around a trained scalar ridge model (the
+    /// one-round protocol's output). Convenience wrapper over
+    /// [`serve`](PredictionService::serve).
     pub fn start(
         spec: FeatureSpec,
         model: FeatureRidge,
         max_batch: usize,
         max_wait: Duration,
     ) -> PredictionService {
+        let map = FittedMap::rebuild(spec, None)
+            .unwrap_or_else(|e| panic!("PredictionService::start: {e}"));
+        Self::serve(Box::new(RidgeModel::from_parts(map, model)), max_batch, max_wait)
+    }
+
+    /// Spawn the service thread around **any** fitted model — including
+    /// one just loaded from a `ModelStore` artifact, which is how the
+    /// serving demo runs: no refitting in the serving process.
+    pub fn serve(model: Box<dyn Model>, max_batch: usize, max_wait: Duration) -> PredictionService {
         assert!(max_batch >= 1);
+        assert!(model.output_dim() >= 1, "model must emit at least one output");
+        let d = model.feature_spec().d;
         let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let metrics_thread = Arc::clone(&metrics);
         let handle = std::thread::spawn(move || {
-            // registry-built: serves any oblivious method's model
-            let feat: Box<dyn Featurizer> = spec.build();
-            let d = spec.d;
             let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
             'serve: loop {
                 // block for the first request of a batch
@@ -96,14 +119,13 @@ impl PredictionService {
                         Err(_) => break,
                     }
                 }
-                // featurize the whole batch at once
+                // run the whole batch through the model at once
                 let t0 = Instant::now();
                 let mut x = Mat::zeros(pending.len(), d);
                 for (i, req) in pending.iter().enumerate() {
                     x.row_mut(i).copy_from_slice(&req.x);
                 }
-                let z = feat.featurize(&x);
-                let preds = model.predict(&z);
+                let out = model.predict(&x);
                 // metrics BEFORE replying: once a client holds its answer,
                 // the request is guaranteed to be counted (tested by
                 // prop_service_answers_every_request_exactly_once)
@@ -115,8 +137,8 @@ impl PredictionService {
                     m.batch_secs_total += dt;
                     m.max_batch_seen = m.max_batch_seen.max(pending.len());
                 }
-                for (req, &p) in pending.iter().zip(&preds) {
-                    let _ = req.reply.send(p); // client may have gone away
+                for (i, req) in pending.iter().enumerate() {
+                    let _ = req.reply.send(out.row(i).to_vec()); // client may have gone away
                 }
                 pending.clear();
             }
@@ -157,6 +179,8 @@ impl Drop for PredictionService {
 mod tests {
     use super::*;
     use crate::coordinator::protocol::{KernelSpec, Method};
+    use crate::features::Featurizer as _;
+    use crate::model::KmeansModel;
     use crate::rng::Rng;
 
     fn trained() -> (FeatureSpec, FeatureRidge, Mat, Vec<f64>) {
@@ -234,5 +258,34 @@ mod tests {
             j.join().unwrap();
         }
         assert!(svc.metrics().max_batch_seen <= 4);
+    }
+
+    #[test]
+    fn serves_a_reloaded_kmeans_artifact() {
+        // the generic path: a non-ridge model, loaded from its artifact,
+        // answers through the same batcher with multi-output predict_vec
+        let mut rng = Rng::new(23);
+        let x = Mat::from_fn(40, 2, |i, _| {
+            let center = if i % 2 == 0 { 2.0 } else { -2.0 };
+            center + 0.2 * rng.normal()
+        });
+        let spec = crate::features::FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 5, s: 1 },
+            24,
+            31,
+        )
+        .bind(2);
+        let fitted = KmeansModel::fit(spec, &x, 2, 30).unwrap();
+        let expect = fitted.assign(&x);
+        let loaded =
+            crate::model::from_artifact(&crate::model::Model::to_artifact(&fitted)).unwrap();
+        let svc = PredictionService::serve(loaded, 8, Duration::ZERO);
+        let client = svc.client();
+        for i in 0..x.rows() {
+            let out = client.predict_vec(x.row(i)).unwrap();
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0], expect[i] as f64, "row {i}");
+        }
     }
 }

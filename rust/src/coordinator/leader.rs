@@ -13,6 +13,7 @@ use super::protocol::{FeatureSpec, ShardStats, ShardTask};
 use super::worker::{worker_loop, Backend, WorkerConfig};
 use crate::krr::{FeatureRidge, RidgeStats};
 use crate::linalg::Mat;
+use crate::model::{FittedMap, RidgeModel};
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -119,6 +120,27 @@ pub fn fit_one_round(
     }
 }
 
+/// The one-round protocol finished into a deployable artifact: run
+/// [`fit_one_round`], then bundle the solved weights with the broadcast
+/// spec as a [`RidgeModel`] — ready for a
+/// [`ModelStore`](crate::model::ModelStore) and the serving batcher.
+/// Panics if the spec's method is data-dependent (those cannot be
+/// broadcast; fit them with [`RidgeModel::fit`] instead).
+pub fn fit_ridge(
+    spec: &FeatureSpec,
+    x: &Mat,
+    y: &[f64],
+    lambda: f64,
+    n_workers: usize,
+    rows_per_shard: usize,
+    backend: Backend,
+) -> (RidgeModel, DistributedFit) {
+    let fit = fit_one_round(spec, x, y, lambda, n_workers, rows_per_shard, backend);
+    let map = FittedMap::rebuild(spec.clone(), None)
+        .unwrap_or_else(|e| panic!("fit_ridge: {e}"));
+    (RidgeModel::from_parts(map, fit.model.clone()), fit)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +226,21 @@ mod tests {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
         assert_eq!(fit.stats.n, 48);
+    }
+
+    #[test]
+    fn fit_ridge_bundles_the_one_round_weights() {
+        // the model finished by fit_ridge predicts exactly like the raw
+        // one-round weights applied to locally built features — and its
+        // artifact round-trips (the train half of train-once/serve-later)
+        let (x, y) = dataset(45);
+        let (model, fit) = fit_ridge(&spec(), &x, &y, 0.05, 2, 9, Backend::Native);
+        let z = spec().build().featurize(&x);
+        assert_eq!(model.predict_vec(&x), fit.model.predict(&z));
+        let loaded = crate::model::from_artifact(&model.to_artifact()).expect("roundtrip");
+        use crate::model::Model as _;
+        assert_eq!(loaded.predict(&x), model.predict(&x));
+        assert_eq!(loaded.feature_spec(), &spec());
     }
 
     #[test]

@@ -4,9 +4,13 @@
 //! * [`protocol`] — the broadcast `FeatureSpec` (a re-export of
 //!   [`crate::features::BoundSpec`]) and the shard/stats types;
 //! * [`worker`] — worker threads (native or PJRT featurization backend);
-//! * [`leader`] — one-round distributed KRR: broadcast spec, one reduction;
+//! * [`leader`] — one-round distributed KRR: broadcast spec, one reduction
+//!   ([`fit_one_round`]), optionally finished into a persistable
+//!   [`RidgeModel`](crate::model::RidgeModel) ([`fit_ridge`]);
 //! * [`streaming`] — single-pass streaming KRR with backpressure;
-//! * [`batcher`] — dynamic batcher serving predictions.
+//! * [`batcher`] — dynamic batcher serving predictions; serves any fitted
+//!   [`Model`](crate::model::Model), including one reloaded from a
+//!   [`ModelStore`](crate::model::ModelStore) artifact.
 //!
 //! ```
 //! use gzk::coordinator::{fit_one_round, Backend};
@@ -37,7 +41,7 @@ pub mod streaming;
 pub mod worker;
 
 pub use batcher::{PredictionService, ServeMetrics, ServiceClient};
-pub use leader::{fit_one_round, DistributedFit};
+pub use leader::{fit_one_round, fit_ridge, DistributedFit};
 pub use protocol::{FeatureSpec, KernelSpec, Method, ShardStats, ShardTask};
 pub use streaming::{StreamBatch, StreamHandle, StreamingKrr};
 pub use worker::{Backend, WorkerConfig};

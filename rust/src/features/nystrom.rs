@@ -86,6 +86,15 @@ impl NystromFeatures {
             landmarks.row_mut(r).copy_from_slice(x_train.row(i));
         }
 
+        Self::from_landmarks(kernel, landmarks)
+    }
+
+    /// Reconstruct the featurizer from its landmark set alone — the model
+    /// artifact path: `fit` ends here too, so a featurizer rebuilt from
+    /// persisted landmarks is bit-identical to the freshly fitted one
+    /// (K_LL and its Cholesky are deterministic functions of the
+    /// landmarks).
+    pub fn from_landmarks(kernel: Kernel, landmarks: Mat) -> Self {
         let kll = kernel.gram(&landmarks);
         let (chol, _) = Cholesky::new_with_jitter(&kll, 1e-8);
         NystromFeatures { kernel, landmarks, chol }
@@ -163,6 +172,19 @@ mod tests {
             let zi: f64 = z.row(i).iter().map(|v| v * v).sum();
             assert!(zi <= 1.0 + 1e-6, "diag {zi}");
         }
+    }
+
+    #[test]
+    fn rebuild_from_landmarks_is_bit_identical() {
+        // the artifact round-trip invariant: fitting and rebuilding from
+        // the fitted landmarks produce the same feature map exactly
+        let mut rng = crate::rng::Rng::new(124);
+        let x = Mat::from_fn(35, 3, |_, _| rng.normal() * 0.8);
+        let k = Kernel::Gaussian { bandwidth: 1.0 };
+        let fitted = NystromFeatures::fit(k.clone(), &x, 12, 1e-4, 9);
+        let rebuilt = NystromFeatures::from_landmarks(k, fitted.landmarks().clone());
+        assert_eq!(fitted.featurize(&x), rebuilt.featurize(&x));
+        assert_eq!(fitted.dim(), rebuilt.dim());
     }
 
     #[test]

@@ -332,23 +332,11 @@ impl FeatureSpec {
                 let bw = self.gaussian_bandwidth()?;
                 Ok(Box::new(PolySketchFeatures::new(d, self.m, degree, bw, self.seed)))
             }
-            Method::Nystrom { lambda } => {
+            Method::Nystrom { .. } => {
                 let x = x_train.ok_or_else(|| {
                     "nystrom is data-dependent: pass training rows (build_with_data)".to_string()
                 })?;
-                if x.cols() != d {
-                    return Err(format!(
-                        "nystrom: training rows have d={}, spec bound to d={d}",
-                        x.cols()
-                    ));
-                }
-                Ok(Box::new(NystromFeatures::fit(
-                    self.kernel.to_kernel(),
-                    x,
-                    self.m,
-                    lambda,
-                    self.seed,
-                )))
+                Ok(Box::new(self.build_nystrom(d, x)?))
             }
         }
     }
@@ -377,6 +365,29 @@ impl FeatureSpec {
         let table = self.radial_table(d)?;
         let dirs = (self.m / table.s).max(1);
         Some(GegenbauerFeatures::new(table, dirs, self.seed))
+    }
+
+    /// The concrete Nystrom featurizer of this spec fitted on training
+    /// rows — the single place the data-dependent baseline is constructed
+    /// (`try_build` wraps this; the model artifact codec reads its
+    /// landmarks for persistence and rebuilds from them on load).
+    pub fn build_nystrom(&self, d: usize, x_train: &Mat) -> Result<NystromFeatures, String> {
+        let lambda = match self.method {
+            Method::Nystrom { lambda } => lambda,
+            _ => {
+                return Err(format!(
+                    "build_nystrom on method {:?}",
+                    self.method.name()
+                ))
+            }
+        };
+        if x_train.cols() != d {
+            return Err(format!(
+                "nystrom: training rows have d={}, spec bound to d={d}",
+                x_train.cols()
+            ));
+        }
+        Ok(NystromFeatures::fit(self.kernel.to_kernel(), x_train, self.m, lambda, self.seed))
     }
 
     /// The radial table the Gegenbauer path of this spec uses (independent
@@ -418,7 +429,9 @@ impl FeatureSpec {
         Self::from_json_value(&Json::parse(text)?)
     }
 
-    fn from_json_value(j: &Json) -> Result<FeatureSpec, String> {
+    /// Decode from an already-parsed JSON value (the model artifact codec
+    /// embeds specs inside a larger document).
+    pub(crate) fn from_json_value(j: &Json) -> Result<FeatureSpec, String> {
         let kernel = KernelSpec::from_json_value(
             j.get("kernel").ok_or_else(|| "spec json: missing \"kernel\"".to_string())?,
         )?;
@@ -484,9 +497,14 @@ impl BoundSpec {
     }
 
     pub fn from_json(text: &str) -> Result<BoundSpec, String> {
-        let j = Json::parse(text)?;
-        let d = req_usize(&j, "d")?;
-        Ok(BoundSpec { spec: FeatureSpec::from_json_value(&j)?, d })
+        Self::from_json_value(&Json::parse(text)?)
+    }
+
+    /// Decode from an already-parsed JSON value (the model artifact codec
+    /// embeds bound specs inside a larger document).
+    pub(crate) fn from_json_value(j: &Json) -> Result<BoundSpec, String> {
+        let d = req_usize(j, "d")?;
+        Ok(BoundSpec { spec: FeatureSpec::from_json_value(j)?, d })
     }
 }
 

@@ -18,6 +18,34 @@ pub struct KmeansResult {
     pub iterations: usize,
 }
 
+impl KmeansResult {
+    /// Out-of-sample assignment: nearest fitted centroid per feature row.
+    /// Ties break to the lowest index, exactly like the Lloyd assignment
+    /// step, so on a converged fit the training rows reproduce
+    /// `assignments`. This is what `model::KmeansModel::predict` serves.
+    pub fn assign(&self, z: &Mat) -> Vec<usize> {
+        assign_to_centroids(z, &self.centroids)
+    }
+}
+
+/// Nearest-centroid assignment of feature rows (ties to the lowest index).
+pub fn assign_to_centroids(z: &Mat, centroids: &Mat) -> Vec<usize> {
+    assert_eq!(z.cols(), centroids.cols(), "feature/centroid dim mismatch");
+    (0..z.rows())
+        .map(|i| {
+            let row = z.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..centroids.rows() {
+                let d = sq_dist(row, centroids.row(c));
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            best.1
+        })
+        .collect()
+}
+
 fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y)).sum()
 }
@@ -207,18 +235,7 @@ impl StreamingKmeans {
 
     /// Assign a batch to the current centroids.
     pub fn assign(&self, z: &Mat) -> Vec<usize> {
-        (0..z.rows())
-            .map(|i| {
-                let row = z.row(i);
-                (0..self.centroids.rows())
-                    .min_by(|&a, &b| {
-                        sq_dist(row, self.centroids.row(a))
-                            .partial_cmp(&sq_dist(row, self.centroids.row(b)))
-                            .unwrap()
-                    })
-                    .unwrap()
-            })
-            .collect()
+        assign_to_centroids(z, &self.centroids)
     }
 
     /// Average squared distance of a batch to its assigned centroids.
@@ -289,6 +306,20 @@ mod tests {
         let o4 = kmeans(&z, 4, 30, 2).objective;
         assert!(o2 < o1);
         assert!(o4 <= o2 + 1e-9);
+    }
+
+    #[test]
+    fn out_of_sample_assign_reproduces_training_assignments() {
+        // Lloyd exits when an assignment pass changes nothing, so the
+        // fitted assignments ARE the nearest-centroid assignments of the
+        // training rows — `assign` must reproduce them exactly
+        let (z, _) = two_blobs(60);
+        let res = kmeans(&z, 2, 100, 7);
+        assert_eq!(res.assign(&z), res.assignments);
+        // and genuinely out-of-sample points go to the nearest centroid
+        let probe = Mat::from_vec(2, 2, vec![-2.0, 0.0, 2.0, 0.0]);
+        let a = res.assign(&probe);
+        assert_ne!(a[0], a[1], "blob centers must land in different clusters");
     }
 
     #[test]

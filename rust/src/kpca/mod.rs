@@ -53,6 +53,25 @@ impl KernelPca {
         KernelPca { mean, components, eigenvalues: evals[..r].to_vec() }
     }
 
+    /// Rebuild a fitted model from persisted parts (the model artifact
+    /// codec); inverse of reading [`mean`](KernelPca::mean) /
+    /// [`components`](KernelPca::components) / `eigenvalues`.
+    pub fn from_parts(mean: Vec<f64>, components: Mat, eigenvalues: Vec<f64>) -> KernelPca {
+        assert_eq!(components.cols(), eigenvalues.len(), "rank/eigenvalue mismatch");
+        assert_eq!(mean.len(), components.rows(), "mean/components dim mismatch");
+        KernelPca { mean, components, eigenvalues }
+    }
+
+    /// Feature-space mean subtracted before projection (length F).
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// (F x r) principal directions, columns orthonormal.
+    pub fn components(&self) -> &Mat {
+        &self.components
+    }
+
     pub fn rank(&self) -> usize {
         self.components.cols()
     }
@@ -133,6 +152,20 @@ mod tests {
         let e12 = KernelPca::fit(&z, 12).reconstruction_error(&z);
         assert!(e6 < e2);
         assert!(e12 < 1e-8, "{e12}");
+    }
+
+    #[test]
+    fn from_parts_reproduces_fitted_model() {
+        let mut rng = Rng::new(184);
+        let z = Mat::from_fn(40, 6, |_, _| rng.normal());
+        let pca = KernelPca::fit(&z, 3);
+        let rebuilt = KernelPca::from_parts(
+            pca.mean().to_vec(),
+            pca.components().clone(),
+            pca.eigenvalues.clone(),
+        );
+        assert_eq!(pca.transform(&z), rebuilt.transform(&z));
+        assert_eq!(pca.rank(), rebuilt.rank());
     }
 
     #[test]

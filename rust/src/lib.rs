@@ -14,10 +14,13 @@
 //!   ([`features::spec`]), downstream learners ([`krr`], [`kmeans`]) and
 //!   the spectral-approximation validators ([`spectral`]).
 //! * **The serving system** — the PJRT runtime that executes the AOT
-//!   jax/Pallas artifacts ([`runtime`], behind the `pjrt` feature) and the
+//!   jax/Pallas artifacts ([`runtime`], behind the `pjrt` feature), the
 //!   L3 coordinator implementing the one-round distributed protocol,
 //!   single-pass streaming KRR and a dynamic prediction batcher
-//!   ([`coordinator`]).
+//!   ([`coordinator`]), and the fitted-model subsystem ([`model`]):
+//!   ridge/k-means/KPCA models that bundle their feature spec with their
+//!   learned state, serialize to versioned JSON artifacts, and persist in
+//!   a [`model::ModelStore`] — fit once, reload and serve anywhere.
 //!
 //! Every featurizer — the paper's and all baselines — is described by a
 //! serializable [`features::FeatureSpec`] `(kernel, method, m, seed)` and
@@ -81,6 +84,7 @@ pub mod kmeans;
 pub mod kpca;
 pub mod krr;
 pub mod linalg;
+pub mod model;
 pub mod rng;
 pub mod runtime;
 pub mod special;

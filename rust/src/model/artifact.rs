@@ -1,0 +1,281 @@
+//! Versioned JSON artifact codec shared by every model type.
+//!
+//! An artifact is one self-describing JSON document:
+//!
+//! ```json
+//! {
+//!   "format": 1,
+//!   "kind": "ridge" | "kmeans" | "kpca",
+//!   "spec": { ...BoundSpec wire form, seed as a decimal string... },
+//!   "nystrom_landmarks": { "rows": R, "cols": C, "data": [...] },  // data-dependent maps only
+//!   "state": { ...kind-specific learned state... }
+//! }
+//! ```
+//!
+//! Floats are written with Rust's shortest round-trip formatting (`{:?}`)
+//! and read back through `str::parse::<f64>`, so save → load is
+//! **bit-exact** — the property `tests/model_props.rs` checks for every
+//! registry method. The spec half reuses the seed-safe wire codec of
+//! `features::spec` (seed travels as a decimal string, full `u64` range).
+
+use super::ModelKind;
+use crate::features::{BoundSpec, Featurizer, Method, NystromFeatures};
+use crate::linalg::Mat;
+use crate::runtime::Json;
+
+/// The artifact format this build writes; readers reject anything newer.
+pub const ARTIFACT_FORMAT: usize = 1;
+
+/// A feature map *as fitted*: the serializable description plus, for
+/// data-dependent methods, the learned state needed to reconstruct it
+/// (Nystrom's landmark set). This is the half of a model artifact the
+/// spec registry alone cannot rebuild — pairing it with learned weights /
+/// centroids / projections makes a complete deployable model.
+pub struct FittedMap {
+    spec: BoundSpec,
+    /// landmark rows of a fitted Nystrom map; `None` for oblivious methods
+    nystrom_landmarks: Option<Mat>,
+    feat: Box<dyn Featurizer>,
+}
+
+impl FittedMap {
+    /// Fit the map described by `spec` (oblivious methods ignore the
+    /// training rows; Nystrom samples its landmarks from them).
+    pub fn fit(spec: BoundSpec, x_train: &Mat) -> Result<FittedMap, String> {
+        if x_train.cols() != spec.d {
+            return Err(format!(
+                "training rows have d={}, spec bound to d={}",
+                x_train.cols(),
+                spec.d
+            ));
+        }
+        if matches!(spec.spec.method, Method::Nystrom { .. }) {
+            let feat = spec.spec.build_nystrom(spec.d, x_train)?;
+            let landmarks = feat.landmarks().clone();
+            Ok(FittedMap { spec, nystrom_landmarks: Some(landmarks), feat: Box::new(feat) })
+        } else {
+            let feat = spec.spec.try_build(spec.d, None)?;
+            Ok(FittedMap { spec, nystrom_landmarks: None, feat })
+        }
+    }
+
+    /// Reconstruct a fitted map from its persisted parts: the spec alone
+    /// for oblivious methods, spec + landmarks for Nystrom. Bit-identical
+    /// to the original fit (`NystromFeatures::from_landmarks` is the same
+    /// construction `fit` ends with).
+    pub fn rebuild(spec: BoundSpec, nystrom_landmarks: Option<Mat>) -> Result<FittedMap, String> {
+        let is_nystrom = matches!(spec.spec.method, Method::Nystrom { .. });
+        match (is_nystrom, nystrom_landmarks) {
+            (true, Some(landmarks)) => {
+                if landmarks.cols() != spec.d {
+                    return Err(format!(
+                        "landmarks have d={}, spec bound to d={}",
+                        landmarks.cols(),
+                        spec.d
+                    ));
+                }
+                let feat =
+                    NystromFeatures::from_landmarks(spec.spec.kernel.to_kernel(), landmarks);
+                Ok(FittedMap {
+                    spec,
+                    nystrom_landmarks: Some(feat.landmarks().clone()),
+                    feat: Box::new(feat),
+                })
+            }
+            (true, None) => {
+                Err("nystrom artifact is missing its landmark set".to_string())
+            }
+            (false, Some(_)) => Err(format!(
+                "landmarks supplied for the data-oblivious method {:?}",
+                spec.spec.method.name()
+            )),
+            (false, None) => {
+                let feat = spec.spec.try_build(spec.d, None)?;
+                Ok(FittedMap { spec, nystrom_landmarks: None, feat })
+            }
+        }
+    }
+
+    pub fn spec(&self) -> &BoundSpec {
+        &self.spec
+    }
+
+    /// Actual output dimension of the fitted map (for Nystrom this is the
+    /// realized landmark count, which a small training set may cap below
+    /// the nominal budget `m`).
+    pub fn feature_dim(&self) -> usize {
+        self.feat.dim()
+    }
+
+    pub fn nystrom_landmarks(&self) -> Option<&Mat> {
+        self.nystrom_landmarks.as_ref()
+    }
+
+    /// Featurize raw inputs through the fitted map.
+    pub fn featurize(&self, x: &Mat) -> Mat {
+        assert_eq!(
+            x.cols(),
+            self.spec.d,
+            "input dim {} != spec d {}",
+            x.cols(),
+            self.spec.d
+        );
+        self.feat.featurize(x)
+    }
+}
+
+/// A parsed artifact: the common halves decoded, the kind-specific state
+/// left as JSON for the concrete model type to interpret.
+pub struct Envelope {
+    pub kind: ModelKind,
+    pub map: FittedMap,
+    pub state: Json,
+}
+
+/// Serialize the common envelope around a kind-specific `state` object.
+pub fn envelope(kind: ModelKind, map: &FittedMap, state: &str) -> String {
+    let mut s = format!(
+        r#"{{"format":{ARTIFACT_FORMAT},"kind":"{}","spec":{}"#,
+        kind.name(),
+        map.spec().to_json()
+    );
+    if let Some(landmarks) = map.nystrom_landmarks() {
+        s.push_str(&format!(r#","nystrom_landmarks":{}"#, mat_to_json(landmarks)));
+    }
+    s.push_str(&format!(r#","state":{state}}}"#));
+    s
+}
+
+/// Parse and validate the common envelope, rebuilding the feature map.
+pub fn parse_envelope(text: &str) -> Result<Envelope, String> {
+    let j = Json::parse(text).map_err(|e| format!("model artifact: {e}"))?;
+    let format = req_usize(&j, "format")?;
+    if format != ARTIFACT_FORMAT {
+        return Err(format!(
+            "model artifact format {format} not supported (this build reads format {ARTIFACT_FORMAT})"
+        ));
+    }
+    let kind = ModelKind::from_name(req_str(&j, "kind")?)?;
+    let spec = BoundSpec::from_json_value(req(&j, "spec")?)
+        .map_err(|e| format!("model artifact: {e}"))?;
+    let landmarks = match j.get("nystrom_landmarks") {
+        Some(v) => Some(mat_from_json(v)?),
+        None => None,
+    };
+    let map = FittedMap::rebuild(spec, landmarks)?;
+    let state = req(&j, "state")?.clone();
+    Ok(Envelope { kind, map, state })
+}
+
+/// Shortest representation that parses back to exactly the same bits.
+pub fn fmt_f64(v: f64) -> String {
+    assert!(v.is_finite(), "model artifact: cannot serialize non-finite value {v}");
+    format!("{v:?}")
+}
+
+pub fn vec_to_json(v: &[f64]) -> String {
+    let mut s = String::with_capacity(2 + 10 * v.len());
+    s.push('[');
+    for (i, &x) in v.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&fmt_f64(x));
+    }
+    s.push(']');
+    s
+}
+
+pub fn mat_to_json(m: &Mat) -> String {
+    format!(
+        r#"{{"rows":{},"cols":{},"data":{}}}"#,
+        m.rows(),
+        m.cols(),
+        vec_to_json(m.data())
+    )
+}
+
+pub fn vec_from_json(j: &Json) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or_else(|| "model artifact: expected a number array".to_string())?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "model artifact: non-number in array".to_string()))
+        .collect()
+}
+
+pub fn mat_from_json(j: &Json) -> Result<Mat, String> {
+    let rows = req_usize(j, "rows")?;
+    let cols = req_usize(j, "cols")?;
+    let data = vec_from_json(req(j, "data")?)?;
+    if data.len() != rows * cols {
+        return Err(format!(
+            "model artifact: matrix data length {} != {rows}x{cols}",
+            data.len()
+        ));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+pub(super) fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("model artifact: missing {key:?}"))
+}
+
+pub(super) fn req_f64(j: &Json, key: &str) -> Result<f64, String> {
+    req(j, key)?
+        .as_f64()
+        .ok_or_else(|| format!("model artifact: {key:?} is not a number"))
+}
+
+pub(super) fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    req(j, key)?
+        .as_usize()
+        .ok_or_else(|| format!("model artifact: {key:?} is not an integer"))
+}
+
+pub(super) fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    req(j, key)?
+        .as_str()
+        .ok_or_else(|| format!("model artifact: {key:?} is not a string"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_codec_is_bit_exact() {
+        // shortest round-trip formatting through the in-crate JSON parser
+        let vals = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            1e-300,
+            -2.2250738585072014e-308,
+            std::f64::consts::PI,
+            1.7976931348623157e308,
+            3.0000000000000004,
+        ];
+        let text = vec_to_json(&vals);
+        let back = vec_from_json(&Json::parse(&text).unwrap()).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+        }
+    }
+
+    #[test]
+    fn mat_codec_roundtrip() {
+        let m = Mat::from_fn(3, 2, |i, j| (i as f64) * 0.1 + (j as f64) * 7.3);
+        let back = mat_from_json(&Json::parse(&mat_to_json(&m)).unwrap()).unwrap();
+        assert_eq!(m, back);
+        // shape/data mismatch is rejected
+        let bad = r#"{"rows":2,"cols":2,"data":[1.0,2.0,3.0]}"#;
+        assert!(mat_from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn refuses_non_finite_values() {
+        let _ = fmt_f64(f64::NAN);
+    }
+}

@@ -1,0 +1,152 @@
+//! Kernel k-means as a deployable model: the fitted map plus the final
+//! centroids. `predict` is out-of-sample assignment — the operation
+//! Theorem 10's projection-cost preservation licenses in feature space.
+
+use super::artifact::{self, Envelope, FittedMap};
+use super::{Model, ModelKind};
+use crate::features::BoundSpec;
+use crate::kmeans::{assign_to_centroids, kmeans};
+use crate::linalg::Mat;
+
+pub struct KmeansModel {
+    map: FittedMap,
+    /// (k x F) fitted centroids in feature space
+    centroids: Mat,
+    /// training objective (avg squared distance to assigned centroid)
+    objective: f64,
+}
+
+impl KmeansModel {
+    /// Featurize the training rows and run Lloyd's algorithm with
+    /// k-means++ seeding; the clustering seed is the spec seed, so the
+    /// whole model is a pure function of `(spec, x, k, max_iters)`.
+    pub fn fit(
+        spec: BoundSpec,
+        x: &Mat,
+        k: usize,
+        max_iters: usize,
+    ) -> Result<KmeansModel, String> {
+        if k == 0 || x.rows() < k {
+            return Err(format!("k={k} needs at least k training rows, got {}", x.rows()));
+        }
+        let seed = spec.spec.seed;
+        let map = FittedMap::fit(spec, x)?;
+        let z = map.featurize(x);
+        let res = kmeans(&z, k, max_iters, seed);
+        Ok(KmeansModel { map, centroids: res.centroids, objective: res.objective })
+    }
+
+    pub fn k(&self) -> usize {
+        self.centroids.rows()
+    }
+
+    pub fn centroids(&self) -> &Mat {
+        &self.centroids
+    }
+
+    pub fn objective(&self) -> f64 {
+        self.objective
+    }
+
+    /// Out-of-sample cluster assignment for raw inputs.
+    pub fn assign(&self, x: &Mat) -> Vec<usize> {
+        assign_to_centroids(&self.map.featurize(x), &self.centroids)
+    }
+
+    pub(super) fn from_envelope(env: Envelope) -> Result<KmeansModel, String> {
+        let objective = artifact::req_f64(&env.state, "objective")?;
+        let centroids = artifact::mat_from_json(artifact::req(&env.state, "centroids")?)?;
+        if centroids.cols() != env.map.feature_dim() {
+            return Err(format!(
+                "kmeans artifact centroids have {} columns but the map emits {} features",
+                centroids.cols(),
+                env.map.feature_dim()
+            ));
+        }
+        if centroids.rows() == 0 {
+            return Err("kmeans artifact has no centroids".to_string());
+        }
+        Ok(KmeansModel { map: env.map, centroids, objective })
+    }
+}
+
+impl Model for KmeansModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Kmeans
+    }
+
+    fn feature_spec(&self) -> &BoundSpec {
+        self.map.spec()
+    }
+
+    fn output_dim(&self) -> usize {
+        1
+    }
+
+    /// Cluster index per row, as an (n x 1) matrix of whole numbers.
+    fn predict(&self, x: &Mat) -> Mat {
+        let assign = self.assign(x);
+        Mat::from_vec(assign.len(), 1, assign.into_iter().map(|c| c as f64).collect())
+    }
+
+    fn to_artifact(&self) -> String {
+        let state = format!(
+            r#"{{"objective":{},"centroids":{}}}"#,
+            artifact::fmt_f64(self.objective),
+            artifact::mat_to_json(&self.centroids)
+        );
+        artifact::envelope(ModelKind::Kmeans, &self.map, &state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{FeatureSpec, KernelSpec, Method};
+    use crate::rng::Rng;
+
+    fn blobs() -> Mat {
+        // two antipodal caps on S^2 — separable through a zonal kernel map
+        let mut rng = Rng::new(310);
+        Mat::from_fn(60, 3, |i, _| {
+            let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+            sign + 0.2 * rng.normal()
+        })
+    }
+
+    #[test]
+    fn fit_assign_predict_agree() {
+        let x = blobs();
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 6, s: 2 },
+            48,
+            11,
+        )
+        .bind(3);
+        let model = KmeansModel::fit(spec, &x, 2, 40).unwrap();
+        assert_eq!(model.k(), 2);
+        let assign = model.assign(&x);
+        let pred = Model::predict(&model, &x);
+        assert_eq!(pred.rows(), 60);
+        for (i, &c) in assign.iter().enumerate() {
+            assert_eq!(pred[(i, 0)], c as f64);
+        }
+        // the two parity groups separate
+        assert_ne!(assign[0], assign[1]);
+        assert!(model.objective() >= 0.0);
+    }
+
+    #[test]
+    fn rejects_k_larger_than_n() {
+        let x = blobs();
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Fourier,
+            32,
+            1,
+        )
+        .bind(3);
+        assert!(KmeansModel::fit(spec, &x, 100, 10).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Kernel PCA as a deployable model: the fitted map plus the feature-space
+//! mean and top-r projection basis. `predict` embeds raw inputs into the
+//! principal subspace.
+
+use super::artifact::{self, Envelope, FittedMap};
+use super::{Model, ModelKind};
+use crate::features::BoundSpec;
+use crate::kpca::KernelPca;
+use crate::linalg::Mat;
+
+pub struct KpcaModel {
+    map: FittedMap,
+    pca: KernelPca,
+}
+
+impl KpcaModel {
+    /// Featurize the training rows and keep the top-`rank` principal
+    /// directions of the feature covariance.
+    pub fn fit(spec: BoundSpec, x: &Mat, rank: usize) -> Result<KpcaModel, String> {
+        if x.rows() < 2 {
+            return Err("kpca needs at least 2 training rows".to_string());
+        }
+        let map = FittedMap::fit(spec, x)?;
+        let z = map.featurize(x);
+        if rank == 0 || rank > z.cols() {
+            return Err(format!(
+                "rank {rank} out of range for {} feature dimensions",
+                z.cols()
+            ));
+        }
+        Ok(KpcaModel { pca: KernelPca::fit(&z, rank), map })
+    }
+
+    pub fn pca(&self) -> &KernelPca {
+        &self.pca
+    }
+
+    /// Project raw inputs onto the principal subspace: (n x r).
+    pub fn transform(&self, x: &Mat) -> Mat {
+        self.pca.transform(&self.map.featurize(x))
+    }
+
+    pub(super) fn from_envelope(env: Envelope) -> Result<KpcaModel, String> {
+        let mean = artifact::vec_from_json(artifact::req(&env.state, "mean")?)?;
+        let eigenvalues = artifact::vec_from_json(artifact::req(&env.state, "eigenvalues")?)?;
+        let components = artifact::mat_from_json(artifact::req(&env.state, "components")?)?;
+        if components.rows() != env.map.feature_dim() {
+            return Err(format!(
+                "kpca artifact components have {} rows but the map emits {} features",
+                components.rows(),
+                env.map.feature_dim()
+            ));
+        }
+        if mean.len() != components.rows() || eigenvalues.len() != components.cols() {
+            return Err("kpca artifact mean/eigenvalue shapes are inconsistent".to_string());
+        }
+        Ok(KpcaModel { map: env.map, pca: KernelPca::from_parts(mean, components, eigenvalues) })
+    }
+}
+
+impl Model for KpcaModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Kpca
+    }
+
+    fn feature_spec(&self) -> &BoundSpec {
+        self.map.spec()
+    }
+
+    fn output_dim(&self) -> usize {
+        self.pca.rank()
+    }
+
+    fn predict(&self, x: &Mat) -> Mat {
+        self.transform(x)
+    }
+
+    fn to_artifact(&self) -> String {
+        let state = format!(
+            r#"{{"mean":{},"eigenvalues":{},"components":{}}}"#,
+            artifact::vec_to_json(self.pca.mean()),
+            artifact::vec_to_json(&self.pca.eigenvalues),
+            artifact::mat_to_json(self.pca.components())
+        );
+        artifact::envelope(ModelKind::Kpca, &self.map, &state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{FeatureSpec, KernelSpec, Method};
+    use crate::rng::Rng;
+
+    #[test]
+    fn fit_transform_and_shapes() {
+        let mut rng = Rng::new(320);
+        let x = Mat::from_fn(50, 3, |_, _| rng.normal() * 0.6);
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 6, s: 2 },
+            48,
+            13,
+        )
+        .bind(3);
+        let model = KpcaModel::fit(spec, &x, 3).unwrap();
+        assert_eq!(model.output_dim(), 3);
+        let emb = Model::predict(&model, &x);
+        assert_eq!((emb.rows(), emb.cols()), (50, 3));
+        assert_eq!(emb, model.transform(&x));
+        // eigenvalues descending
+        let ev = &model.pca().eigenvalues;
+        assert!(ev[0] >= ev[1] && ev[1] >= ev[2]);
+    }
+
+    #[test]
+    fn rejects_bad_rank() {
+        let mut rng = Rng::new(321);
+        let x = Mat::from_fn(20, 3, |_, _| rng.normal());
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Fourier,
+            16,
+            1,
+        )
+        .bind(3);
+        assert!(KpcaModel::fit(spec.clone(), &x, 0).is_err());
+        assert!(KpcaModel::fit(spec, &x, 1000).is_err());
+    }
+}

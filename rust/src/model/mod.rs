@@ -1,0 +1,149 @@
+//! Fitted-model subsystem: fit → persist → reload → serve.
+//!
+//! The paper's subspace-embedding guarantee (Thm. 10) is about the
+//! *downstream* learner — KRR, kernel k-means, kernel PCA solved in
+//! feature space. The deployable unit is therefore the feature map **plus**
+//! the learned linear state, and this module makes that unit a durable
+//! artifact:
+//!
+//! * [`Model`] — the shared trait: `predict` on raw inputs (featurization
+//!   happens inside), the bundled [`feature_spec`](Model::feature_spec),
+//!   and [`to_artifact`](Model::to_artifact) serialization;
+//! * [`RidgeModel`] / [`KmeansModel`] / [`KpcaModel`] — the three model
+//!   types, each pairing a [`FittedMap`] (spec + any data-dependent
+//!   featurizer state, e.g. Nystrom landmarks) with its learned state
+//!   (ridge weights / centroids / projection basis);
+//! * [`artifact`] — the versioned JSON codec. Floats round-trip bit-exactly
+//!   and the seed is seed-safe (decimal string, full `u64` range), so
+//!   `fit → save → load → predict` equals in-memory prediction **bit for
+//!   bit** for every registry method (`tests/model_props.rs`);
+//! * [`ModelStore`] — a directory of artifacts with a manifest: the
+//!   train-once / serve-later boundary the coordinator's batcher and the
+//!   `gzk fit` / `gzk predict` subcommands share.
+//!
+//! ```
+//! use gzk::features::{FeatureSpec, KernelSpec, Method};
+//! use gzk::linalg::Mat;
+//! use gzk::model::{from_artifact, Model, RidgeModel};
+//! use gzk::rng::Rng;
+//!
+//! let mut rng = Rng::new(3);
+//! let x = Mat::from_fn(40, 3, |_, _| rng.normal() * 0.5);
+//! let y: Vec<f64> = (0..40).map(|i| x[(i, 0)] - x[(i, 2)]).collect();
+//! let spec = FeatureSpec::new(
+//!     KernelSpec::Gaussian { bandwidth: 1.0 },
+//!     Method::Gegenbauer { q: 8, s: 2 },
+//!     64,
+//!     7,
+//! )
+//! .bind(3);
+//! let model = RidgeModel::fit(spec, &x, &y, 1e-3).unwrap();
+//! // the artifact IS the model: reload and predict bit-identically
+//! let loaded = from_artifact(&model.to_artifact()).unwrap();
+//! assert_eq!(loaded.predict(&x), Model::predict(&model, &x));
+//! ```
+
+pub mod artifact;
+mod kmeans;
+mod kpca;
+mod ridge;
+mod store;
+
+pub use artifact::{FittedMap, ARTIFACT_FORMAT};
+pub use kmeans::KmeansModel;
+pub use kpca::KpcaModel;
+pub use ridge::RidgeModel;
+pub use store::{validate_model_name, ModelStore, StoreEntry};
+
+use crate::features::BoundSpec;
+use crate::linalg::Mat;
+
+/// Which model type an artifact holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Ridge,
+    Kmeans,
+    Kpca,
+}
+
+impl ModelKind {
+    pub const RIDGE: &'static str = "ridge";
+    pub const KMEANS: &'static str = "kmeans";
+    pub const KPCA: &'static str = "kpca";
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Ridge => Self::RIDGE,
+            ModelKind::Kmeans => Self::KMEANS,
+            ModelKind::Kpca => Self::KPCA,
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<ModelKind, String> {
+        match name {
+            Self::RIDGE => Ok(ModelKind::Ridge),
+            Self::KMEANS => Ok(ModelKind::Kmeans),
+            Self::KPCA => Ok(ModelKind::Kpca),
+            other => Err(format!(
+                "unknown model kind {other:?}; registered: {}, {}, {}",
+                Self::RIDGE,
+                Self::KMEANS,
+                Self::KPCA
+            )),
+        }
+    }
+}
+
+/// A fitted, servable, persistable model. `Send + Sync` is part of the
+/// contract: the serving batcher moves models into its service thread and
+/// shares them across batches.
+pub trait Model: Send + Sync {
+    fn kind(&self) -> ModelKind;
+
+    /// The feature map this model was fitted through (bound wire form).
+    fn feature_spec(&self) -> &BoundSpec;
+
+    /// Number of outputs per input row: 1 for ridge (the regression value)
+    /// and k-means (the cluster index), `r` for KPCA (the projection).
+    fn output_dim(&self) -> usize;
+
+    /// Predict from **raw** inputs (n x d) — featurization happens inside,
+    /// through the fitted map. Returns (n x output_dim).
+    fn predict(&self, x: &Mat) -> Mat;
+
+    /// Serialize to the versioned JSON artifact format.
+    fn to_artifact(&self) -> String;
+}
+
+/// Deserialize any model artifact, dispatching on its `kind` field.
+pub fn from_artifact(text: &str) -> Result<Box<dyn Model>, String> {
+    let env = artifact::parse_envelope(text)?;
+    match env.kind {
+        ModelKind::Ridge => Ok(Box::new(RidgeModel::from_envelope(env)?)),
+        ModelKind::Kmeans => Ok(Box::new(KmeansModel::from_envelope(env)?)),
+        ModelKind::Kpca => Ok(Box::new(KpcaModel::from_envelope(env)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for kind in [ModelKind::Ridge, ModelKind::Kmeans, ModelKind::Kpca] {
+            assert_eq!(ModelKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert!(ModelKind::from_name("svm").is_err());
+    }
+
+    #[test]
+    fn from_artifact_rejects_garbage() {
+        assert!(from_artifact("not json").is_err());
+        assert!(from_artifact("{}").is_err());
+        // future format versions are rejected, not misread
+        let future = r#"{"format":99,"kind":"ridge","spec":{},"state":{}}"#;
+        let err = from_artifact(future).unwrap_err();
+        assert!(err.contains("format 99"), "{err}");
+    }
+}

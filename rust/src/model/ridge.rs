@@ -1,0 +1,166 @@
+//! Feature-space ridge regression as a deployable model: the fitted map
+//! plus the solved weights — what the coordinator's one-round protocol
+//! produces and the serving batcher consumes.
+
+use super::artifact::{self, Envelope, FittedMap};
+use super::{Model, ModelKind};
+use crate::features::BoundSpec;
+use crate::krr::{FeatureRidge, RidgeStats};
+use crate::linalg::Mat;
+
+pub struct RidgeModel {
+    map: FittedMap,
+    ridge: FeatureRidge,
+}
+
+impl RidgeModel {
+    /// Single-node fit: featurize the training rows through the spec'd map
+    /// and solve the ridge system. Works for every registry method,
+    /// including the data-dependent Nystrom baseline (the fitted landmarks
+    /// travel inside the artifact).
+    pub fn fit(spec: BoundSpec, x: &Mat, y: &[f64], lambda: f64) -> Result<RidgeModel, String> {
+        if x.rows() != y.len() {
+            return Err(format!("{} rows but {} targets", x.rows(), y.len()));
+        }
+        let map = FittedMap::fit(spec, x)?;
+        let z = map.featurize(x);
+        Ok(RidgeModel { ridge: FeatureRidge::fit(&z, y, lambda), map })
+    }
+
+    /// Finish reduced sufficient statistics `(Z^T Z, Z^T y, n)` into a
+    /// model: solve at `lambda` and bundle. For paths that hold stats but
+    /// no solved weights yet — e.g. `StreamingKrr`'s accumulated state or
+    /// a custom reduction. (`leader::fit_ridge` uses
+    /// [`from_parts`](RidgeModel::from_parts) since the one-round protocol
+    /// has already solved.)
+    pub fn from_stats(map: FittedMap, stats: &RidgeStats, lambda: f64) -> RidgeModel {
+        Self::from_parts(map, stats.solve(lambda))
+    }
+
+    /// Bundle an already-solved ridge with its fitted map.
+    pub fn from_parts(map: FittedMap, ridge: FeatureRidge) -> RidgeModel {
+        assert_eq!(
+            ridge.weights.len(),
+            map.feature_dim(),
+            "ridge weights do not match the feature dimension"
+        );
+        RidgeModel { map, ridge }
+    }
+
+    pub fn ridge(&self) -> &FeatureRidge {
+        &self.ridge
+    }
+
+    /// Predictions as a plain vector (one value per input row).
+    pub fn predict_vec(&self, x: &Mat) -> Vec<f64> {
+        self.ridge.predict(&self.map.featurize(x))
+    }
+
+    pub(super) fn from_envelope(env: Envelope) -> Result<RidgeModel, String> {
+        let lambda = artifact::req_f64(&env.state, "lambda")?;
+        let weights = artifact::vec_from_json(artifact::req(&env.state, "weights")?)?;
+        if weights.len() != env.map.feature_dim() {
+            return Err(format!(
+                "ridge artifact has {} weights but the map emits {} features",
+                weights.len(),
+                env.map.feature_dim()
+            ));
+        }
+        Ok(RidgeModel { map: env.map, ridge: FeatureRidge { weights, lambda } })
+    }
+}
+
+impl Model for RidgeModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Ridge
+    }
+
+    fn feature_spec(&self) -> &BoundSpec {
+        self.map.spec()
+    }
+
+    fn output_dim(&self) -> usize {
+        1
+    }
+
+    fn predict(&self, x: &Mat) -> Mat {
+        let n = x.rows();
+        Mat::from_vec(n, 1, self.predict_vec(x))
+    }
+
+    fn to_artifact(&self) -> String {
+        let state = format!(
+            r#"{{"lambda":{},"weights":{}}}"#,
+            artifact::fmt_f64(self.ridge.lambda),
+            artifact::vec_to_json(&self.ridge.weights)
+        );
+        artifact::envelope(ModelKind::Ridge, &self.map, &state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{FeatureSpec, KernelSpec, Method};
+    use crate::rng::Rng;
+
+    fn toy() -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(300);
+        let x = Mat::from_fn(50, 3, |_, _| rng.normal() * 0.5);
+        let y: Vec<f64> = (0..50).map(|i| x[(i, 0)] + 2.0 * x[(i, 1)]).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn fit_matches_manual_pipeline() {
+        let (x, y) = toy();
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 8, s: 2 },
+            64,
+            9,
+        )
+        .bind(3);
+        let model = RidgeModel::fit(spec.clone(), &x, &y, 1e-3).unwrap();
+        use crate::features::Featurizer as _;
+        let z = spec.build().featurize(&x);
+        let reference = FeatureRidge::fit(&z, &y, 1e-3);
+        assert_eq!(model.predict_vec(&x), reference.predict(&z));
+        assert_eq!(model.output_dim(), 1);
+        assert_eq!(model.kind(), ModelKind::Ridge);
+    }
+
+    #[test]
+    fn from_stats_equals_fit() {
+        // finishing accumulated stats == fitting directly on the features
+        let (x, y) = toy();
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 6, s: 2 },
+            48,
+            17,
+        )
+        .bind(3);
+        use crate::model::FittedMap;
+        let map = FittedMap::fit(spec.clone(), &x).unwrap();
+        let z = map.featurize(&x);
+        let mut stats = RidgeStats::new(z.cols());
+        stats.absorb(&z, &y);
+        let from_stats = RidgeModel::from_stats(map, &stats, 1e-3);
+        let fitted = RidgeModel::fit(spec, &x, &y, 1e-3).unwrap();
+        assert_eq!(from_stats.predict_vec(&x), fitted.predict_vec(&x));
+    }
+
+    #[test]
+    fn rejects_mismatched_targets() {
+        let (x, y) = toy();
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Fourier,
+            32,
+            1,
+        )
+        .bind(3);
+        assert!(RidgeModel::fit(spec, &x, &y[..10], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! `ModelStore`: a directory of model artifacts with a manifest — the
+//! train-once / serve-later boundary. `gzk fit` writes into a store;
+//! `gzk predict` and the serving demo load from one, so a process that
+//! serves never has to refit.
+//!
+//! Layout:
+//!
+//! ```text
+//! <dir>/models.json           manifest: [{name, kind, file}, ...]
+//! <dir>/<name>.model.json     one artifact per saved model
+//! ```
+//!
+//! Concurrency contract: **one writer, any number of readers.** All
+//! writes go through temp-file + rename, so readers never observe a
+//! truncated artifact or manifest — but concurrent *writers* are not
+//! coordinated (the manifest read-modify-write in [`ModelStore::save`]
+//! has no lock), so two simultaneous `save`s can lose a manifest entry.
+//! Run one fitting process per store at a time.
+
+use super::{from_artifact, Model, ModelKind};
+use crate::runtime::Json;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const MANIFEST_FILE: &str = "models.json";
+
+/// One manifest row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreEntry {
+    pub name: String,
+    pub kind: ModelKind,
+    pub file: String,
+}
+
+pub struct ModelStore {
+    dir: PathBuf,
+}
+
+impl ModelStore {
+    /// Open (creating the directory if needed) a store at `dir` — the
+    /// writer-side open (`gzk fit`, `gzk serve`'s training path).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ModelStore, String> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir).map_err(|e| format!("create store dir {dir:?}: {e}"))?;
+        Ok(ModelStore { dir })
+    }
+
+    /// Open a store that must already exist — the reader-side open
+    /// (`gzk predict`), so a typo'd `--model-dir` is reported as missing
+    /// instead of silently materializing an empty directory.
+    pub fn open_existing(dir: impl Into<PathBuf>) -> Result<ModelStore, String> {
+        let dir = dir.into();
+        if !dir.is_dir() {
+            return Err(format!("model store {dir:?} does not exist"));
+        }
+        Ok(ModelStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The manifest rows, sorted by name (empty for a fresh store).
+    pub fn entries(&self) -> Result<Vec<StoreEntry>, String> {
+        let path = self.dir.join(MANIFEST_FILE);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(format!("read {path:?}: {e}")),
+        };
+        let j = Json::parse(&text).map_err(|e| format!("store manifest: {e}"))?;
+        let models = j
+            .get("models")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| "store manifest: missing models[]".to_string())?;
+        let mut entries = Vec::with_capacity(models.len());
+        for m in models {
+            let name = m
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| "store manifest: entry missing name".to_string())?
+                .to_string();
+            let kind = ModelKind::from_name(
+                m.get("kind")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("store manifest: {name:?} missing kind"))?,
+            )?;
+            let file = m
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("store manifest: {name:?} missing file"))?
+                .to_string();
+            entries.push(StoreEntry { name, kind, file });
+        }
+        Ok(entries)
+    }
+
+    /// Serialize `model` and record it under `name`, replacing any
+    /// previous model of that name. Returns the artifact path.
+    ///
+    /// Both the artifact and the manifest are written via temp-file +
+    /// rename, so a reader in another process (the train-once /
+    /// serve-later workflow) never observes a truncated file and a crash
+    /// mid-save cannot corrupt an existing artifact.
+    pub fn save(&self, name: &str, model: &dyn Model) -> Result<PathBuf, String> {
+        validate_name(name)?;
+        // read the manifest FIRST: if it is unreadable, fail before
+        // touching the existing artifact file, so a failed save never
+        // destroys the previously saved model
+        let mut entries = self.entries()?;
+        let file = format!("{name}.model.json");
+        let path = self.dir.join(&file);
+        write_atomic(&path, &model.to_artifact())?;
+        entries.retain(|e| e.name != name);
+        entries.push(StoreEntry { name: name.to_string(), kind: model.kind(), file });
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        self.write_manifest(&entries)?;
+        Ok(path)
+    }
+
+    /// Load the model saved under `name`.
+    pub fn load(&self, name: &str) -> Result<Box<dyn Model>, String> {
+        let entries = self.entries()?;
+        let entry = entries.iter().find(|e| e.name == name).ok_or_else(|| {
+            let have: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+            format!(
+                "no model {name:?} in {:?} (have: {})",
+                self.dir,
+                if have.is_empty() { "none".to_string() } else { have.join(", ") }
+            )
+        })?;
+        let path = self.dir.join(&entry.file);
+        let text = fs::read_to_string(&path).map_err(|e| format!("read {path:?}: {e}"))?;
+        let model = from_artifact(&text).map_err(|e| format!("{path:?}: {e}"))?;
+        if model.kind() != entry.kind {
+            return Err(format!(
+                "{path:?}: manifest says {} but artifact is {}",
+                entry.kind.name(),
+                model.kind().name()
+            ));
+        }
+        Ok(model)
+    }
+
+    fn write_manifest(&self, entries: &[StoreEntry]) -> Result<(), String> {
+        let rows: Vec<String> = entries
+            .iter()
+            .map(|e| {
+                format!(
+                    r#"{{"name":{},"kind":"{}","file":{}}}"#,
+                    json_string(&e.name),
+                    e.kind.name(),
+                    json_string(&e.file)
+                )
+            })
+            .collect();
+        let text = format!(r#"{{"format":1,"models":[{}]}}"#, rows.join(","));
+        write_atomic(&self.dir.join(MANIFEST_FILE), &text)
+    }
+}
+
+/// Write via a sibling temp file + rename (atomic on POSIX within one
+/// filesystem), so concurrent readers see either the old or the new
+/// content, never a truncation.
+fn write_atomic(path: &Path, content: &str) -> Result<(), String> {
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, content).map_err(|e| format!("write {tmp:?}: {e}"))?;
+    fs::rename(&tmp, path).map_err(|e| format!("rename {tmp:?} -> {path:?}: {e}"))
+}
+
+/// Names become file names; keep them simple and safe. Public so the CLI
+/// can reject a bad `--name` up front as a usage error, before any I/O.
+pub fn validate_model_name(name: &str) -> Result<(), String> {
+    validate_name(name)
+}
+
+fn validate_name(name: &str) -> Result<(), String> {
+    if name.is_empty() || name.len() > 64 {
+        return Err("model name must be 1..=64 characters".to_string());
+    }
+    if !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_') {
+        return Err(format!(
+            "model name {name:?} may only contain [A-Za-z0-9_-]"
+        ));
+    }
+    Ok(())
+}
+
+/// Escape a string for JSON (names are validated, but stay defensive).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_validation() {
+        assert!(validate_name("ridge-v2_final").is_ok());
+        assert!(validate_name("").is_err());
+        assert!(validate_name("../escape").is_err());
+        assert!(validate_name("a b").is_err());
+    }
+
+    #[test]
+    fn open_existing_refuses_missing_dirs() {
+        let dir = std::env::temp_dir().join(format!("gzk-no-such-store-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let err = ModelStore::open_existing(&dir).unwrap_err();
+        assert!(err.contains("does not exist"), "{err}");
+        // and it must NOT have created the directory as a side effect
+        assert!(!dir.exists());
+    }
+
+    #[test]
+    fn empty_store_lists_nothing_and_load_names_the_miss() {
+        let dir = std::env::temp_dir().join(format!("gzk-store-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let store = ModelStore::open(&dir).unwrap();
+        assert!(store.entries().unwrap().is_empty());
+        let err = store.load("ridge").unwrap_err();
+        assert!(err.contains("no model"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

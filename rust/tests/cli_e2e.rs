@@ -1,0 +1,117 @@
+//! End-to-end CLI tests: the fit → persist → reload → serve lifecycle
+//! through the actual `gzk` binary, on synthetic data at test-friendly
+//! sizes. These are the acceptance checks that the serve path loads from a
+//! `ModelStore` (no refit) and that usage mistakes exit cleanly.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gzk"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gzk-cli-e2e-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin().args(args).output().expect("spawn gzk");
+    assert!(
+        out.status.success(),
+        "gzk {args:?} failed\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn fit_then_predict_ridge_roundtrip_on_disk() {
+    let dir = fresh_dir("ridge");
+    let dir_s = dir.to_str().unwrap();
+    let stdout = run_ok(&[
+        "fit", "--model", "ridge", "--out", dir_s, "--n", "400", "--m", "64", "--workers", "2",
+    ]);
+    assert!(stdout.contains("one-round fit"), "{stdout}");
+    assert!(stdout.contains("saved model"), "{stdout}");
+    assert!(dir.join("models.json").exists());
+    assert!(dir.join("ridge.model.json").exists());
+
+    // a separate process reloads the artifact and serves it
+    let stdout = run_ok(&["predict", "--model-dir", dir_s, "--requests", "50"]);
+    assert!(stdout.contains("no refit"), "{stdout}");
+    assert!(stdout.contains("served 50 requests"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fit_then_predict_kmeans_and_kpca() {
+    let dir = fresh_dir("multi");
+    let dir_s = dir.to_str().unwrap();
+    run_ok(&[
+        "fit", "--model", "kmeans", "--out", dir_s, "--n", "300", "--d", "4", "--k", "2",
+        "--m", "32",
+    ]);
+    run_ok(&["fit", "--model", "kpca", "--out", dir_s, "--n", "300", "--rank", "2", "--m", "32"]);
+    // two models in the store: predict must require --name
+    let out = bin().args(["predict", "--model-dir", dir_s]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--name"));
+    let stdout = run_ok(&["predict", "--model-dir", dir_s, "--name", "kmeans", "--requests", "20"]);
+    assert!(stdout.contains("kind kmeans"), "{stdout}");
+    let stdout = run_ok(&["predict", "--model-dir", dir_s, "--name", "kpca", "--requests", "20"]);
+    assert!(stdout.contains("output dim 2"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_trains_once_then_loads_the_stored_artifact() {
+    let dir = fresh_dir("serve");
+    let dir_s = dir.to_str().unwrap();
+    // first run: trains via the one-round protocol, persists, serves the
+    // reloaded artifact
+    let stdout = run_ok(&[
+        "serve", "--n", "600", "--m", "64", "--requests", "100", "--model-dir", dir_s,
+    ]);
+    assert!(stdout.contains("trained on"), "{stdout}");
+    assert!(stdout.contains("saved model"), "{stdout}");
+    assert!(stdout.contains("served 100 requests"), "{stdout}");
+    // second run: same store — must load, never refit (training flags are
+    // dropped: serve rejects them when the stored model is used)
+    let stdout = run_ok(&["serve", "--requests", "100", "--model-dir", dir_s]);
+    assert!(stdout.contains("no refit"), "{stdout}");
+    assert!(!stdout.contains("trained on"), "refit happened: {stdout}");
+    assert!(stdout.contains("served 100 requests"), "{stdout}");
+    // the stored path cannot reconstruct the held-out split, so it must
+    // not fabricate a test MSE
+    assert!(stdout.contains("test MSE skipped"), "{stdout}");
+    // training flags alongside a stored model are a usage error, not a
+    // silent no-op
+    let out = bin()
+        .args(["serve", "--m", "128", "--requests", "10", "--model-dir", dir_s])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--m"), "stderr should name the flag");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_flag_value_is_a_clean_usage_error() {
+    // the cli satellite: exit(2) + the flag-naming message, no backtrace
+    let out = bin().args(["serve", "--m", "10k24"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("flag --m"), "{stderr}");
+    assert!(stderr.contains("10k24"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "panic leaked to the user: {stderr}");
+}
+
+#[test]
+fn fit_requires_an_output_dir() {
+    let out = bin().args(["fit", "--model", "ridge"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--out"));
+}

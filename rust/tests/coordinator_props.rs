@@ -163,6 +163,71 @@ fn prop_stats_merge_commutative_associative() {
 }
 
 #[test]
+fn prop_stats_shard_split_and_order_invariant() {
+    // the invariant the distributed fit relies on: absorbing all rows at
+    // once equals splitting them into arbitrary contiguous shards,
+    // absorbing each, and merging the shards in ANY order — for G, b, n
+    // and yy alike
+    for_random_cases(0x51AB, 12, gen_case, |c| {
+        let z = c.spec.build().featurize(&c.x);
+        let n = z.rows();
+        let f = z.cols();
+        // reference: one absorb over the whole dataset
+        let mut whole = RidgeStats::new(f);
+        whole.absorb(&z, &c.y);
+        // random cut points -> shards of irregular sizes (empty-free)
+        let mut rng = Rng::new(c.spec.spec.seed ^ 0x5EED);
+        let mut cuts = vec![0, n];
+        for _ in 0..(1 + rng.below(5)) {
+            cuts.push(rng.below(n + 1));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut shards: Vec<RidgeStats> = cuts
+            .windows(2)
+            .map(|w| {
+                let mut s = RidgeStats::new(f);
+                s.absorb(&z.row_block(w[0], w[1]), &c.y[w[0]..w[1]]);
+                s
+            })
+            .collect();
+        // merge in a random order
+        rng.shuffle(&mut shards);
+        let mut merged = RidgeStats::new(f);
+        for s in &shards {
+            merged.merge(s);
+        }
+        if merged.n != whole.n {
+            return Err(format!("row count {} != {}", merged.n, whole.n));
+        }
+        if merged.g.max_abs_diff(&whole.g) > 1e-9 {
+            return Err(format!(
+                "G differs by {} across {} shards",
+                merged.g.max_abs_diff(&whole.g),
+                shards.len()
+            ));
+        }
+        for (i, (a, b)) in merged.b.iter().zip(&whole.b).enumerate() {
+            if (a - b).abs() > 1e-9 * (1.0 + a.abs()) {
+                return Err(format!("b[{i}] differs: {a} vs {b}"));
+            }
+        }
+        if (merged.yy - whole.yy).abs() > 1e-9 * (1.0 + whole.yy.abs()) {
+            return Err(format!("yy differs: {} vs {}", merged.yy, whole.yy));
+        }
+        // and the solved models agree
+        let ma = merged.solve(c.lambda);
+        let mb = whole.solve(c.lambda);
+        for (a, b) in ma.weights.iter().zip(&mb.weights) {
+            if (a - b).abs() > 1e-8 * (1.0 + a.abs()) {
+                return Err(format!("solved weights differ: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_service_answers_every_request_exactly_once() {
     for_random_cases(0xD00D, 6, gen_case, |c| {
         let z = c.spec.build().featurize(&c.x);

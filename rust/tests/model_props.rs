@@ -1,0 +1,173 @@
+//! Property tests on the model artifact subsystem: for **every** registry
+//! method — oblivious and data-dependent — and every model kind,
+//! `fit → save → load → predict` must be **bit-identical** to predicting
+//! with the in-memory model. The codec writes floats in shortest
+//! round-trip form and the seed as a decimal string (seed-safe, like
+//! `spec_props` requires of the wire codec), so an artifact is a perfect
+//! substitute for the process that produced it.
+
+use gzk::features::{FeatureSpec, KernelSpec, Method};
+use gzk::linalg::Mat;
+use gzk::model::{from_artifact, KmeansModel, KpcaModel, Model, ModelKind, ModelStore, RidgeModel};
+use gzk::rng::Rng;
+
+fn dataset(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.6);
+    let y: Vec<f64> =
+        (0..n).map(|i| (2.0 * x[(i, 0)]).sin() + x[(i, 1)] + 0.02 * rng.normal()).collect();
+    (x, y)
+}
+
+/// The three model kinds fitted through one spec (big seed on the last
+/// method exercises the u64 range through the artifact).
+fn fit_all(spec: &gzk::features::BoundSpec, x: &Mat, y: &[f64]) -> Vec<Box<dyn Model>> {
+    vec![
+        Box::new(RidgeModel::fit(spec.clone(), x, y, 1e-2).expect("ridge fit")),
+        Box::new(KmeansModel::fit(spec.clone(), x, 3, 40).expect("kmeans fit")),
+        Box::new(KpcaModel::fit(spec.clone(), x, 2).expect("kpca fit")),
+    ]
+}
+
+#[test]
+fn artifact_roundtrip_is_bit_identical_for_every_registry_method() {
+    let (x, y) = dataset(60, 3, 50);
+    let mut rng = Rng::new(51);
+    let x_new = Mat::from_fn(15, 3, |_, _| rng.normal() * 0.6);
+    for (i, method) in Method::registry().into_iter().enumerate() {
+        // u64::MAX-range seed: the decimal-string codec must carry it
+        let seed = u64::MAX - 17 * (i as u64 + 1);
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            method,
+            48,
+            seed,
+        )
+        .bind(3);
+        for model in fit_all(&spec, &x, &y) {
+            let text = model.to_artifact();
+            let loaded = from_artifact(&text)
+                .unwrap_or_else(|e| panic!("{} {}: {e}", spec.spec.method.name(), model.kind().name()));
+            let tag = format!("{} {}", spec.spec.method.name(), model.kind().name());
+            assert_eq!(loaded.kind(), model.kind(), "{tag}");
+            assert_eq!(loaded.feature_spec(), model.feature_spec(), "{tag}");
+            assert_eq!(loaded.output_dim(), model.output_dim(), "{tag}");
+            // THE acceptance property: bit-identical prediction
+            assert_eq!(loaded.predict(&x_new), model.predict(&x_new), "{tag}");
+            assert_eq!(loaded.predict(&x), model.predict(&x), "{tag} (training rows)");
+            // and the codec is a fixed point: re-serialization is byte-equal
+            assert_eq!(loaded.to_artifact(), text, "{tag} re-serialization drifted");
+        }
+    }
+}
+
+#[test]
+fn store_saves_loads_and_lists_every_kind() {
+    let dir = std::env::temp_dir().join(format!("gzk-model-props-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ModelStore::open(&dir).expect("open store");
+    let (x, y) = dataset(50, 3, 70);
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 8, s: 2 },
+        64,
+        71,
+    )
+    .bind(3);
+    let models = fit_all(&spec, &x, &y);
+    for model in &models {
+        store.save(model.kind().name(), model.as_ref()).expect("save");
+    }
+    // manifest lists all three, sorted by name
+    let entries = store.entries().expect("entries");
+    let names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+    assert_eq!(names, vec!["kmeans", "kpca", "ridge"]);
+    // loading reproduces each model bit-for-bit
+    let mut rng = Rng::new(72);
+    let probe = Mat::from_fn(9, 3, |_, _| rng.normal() * 0.5);
+    for model in &models {
+        let loaded = store.load(model.kind().name()).expect("load");
+        assert_eq!(loaded.predict(&probe), model.predict(&probe), "{}", model.kind().name());
+    }
+    // overwriting a name replaces, not duplicates
+    let again = RidgeModel::fit(spec.clone(), &x, &y, 0.5).unwrap();
+    store.save("ridge", &again).expect("resave");
+    assert_eq!(store.entries().unwrap().len(), 3);
+    let reloaded = store.load("ridge").expect("reload");
+    assert_eq!(reloaded.predict(&probe), Model::predict(&again, &probe));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nystrom_artifact_carries_its_landmarks() {
+    // the data-dependent half: an artifact must reconstruct the Nystrom
+    // map WITHOUT the training data — the landmarks travel inside
+    let (x, y) = dataset(40, 3, 90);
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Nystrom { lambda: 1e-3 },
+        16,
+        91,
+    )
+    .bind(3);
+    let model = RidgeModel::fit(spec, &x, &y, 1e-2).unwrap();
+    let text = model.to_artifact();
+    assert!(text.contains("nystrom_landmarks"), "landmarks missing from artifact");
+    let loaded = from_artifact(&text).unwrap();
+    let mut rng = Rng::new(92);
+    let probe = Mat::from_fn(7, 3, |_, _| rng.normal() * 0.5);
+    assert_eq!(loaded.predict(&probe), Model::predict(&model, &probe));
+    // stripping the landmarks must fail cleanly, not rebuild wrongly
+    let start = text.find(",\"nystrom_landmarks\"").unwrap();
+    let end = text[start + 1..].find(",\"state\"").unwrap() + start + 1;
+    let stripped = format!("{}{}", &text[..start], &text[end..]);
+    let err = from_artifact(&stripped).unwrap_err();
+    assert!(err.contains("landmark"), "{err}");
+}
+
+#[test]
+fn artifact_rejects_tampering() {
+    let (x, y) = dataset(30, 3, 95);
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Fourier,
+        32,
+        96,
+    )
+    .bind(3);
+    let model = RidgeModel::fit(spec, &x, &y, 1e-2).unwrap();
+    let text = model.to_artifact();
+    // future format
+    let future = text.replacen("\"format\":1", "\"format\":2", 1);
+    assert!(from_artifact(&future).unwrap_err().contains("format 2"));
+    // unknown kind
+    let alien = text.replacen("\"kind\":\"ridge\"", "\"kind\":\"svm\"", 1);
+    assert!(from_artifact(&alien).unwrap_err().contains("svm"));
+    // weight count no longer matches the spec'd feature dimension
+    let truncated = text.replacen("\"weights\":[", "\"weights\":[0.0,", 1);
+    assert!(from_artifact(&truncated).is_err());
+    // model kind / state mismatch: ridge state under a kmeans kind
+    let crossed = text.replacen("\"kind\":\"ridge\"", "\"kind\":\"kmeans\"", 1);
+    assert!(from_artifact(&crossed).is_err());
+}
+
+#[test]
+fn kinds_report_consistent_output_dims() {
+    let (x, y) = dataset(40, 3, 97);
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 6, s: 2 },
+        48,
+        98,
+    )
+    .bind(3);
+    for model in fit_all(&spec, &x, &y) {
+        let out = model.predict(&x);
+        assert_eq!(out.rows(), x.rows(), "{}", model.kind().name());
+        assert_eq!(out.cols(), model.output_dim(), "{}", model.kind().name());
+        match model.kind() {
+            ModelKind::Ridge | ModelKind::Kmeans => assert_eq!(model.output_dim(), 1),
+            ModelKind::Kpca => assert_eq!(model.output_dim(), 2),
+        }
+    }
+}
