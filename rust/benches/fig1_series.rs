@@ -16,10 +16,10 @@ fn main() {
     println!(
         "[fig1] exp(2x) degree-15:  taylor {:.2e}  cheb(d=2) {:.2e}  d=4 {:.2e}  d=8 {:.2e}  d=32 {:.2e}",
         exp.taylor[15],
-        exp.gegenbauer[0][15],
-        exp.gegenbauer[1][15],
-        exp.gegenbauer[2][15],
-        exp.gegenbauer[3][15]
+        exp.gegenbauer[(0, 15)],
+        exp.gegenbauer[(1, 15)],
+        exp.gegenbauer[(2, 15)],
+        exp.gegenbauer[(3, 15)]
     );
-    assert!(exp.gegenbauer[0][15] < exp.taylor[15], "Chebyshev must beat Taylor");
+    assert!(exp.gegenbauer[(0, 15)] < exp.taylor[15], "Chebyshev must beat Taylor");
 }

@@ -5,16 +5,20 @@
 //!
 //! Besides the human-readable tables, the run emits a machine-readable
 //! `BENCH_hotpath.json` (path overridable via `GZK_BENCH_JSON`) with the
-//! per-method throughput rows and the batcher latency percentiles, so the
-//! perf trajectory is tracked across PRs instead of scraped from stdout —
-//! CI uploads the file as a build artifact.
+//! per-method throughput rows, the serial-vs-parallel featurize+absorb
+//! comparison (threads, speedup, bit-identity check), and the batcher
+//! latency percentiles, so the perf trajectory is tracked across PRs
+//! instead of scraped from stdout — CI uploads the file as a build
+//! artifact. The pool width comes from `--threads`-equivalent
+//! `GZK_THREADS` or the machine.
 //!
 //! Run: cargo bench --bench hotpath
 
 use gzk::bench::{fmt_secs, time_it, Table};
 use gzk::coordinator::PredictionService;
+use gzk::exec::Pool;
 use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
-use gzk::krr::FeatureRidge;
+use gzk::krr::{FeatureRidge, RidgeStats};
 use gzk::linalg::Mat;
 use gzk::rng::Rng;
 use std::time::Duration;
@@ -115,6 +119,55 @@ fn featurize_bench() {
     );
 }
 
+struct ParallelStats {
+    threads: usize,
+    serial_secs: f64,
+    par_secs: f64,
+    speedup: f64,
+    bit_identical: bool,
+}
+
+/// Serial vs parallel on the training hot path — featurize + absorb at
+/// n = 8192, m = 512 — with the outputs cross-checked for bit-identity
+/// (the exec engine's core contract).
+fn parallel_bench() -> ParallelStats {
+    println!("\n== serial vs parallel: featurize + absorb (n=8192, m=512) ==");
+    let (n, d) = (8192usize, 3usize);
+    let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 12, s: 2 }, 512, 1);
+    let feat = spec.build(d);
+    let mut rng = Rng::new(5);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.5);
+    let y: Vec<f64> = (0..n).map(|i| x[(i, 0)]).collect();
+    let run = |pool: &Pool| {
+        let z = feat.featurize_par(&x, pool);
+        let mut stats = RidgeStats::new(z.cols());
+        stats.absorb_with(&z, &y, pool);
+        (z, stats)
+    };
+    let serial = Pool::serial();
+    let par = Pool::global();
+    let ts = time_it(1, 3, || run(&serial));
+    let tp = time_it(1, 3, || run(&par));
+    let (zs, ss) = run(&serial);
+    let (zp, sp) = run(&par);
+    let bit_identical = zs == zp && ss.g == sp.g && ss.b == sp.b;
+    let speedup = ts.median / tp.median;
+    println!(
+        "threads {}: serial {}  parallel {}  -> {speedup:.2}x speedup (bit identical: {bit_identical})",
+        par.threads(),
+        fmt_secs(ts.median),
+        fmt_secs(tp.median)
+    );
+    assert!(bit_identical, "parallel featurize+absorb drifted from serial");
+    ParallelStats {
+        threads: par.threads(),
+        serial_secs: ts.median,
+        par_secs: tp.median,
+        speedup,
+        bit_identical,
+    }
+}
+
 fn serving_bench() -> ServingStats {
     println!("\n== serving batcher ==");
     let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 12, s: 2 }, 512, 1).bind(3);
@@ -156,7 +209,7 @@ fn serving_bench() -> ServingStats {
 }
 
 /// Emit the machine-readable results (CI uploads this as an artifact).
-fn write_json(methods: &[MethodRow], serving: &ServingStats) {
+fn write_json(methods: &[MethodRow], parallel: &ParallelStats, serving: &ServingStats) {
     let path =
         std::env::var("GZK_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     let method_rows: Vec<String> = methods
@@ -169,8 +222,17 @@ fn write_json(methods: &[MethodRow], serving: &ServingStats) {
         })
         .collect();
     let text = format!(
-        r#"{{"format":1,"bench":"hotpath","methods":[{}],"serving":{{"req_per_s":{:.1},"p50_us":{:.2},"p99_us":{:.2},"batches":{},"max_batch":{}}}}}"#,
+        concat!(
+            r#"{{"format":2,"bench":"hotpath","methods":[{}],"#,
+            r#""parallel":{{"threads":{},"serial_secs":{:e},"par_secs":{:e},"speedup":{:.2},"bit_identical":{}}},"#,
+            r#""serving":{{"req_per_s":{:.1},"p50_us":{:.2},"p99_us":{:.2},"batches":{},"max_batch":{}}}}}"#
+        ),
         method_rows.join(","),
+        parallel.threads,
+        parallel.serial_secs,
+        parallel.par_secs,
+        parallel.speedup,
+        parallel.bit_identical,
         serving.req_per_s,
         serving.p50_us,
         serving.p99_us,
@@ -184,6 +246,7 @@ fn write_json(methods: &[MethodRow], serving: &ServingStats) {
 fn main() {
     let methods = registry_bench();
     featurize_bench();
+    let parallel = parallel_bench();
     let serving = serving_bench();
-    write_json(&methods, &serving);
+    write_json(&methods, &parallel, &serving);
 }

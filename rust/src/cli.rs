@@ -90,6 +90,30 @@ impl Args {
         self.switches.iter().any(|s| s == name)
     }
 
+    /// The global `--threads N` flag: how many workers the process-wide
+    /// [`exec::Pool`](crate::exec::Pool) uses for every parallel path
+    /// (featurize, absorb, k-means, KPCA, the coordinator's worker wave).
+    /// `Ok(None)` when absent — the pool then sizes itself from the
+    /// machine. Applies to every subcommand, so it is parsed here rather
+    /// than per command.
+    pub fn threads(&self) -> Result<Option<usize>, String> {
+        if self.has("threads") {
+            return Err("flag --threads requires a value (e.g. --threads 4)".to_string());
+        }
+        match self.get("threads") {
+            None => Ok(None),
+            Some(v) => {
+                let n: usize = v.parse().map_err(|_| {
+                    format!("flag --threads: cannot parse {v:?} as an unsigned integer")
+                })?;
+                if n == 0 {
+                    return Err("flag --threads: must be >= 1 (omit it to use all cores)".into());
+                }
+                Ok(Some(n))
+            }
+        }
+    }
+
     /// The shared featurizer flag group, parsed once into a `FeatureSpec`:
     ///
     /// ```text
@@ -212,6 +236,20 @@ mod tests {
         assert_eq!(a.try_parsed::<usize>("absent", 7, "an unsigned integer").unwrap(), 7);
         let b = parse("serve --m 1024");
         assert_eq!(b.try_parsed::<usize>("m", 512, "an unsigned integer").unwrap(), 1024);
+    }
+
+    #[test]
+    fn threads_flag_parses_and_rejects_nonsense() {
+        assert_eq!(parse("serve").threads().unwrap(), None);
+        assert_eq!(parse("serve --threads 4").threads().unwrap(), Some(4));
+        assert_eq!(parse("fit --threads 1 --m 64").threads().unwrap(), Some(1));
+        for bad in ["serve --threads 0", "serve --threads four", "serve --threads -2"] {
+            let e = parse(bad).threads().unwrap_err();
+            assert!(e.contains("--threads"), "{bad}: {e}");
+        }
+        // a bare `--threads` (value swallowed by the next flag) is an error
+        let e = parse("serve --threads --m 64").threads().unwrap_err();
+        assert!(e.contains("requires a value"), "{e}");
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! scalar-ridge convenience used by the KRR demos.
 
 use super::protocol::FeatureSpec;
+use crate::exec::Pool;
 use crate::krr::FeatureRidge;
 use crate::linalg::Mat;
 use crate::model::{FittedMap, Model, RidgeModel};
@@ -119,13 +120,17 @@ impl PredictionService {
                         Err(_) => break,
                     }
                 }
-                // run the whole batch through the model at once
+                // Run the whole batch through the model at once. The
+                // service loop is a control thread; batch *compute* draws
+                // from the global pool, clamped so single-row requests
+                // never pay a thread spawn on the latency path (results
+                // are bit-identical at any width).
                 let t0 = Instant::now();
                 let mut x = Mat::zeros(pending.len(), d);
                 for (i, req) in pending.iter().enumerate() {
                     x.row_mut(i).copy_from_slice(&req.x);
                 }
-                let out = model.predict(&x);
+                let out = model.predict_with(&x, &Pool::for_rows(pending.len()));
                 // metrics BEFORE replying: once a client holds its answer,
                 // the request is guaranteed to be counted (tested by
                 // prop_service_answers_every_request_exactly_once)
@@ -225,11 +230,11 @@ mod tests {
         let mut joins = Vec::new();
         for t in 0..8 {
             let client = svc.client();
-            let rows: Vec<Vec<f64>> = (0..10).map(|i| x.row((t * 10 + i) % 80).to_vec()).collect();
+            let rows = Mat::from_fn(10, x.cols(), |i, j| x[((t * 10 + i) % 80, j)]);
             let exp: Vec<f64> = (0..10).map(|i| expect[(t * 10 + i) % 80]).collect();
             joins.push(std::thread::spawn(move || {
-                for (row, e) in rows.iter().zip(&exp) {
-                    let p = client.predict(row).unwrap();
+                for (i, e) in exp.iter().enumerate() {
+                    let p = client.predict(rows.row(i)).unwrap();
                     assert!((p - e).abs() < 1e-10);
                 }
             }));

@@ -11,6 +11,7 @@
 
 use super::protocol::{FeatureSpec, ShardStats, ShardTask};
 use super::worker::{worker_loop, Backend, WorkerConfig};
+use crate::exec::Pool;
 use crate::krr::{FeatureRidge, RidgeStats};
 use crate::linalg::Mat;
 use crate::model::{FittedMap, RidgeModel};
@@ -34,10 +35,14 @@ pub struct DistributedFit {
 
 /// Run the one-round protocol on an in-memory dataset.
 ///
-/// `rows_per_shard` controls task granularity; `n_workers` the thread pool
-/// width. Deterministic: the result is a pure function of
-/// (spec, x, y, lambda), independent of `n_workers` and shard order
-/// (property-tested in `rust/tests/coordinator_props.rs`).
+/// `rows_per_shard` controls task granularity; `n_workers` the width of
+/// the worker *wave* — each worker loop is a job drawn from the global
+/// [`Pool`] (no ad-hoc thread spawning), so at most `Pool::global()`
+/// worker loops run concurrently and a `--threads 1` process executes the
+/// whole protocol sequentially. Deterministic: the result is a pure
+/// function of (spec, x, y, lambda), independent of `n_workers`, shard
+/// order and pool width (property-tested in
+/// `rust/tests/coordinator_props.rs`).
 pub fn fit_one_round(
     spec: &FeatureSpec,
     x: &Mat,
@@ -52,56 +57,71 @@ pub fn fit_one_round(
     let t0 = Instant::now();
     let n = x.rows();
     let f_dim = spec.feature_dim();
+    let pool = Pool::global();
 
     let (res_tx, res_rx) = mpsc::channel::<ShardStats>();
     let mut task_txs = Vec::with_capacity(n_workers);
-    let mut handles = Vec::with_capacity(n_workers);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_workers);
     for worker_id in 0..n_workers {
         let (task_tx, task_rx) = mpsc::channel::<ShardTask>();
         let cfg = WorkerConfig { worker_id, spec: spec.clone(), backend: backend.clone() };
         let res_tx = res_tx.clone();
-        handles.push(std::thread::spawn(move || worker_loop(cfg, task_rx, res_tx)));
+        jobs.push(Box::new(move || worker_loop(cfg, task_rx, res_tx)));
         task_txs.push(task_tx);
     }
     drop(res_tx);
 
-    // shard round-robin, remembering each shard's row range so the leader
-    // can recompute any shard whose reply never arrives
+    // Shard round-robin BEFORE the wave runs: tasks buffer in the
+    // unbounded per-worker channels and the channels close right away, so
+    // worker loops drain-and-exit at whatever concurrency the pool
+    // grants — no deadlock even when the pool is narrower than the wave.
+    // Accepted trade-off: the owned ShardTask copies mean ~2x dataset
+    // peak memory during the wave (the wire form stays owned because a
+    // real deployment serializes it; a borrowed protocol would buy the
+    // memory back at the cost of the broadcastable task type).
+    // Each shard's row range is remembered so the leader can recompute
+    // any shard whose reply never arrives.
     let mut shard_ranges = Vec::new();
     for (sid, lo) in (0..n).step_by(rows_per_shard).enumerate() {
         let hi = (lo + rows_per_shard).min(n);
         let task = ShardTask { shard_id: sid, x: x.row_block(lo, hi), y: y[lo..hi].to_vec() };
-        task_txs[sid % n_workers].send(task).expect("worker alive");
+        task_txs[sid % n_workers].send(task).expect("worker queue alive");
         shard_ranges.push((lo, hi));
     }
     let n_shards = shard_ranges.len();
     drop(task_txs); // close channels -> workers terminate after draining
 
-    // the single reduction
+    // run the worker wave on the shared pool (blocks until it drains)
+    pool.run_jobs(jobs);
+
+    // The single reduction. Every reply is already buffered, so sort by
+    // shard id before merging: float addition is not order-invariant, and
+    // mpsc arrival order depends on scheduling — merging in fixed shard
+    // order is what makes the fit bitwise reproducible at any pool width.
+    let mut replies: Vec<ShardStats> = res_rx.iter().collect();
+    replies.sort_by_key(|r| r.shard_id);
     let mut merged = RidgeStats::new(f_dim);
     let mut featurize_secs_total = 0.0;
     let mut seen = vec![false; n_shards];
-    for reply in res_rx.iter() {
+    for reply in &replies {
         merged.merge(&reply.stats);
         featurize_secs_total += reply.featurize_secs;
         seen[reply.shard_id] = true;
-    }
-    for h in handles {
-        h.join().expect("worker panicked");
     }
 
     // fault tolerance: recompute missing shards locally. Because the
     // feature map is data-oblivious the leader can produce byte-identical
     // statistics for a lost shard — no coordination with the (possibly
-    // dead) worker required.
+    // dead) worker required. The wave is over, so the leader draws the
+    // whole pool for the recomputation.
     let mut recovered_shards = 0;
     if seen.iter().any(|&s| !s) {
         use crate::features::Featurizer;
         let feat = spec.build();
         for (sid, &(lo, hi)) in shard_ranges.iter().enumerate() {
             if !seen[sid] {
-                let z = feat.featurize(&x.row_block(lo, hi));
-                merged.absorb(&z, &y[lo..hi]);
+                let z = feat.featurize_par(&x.row_block(lo, hi), &pool);
+                merged.absorb_with(&z, &y[lo..hi], &pool);
                 recovered_shards += 1;
             }
         }

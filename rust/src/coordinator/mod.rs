@@ -3,14 +3,18 @@
 //!
 //! * [`protocol`] — the broadcast `FeatureSpec` (a re-export of
 //!   [`crate::features::BoundSpec`]) and the shard/stats types;
-//! * [`worker`] — worker threads (native or PJRT featurization backend);
+//! * [`worker`] — worker loops (native or PJRT featurization backend),
+//!   scheduled as jobs on the global [`Pool`](crate::exec::Pool) rather
+//!   than ad-hoc threads;
 //! * [`leader`] — one-round distributed KRR: broadcast spec, one reduction
 //!   ([`fit_one_round`]), optionally finished into a persistable
 //!   [`RidgeModel`](crate::model::RidgeModel) ([`fit_ridge`]);
-//! * [`streaming`] — single-pass streaming KRR with backpressure;
+//! * [`streaming`] — single-pass streaming KRR with backpressure; the
+//!   consumer's compute draws from the pool;
 //! * [`batcher`] — dynamic batcher serving predictions; serves any fitted
 //!   [`Model`](crate::model::Model), including one reloaded from a
-//!   [`ModelStore`](crate::model::ModelStore) artifact.
+//!   [`ModelStore`](crate::model::ModelStore) artifact, with batch
+//!   compute drawn from the pool.
 //!
 //! ```
 //! use gzk::coordinator::{fit_one_round, Backend};

@@ -5,8 +5,15 @@
 //!
 //! A bounded channel provides backpressure: producers block when the
 //! consumer (featurize + absorb) falls behind.
+//!
+//! Threading: the consumer is a long-lived *control* thread (it blocks on
+//! the batch channel, which pool workers must never do) but its compute —
+//! featurization and the `Z^T Z` fold — draws from the global
+//! [`Pool`](crate::exec::Pool), so the stream keeps up with producers at
+//! whatever width `--threads` grants without spawning helpers of its own.
 
 use super::protocol::FeatureSpec;
+use crate::exec::Pool;
 use crate::features::Featurizer;
 use crate::krr::{FeatureRidge, RidgeStats};
 use crate::linalg::Mat;
@@ -56,8 +63,11 @@ impl StreamingKrr {
             let feat: Box<dyn Featurizer> = spec.build();
             let mut stats = RidgeStats::new(spec.feature_dim());
             for batch in rx {
-                let z = feat.featurize(&batch.x);
-                stats.absorb(&z, &batch.y);
+                // per-batch compute draws from the pool, clamped so tiny
+                // batches stay on the consumer thread
+                let pool = Pool::for_rows(batch.x.rows());
+                let z = feat.featurize_par(&batch.x, &pool);
+                stats.absorb_with(&z, &batch.y, &pool);
             }
             stats
         });

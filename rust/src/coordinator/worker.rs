@@ -1,9 +1,13 @@
 //! Worker side of the one-round protocol: featurize shards, return
 //! additive sufficient statistics.
 //!
-//! Each worker is a plain OS thread (tokio is not available offline and the
-//! workload is CPU-bound). A worker rebuilds its featurizer from the
-//! broadcast [`FeatureSpec`] through the `features::spec` registry — any
+//! Each worker loop is a coarse job the leader schedules on the global
+//! [`Pool`](crate::exec::Pool) (`Pool::run_jobs`) — the workers ARE the
+//! parallel axis of the protocol, so everything inside a worker runs
+//! serially ([`Pool::serial`](crate::exec::Pool::serial)): nesting
+//! data-parallel kernels inside the worker wave would oversubscribe the
+//! machine. A worker rebuilds its featurizer from the broadcast
+//! [`FeatureSpec`] through the `features::spec` registry — any
 //! data-oblivious method works — and may featurize through either backend:
 //!
 //! * native — the registry-built featurizer (the pure-rust hot path);
@@ -93,8 +97,8 @@ impl BackendState {
 }
 
 /// Run a worker loop: consume `ShardTask`s, emit `ShardStats`. Terminates
-/// when the task channel closes. This is the function each worker thread
-/// executes.
+/// when the task channel closes. This is the job each worker executes on
+/// the leader's pool wave.
 pub fn worker_loop(cfg: WorkerConfig, tasks: Receiver<ShardTask>, results: Sender<ShardStats>) {
     let backend = BackendState::new(&cfg);
     let f_dim = cfg.spec.feature_dim();
@@ -108,7 +112,8 @@ pub fn worker_loop(cfg: WorkerConfig, tasks: Receiver<ShardTask>, results: Sende
         let z = backend.featurize(&cfg.spec, &task.x);
         let featurize_secs = t0.elapsed().as_secs_f64();
         let mut stats = RidgeStats::new(f_dim);
-        stats.absorb(&z, &task.y);
+        // serial on purpose: the worker wave is the parallel axis
+        stats.absorb_with(&z, &task.y, &crate::exec::Pool::serial());
         let reply = ShardStats {
             shard_id: task.shard_id,
             worker_id: cfg.worker_id,

@@ -1,0 +1,330 @@
+//! The crate-wide parallel execution engine: one thread policy, one set of
+//! scatter primitives, shared by every layer (DESIGN.md §"Execution
+//! model").
+//!
+//! The paper's pitch is *scalable* kernel methods — featurization and the
+//! `Z^T Z` reduction dominate end-to-end time — so parallelism is a
+//! whole-system property, not a per-call-site hack. This module owns it:
+//!
+//! * [`Pool`] — the worker-pool handle. [`Pool::global`] is sized from the
+//!   machine (`std::thread::available_parallelism`), overridable once per
+//!   process via [`Pool::set_global_threads`] (the CLI's global
+//!   `--threads N` flag) or the `GZK_THREADS` environment variable (how
+//!   the CI matrix pins the test suite to 1 and 4 threads). Explicit pools
+//!   ([`Pool::new`]) are for tests and benches that need a fixed width.
+//! * [`Pool::par_chunks`] / [`Pool::scatter_rows`] — row-range scatter over
+//!   a flat row-major buffer: each worker owns a disjoint block of whole
+//!   rows, so no locks, no false-sharing hot spots, and — because every
+//!   output cell is produced by exactly one worker running the exact
+//!   serial inner loop — results are **bit-identical for every thread
+//!   count**. That determinism is what lets `absorb`, `kmeans`, `kpca`
+//!   and the featurizers adopt the pool without perturbing a single test.
+//! * [`Pool::run_jobs`] — a bounded job queue for coarse tasks (the
+//!   coordinator's worker-loop wave): at most `threads` jobs in flight,
+//!   the calling thread participates, returns when the queue drains.
+//!
+//! Blocking discipline: pool workers must never block on channels or
+//! I/O — they run compute to completion and exit the scoped region.
+//! Long-lived *control* threads (the streaming consumer, the serving
+//! batcher's service loop) stay dedicated `std::thread` spawns and draw
+//! their **compute** from the pool instead of spawning their own helpers.
+//!
+//! Workers are scoped to each parallel region (`std::thread::scope`), so
+//! borrowed inputs flow in without `'static` bounds or unsafe lifetime
+//! erasure; the pool owns the *policy* — sizing, splitting, reduction
+//! order — rather than long-lived OS threads. Spawn cost (~tens of µs) is
+//! noise against the O(n·F) and O(n·F²) regions it amortizes, and
+//! [`Pool::for_rows`] keeps it off the latency path for tiny batches.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+
+/// A worker-pool handle: how many threads a parallel region may use.
+/// Cheap to copy; every parallel kernel takes `&Pool`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool {
+    threads: usize,
+}
+
+/// Process-wide thread budget, set at most once (first of: CLI
+/// `--threads`, `GZK_THREADS`, `available_parallelism`).
+static GLOBAL_THREADS: OnceLock<usize> = OnceLock::new();
+
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("GZK_THREADS") {
+        match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => return n,
+            // a mistyped pin (GZK_THREADS=0, garbage, empty) must not
+            // silently run at machine width — that would fake out e.g.
+            // the CI matrix leg that pins the suite serial
+            _ => eprintln!(
+                "warning: GZK_THREADS={v:?} is not a positive integer; \
+                 using all {} cores",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            ),
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Pool {
+    /// Rows-per-worker floor used by [`Pool::for_rows`]: below this,
+    /// thread-spawn latency is comparable to the work itself.
+    pub const MIN_ROWS_PER_WORKER: usize = 16;
+
+    /// An explicit pool of `threads` workers (clamped to >= 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// The single-thread pool: every primitive runs inline on the calling
+    /// thread, spawning nothing.
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    /// The process-wide pool. Sized from `GZK_THREADS` or the machine's
+    /// available parallelism unless [`Pool::set_global_threads`] ran
+    /// first.
+    pub fn global() -> Pool {
+        Pool { threads: *GLOBAL_THREADS.get_or_init(default_threads) }
+    }
+
+    /// Fix the global pool width (the CLI's `--threads N`). First caller
+    /// wins — the width must be constant for the life of the process so
+    /// artifact run metadata and bench telemetry are coherent. Returns
+    /// `Err(current)` if the global pool was already sized.
+    pub fn set_global_threads(threads: usize) -> Result<(), usize> {
+        let threads = threads.max(1);
+        GLOBAL_THREADS
+            .set(threads)
+            .map_err(|_| *GLOBAL_THREADS.get().expect("global pool already sized"))
+    }
+
+    /// The global pool clamped so each worker gets at least
+    /// [`MIN_ROWS_PER_WORKER`](Pool::MIN_ROWS_PER_WORKER) rows — the
+    /// latency-path policy (serving batches of a few rows stay inline,
+    /// bulk batches fan out). Never changes results, only thread count.
+    pub fn for_rows(rows: usize) -> Pool {
+        let cap = (rows / Self::MIN_ROWS_PER_WORKER).max(1);
+        Pool::new(Self::global().threads.min(cap))
+    }
+
+    /// Worker count of this pool (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Scatter the rows of a flat row-major buffer across the pool in
+    /// contiguous, evenly-sized blocks and run `body(lo, hi, block)` on
+    /// each, where `block` is the `[lo, hi)` row range of `data`. Blocks
+    /// are disjoint, every row is covered exactly once, and a pool of one
+    /// thread (or a single block) runs inline on the calling thread.
+    ///
+    /// `data.len()` must be a whole number of `rows` rows; the row width
+    /// is derived as `data.len() / rows`.
+    pub fn par_chunks<T, F>(&self, rows: usize, data: &mut [T], body: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        if rows == 0 {
+            assert!(data.is_empty(), "par_chunks: rows = 0 with a non-empty buffer");
+            return;
+        }
+        let workers = self.threads.min(rows);
+        let chunk = rows.div_ceil(workers);
+        let bounds: Vec<usize> = (0..=workers).map(|t| (t * chunk).min(rows)).collect();
+        self.scatter_rows(&bounds, data, body);
+    }
+
+    /// [`par_chunks`](Pool::par_chunks) with explicit row boundaries:
+    /// `bounds` is a non-decreasing sequence `[0, b1, .., rows]`; chunk
+    /// `i` covers rows `bounds[i] .. bounds[i+1]`. One worker runs per
+    /// non-empty chunk, and the chunk count must not exceed the pool
+    /// width (asserted): callers derive `bounds` from
+    /// [`threads`](Pool::threads), so a serial pool really does run
+    /// inline — handing a serial pool a multi-chunk partition is a bug,
+    /// not a request for threads.
+    pub fn scatter_rows<T, F>(&self, bounds: &[usize], data: &mut [T], body: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        assert!(
+            bounds.first() == Some(&0) && bounds.windows(2).all(|w| w[0] <= w[1]),
+            "scatter_rows: bounds must be non-decreasing and start at 0"
+        );
+        let rows = *bounds.last().expect("scatter_rows: bounds are non-empty");
+        if rows == 0 {
+            return;
+        }
+        assert_eq!(data.len() % rows, 0, "scatter_rows: buffer is not a whole number of rows");
+        let cols = data.len() / rows;
+        // carve the buffer into one disjoint slice per chunk
+        let mut slices: Vec<&mut [T]> = Vec::with_capacity(bounds.len() - 1);
+        let mut rest: &mut [T] = data;
+        for w in bounds.windows(2) {
+            let (head, tail) = rest.split_at_mut((w[1] - w[0]) * cols);
+            slices.push(head);
+            rest = tail;
+        }
+        let mut work: Vec<(usize, usize, &mut [T])> = bounds
+            .windows(2)
+            .zip(slices)
+            .filter(|(w, _)| w[0] < w[1])
+            .map(|(w, s)| (w[0], w[1], s))
+            .collect();
+        assert!(
+            work.len() <= self.threads,
+            "scatter_rows: {} chunks exceed the pool width {}",
+            work.len(),
+            self.threads
+        );
+        if work.len() <= 1 {
+            if let Some((lo, hi, block)) = work.pop() {
+                body(lo, hi, block);
+            }
+            return;
+        }
+        let (last_lo, last_hi, last_block) = work.pop().expect("at least two chunks");
+        std::thread::scope(|scope| {
+            for (lo, hi, block) in work {
+                let body = &body;
+                scope.spawn(move || body(lo, hi, block));
+            }
+            // the calling thread takes the final chunk instead of idling
+            body(last_lo, last_hi, last_block);
+        });
+    }
+
+    /// Run a wave of coarse jobs to completion, at most `threads` in
+    /// flight: the calling thread and up to `threads - 1` scoped workers
+    /// pull from one queue until it drains. Used by the coordinator for
+    /// its worker loops — jobs may own channels and run for the whole
+    /// wave, which the row-scatter primitives must never do.
+    pub fn run_jobs(&self, jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
+        if self.threads <= 1 || jobs.len() <= 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let workers = self.threads.min(jobs.len());
+        let queue = Mutex::new(VecDeque::from(jobs));
+        let next = || queue.lock().expect("job queue poisoned").pop_front();
+        std::thread::scope(|scope| {
+            for _ in 1..workers {
+                scope.spawn(|| {
+                    while let Some(job) = next() {
+                        job();
+                    }
+                });
+            }
+            while let Some(job) = next() {
+                job();
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_sizing() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::new(7).threads(), 7);
+        assert_eq!(Pool::serial().threads(), 1);
+        assert!(Pool::global().threads() >= 1);
+        // the latency clamp: tiny batches stay serial, bulk batches fan out
+        assert_eq!(Pool::for_rows(0).threads(), 1);
+        assert_eq!(Pool::for_rows(Pool::MIN_ROWS_PER_WORKER - 1).threads(), 1);
+        assert!(Pool::for_rows(1 << 20).threads() <= Pool::global().threads());
+    }
+
+    #[test]
+    fn par_chunks_covers_every_row_exactly_once() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let pool = Pool::new(threads);
+            let rows = 23;
+            let cols = 4;
+            let mut data = vec![-1.0f64; rows * cols];
+            pool.par_chunks(rows, &mut data, |lo, hi, block| {
+                assert_eq!(block.len(), (hi - lo) * cols);
+                for (r, row) in block.chunks_mut(cols).enumerate() {
+                    for v in row.iter_mut() {
+                        *v = (lo + r) as f64;
+                    }
+                }
+            });
+            for (i, row) in data.chunks(cols).enumerate() {
+                assert!(
+                    row.iter().all(|&v| v == i as f64),
+                    "threads {threads}: row {i} written wrongly: {row:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_handles_degenerate_shapes() {
+        let pool = Pool::new(4);
+        // zero rows
+        let mut empty: Vec<f64> = Vec::new();
+        pool.par_chunks(0, &mut empty, |_, _, _| panic!("no chunks expected"));
+        // fewer rows than threads: every row still covered once
+        let mut data = vec![0usize; 3];
+        pool.par_chunks(3, &mut data, |lo, hi, block| {
+            for (r, v) in block.iter_mut().enumerate() {
+                *v = lo + r + 1;
+            }
+            assert!(hi <= 3);
+        });
+        assert_eq!(data, vec![1, 2, 3]);
+        // zero-width rows
+        let mut thin: Vec<f64> = Vec::new();
+        pool.par_chunks(5, &mut thin, |lo, hi, block| {
+            assert!(block.is_empty() && lo < hi);
+        });
+    }
+
+    #[test]
+    fn scatter_rows_honors_explicit_bounds() {
+        let pool = Pool::new(4);
+        let mut data = vec![0usize; 10];
+        // uneven chunks, one of them empty
+        pool.scatter_rows(&[0, 1, 1, 7, 10], &mut data, |lo, hi, block| {
+            assert_eq!(block.len(), hi - lo);
+            for v in block.iter_mut() {
+                *v = lo * 100 + hi;
+            }
+        });
+        assert_eq!(data[0], 1);
+        assert!(data[1..7].iter().all(|&v| v == 107), "{data:?}");
+        assert!(data[7..].iter().all(|&v| v == 710), "{data:?}");
+    }
+
+    #[test]
+    fn run_jobs_runs_every_job_at_any_width() {
+        for threads in [1usize, 2, 3, 16] {
+            let hits = AtomicUsize::new(0);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..17)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            Pool::new(threads).run_jobs(jobs);
+            assert_eq!(hits.load(Ordering::SeqCst), 17, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn run_jobs_empty_wave_is_a_noop() {
+        Pool::new(4).run_jobs(Vec::new());
+    }
+}

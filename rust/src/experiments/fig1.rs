@@ -5,6 +5,7 @@
 
 use crate::bench::Table;
 use crate::kernels::ntk_kappa;
+use crate::linalg::Mat;
 use crate::special::series::{exp_maclaurin, ntk_maclaurin};
 use crate::special::{gegenbauer_all, gegenbauer_series_coeffs};
 
@@ -15,8 +16,9 @@ pub struct Fig1Curves {
     pub function: &'static str,
     /// taylor[q] = max error of the degree-q Maclaurin truncation
     pub taylor: Vec<f64>,
-    /// gegenbauer[di][q] for DIMS[di]
-    pub gegenbauer: Vec<Vec<f64>>,
+    /// (DIMS.len() x (max_degree + 1)) flat matrix: row di holds the
+    /// Gegenbauer-series errors for DIMS[di], one column per degree
+    pub gegenbauer: Mat,
 }
 
 fn max_err_poly(coeffs: &[f64], d: usize, f: &dyn Fn(f64) -> f64, grid: &[f64]) -> f64 {
@@ -57,14 +59,12 @@ pub fn run(max_degree: usize) -> Vec<Fig1Curves> {
         for q in 0..=max_degree {
             taylor.push(max_err_taylor(&taylor_coef[..=q], f.as_ref(), &grid));
         }
-        let mut geg = Vec::new();
-        for &d in DIMS.iter() {
+        let mut geg = Mat::zeros(DIMS.len(), max_degree + 1);
+        for (di, &d) in DIMS.iter().enumerate() {
             let coeffs = gegenbauer_series_coeffs(|t| f(t), max_degree, d, 512);
-            let mut errs = Vec::with_capacity(max_degree + 1);
             for q in 0..=max_degree {
-                errs.push(max_err_poly(&coeffs[..=q], d, f.as_ref(), &grid));
+                geg[(di, q)] = max_err_poly(&coeffs[..=q], d, f.as_ref(), &grid);
             }
-            geg.push(errs);
         }
         out.push(Fig1Curves { function: name, taylor, gegenbauer: geg });
     }
@@ -83,7 +83,7 @@ pub fn print(curves: &[Fig1Curves]) {
         for q in 0..c.taylor.len() {
             let mut row = vec![q.to_string(), format!("{:.2e}", c.taylor[q])];
             for di in 0..DIMS.len() {
-                row.push(format!("{:.2e}", c.gegenbauer[di][q]));
+                row.push(format!("{:.2e}", c.gegenbauer[(di, q)]));
             }
             table.row(row);
         }
@@ -101,11 +101,11 @@ mod tests {
         // Taylor, and the Gegenbauer family interpolates between them
         let curves = run(15);
         let exp = &curves[0];
-        let cheb = exp.gegenbauer[0][15];
+        let cheb = exp.gegenbauer[(0, 15)];
         let taylor = exp.taylor[15];
         assert!(cheb < taylor * 1e-2, "cheb {cheb} vs taylor {taylor}");
         // interpolation: error at d=4 between d=2 and taylor
-        let d4 = exp.gegenbauer[1][15];
+        let d4 = exp.gegenbauer[(1, 15)];
         assert!(cheb <= d4 * 10.0 && d4 <= taylor, "{cheb} {d4} {taylor}");
     }
 
@@ -113,8 +113,13 @@ mod tests {
     fn errors_decrease_with_degree() {
         let curves = run(12);
         for c in &curves {
-            for errs in c.gegenbauer.iter() {
-                assert!(errs[12] <= errs[2] + 1e-12, "{}", c.function);
+            for di in 0..DIMS.len() {
+                assert!(
+                    c.gegenbauer[(di, 12)] <= c.gegenbauer[(di, 2)] + 1e-12,
+                    "{} d={}",
+                    c.function,
+                    DIMS[di]
+                );
             }
         }
     }
@@ -126,6 +131,6 @@ mod tests {
         let ntk = &curves[1];
         assert!(ntk.taylor[15] > 1e-3, "{}", ntk.taylor[15]);
         // Chebyshev still improves markedly over Taylor
-        assert!(ntk.gegenbauer[0][15] < ntk.taylor[15]);
+        assert!(ntk.gegenbauer[(0, 15)] < ntk.taylor[15]);
     }
 }

@@ -13,6 +13,7 @@
 
 use crate::bench::Table;
 use crate::data::{self, Dataset};
+use crate::exec::Pool;
 use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use crate::krr::{mse, RidgeStats};
 use crate::linalg::Mat;
@@ -114,10 +115,13 @@ pub fn run_dataset(name: &'static str, scale: f64, m_features: usize, seed: u64)
         let spec =
             FeatureSpec::new(kernel.clone(), method.tuned(q, s), m_features, seed + 1 + i as u64);
         let feat = spec.build_with_data(&x_tr);
+        // bulk featurization draws from the global pool (bit-identical to
+        // serial, so the reported MSE is thread-count independent)
+        let pool = Pool::global();
         let t0 = Instant::now();
-        let z_tr = feat.featurize(&x_tr);
+        let z_tr = feat.featurize_par(&x_tr, &pool);
         let featurize_secs = t0.elapsed().as_secs_f64();
-        let z_te = feat.featurize(&x_te);
+        let z_te = feat.featurize_par(&x_te, &pool);
         let (err, fit_secs) = fit_eval(&z_tr, &y_tr, &z_te, &y_te);
         rows.push(Table2Row {
             dataset: name,

@@ -10,6 +10,7 @@
 
 use crate::bench::Table;
 use crate::data::{clustering_dataset, ClusteringSpec, CLUSTERING_SPECS};
+use crate::exec::Pool;
 use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use crate::kmeans::kmeans;
 use std::time::Instant;
@@ -47,7 +48,9 @@ pub fn run_dataset(
             FeatureSpec::new(kernel.clone(), method.tuned(q, s), m_features, seed + 1 + i as u64);
         let feat = fspec.build_with_data(&ds.x);
         let t0 = Instant::now();
-        let z = feat.featurize(&ds.x);
+        // featurize + Lloyd scans draw from the global pool (bit-identical
+        // to serial, so the reported objective is thread-count independent)
+        let z = feat.featurize_par(&ds.x, &Pool::global());
         let res = kmeans(&z, spec.k, 50, seed ^ 0xB00);
         rows.push(Table3Row {
             dataset: spec.name,

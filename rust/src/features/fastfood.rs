@@ -20,11 +20,14 @@ pub struct FastFoodFeatures {
     blocks: usize,
     f_dim: usize,
     bandwidth: f64,
-    /// per block: rademacher B, gaussian G, permutation Pi, scaling S
-    b_diag: Vec<Vec<f64>>,
-    g_diag: Vec<Vec<f64>>,
-    perm: Vec<Vec<usize>>,
-    s_diag: Vec<Vec<f64>>,
+    /// per block (one row each, blocks x dp): rademacher B, gaussian G,
+    /// chi-rescaling S — flat matrices instead of vec-of-vecs so the
+    /// whole parameter set is three contiguous buffers
+    b_diag: Mat,
+    g_diag: Mat,
+    s_diag: Mat,
+    /// permutations Pi, row-major (blocks x dp) in one flat buffer
+    perm: Vec<usize>,
     phases: Vec<f64>,
 }
 
@@ -33,49 +36,56 @@ impl FastFoodFeatures {
         let dp = d.next_power_of_two();
         let blocks = f_dim.div_ceil(dp);
         let mut rng = Rng::new(seed).fork(0xFA57);
-        let mut b_diag = Vec::new();
-        let mut g_diag = Vec::new();
-        let mut perm = Vec::new();
-        let mut s_diag = Vec::new();
-        for _ in 0..blocks {
-            b_diag.push((0..dp).map(|_| rng.rademacher()).collect());
-            let g: Vec<f64> = (0..dp).map(|_| rng.normal()).collect();
-            let g_frob: f64 = g.iter().map(|v| v * v).sum::<f64>();
-            let mut p: Vec<usize> = (0..dp).collect();
-            rng.shuffle(&mut p);
+        let mut b_diag = Mat::zeros(blocks, dp);
+        let mut g_diag = Mat::zeros(blocks, dp);
+        let mut s_diag = Mat::zeros(blocks, dp);
+        let mut perm = vec![0usize; blocks * dp];
+        for blk in 0..blocks {
+            for v in b_diag.row_mut(blk) {
+                *v = rng.rademacher();
+            }
+            let g = g_diag.row_mut(blk);
+            for v in g.iter_mut() {
+                *v = rng.normal();
+            }
+            let g_frob: f64 = g.iter().map(|v| v * v).sum();
+            let p = &mut perm[blk * dp..(blk + 1) * dp];
+            for (i, v) in p.iter_mut().enumerate() {
+                *v = i;
+            }
+            rng.shuffle(p);
             // S rescales each row to a chi_dp-distributed norm, matching an
             // i.i.d. Gaussian matrix row: s_i = chi_dp / ||G||_F
-            let s: Vec<f64> = (0..dp).map(|_| rng.chi(dp) / g_frob.sqrt()).collect();
-            g_diag.push(g);
-            perm.push(p);
-            s_diag.push(s);
+            for v in s_diag.row_mut(blk) {
+                *v = rng.chi(dp) / g_frob.sqrt();
+            }
         }
         let phases = (0..blocks * dp)
             .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI))
             .collect();
-        FastFoodFeatures { d, dp, blocks, f_dim, bandwidth, b_diag, g_diag, perm, s_diag, phases }
+        FastFoodFeatures { d, dp, blocks, f_dim, bandwidth, b_diag, g_diag, s_diag, perm, phases }
     }
 
     /// Apply the structured matrix of `block` to the padded input `buf`
     /// (length dp), in place.
     fn apply_block(&self, block: usize, buf: &mut [f64]) {
         let dp = self.dp;
-        for (v, &b) in buf.iter_mut().zip(&self.b_diag[block]) {
+        for (v, &b) in buf.iter_mut().zip(self.b_diag.row(block)) {
             *v *= b;
         }
         fwht_inplace(buf);
         // Pi
         let mut tmp = vec![0.0; dp];
-        for (i, &p) in self.perm[block].iter().enumerate() {
+        for (i, &p) in self.perm[block * dp..(block + 1) * dp].iter().enumerate() {
             tmp[i] = buf[p];
         }
         buf.copy_from_slice(&tmp);
-        for (v, &g) in buf.iter_mut().zip(&self.g_diag[block]) {
+        for (v, &g) in buf.iter_mut().zip(self.g_diag.row(block)) {
             *v *= g;
         }
         fwht_inplace(buf);
         let norm = 1.0 / (self.bandwidth * (dp as f64).sqrt());
-        for (v, &s) in buf.iter_mut().zip(&self.s_diag[block]) {
+        for (v, &s) in buf.iter_mut().zip(self.s_diag.row(block)) {
             *v *= s * norm;
         }
     }

@@ -14,6 +14,7 @@
 
 use super::radial::RadialTable;
 use super::Featurizer;
+use crate::exec::Pool;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::special::recurrence_coeffs;
@@ -165,48 +166,29 @@ impl Featurizer for GegenbauerFeatures {
         }
     }
 
-    /// Override of the chunk-parallel default: per-thread scratch buffers
+    /// Override of the chunk-parallel default: per-worker scratch buffers
     /// write straight into the shared output (no per-chunk matrices).
-    /// Bit-identical to the sequential path — each row is independent.
-    fn featurize_par(&self, x: &Mat, n_threads: usize) -> Mat {
+    /// Bit-identical to the sequential path — each row is independent —
+    /// and, like the default, an explicit pool is always honored (no
+    /// small-`n` serial fallback).
+    fn featurize_par(&self, x: &Mat, pool: &Pool) -> Mat {
         let n = x.rows();
-        let cols = self.dim();
-        if n_threads <= 1 || n < 2 * n_threads {
+        if pool.threads() <= 1 || n <= 1 {
             return self.featurize(x);
         }
+        assert_eq!(x.cols(), self.table.d);
+        let cols = self.dim();
         let mut out = Mat::zeros(n, cols);
-        let chunk = n.div_ceil(n_threads);
-        // split the output buffer into disjoint row ranges per thread
-        let out_data = out.data_mut();
-        let mut slices: Vec<&mut [f64]> = Vec::with_capacity(n_threads);
-        let mut rest = out_data;
-        for _ in 0..n_threads {
-            let take = (chunk * cols).min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            slices.push(head);
-            rest = tail;
-        }
-        std::thread::scope(|scope| {
-            for (t, slice) in slices.into_iter().enumerate() {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(n);
-                if lo >= hi {
-                    continue;
-                }
-                let this = &*self;
-                scope.spawn(move || {
-                    let m = this.w.rows();
-                    let mut t_buf = vec![0.0; m];
-                    let mut r_buf = vec![0.0; (this.table.q + 1) * this.table.s];
-                    for (r, i) in (lo..hi).enumerate() {
-                        this.featurize_row(
-                            x.row(i),
-                            &mut slice[r * cols..(r + 1) * cols],
-                            &mut t_buf,
-                            &mut r_buf,
-                        );
-                    }
-                });
+        pool.par_chunks(n, out.data_mut(), |lo, hi, block| {
+            let mut t_buf = vec![0.0; self.w.rows()];
+            let mut r_buf = vec![0.0; (self.table.q + 1) * self.table.s];
+            for (r, i) in (lo..hi).enumerate() {
+                self.featurize_row(
+                    x.row(i),
+                    &mut block[r * cols..(r + 1) * cols],
+                    &mut t_buf,
+                    &mut r_buf,
+                );
             }
         });
         out
@@ -332,9 +314,12 @@ mod tests {
         let x = Mat::from_fn(101, 3, |_, _| rng.normal()); // odd row count
         let seq = feat.featurize(&x);
         for threads in [2usize, 3, 4, 8] {
-            let par = feat.featurize_par(&x, threads);
+            let par = feat.featurize_par(&x, &Pool::new(threads));
             assert_eq!(seq, par, "threads = {threads}");
         }
+        // a pool wider than the row count is honored, not silently serialized
+        let tiny = x.row_block(0, 3);
+        assert_eq!(feat.featurize(&tiny), feat.featurize_par(&tiny, &Pool::new(8)));
     }
 
     #[test]

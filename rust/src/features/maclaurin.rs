@@ -15,7 +15,12 @@ pub struct MaclaurinFeatures {
     d: usize,
     /// for each feature: its degree and the packed Rademacher vectors
     degrees: Vec<usize>,
-    omegas: Vec<Vec<f64>>, // degree * d entries each
+    /// flat Rademacher stack: feature f's `degrees[f]` vectors occupy
+    /// `omega[omega_off[f] .. omega_off[f] + degrees[f] * d]` (degrees are
+    /// ragged, so a single flat buffer + offsets replaces the old
+    /// vec-of-vecs — one allocation, cache-linear scans)
+    omega: Vec<f64>,
+    omega_off: Vec<usize>,
     coeffs: Vec<f64>,
     /// Gaussian-kernel mode: multiply by e^{-|x|^2/(2 sigma^2)} and scale
     /// inputs by 1/sigma
@@ -30,7 +35,8 @@ impl MaclaurinFeatures {
         let p = 2.0f64;
         let max_degree = 24;
         let mut degrees = Vec::with_capacity(f_dim);
-        let mut omegas = Vec::with_capacity(f_dim);
+        let mut omega = Vec::new();
+        let mut omega_off = Vec::with_capacity(f_dim);
         let mut coeffs = Vec::with_capacity(f_dim);
         // Maclaurin coefficients of exp: a_N = 1/N!
         let mut log_fact = vec![0.0f64; max_degree + 1];
@@ -43,14 +49,14 @@ impl MaclaurinFeatures {
             while n_deg < max_degree && rng.next_u64() & 1 == 0 {
                 n_deg += 1;
             }
-            let omega: Vec<f64> = (0..n_deg * d).map(|_| rng.rademacher()).collect();
+            omega_off.push(omega.len());
+            omega.extend((0..n_deg * d).map(|_| rng.rademacher()));
             // sqrt(a_N p^{N+1}) = sqrt(2^{N+1} / N!)
             let c = (0.5 * ((n_deg as f64 + 1.0) * p.ln() - log_fact[n_deg])).exp();
             degrees.push(n_deg);
-            omegas.push(omega);
             coeffs.push(c);
         }
-        MaclaurinFeatures { d, degrees, omegas, coeffs, bandwidth, max_degree }
+        MaclaurinFeatures { d, degrees, omega, omega_off, coeffs, bandwidth, max_degree }
     }
 }
 
@@ -79,7 +85,8 @@ impl Featurizer for MaclaurinFeatures {
             let orow = out.row_mut(i);
             for (f, orow_f) in orow.iter_mut().enumerate() {
                 let deg = self.degrees[f];
-                let omega = &self.omegas[f];
+                let off = self.omega_off[f];
+                let omega = &self.omega[off..off + deg * self.d];
                 let mut prod = 1.0;
                 for k in 0..deg {
                     let mut dot = 0.0;

@@ -26,6 +26,7 @@ pub use radial::RadialTable;
 pub use rff::FourierFeatures;
 pub use spec::{BoundSpec, FeatureSpec, KernelSpec, Method};
 
+use crate::exec::Pool;
 use crate::linalg::Mat;
 
 /// A (possibly random) finite-dimensional feature map for a kernel.
@@ -53,38 +54,24 @@ pub trait Featurizer: Send + Sync {
         out.data_mut().copy_from_slice(z.data());
     }
 
-    /// Chunk-parallel batch featurization: splits rows across `n_threads`
-    /// scoped threads. Bit-identical to the sequential path because every
-    /// featurizer maps rows independently.
-    fn featurize_par(&self, x: &Mat, n_threads: usize) -> Mat {
+    /// Chunk-parallel batch featurization: scatters row ranges across the
+    /// pool ([`Pool::par_chunks`]). Bit-identical to the sequential path
+    /// because every featurizer maps rows independently.
+    ///
+    /// An explicit pool is **always honored**: there is no small-`n`
+    /// fallback that silently serializes (a pool of `t` threads on `n < t`
+    /// rows simply runs `n` workers), so pool bugs cannot hide behind
+    /// small test inputs. Only a single-thread pool takes the serial
+    /// path — which is the same computation by construction.
+    fn featurize_par(&self, x: &Mat, pool: &Pool) -> Mat {
         let n = x.rows();
-        if n_threads <= 1 || n < 2 * n_threads {
+        if pool.threads() <= 1 || n <= 1 {
             return self.featurize(x);
         }
-        let cols = self.dim();
-        let mut out = Mat::zeros(n, cols);
-        let chunk = n.div_ceil(n_threads);
-        // split the output buffer into disjoint row ranges per thread
-        let mut slices: Vec<&mut [f64]> = Vec::with_capacity(n_threads);
-        let mut rest: &mut [f64] = out.data_mut();
-        for _ in 0..n_threads {
-            let take = (chunk * cols).min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            slices.push(head);
-            rest = tail;
-        }
-        std::thread::scope(|scope| {
-            for (t, slice) in slices.into_iter().enumerate() {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(n);
-                if lo >= hi {
-                    continue;
-                }
-                scope.spawn(move || {
-                    let z = self.featurize(&x.row_block(lo, hi));
-                    slice[..z.data().len()].copy_from_slice(z.data());
-                });
-            }
+        let mut out = Mat::zeros(n, self.dim());
+        pool.par_chunks(n, out.data_mut(), |lo, hi, block| {
+            let z = self.featurize(&x.row_block(lo, hi));
+            block.copy_from_slice(z.data());
         });
         out
     }

@@ -31,6 +31,7 @@ use super::{
     FastFoodFeatures, Featurizer, FourierFeatures, GegenbauerFeatures, MaclaurinFeatures,
     NystromFeatures, PolySketchFeatures,
 };
+use crate::exec::Pool;
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::runtime::Json;
@@ -537,8 +538,8 @@ impl<F: Featurizer> Featurizer for InputScaled<F> {
         self.inner.featurize_into(&self.scaled(x), out)
     }
 
-    fn featurize_par(&self, x: &Mat, n_threads: usize) -> Mat {
-        self.inner.featurize_par(&self.scaled(x), n_threads)
+    fn featurize_par(&self, x: &Mat, pool: &Pool) -> Mat {
+        self.inner.featurize_par(&self.scaled(x), pool)
     }
 
     fn name(&self) -> &'static str {
@@ -615,8 +616,10 @@ mod tests {
             let mut out = Mat::zeros(x.rows(), feat.dim());
             feat.featurize_into(&x, &mut out);
             assert_eq!(z, out, "{}: featurize_into differs", feat.name());
-            for threads in [2usize, 3, 5] {
-                let zp = feat.featurize_par(&x, threads);
+            for threads in [2usize, 3, 5, 64] {
+                // 64 > n: an explicit pool wider than the row count must
+                // still be honored (and still agree bit for bit)
+                let zp = feat.featurize_par(&x, &Pool::new(threads));
                 assert_eq!(z, zp, "{}: featurize_par({threads}) differs", feat.name());
             }
         }

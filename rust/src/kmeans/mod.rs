@@ -6,6 +6,7 @@
 //! (projection-cost preservation) is what licenses solving k-means on Z
 //! instead of the kernel matrix.
 
+use crate::exec::Pool;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -28,22 +29,38 @@ impl KmeansResult {
     }
 }
 
-/// Nearest-centroid assignment of feature rows (ties to the lowest index).
+/// Nearest-centroid assignment of feature rows (ties to the lowest index);
+/// row parallelism from the global pool, clamped for tiny batches.
 pub fn assign_to_centroids(z: &Mat, centroids: &Mat) -> Vec<usize> {
+    assign_to_centroids_with(z, centroids, &Pool::for_rows(z.rows()))
+}
+
+/// [`assign_to_centroids`] on an explicit pool. Rows are independent, so
+/// the scatter is bit-identical to the serial scan at every thread count.
+pub fn assign_to_centroids_with(z: &Mat, centroids: &Mat, pool: &Pool) -> Vec<usize> {
     assert_eq!(z.cols(), centroids.cols(), "feature/centroid dim mismatch");
-    (0..z.rows())
-        .map(|i| {
-            let row = z.row(i);
-            let mut best = (f64::INFINITY, 0usize);
-            for c in 0..centroids.rows() {
-                let d = sq_dist(row, centroids.row(c));
-                if d < best.0 {
-                    best = (d, c);
-                }
-            }
-            best.1
-        })
-        .collect()
+    let n = z.rows();
+    let mut out = vec![0usize; n];
+    pool.par_chunks(n, &mut out, |lo, _hi, block| {
+        for (r, slot) in block.iter_mut().enumerate() {
+            *slot = nearest_centroid(z.row(lo + r), centroids);
+        }
+    });
+    out
+}
+
+/// Index of the nearest centroid to `row` (ties to the lowest index) —
+/// the shared inner scan of Lloyd assignment, out-of-sample assignment
+/// and the streaming absorber.
+fn nearest_centroid(row: &[f64], centroids: &Mat) -> usize {
+    let mut best = (f64::INFINITY, 0usize);
+    for c in 0..centroids.rows() {
+        let d = sq_dist(row, centroids.row(c));
+        if d < best.0 {
+            best = (d, c);
+        }
+    }
+    best.1
 }
 
 fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
@@ -85,8 +102,18 @@ fn kmeanspp_init(z: &Mat, k: usize, rng: &mut Rng) -> Mat {
     centroids
 }
 
-/// Lloyd's algorithm with k-means++ seeding on feature rows.
+/// Lloyd's algorithm with k-means++ seeding on feature rows, drawing the
+/// assignment scans from the global pool.
 pub fn kmeans(z: &Mat, k: usize, max_iters: usize, seed: u64) -> KmeansResult {
+    kmeans_with(z, k, max_iters, seed, &Pool::global())
+}
+
+/// [`kmeans`] on an explicit pool. The assignment step — the O(n k F)
+/// bulk of each Lloyd iteration — scatters rows across the pool
+/// (bit-identical to the serial scan); the centroid update keeps its
+/// serial row-ascending accumulation so the whole fit is a pure function
+/// of `(z, k, max_iters, seed)`, independent of thread count.
+pub fn kmeans_with(z: &Mat, k: usize, max_iters: usize, seed: u64, pool: &Pool) -> KmeansResult {
     assert!(k >= 1 && z.rows() >= k);
     let n = z.rows();
     let f = z.cols();
@@ -96,22 +123,11 @@ pub fn kmeans(z: &Mat, k: usize, max_iters: usize, seed: u64) -> KmeansResult {
     let mut iterations = 0;
     for it in 0..max_iters {
         iterations = it + 1;
-        // assignment step
-        let mut changed = false;
-        for i in 0..n {
-            let row = z.row(i);
-            let mut best = (f64::INFINITY, 0usize);
-            for c in 0..k {
-                let d = sq_dist(row, centroids.row(c));
-                if d < best.0 {
-                    best = (d, c);
-                }
-            }
-            if assignments[i] != best.1 {
-                assignments[i] = best.1;
-                changed = true;
-            }
-        }
+        // assignment step (parallel over rows; ties to the lowest index,
+        // exactly like the serial scan)
+        let new_assignments = assign_to_centroids_with(z, &centroids, pool);
+        let changed = new_assignments != assignments;
+        assignments = new_assignments;
         if !changed && it > 0 {
             break;
         }
@@ -216,14 +232,7 @@ impl StreamingKmeans {
                 self.initialized += 1;
                 continue;
             }
-            let mut best = (f64::INFINITY, 0usize);
-            for c in 0..k {
-                let d = sq_dist(row, self.centroids.row(c));
-                if d < best.0 {
-                    best = (d, c);
-                }
-            }
-            let c = best.1;
+            let c = nearest_centroid(row, &self.centroids);
             self.counts[c] += 1;
             let eta = 1.0 / self.counts[c] as f64;
             let crow = self.centroids.row_mut(c);

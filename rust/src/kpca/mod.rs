@@ -6,6 +6,7 @@
 //! PCA is done on the (F x F) feature covariance — O(n F^2 + F^3) instead
 //! of the exact kernel method's O(n^3).
 
+use crate::exec::Pool;
 use crate::linalg::{sym_eigen, Mat};
 
 /// Fitted kernel-PCA model: mean in feature space + top-r directions.
@@ -18,8 +19,16 @@ pub struct KernelPca {
 }
 
 impl KernelPca {
-    /// Fit on a featurized dataset Z (n x F), keeping r components.
+    /// Fit on a featurized dataset Z (n x F), keeping r components; the
+    /// O(n F^2) covariance assembly draws from the global pool.
     pub fn fit(z: &Mat, r: usize) -> KernelPca {
+        Self::fit_with(z, r, &Pool::global())
+    }
+
+    /// [`fit`](KernelPca::fit) on an explicit pool (bit-identical to the
+    /// serial fit at every thread count — the parallel SYRK fixes its
+    /// reduction order).
+    pub fn fit_with(z: &Mat, r: usize, pool: &Pool) -> KernelPca {
         let (n, f) = (z.rows(), z.cols());
         assert!(r <= f && n > 1);
         // column means
@@ -40,7 +49,7 @@ impl KernelPca {
             }
         }
         let mut cov = Mat::zeros(f, f);
-        zc.syrk_into(&mut cov);
+        zc.syrk_into_p(&mut cov, pool);
         cov.symmetrize_from_upper();
         cov.scale(1.0 / n as f64);
         let (evals, evecs) = sym_eigen(&cov);
@@ -77,14 +86,21 @@ impl KernelPca {
     }
 
     /// Project featurized points onto the principal subspace: (n x r).
+    /// Row parallelism comes from the global pool (clamped for tiny
+    /// batches); bit-identical to a serial projection.
     pub fn transform(&self, z: &Mat) -> Mat {
+        self.transform_with(z, &Pool::for_rows(z.rows()))
+    }
+
+    /// [`transform`](KernelPca::transform) on an explicit pool.
+    pub fn transform_with(&self, z: &Mat, pool: &Pool) -> Mat {
         let mut zc = z.clone();
         for i in 0..z.rows() {
             for (v, &m) in zc.row_mut(i).iter_mut().zip(&self.mean) {
                 *v -= m;
             }
         }
-        zc.matmul(&self.components)
+        zc.matmul_p(&self.components, pool)
     }
 
     /// Reconstruction error: mean squared distance between centered rows

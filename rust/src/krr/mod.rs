@@ -7,6 +7,7 @@
 //! * [`ExactKrr`] — ground truth: alpha = (K + lambda I)^{-1} y with the
 //!   exact Gram matrix; O(n^3). Used by tests and the spectral validators.
 
+use crate::exec::Pool;
 use crate::kernels::Kernel;
 use crate::linalg::{Cholesky, Mat};
 
@@ -27,11 +28,21 @@ impl RidgeStats {
         RidgeStats { g: Mat::zeros(f_dim, f_dim), b: vec![0.0; f_dim], n: 0, yy: 0.0 }
     }
 
-    /// Absorb a featurized batch (rows of z paired with y).
+    /// Absorb a featurized batch (rows of z paired with y), drawing the
+    /// dominant `Z^T Z` update from the global pool.
     pub fn absorb(&mut self, z: &Mat, y: &[f64]) {
+        self.absorb_with(z, y, &Pool::global());
+    }
+
+    /// [`absorb`](RidgeStats::absorb) on an explicit pool. The O(n F^2)
+    /// SYRK runs as the blocked parallel kernel — bit-identical to serial
+    /// at every thread count — while the O(n F) `Z^T y` and counter
+    /// updates stay on the calling thread. Coordinator workers pass
+    /// [`Pool::serial`] (they are already the parallel axis).
+    pub fn absorb_with(&mut self, z: &Mat, y: &[f64], pool: &Pool) {
         assert_eq!(z.rows(), y.len());
         assert_eq!(z.cols(), self.b.len());
-        z.syrk_into(&mut self.g);
+        z.syrk_into_p(&mut self.g, pool);
         for (i, &yi) in y.iter().enumerate() {
             let row = z.row(i);
             for (bj, &zj) in self.b.iter_mut().zip(row) {
@@ -82,6 +93,12 @@ impl FeatureRidge {
     /// Predict from featurized inputs.
     pub fn predict(&self, z: &Mat) -> Vec<f64> {
         z.matvec(&self.weights)
+    }
+
+    /// [`predict`](FeatureRidge::predict) with row parallelism drawn from
+    /// an explicit pool (bit-identical to the serial path).
+    pub fn predict_with(&self, z: &Mat, pool: &Pool) -> Vec<f64> {
+        z.matvec_p(&self.weights, pool)
     }
 
     pub fn predict_row(&self, z_row: &[f64]) -> f64 {

@@ -6,8 +6,10 @@
 //!
 //! * **Substrates** — everything the paper's system depends on, built from
 //!   scratch: special functions ([`special`]), a PRNG ([`rng`]), dense
-//!   linear algebra ([`linalg`]), exact kernels ([`kernels`]), synthetic
-//!   datasets ([`data`]).
+//!   linear algebra ([`linalg`]), the parallel execution engine ([`exec`]:
+//!   one thread pool + row-scatter primitives every layer draws from, with
+//!   bit-identical results at every thread count), exact kernels
+//!   ([`kernels`]), synthetic datasets ([`data`]).
 //! * **The paper's contribution** — random Gegenbauer features for the
 //!   Generalized Zonal Kernel family ([`features::gegenbauer`]), baselines
 //!   ([`features`]), the spec-driven registry that constructs them all
@@ -77,6 +79,7 @@ pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod experiments;
 pub mod features;
 pub mod kernels;

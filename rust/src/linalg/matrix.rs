@@ -1,4 +1,16 @@
 //! Row-major dense f64 matrix with blocked kernels.
+//!
+//! Every hot kernel (`matmul` / `matmul_nt` / `matmul_tn` / `syrk_into` /
+//! `matvec`) is written as a *block body* over a contiguous range of
+//! output rows; the serial entry point runs the body once over the whole
+//! range and the `_p` variant scatters disjoint ranges across a
+//! [`Pool`](crate::exec::Pool). Because each output cell is produced by
+//! exactly one worker running the exact serial inner loop — the reduction
+//! order per output tile is fixed — the parallel kernels are
+//! **bit-identical** to the serial ones for every thread count
+//! (property-tested in `tests/exec_props.rs`).
+
+use crate::exec::Pool;
 
 /// Dense row-major matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -86,15 +98,14 @@ impl Mat {
         out
     }
 
-    /// self * other, blocked over k for cache friendliness.
-    pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        // i-k-j loop order: streams `other` rows, accumulates into out rows.
-        for i in 0..m {
+    /// Output rows [lo, hi) of self * other into `block` (a (hi-lo) x n
+    /// slice of the product). i-k-j loop order: streams `other` rows,
+    /// accumulates into out rows in fixed k-ascending order.
+    fn matmul_block(&self, other: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
+        let (k, n) = (self.cols, other.cols);
+        for i in lo..hi {
             let a_row = self.row(i);
-            let out_row = &mut out.data[i * n..(i + 1) * n];
+            let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
             for (kk, &aik) in a_row.iter().enumerate().take(k) {
                 if aik == 0.0 {
                     continue;
@@ -105,17 +116,31 @@ impl Mat {
                 }
             }
         }
+    }
+
+    /// self * other, blocked over k for cache friendliness.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        self.matmul_p(other, &Pool::serial())
+    }
+
+    /// Parallel [`matmul`](Mat::matmul): output rows scattered across the
+    /// pool, bit-identical to the serial kernel at every thread count.
+    pub fn matmul_p(&self, other: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, n) = (self.rows, other.cols);
+        let mut out = Mat::zeros(m, n);
+        pool.par_chunks(m, &mut out.data, |lo, hi, block| {
+            self.matmul_block(other, lo, hi, block)
+        });
         out
     }
 
-    /// self * other^T — the featurizer's shape (rows x rows dot products).
-    pub fn matmul_nt(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
-        let (m, n, k) = (self.rows, other.rows, self.cols);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
+    /// Output rows [lo, hi) of self * other^T into `block`.
+    fn matmul_nt_block(&self, other: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
+        let (n, k) = (other.rows, self.cols);
+        for i in lo..hi {
             let a = self.row(i);
-            let out_row = &mut out.data[i * n..(i + 1) * n];
+            let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
             for j in 0..n {
                 let b = other.row(j);
                 let mut acc = 0.0;
@@ -125,49 +150,101 @@ impl Mat {
                 out_row[j] = acc;
             }
         }
+    }
+
+    /// self * other^T — the featurizer's shape (rows x rows dot products).
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        self.matmul_nt_p(other, &Pool::serial())
+    }
+
+    /// Parallel [`matmul_nt`](Mat::matmul_nt), bit-identical to serial.
+    pub fn matmul_nt_p(&self, other: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        pool.par_chunks(m, &mut out.data, |lo, hi, block| {
+            self.matmul_nt_block(other, lo, hi, block)
+        });
         out
     }
 
-    /// self^T * other (k x m)(k x n) -> (m x n); used for Z^T Z reductions.
-    pub fn matmul_tn(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
-        let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
+    /// Output rows [lo, hi) of self^T * other into `block`. The reduction
+    /// over t runs in fixed ascending order for every cell, so any row
+    /// partition of the output yields bit-identical results.
+    fn matmul_tn_block(&self, other: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
+        let (k, n) = (self.rows, other.cols);
         for t in 0..k {
             let a = self.row(t);
             let b = other.row(t);
-            for (i, &ai) in a.iter().enumerate().take(m) {
+            for i in lo..hi {
+                let ai = a[i];
                 if ai == 0.0 {
                     continue;
                 }
-                let out_row = &mut out.data[i * n..(i + 1) * n];
+                let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
                 for (o, &bj) in out_row.iter_mut().zip(b) {
                     *o += ai * bj;
                 }
             }
         }
+    }
+
+    /// self^T * other (k x m)(k x n) -> (m x n); used for Z^T Z reductions.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        self.matmul_tn_p(other, &Pool::serial())
+    }
+
+    /// Parallel [`matmul_tn`](Mat::matmul_tn), bit-identical to serial.
+    pub fn matmul_tn_p(&self, other: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (m, n) = (self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        pool.par_chunks(m, &mut out.data, |lo, hi, block| {
+            self.matmul_tn_block(other, lo, hi, block)
+        });
         out
     }
 
-    /// Symmetric rank-k update: out += self^T self (Gram of the rows).
-    pub fn syrk_into(&self, out: &mut Mat) {
-        assert_eq!(out.rows, self.cols);
-        assert_eq!(out.cols, self.cols);
+    /// Accumulate output rows [lo, hi) of the rank-k update self^T self
+    /// into `block` (upper triangle only; per-cell reduction over rows of
+    /// self in fixed ascending order).
+    fn syrk_block(&self, lo: usize, hi: usize, block: &mut [f64]) {
         let f = self.cols;
         for t in 0..self.rows {
             let z = self.row(t);
-            for i in 0..f {
+            for i in lo..hi {
                 let zi = z[i];
                 if zi == 0.0 {
                     continue;
                 }
-                let out_row = &mut out.data[i * f..i * f + f];
+                let out_row = &mut block[(i - lo) * f..(i - lo) * f + f];
                 // only upper triangle, mirrored below
                 for j in i..f {
                     out_row[j] += zi * z[j];
                 }
             }
         }
+    }
+
+    /// Symmetric rank-k update: out += self^T self (Gram of the rows).
+    pub fn syrk_into(&self, out: &mut Mat) {
+        self.syrk_into_p(out, &Pool::serial());
+    }
+
+    /// Parallel [`syrk_into`](Mat::syrk_into): output rows partitioned so
+    /// each worker owns ~equal upper-triangle area (early rows are wider),
+    /// bit-identical to the serial kernel at every thread count.
+    pub fn syrk_into_p(&self, out: &mut Mat, pool: &Pool) {
+        assert_eq!(out.rows, self.cols);
+        assert_eq!(out.cols, self.cols);
+        let f = self.cols;
+        if f == 0 {
+            return;
+        }
+        let bounds = triangle_bounds(f, pool.threads());
+        pool.scatter_rows(&bounds, &mut out.data, |lo, hi, block| {
+            self.syrk_block(lo, hi, block)
+        });
     }
 
     /// Mirror the upper triangle into the lower (companion to syrk_into).
@@ -181,10 +258,20 @@ impl Mat {
     }
 
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_p(x, &Pool::serial())
+    }
+
+    /// Parallel [`matvec`](Mat::matvec): output entries scattered across
+    /// the pool, bit-identical to serial (each entry is one serial dot).
+    pub fn matvec_p(&self, x: &[f64], pool: &Pool) -> Vec<f64> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|i| self.row(i).iter().zip(x).map(|(&a, &b)| a * b).sum())
-            .collect()
+        let mut out = vec![0.0; self.rows];
+        pool.par_chunks(self.rows, &mut out, |lo, _hi, block| {
+            for (r, o) in block.iter_mut().enumerate() {
+                *o = self.row(lo + r).iter().zip(x).map(|(&a, &b)| a * b).sum();
+            }
+        });
+        out
     }
 
     /// self^T x (length rows) -> length cols.
@@ -256,6 +343,29 @@ impl Mat {
         }
         norm.sqrt()
     }
+}
+
+/// Partition `0..f` into at most `parts` contiguous ranges of ~equal
+/// upper-triangle area (row i of a SYRK touches `f - i` cells, so equal
+/// row counts would leave the first worker with most of the work). The
+/// partition only affects load balance, never values — each cell is
+/// computed identically in any chunk.
+fn triangle_bounds(f: usize, parts: usize) -> Vec<usize> {
+    let parts = parts.clamp(1, f.max(1));
+    let total = (f * (f + 1)) as f64 / 2.0;
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0);
+    let mut acc = 0.0;
+    let mut part = 1usize;
+    for i in 0..f {
+        acc += (f - i) as f64;
+        if part < parts && acc >= total * part as f64 / parts as f64 {
+            bounds.push(i + 1);
+            part += 1;
+        }
+    }
+    bounds.push(f);
+    bounds
 }
 
 impl std::ops::Index<(usize, usize)> for Mat {
@@ -355,5 +465,58 @@ mod tests {
         assert_eq!(b.rows(), 2);
         assert_eq!(b.row(0), &[6., 7., 8.]);
         assert_eq!(b.row(1), &[9., 10., 11.]);
+    }
+
+    #[test]
+    fn triangle_bounds_tile_and_balance() {
+        for (f, parts) in [(1usize, 1usize), (7, 3), (64, 4), (5, 8), (97, 13)] {
+            let b = triangle_bounds(f, parts);
+            assert_eq!(*b.first().unwrap(), 0, "f={f} parts={parts}");
+            assert_eq!(*b.last().unwrap(), f, "f={f} parts={parts}");
+            assert!(b.windows(2).all(|w| w[0] <= w[1]), "f={f} parts={parts}: {b:?}");
+            assert!(b.len() <= parts + 2, "f={f} parts={parts}: {b:?}");
+            // balance: no chunk holds more than ~2x its fair triangle share
+            let total = (f * (f + 1)) as f64 / 2.0;
+            for w in b.windows(2) {
+                let area: usize = (w[0]..w[1]).map(|i| f - i).sum();
+                assert!(
+                    area as f64 <= 2.0 * total / parts.min(f) as f64 + f as f64,
+                    "f={f} parts={parts}: chunk {w:?} holds {area} of {total}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_kernels_bit_identical_to_serial() {
+        use crate::exec::Pool;
+        let mut rng = Rng::new(7);
+        // odd, non-divisible shapes on purpose
+        let a = random(&mut rng, 13, 7);
+        let b = random(&mut rng, 7, 11);
+        let c = random(&mut rng, 17, 7);
+        let x: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let serial_mm = a.matmul(&b);
+        let serial_nt = a.matmul_nt(&c);
+        let serial_tn = a.matmul_tn(&a);
+        let serial_mv = a.matvec(&x);
+        let mut serial_g = Mat::zeros(7, 7);
+        a.syrk_into(&mut serial_g);
+        for threads in [1usize, 2, 3, 5, 8, 32] {
+            let pool = Pool::new(threads);
+            assert_eq!(serial_mm, a.matmul_p(&b, &pool), "matmul threads={threads}");
+            assert_eq!(serial_nt, a.matmul_nt_p(&c, &pool), "matmul_nt threads={threads}");
+            assert_eq!(serial_tn, a.matmul_tn_p(&a, &pool), "matmul_tn threads={threads}");
+            assert_eq!(serial_mv, a.matvec_p(&x, &pool), "matvec threads={threads}");
+            let mut g = Mat::zeros(7, 7);
+            a.syrk_into_p(&mut g, &pool);
+            assert_eq!(serial_g, g, "syrk threads={threads}");
+            // and syrk accumulation (out += ...) composes identically
+            let mut g2 = serial_g.clone();
+            a.syrk_into_p(&mut g2, &pool);
+            let mut s2 = serial_g.clone();
+            a.syrk_into(&mut s2);
+            assert_eq!(s2, g2, "syrk accumulate threads={threads}");
+        }
     }
 }

@@ -1,10 +1,12 @@
 //! Dense linear-algebra substrate (built from scratch; no external BLAS).
 //!
 //! [`Mat`] is a row-major f64 matrix with the operations the rest of the
-//! system needs: blocked matmul / syrk, Cholesky factorization and SPD
-//! solves, a cyclic Jacobi symmetric eigensolver, the fast Walsh-Hadamard
-//! transform (FastFood baseline) and a radix-2 complex FFT (TensorSketch
-//! baseline).
+//! system needs: blocked matmul / syrk (each with a `_p` variant that
+//! scatters output rows across an [`exec::Pool`](crate::exec::Pool) and is
+//! bit-identical to the serial kernel at every thread count), Cholesky
+//! factorization and SPD solves, a cyclic Jacobi symmetric eigensolver,
+//! the fast Walsh-Hadamard transform (FastFood baseline) and a radix-2
+//! complex FFT (TensorSketch baseline).
 
 mod cholesky;
 mod eigen;

@@ -24,6 +24,16 @@
 //!                                                    silently ignoring them)
 //!   gzk info                                          artifact manifest summary
 //!
+//! Global flags (every subcommand):
+//!
+//!   --threads N    width of the process-wide exec::Pool (default: all
+//!                  cores; GZK_THREADS env var is the no-CLI override).
+//!                  Every parallel path — featurize, Z^T Z absorb, k-means
+//!                  assignment, KPCA, the coordinator's worker wave, the
+//!                  serving batcher — draws from this one pool, and every
+//!                  result is bit-identical at every width. Model
+//!                  artifacts record the width in their run metadata.
+//!
 //! Subcommands that build a single featurizer (`fit`, `serve`, `leverage`)
 //! share one flag group — `--kernel/--method/--m/--seed` plus tuning knobs —
 //! parsed once by `cli::Args::feature_spec` into a `features::FeatureSpec`
@@ -49,6 +59,15 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // the global --threads flag sizes the process-wide pool before any
+    // subcommand runs compute (first sizing wins for the whole process)
+    match args.threads() {
+        Ok(Some(n)) => {
+            let _ = gzk::exec::Pool::set_global_threads(n);
+        }
+        Ok(None) => {}
+        Err(e) => usage_error(&e),
+    }
     match args.subcommand.as_str() {
         "fig1" => {
             let curves = fig1::run(args.get_usize("degree", 15));
@@ -367,13 +386,15 @@ fn predict_cmd(args: &Args) {
         Err(e) => fatal_error(&e),
     };
     let spec = model.feature_spec().clone();
+    let out_dim = model.output_dim();
     println!(
         "loaded model {name:?}: kind {}, d {}, output dim {} — serving the stored artifact, no refit",
         model.kind().name(),
         spec.d,
-        model.output_dim()
+        out_dim
     );
     println!("spec: {}", spec.to_json());
+    println!("serving pool: {} threads", gzk::exec::Pool::global().threads());
 
     let n_requests = args.get_usize("requests", 500);
     if n_requests == 0 {
@@ -386,21 +407,22 @@ fn predict_cmd(args: &Args) {
     rng.sphere(&mut point);
     let _ = client.predict_vec(&point); // warm
     let mut latencies = Vec::with_capacity(n_requests);
-    let mut sample: Vec<Vec<f64>> = Vec::new();
+    // first few outputs, kept as a flat matrix (one row per sampled reply)
+    let mut sample = gzk::linalg::Mat::zeros(n_requests.min(3), out_dim);
     let t0 = Instant::now();
     for r in 0..n_requests {
         rng.sphere(&mut point);
         let t = Instant::now();
         let out = client.predict_vec(&point).expect("served");
         latencies.push(t.elapsed().as_secs_f64());
-        if r < 3 {
-            sample.push(out);
+        if r < sample.rows() {
+            sample.row_mut(r).copy_from_slice(&out);
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     print_latency_summary(n_requests, wall, &mut latencies, &svc.metrics());
-    for (i, out) in sample.iter().enumerate() {
-        let cells: Vec<String> = out.iter().map(|v| format!("{v:.4}")).collect();
+    for i in 0..sample.rows() {
+        let cells: Vec<String> = sample.row(i).iter().map(|v| format!("{v:.4}")).collect();
         println!("sample output {i}: [{}]", cells.join(", "));
     }
 }
@@ -443,6 +465,7 @@ fn serve_demo(args: &Args) {
     };
 
     println!("== gzk serve: one-round distributed KRR + model artifact + batched serving ==");
+    println!("pool: {} threads", gzk::exec::Pool::global().threads());
     let mut eval: Option<(gzk::linalg::Mat, Vec<f64>)> = None;
     let model: Box<dyn Model> = if stored {
         // the featurizer flag group and training knobs configure TRAINING;

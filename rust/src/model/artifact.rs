@@ -6,6 +6,7 @@
 //! {
 //!   "format": 1,
 //!   "kind": "ridge" | "kmeans" | "kpca",
+//!   "run": { "threads": N },  // run metadata: pool width of the fitting process
 //!   "spec": { ...BoundSpec wire form, seed as a decimal string... },
 //!   "nystrom_landmarks": { "rows": R, "cols": C, "data": [...] },  // data-dependent maps only
 //!   "state": { ...kind-specific learned state... }
@@ -19,6 +20,7 @@
 //! `features::spec` (seed travels as a decimal string, full `u64` range).
 
 use super::ModelKind;
+use crate::exec::Pool;
 use crate::features::{BoundSpec, Featurizer, Method, NystromFeatures};
 use crate::linalg::Mat;
 use crate::runtime::Json;
@@ -122,6 +124,19 @@ impl FittedMap {
         );
         self.feat.featurize(x)
     }
+
+    /// [`featurize`](FittedMap::featurize) with row parallelism drawn from
+    /// an explicit pool (bit-identical to the serial map).
+    pub fn featurize_with(&self, x: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(
+            x.cols(),
+            self.spec.d,
+            "input dim {} != spec d {}",
+            x.cols(),
+            self.spec.d
+        );
+        self.feat.featurize_par(x, pool)
+    }
 }
 
 /// A parsed artifact: the common halves decoded, the kind-specific state
@@ -130,13 +145,21 @@ pub struct Envelope {
     pub kind: ModelKind,
     pub map: FittedMap,
     pub state: Json,
+    /// Run metadata recorded at fit time: the global pool width of the
+    /// producing process (`None` for artifacts written before the field
+    /// existed — it is provenance, never required to rebuild the model).
+    pub run_threads: Option<usize>,
 }
 
 /// Serialize the common envelope around a kind-specific `state` object.
+/// Besides the model halves, the envelope records run metadata — the
+/// global pool width of the writing process — so an artifact documents
+/// the execution configuration that produced it.
 pub fn envelope(kind: ModelKind, map: &FittedMap, state: &str) -> String {
     let mut s = format!(
-        r#"{{"format":{ARTIFACT_FORMAT},"kind":"{}","spec":{}"#,
+        r#"{{"format":{ARTIFACT_FORMAT},"kind":"{}","run":{{"threads":{}}},"spec":{}"#,
         kind.name(),
+        Pool::global().threads(),
         map.spec().to_json()
     );
     if let Some(landmarks) = map.nystrom_landmarks() {
@@ -162,9 +185,10 @@ pub fn parse_envelope(text: &str) -> Result<Envelope, String> {
         Some(v) => Some(mat_from_json(v)?),
         None => None,
     };
+    let run_threads = j.get("run").and_then(|r| r.get("threads")).and_then(|v| v.as_usize());
     let map = FittedMap::rebuild(spec, landmarks)?;
     let state = req(&j, "state")?.clone();
-    Ok(Envelope { kind, map, state })
+    Ok(Envelope { kind, map, state, run_threads })
 }
 
 /// Shortest representation that parses back to exactly the same bits.
@@ -277,5 +301,28 @@ mod tests {
     #[should_panic(expected = "non-finite")]
     fn refuses_non_finite_values() {
         let _ = fmt_f64(f64::NAN);
+    }
+
+    #[test]
+    fn envelope_records_and_tolerates_run_metadata() {
+        use crate::features::{FeatureSpec, KernelSpec, Method};
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Fourier,
+            8,
+            3,
+        )
+        .bind(2);
+        let map = FittedMap::rebuild(spec, None).unwrap();
+        let text = envelope(ModelKind::Ridge, &map, r#"{"lambda":0.5,"weights":[]}"#);
+        assert!(text.contains(r#""run":{"threads":"#), "{text}");
+        let env = parse_envelope(&text).unwrap();
+        assert_eq!(env.run_threads, Some(Pool::global().threads()));
+        // artifacts without the field (older writers) still parse
+        let start = text.find(r#","run""#).unwrap();
+        let end = text[start + 1..].find(r#","spec""#).unwrap() + start + 1;
+        let stripped = format!("{}{}", &text[..start], &text[end..]);
+        let env = parse_envelope(&stripped).unwrap();
+        assert_eq!(env.run_threads, None);
     }
 }

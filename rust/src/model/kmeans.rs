@@ -4,8 +4,9 @@
 
 use super::artifact::{self, Envelope, FittedMap};
 use super::{Model, ModelKind};
+use crate::exec::Pool;
 use crate::features::BoundSpec;
-use crate::kmeans::{assign_to_centroids, kmeans};
+use crate::kmeans::{assign_to_centroids_with, kmeans_with};
 use crate::linalg::Mat;
 
 pub struct KmeansModel {
@@ -31,8 +32,11 @@ impl KmeansModel {
         }
         let seed = spec.spec.seed;
         let map = FittedMap::fit(spec, x)?;
-        let z = map.featurize(x);
-        let res = kmeans(&z, k, max_iters, seed);
+        // training featurization + Lloyd assignment scans draw from the
+        // global pool (bit-identical to serial at any width)
+        let pool = Pool::global();
+        let z = map.featurize_with(x, &pool);
+        let res = kmeans_with(&z, k, max_iters, seed, &pool);
         Ok(KmeansModel { map, centroids: res.centroids, objective: res.objective })
     }
 
@@ -48,9 +52,15 @@ impl KmeansModel {
         self.objective
     }
 
-    /// Out-of-sample cluster assignment for raw inputs.
+    /// Out-of-sample cluster assignment for raw inputs; row parallelism
+    /// from the global pool, clamped for tiny batches.
     pub fn assign(&self, x: &Mat) -> Vec<usize> {
-        assign_to_centroids(&self.map.featurize(x), &self.centroids)
+        self.assign_with(x, &Pool::for_rows(x.rows()))
+    }
+
+    /// [`assign`](KmeansModel::assign) on an explicit pool.
+    pub fn assign_with(&self, x: &Mat, pool: &Pool) -> Vec<usize> {
+        assign_to_centroids_with(&self.map.featurize_with(x, pool), &self.centroids, pool)
     }
 
     pub(super) fn from_envelope(env: Envelope) -> Result<KmeansModel, String> {
@@ -85,7 +95,11 @@ impl Model for KmeansModel {
 
     /// Cluster index per row, as an (n x 1) matrix of whole numbers.
     fn predict(&self, x: &Mat) -> Mat {
-        let assign = self.assign(x);
+        self.predict_with(x, &Pool::for_rows(x.rows()))
+    }
+
+    fn predict_with(&self, x: &Mat, pool: &Pool) -> Mat {
+        let assign = self.assign_with(x, pool);
         Mat::from_vec(assign.len(), 1, assign.into_iter().map(|c| c as f64).collect())
     }
 

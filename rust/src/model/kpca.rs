@@ -4,6 +4,7 @@
 
 use super::artifact::{self, Envelope, FittedMap};
 use super::{Model, ModelKind};
+use crate::exec::Pool;
 use crate::features::BoundSpec;
 use crate::kpca::KernelPca;
 use crate::linalg::Mat;
@@ -21,23 +22,32 @@ impl KpcaModel {
             return Err("kpca needs at least 2 training rows".to_string());
         }
         let map = FittedMap::fit(spec, x)?;
-        let z = map.featurize(x);
+        // training featurization + covariance assembly draw from the
+        // global pool (bit-identical to serial at any width)
+        let pool = Pool::global();
+        let z = map.featurize_with(x, &pool);
         if rank == 0 || rank > z.cols() {
             return Err(format!(
                 "rank {rank} out of range for {} feature dimensions",
                 z.cols()
             ));
         }
-        Ok(KpcaModel { pca: KernelPca::fit(&z, rank), map })
+        Ok(KpcaModel { pca: KernelPca::fit_with(&z, rank, &pool), map })
     }
 
     pub fn pca(&self) -> &KernelPca {
         &self.pca
     }
 
-    /// Project raw inputs onto the principal subspace: (n x r).
+    /// Project raw inputs onto the principal subspace: (n x r); row
+    /// parallelism from the global pool, clamped for tiny batches.
     pub fn transform(&self, x: &Mat) -> Mat {
-        self.pca.transform(&self.map.featurize(x))
+        self.transform_with(x, &Pool::for_rows(x.rows()))
+    }
+
+    /// [`transform`](KpcaModel::transform) on an explicit pool.
+    pub fn transform_with(&self, x: &Mat, pool: &Pool) -> Mat {
+        self.pca.transform_with(&self.map.featurize_with(x, pool), pool)
     }
 
     pub(super) fn from_envelope(env: Envelope) -> Result<KpcaModel, String> {
@@ -72,7 +82,11 @@ impl Model for KpcaModel {
     }
 
     fn predict(&self, x: &Mat) -> Mat {
-        self.transform(x)
+        self.predict_with(x, &Pool::for_rows(x.rows()))
+    }
+
+    fn predict_with(&self, x: &Mat, pool: &Pool) -> Mat {
+        self.transform_with(x, pool)
     }
 
     fn to_artifact(&self) -> String {

@@ -55,6 +55,7 @@ pub use kpca::KpcaModel;
 pub use ridge::RidgeModel;
 pub use store::{validate_model_name, ModelStore, StoreEntry};
 
+use crate::exec::Pool;
 use crate::features::BoundSpec;
 use crate::linalg::Mat;
 
@@ -110,6 +111,17 @@ pub trait Model: Send + Sync {
     /// Predict from **raw** inputs (n x d) — featurization happens inside,
     /// through the fitted map. Returns (n x output_dim).
     fn predict(&self, x: &Mat) -> Mat;
+
+    /// [`predict`](Model::predict) with row parallelism drawn from an
+    /// explicit pool — **bit-identical** to `predict` at every thread
+    /// count (the parallel kernels fix their reduction order). The
+    /// serving batcher calls this with [`Pool::for_rows`] so bulk batches
+    /// fan out while single-row requests stay on the service thread.
+    /// Default ignores the pool.
+    fn predict_with(&self, x: &Mat, pool: &Pool) -> Mat {
+        let _ = pool;
+        self.predict(x)
+    }
 
     /// Serialize to the versioned JSON artifact format.
     fn to_artifact(&self) -> String;

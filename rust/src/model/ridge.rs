@@ -4,6 +4,7 @@
 
 use super::artifact::{self, Envelope, FittedMap};
 use super::{Model, ModelKind};
+use crate::exec::Pool;
 use crate::features::BoundSpec;
 use crate::krr::{FeatureRidge, RidgeStats};
 use crate::linalg::Mat;
@@ -23,7 +24,9 @@ impl RidgeModel {
             return Err(format!("{} rows but {} targets", x.rows(), y.len()));
         }
         let map = FittedMap::fit(spec, x)?;
-        let z = map.featurize(x);
+        // training featurization + absorb draw from the global pool
+        // (bit-identical to serial at any width)
+        let z = map.featurize_with(x, &Pool::global());
         Ok(RidgeModel { ridge: FeatureRidge::fit(&z, y, lambda), map })
     }
 
@@ -51,9 +54,15 @@ impl RidgeModel {
         &self.ridge
     }
 
-    /// Predictions as a plain vector (one value per input row).
+    /// Predictions as a plain vector (one value per input row); row
+    /// parallelism from the global pool, clamped for tiny batches.
     pub fn predict_vec(&self, x: &Mat) -> Vec<f64> {
-        self.ridge.predict(&self.map.featurize(x))
+        self.predict_vec_with(x, &Pool::for_rows(x.rows()))
+    }
+
+    /// [`predict_vec`](RidgeModel::predict_vec) on an explicit pool.
+    pub fn predict_vec_with(&self, x: &Mat, pool: &Pool) -> Vec<f64> {
+        self.ridge.predict_with(&self.map.featurize_with(x, pool), pool)
     }
 
     pub(super) fn from_envelope(env: Envelope) -> Result<RidgeModel, String> {
@@ -84,8 +93,12 @@ impl Model for RidgeModel {
     }
 
     fn predict(&self, x: &Mat) -> Mat {
+        self.predict_with(x, &Pool::for_rows(x.rows()))
+    }
+
+    fn predict_with(&self, x: &Mat, pool: &Pool) -> Mat {
         let n = x.rows();
-        Mat::from_vec(n, 1, self.predict_vec(x))
+        Mat::from_vec(n, 1, self.predict_vec_with(x, pool))
     }
 
     fn to_artifact(&self) -> String {

@@ -110,6 +110,30 @@ fn malformed_flag_value_is_a_clean_usage_error() {
 }
 
 #[test]
+fn threads_flag_is_global_and_recorded_in_run_metadata() {
+    let dir = fresh_dir("threads");
+    let dir_s = dir.to_str().unwrap();
+    let stdout = run_ok(&[
+        "fit", "--model", "ridge", "--out", dir_s, "--n", "300", "--m", "32", "--workers", "2",
+        "--threads", "2",
+    ]);
+    assert!(stdout.contains("saved model"), "{stdout}");
+    // the artifact documents the pool width that produced it
+    let artifact = std::fs::read_to_string(dir.join("ridge.model.json")).unwrap();
+    assert!(artifact.contains(r#""run":{"threads":2}"#), "{artifact}");
+    // predict accepts the flag too: it configures serving, not training
+    let stdout =
+        run_ok(&["predict", "--model-dir", dir_s, "--requests", "10", "--threads", "1"]);
+    assert!(stdout.contains("serving pool: 1 threads"), "{stdout}");
+    assert!(stdout.contains("served 10 requests"), "{stdout}");
+    // nonsense widths are a clean usage error naming the flag
+    let out = bin().args(["serve", "--threads", "0"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--threads"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn fit_requires_an_output_dir() {
     let out = bin().args(["fit", "--model", "ridge"]).output().unwrap();
     assert_eq!(out.status.code(), Some(2));

@@ -243,15 +243,15 @@ fn prop_service_answers_every_request_exactly_once() {
         let mut joins = Vec::new();
         for t in 0..3usize {
             let client = svc.client();
-            let rows: Vec<Vec<f64>> =
-                (0..c.x.rows()).skip(t).step_by(3).map(|i| c.x.row(i).to_vec()).collect();
-            let exp: Vec<f64> = (0..c.x.rows()).skip(t).step_by(3).map(|i| expect[i]).collect();
+            let idx: Vec<usize> = (0..c.x.rows()).skip(t).step_by(3).collect();
+            let rows = Mat::from_fn(idx.len(), c.x.cols(), |r, j| c.x[(idx[r], j)]);
+            let exp: Vec<f64> = idx.iter().map(|&i| expect[i]).collect();
             joins.push(std::thread::spawn(move || {
-                for (row, e) in rows.iter().zip(&exp) {
-                    let p = client.predict(row).expect("served");
+                for (r, e) in exp.iter().enumerate() {
+                    let p = client.predict(rows.row(r)).expect("served");
                     assert!((p - e).abs() < 1e-9, "prediction mismatch");
                 }
-                rows.len()
+                rows.rows()
             }));
         }
         let mut answered = 0;

@@ -111,7 +111,7 @@ fn parallel_featurize_in_krr_pipeline() {
     let ds = data::elevation(2000, 21);
     let feat = GegenbauerFeatures::new(RadialTable::gaussian(3, 10, 2), 256, 22);
     let z_seq = feat.featurize(&ds.x);
-    let z_par = feat.featurize_par(&ds.x, 4);
+    let z_par = feat.featurize_par(&ds.x, &gzk::exec::Pool::new(4));
     assert_eq!(z_seq, z_par);
 }
 

@@ -1,0 +1,122 @@
+//! Determinism properties of the parallel execution engine (DESIGN.md
+//! §"Execution model"): every pool-backed path must be **bit-identical**
+//! across thread counts {1, 2, 3, 8} — featurization, the parallel linalg
+//! kernels, and a full fit → predict pipeline — for every method in
+//! `Method::registry()`. This is the contract that lets the whole stack
+//! adopt the pool without perturbing any numeric result.
+
+use gzk::exec::Pool;
+use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
+use gzk::kmeans::kmeans_with;
+use gzk::kpca::KernelPca;
+use gzk::krr::RidgeStats;
+use gzk::linalg::Mat;
+use gzk::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 3, 8];
+
+fn dataset(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.6);
+    let y: Vec<f64> =
+        (0..n).map(|i| (2.0 * x[(i, 0)]).sin() + x[(i, 1)] + 0.02 * rng.normal()).collect();
+    (x, y)
+}
+
+#[test]
+fn featurize_par_bit_identical_across_thread_counts_for_every_method() {
+    // odd row count on purpose: chunk boundaries never divide evenly
+    let (x, _) = dataset(61, 3, 0xE1);
+    for method in Method::registry() {
+        // bandwidth != 1 exercises the InputScaled wrapper too
+        let spec = FeatureSpec::new(KernelSpec::Gaussian { bandwidth: 1.2 }, method, 64, 9);
+        let feat = spec.build_with_data(&x);
+        let z = feat.featurize(&x);
+        for t in THREADS {
+            let zp = feat.featurize_par(&x, &Pool::new(t));
+            assert_eq!(z, zp, "{}: featurize_par({t}) differs from serial", feat.name());
+        }
+        // explicit pools wider than the row count are honored, not
+        // silently serialized — and still bit-identical
+        let tiny = x.row_block(0, 3);
+        let z_tiny = feat.featurize(&tiny);
+        assert_eq!(z_tiny, feat.featurize_par(&tiny, &Pool::new(8)), "{}", feat.name());
+    }
+}
+
+#[test]
+fn parallel_syrk_bit_identical_across_thread_counts() {
+    let (z, y) = dataset(83, 5, 0xE2);
+    // reference: the serial absorb (single-thread pool)
+    let mut serial = RidgeStats::new(z.cols());
+    serial.absorb_with(&z, &y, &Pool::serial());
+    for t in THREADS {
+        let mut par = RidgeStats::new(z.cols());
+        par.absorb_with(&z, &y, &Pool::new(t));
+        assert_eq!(serial.g, par.g, "G differs at {t} threads");
+        assert_eq!(serial.b, par.b, "b differs at {t} threads");
+        assert_eq!((serial.n, serial.yy), (par.n, par.yy), "counters differ at {t} threads");
+        // and the raw kernel agrees with the absorb path
+        let mut g = Mat::zeros(z.cols(), z.cols());
+        z.syrk_into_p(&mut g, &Pool::new(t));
+        assert_eq!(serial.g, g, "syrk_into_p differs at {t} threads");
+    }
+}
+
+#[test]
+fn full_fit_predict_bit_identical_across_thread_counts_for_every_method() {
+    // the end-to-end property: featurize -> absorb -> solve -> predict,
+    // run entirely on an explicit pool, must produce byte-equal
+    // predictions at every width for every registry method (including
+    // data-dependent Nystrom, built from the training rows)
+    let (x, y) = dataset(57, 3, 0xE3);
+    let (x_new, _) = dataset(19, 3, 0xE4);
+    for method in Method::registry() {
+        let spec = FeatureSpec::new(KernelSpec::Gaussian { bandwidth: 1.0 }, method, 48, 11);
+        let feat = spec.build_with_data(&x);
+        let fit_predict = |pool: &Pool| -> Vec<f64> {
+            let z = feat.featurize_par(&x, pool);
+            let mut stats = RidgeStats::new(z.cols());
+            stats.absorb_with(&z, &y, pool);
+            let model = stats.solve(1e-2);
+            let zt = feat.featurize_par(&x_new, pool);
+            model.predict_with(&zt, pool)
+        };
+        let reference = fit_predict(&Pool::serial());
+        for t in THREADS {
+            let pred = fit_predict(&Pool::new(t));
+            assert_eq!(
+                reference,
+                pred,
+                "{}: fit -> predict differs at {t} threads",
+                feat.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn kmeans_and_kpca_bit_identical_across_thread_counts() {
+    let (x, _) = dataset(70, 4, 0xE5);
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 6, s: 2 },
+        32,
+        13,
+    );
+    let feat = spec.build(4);
+    let z = feat.featurize(&x);
+    let ref_km = kmeans_with(&z, 3, 30, 7, &Pool::serial());
+    let ref_pca = KernelPca::fit_with(&z, 3, &Pool::serial());
+    let ref_emb = ref_pca.transform_with(&z, &Pool::serial());
+    for t in THREADS {
+        let pool = Pool::new(t);
+        let km = kmeans_with(&z, 3, 30, 7, &pool);
+        assert_eq!(ref_km.assignments, km.assignments, "assignments differ at {t} threads");
+        assert_eq!(ref_km.objective, km.objective, "objective differs at {t} threads");
+        assert_eq!(ref_km.centroids, km.centroids, "centroids differ at {t} threads");
+        let pca = KernelPca::fit_with(&z, 3, &pool);
+        assert_eq!(ref_pca.eigenvalues, pca.eigenvalues, "eigenvalues differ at {t} threads");
+        assert_eq!(ref_emb, pca.transform_with(&z, &pool), "embedding differs at {t} threads");
+    }
+}
