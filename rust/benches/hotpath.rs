@@ -4,18 +4,21 @@
 //! serving batcher's latency under load.
 //!
 //! Besides the human-readable tables, the run emits a machine-readable
-//! `BENCH_hotpath.json` (path overridable via `GZK_BENCH_JSON`) with the
-//! per-method throughput rows, the serial-vs-parallel featurize+absorb
-//! comparison (threads, speedup, bit-identity check), and the batcher
-//! latency percentiles, so the perf trajectory is tracked across PRs
-//! instead of scraped from stdout — CI uploads the file as a build
-//! artifact. The pool width comes from `--threads`-equivalent
-//! `GZK_THREADS` or the machine.
+//! `BENCH_hotpath.json` (format 3, path overridable via `GZK_BENCH_JSON`)
+//! with the per-method throughput rows, the serial-vs-parallel
+//! featurize+absorb comparison (threads, speedup, bit-identity check),
+//! the streamed-vs-materialized ridge fit comparison (throughput + peak
+//! feature-scratch bytes: the out-of-core pipeline's memory claim as a
+//! number), and the batcher latency percentiles, so the perf trajectory
+//! is tracked across PRs instead of scraped from stdout — CI uploads the
+//! file as a build artifact. The pool width comes from
+//! `--threads`-equivalent `GZK_THREADS` or the machine.
 //!
 //! Run: cargo bench --bench hotpath
 
 use gzk::bench::{fmt_secs, time_it, Table};
 use gzk::coordinator::PredictionService;
+use gzk::data::{pipeline, DataSource, SyntheticSource};
 use gzk::exec::Pool;
 use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use gzk::krr::{FeatureRidge, RidgeStats};
@@ -168,6 +171,85 @@ fn parallel_bench() -> ParallelStats {
     }
 }
 
+struct StreamingStats {
+    n: usize,
+    m: usize,
+    chunk_rows: usize,
+    streamed_secs: f64,
+    materialized_secs: f64,
+    streamed_rows_per_s: f64,
+    materialized_rows_per_s: f64,
+    /// peak feature-matrix allocation of each path, in bytes
+    streamed_peak_z_bytes: usize,
+    materialized_peak_z_bytes: usize,
+    bit_identical: bool,
+}
+
+/// Streamed (chunked DataSource pipeline) vs materialized (full n x m
+/// feature matrix) ridge fit at n = 65,536, m = 512. Same sufficient
+/// statistics bit for bit; the streamed path's peak feature allocation is
+/// `chunk_rows x m x 8` bytes instead of `n x m x 8` — the out-of-core
+/// claim, reported as numbers.
+fn streaming_bench() -> StreamingStats {
+    println!("\n== streamed vs materialized ridge fit (n=65536, m=512) ==");
+    let (n, m, chunk_rows) = (65_536usize, 512usize, 4096usize);
+    let src = SyntheticSource::elevation(n, 3);
+    let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 12, s: 2 }, m, 1);
+    let feat = spec.build(3);
+    let pool = Pool::global();
+
+    let t_stream = time_it(0, 2, || {
+        pipeline::ridge_stats(feat.as_ref(), &src, chunk_rows, &pool).expect("streamed fit")
+    });
+    let (streamed, sinfo) =
+        pipeline::ridge_stats(feat.as_ref(), &src, chunk_rows, &pool).expect("streamed fit");
+
+    // materialized reference: read everything, featurize everything, absorb
+    let t_mat = time_it(0, 2, || {
+        let (x, y) = src.read_range(0, n).expect("in-memory read");
+        let z = feat.featurize_par(&x, &pool);
+        let mut stats = RidgeStats::new(z.cols());
+        stats.absorb_with(&z, &y, &pool);
+        stats
+    });
+    let (x, y) = src.read_range(0, n).expect("in-memory read");
+    let z = feat.featurize_par(&x, &pool);
+    let mut materialized = RidgeStats::new(z.cols());
+    materialized.absorb_with(&z, &y, &pool);
+    let materialized_peak = n * feat.dim() * 8;
+
+    let bit_identical = streamed.g == materialized.g
+        && streamed.b == materialized.b
+        && streamed.n == materialized.n;
+    assert!(bit_identical, "streamed fit drifted from the materialized fit");
+    let stats = StreamingStats {
+        n,
+        m: feat.dim(),
+        chunk_rows,
+        streamed_secs: t_stream.median,
+        materialized_secs: t_mat.median,
+        streamed_rows_per_s: n as f64 / t_stream.median,
+        materialized_rows_per_s: n as f64 / t_mat.median,
+        streamed_peak_z_bytes: sinfo.peak_z_bytes,
+        materialized_peak_z_bytes: materialized_peak,
+        bit_identical,
+    };
+    println!(
+        "streamed    {}  ({:.0} rows/s, peak Z {:.1} MiB)",
+        fmt_secs(stats.streamed_secs),
+        stats.streamed_rows_per_s,
+        stats.streamed_peak_z_bytes as f64 / (1 << 20) as f64
+    );
+    println!(
+        "materialized {}  ({:.0} rows/s, peak Z {:.1} MiB)  bit identical: {}",
+        fmt_secs(stats.materialized_secs),
+        stats.materialized_rows_per_s,
+        stats.materialized_peak_z_bytes as f64 / (1 << 20) as f64,
+        stats.bit_identical
+    );
+    stats
+}
+
 fn serving_bench() -> ServingStats {
     println!("\n== serving batcher ==");
     let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 12, s: 2 }, 512, 1).bind(3);
@@ -209,7 +291,12 @@ fn serving_bench() -> ServingStats {
 }
 
 /// Emit the machine-readable results (CI uploads this as an artifact).
-fn write_json(methods: &[MethodRow], parallel: &ParallelStats, serving: &ServingStats) {
+fn write_json(
+    methods: &[MethodRow],
+    parallel: &ParallelStats,
+    streaming: &StreamingStats,
+    serving: &ServingStats,
+) {
     let path =
         std::env::var("GZK_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     let method_rows: Vec<String> = methods
@@ -223,8 +310,11 @@ fn write_json(methods: &[MethodRow], parallel: &ParallelStats, serving: &Serving
         .collect();
     let text = format!(
         concat!(
-            r#"{{"format":2,"bench":"hotpath","methods":[{}],"#,
+            r#"{{"format":3,"bench":"hotpath","methods":[{}],"#,
             r#""parallel":{{"threads":{},"serial_secs":{:e},"par_secs":{:e},"speedup":{:.2},"bit_identical":{}}},"#,
+            r#""streaming":{{"n":{},"m":{},"chunk_rows":{},"streamed_secs":{:e},"materialized_secs":{:e},"#,
+            r#""streamed_rows_per_s":{:.1},"materialized_rows_per_s":{:.1},"#,
+            r#""streamed_peak_z_bytes":{},"materialized_peak_z_bytes":{},"bit_identical":{}}},"#,
             r#""serving":{{"req_per_s":{:.1},"p50_us":{:.2},"p99_us":{:.2},"batches":{},"max_batch":{}}}}}"#
         ),
         method_rows.join(","),
@@ -233,6 +323,16 @@ fn write_json(methods: &[MethodRow], parallel: &ParallelStats, serving: &Serving
         parallel.par_secs,
         parallel.speedup,
         parallel.bit_identical,
+        streaming.n,
+        streaming.m,
+        streaming.chunk_rows,
+        streaming.streamed_secs,
+        streaming.materialized_secs,
+        streaming.streamed_rows_per_s,
+        streaming.materialized_rows_per_s,
+        streaming.streamed_peak_z_bytes,
+        streaming.materialized_peak_z_bytes,
+        streaming.bit_identical,
         serving.req_per_s,
         serving.p50_us,
         serving.p99_us,
@@ -247,6 +347,7 @@ fn main() {
     let methods = registry_bench();
     featurize_bench();
     let parallel = parallel_bench();
+    let streaming = streaming_bench();
     let serving = serving_bench();
-    write_json(&methods, &parallel, &serving);
+    write_json(&methods, &parallel, &streaming, &serving);
 }

@@ -2,15 +2,22 @@
 //!
 //! Round trip:
 //!   1. leader picks `FeatureSpec` (incl. the shared seed) — the broadcast;
-//!   2. shards the dataset round-robin to worker threads;
+//!   2. shards the data source into row ranges, assigned round-robin to
+//!      worker loops (a task is three integers — workers read their own
+//!      disjoint chunk ranges of the shared source);
 //!   3. workers reply once with additive `(Z^T Z, Z^T y, n)` partials;
 //!   4. leader merges and solves `(G + lambda I) w = b`.
 //!
 //! No iteration, no second round — the property the paper highlights over
-//! data-dependent methods like Nystrom (§1.2 / Related Work).
+//! data-dependent methods like Nystrom (§1.2 / Related Work). Because
+//! shards are ranges of a [`DataSource`], the protocol never materializes
+//! the dataset: peak memory is O(workers · rows_per_shard · (d + F)), so
+//! the same code path fits an in-memory `MatSource` or an out-of-core
+//! file/synthetic source past RAM.
 
-use super::protocol::{FeatureSpec, ShardStats, ShardTask};
+use super::protocol::{FeatureSpec, ShardRange, ShardStats};
 use super::worker::{worker_loop, Backend, WorkerConfig};
+use crate::data::{DataSource, MatSource};
 use crate::exec::Pool;
 use crate::krr::{FeatureRidge, RidgeStats};
 use crate::linalg::Mat;
@@ -33,29 +40,36 @@ pub struct DistributedFit {
     pub recovered_shards: usize,
 }
 
-/// Run the one-round protocol on an in-memory dataset.
+/// Run the one-round protocol over any [`DataSource`].
 ///
 /// `rows_per_shard` controls task granularity; `n_workers` the width of
 /// the worker *wave* — each worker loop is a job drawn from the global
 /// [`Pool`] (no ad-hoc thread spawning), so at most `Pool::global()`
 /// worker loops run concurrently and a `--threads 1` process executes the
 /// whole protocol sequentially. Deterministic: the result is a pure
-/// function of (spec, x, y, lambda), independent of `n_workers`, shard
-/// order and pool width (property-tested in
-/// `rust/tests/coordinator_props.rs`).
-pub fn fit_one_round(
+/// function of (spec, source rows, lambda), independent of `n_workers`,
+/// shard order and pool width (property-tested in
+/// `rust/tests/coordinator_props.rs`). Errors only on source I/O failure
+/// (after the recovery pass has retried the lost shards).
+pub fn fit_one_round_source(
     spec: &FeatureSpec,
-    x: &Mat,
-    y: &[f64],
+    src: &dyn DataSource,
     lambda: f64,
     n_workers: usize,
     rows_per_shard: usize,
     backend: Backend,
-) -> DistributedFit {
-    assert_eq!(x.rows(), y.len());
+) -> Result<DistributedFit, String> {
     assert!(n_workers >= 1 && rows_per_shard >= 1);
+    if src.dim() != spec.d {
+        return Err(format!(
+            "source {} has d = {} but the broadcast spec is bound to d = {}",
+            src.name(),
+            src.dim(),
+            spec.d
+        ));
+    }
     let t0 = Instant::now();
-    let n = x.rows();
+    let n = src.len();
     let f_dim = spec.feature_dim();
     let pool = Pool::global();
 
@@ -63,28 +77,30 @@ pub fn fit_one_round(
     let mut task_txs = Vec::with_capacity(n_workers);
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n_workers);
     for worker_id in 0..n_workers {
-        let (task_tx, task_rx) = mpsc::channel::<ShardTask>();
-        let cfg = WorkerConfig { worker_id, spec: spec.clone(), backend: backend.clone() };
+        let (task_tx, task_rx) = mpsc::channel::<ShardRange>();
+        let cfg = WorkerConfig {
+            worker_id,
+            spec: spec.clone(),
+            backend: backend.clone(),
+            source: src,
+        };
         let res_tx = res_tx.clone();
         jobs.push(Box::new(move || worker_loop(cfg, task_rx, res_tx)));
         task_txs.push(task_tx);
     }
     drop(res_tx);
 
-    // Shard round-robin BEFORE the wave runs: tasks buffer in the
-    // unbounded per-worker channels and the channels close right away, so
-    // worker loops drain-and-exit at whatever concurrency the pool
-    // grants — no deadlock even when the pool is narrower than the wave.
-    // Accepted trade-off: the owned ShardTask copies mean ~2x dataset
-    // peak memory during the wave (the wire form stays owned because a
-    // real deployment serializes it; a borrowed protocol would buy the
-    // memory back at the cost of the broadcastable task type).
-    // Each shard's row range is remembered so the leader can recompute
+    // Shard round-robin BEFORE the wave runs: a task is a row range (three
+    // integers), so the fully buffered per-worker channels cost O(shards)
+    // — not a copy of the dataset — and the channels close right away, so
+    // worker loops drain-and-exit at whatever concurrency the pool grants,
+    // no deadlock even when the pool is narrower than the wave. Each
+    // shard's range doubles as the recovery recipe: the leader re-reads
     // any shard whose reply never arrives.
     let mut shard_ranges = Vec::new();
     for (sid, lo) in (0..n).step_by(rows_per_shard).enumerate() {
         let hi = (lo + rows_per_shard).min(n);
-        let task = ShardTask { shard_id: sid, x: x.row_block(lo, hi), y: y[lo..hi].to_vec() };
+        let task = ShardRange { shard_id: sid, lo, hi };
         task_txs[sid % n_workers].send(task).expect("worker queue alive");
         shard_ranges.push((lo, hi));
     }
@@ -112,24 +128,31 @@ pub fn fit_one_round(
     // fault tolerance: recompute missing shards locally. Because the
     // feature map is data-oblivious the leader can produce byte-identical
     // statistics for a lost shard — no coordination with the (possibly
-    // dead) worker required. The wave is over, so the leader draws the
-    // whole pool for the recomputation.
+    // dead) worker required, just a re-read of the range. The wave is
+    // over, so the leader draws the whole pool for the recomputation. A
+    // shard lost to a source I/O error surfaces that error here.
     let mut recovered_shards = 0;
     if seen.iter().any(|&s| !s) {
         use crate::features::Featurizer;
         let feat = spec.build();
         for (sid, &(lo, hi)) in shard_ranges.iter().enumerate() {
             if !seen[sid] {
-                let z = feat.featurize_par(&x.row_block(lo, hi), &pool);
-                merged.absorb_with(&z, &y[lo..hi], &pool);
+                let (x, y) = src.read_range(lo, hi)?;
+                let z = feat.featurize_par(&x, &pool);
+                merged.absorb_with(&z, &y, &pool);
                 recovered_shards += 1;
             }
         }
     }
-    assert_eq!(merged.n, n, "lost rows even after shard recovery");
+    if merged.n != n {
+        return Err(format!(
+            "one-round fit lost rows even after shard recovery: absorbed {} of {n}",
+            merged.n
+        ));
+    }
 
     let model = merged.solve(lambda);
-    DistributedFit {
+    Ok(DistributedFit {
         model,
         stats: merged,
         n_shards,
@@ -137,15 +160,48 @@ pub fn fit_one_round(
         wall_secs: t0.elapsed().as_secs_f64(),
         featurize_secs_total,
         recovered_shards,
-    }
+    })
+}
+
+/// [`fit_one_round_source`] over borrowed in-memory data — the same
+/// pipeline, just consumed through a [`MatSource`] (whose reads cannot
+/// fail).
+pub fn fit_one_round(
+    spec: &FeatureSpec,
+    x: &Mat,
+    y: &[f64],
+    lambda: f64,
+    n_workers: usize,
+    rows_per_shard: usize,
+    backend: Backend,
+) -> DistributedFit {
+    assert_eq!(x.rows(), y.len());
+    fit_one_round_source(spec, &MatSource::new(x, y), lambda, n_workers, rows_per_shard, backend)
+        .expect("in-memory source reads cannot fail")
 }
 
 /// The one-round protocol finished into a deployable artifact: run
-/// [`fit_one_round`], then bundle the solved weights with the broadcast
-/// spec as a [`RidgeModel`] — ready for a
+/// [`fit_one_round_source`], then bundle the solved weights with the
+/// broadcast spec as a [`RidgeModel`] — ready for a
 /// [`ModelStore`](crate::model::ModelStore) and the serving batcher.
-/// Panics if the spec's method is data-dependent (those cannot be
-/// broadcast; fit them with [`RidgeModel::fit`] instead).
+/// Errors if the spec's method is data-dependent (those cannot be
+/// broadcast; fit them with [`RidgeModel::fit_source`] instead) or on
+/// source I/O failure.
+pub fn fit_ridge_source(
+    spec: &FeatureSpec,
+    src: &dyn DataSource,
+    lambda: f64,
+    n_workers: usize,
+    rows_per_shard: usize,
+    backend: Backend,
+) -> Result<(RidgeModel, DistributedFit), String> {
+    let map = FittedMap::rebuild(spec.clone(), None).map_err(|e| format!("fit_ridge: {e}"))?;
+    let fit = fit_one_round_source(spec, src, lambda, n_workers, rows_per_shard, backend)?;
+    Ok((RidgeModel::from_parts(map, fit.model.clone()), fit))
+}
+
+/// [`fit_ridge_source`] over borrowed in-memory data. Panics if the
+/// spec's method is data-dependent.
 pub fn fit_ridge(
     spec: &FeatureSpec,
     x: &Mat,
@@ -155,16 +211,16 @@ pub fn fit_ridge(
     rows_per_shard: usize,
     backend: Backend,
 ) -> (RidgeModel, DistributedFit) {
-    let fit = fit_one_round(spec, x, y, lambda, n_workers, rows_per_shard, backend);
-    let map = FittedMap::rebuild(spec.clone(), None)
-        .unwrap_or_else(|e| panic!("fit_ridge: {e}"));
-    (RidgeModel::from_parts(map, fit.model.clone()), fit)
+    assert_eq!(x.rows(), y.len());
+    fit_ridge_source(spec, &MatSource::new(x, y), lambda, n_workers, rows_per_shard, backend)
+        .unwrap_or_else(|e| panic!("fit_ridge: {e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::protocol::{KernelSpec, Method};
+    use crate::data::SyntheticSource;
     use crate::features::Featurizer;
     use crate::krr::FeatureRidge;
     use crate::rng::Rng;
@@ -225,6 +281,23 @@ mod tests {
         for (a, b) in flaky.model.weights.iter().zip(&clean.model.weights) {
             assert!((a - b).abs() < 1e-9, "recovered fit differs: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn shards_of_an_out_of_core_source_match_the_materialized_fit() {
+        // the tentpole property at the protocol layer: workers reading
+        // disjoint chunk ranges of one lazy source reproduce the fit over
+        // the materialized rows exactly
+        let src = SyntheticSource::elevation(64, 11);
+        let (x, y) = src.read_range(0, 64).unwrap();
+        let dist =
+            fit_one_round_source(&spec(), &src, 0.01, 3, 10, Backend::Native).unwrap();
+        let mem = fit_one_round(&spec(), &x, &y, 0.01, 3, 10, Backend::Native);
+        assert_eq!(dist.model.weights, mem.model.weights);
+        assert_eq!(dist.stats.n, 64);
+        // and the spec/source dimension mismatch is a clean error
+        let bad = SyntheticSource::protein(20, 1);
+        assert!(fit_one_round_source(&spec(), &bad, 0.01, 2, 8, Backend::Native).is_err());
     }
 
     #[test]

@@ -6,9 +6,12 @@
 //! * [`worker`] — worker loops (native or PJRT featurization backend),
 //!   scheduled as jobs on the global [`Pool`](crate::exec::Pool) rather
 //!   than ad-hoc threads;
-//! * [`leader`] — one-round distributed KRR: broadcast spec, one reduction
-//!   ([`fit_one_round`]), optionally finished into a persistable
-//!   [`RidgeModel`](crate::model::RidgeModel) ([`fit_ridge`]);
+//! * [`leader`] — one-round distributed KRR over any
+//!   [`DataSource`](crate::data::DataSource) ([`fit_one_round_source`]):
+//!   broadcast spec, workers read disjoint chunk ranges of the shared
+//!   source, one reduction; optionally finished into a persistable
+//!   [`RidgeModel`](crate::model::RidgeModel) ([`fit_ridge_source`]).
+//!   [`fit_one_round`] / [`fit_ridge`] are the in-memory wrappers;
 //! * [`streaming`] — single-pass streaming KRR with backpressure; the
 //!   consumer's compute draws from the pool;
 //! * [`batcher`] — dynamic batcher serving predictions; serves any fitted
@@ -45,7 +48,9 @@ pub mod streaming;
 pub mod worker;
 
 pub use batcher::{PredictionService, ServeMetrics, ServiceClient};
-pub use leader::{fit_one_round, fit_ridge, DistributedFit};
-pub use protocol::{FeatureSpec, KernelSpec, Method, ShardStats, ShardTask};
+pub use leader::{
+    fit_one_round, fit_one_round_source, fit_ridge, fit_ridge_source, DistributedFit,
+};
+pub use protocol::{FeatureSpec, KernelSpec, Method, ShardRange, ShardStats};
 pub use streaming::{StreamBatch, StreamHandle, StreamingKrr};
 pub use worker::{Backend, WorkerConfig};

@@ -13,17 +13,26 @@
 //! any registered *oblivious* method (Gegenbauer, Fourier, FastFood,
 //! PolySketch, Maclaurin) can be broadcast; the data-dependent Nystrom
 //! baseline cannot — which is exactly the paper's §1.2 contrast.
+//!
+//! Work items are **row ranges of one shared
+//! [`DataSource`](crate::data::DataSource)**, not copies of the rows: a
+//! shard assignment is three integers, each worker reads its own disjoint
+//! chunk range directly from the source, and the leader never materializes
+//! the dataset. That is both the realistic deployment shape (shards read
+//! from shared storage) and what keeps peak memory at
+//! O(workers · rows_per_shard · (d + F)) instead of O(n · d).
 
 pub use crate::features::{BoundSpec as FeatureSpec, KernelSpec, Method};
 
 use crate::krr::RidgeStats;
-use crate::linalg::Mat;
 
-/// Work item sent to a worker: a shard of rows plus targets.
-pub struct ShardTask {
+/// Work item sent to a worker: a contiguous row range `[lo, hi)` of the
+/// shared data source.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRange {
     pub shard_id: usize,
-    pub x: Mat,
-    pub y: Vec<f64>,
+    pub lo: usize,
+    pub hi: usize,
 }
 
 /// A worker's reply: additive sufficient statistics for its shard.
@@ -39,6 +48,7 @@ pub struct ShardStats {
 mod tests {
     use super::*;
     use crate::features::{FeatureSpec as Spec, Featurizer as _};
+    use crate::linalg::Mat;
 
     fn gaussian_geg(m: usize, seed: u64) -> Spec {
         Spec::new(

@@ -13,6 +13,7 @@
 //! whatever width `--threads` grants without spawning helpers of its own.
 
 use super::protocol::FeatureSpec;
+use crate::data::{chunk_ranges, DataSource};
 use crate::exec::Pool;
 use crate::features::Featurizer;
 use crate::krr::{FeatureRidge, RidgeStats};
@@ -44,6 +45,19 @@ impl StreamHandle {
             Err(TrySendError::Disconnected(_)) => Err(None),
         }
     }
+
+    /// Stream every row of a [`DataSource`] through the queue in
+    /// `chunk_rows`-sized batches (blocking pushes, so backpressure
+    /// bounds in-flight memory at `queue_batches * chunk_rows` rows) —
+    /// the producer half that makes `StreamingKrr` a consumer of the same
+    /// chunked pipeline as every other fit path.
+    pub fn push_source(&self, src: &dyn DataSource, chunk_rows: usize) -> Result<(), String> {
+        for (lo, hi) in chunk_ranges(src.len(), chunk_rows) {
+            let (x, y) = src.read_range(lo, hi)?;
+            self.push(StreamBatch { x, y }).map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    }
 }
 
 /// Streaming KRR accumulator: owns the consumer thread.
@@ -61,13 +75,21 @@ impl StreamingKrr {
             // any registered oblivious method: the registry-built
             // featurizer consumes raw rows (bandwidth folding included)
             let feat: Box<dyn Featurizer> = spec.build();
-            let mut stats = RidgeStats::new(spec.feature_dim());
+            let f_dim = spec.feature_dim();
+            let mut stats = RidgeStats::new(f_dim);
+            // one growable feature scratch for the whole stream — the same
+            // featurize-into-scratch + absorb chunk body as data::pipeline
+            let mut scratch: Vec<f64> = Vec::new();
             for batch in rx {
                 // per-batch compute draws from the pool, clamped so tiny
                 // batches stay on the consumer thread
                 let pool = Pool::for_rows(batch.x.rows());
-                let z = feat.featurize_par(&batch.x, &pool);
-                stats.absorb_with(&z, &batch.y, &pool);
+                let need = batch.x.rows() * f_dim;
+                if scratch.len() < need {
+                    scratch.resize(need, 0.0);
+                }
+                feat.featurize_par_into(&batch.x, &mut scratch[..need], &pool);
+                stats.absorb_flat_with(&scratch[..need], &batch.y, &pool);
             }
             stats
         });
@@ -154,6 +176,28 @@ mod tests {
         }
         let (_, stats) = stream.finalize(0.1);
         assert_eq!(stats.n, pushed);
+    }
+
+    #[test]
+    fn source_stream_equals_batch() {
+        // the pipeline unification: a DataSource pushed through the stream
+        // reproduces the one-shot fit over the materialized rows exactly
+        let src = crate::data::SyntheticSource::elevation(41, 6);
+        let spec = crate::features::FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 6, s: 2 },
+            48,
+            8,
+        )
+        .bind(3);
+        let stream = StreamingKrr::start(spec.clone(), 2);
+        stream.handle().push_source(&src, 7).unwrap();
+        let (model, stats) = stream.finalize(0.05);
+        assert_eq!(stats.n, 41);
+        let (x, y) = src.read_range(0, 41).unwrap();
+        let z = spec.build().featurize(&x);
+        let reference = FeatureRidge::fit(&z, &y, 0.05);
+        assert_eq!(model.weights, reference.weights);
     }
 
     #[test]

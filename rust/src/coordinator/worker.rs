@@ -1,5 +1,6 @@
-//! Worker side of the one-round protocol: featurize shards, return
-//! additive sufficient statistics.
+//! Worker side of the one-round protocol: read assigned row ranges from
+//! the shared data source, featurize them, return additive sufficient
+//! statistics.
 //!
 //! Each worker loop is a coarse job the leader schedules on the global
 //! [`Pool`](crate::exec::Pool) (`Pool::run_jobs`) — the workers ARE the
@@ -8,7 +9,10 @@
 //! data-parallel kernels inside the worker wave would oversubscribe the
 //! machine. A worker rebuilds its featurizer from the broadcast
 //! [`FeatureSpec`] through the `features::spec` registry — any
-//! data-oblivious method works — and may featurize through either backend:
+//! data-oblivious method works — and reads its shards **itself** from the
+//! shared [`DataSource`]: a task is three integers, so worker memory is
+//! bounded by one shard's rows, never by n. Featurization may go through
+//! either backend:
 //!
 //! * native — the registry-built featurizer (the pure-rust hot path);
 //! * PJRT   — the AOT jax/Pallas executable, one `Runtime` per worker
@@ -17,8 +21,13 @@
 //!
 //! Both backends produce the same feature map for the same `FeatureSpec`
 //! (checked in `rust/tests/pjrt_roundtrip.rs`).
+//!
+//! A shard whose source read fails is skipped (with a note on stderr);
+//! the leader's missing-shard recovery re-reads it and surfaces the I/O
+//! error if it persists — a reply is never fabricated.
 
-use super::protocol::{FeatureSpec, ShardStats, ShardTask};
+use super::protocol::{FeatureSpec, ShardRange, ShardStats};
+use crate::data::DataSource;
 use crate::features::{Featurizer, GegenbauerFeatures};
 use crate::krr::RidgeStats;
 use crate::linalg::Mat;
@@ -39,10 +48,12 @@ pub enum Backend {
     Flaky { drop_every: usize },
 }
 
-pub struct WorkerConfig {
+pub struct WorkerConfig<'a> {
     pub worker_id: usize,
     pub spec: FeatureSpec,
     pub backend: Backend,
+    /// the shared source every shard range refers into
+    pub source: &'a dyn DataSource,
 }
 
 enum BackendState {
@@ -58,7 +69,7 @@ enum BackendState {
 }
 
 impl BackendState {
-    fn new(cfg: &WorkerConfig) -> Self {
+    fn new(cfg: &WorkerConfig<'_>) -> Self {
         match &cfg.backend {
             Backend::Native | Backend::Flaky { .. } => BackendState::Native(cfg.spec.build()),
             Backend::Pjrt { artifact_dir } => match cfg.spec.build_gegenbauer() {
@@ -96,10 +107,14 @@ impl BackendState {
     }
 }
 
-/// Run a worker loop: consume `ShardTask`s, emit `ShardStats`. Terminates
-/// when the task channel closes. This is the job each worker executes on
-/// the leader's pool wave.
-pub fn worker_loop(cfg: WorkerConfig, tasks: Receiver<ShardTask>, results: Sender<ShardStats>) {
+/// Run a worker loop: consume `ShardRange`s, read each range from the
+/// shared source, emit `ShardStats`. Terminates when the task channel
+/// closes. This is the job each worker executes on the leader's pool wave.
+pub fn worker_loop(
+    cfg: WorkerConfig<'_>,
+    tasks: Receiver<ShardRange>,
+    results: Sender<ShardStats>,
+) {
     let backend = BackendState::new(&cfg);
     let f_dim = cfg.spec.feature_dim();
     for task in tasks {
@@ -108,12 +123,24 @@ pub fn worker_loop(cfg: WorkerConfig, tasks: Receiver<ShardTask>, results: Sende
                 continue; // inject a lost shard
             }
         }
+        let (x, y) = match cfg.source.read_range(task.lo, task.hi) {
+            Ok(chunk) => chunk,
+            Err(e) => {
+                // no reply: the leader recomputes this range and surfaces
+                // the error if the source really is broken
+                eprintln!(
+                    "worker {}: shard {} read failed ({e}); leaving it to leader recovery",
+                    cfg.worker_id, task.shard_id
+                );
+                continue;
+            }
+        };
         let t0 = Instant::now();
-        let z = backend.featurize(&cfg.spec, &task.x);
+        let z = backend.featurize(&cfg.spec, &x);
         let featurize_secs = t0.elapsed().as_secs_f64();
         let mut stats = RidgeStats::new(f_dim);
         // serial on purpose: the worker wave is the parallel axis
-        stats.absorb_with(&z, &task.y, &crate::exec::Pool::serial());
+        stats.absorb_with(&z, &y, &crate::exec::Pool::serial());
         let reply = ShardStats {
             shard_id: task.shard_id,
             worker_id: cfg.worker_id,
@@ -130,6 +157,7 @@ pub fn worker_loop(cfg: WorkerConfig, tasks: Receiver<ShardTask>, results: Sende
 mod tests {
     use super::*;
     use crate::coordinator::protocol::{KernelSpec, Method};
+    use crate::data::MatSource;
     use crate::rng::Rng;
     use std::sync::mpsc;
 
@@ -143,46 +171,55 @@ mod tests {
         .bind(3)
     }
 
-    #[test]
-    fn worker_produces_correct_stats() {
+    /// Run one worker loop over `shards` of a shared in-memory source.
+    fn run_worker(
+        spec: FeatureSpec,
+        x: &Mat,
+        y: &[f64],
+        shards: &[(usize, usize)],
+    ) -> Vec<ShardStats> {
+        let source = MatSource::new(x, y);
         let (task_tx, task_rx) = mpsc::channel();
         let (res_tx, res_rx) = mpsc::channel();
-        let cfg = WorkerConfig { worker_id: 0, spec: spec(), backend: Backend::Native };
-        let handle = std::thread::spawn(move || worker_loop(cfg, task_rx, res_tx));
+        for (sid, &(lo, hi)) in shards.iter().enumerate() {
+            task_tx.send(ShardRange { shard_id: sid, lo, hi }).unwrap();
+        }
+        drop(task_tx);
+        let cfg =
+            WorkerConfig { worker_id: 0, spec, backend: Backend::Native, source: &source };
+        std::thread::scope(|scope| {
+            scope.spawn(move || worker_loop(cfg, task_rx, res_tx));
+        });
+        res_rx.iter().collect()
+    }
 
+    #[test]
+    fn worker_produces_correct_stats() {
         let mut rng = Rng::new(2);
         let x = Mat::from_fn(10, 3, |_, _| rng.normal());
         let y: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
-        task_tx.send(ShardTask { shard_id: 0, x: x.clone(), y: y.clone() }).unwrap();
-        drop(task_tx);
-        let reply = res_rx.recv().unwrap();
-        handle.join().unwrap();
+        let replies = run_worker(spec(), &x, &y, &[(0, 10)]);
+        assert_eq!(replies.len(), 1);
 
         // reference: featurize locally with the same spec
+        use crate::features::Featurizer as _;
         let z = spec().build().featurize(&x);
         let mut expect = RidgeStats::new(64);
         expect.absorb(&z, &y);
-        assert!(reply.stats.g.max_abs_diff(&expect.g) < 1e-12);
-        assert_eq!(reply.stats.n, 10);
+        assert!(replies[0].stats.g.max_abs_diff(&expect.g) < 1e-12);
+        assert_eq!(replies[0].stats.n, 10);
     }
 
     #[test]
     fn worker_handles_multiple_shards() {
-        let (task_tx, task_rx) = mpsc::channel();
-        let (res_tx, res_rx) = mpsc::channel();
-        let cfg = WorkerConfig { worker_id: 3, spec: spec(), backend: Backend::Native };
-        let handle = std::thread::spawn(move || worker_loop(cfg, task_rx, res_tx));
         let mut rng = Rng::new(3);
-        for sid in 0..4 {
-            let x = Mat::from_fn(5, 3, |_, _| rng.normal());
-            let y: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
-            task_tx.send(ShardTask { shard_id: sid, x, y }).unwrap();
-        }
-        drop(task_tx);
-        let mut got: Vec<usize> = res_rx.iter().map(|r| r.shard_id).collect();
-        handle.join().unwrap();
+        let x = Mat::from_fn(20, 3, |_, _| rng.normal());
+        let y: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let replies = run_worker(spec(), &x, &y, &[(0, 5), (5, 10), (10, 15), (15, 20)]);
+        let mut got: Vec<usize> = replies.iter().map(|r| r.shard_id).collect();
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(replies.iter().map(|r| r.stats.n).sum::<usize>(), 20);
     }
 
     #[test]
@@ -199,19 +236,13 @@ mod tests {
                 5,
             )
             .bind(3);
-            let (task_tx, task_rx) = mpsc::channel();
-            let (res_tx, res_rx) = mpsc::channel();
-            let cfg = WorkerConfig { worker_id: 0, spec: spec.clone(), backend: Backend::Native };
-            let handle = std::thread::spawn(move || worker_loop(cfg, task_rx, res_tx));
-            task_tx.send(ShardTask { shard_id: 0, x: x.clone(), y: y.clone() }).unwrap();
-            drop(task_tx);
-            let reply = res_rx.recv().unwrap();
-            handle.join().unwrap();
+            let replies = run_worker(spec.clone(), &x, &y, &[(0, 9)]);
+            use crate::features::Featurizer as _;
             let z = spec.build().featurize(&x);
             let mut expect = RidgeStats::new(spec.feature_dim());
             expect.absorb(&z, &y);
             assert!(
-                reply.stats.g.max_abs_diff(&expect.g) < 1e-12,
+                replies[0].stats.g.max_abs_diff(&expect.g) < 1e-12,
                 "{}",
                 spec.spec.method.name()
             );

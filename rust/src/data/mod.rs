@@ -1,4 +1,5 @@
-//! Dataset substrate.
+//! Dataset substrate: eager synthetic generators, and the chunked
+//! out-of-core data-flow layer every fit path consumes.
 //!
 //! The paper's evaluation uses proprietary/remote datasets (ETOPO elevation,
 //! ODIAC CO2, Berkeley Earth climate, UCI CASP protein, six UCI
@@ -6,9 +7,20 @@
 //! environment, so `synthetic` builds deterministic generators that match
 //! each dataset's domain geometry (S^2, [S^2, R], R^9, ...), size and task
 //! character — see DESIGN.md §6 for the substitution argument.
+//!
+//! `source` is the chunked layer ([`DataSource`] with in-memory, lazily
+//! generated synthetic, and on-disk CSV/binary implementations) and
+//! `pipeline` the single-pass trainers over it — working memory bounded by
+//! the chunk, not by n (DESIGN.md §"Data pipeline").
 
+pub mod pipeline;
+mod source;
 mod synthetic;
 
+pub use source::{
+    chunk_ranges, gather_rows, DataSource, FileSource, InterleavedSplit, MatSource,
+    SourceSlice, SyntheticSource, BINARY_MAGIC, REGRESSION_SIZES,
+};
 pub use synthetic::{
     clustering_dataset, co2, climate, elevation, protein, ClusteringSpec, Dataset,
     CLUSTERING_SPECS,

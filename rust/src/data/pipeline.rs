@@ -1,0 +1,393 @@
+//! Single-pass chunked trainers over a [`DataSource`]: featurize each
+//! bounded chunk into **one reused scratch buffer**, fold it into O(F²)
+//! (or O(kF)) state, and discard it. Working memory is
+//! `chunk_rows x (d + F)` regardless of n — the out-of-core regime the
+//! paper's data-oblivious features enable (§1.2).
+//!
+//! Chunk invariance is the load-bearing contract: every consumer here
+//! accumulates in strict row-ascending order (`RidgeStats::absorb_flat_with`,
+//! `StreamingKmeans::absorb_flat`, the KPCA moment passes), and sources
+//! return identical rows for any chunking, so a fit at `chunk_rows = 1`
+//! is **bit-identical** to the fit at `chunk_rows = n` — and, for ridge
+//! and KPCA, bit-identical to the legacy materialize-everything fit.
+//! Property-tested across the whole method registry in
+//! `tests/source_props.rs`.
+
+use super::{chunk_ranges, gather_rows, DataSource};
+use crate::exec::Pool;
+use crate::features::Featurizer;
+use crate::kmeans::StreamingKmeans;
+use crate::kpca::KernelPca;
+use crate::krr::RidgeStats;
+use crate::linalg::{syrk_flat_into_p, Mat};
+use crate::rng::Rng;
+use std::time::Instant;
+
+/// Default chunk height of every fit path (`--chunk-rows` overrides).
+pub const DEFAULT_CHUNK_ROWS: usize = 8192;
+
+/// Telemetry of one chunked pass: how much was streamed and how big the
+/// scratch allocation actually was (the bench's peak-Z-bytes evidence).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineInfo {
+    pub rows: usize,
+    pub chunks: usize,
+    pub chunk_rows: usize,
+    /// bytes of the feature scratch buffer — `min(chunk_rows, n) * F * 8`,
+    /// the peak feature-matrix allocation of the whole fit
+    pub peak_z_bytes: usize,
+    /// seconds spent featurizing (summed over chunks and passes)
+    pub featurize_secs: f64,
+}
+
+/// Reusable per-chunk buffers: the raw-row chunk and the featurized
+/// chunk. The **only** feature storage a chunked fit ever allocates.
+struct ChunkBufs {
+    x: Mat,
+    y: Vec<f64>,
+    z: Vec<f64>,
+    f_dim: usize,
+}
+
+impl ChunkBufs {
+    fn new(src: &dyn DataSource, f_dim: usize, chunk_rows: usize) -> ChunkBufs {
+        let cap = chunk_rows.max(1).min(src.len().max(1));
+        ChunkBufs {
+            x: Mat::zeros(cap, src.dim()),
+            y: vec![0.0; cap],
+            z: vec![0.0; cap * f_dim],
+            f_dim,
+        }
+    }
+
+    /// Read rows `[lo, hi)` and featurize them; returns `(x, y, z)` slices
+    /// for exactly `hi - lo` rows. Adds featurize time to `secs`.
+    fn load(
+        &mut self,
+        src: &dyn DataSource,
+        feat: &dyn Featurizer,
+        lo: usize,
+        hi: usize,
+        pool: &Pool,
+        secs: &mut f64,
+    ) -> Result<(&Mat, &[f64], &[f64]), String> {
+        let c = hi - lo;
+        if self.x.rows() != c {
+            // only chunk-height changes re-allocate: the final short chunk
+            // of a pass, and the first full chunk of the next pass
+            self.x = Mat::zeros(c, self.x.cols());
+        }
+        src.read_into(lo, hi, &mut self.x, &mut self.y[..c])?;
+        let t0 = Instant::now();
+        feat.featurize_par_into(&self.x, &mut self.z[..c * self.f_dim], pool);
+        *secs += t0.elapsed().as_secs_f64();
+        Ok((&self.x, &self.y[..c], &self.z[..c * self.f_dim]))
+    }
+}
+
+fn info(
+    src: &dyn DataSource,
+    f_dim: usize,
+    chunk_rows: usize,
+    passes_chunks: usize,
+    secs: f64,
+) -> PipelineInfo {
+    let chunk = chunk_rows.max(1).min(src.len().max(1));
+    PipelineInfo {
+        rows: src.len(),
+        chunks: passes_chunks,
+        chunk_rows: chunk,
+        peak_z_bytes: chunk * f_dim * 8,
+        featurize_secs: secs,
+    }
+}
+
+/// The shared chunk loop: stream every row of a source through the one
+/// reused feature scratch and hand `(x, y, z)` slices of each chunk to
+/// `body`, in row order. This is the loop every trainer here is built on,
+/// exported so other consumers (the experiments' streamed evaluation
+/// passes) never re-implement the buffer management — and therefore never
+/// accidentally re-materialize a feature matrix.
+pub fn for_each_chunk(
+    feat: &dyn Featurizer,
+    src: &dyn DataSource,
+    chunk_rows: usize,
+    pool: &Pool,
+    mut body: impl FnMut(&Mat, &[f64], &[f64]),
+) -> Result<PipelineInfo, String> {
+    let f_dim = feat.dim();
+    let mut bufs = ChunkBufs::new(src, f_dim, chunk_rows);
+    let mut secs = 0.0;
+    let mut chunks = 0usize;
+    for (lo, hi) in chunk_ranges(src.len(), chunk_rows) {
+        let (x, y, z) = bufs.load(src, feat, lo, hi, pool, &mut secs)?;
+        body(x, y, z);
+        chunks += 1;
+    }
+    Ok(info(src, f_dim, chunk_rows, chunks, secs))
+}
+
+/// Single-pass ridge sufficient statistics `(Z^T Z, Z^T y, n)` over a
+/// source: per chunk, featurize into the scratch and
+/// [`absorb`](RidgeStats::absorb_flat_with). Solve the result at any
+/// lambda. Bit-identical to absorbing the fully materialized feature
+/// matrix, at `chunk_rows x F` feature memory instead of `n x F`.
+pub fn ridge_stats(
+    feat: &dyn Featurizer,
+    src: &dyn DataSource,
+    chunk_rows: usize,
+    pool: &Pool,
+) -> Result<(RidgeStats, PipelineInfo), String> {
+    let mut stats = RidgeStats::new(feat.dim());
+    let info = for_each_chunk(feat, src, chunk_rows, pool, |_, y, z| {
+        stats.absorb_flat_with(z, y, pool)
+    })?;
+    Ok((stats, info))
+}
+
+/// Result of a chunked k-means fit.
+pub struct ChunkedKmeans {
+    /// (k x F) centroids in feature space
+    pub centroids: Mat,
+    /// average squared distance of the source's rows to their nearest
+    /// centroid (the paper's Table-3 objective, computed in a final pass)
+    pub objective: f64,
+}
+
+/// Chunked kernel k-means: reservoir-sample k rows as initial centroids
+/// (one cheap index pass, no data materialized), then a
+/// [`StreamingKmeans`] absorb pass over the chunks, then an objective
+/// pass. Three passes, O(k F) state, bit-invariant to `chunk_rows` (all
+/// three passes are row-sequential).
+pub fn kmeans_chunked(
+    feat: &dyn Featurizer,
+    src: &dyn DataSource,
+    k: usize,
+    chunk_rows: usize,
+    seed: u64,
+    pool: &Pool,
+) -> Result<(ChunkedKmeans, PipelineInfo), String> {
+    let n = src.len();
+    if k == 0 || n < k {
+        return Err(format!("k = {k} needs at least k source rows, got {n}"));
+    }
+    let f_dim = feat.dim();
+    let mut rng = Rng::new(seed).fork(0x5EAB);
+    // pass 0 (index-only): uniform reservoir sample of k init rows
+    let mut keep: Vec<usize> = (0..k).collect();
+    for i in k..n {
+        let j = rng.below(i + 1);
+        if j < k {
+            keep[j] = i;
+        }
+    }
+    let init_x = gather_rows(src, &keep)?;
+    let centroids = feat.featurize(&init_x);
+    let mut sk = StreamingKmeans::with_centroids(centroids);
+
+    let mut bufs = ChunkBufs::new(src, f_dim, chunk_rows);
+    let mut secs = 0.0;
+    let mut chunks = 0usize;
+    // pass 1: streaming absorb
+    for (lo, hi) in chunk_ranges(n, chunk_rows) {
+        let (_, _, z) = bufs.load(src, feat, lo, hi, pool, &mut secs)?;
+        sk.absorb_flat(z);
+        chunks += 1;
+    }
+    // pass 2: the Table-3 objective against the final centroids
+    let mut total = 0.0;
+    for (lo, hi) in chunk_ranges(n, chunk_rows) {
+        let (_, _, z) = bufs.load(src, feat, lo, hi, pool, &mut secs)?;
+        sk.accumulate_sq_dist(z, &mut total);
+        chunks += 1;
+    }
+    let result =
+        ChunkedKmeans { centroids: sk.centroids().clone(), objective: total / n as f64 };
+    Ok((result, info(src, f_dim, chunk_rows, chunks, secs)))
+}
+
+/// Chunked kernel PCA: pass 1 accumulates the feature-space mean, pass 2
+/// the centered covariance (both row-ascending, so the moments — and
+/// hence the model — are **bit-identical** to [`KernelPca::fit`] on the
+/// materialized feature matrix). O(F²) state.
+pub fn kpca_chunked(
+    feat: &dyn Featurizer,
+    src: &dyn DataSource,
+    rank: usize,
+    chunk_rows: usize,
+    pool: &Pool,
+) -> Result<(KernelPca, PipelineInfo), String> {
+    let n = src.len();
+    let f_dim = feat.dim();
+    if n < 2 {
+        return Err("kpca needs at least 2 source rows".to_string());
+    }
+    if rank == 0 || rank > f_dim {
+        return Err(format!("rank {rank} out of range for {f_dim} feature dimensions"));
+    }
+    let mut bufs = ChunkBufs::new(src, f_dim, chunk_rows);
+    let mut secs = 0.0;
+    let mut chunks = 0usize;
+    // pass 1: column means
+    let mut mean = vec![0.0; f_dim];
+    for (lo, hi) in chunk_ranges(n, chunk_rows) {
+        let (_, _, z) = bufs.load(src, feat, lo, hi, pool, &mut secs)?;
+        for row in z.chunks_exact(f_dim) {
+            for (m, &v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        chunks += 1;
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    // pass 2: centered covariance via the flat SYRK on the scratch
+    let mut cov = Mat::zeros(f_dim, f_dim);
+    for (lo, hi) in chunk_ranges(n, chunk_rows) {
+        let c = hi - lo;
+        bufs.load(src, feat, lo, hi, pool, &mut secs)?;
+        let zc = &mut bufs.z[..c * f_dim];
+        for row in zc.chunks_exact_mut(f_dim) {
+            for (v, &m) in row.iter_mut().zip(&mean) {
+                *v -= m;
+            }
+        }
+        syrk_flat_into_p(zc, f_dim, &mut cov, pool);
+        chunks += 1;
+    }
+    cov.symmetrize_from_upper();
+    cov.scale(1.0 / n as f64);
+    Ok((KernelPca::from_covariance(mean, &cov, rank), info(src, f_dim, chunk_rows, chunks, secs)))
+}
+
+/// Mean squared error of a fitted predictor over a source, computed chunk
+/// by chunk (the evaluation side of the pipeline: no n x d or n x F
+/// materialization either). `predict` maps a raw chunk to predictions.
+pub fn chunked_mse(
+    src: &dyn DataSource,
+    chunk_rows: usize,
+    mut predict: impl FnMut(&Mat) -> Vec<f64>,
+) -> Result<f64, String> {
+    let n = src.len();
+    if n == 0 {
+        return Err("cannot score an empty source".to_string());
+    }
+    let mut total = 0.0;
+    let mut x = Mat::zeros(chunk_rows.max(1).min(n), src.dim());
+    let mut y = vec![0.0; chunk_rows.max(1).min(n)];
+    for (lo, hi) in chunk_ranges(n, chunk_rows) {
+        let c = hi - lo;
+        if x.rows() != c {
+            x = Mat::zeros(c, src.dim());
+        }
+        src.read_into(lo, hi, &mut x, &mut y[..c])?;
+        let pred = predict(&x);
+        assert_eq!(pred.len(), c, "predictor returned a wrong-sized chunk");
+        for (p, t) in pred.iter().zip(&y[..c]) {
+            total += (p - t) * (p - t);
+        }
+    }
+    Ok(total / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{MatSource, SyntheticSource};
+    use crate::features::{FeatureSpec, KernelSpec, Method};
+    use crate::krr::FeatureRidge;
+
+    fn spec(m: usize) -> FeatureSpec {
+        FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 6, s: 2 },
+            m,
+            9,
+        )
+    }
+
+    #[test]
+    fn chunked_ridge_equals_materialized_fit() {
+        let src = SyntheticSource::elevation(57, 3);
+        let (x, y) = src.read_range(0, 57).unwrap();
+        let feat = spec(32).build(3);
+        let z = feat.featurize(&x);
+        let reference = FeatureRidge::fit(&z, &y, 0.01);
+        for chunk in [1usize, 13, 57] {
+            let (stats, pinfo) =
+                ridge_stats(feat.as_ref(), &src, chunk, &Pool::serial()).unwrap();
+            let model = stats.solve(0.01);
+            assert_eq!(model.weights, reference.weights, "chunk {chunk}");
+            assert_eq!(stats.n, 57);
+            assert_eq!(pinfo.peak_z_bytes, chunk.min(57) * 32 * 8);
+        }
+    }
+
+    #[test]
+    fn chunked_kpca_equals_materialized_fit() {
+        let src = SyntheticSource::elevation(40, 3);
+        let (x, _) = src.read_range(0, 40).unwrap();
+        let feat = spec(24).build(3);
+        let z = feat.featurize(&x);
+        let reference = KernelPca::fit(&z, 3);
+        let (pca, _) = kpca_chunked(feat.as_ref(), &src, 3, 7, &Pool::serial()).unwrap();
+        assert_eq!(pca.mean(), reference.mean());
+        assert_eq!(pca.components(), reference.components());
+        assert_eq!(pca.eigenvalues, reference.eigenvalues);
+    }
+
+    #[test]
+    fn chunked_kmeans_is_chunk_invariant_and_sane() {
+        let src = SyntheticSource::by_name("abalone", 120, 3).unwrap();
+        let feat = spec(24).build(8);
+        let (ref_fit, _) =
+            kmeans_chunked(feat.as_ref(), &src, 3, 120, 5, &Pool::serial()).unwrap();
+        for chunk in [1usize, 17, 64] {
+            let (fit, _) =
+                kmeans_chunked(feat.as_ref(), &src, 3, chunk, 5, &Pool::serial()).unwrap();
+            assert_eq!(fit.centroids, ref_fit.centroids, "chunk {chunk}");
+            assert_eq!(fit.objective, ref_fit.objective, "chunk {chunk}");
+        }
+        assert!(ref_fit.objective.is_finite() && ref_fit.objective >= 0.0);
+        assert!(kmeans_chunked(feat.as_ref(), &src, 0, 16, 5, &Pool::serial()).is_err());
+        assert!(kmeans_chunked(feat.as_ref(), &src, 121, 16, 5, &Pool::serial()).is_err());
+    }
+
+    #[test]
+    fn chunked_mse_matches_direct() {
+        let src = SyntheticSource::elevation(30, 3);
+        let (x, y) = src.read_range(0, 30).unwrap();
+        let feat = spec(16).build(3);
+        let z = feat.featurize(&x);
+        let model = FeatureRidge::fit(&z, &y, 0.1);
+        let direct = crate::krr::mse(&model.predict(&z), &y);
+        let chunked =
+            chunked_mse(&src, 7, |xc| model.predict(&feat.featurize(xc))).unwrap();
+        assert!((direct - chunked).abs() < 1e-12, "{direct} vs {chunked}");
+    }
+
+    #[test]
+    fn pool_width_does_not_change_chunked_fits() {
+        let src = SyntheticSource::protein(48, 2);
+        let feat = spec(20).build(9);
+        let (s1, _) = ridge_stats(feat.as_ref(), &src, 11, &Pool::serial()).unwrap();
+        let (s4, _) = ridge_stats(feat.as_ref(), &src, 11, &Pool::new(4)).unwrap();
+        assert_eq!(s1.g, s4.g);
+        assert_eq!(s1.b, s4.b);
+    }
+
+    #[test]
+    fn mat_source_and_synthetic_source_agree_for_same_rows() {
+        // the unification claim: an in-memory fit over MatSource is the
+        // same computation as the out-of-core fit over the generator
+        let src = SyntheticSource::co2(33, 6);
+        let (x, y) = src.read_range(0, 33).unwrap();
+        let mat = MatSource::new(&x, &y);
+        let feat = spec(16).build(4);
+        let (a, _) = ridge_stats(feat.as_ref(), &src, 8, &Pool::serial()).unwrap();
+        let (b, _) = ridge_stats(feat.as_ref(), &mat, 8, &Pool::serial()).unwrap();
+        assert_eq!(a.g, b.g);
+        assert_eq!(a.b, b.b);
+    }
+}

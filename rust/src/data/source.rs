@@ -1,0 +1,1147 @@
+//! The chunked data-flow layer: [`DataSource`] yields bounded row chunks
+//! so every fit path can run single-pass with working memory bounded by
+//! the chunk, not by n.
+//!
+//! The paper's headline system property (§1.2) is that the features are
+//! data-oblivious: each example can be featurized once, folded into O(F²)
+//! sufficient statistics, and discarded. A trainer therefore never needs
+//! the n x d dataset *or* the n x F feature matrix in memory — it needs a
+//! stream of row chunks. This module is that stream:
+//!
+//! * [`DataSource`] — the trait: `(len, dim)` plus random-access
+//!   `read_into(lo, hi, ...)`. Random access (rather than a forward-only
+//!   iterator) is what lets the coordinator's shards read **disjoint chunk
+//!   ranges of one shared source** concurrently, and lets data-dependent
+//!   methods (Nystrom) gather their O(m) sample rows without a full pass.
+//! * [`MatSource`] — borrowed in-memory data; the in-memory fit paths are
+//!   the same code as the out-of-core ones, just over this source.
+//! * [`SyntheticSource`] — the paper's elevation / co2 / climate /
+//!   protein / clustering stand-ins generated **lazily per row** (row i is
+//!   a pure function of `(dataset, seed, i)`), so the full-size datasets
+//!   (climate is n = 223,656) never materialize. Row indices beyond the
+//!   nominal `n` are valid too, which is how `gzk serve` draws held-out
+//!   evaluation rows for a stored model.
+//! * [`FileSource`] — real datasets from disk: CSV (one row per line,
+//!   features then target in the last column) or the `GZKBIN01`
+//!   little-endian binary format. Chunks are read by seek + sequential
+//!   read; nothing is ever fully loaded.
+//!
+//! Chunk invariance: a source returns bit-identical rows regardless of how
+//! the range is chunked (`read_into(0, n)` == any concatenation of
+//! sub-reads), and the consumers in [`pipeline`](crate::data::pipeline)
+//! accumulate in row-ascending order — together that makes every chunked
+//! fit bit-identical to the single-chunk fit (`tests/source_props.rs`).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::special::gegenbauer_eval;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// A dataset exposed as randomly accessible row chunks. `Sync` is part of
+/// the contract: the coordinator's workers read disjoint ranges of one
+/// shared source concurrently.
+pub trait DataSource: Sync {
+    /// Dataset name, recorded in model-artifact run metadata (`gzk serve`
+    /// uses it to rebuild the evaluation stream).
+    fn name(&self) -> &str;
+
+    /// Total number of rows.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Input dimension d (the target column is not counted).
+    fn dim(&self) -> usize;
+
+    /// Fill `x` ((hi-lo) x d) and `y` (hi-lo) with rows `[lo, hi)`.
+    /// Implementations must be pure functions of the range: any chunking
+    /// of a range yields the same bytes (the chunk-invariance contract).
+    fn read_into(&self, lo: usize, hi: usize, x: &mut Mat, y: &mut [f64]) -> Result<(), String>;
+
+    /// Allocating convenience wrapper around
+    /// [`read_into`](DataSource::read_into).
+    fn read_range(&self, lo: usize, hi: usize) -> Result<(Mat, Vec<f64>), String> {
+        let mut x = Mat::zeros(hi - lo, self.dim());
+        let mut y = vec![0.0; hi - lo];
+        self.read_into(lo, hi, &mut x, &mut y)?;
+        Ok((x, y))
+    }
+}
+
+/// Successive `[lo, hi)` chunk bounds covering `0..n` in steps of
+/// `chunk_rows` (the last chunk may be short).
+pub fn chunk_ranges(n: usize, chunk_rows: usize) -> impl Iterator<Item = (usize, usize)> {
+    let chunk = chunk_rows.max(1);
+    (0..n).step_by(chunk).map(move |lo| (lo, (lo + chunk).min(n)))
+}
+
+/// Gather specific rows of a source into a dense matrix (targets
+/// discarded) — how data-dependent fits (Nystrom landmarks, bandwidth
+/// probes) pull their O(m) sample without a full pass.
+pub fn gather_rows(src: &dyn DataSource, indices: &[usize]) -> Result<Mat, String> {
+    let d = src.dim();
+    let mut out = Mat::zeros(indices.len(), d);
+    let mut row = Mat::zeros(1, d);
+    let mut y = [0.0];
+    for (r, &i) in indices.iter().enumerate() {
+        src.read_into(i, i + 1, &mut row, &mut y)?;
+        out.row_mut(r).copy_from_slice(row.row(0));
+    }
+    Ok(out)
+}
+
+/// A contiguous row range of another source, exposed as a source of its
+/// own — how train/test splits and coordinator shards are expressed
+/// without copying anything.
+pub struct SourceSlice<'a> {
+    inner: &'a dyn DataSource,
+    lo: usize,
+    hi: usize,
+}
+
+impl<'a> SourceSlice<'a> {
+    pub fn new(inner: &'a dyn DataSource, lo: usize, hi: usize) -> SourceSlice<'a> {
+        assert!(lo <= hi && hi <= inner.len(), "slice [{lo}, {hi}) out of bounds");
+        SourceSlice { inner, lo, hi }
+    }
+}
+
+impl DataSource for SourceSlice<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn read_into(&self, lo: usize, hi: usize, x: &mut Mat, y: &mut [f64]) -> Result<(), String> {
+        assert!(lo <= hi && hi <= self.len(), "read [{lo}, {hi}) out of slice bounds");
+        self.inner.read_into(self.lo + lo, self.lo + hi, x, y)
+    }
+}
+
+/// A deterministic interleaved train/test split of a source: every
+/// `period`-th row (underlying indices ≡ period-1 mod period) belongs to
+/// the test view, the rest to the train view. Unlike a contiguous tail
+/// split, this stays honest for **ordered** file sources (a CSV sorted by
+/// target or time spreads both views across the whole range) while both
+/// views remain chunk-readable: a chunk read issues ONE contiguous read
+/// of the underlying rows spanning it, then copies out the kept rows, so
+/// working memory stays chunk-bounded (x `period` for the sparse test
+/// view).
+pub struct InterleavedSplit<'a> {
+    inner: &'a dyn DataSource,
+    period: usize,
+    /// true: the every-period-th rows (test); false: the complement (train)
+    test: bool,
+}
+
+impl<'a> InterleavedSplit<'a> {
+    /// The training view: all rows whose index is NOT ≡ period-1 (mod period).
+    pub fn train(inner: &'a dyn DataSource, period: usize) -> InterleavedSplit<'a> {
+        assert!(period >= 2, "split period must be >= 2");
+        InterleavedSplit { inner, period, test: false }
+    }
+
+    /// The held-out view: every `period`-th row.
+    pub fn test(inner: &'a dyn DataSource, period: usize) -> InterleavedSplit<'a> {
+        assert!(period >= 2, "split period must be >= 2");
+        InterleavedSplit { inner, period, test: true }
+    }
+
+    /// Underlying index of this view's row `i`.
+    fn map(&self, i: usize) -> usize {
+        if self.test {
+            i * self.period + self.period - 1
+        } else {
+            i + i / (self.period - 1)
+        }
+    }
+
+    fn keeps(&self, underlying: usize) -> bool {
+        (underlying % self.period == self.period - 1) == self.test
+    }
+}
+
+impl DataSource for InterleavedSplit<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn len(&self) -> usize {
+        let n = self.inner.len();
+        let test_rows = n / self.period;
+        if self.test {
+            test_rows
+        } else {
+            n - test_rows
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn read_into(&self, lo: usize, hi: usize, x: &mut Mat, y: &mut [f64]) -> Result<(), String> {
+        check_read_shape(self, lo, hi, x, y)?;
+        if lo == hi {
+            return Ok(());
+        }
+        // one contiguous underlying read spanning the requested rows, then
+        // copy out the rows this view keeps
+        let u_lo = self.map(lo);
+        let u_hi = self.map(hi - 1) + 1;
+        let (ux, uy) = self.inner.read_range(u_lo, u_hi)?;
+        let mut filled = 0usize;
+        for r in 0..ux.rows() {
+            if self.keeps(u_lo + r) {
+                x.row_mut(filled).copy_from_slice(ux.row(r));
+                y[filled] = uy[r];
+                filled += 1;
+            }
+        }
+        debug_assert_eq!(filled, hi - lo);
+        Ok(())
+    }
+}
+
+/// Borrowed in-memory data as a source: the adapter that lets the
+/// in-memory fit paths consume the same pipeline as the out-of-core ones.
+pub struct MatSource<'a> {
+    x: &'a Mat,
+    y: Option<&'a [f64]>,
+}
+
+impl<'a> MatSource<'a> {
+    pub fn new(x: &'a Mat, y: &'a [f64]) -> MatSource<'a> {
+        assert_eq!(x.rows(), y.len(), "MatSource: {} rows but {} targets", x.rows(), y.len());
+        MatSource { x, y: Some(y) }
+    }
+
+    /// Rows without targets (k-means / KPCA / Nystrom sampling); `y` reads
+    /// as zeros.
+    pub fn unlabeled(x: &'a Mat) -> MatSource<'a> {
+        MatSource { x, y: None }
+    }
+}
+
+impl DataSource for MatSource<'_> {
+    fn name(&self) -> &str {
+        "mem"
+    }
+
+    fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn read_into(&self, lo: usize, hi: usize, x: &mut Mat, y: &mut [f64]) -> Result<(), String> {
+        check_read_shape(self, lo, hi, x, y)?;
+        let d = self.x.cols();
+        x.data_mut().copy_from_slice(&self.x.data()[lo * d..hi * d]);
+        match self.y {
+            Some(src_y) => y.copy_from_slice(&src_y[lo..hi]),
+            None => y.fill(0.0),
+        }
+        Ok(())
+    }
+}
+
+/// Shared bounds/shape validation for `read_into` implementations.
+fn check_read_shape(
+    src: &dyn DataSource,
+    lo: usize,
+    hi: usize,
+    x: &Mat,
+    y: &[f64],
+) -> Result<(), String> {
+    if lo > hi || hi > src.len() {
+        return Err(format!("{}: read [{lo}, {hi}) out of bounds (n = {})", src.name(), src.len()));
+    }
+    if x.rows() != hi - lo || x.cols() != src.dim() || y.len() != hi - lo {
+        return Err(format!(
+            "{}: read buffers are {}x{} + {} targets for a [{lo}, {hi}) read of d = {}",
+            src.name(),
+            x.rows(),
+            x.cols(),
+            y.len(),
+            src.dim()
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// SyntheticSource
+// ---------------------------------------------------------------------------
+
+/// Band-limited zonal field on S^2 (the elevation target): fixed random
+/// lobes, evaluated per row.
+struct ZonalField {
+    centers: Mat,
+    degrees: Vec<usize>,
+    amps: Vec<f64>,
+}
+
+impl ZonalField {
+    fn new(rng: &mut Rng, n_lobes: usize, max_degree: usize) -> ZonalField {
+        let mut centers = Mat::zeros(n_lobes, 3);
+        let mut degrees = Vec::with_capacity(n_lobes);
+        let mut amps = Vec::with_capacity(n_lobes);
+        for k in 0..n_lobes {
+            rng.sphere(centers.row_mut(k));
+            let l = 1 + rng.below(max_degree);
+            degrees.push(l);
+            // red spectrum, like real topography
+            amps.push(rng.normal() / (1.0 + l as f64).sqrt());
+        }
+        ZonalField { centers, degrees, amps }
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let mut v = 0.0;
+        for k in 0..self.degrees.len() {
+            let t: f64 = x.iter().zip(self.centers.row(k)).map(|(&a, &b)| a * b).sum();
+            v += self.amps[k] * gegenbauer_eval(self.degrees[k], 3, t.clamp(-1.0, 1.0));
+        }
+        v
+    }
+}
+
+enum SynKind {
+    /// S^2 points, band-limited terrain target (d = 3).
+    Elevation { field: ZonalField },
+    /// [S^2, month] points, plume + trend + seasonality target (d = 4);
+    /// `latitudinal` adds the climate stand-in's equator-pole gradient.
+    SpatioTemporal {
+        sources: Vec<(Vec<f64>, f64, f64)>,
+        sharpness: f64,
+        trend: f64,
+        season_amp: f64,
+        noise_sd: f64,
+        latitudinal: f64,
+    },
+    /// Correlated R^9 features (analytically standardized), nonlinear
+    /// interaction target.
+    Protein { mix: Mat, inv_sd: Vec<f64> },
+    /// Gaussian mixture on S^{d-1}; y is the class label as f64.
+    Clustering { centers: Mat, spread: f64 },
+}
+
+/// Deterministic lazy generator matched to one of the paper's datasets:
+/// row i is a pure function of `(dataset, seed, i)` (an independent RNG
+/// stream is forked per row), so any chunking — or any shard reading any
+/// disjoint range — sees identical bytes without the n x d matrix ever
+/// existing.
+pub struct SyntheticSource {
+    name: String,
+    n: usize,
+    d: usize,
+    base: Rng,
+    kind: SynKind,
+}
+
+/// The regression datasets of Table 2 with their paper row counts.
+pub const REGRESSION_SIZES: [(&str, usize); 4] =
+    [("elevation", 64_800), ("co2", 146_040), ("climate", 223_656), ("protein", 45_730)];
+
+impl SyntheticSource {
+    /// Earth-elevation stand-in: n points on S^2, band-limited terrain.
+    pub fn elevation(n: usize, seed: u64) -> SyntheticSource {
+        let mut prng = Rng::new(seed ^ 0xE1E7);
+        let field = ZonalField::new(&mut prng, 40, 12);
+        let base = prng.fork(0x57AB);
+        SyntheticSource {
+            name: "elevation".to_string(),
+            n,
+            d: 3,
+            base,
+            kind: SynKind::Elevation { field },
+        }
+    }
+
+    fn spatio_temporal(
+        name: &str,
+        n: usize,
+        seed: u64,
+        n_sources: usize,
+        sharpness: f64,
+        trend: f64,
+        season_amp: f64,
+        noise_sd: f64,
+        latitudinal: f64,
+    ) -> SyntheticSource {
+        let mut prng = Rng::new(seed);
+        let mut sources = Vec::with_capacity(n_sources);
+        for _ in 0..n_sources {
+            let mut c = vec![0.0; 3];
+            prng.sphere(&mut c);
+            let amp = prng.uniform_in(0.5, 2.0);
+            let phase = prng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+            sources.push((c, amp, phase));
+        }
+        let base = prng.fork(0x57AB);
+        SyntheticSource {
+            name: name.to_string(),
+            n,
+            d: 4,
+            base,
+            kind: SynKind::SpatioTemporal {
+                sources,
+                sharpness,
+                trend,
+                season_amp,
+                noise_sd,
+                latitudinal,
+            },
+        }
+    }
+
+    /// ODIAC-CO2 stand-in on [S^2, R]: sharp plumes + trend + seasonality.
+    pub fn co2(n: usize, seed: u64) -> SyntheticSource {
+        Self::spatio_temporal("co2", n, seed ^ 0xC02, 25, 12.0, 0.8, 0.5, 0.05, 0.0)
+    }
+
+    /// Berkeley-Earth climate stand-in: smooth field + latitudinal
+    /// gradient (warm equator, cold poles).
+    pub fn climate(n: usize, seed: u64) -> SyntheticSource {
+        Self::spatio_temporal("climate", n, seed ^ 0xC11A, 8, 3.0, 0.3, 1.0, 0.1, 3.0)
+    }
+
+    /// CASP-protein stand-in in R^9. Unlike the eager generator, the
+    /// features are standardized **analytically** (x = g + M g with
+    /// g ~ N(0, I) has zero mean and a known per-coordinate variance), so
+    /// standardization needs no data pass and each row stays independent.
+    pub fn protein(n: usize, seed: u64) -> SyntheticSource {
+        let mut prng = Rng::new(seed ^ 0x9607);
+        let d = 9;
+        let mix = Mat::from_fn(d, d, |_, _| prng.normal() * 0.4);
+        // var(x_j) = sum_k (delta_jk + M[j,k])^2
+        let inv_sd: Vec<f64> = (0..d)
+            .map(|j| {
+                let v: f64 = (0..d)
+                    .map(|k| {
+                        let c = if j == k { 1.0 } else { 0.0 } + mix[(j, k)];
+                        c * c
+                    })
+                    .sum();
+                1.0 / v.sqrt().max(1e-12)
+            })
+            .collect();
+        let base = prng.fork(0x57AB);
+        SyntheticSource {
+            name: "protein".to_string(),
+            n,
+            d,
+            base,
+            kind: SynKind::Protein { mix, inv_sd },
+        }
+    }
+
+    /// Gaussian-mixture clustering stand-in on S^{d-1} with balanced
+    /// classes (`y` carries the class label).
+    pub fn clustering(name: &str, n: usize, d: usize, k: usize, seed: u64) -> SyntheticSource {
+        assert!(k >= 1 && d >= 1);
+        let mut prng = Rng::new(seed ^ 0xC105);
+        let mut centers = Mat::zeros(k, d);
+        for c in 0..k {
+            prng.sphere(centers.row_mut(c));
+        }
+        let base = prng.fork(0x57AB);
+        SyntheticSource {
+            name: name.to_string(),
+            n,
+            d,
+            base,
+            kind: SynKind::Clustering { centers, spread: 0.55 },
+        }
+    }
+
+    /// Resolve a dataset by name: the four Table-2 regression sets or any
+    /// of the six Table-3 clustering geometries, at `n` rows. This is the
+    /// CLI's `--dataset` registry and how `gzk serve` rebuilds the
+    /// evaluation stream recorded in a model artifact.
+    pub fn by_name(name: &str, n: usize, seed: u64) -> Result<SyntheticSource, String> {
+        match name {
+            "elevation" => Ok(Self::elevation(n, seed)),
+            "co2" => Ok(Self::co2(n, seed)),
+            "climate" => Ok(Self::climate(n, seed)),
+            "protein" => Ok(Self::protein(n, seed)),
+            other => {
+                if let Some(spec) =
+                    super::CLUSTERING_SPECS.iter().find(|s| s.name == other)
+                {
+                    return Ok(Self::clustering(spec.name, n, spec.d, spec.k, seed));
+                }
+                let mut names: Vec<&str> = REGRESSION_SIZES.iter().map(|(n, _)| *n).collect();
+                names.extend(super::CLUSTERING_SPECS.iter().map(|s| s.name));
+                Err(format!(
+                    "unknown synthetic dataset {other:?}; known: {}",
+                    names.join(", ")
+                ))
+            }
+        }
+    }
+
+    /// Number of classes for the clustering kinds (0 otherwise).
+    pub fn k(&self) -> usize {
+        match &self.kind {
+            SynKind::Clustering { centers, .. } => centers.rows(),
+            _ => 0,
+        }
+    }
+
+    fn gen_row(&self, i: usize, x: &mut [f64], y: &mut f64) {
+        let mut rng = self.base.fork(i as u64);
+        match &self.kind {
+            SynKind::Elevation { field } => {
+                rng.sphere(x);
+                *y = 2.0 * field.eval(x) + 0.05 * rng.normal();
+            }
+            SynKind::SpatioTemporal {
+                sources,
+                sharpness,
+                trend,
+                season_amp,
+                noise_sd,
+                latitudinal,
+            } => {
+                rng.sphere(&mut x[..3]);
+                let tau = rng.below(12) as f64 / 11.0;
+                x[3] = tau;
+                let mut v = trend * tau;
+                for (c, amp, phase) in sources {
+                    let cos: f64 = x[..3].iter().zip(c).map(|(&a, &b)| a * b).sum();
+                    let bump = (sharpness * (cos - 1.0)).exp(); // von-Mises-like plume
+                    let seasonal =
+                        1.0 + season_amp * (2.0 * std::f64::consts::PI * tau + phase).sin();
+                    v += amp * bump * seasonal;
+                }
+                let z = x[2];
+                v += latitudinal * (1.0 - z * z);
+                *y = v + noise_sd * rng.normal();
+            }
+            SynKind::Protein { mix, inv_sd } => {
+                let d = x.len();
+                let mut g = vec![0.0; d];
+                rng.fill_normal(&mut g);
+                for j in 0..d {
+                    let v = g[j] + mix.row(j).iter().zip(&g).map(|(&a, &b)| a * b).sum::<f64>();
+                    x[j] = v * inv_sd[j];
+                }
+                let r = &*x;
+                let v = (r[0] * r[1]).tanh()
+                    + 0.8 * (r[2] + 0.5 * r[3] * r[3]).sin()
+                    + 0.6 * (r[4] - r[5]).abs().sqrt()
+                    + 0.4 * r[6] * (r[7] * 0.7).cos()
+                    + 0.2 * r[8];
+                *y = 5.0 + 2.0 * v + 0.3 * rng.normal();
+            }
+            SynKind::Clustering { centers, spread } => {
+                let c = i % centers.rows();
+                for (j, v) in x.iter_mut().enumerate() {
+                    *v = centers[(c, j)] + spread * rng.normal();
+                }
+                let norm: f64 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+                if norm > 1e-12 {
+                    for v in x.iter_mut() {
+                        *v /= norm;
+                    }
+                }
+                *y = c as f64;
+            }
+        }
+    }
+}
+
+impl DataSource for SyntheticSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn read_into(&self, lo: usize, hi: usize, x: &mut Mat, y: &mut [f64]) -> Result<(), String> {
+        // rows past the nominal n are deliberately allowed: the generator
+        // is an infinite stream, and `gzk serve` evaluates a stored model
+        // on rows the training range never touched
+        if lo > hi {
+            return Err(format!("{}: read [{lo}, {hi}) is inverted", self.name));
+        }
+        if x.rows() != hi - lo || x.cols() != self.d || y.len() != hi - lo {
+            return Err(format!("{}: read buffers mismatch [{lo}, {hi})", self.name));
+        }
+        for (r, i) in (lo..hi).enumerate() {
+            self.gen_row(i, x.row_mut(r), &mut y[r]);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FileSource
+// ---------------------------------------------------------------------------
+
+/// Magic prefix of the binary format: 8 bytes, then little-endian u64 row
+/// count and u64 feature dimension, then n x (d+1) little-endian f64 rows
+/// (d features followed by the target).
+pub const BINARY_MAGIC: &[u8; 8] = b"GZKBIN01";
+const BINARY_HEADER: usize = 24;
+
+enum FileKind {
+    /// Byte offset + 1-based line number of each data row.
+    Csv { rows: Vec<(u64, usize)> },
+    Binary,
+}
+
+/// A dataset on disk, read chunk by chunk — never fully loaded.
+///
+/// Two formats, sniffed by magic bytes:
+/// * **CSV** — one row per line, comma-separated, the **last column is the
+///   target**; blank lines and `#` comments are skipped. Opening scans the
+///   file once to index row offsets and validate the column count (a
+///   ragged row fails fast); numeric parsing happens per chunk at read
+///   time.
+/// * **binary** — [`BINARY_MAGIC`] header then fixed-width rows; random
+///   access is a seek. Write one with
+///   [`write_binary`](FileSource::write_binary).
+pub struct FileSource {
+    path: PathBuf,
+    name: String,
+    n: usize,
+    d: usize,
+    kind: FileKind,
+}
+
+impl FileSource {
+    pub fn open(path: impl Into<PathBuf>) -> Result<FileSource, String> {
+        let path = path.into();
+        let mut file =
+            std::fs::File::open(&path).map_err(|e| format!("open {path:?}: {e}"))?;
+        let mut magic = [0u8; 8];
+        let is_binary = match file.read_exact(&mut magic) {
+            Ok(()) => &magic == BINARY_MAGIC,
+            Err(_) => false, // shorter than 8 bytes: try CSV, fail with a line count of 0
+        };
+        let name = format!("file:{}", path.display());
+        if is_binary {
+            let (n, d) = Self::read_binary_header(&path, &mut file)?;
+            Ok(FileSource { path, name, n, d, kind: FileKind::Binary })
+        } else {
+            let (rows, d) = Self::index_csv(&path)?;
+            Ok(FileSource { path, name, n: rows.len(), d, kind: FileKind::Csv { rows } })
+        }
+    }
+
+    fn read_binary_header(path: &Path, file: &mut std::fs::File) -> Result<(usize, usize), String> {
+        let mut head = [0u8; 16];
+        file.read_exact(&mut head)
+            .map_err(|e| format!("{path:?}: truncated binary header: {e}"))?;
+        let n = u64::from_le_bytes(head[..8].try_into().unwrap()) as usize;
+        let d = u64::from_le_bytes(head[8..].try_into().unwrap()) as usize;
+        if d == 0 {
+            return Err(format!("{path:?}: binary header declares d = 0"));
+        }
+        let expect = (BINARY_HEADER as u64)
+            .checked_add((n as u64).checked_mul((d as u64 + 1) * 8).ok_or_else(|| {
+                format!("{path:?}: binary header declares an impossible size (n = {n}, d = {d})")
+            })?)
+            .ok_or_else(|| format!("{path:?}: binary header overflows"))?;
+        let actual = file
+            .metadata()
+            .map_err(|e| format!("stat {path:?}: {e}"))?
+            .len();
+        if actual != expect {
+            return Err(format!(
+                "{path:?}: binary file is {actual} bytes but the header (n = {n}, d = {d}) \
+                 requires {expect} — truncated or corrupt"
+            ));
+        }
+        Ok((n, d))
+    }
+
+    /// One pass over a CSV file: index the byte offset of every data row
+    /// and validate the column count. Floats are parsed later, per chunk.
+    fn index_csv(path: &Path) -> Result<(Vec<(u64, usize)>, usize), String> {
+        let file = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+        let mut reader = BufReader::new(file);
+        let mut rows = Vec::new();
+        let mut cols = 0usize;
+        let mut offset = 0u64;
+        let mut line_no = 0usize;
+        let mut line = Vec::new();
+        loop {
+            line.clear();
+            let n_read = reader
+                .read_until(b'\n', &mut line)
+                .map_err(|e| format!("read {path:?}: {e}"))?;
+            if n_read == 0 {
+                break;
+            }
+            line_no += 1;
+            let text = std::str::from_utf8(&line)
+                .map_err(|_| format!("{path:?} line {line_no}: not valid UTF-8"))?
+                .trim();
+            if !(text.is_empty() || text.starts_with('#')) {
+                let fields = text.split(',').count();
+                if fields < 2 {
+                    return Err(format!(
+                        "{path:?} line {line_no}: a data row needs at least one feature \
+                         column and the target column, got {fields} field(s)"
+                    ));
+                }
+                if rows.is_empty() {
+                    cols = fields;
+                } else if fields != cols {
+                    return Err(format!(
+                        "{path:?} line {line_no}: ragged row — expected {cols} fields \
+                         (as in the first data row), got {fields}"
+                    ));
+                }
+                rows.push((offset, line_no));
+            }
+            offset += n_read as u64;
+        }
+        if rows.is_empty() {
+            return Err(format!("{path:?}: no data rows (CSV needs features,...,target lines)"));
+        }
+        Ok((rows, cols - 1))
+    }
+
+    fn read_csv_chunk(
+        &self,
+        rows: &[(u64, usize)],
+        lo: usize,
+        hi: usize,
+        x: &mut Mat,
+        y: &mut [f64],
+    ) -> Result<(), String> {
+        let path = &self.path;
+        let file = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+        let mut reader = BufReader::new(file);
+        reader
+            .seek(SeekFrom::Start(rows[lo].0))
+            .map_err(|e| format!("seek {path:?}: {e}"))?;
+        let mut filled = 0usize;
+        let mut line = String::new();
+        while filled < hi - lo {
+            line.clear();
+            let n_read = reader
+                .read_line(&mut line)
+                .map_err(|e| format!("read {path:?}: {e}"))?;
+            if n_read == 0 {
+                return Err(format!("{path:?}: file shrank since it was opened"));
+            }
+            let text = line.trim();
+            if text.is_empty() || text.starts_with('#') {
+                continue;
+            }
+            let line_no = rows[lo + filled].1;
+            let xrow = x.row_mut(filled);
+            let mut fields = text.split(',');
+            for (j, slot) in xrow.iter_mut().enumerate() {
+                let field = fields.next().ok_or_else(|| {
+                    format!("{path:?} line {line_no}: ragged row (missing field {})", j + 1)
+                })?;
+                *slot = parse_field(field, path, line_no, j + 1)?;
+            }
+            let target = fields.next().ok_or_else(|| {
+                format!("{path:?} line {line_no}: ragged row (missing the target column)")
+            })?;
+            y[filled] = parse_field(target, path, line_no, self.d + 1)?;
+            if fields.next().is_some() {
+                return Err(format!(
+                    "{path:?} line {line_no}: ragged row (more than {} fields)",
+                    self.d + 1
+                ));
+            }
+            filled += 1;
+        }
+        Ok(())
+    }
+
+    fn read_binary_chunk(
+        &self,
+        lo: usize,
+        hi: usize,
+        x: &mut Mat,
+        y: &mut [f64],
+    ) -> Result<(), String> {
+        let path = &self.path;
+        let stride = self.d + 1;
+        let mut file = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+        file.seek(SeekFrom::Start((BINARY_HEADER + lo * stride * 8) as u64))
+            .map_err(|e| format!("seek {path:?}: {e}"))?;
+        let mut bytes = vec![0u8; (hi - lo) * stride * 8];
+        file.read_exact(&mut bytes)
+            .map_err(|e| format!("{path:?}: truncated binary payload: {e}"))?;
+        for (r, rec) in bytes.chunks_exact(stride * 8).enumerate() {
+            let xrow = x.row_mut(r);
+            for (j, v) in rec.chunks_exact(8).enumerate() {
+                let val = f64::from_le_bytes(v.try_into().unwrap());
+                if j < self.d {
+                    xrow[j] = val;
+                } else {
+                    y[r] = val;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write `(x, y)` as the binary format (shortest random-access form).
+    pub fn write_binary(path: impl AsRef<Path>, x: &Mat, y: &[f64]) -> Result<(), String> {
+        let path = path.as_ref();
+        assert_eq!(x.rows(), y.len(), "write_binary: row/target mismatch");
+        let mut bytes =
+            Vec::with_capacity(BINARY_HEADER + x.rows() * (x.cols() + 1) * 8);
+        bytes.extend_from_slice(BINARY_MAGIC);
+        bytes.extend_from_slice(&(x.rows() as u64).to_le_bytes());
+        bytes.extend_from_slice(&(x.cols() as u64).to_le_bytes());
+        for i in 0..x.rows() {
+            for &v in x.row(i) {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            bytes.extend_from_slice(&y[i].to_le_bytes());
+        }
+        std::fs::write(path, bytes).map_err(|e| format!("write {path:?}: {e}"))
+    }
+
+    /// Write `(x, y)` as CSV (features then target per line, shortest
+    /// round-trip float formatting).
+    pub fn write_csv(path: impl AsRef<Path>, x: &Mat, y: &[f64]) -> Result<(), String> {
+        let path = path.as_ref();
+        assert_eq!(x.rows(), y.len(), "write_csv: row/target mismatch");
+        let mut text = String::new();
+        for i in 0..x.rows() {
+            for v in x.row(i) {
+                text.push_str(&format!("{v:?},"));
+            }
+            text.push_str(&format!("{:?}\n", y[i]));
+        }
+        std::fs::write(path, text).map_err(|e| format!("write {path:?}: {e}"))
+    }
+}
+
+impl DataSource for FileSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn read_into(&self, lo: usize, hi: usize, x: &mut Mat, y: &mut [f64]) -> Result<(), String> {
+        check_read_shape(self, lo, hi, x, y)?;
+        if lo == hi {
+            return Ok(());
+        }
+        match &self.kind {
+            FileKind::Csv { rows } => self.read_csv_chunk(rows, lo, hi, x, y),
+            FileKind::Binary => self.read_binary_chunk(lo, hi, x, y),
+        }
+    }
+}
+
+fn parse_field(field: &str, path: &Path, line_no: usize, col: usize) -> Result<f64, String> {
+    field.trim().parse::<f64>().map_err(|_| {
+        format!("{path:?} line {line_no}, field {col}: cannot parse {:?} as a number", field.trim())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gzk-source-{}-{tag}", std::process::id()))
+    }
+
+    fn toy_data(n: usize, d: usize) -> (Mat, Vec<f64>) {
+        let mut rng = Rng::new(91);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn mat_source_chunked_reads_match_memory() {
+        let (x, y) = toy_data(23, 3);
+        let src = MatSource::new(&x, &y);
+        assert_eq!((src.len(), src.dim()), (23, 3));
+        for chunk in [1usize, 7, 23, 100] {
+            let mut got_x = Vec::new();
+            let mut got_y = Vec::new();
+            for (lo, hi) in chunk_ranges(src.len(), chunk) {
+                let (cx, cy) = src.read_range(lo, hi).unwrap();
+                got_x.extend_from_slice(cx.data());
+                got_y.extend_from_slice(&cy);
+            }
+            assert_eq!(&got_x, x.data(), "chunk {chunk}");
+            assert_eq!(got_y, y, "chunk {chunk}");
+        }
+        // unlabeled source reads zero targets
+        let un = MatSource::unlabeled(&x);
+        let (_, zy) = un.read_range(0, 5).unwrap();
+        assert!(zy.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn slice_offsets_reads() {
+        let (x, y) = toy_data(20, 2);
+        let src = MatSource::new(&x, &y);
+        let sl = SourceSlice::new(&src, 5, 15);
+        assert_eq!(sl.len(), 10);
+        let (sx, sy) = sl.read_range(2, 6).unwrap();
+        assert_eq!(sx.data(), x.row_block(7, 11).data());
+        assert_eq!(sy, &y[7..11]);
+    }
+
+    #[test]
+    fn synthetic_sources_are_deterministic_and_chunk_invariant() {
+        for name in ["elevation", "co2", "climate", "protein", "abalone"] {
+            let a = SyntheticSource::by_name(name, 40, 7).unwrap();
+            let b = SyntheticSource::by_name(name, 40, 7).unwrap();
+            let (xa, ya) = a.read_range(0, 40).unwrap();
+            let (xb, yb) = b.read_range(0, 40).unwrap();
+            assert_eq!(xa, xb, "{name}");
+            assert_eq!(ya, yb, "{name}");
+            // chunked reads re-assemble the one-shot read bit for bit
+            for chunk in [1usize, 7, 40] {
+                let mut got = Vec::new();
+                for (lo, hi) in chunk_ranges(40, chunk) {
+                    got.extend_from_slice(a.read_range(lo, hi).unwrap().0.data());
+                }
+                assert_eq!(&got, xa.data(), "{name} chunk {chunk}");
+            }
+            // a different seed gives different rows
+            let c = SyntheticSource::by_name(name, 40, 8).unwrap();
+            assert!(c.read_range(0, 40).unwrap().0.max_abs_diff(&xa) > 1e-9, "{name}");
+        }
+        assert!(SyntheticSource::by_name("no-such-set", 10, 1).is_err());
+    }
+
+    #[test]
+    fn synthetic_geometry_matches_the_paper_stand_ins() {
+        let el = SyntheticSource::elevation(200, 3);
+        let (x, y) = el.read_range(0, 200).unwrap();
+        for i in 0..200 {
+            let norm: f64 = x.row(i).iter().map(|v| v * v).sum();
+            assert!((norm - 1.0).abs() < 1e-10, "elevation points live on S^2");
+        }
+        let mean = y.iter().sum::<f64>() / 200.0;
+        let var = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 200.0;
+        assert!(var > 0.01, "elevation target has signal, var = {var}");
+
+        let cl = SyntheticSource::climate(150, 3);
+        let (x, _) = cl.read_range(0, 150).unwrap();
+        for i in 0..150 {
+            let s: f64 = x.row(i)[..3].iter().map(|v| v * v).sum();
+            assert!((s - 1.0).abs() < 1e-10);
+            assert!((0.0..=1.0).contains(&x.row(i)[3]));
+        }
+
+        // protein: analytic standardization keeps empirical moments close
+        let pr = SyntheticSource::protein(4000, 5);
+        let (x, y) = pr.read_range(0, 4000).unwrap();
+        for j in 0..9 {
+            let mean: f64 = (0..4000).map(|i| x[(i, j)]).sum::<f64>() / 4000.0;
+            let var: f64 = (0..4000).map(|i| x[(i, j)] * x[(i, j)]).sum::<f64>() / 4000.0;
+            assert!(mean.abs() < 0.1, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 0.15, "col {j} var {var}");
+        }
+        assert!(y.iter().all(|v| v.is_finite()));
+
+        // clustering: unit rows, labels in range, every class present
+        let ab = SyntheticSource::by_name("abalone", 90, 2).unwrap();
+        assert_eq!(ab.k(), 3);
+        let (x, y) = ab.read_range(0, 90).unwrap();
+        for i in 0..90 {
+            let norm: f64 = x.row(i).iter().map(|v| v * v).sum();
+            assert!((norm - 1.0).abs() < 1e-10);
+            assert!(y[i] == (i % 3) as f64);
+        }
+    }
+
+    #[test]
+    fn synthetic_rows_past_n_are_fresh_but_deterministic() {
+        // serve's held-out evaluation reads past the nominal n
+        let a = SyntheticSource::elevation(10, 4);
+        let (xa, _) = a.read_range(10, 20).unwrap();
+        let (xb, _) = SyntheticSource::elevation(10, 4).read_range(10, 20).unwrap();
+        assert_eq!(xa, xb);
+        let (x0, _) = a.read_range(0, 10).unwrap();
+        assert!(xa.max_abs_diff(&x0) > 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_and_chunked_reads() {
+        let (x, y) = toy_data(31, 4);
+        let path = tmp_path("roundtrip.csv");
+        FileSource::write_csv(&path, &x, &y).unwrap();
+        let src = FileSource::open(&path).unwrap();
+        assert_eq!((src.len(), src.dim()), (31, 4));
+        assert!(src.name().starts_with("file:"));
+        let (rx, ry) = src.read_range(0, 31).unwrap();
+        assert_eq!(rx, x, "shortest round-trip floats survive CSV");
+        assert_eq!(ry, y);
+        for chunk in [1usize, 5, 31] {
+            let mut got = Vec::new();
+            for (lo, hi) in chunk_ranges(31, chunk) {
+                got.extend_from_slice(src.read_range(lo, hi).unwrap().0.data());
+            }
+            assert_eq!(&got, x.data(), "chunk {chunk}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_skips_comments_and_blank_lines() {
+        let path = tmp_path("comments.csv");
+        std::fs::write(&path, "# header comment\n1.0,2.0,3.0\n\n4.0,5.0,6.0\n").unwrap();
+        let src = FileSource::open(&path).unwrap();
+        assert_eq!((src.len(), src.dim()), (2, 2));
+        let (x, y) = src.read_range(0, 2).unwrap();
+        assert_eq!(x.data(), &[1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(y, vec![3.0, 6.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn binary_roundtrip_and_random_access() {
+        let (x, y) = toy_data(17, 3);
+        let path = tmp_path("roundtrip.bin");
+        FileSource::write_binary(&path, &x, &y).unwrap();
+        let src = FileSource::open(&path).unwrap();
+        assert_eq!((src.len(), src.dim()), (17, 3));
+        let (rx, ry) = src.read_range(0, 17).unwrap();
+        assert_eq!(rx, x, "binary floats are bit-exact");
+        assert_eq!(ry, y);
+        // random access: a middle chunk matches the in-memory rows
+        let (mx, my) = src.read_range(5, 9).unwrap();
+        assert_eq!(mx, x.row_block(5, 9));
+        assert_eq!(my, &y[5..9]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_csv_is_a_clean_error() {
+        // ragged row: fails fast at open, naming the line
+        let path = tmp_path("ragged.csv");
+        std::fs::write(&path, "1.0,2.0,3.0\n4.0,5.0\n").unwrap();
+        let err = FileSource::open(&path).unwrap_err();
+        assert!(err.contains("line 2") && err.contains("ragged"), "{err}");
+        let _ = std::fs::remove_file(&path);
+
+        // non-numeric field: open succeeds (offsets only), read names the cell
+        let path = tmp_path("nonnum.csv");
+        std::fs::write(&path, "1.0,2.0,3.0\n4.0,oops,6.0\n").unwrap();
+        let src = FileSource::open(&path).unwrap();
+        let err = src.read_range(0, 2).unwrap_err();
+        assert!(err.contains("line 2") && err.contains("oops"), "{err}");
+        // ...but the clean rows before it still read
+        assert!(src.read_range(0, 1).is_ok());
+        let _ = std::fs::remove_file(&path);
+
+        // a single-column file has no feature/target split
+        let path = tmp_path("thin.csv");
+        std::fs::write(&path, "1.0\n2.0\n").unwrap();
+        let err = FileSource::open(&path).unwrap_err();
+        assert!(err.contains("target"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_binary_is_a_clean_error() {
+        let (x, y) = toy_data(6, 2);
+        let path = tmp_path("trunc.bin");
+        FileSource::write_binary(&path, &x, &y).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 9]).unwrap();
+        let err = FileSource::open(&path).unwrap_err();
+        assert!(err.contains("truncated") || err.contains("corrupt"), "{err}");
+        // a header alone (no payload) is also caught
+        std::fs::write(&path, &full[..BINARY_HEADER]).unwrap();
+        assert!(FileSource::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn interleaved_split_partitions_and_is_chunk_invariant() {
+        let x = Mat::from_fn(23, 2, |i, j| (i * 2 + j) as f64);
+        let y: Vec<f64> = (0..23).map(|i| i as f64).collect();
+        let src = MatSource::new(&x, &y);
+        for period in [2usize, 3, 10] {
+            let train = InterleavedSplit::train(&src, period);
+            let test = InterleavedSplit::test(&src, period);
+            assert_eq!(train.len() + test.len(), 23, "period {period}");
+            assert_eq!(test.len(), 23 / period);
+            // the two views partition the rows exactly (checked via y,
+            // which enumerates the underlying row index)
+            let (_, ty) = test.read_range(0, test.len()).unwrap();
+            let (_, ny) = train.read_range(0, train.len()).unwrap();
+            let mut all: Vec<f64> = ty.iter().chain(ny.iter()).cloned().collect();
+            all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for (i, v) in all.iter().enumerate() {
+                assert_eq!(*v, i as f64, "period {period}");
+            }
+            // test rows are spread across the range, not a contiguous tail
+            assert_eq!(ty[0], (period - 1) as f64);
+            // chunked reads re-assemble the one-shot read bit for bit
+            for chunk in [1usize, 4, 23] {
+                let mut got = Vec::new();
+                for (lo, hi) in chunk_ranges(train.len(), chunk) {
+                    got.extend_from_slice(&train.read_range(lo, hi).unwrap().1);
+                }
+                assert_eq!(got, ny, "period {period} chunk {chunk}");
+            }
+            // rows stay paired with their targets
+            let (tx, ty2) = train.read_range(0, train.len()).unwrap();
+            for i in 0..train.len() {
+                assert_eq!(tx[(i, 0)], ty2[i] * 2.0, "period {period}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_rows_pulls_exact_rows() {
+        let (x, y) = toy_data(12, 3);
+        let src = MatSource::new(&x, &y);
+        let g = gather_rows(&src, &[3, 0, 11, 3]).unwrap();
+        assert_eq!(g.rows(), 4);
+        assert_eq!(g.row(0), x.row(3));
+        assert_eq!(g.row(1), x.row(0));
+        assert_eq!(g.row(2), x.row(11));
+        assert_eq!(g.row(3), x.row(3));
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        let bounds: Vec<(usize, usize)> = chunk_ranges(10, 4).collect();
+        assert_eq!(bounds, vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(chunk_ranges(0, 4).count(), 0);
+        assert_eq!(chunk_ranges(3, 0).collect::<Vec<_>>(), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+}

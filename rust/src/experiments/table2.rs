@@ -3,21 +3,31 @@
 //! method in the featurizer registry at feature dimension m = 1024.
 //!
 //! Reported per (dataset, method): test MSE and featurization wall time —
-//! the same two columns as the paper. Datasets are the synthetic
-//! stand-ins of `data::synthetic` (DESIGN.md §6); `scale` subsamples each
-//! dataset to scale * n_paper rows to keep bench wall time sane.
+//! the same two columns as the paper. Datasets are the lazily generated
+//! synthetic stand-ins of [`SyntheticSource`] (DESIGN.md §6), and the
+//! whole experiment is a consumer of the chunked `data::pipeline`: train
+//! statistics, validation-based lambda selection and test MSE all stream
+//! chunk by chunk, so the n x d dataset and the n x m feature matrix are
+//! **never materialized** — this is the out-of-core path that lets
+//! `--scale 1` run the full climate set (n = 223,656). `scale` subsamples
+//! each dataset to scale * n_paper rows to keep default bench wall time
+//! sane.
 //!
-//! Methods come from [`Method::registry`], each built through
-//! [`FeatureSpec::build_with_data`] — registering a new featurizer adds a
-//! row to this table with no changes here.
+//! Methods come from [`Method::registry`], each fitted through
+//! [`FittedMap::fit_source`] — registering a new featurizer adds a row to
+//! this table with no changes here (the data-dependent Nystrom baseline
+//! gathers its landmark sample by random access).
 
 use crate::bench::Table;
-use crate::data::{self, Dataset};
+use crate::data::{gather_rows, pipeline, DataSource, SourceSlice, SyntheticSource};
 use crate::exec::Pool;
-use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
-use crate::krr::{mse, RidgeStats};
+use crate::features::{FeatureSpec, KernelSpec, Method};
+use crate::krr::FeatureRidge;
 use crate::linalg::Mat;
-use std::time::Instant;
+use crate::model::FittedMap;
+
+/// Chunk height used by the streamed fits below.
+const CHUNK_ROWS: usize = 8192;
 
 pub struct Table2Row {
     pub dataset: &'static str,
@@ -28,30 +38,32 @@ pub struct Table2Row {
 }
 
 /// Dataset geometry of the paper's Table 2 (n before scaling).
-pub const PAPER_SIZES: [(&str, usize); 4] =
-    [("elevation", 64_800), ("co2", 146_040), ("climate", 223_656), ("protein", 45_730)];
+pub const PAPER_SIZES: [(&str, usize); 4] = crate::data::REGRESSION_SIZES;
 
-pub fn make_dataset(name: &str, scale: f64, seed: u64) -> Dataset {
+/// The lazy source for one Table-2 dataset at `scale` of its paper size.
+pub fn make_source(name: &str, scale: f64, seed: u64) -> SyntheticSource {
     let n_full = PAPER_SIZES.iter().find(|(n, _)| *n == name).expect("dataset").1;
     let n = ((n_full as f64 * scale) as usize).max(500);
-    match name {
-        "elevation" => data::elevation(n, seed),
-        "co2" => data::co2(n, seed),
-        "climate" => data::climate(n, seed),
-        "protein" => data::protein(n, seed),
-        _ => unreachable!(),
-    }
+    SyntheticSource::by_name(name, n, seed).expect("registered regression dataset")
 }
 
-/// Bandwidth heuristic: median pairwise distance on a probe subsample.
-pub fn median_bandwidth(x: &Mat, seed: u64) -> f64 {
+/// A uniform probe sample of up to 500 rows — the only rows this
+/// experiment ever gathers (bandwidth heuristic + Gegenbauer tuning).
+fn probe_rows(src: &dyn DataSource, seed: u64) -> Mat {
+    let n = src.len();
+    let n_probe = n.min(500);
     let mut rng = crate::rng::Rng::new(seed);
-    let n = x.rows().min(500);
-    let idx = rng.sample_indices(x.rows(), n);
+    let idx = rng.sample_indices(n, n_probe);
+    gather_rows(src, &idx).expect("probe rows")
+}
+
+/// Bandwidth heuristic: median pairwise distance on the probe sample.
+pub fn median_bandwidth(probe: &Mat) -> f64 {
+    let n = probe.rows();
     let mut d2 = Vec::with_capacity(n * (n - 1) / 2);
     for i in 0..n {
         for j in 0..i {
-            let (a, b) = (x.row(idx[i]), x.row(idx[j]));
+            let (a, b) = (probe.row(i), probe.row(j));
             d2.push(a.iter().zip(b).map(|(&u, &v)| (u - v) * (u - v)).sum::<f64>());
         }
     }
@@ -61,71 +73,111 @@ pub fn median_bandwidth(x: &Mat, seed: u64) -> f64 {
 
 const LAMBDA_GRID: [f64; 5] = [1e-6, 1e-4, 1e-2, 1e0, 1e2];
 
-/// Fit on train (with lambda chosen on a validation split), evaluate MSE on
-/// test. Returns (mse, fit_secs).
-fn fit_eval(z_tr: &Mat, y_tr: &[f64], z_te: &Mat, y_te: &[f64]) -> (f64, f64) {
-    let t0 = Instant::now();
-    let n = z_tr.rows();
-    let n_val = (n / 10).max(1);
-    let n_fit = n - n_val;
-    let mut stats_fit = RidgeStats::new(z_tr.cols());
-    stats_fit.absorb(&z_tr.row_block(0, n_fit), &y_tr[..n_fit]);
-    let z_val = z_tr.row_block(n_fit, n);
-    let mut best = (f64::INFINITY, LAMBDA_GRID[0]);
-    for &lam in &LAMBDA_GRID {
-        let model = stats_fit.solve(lam * n_fit as f64 / 1000.0);
-        let e = mse(&model.predict(&z_val), &y_tr[n_fit..]);
-        if e < best.0 {
-            best = (e, lam);
-        }
-    }
-    // refit on all training rows at the chosen lambda
-    let mut stats = stats_fit;
-    stats.absorb(&z_val, &y_tr[n_fit..]);
-    let model = stats.solve(best.1 * n as f64 / 1000.0);
-    let fit_secs = t0.elapsed().as_secs_f64();
-    (mse(&model.predict(z_te), y_te), fit_secs)
-}
-
 /// Gegenbauer truncation knobs for a dataset: enough degrees for the
-/// bandwidth-scaled data radius, s = 2 radial channels at moderate d.
-fn gegenbauer_tuning(x_tr: &Mat, bw: f64) -> (usize, usize) {
-    let d = x_tr.cols();
-    let r_max = (0..x_tr.rows())
-        .map(|i| x_tr.row(i).iter().map(|v| v * v).sum::<f64>().sqrt() / bw)
+/// bandwidth-scaled data radius (estimated on the probe sample), s = 2
+/// radial channels at moderate d.
+fn gegenbauer_tuning(probe: &Mat, n_total: usize, bw: f64) -> (usize, usize) {
+    let d = probe.cols();
+    let r_max = (0..probe.rows())
+        .map(|i| probe.row(i).iter().map(|v| v * v).sum::<f64>().sqrt() / bw)
         .fold(0.0f64, f64::max);
     let s = if d > 16 { 1 } else { 2 };
-    let q = crate::features::radial::suggest_q(r_max.min(3.0), d, x_tr.rows(), 1e-3, 0.5)
+    let q = crate::features::radial::suggest_q(r_max.min(3.0), d, n_total, 1e-3, 0.5)
         .min(16)
         .max(4);
     (q, s)
 }
 
+/// Streamed fit + eval for one fitted map: single-pass sufficient
+/// statistics over the fit rows, lambda selection on a streamed
+/// validation slice, a final absorb of that slice, then streamed test
+/// MSE. Returns (mse, featurize_secs, fit_secs). Peak feature memory:
+/// `CHUNK_ROWS x F`.
+fn fit_eval_streamed(
+    map: &FittedMap,
+    train: &SourceSlice<'_>,
+    test: &SourceSlice<'_>,
+) -> Result<(f64, f64, f64), String> {
+    let t0 = std::time::Instant::now();
+    let pool = Pool::global();
+    let n = train.len();
+    let n_val = (n / 10).max(1);
+    let n_fit = n - n_val;
+    let fit_slice = SourceSlice::new(train, 0, n_fit);
+    let val_slice = SourceSlice::new(train, n_fit, n);
+
+    let f_dim = map.feature_dim();
+    let (mut stats, info) =
+        pipeline::ridge_stats(map.featurizer(), &fit_slice, CHUNK_ROWS, &pool)?;
+    let mut featurize_secs = info.featurize_secs;
+
+    // one model per grid lambda, all evaluated in a single streamed pass
+    // over the validation slice (the shared pipeline chunk loop — same
+    // reused scratch as the fit, no per-chunk feature matrix)
+    let models: Vec<FeatureRidge> =
+        LAMBDA_GRID.iter().map(|&lam| stats.solve(lam * n_fit as f64 / 1000.0)).collect();
+    let mut val_err = [0.0f64; LAMBDA_GRID.len()];
+    let vinfo =
+        pipeline::for_each_chunk(map.featurizer(), &val_slice, CHUNK_ROWS, &pool, |_, y, z| {
+            for (m, err) in models.iter().zip(val_err.iter_mut()) {
+                for (row, &t) in z.chunks_exact(f_dim).zip(y) {
+                    let p = m.predict_row(row);
+                    *err += (p - t) * (p - t);
+                }
+            }
+            // absorb the validation rows for the final refit while the
+            // features are still in hand
+            stats.absorb_flat_with(z, y, &pool);
+        })?;
+    featurize_secs += vinfo.featurize_secs;
+    let best = LAMBDA_GRID
+        .iter()
+        .zip(val_err)
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(&lam, _)| lam)
+        .unwrap();
+    let model = stats.solve(best * n as f64 / 1000.0);
+    let fit_secs = t0.elapsed().as_secs_f64() - featurize_secs;
+
+    // streamed test MSE through the same chunk loop. Its featurize time
+    // is deliberately NOT folded into the reported column: that column
+    // has always meant *training* featurization (the paper's comparison),
+    // so cross-PR bench tracking stays comparable.
+    let mut test_sq = 0.0;
+    pipeline::for_each_chunk(map.featurizer(), test, CHUNK_ROWS, &pool, |_, y, z| {
+        for (row, &t) in z.chunks_exact(f_dim).zip(y) {
+            let p = model.predict_row(row);
+            test_sq += (p - t) * (p - t);
+        }
+    })?;
+    Ok((test_sq / test.len() as f64, featurize_secs, fit_secs.max(0.0)))
+}
+
 /// Run one dataset through every registered method at feature budget
-/// `m_features`.
+/// `m_features`, fully streamed.
 pub fn run_dataset(name: &'static str, scale: f64, m_features: usize, seed: u64) -> Vec<Table2Row> {
-    let ds = make_dataset(name, scale, seed);
-    let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed ^ 0x5EED);
-    let bw = median_bandwidth(&x_tr, seed);
+    let src = make_source(name, scale, seed);
+    let n = src.len();
+    let n_test = (n / 10).max(1);
+    let train = SourceSlice::new(&src, 0, n - n_test);
+    let test = SourceSlice::new(&src, n - n_test, n);
+    let probe = probe_rows(&train, seed ^ 0x5EED);
+    let bw = median_bandwidth(&probe);
     let kernel = KernelSpec::Gaussian { bandwidth: bw };
-    let (q, s) = gegenbauer_tuning(&x_tr, bw);
+    let (q, s) = gegenbauer_tuning(&probe, train.len(), bw);
 
     let mut rows = Vec::new();
     for (i, method) in Method::registry().into_iter().enumerate() {
         let spec =
-            FeatureSpec::new(kernel.clone(), method.tuned(q, s), m_features, seed + 1 + i as u64);
-        let feat = spec.build_with_data(&x_tr);
-        // bulk featurization draws from the global pool (bit-identical to
-        // serial, so the reported MSE is thread-count independent)
-        let pool = Pool::global();
-        let t0 = Instant::now();
-        let z_tr = feat.featurize_par(&x_tr, &pool);
-        let featurize_secs = t0.elapsed().as_secs_f64();
-        let z_te = feat.featurize_par(&x_te, &pool);
-        let (err, fit_secs) = fit_eval(&z_tr, &y_tr, &z_te, &y_te);
+            FeatureSpec::new(kernel.clone(), method.tuned(q, s), m_features, seed + 1 + i as u64)
+                .bind(src.dim());
+        let map = FittedMap::fit_source(spec, &train).expect("registry method fits");
+        let method_name = map.featurizer().name();
+        let (err, featurize_secs, fit_secs) =
+            fit_eval_streamed(&map, &train, &test).expect("streamed fit");
         rows.push(Table2Row {
             dataset: name,
-            method: feat.name(),
+            method: method_name,
             mse: err,
             featurize_secs,
             fit_secs,
@@ -177,8 +229,9 @@ mod tests {
 
     #[test]
     fn bandwidth_heuristic_positive() {
-        let ds = make_dataset("protein", 0.02, 1);
-        let bw = median_bandwidth(&ds.x, 1);
+        let src = make_source("protein", 0.02, 1);
+        let probe = probe_rows(&src, 1);
+        let bw = median_bandwidth(&probe);
         assert!(bw > 0.1 && bw < 100.0, "{bw}");
     }
 }

@@ -5,15 +5,26 @@
 //! on S^{d-1} and the Gaussian kernel becomes a zonal kernel — the
 //! best-case regime for Gegenbauer features at low d.
 //!
-//! Methods come from [`Method::registry`], each built through
-//! [`FeatureSpec::build_with_data`].
+//! The experiment is a consumer of the chunked data pipeline: rows come
+//! from a lazily generated [`SyntheticSource`] and the fit is
+//! `data::pipeline::kmeans_chunked` (reservoir init + streaming absorb +
+//! a streamed objective pass), so neither the n x d dataset nor the n x m
+//! feature matrix is ever materialized. The reported objective is the
+//! average squared distance to the assigned centroid — the quantity of
+//! the paper's Table 3 — for the streaming fit.
+//!
+//! Methods come from [`Method::registry`], each fitted through
+//! [`FittedMap::fit_source`].
 
 use crate::bench::Table;
-use crate::data::{clustering_dataset, ClusteringSpec, CLUSTERING_SPECS};
+use crate::data::{pipeline, SyntheticSource, CLUSTERING_SPECS};
 use crate::exec::Pool;
-use crate::features::{FeatureSpec, Featurizer, KernelSpec, Method};
-use crate::kmeans::kmeans;
+use crate::features::{FeatureSpec, KernelSpec, Method};
+use crate::model::FittedMap;
 use std::time::Instant;
+
+/// Chunk height used by the streamed fits below.
+const CHUNK_ROWS: usize = 8192;
 
 pub struct Table3Row {
     pub dataset: &'static str,
@@ -23,18 +34,13 @@ pub struct Table3Row {
 }
 
 pub fn run_dataset(
-    spec: ClusteringSpec,
+    spec: crate::data::ClusteringSpec,
     scale: f64,
     m_features: usize,
     seed: u64,
 ) -> Vec<Table3Row> {
-    let scaled = ClusteringSpec {
-        name: spec.name,
-        n: ((spec.n as f64 * scale) as usize).max(50 * spec.k),
-        d: spec.d,
-        k: spec.k,
-    };
-    let ds = clustering_dataset(scaled, seed);
+    let n = ((spec.n as f64 * scale) as usize).max(50 * spec.k);
+    let src = SyntheticSource::clustering(spec.name, n, spec.d, spec.k, seed);
     let d = spec.d;
     // unit-norm inputs; the paper uses a fixed unit-bandwidth Gaussian
     let kernel = KernelSpec::Gaussian { bandwidth: 1.0 };
@@ -45,16 +51,26 @@ pub fn run_dataset(
     let mut rows = Vec::new();
     for (i, method) in Method::registry().into_iter().enumerate() {
         let fspec =
-            FeatureSpec::new(kernel.clone(), method.tuned(q, s), m_features, seed + 1 + i as u64);
-        let feat = fspec.build_with_data(&ds.x);
+            FeatureSpec::new(kernel.clone(), method.tuned(q, s), m_features, seed + 1 + i as u64)
+                .bind(d);
+        let map = FittedMap::fit_source(fspec, &src).expect("registry method fits");
+        let method_name = map.featurizer().name();
         let t0 = Instant::now();
-        // featurize + Lloyd scans draw from the global pool (bit-identical
-        // to serial, so the reported objective is thread-count independent)
-        let z = feat.featurize_par(&ds.x, &Pool::global());
-        let res = kmeans(&z, spec.k, 50, seed ^ 0xB00);
+        // per-chunk featurize + absorb draw from the global pool
+        // (bit-identical to serial, so the reported objective is
+        // thread-count independent)
+        let (res, _) = pipeline::kmeans_chunked(
+            map.featurizer(),
+            &src,
+            spec.k,
+            CHUNK_ROWS,
+            seed ^ 0xB00,
+            &Pool::global(),
+        )
+        .expect("streamed kmeans fit");
         rows.push(Table3Row {
             dataset: spec.name,
-            method: feat.name(),
+            method: method_name,
             objective: res.objective,
             secs: t0.elapsed().as_secs_f64(),
         });
@@ -72,7 +88,7 @@ pub fn run_all(scale: f64, m_features: usize, seed: u64) -> Vec<Table3Row> {
 }
 
 pub fn print(rows: &[Table3Row]) {
-    println!("\nTable 3 — kernel k-means objective with the Gaussian kernel\n");
+    println!("\nTable 3 — kernel k-means objective with the Gaussian kernel (streamed fit)\n");
     let mut t = Table::new(vec!["dataset", "method", "objective", "time"]);
     for r in rows {
         t.row(vec![

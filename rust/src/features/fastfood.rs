@@ -96,18 +96,16 @@ impl Featurizer for FastFoodFeatures {
         self.f_dim
     }
 
-    fn featurize(&self, x: &Mat) -> Mat {
+    fn featurize_into(&self, x: &Mat, out: &mut [f64]) {
         assert_eq!(x.cols(), self.d);
-        let n = x.rows();
+        assert_eq!(out.len(), x.rows() * self.f_dim, "fastfood: featurize_into size");
         let scale = (2.0 / self.f_dim as f64).sqrt();
-        let mut out = Mat::zeros(n, self.f_dim);
         let mut buf = vec![0.0; self.dp];
-        for i in 0..n {
-            let xr = x.row(i).to_vec();
-            let orow = out.row_mut(i);
+        for (i, orow) in out.chunks_exact_mut(self.f_dim).enumerate() {
+            let xr = x.row(i);
             for blk in 0..self.blocks {
                 buf.fill(0.0);
-                buf[..self.d].copy_from_slice(&xr);
+                buf[..self.d].copy_from_slice(xr);
                 self.apply_block(blk, &mut buf);
                 for j in 0..self.dp {
                     let col = blk * self.dp + j;
@@ -117,7 +115,6 @@ impl Featurizer for FastFoodFeatures {
                 }
             }
         }
-        out
     }
 
     fn name(&self) -> &'static str {

@@ -145,41 +145,35 @@ impl Featurizer for GegenbauerFeatures {
         self.w.rows() * self.table.s
     }
 
-    fn featurize(&self, x: &Mat) -> Mat {
-        let mut out = Mat::zeros(x.rows(), self.dim());
-        self.featurize_into(x, &mut out);
-        out
-    }
-
-    /// Allocation-free override: streams rows through the shared scratch
-    /// buffers instead of materializing an intermediate matrix.
-    fn featurize_into(&self, x: &Mat, out: &mut Mat) {
-        let m = self.w.rows();
-        let s = self.table.s;
+    /// The primary batch map: streams rows through the shared scratch
+    /// buffers straight into the caller's buffer (the chunk hot path never
+    /// materializes an intermediate matrix).
+    fn featurize_into(&self, x: &Mat, out: &mut [f64]) {
+        let cols = self.dim();
         assert_eq!(x.cols(), self.table.d);
-        assert_eq!(out.rows(), x.rows());
-        assert_eq!(out.cols(), m * s);
-        let mut t_buf = vec![0.0; m];
-        let mut r_buf = vec![0.0; (self.table.q + 1) * s];
-        for i in 0..x.rows() {
-            self.featurize_row(x.row(i), out.row_mut(i), &mut t_buf, &mut r_buf);
+        assert_eq!(out.len(), x.rows() * cols);
+        let mut t_buf = vec![0.0; self.w.rows()];
+        let mut r_buf = vec![0.0; (self.table.q + 1) * self.table.s];
+        for (i, z_row) in out.chunks_exact_mut(cols).enumerate() {
+            self.featurize_row(x.row(i), z_row, &mut t_buf, &mut r_buf);
         }
     }
 
     /// Override of the chunk-parallel default: per-worker scratch buffers
-    /// write straight into the shared output (no per-chunk matrices).
-    /// Bit-identical to the sequential path — each row is independent —
-    /// and, like the default, an explicit pool is always honored (no
-    /// small-`n` serial fallback).
-    fn featurize_par(&self, x: &Mat, pool: &Pool) -> Mat {
+    /// write straight into the shared output without even the row-block
+    /// copy of `x` the default makes. Bit-identical to the sequential
+    /// path — each row is independent — and, like the default, an explicit
+    /// pool is always honored (no small-`n` serial fallback).
+    fn featurize_par_into(&self, x: &Mat, out: &mut [f64], pool: &Pool) {
         let n = x.rows();
-        if pool.threads() <= 1 || n <= 1 {
-            return self.featurize(x);
-        }
-        assert_eq!(x.cols(), self.table.d);
         let cols = self.dim();
-        let mut out = Mat::zeros(n, cols);
-        pool.par_chunks(n, out.data_mut(), |lo, hi, block| {
+        assert_eq!(x.cols(), self.table.d);
+        assert_eq!(out.len(), n * cols);
+        if pool.threads() <= 1 || n <= 1 {
+            self.featurize_into(x, out);
+            return;
+        }
+        pool.par_chunks(n, out, |lo, hi, block| {
             let mut t_buf = vec![0.0; self.w.rows()];
             let mut r_buf = vec![0.0; (self.table.q + 1) * self.table.s];
             for (r, i) in (lo..hi).enumerate() {
@@ -191,7 +185,6 @@ impl Featurizer for GegenbauerFeatures {
                 );
             }
         });
-        out
     }
 
     fn name(&self) -> &'static str {

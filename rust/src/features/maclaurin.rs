@@ -65,15 +65,14 @@ impl Featurizer for MaclaurinFeatures {
         self.degrees.len()
     }
 
-    fn featurize(&self, x: &Mat) -> Mat {
+    fn featurize_into(&self, x: &Mat, out: &mut [f64]) {
         assert_eq!(x.cols(), self.d);
-        let n = x.rows();
         let f_dim = self.dim();
+        assert_eq!(out.len(), x.rows() * f_dim, "maclaurin: featurize_into size");
         let inv_sqrt_f = 1.0 / (f_dim as f64).sqrt();
         let inv_bw = 1.0 / self.bandwidth;
-        let mut out = Mat::zeros(n, f_dim);
         let mut xs = vec![0.0; self.d];
-        for i in 0..n {
+        for (i, orow) in out.chunks_exact_mut(f_dim).enumerate() {
             // scale by bandwidth and compute the Gaussian envelope
             let xr = x.row(i);
             let mut sq = 0.0;
@@ -82,7 +81,6 @@ impl Featurizer for MaclaurinFeatures {
                 sq += xs[j] * xs[j];
             }
             let env = (-0.5 * sq).exp();
-            let orow = out.row_mut(i);
             for (f, orow_f) in orow.iter_mut().enumerate() {
                 let deg = self.degrees[f];
                 let off = self.omega_off[f];
@@ -100,7 +98,6 @@ impl Featurizer for MaclaurinFeatures {
             }
         }
         let _ = self.max_degree;
-        out
     }
 
     fn name(&self) -> &'static str {

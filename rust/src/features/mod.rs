@@ -35,44 +35,60 @@ use crate::linalg::Mat;
 /// worker threads by the coordinator and shared across chunk-parallel
 /// featurization, so every implementation must be freely shareable.
 ///
-/// The two batch variants have default implementations in terms of
-/// [`featurize`](Featurizer::featurize), so a new featurizer only has to
-/// supply the per-batch map; implementations with a cheaper path (e.g. the
-/// Gegenbauer hot loop) override them.
+/// The **required** batch method is [`featurize_into`]: write the feature
+/// rows straight into a caller-owned buffer. That direction matters — the
+/// out-of-core pipeline (`data::pipeline`) streams chunks of the dataset
+/// through one chunk-sized scratch buffer, so the per-method impls must
+/// not materialize an intermediate n x F matrix of their own.
+/// [`featurize`](Featurizer::featurize) and the parallel variants are
+/// derived from it.
+///
+/// [`featurize_into`]: Featurizer::featurize_into
 pub trait Featurizer: Send + Sync {
     /// Output feature dimension F.
     fn dim(&self) -> usize;
 
-    /// Map points (n x d) to features (n x F).
-    fn featurize(&self, x: &Mat) -> Mat;
+    /// Write the features of the n rows of `x` into `out`, row-major —
+    /// `out.len()` must equal `n * dim()`. This is the one method a
+    /// featurizer must implement, and the chunk hot path: no intermediate
+    /// feature matrix may be allocated.
+    fn featurize_into(&self, x: &Mat, out: &mut [f64]);
 
-    /// Zero-copy variant: featurize into a preallocated (n x F) buffer.
-    fn featurize_into(&self, x: &Mat, out: &mut Mat) {
-        let z = self.featurize(x);
-        assert_eq!(out.rows(), z.rows(), "{}: featurize_into row mismatch", self.name());
-        assert_eq!(out.cols(), z.cols(), "{}: featurize_into col mismatch", self.name());
-        out.data_mut().copy_from_slice(z.data());
+    /// Map points (n x d) to features (n x F). Derived: allocates the
+    /// output and delegates to [`featurize_into`](Featurizer::featurize_into).
+    fn featurize(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows(), self.dim());
+        self.featurize_into(x, out.data_mut());
+        out
     }
 
-    /// Chunk-parallel batch featurization: scatters row ranges across the
-    /// pool ([`Pool::par_chunks`]). Bit-identical to the sequential path
-    /// because every featurizer maps rows independently.
+    /// Chunk-parallel [`featurize_into`](Featurizer::featurize_into):
+    /// scatters row ranges across the pool ([`Pool::par_chunks`]), each
+    /// worker writing its block of `out` directly. Bit-identical to the
+    /// sequential path because every featurizer maps rows independently.
     ///
     /// An explicit pool is **always honored**: there is no small-`n`
     /// fallback that silently serializes (a pool of `t` threads on `n < t`
     /// rows simply runs `n` workers), so pool bugs cannot hide behind
     /// small test inputs. Only a single-thread pool takes the serial
     /// path — which is the same computation by construction.
-    fn featurize_par(&self, x: &Mat, pool: &Pool) -> Mat {
+    fn featurize_par_into(&self, x: &Mat, out: &mut [f64], pool: &Pool) {
         let n = x.rows();
+        assert_eq!(out.len(), n * self.dim(), "{}: featurize_par_into size", self.name());
         if pool.threads() <= 1 || n <= 1 {
-            return self.featurize(x);
+            self.featurize_into(x, out);
+            return;
         }
-        let mut out = Mat::zeros(n, self.dim());
-        pool.par_chunks(n, out.data_mut(), |lo, hi, block| {
-            let z = self.featurize(&x.row_block(lo, hi));
-            block.copy_from_slice(z.data());
+        pool.par_chunks(n, out, |lo, hi, block| {
+            self.featurize_into(&x.row_block(lo, hi), block);
         });
+    }
+
+    /// Allocating variant of
+    /// [`featurize_par_into`](Featurizer::featurize_par_into).
+    fn featurize_par(&self, x: &Mat, pool: &Pool) -> Mat {
+        let mut out = Mat::zeros(x.rows(), self.dim());
+        self.featurize_par_into(x, out.data_mut(), pool);
         out
     }
 

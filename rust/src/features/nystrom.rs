@@ -9,6 +9,7 @@
 //! recursive scheme).
 
 use super::Featurizer;
+use crate::data::{gather_rows, DataSource, MatSource};
 use crate::kernels::Kernel;
 use crate::linalg::{Cholesky, Mat};
 use crate::rng::Rng;
@@ -22,14 +23,33 @@ pub struct NystromFeatures {
 }
 
 impl NystromFeatures {
-    /// Fit on the training set: two-level approximate ridge-leverage-score
-    /// sampling (the core step of MM17's recursive scheme). To keep the fit
-    /// at O(m^3) instead of O(n m^2), leverage scores are estimated on a
-    /// candidate pool of min(n, 4m) uniform rows against a pilot of
-    /// min(n, m) — the recursive-halving trick applied once.
+    /// Fit on an in-memory training set: delegates to
+    /// [`fit_source`](NystromFeatures::fit_source) over a borrowed
+    /// [`MatSource`] — the in-memory and out-of-core fits are the same
+    /// code path (and therefore bit-identical for the same rows).
     pub fn fit(kernel: Kernel, x_train: &Mat, m: usize, lambda: f64, seed: u64) -> Self {
-        let n = x_train.rows();
-        let d = x_train.cols();
+        Self::fit_source(kernel, &MatSource::unlabeled(x_train), m, lambda, seed)
+            .expect("in-memory source reads cannot fail")
+    }
+
+    /// Fit from any [`DataSource`]: two-level approximate
+    /// ridge-leverage-score sampling (the core step of MM17's recursive
+    /// scheme). Leverage scores are estimated on a candidate pool of
+    /// min(n, 4m) uniform rows against a pilot of min(n, m) — the
+    /// recursive-halving trick applied once. Only the candidate and pilot
+    /// rows are ever materialized (O(m · d)), so a Nystrom fit over an
+    /// out-of-core source never holds the n x d dataset.
+    pub fn fit_source(
+        kernel: Kernel,
+        src: &dyn DataSource,
+        m: usize,
+        lambda: f64,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let n = src.len();
+        if n == 0 {
+            return Err("nystrom: cannot fit on an empty source".to_string());
+        }
         let mut rng = Rng::new(seed).fork(0x9957);
         let m = m.min(n);
 
@@ -40,10 +60,10 @@ impl NystromFeatures {
         // level 0: uniform pilot of size min(n, m)
         let m0 = m.min(n);
         let idx0 = rng.sample_indices(n, m0);
-        let mut pilot = Mat::zeros(m0, d);
-        for (r, &i) in idx0.iter().enumerate() {
-            pilot.row_mut(r).copy_from_slice(x_train.row(i));
-        }
+
+        // the only rows the fit touches: candidates + pilot, O(m) of them
+        let cand = gather_rows(src, &cand_idx)?;
+        let pilot = gather_rows(src, &idx0)?;
 
         // approximate ridge leverage scores of the candidates against the
         // pilot: tau_i ~ (1/lambda)(k(x_i,x_i) - k_i^T (K_pp + l I)^{-1} k_i)
@@ -52,13 +72,13 @@ impl NystromFeatures {
         let (chol_p, _) = Cholesky::new_with_jitter(&kpp, 1e-10);
         let mut scores = Vec::with_capacity(n_cand);
         let mut ki = vec![0.0; m0];
-        for &ci in &cand_idx {
+        for c in 0..n_cand {
             for (j, kij) in ki.iter_mut().enumerate() {
-                *kij = kernel.eval(x_train.row(ci), pilot.row(j));
+                *kij = kernel.eval(cand.row(c), pilot.row(j));
             }
             let sol = chol_p.solve(&ki);
             let quad: f64 = ki.iter().zip(&sol).map(|(&a, &b)| a * b).sum();
-            let kii = kernel.eval(x_train.row(ci), x_train.row(ci));
+            let kii = kernel.eval(cand.row(c), cand.row(c));
             scores.push(((kii - quad) / lambda.max(1e-10)).max(1e-12));
         }
 
@@ -78,15 +98,15 @@ impl NystromFeatures {
             }
             if !used[pick] {
                 used[pick] = true;
-                chosen.push(cand_idx[pick]);
+                chosen.push(pick);
             }
         }
-        let mut landmarks = Mat::zeros(m, d);
+        let mut landmarks = Mat::zeros(m, src.dim());
         for (r, &i) in chosen.iter().enumerate() {
-            landmarks.row_mut(r).copy_from_slice(x_train.row(i));
+            landmarks.row_mut(r).copy_from_slice(cand.row(i));
         }
 
-        Self::from_landmarks(kernel, landmarks)
+        Ok(Self::from_landmarks(kernel, landmarks))
     }
 
     /// Reconstruct the featurizer from its landmark set alone — the model
@@ -110,19 +130,17 @@ impl Featurizer for NystromFeatures {
         self.landmarks.rows()
     }
 
-    fn featurize(&self, x: &Mat) -> Mat {
+    fn featurize_into(&self, x: &Mat, out: &mut [f64]) {
         let m = self.landmarks.rows();
-        let n = x.rows();
-        let mut out = Mat::zeros(n, m);
+        assert_eq!(out.len(), x.rows() * m, "nystrom: featurize_into size");
         let mut k_row = vec![0.0; m];
-        for i in 0..n {
+        for (i, orow) in out.chunks_exact_mut(m).enumerate() {
             for (j, kij) in k_row.iter_mut().enumerate() {
                 *kij = self.kernel.eval(x.row(i), self.landmarks.row(j));
             }
             let z = self.chol.solve_lower(&k_row);
-            out.row_mut(i).copy_from_slice(&z);
+            orow.copy_from_slice(&z);
         }
-        out
     }
 
     fn name(&self) -> &'static str {

@@ -122,10 +122,10 @@ impl Featurizer for PolySketchFeatures {
         1 + self.deg * self.m_per
     }
 
-    fn featurize(&self, x: &Mat) -> Mat {
+    fn featurize_into(&self, x: &Mat, out: &mut [f64]) {
         assert_eq!(x.cols(), self.d);
-        let n = x.rows();
-        let mut out = Mat::zeros(n, self.dim());
+        let f_dim = self.dim();
+        assert_eq!(out.len(), x.rows() * f_dim, "polysketch: featurize_into size");
         let inv_bw = 1.0 / self.bandwidth;
         let mut scratch = SketchScratch {
             acc_re: vec![0.0; self.m_per],
@@ -134,7 +134,7 @@ impl Featurizer for PolySketchFeatures {
             buf_im: vec![0.0; self.m_per],
         };
         let mut xs = vec![0.0; self.d];
-        for i in 0..n {
+        for (i, orow) in out.chunks_exact_mut(f_dim).enumerate() {
             let xr = x.row(i);
             let mut sq = 0.0;
             for (j, &v) in xr.iter().enumerate() {
@@ -143,18 +143,16 @@ impl Featurizer for PolySketchFeatures {
             }
             let env = (-0.5 * sq).exp();
             // degree 0: constant 1 coordinate
-            out[(i, 0)] = env * self.coeff[0];
+            orow[0] = env * self.coeff[0];
             for j in 1..=self.deg {
                 let ts = self.tensor_sketch(j, &xs, &mut scratch);
                 let base = 1 + (j - 1) * self.m_per;
                 let c = env * self.coeff[j];
-                let orow = out.row_mut(i);
                 for (k, &v) in ts.iter().enumerate() {
                     orow[base + k] = c * v;
                 }
             }
         }
-        out
     }
 
     fn name(&self) -> &'static str {

@@ -30,17 +30,26 @@ impl Featurizer for FourierFeatures {
         self.w.rows()
     }
 
-    fn featurize(&self, x: &Mat) -> Mat {
+    /// Writes each row directly into the caller's buffer: per output cell
+    /// one w_k^T x dot (accumulated in the same ascending order as
+    /// `matmul_nt`) followed by the phase-shifted cosine — no intermediate
+    /// projection matrix.
+    fn featurize_into(&self, x: &Mat, out: &mut [f64]) {
         let f_dim = self.w.rows();
+        assert_eq!(x.cols(), self.w.cols(), "fourier: input dim mismatch");
+        assert_eq!(out.len(), x.rows() * f_dim, "fourier: featurize_into size");
         let scale = (2.0 / f_dim as f64).sqrt();
-        let mut out = x.matmul_nt(&self.w); // (n x F) of w^T x
-        for i in 0..out.rows() {
-            let row = out.row_mut(i);
-            for (k, v) in row.iter_mut().enumerate() {
-                *v = scale * (*v + self.b[k]).cos();
+        for (i, orow) in out.chunks_exact_mut(f_dim).enumerate() {
+            let xr = x.row(i);
+            for (k, v) in orow.iter_mut().enumerate() {
+                let wk = self.w.row(k);
+                let mut acc = 0.0;
+                for t in 0..xr.len() {
+                    acc += xr[t] * wk[t];
+                }
+                *v = scale * (acc + self.b[k]).cos();
             }
         }
-        out
     }
 
     fn name(&self) -> &'static str {

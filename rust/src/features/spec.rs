@@ -368,11 +368,25 @@ impl FeatureSpec {
         Some(GegenbauerFeatures::new(table, dirs, self.seed))
     }
 
-    /// The concrete Nystrom featurizer of this spec fitted on training
-    /// rows — the single place the data-dependent baseline is constructed
-    /// (`try_build` wraps this; the model artifact codec reads its
-    /// landmarks for persistence and rebuilds from them on load).
+    /// The concrete Nystrom featurizer of this spec fitted on in-memory
+    /// training rows — [`build_nystrom_source`](FeatureSpec::build_nystrom_source)
+    /// over a borrowed `MatSource` (`try_build` wraps this).
     pub fn build_nystrom(&self, d: usize, x_train: &Mat) -> Result<NystromFeatures, String> {
+        self.build_nystrom_source(d, &crate::data::MatSource::unlabeled(x_train))
+    }
+
+    /// The concrete Nystrom featurizer of this spec fitted from any
+    /// [`DataSource`](crate::data::DataSource) — the **single place** the
+    /// data-dependent baseline is constructed: `try_build`,
+    /// `build_with_data` and `model::FittedMap::fit_source` all route
+    /// here, so the in-memory and out-of-core Nystrom fits can never
+    /// diverge. (The model artifact codec reads the fitted landmarks for
+    /// persistence and rebuilds from them on load.)
+    pub fn build_nystrom_source(
+        &self,
+        d: usize,
+        src: &dyn crate::data::DataSource,
+    ) -> Result<NystromFeatures, String> {
         let lambda = match self.method {
             Method::Nystrom { lambda } => lambda,
             _ => {
@@ -382,13 +396,13 @@ impl FeatureSpec {
                 ))
             }
         };
-        if x_train.cols() != d {
+        if src.dim() != d {
             return Err(format!(
                 "nystrom: training rows have d={}, spec bound to d={d}",
-                x_train.cols()
+                src.dim()
             ));
         }
-        Ok(NystromFeatures::fit(self.kernel.to_kernel(), x_train, self.m, lambda, self.seed))
+        NystromFeatures::fit_source(self.kernel.to_kernel(), src, self.m, lambda, self.seed)
     }
 
     /// The radial table the Gegenbauer path of this spec uses (independent
@@ -530,16 +544,12 @@ impl<F: Featurizer> Featurizer for InputScaled<F> {
         self.inner.dim()
     }
 
-    fn featurize(&self, x: &Mat) -> Mat {
-        self.inner.featurize(&self.scaled(x))
-    }
-
-    fn featurize_into(&self, x: &Mat, out: &mut Mat) {
+    fn featurize_into(&self, x: &Mat, out: &mut [f64]) {
         self.inner.featurize_into(&self.scaled(x), out)
     }
 
-    fn featurize_par(&self, x: &Mat, pool: &Pool) -> Mat {
-        self.inner.featurize_par(&self.scaled(x), pool)
+    fn featurize_par_into(&self, x: &Mat, out: &mut [f64], pool: &Pool) {
+        self.inner.featurize_par_into(&self.scaled(x), out, pool)
     }
 
     fn name(&self) -> &'static str {
@@ -602,8 +612,10 @@ mod tests {
 
     #[test]
     fn trait_defaults_match_featurize_for_every_method() {
-        // featurize_into and featurize_par must agree bit-for-bit with
-        // featurize for every registered method (default impls + overrides)
+        // featurize, featurize_into and featurize_par must agree
+        // bit-for-bit for every registered method (derived impls +
+        // overrides); featurize_into writes into a caller slice, so also
+        // check a scratch buffer reused across calls
         let d = 3;
         let mut rng = Rng::new(200);
         let x = Mat::from_fn(31, d, |_, _| rng.normal() * 0.6);
@@ -613,14 +625,22 @@ mod tests {
             let feat = spec.build_with_data(&x);
             let z = feat.featurize(&x);
             assert_eq!(z.cols(), feat.dim(), "{}", feat.name());
-            let mut out = Mat::zeros(x.rows(), feat.dim());
-            feat.featurize_into(&x, &mut out);
-            assert_eq!(z, out, "{}: featurize_into differs", feat.name());
+            let mut scratch = vec![f64::NAN; x.rows() * feat.dim()];
+            feat.featurize_into(&x, &mut scratch);
+            assert_eq!(z.data(), &scratch[..], "{}: featurize_into differs", feat.name());
             for threads in [2usize, 3, 5, 64] {
                 // 64 > n: an explicit pool wider than the row count must
                 // still be honored (and still agree bit for bit)
                 let zp = feat.featurize_par(&x, &Pool::new(threads));
                 assert_eq!(z, zp, "{}: featurize_par({threads}) differs", feat.name());
+                scratch.fill(f64::NAN);
+                feat.featurize_par_into(&x, &mut scratch, &Pool::new(threads));
+                assert_eq!(
+                    z.data(),
+                    &scratch[..],
+                    "{}: featurize_par_into({threads}) differs",
+                    feat.name()
+                );
             }
         }
     }

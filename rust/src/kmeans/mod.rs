@@ -211,6 +211,15 @@ impl StreamingKmeans {
         StreamingKmeans { centroids: Mat::zeros(k, f_dim), counts: vec![0; k], initialized: 0 }
     }
 
+    /// Start from explicit initial centroids (e.g. a reservoir sample of
+    /// featurized rows — the chunked fit of `data::pipeline`). Each
+    /// centroid starts with count 1, exactly like the bootstrap rows of
+    /// [`absorb`](StreamingKmeans::absorb).
+    pub fn with_centroids(centroids: Mat) -> StreamingKmeans {
+        let k = centroids.rows();
+        StreamingKmeans { centroids, counts: vec![1; k], initialized: k }
+    }
+
     pub fn k(&self) -> usize {
         self.centroids.rows()
     }
@@ -222,9 +231,18 @@ impl StreamingKmeans {
     /// Absorb one featurized mini-batch: assign to nearest centroid, move
     /// each centroid by the per-cluster learning rate 1/count.
     pub fn absorb(&mut self, z: &Mat) {
+        self.absorb_flat(z.data());
+    }
+
+    /// [`absorb`](StreamingKmeans::absorb) over a flat row-major feature
+    /// buffer — the chunk path folds its reused scratch slice directly.
+    /// Strictly row-sequential, so absorbing the same rows in any chunking
+    /// leaves bit-identical centroids (chunk invariance).
+    pub fn absorb_flat(&mut self, z: &[f64]) {
         let k = self.centroids.rows();
-        for i in 0..z.rows() {
-            let row = z.row(i);
+        let f = self.centroids.cols();
+        assert_eq!(z.len() % f.max(1), 0, "absorb_flat: buffer is not whole rows");
+        for row in z.chunks_exact(f) {
             // bootstrap: first k distinct rows become the centroids
             if self.initialized < k {
                 self.centroids.row_mut(self.initialized).copy_from_slice(row);
@@ -239,6 +257,20 @@ impl StreamingKmeans {
             for (cv, &zv) in crow.iter_mut().zip(row) {
                 *cv += eta * (zv - *cv);
             }
+        }
+    }
+
+    /// Fold the squared distance of every row of a flat feature buffer to
+    /// its nearest centroid into `total`, row by row — the objective pass
+    /// of the chunked fit. Accumulating into the caller's running total
+    /// (rather than returning a per-chunk subtotal) keeps the float
+    /// addition order row-sequential across chunk boundaries, so the
+    /// objective is bit-invariant to the chunking.
+    pub fn accumulate_sq_dist(&self, z: &[f64], total: &mut f64) {
+        let f = self.centroids.cols();
+        for row in z.chunks_exact(f) {
+            let c = nearest_centroid(row, &self.centroids);
+            *total += sq_dist(row, self.centroids.row(c));
         }
     }
 

@@ -52,7 +52,19 @@ impl KernelPca {
         zc.syrk_into_p(&mut cov, pool);
         cov.symmetrize_from_upper();
         cov.scale(1.0 / n as f64);
-        let (evals, evecs) = sym_eigen(&cov);
+        Self::from_covariance(mean, &cov, r)
+    }
+
+    /// Finish a fit from the feature-space mean and the (F x F) feature
+    /// covariance: eigendecompose and keep the top-`r` directions. Shared
+    /// tail of [`fit_with`](KernelPca::fit_with) and the streaming
+    /// two-pass fit of `data::pipeline` — identical covariance in,
+    /// bit-identical model out.
+    pub fn from_covariance(mean: Vec<f64>, cov: &Mat, r: usize) -> KernelPca {
+        let f = mean.len();
+        assert_eq!((cov.rows(), cov.cols()), (f, f), "covariance/mean dim mismatch");
+        assert!(r <= f, "rank {r} exceeds feature dimension {f}");
+        let (evals, evecs) = sym_eigen(cov);
         let mut components = Mat::zeros(f, r);
         for j in 0..r {
             for i in 0..f {

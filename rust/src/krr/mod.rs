@@ -9,7 +9,7 @@
 
 use crate::exec::Pool;
 use crate::kernels::Kernel;
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::{syrk_flat_into_p, Cholesky, Mat};
 
 /// Sufficient statistics for feature-space ridge regression: G = Z^T Z,
 /// b = Z^T y, n rows seen. Additive across shards/batches — the heart of
@@ -42,9 +42,21 @@ impl RidgeStats {
     pub fn absorb_with(&mut self, z: &Mat, y: &[f64], pool: &Pool) {
         assert_eq!(z.rows(), y.len());
         assert_eq!(z.cols(), self.b.len());
-        z.syrk_into_p(&mut self.g, pool);
-        for (i, &yi) in y.iter().enumerate() {
-            let row = z.row(i);
+        self.absorb_flat_with(z.data(), y, pool);
+    }
+
+    /// [`absorb_with`](RidgeStats::absorb_with) over a flat row-major
+    /// feature buffer (`z.len() == y.len() * F`) — the out-of-core chunk
+    /// path folds its reused scratch slice directly, no `Mat` wrapper.
+    /// Every accumulator (G, b, yy, n) advances in row-ascending order, so
+    /// absorbing the same rows in **any** chunking yields bit-identical
+    /// statistics — the chunk-invariance contract `data::pipeline` is
+    /// built on (property-tested in `tests/source_props.rs`).
+    pub fn absorb_flat_with(&mut self, z: &[f64], y: &[f64], pool: &Pool) {
+        let f = self.b.len();
+        assert_eq!(z.len(), y.len() * f, "absorb_flat_with: buffer/target mismatch");
+        syrk_flat_into_p(z, f, &mut self.g, pool);
+        for (row, &yi) in z.chunks_exact(f).zip(y) {
             for (bj, &zj) in self.b.iter_mut().zip(row) {
                 *bj += zj * yi;
             }

@@ -9,7 +9,10 @@
 //!   linear algebra ([`linalg`]), the parallel execution engine ([`exec`]:
 //!   one thread pool + row-scatter primitives every layer draws from, with
 //!   bit-identical results at every thread count), exact kernels
-//!   ([`kernels`]), synthetic datasets ([`data`]).
+//!   ([`kernels`]), and the data layer ([`data`]): synthetic generators
+//!   plus the chunked out-of-core pipeline ([`data::DataSource`] /
+//!   [`data::pipeline`]) every fit path consumes — working memory bounded
+//!   by the chunk, never by n, bit-invariant to the chunking.
 //! * **The paper's contribution** — random Gegenbauer features for the
 //!   Generalized Zonal Kernel family ([`features::gegenbauer`]), baselines
 //!   ([`features`]), the spec-driven registry that constructs them all

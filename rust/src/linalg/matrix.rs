@@ -205,27 +205,6 @@ impl Mat {
         out
     }
 
-    /// Accumulate output rows [lo, hi) of the rank-k update self^T self
-    /// into `block` (upper triangle only; per-cell reduction over rows of
-    /// self in fixed ascending order).
-    fn syrk_block(&self, lo: usize, hi: usize, block: &mut [f64]) {
-        let f = self.cols;
-        for t in 0..self.rows {
-            let z = self.row(t);
-            for i in lo..hi {
-                let zi = z[i];
-                if zi == 0.0 {
-                    continue;
-                }
-                let out_row = &mut block[(i - lo) * f..(i - lo) * f + f];
-                // only upper triangle, mirrored below
-                for j in i..f {
-                    out_row[j] += zi * z[j];
-                }
-            }
-        }
-    }
-
     /// Symmetric rank-k update: out += self^T self (Gram of the rows).
     pub fn syrk_into(&self, out: &mut Mat) {
         self.syrk_into_p(out, &Pool::serial());
@@ -235,16 +214,7 @@ impl Mat {
     /// each worker owns ~equal upper-triangle area (early rows are wider),
     /// bit-identical to the serial kernel at every thread count.
     pub fn syrk_into_p(&self, out: &mut Mat, pool: &Pool) {
-        assert_eq!(out.rows, self.cols);
-        assert_eq!(out.cols, self.cols);
-        let f = self.cols;
-        if f == 0 {
-            return;
-        }
-        let bounds = triangle_bounds(f, pool.threads());
-        pool.scatter_rows(&bounds, &mut out.data, |lo, hi, block| {
-            self.syrk_block(lo, hi, block)
-        });
+        syrk_flat_into_p(&self.data, self.cols, out, pool)
     }
 
     /// Mirror the upper triangle into the lower (companion to syrk_into).
@@ -343,6 +313,44 @@ impl Mat {
         }
         norm.sqrt()
     }
+}
+
+/// Accumulate output rows [lo, hi) of the rank-k update z^T z into `block`
+/// (upper triangle only; per-cell reduction over the rows of `z` in fixed
+/// ascending order), where `z` is a flat row-major buffer of `f`-wide rows.
+fn syrk_flat_block(z: &[f64], f: usize, lo: usize, hi: usize, block: &mut [f64]) {
+    for zrow in z.chunks_exact(f) {
+        for i in lo..hi {
+            let zi = zrow[i];
+            if zi == 0.0 {
+                continue;
+            }
+            let out_row = &mut block[(i - lo) * f..(i - lo) * f + f];
+            // only upper triangle, mirrored below
+            for j in i..f {
+                out_row[j] += zi * zrow[j];
+            }
+        }
+    }
+}
+
+/// [`Mat::syrk_into_p`] over a flat row-major buffer of `f`-wide rows —
+/// the out-of-core chunk path accumulates `Z^T Z` straight from its reused
+/// scratch slice without wrapping it in a `Mat`. Because each output cell
+/// accumulates over the rows of `z` in fixed ascending order, feeding the
+/// same rows in any chunking produces bit-identical sums (the
+/// chunk-invariance contract of `data::pipeline`).
+pub fn syrk_flat_into_p(z: &[f64], f: usize, out: &mut Mat, pool: &Pool) {
+    assert_eq!(out.rows, f, "syrk: output shape mismatch");
+    assert_eq!(out.cols, f, "syrk: output shape mismatch");
+    if f == 0 {
+        return;
+    }
+    assert_eq!(z.len() % f, 0, "syrk: buffer is not a whole number of rows");
+    let bounds = triangle_bounds(f, pool.threads());
+    pool.scatter_rows(&bounds, &mut out.data, |lo, hi, block| {
+        syrk_flat_block(z, f, lo, hi, block)
+    });
 }
 
 /// Partition `0..f` into at most `parts` contiguous ranges of ~equal

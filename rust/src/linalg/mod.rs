@@ -18,4 +18,4 @@ pub use cholesky::Cholesky;
 pub use eigen::sym_eigen;
 pub use fft::{circular_convolve, fft_inplace, ifft_inplace};
 pub use fwht::fwht_inplace;
-pub use matrix::Mat;
+pub use matrix::{syrk_flat_into_p, Mat};

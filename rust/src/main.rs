@@ -9,20 +9,41 @@
 //!   gzk spectral  [--n 64 --d 3 --lambda 0.1]        Eq.-1 quality sweep
 //!   gzk leverage  [--n 24 --d 3 --lambda 0.1]        Lemma-7 leverage-score check
 //!   gzk fit       --out <dir> [--model ridge|kmeans|kpca] [--name N]
+//!                 [--dataset elevation|co2|climate|protein|<table3 name>]
+//!                 [--data <path>] [--chunk-rows N]
 //!                 [--n 4000 --lambda 1e-2 --k 3 --rank 4 --workers 4]
-//!                                                    train on synthetic data and
-//!                                                    persist a model artifact
+//!                                                    train through the chunked data
+//!                                                    pipeline and persist a model
+//!                                                    artifact
 //!   gzk predict   --model-dir <dir> [--name N] [--requests 500]
 //!                                                    load an artifact and serve it
 //!                                                    through the batcher (no refit)
 //!   gzk serve     [--n 20000 --m 512 --lambda 1e-2 --requests 2000 --model-dir <dir>]
+//!                 [--dataset elevation|co2|climate|protein] [--chunk-rows N]
 //!                                                    end-to-end demo: one-round fit
 //!                                                    -> ModelStore -> reload -> serve;
 //!                                                    with an existing --model-dir it
 //!                                                    skips training entirely (and then
 //!                                                    rejects training flags rather than
-//!                                                    silently ignoring them)
+//!                                                    silently ignoring them), rebuilding
+//!                                                    its held-out eval stream from the
+//!                                                    dataset recorded in the artifact
 //!   gzk info                                          artifact manifest summary
+//!
+//! Data flags (fit / serve):
+//!
+//!   --dataset N    a lazily generated synthetic source (rows are produced
+//!                  per chunk — the full n x d matrix never materializes).
+//!                  Regression: elevation (d=3, default), co2, climate
+//!                  (d=4), protein (d=9); any Table-3 clustering name
+//!                  works for kmeans/kpca.
+//!   --data PATH    a file source instead: CSV (comma-separated, last
+//!                  column = target, `#` comments) or the GZKBIN01
+//!                  little-endian binary format. Mutually exclusive with
+//!                  --dataset/--n.
+//!   --chunk-rows N rows per pipeline chunk (default 8192): the working-set
+//!                  bound — peak feature memory is chunk_rows x F for any n.
+//!                  Doubles as the one-round protocol's shard size.
 //!
 //! Global flags (every subcommand):
 //!
@@ -32,7 +53,8 @@
 //!                  assignment, KPCA, the coordinator's worker wave, the
 //!                  serving batcher — draws from this one pool, and every
 //!                  result is bit-identical at every width. Model
-//!                  artifacts record the width in their run metadata.
+//!                  artifacts record the width — and the training dataset
+//!                  name + row count — in their run metadata.
 //!
 //! Subcommands that build a single featurizer (`fit`, `serve`, `leverage`)
 //! share one flag group — `--kernel/--method/--m/--seed` plus tuning knobs —
@@ -42,12 +64,15 @@
 //! those flags rather than silently ignoring them.
 
 use gzk::cli::Args;
-use gzk::coordinator::{fit_ridge, Backend, PredictionService};
-use gzk::data;
+use gzk::coordinator::{fit_ridge_source, Backend, PredictionService};
+use gzk::data::{pipeline, DataSource, FileSource, InterleavedSplit, SourceSlice, SyntheticSource};
 use gzk::experiments::{fig1, spectral_quality, table1, table2, table3};
 use gzk::features::FeatureSpec;
 use gzk::krr::mse;
-use gzk::model::{validate_model_name, KmeansModel, KpcaModel, Model, ModelKind, ModelStore, RidgeModel};
+use gzk::model::{
+    set_run_data, validate_model_name, KmeansModel, KpcaModel, Model, ModelKind, ModelStore,
+    RidgeModel,
+};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -185,9 +210,10 @@ fn parse_spec(args: &Args, default_m: usize) -> FeatureSpec {
 /// weight; reject them instead of silently serving a model with a
 /// different configuration.
 fn reject_stored_serve_flags(args: &Args, store_dir: &std::path::Path) {
-    const TRAIN_FLAGS: [&str; 17] = [
+    const TRAIN_FLAGS: [&str; 20] = [
         "kernel", "bandwidth", "gamma", "poly-p", "poly-c", "depth", "method", "q", "s",
         "taylor-deg", "nystrom-lambda", "m", "seed", "n", "workers", "pjrt", "lambda",
+        "dataset", "data", "chunk-rows",
     ];
     for f in TRAIN_FLAGS {
         if args.get(f).is_some() || args.has(f) {
@@ -254,39 +280,112 @@ fn leverage_demo(args: &Args) {
     println!("Theorem-9 feature count for (eps=0.5, delta=0.1): m >= {m9:.0}");
 }
 
-/// Train a model on synthetic data and persist it as a versioned artifact
-/// in a `ModelStore` — the "train once" half of the serving lifecycle.
-/// Ridge with an oblivious method goes through the coordinator's one-round
-/// protocol; everything else (k-means, KPCA, data-dependent Nystrom) fits
-/// single-node through the model constructors.
+/// The `--chunk-rows` flag: the pipeline's working-set bound.
+fn chunk_rows_flag(args: &Args) -> usize {
+    let chunk = args.get_usize("chunk-rows", pipeline::DEFAULT_CHUNK_ROWS);
+    if chunk == 0 {
+        usage_error("--chunk-rows must be >= 1");
+    }
+    chunk
+}
+
+/// Open the training source from the shared `--data` / `--dataset` /
+/// `--n` flag group. `--data` reads a CSV/binary file (its row count and
+/// dimension come from the file, so the synthetic-geometry flags are
+/// rejected rather than silently ignored); otherwise a lazily generated
+/// synthetic source of `--n` rows.
+fn open_source(args: &Args, default_dataset: &str, default_n: usize, seed: u64) -> Box<dyn DataSource> {
+    match (args.get("data"), args.get("dataset")) {
+        (Some(_), Some(_)) => {
+            usage_error("--data and --dataset are mutually exclusive (a file brings its own rows)")
+        }
+        (Some(path), None) => {
+            for f in ["n", "d"] {
+                if args.get(f).is_some() {
+                    usage_error(&format!(
+                        "--{f} sizes the synthetic generator, but --data reads its shape \
+                         from the file; drop the flag"
+                    ));
+                }
+            }
+            match FileSource::open(path) {
+                Ok(s) => Box::new(s),
+                Err(e) => fatal_error(&e),
+            }
+        }
+        (None, dataset) => {
+            if args.get("d").is_some() {
+                // --d only sizes the generic k-means clustering mixture;
+                // every named source fixes its own dimension — ignoring
+                // the flag would train at a different d than the user
+                // asked for
+                usage_error(&format!(
+                    "--d does not apply here: dataset {:?} fixes its own input dimension",
+                    dataset.unwrap_or(default_dataset)
+                ));
+            }
+            let name = dataset.unwrap_or(default_dataset);
+            let n = args.get_usize("n", default_n);
+            match SyntheticSource::by_name(name, n, seed) {
+                Ok(s) => Box::new(s),
+                Err(e) => usage_error(&e),
+            }
+        }
+    }
+}
+
+/// Train a model through the chunked data pipeline and persist it as a
+/// versioned artifact in a `ModelStore` — the "train once" half of the
+/// serving lifecycle. Ridge with an oblivious method goes through the
+/// coordinator's one-round protocol (workers read disjoint chunk ranges
+/// of the source); everything else (k-means, KPCA, data-dependent
+/// Nystrom) fits single-node through the chunked model constructors.
+/// Working memory is bounded by `--chunk-rows`, never by n — a ridge fit
+/// over the full climate source (n = 223,656) never allocates an n x m
+/// feature matrix.
 fn fit_cmd(args: &Args) {
     let kind = match ModelKind::from_name(args.get("model").unwrap_or("ridge")) {
         Ok(k) => k,
         Err(e) => usage_error(&e),
     };
     let dir = args.get("out").unwrap_or_else(|| usage_error("fit requires --out <dir>"));
-    let store = match ModelStore::open(dir) {
-        Ok(s) => s,
-        Err(e) => fatal_error(&e),
-    };
     let name = args.get("name").unwrap_or(kind.name()).to_string();
     if let Err(e) = validate_model_name(&name) {
         usage_error(&e); // a bad --name is a usage mistake, not an I/O failure
     }
+    let chunk_rows = chunk_rows_flag(args);
+    // open (and create) the store BEFORE training: a bad --out path must
+    // surface immediately, not after an hours-long streamed fit
+    let store = match ModelStore::open(dir) {
+        Ok(s) => s,
+        Err(e) => fatal_error(&e),
+    };
     let t0 = Instant::now();
     let model: Box<dyn Model> = match kind {
         ModelKind::Ridge => {
-            let n = args.get_usize("n", 4000);
             let lambda = args.get_f64("lambda", 1e-2);
             if !lambda.is_finite() || lambda < 0.0 {
                 usage_error(&format!(
                     "flag --lambda: must be a finite non-negative number, got {lambda}"
                 ));
             }
-            let spec = parse_spec(args, 512).bind(3);
-            let seed = spec.spec.seed;
-            let ds = data::elevation(n, seed);
-            let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed);
+            let fspec = parse_spec(args, 512);
+            let seed = fspec.seed;
+            let src = open_source(args, "elevation", 4000, seed);
+            let spec = fspec.bind(src.dim());
+            let n = src.len();
+            if n < 2 {
+                fatal_error(&format!("source {} has only {n} row(s)", src.name()));
+            }
+            // interleaved held-out split (every period-th row is test):
+            // unlike a contiguous tail, this stays honest when --data is a
+            // file sorted by target or time
+            let period = 10.min(n);
+            let train = InterleavedSplit::train(src.as_ref(), period);
+            let test = InterleavedSplit::test(src.as_ref(), period);
+            // the whole [0, n) range is consumed (train + held-out), so
+            // serve's fresh eval rows start at n
+            set_run_data(src.name(), n);
             let model = if spec.spec.method.is_oblivious() {
                 let workers = args.get_usize("workers", 4);
                 let backend = if args.has("pjrt") {
@@ -294,49 +393,72 @@ fn fit_cmd(args: &Args) {
                 } else {
                     Backend::Native
                 };
-                let (model, fit) =
-                    fit_ridge(&spec, &x_tr, &y_tr, lambda, workers, 2048, backend);
+                let (model, fit) = match fit_ridge_source(
+                    &spec, &train, lambda, workers, chunk_rows, backend,
+                ) {
+                    Ok(v) => v,
+                    Err(e) => fatal_error(&e),
+                };
                 println!(
-                    "one-round fit: {} rows across {} workers / {} shards",
-                    fit.stats.n, fit.n_workers, fit.n_shards
+                    "one-round fit: {} rows across {} workers / {} shards ({} rows/chunk)",
+                    fit.stats.n, fit.n_workers, fit.n_shards, chunk_rows
                 );
                 model
             } else {
-                match RidgeModel::fit(spec, &x_tr, &y_tr, lambda) {
+                match RidgeModel::fit_source(spec, &train, lambda, chunk_rows) {
                     Ok(m) => m,
-                    Err(e) => usage_error(&e),
+                    Err(e) => fatal_error(&e),
                 }
             };
-            println!("test MSE {:.4}", mse(&model.predict_vec(&x_te), &y_te));
+            // held-out MSE, streamed chunk by chunk like the fit
+            match pipeline::chunked_mse(&test, chunk_rows, |xc| model.predict_vec(xc)) {
+                Ok(err) => println!("test MSE {err:.4}"),
+                Err(e) => fatal_error(&e),
+            }
             Box::new(model)
         }
         ModelKind::Kmeans => {
             let k = args.get_usize("k", 3);
-            let n = args.get_usize("n", 3000);
-            let d = args.get_usize("d", 8);
-            let spec = parse_spec(args, 256).bind(d);
-            let ds = data::clustering_dataset(
-                data::ClusteringSpec { name: "fit", n, d, k },
-                spec.spec.seed,
-            );
-            let model = match KmeansModel::fit(spec, &ds.x, k, args.get_usize("iters", 50)) {
+            if k == 0 {
+                usage_error("--k must be >= 1");
+            }
+            let fspec = parse_spec(args, 256);
+            let seed = fspec.seed;
+            // the kmeans default is the generic clustering mixture sized by
+            // --n/--d/--k; --dataset/--data select a real geometry instead
+            let src: Box<dyn DataSource> =
+                if args.get("data").is_none() && args.get("dataset").is_none() {
+                    let n = args.get_usize("n", 3000);
+                    let d = args.get_usize("d", 8);
+                    Box::new(SyntheticSource::clustering("fit", n, d, k, seed))
+                } else {
+                    open_source(args, "abalone", 3000, seed)
+                };
+            let spec = fspec.bind(src.dim());
+            set_run_data(src.name(), src.len());
+            let model = match KmeansModel::fit_source(spec, src.as_ref(), k, chunk_rows) {
                 Ok(m) => m,
-                Err(e) => usage_error(&e),
+                Err(e) => fatal_error(&e),
             };
-            println!("k-means fit: k={k}, training objective {:.4}", model.objective());
+            println!(
+                "k-means fit (streamed): k={k}, training objective {:.4}",
+                model.objective()
+            );
             Box::new(model)
         }
         ModelKind::Kpca => {
-            let n = args.get_usize("n", 2000);
             let rank = args.get_usize("rank", 4);
-            let spec = parse_spec(args, 256).bind(3);
-            let ds = data::elevation(n, spec.spec.seed);
-            let model = match KpcaModel::fit(spec, &ds.x, rank) {
+            let fspec = parse_spec(args, 256);
+            let seed = fspec.seed;
+            let src = open_source(args, "elevation", 2000, seed);
+            let spec = fspec.bind(src.dim());
+            set_run_data(src.name(), src.len());
+            let model = match KpcaModel::fit_source(spec, src.as_ref(), rank, chunk_rows) {
                 Ok(m) => m,
-                Err(e) => usage_error(&e),
+                Err(e) => fatal_error(&e),
             };
             println!(
-                "kpca fit: rank {rank}, top eigenvalue {:.4}",
+                "kpca fit (streamed): rank {rank}, top eigenvalue {:.4}",
                 model.pca().eigenvalues[0]
             );
             Box::new(model)
@@ -427,19 +549,22 @@ fn predict_cmd(args: &Args) {
     }
 }
 
-/// End-to-end lifecycle demo: train on synthetic elevation via the
-/// one-round protocol, persist the model into a `ModelStore`, **reload the
-/// artifact**, then serve batched prediction requests and report latency —
-/// the serving loop never touches the in-memory fit. When `--model-dir`
-/// points at a store that already holds the named model, training is
-/// skipped entirely: the stored artifact is served as-is.
+/// End-to-end lifecycle demo: train on a lazily generated synthetic
+/// source via the one-round protocol (workers read disjoint chunk ranges;
+/// nothing is materialized), persist the model into a `ModelStore`,
+/// **reload the artifact**, then serve batched prediction requests and
+/// report latency — the serving loop never touches the in-memory fit.
+/// When `--model-dir` points at a store that already holds the named
+/// model, training is skipped entirely: the stored artifact is served
+/// as-is, and its **recorded run metadata** (dataset name + training row
+/// count) rebuilds the evaluation stream — rows past the training range
+/// of the same generator — so even the stored path reports an honest
+/// held-out MSE.
 fn serve_demo(args: &Args) {
-    let n = args.get_usize("n", 20_000);
     let n_requests = args.get_usize("requests", 2_000);
     if n_requests == 0 {
         usage_error("--requests must be >= 1");
     }
-    let n_workers = args.get_usize("workers", 4);
     let name = args.get("name").unwrap_or("ridge").to_string();
     if let Err(e) = validate_model_name(&name) {
         usage_error(&e);
@@ -466,8 +591,8 @@ fn serve_demo(args: &Args) {
 
     println!("== gzk serve: one-round distributed KRR + model artifact + batched serving ==");
     println!("pool: {} threads", gzk::exec::Pool::global().threads());
-    let mut eval: Option<(gzk::linalg::Mat, Vec<f64>)> = None;
-    let model: Box<dyn Model> = if stored {
+    // (model, eval dataset name, rows already consumed by training)
+    let (model, eval_dataset, train_rows): (Box<dyn Model>, String, usize) = if stored {
         // the featurizer flag group and training knobs configure TRAINING;
         // with a stored model they would be silently ignored, so reject
         // them instead (the crate's no-silent-fallback contract)
@@ -476,44 +601,71 @@ fn serve_demo(args: &Args) {
         // the manifest names this model: a load failure now is a real
         // error (corrupt / newer-format artifact), never a reason to
         // silently retrain and clobber it
-        let m = store.load(&name).unwrap_or_else(|e| fatal_error(&e));
+        let (m, run) = store.load_with_meta(&name).unwrap_or_else(|e| fatal_error(&e));
         println!(
             "loaded model {name:?} from {store_dir:?} — serving the stored artifact, no refit"
         );
-        m
+        let (dataset, rows) = match (run.dataset, run.rows) {
+            (Some(d), Some(r)) => (d, r),
+            _ => fatal_error(&format!(
+                "the artifact for {name:?} records no training dataset (written by an \
+                 older gzk); serve cannot rebuild its eval stream — use `gzk predict \
+                 --model-dir {store_dir:?} --name {name}` instead"
+            )),
+        };
+        (m, dataset, rows)
     } else {
         // ALL usage validation happens before the store directory is
         // created, so a mistyped invocation leaves nothing behind
+        let n = args.get_usize("n", 20_000);
+        if n < 2 {
+            usage_error("--n must be >= 2 (a training and a held-out row at minimum)");
+        }
+        let n_workers = args.get_usize("workers", 4);
+        let chunk_rows = chunk_rows_flag(args);
         let lambda = args.get_f64("lambda", 1e-2);
         if !lambda.is_finite() || lambda < 0.0 {
             usage_error(&format!(
                 "flag --lambda: must be a finite non-negative number, got {lambda}"
             ));
         }
-        let spec = parse_spec(args, 512).bind(3);
-        if !spec.spec.method.is_oblivious() {
+        if args.get("data").is_some() {
+            usage_error(
+                "serve's demo trains on a regenerable synthetic source (--dataset); \
+                 fit file data with `gzk fit --data ...` and serve it with `gzk predict`",
+            );
+        }
+        let fspec = parse_spec(args, 512);
+        if !fspec.method.is_oblivious() {
             usage_error(&format!(
                 "--method {} is data-dependent and cannot be broadcast by the \
                  one-round protocol; pick an oblivious method",
-                spec.spec.method.name()
+                fspec.method.name()
             ));
         }
+        let seed = fspec.seed;
+        let dataset = args.get("dataset").unwrap_or("elevation");
+        let src = match SyntheticSource::by_name(dataset, n, seed) {
+            Ok(s) => s,
+            Err(e) => usage_error(&e),
+        };
+        let spec = fspec.bind(src.dim());
+        println!("spec: {}", spec.to_json());
         let store = match ModelStore::open(&store_dir) {
             Ok(s) => s,
             Err(e) => fatal_error(&e),
         };
-        let seed = spec.spec.seed;
-        println!("spec: {}", spec.to_json());
-        let ds = data::elevation(n, seed);
-        let (x_tr, y_tr, x_te, y_te) = data::split(&ds.x, &ds.y, 0.1, seed);
-        eval = Some((x_te, y_te));
+        let n_tr = n - (n / 10).max(1);
+        let train = SourceSlice::new(&src, 0, n_tr);
+        set_run_data(src.name(), n_tr);
         let backend = if args.has("pjrt") {
             Backend::Pjrt { artifact_dir: gzk::runtime::default_artifact_dir() }
         } else {
             Backend::Native
         };
         let t0 = Instant::now();
-        let (model, fit) = fit_ridge(&spec, &x_tr, &y_tr, lambda, n_workers, 2048, backend);
+        let (model, fit) = fit_ridge_source(&spec, &train, lambda, n_workers, chunk_rows, backend)
+            .unwrap_or_else(|e| fatal_error_cleaning(&e, scratch));
         println!(
             "trained on {} rows across {} workers / {} shards in {:.2}s (featurize CPU {:.2}s)",
             fit.stats.n,
@@ -528,40 +680,53 @@ fn serve_demo(args: &Args) {
         };
         println!("saved model {name:?} to {path:?}");
         // the serving path always goes through the artifact store
-        store
+        let reloaded = store
             .load(&name)
-            .unwrap_or_else(|e| fatal_error_cleaning(&e, scratch))
+            .unwrap_or_else(|e| fatal_error_cleaning(&e, scratch));
+        (reloaded, dataset.to_string(), n_tr)
     };
 
     let spec = model.feature_spec().clone();
     if model.kind() != ModelKind::Ridge {
         usage_error(&format!(
-            "serve's elevation demo scores regression output, but the stored model \
+            "serve's demo scores regression output, but the stored model \
              {name:?} is {}; serve it with `gzk predict --model-dir ... --name {name}`",
             model.kind().name()
         ));
     }
-    if spec.d != 3 {
-        usage_error("serve evaluates on the d=3 elevation task; the stored model has d != 3");
-    }
     let seed = spec.spec.seed;
-    // Training path: the true held-out split, so the MSE is honest.
-    // Stored path: the training-time dataset size is not recorded in the
-    // artifact, so the exact held-out split CANNOT be reconstructed (a
-    // different n draws a different permutation and would leak training
-    // rows into "test"); serve fresh on-sphere points and report latency
-    // only — `gzk fit` already printed the honest test MSE.
-    let (x_te, y_te): (gzk::linalg::Mat, Option<Vec<f64>>) = match eval {
-        Some((x, y)) => (x, Some(y)),
-        None => {
-            let mut rng = gzk::rng::Rng::new(seed ^ 0x5E21);
-            let mut x = gzk::linalg::Mat::zeros(1024, 3);
-            for i in 0..x.rows() {
-                rng.sphere(x.row_mut(i));
-            }
-            (x, None)
-        }
+    // The eval stream comes from the SAME generator the model was trained
+    // on (recorded in the artifact's run metadata), at row indices the
+    // training range never touched — the synthetic sources are infinite
+    // streams, so the held-out MSE is honest on both paths. A model
+    // trained on data serve cannot regenerate (a file source) errors
+    // above with the recorded name.
+    let n_eval = 1024usize;
+    let eval_src = match SyntheticSource::by_name(&eval_dataset, train_rows + n_eval, seed) {
+        Ok(s) => s,
+        Err(_) => fatal_error_cleaning(
+            &format!(
+                "stored model {name:?} was trained on {eval_dataset:?}, which serve cannot \
+                 regenerate; use `gzk predict --model-dir ... --name {name}` instead"
+            ),
+            scratch,
+        ),
     };
+    if eval_src.dim() != spec.d {
+        fatal_error_cleaning(
+            &format!(
+                "recorded dataset {eval_dataset:?} has d = {} but the stored model expects \
+                 d = {} — artifact metadata mismatch",
+                eval_src.dim(),
+                spec.d
+            ),
+            scratch,
+        );
+    }
+    let (x_te, y_te) = eval_src
+        .read_range(train_rows, train_rows + n_eval)
+        .unwrap_or_else(|e| fatal_error_cleaning(&e, scratch));
+    println!("eval stream: {n_eval} held-out {eval_dataset} rows (from row {train_rows})");
 
     let svc = PredictionService::serve(model, 64, Duration::ZERO);
     let client = svc.client();
@@ -578,16 +743,8 @@ fn serve_demo(args: &Args) {
     }
     let wall = t1.elapsed().as_secs_f64();
     print_latency_summary(n_requests, wall, &mut latencies, &svc.metrics());
-    match &y_te {
-        Some(y) => {
-            let truth: Vec<f64> = (0..n_requests).map(|r| y[r % y.len()]).collect();
-            println!("test MSE over served predictions: {:.4}", mse(&preds, &truth));
-        }
-        None => println!(
-            "stored model: training-time n unknown, held-out split not reconstructible — \
-             test MSE skipped (see the `gzk fit` output for it)"
-        ),
-    }
+    let truth: Vec<f64> = (0..n_requests).map(|r| y_te[r % y_te.len()]).collect();
+    println!("held-out MSE over served predictions: {:.4}", mse(&preds, &truth));
     // the implicit per-process store was only a vehicle for the
     // persist→reload round trip; don't leave orphans in temp
     if let Some(dir) = scratch {

@@ -6,7 +6,10 @@
 //! {
 //!   "format": 1,
 //!   "kind": "ridge" | "kmeans" | "kpca",
-//!   "run": { "threads": N },  // run metadata: pool width of the fitting process
+//!   // run metadata: pool width of the fitting process, plus — when the
+//!   // fit announced them via `set_run_data` — the training dataset name
+//!   // and row count (how `gzk serve` rebuilds its evaluation stream)
+//!   "run": { "threads": N, "dataset": "elevation", "rows": R },
 //!   "spec": { ...BoundSpec wire form, seed as a decimal string... },
 //!   "nystrom_landmarks": { "rows": R, "cols": C, "data": [...] },  // data-dependent maps only
 //!   "state": { ...kind-specific learned state... }
@@ -20,13 +23,41 @@
 //! `features::spec` (seed travels as a decimal string, full `u64` range).
 
 use super::ModelKind;
+use crate::data::{DataSource, MatSource};
 use crate::exec::Pool;
 use crate::features::{BoundSpec, Featurizer, Method, NystromFeatures};
 use crate::linalg::Mat;
 use crate::runtime::Json;
+use std::sync::Mutex;
 
 /// The artifact format this build writes; readers reject anything newer.
 pub const ARTIFACT_FORMAT: usize = 1;
+
+/// Process-wide run context: the training dataset name and row count the
+/// CLI announces before fitting, stamped into every envelope written
+/// afterwards (alongside the pool width). `None` entries are simply
+/// omitted from the JSON — run metadata is provenance, never required to
+/// rebuild a model.
+static RUN_DATA: Mutex<Option<(String, usize)>> = Mutex::new(None);
+
+/// Announce the training dataset for subsequent artifact writes (the CLI
+/// calls this once per fit; last call wins). `gzk serve` reads the
+/// recorded name back to pick its evaluation stream.
+pub fn set_run_data(dataset: &str, rows: usize) {
+    *RUN_DATA.lock().expect("run data lock") = Some((dataset.to_string(), rows));
+}
+
+/// Run metadata recorded at fit time. All fields are optional on read:
+/// artifacts written before a field existed still parse.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RunMeta {
+    /// global pool width of the producing process
+    pub threads: Option<usize>,
+    /// training dataset name (a `SyntheticSource` name or `file:<path>`)
+    pub dataset: Option<String>,
+    /// number of training rows
+    pub rows: Option<usize>,
+}
 
 /// A feature map *as fitted*: the serializable description plus, for
 /// data-dependent methods, the learned state needed to reconstruct it
@@ -41,18 +72,27 @@ pub struct FittedMap {
 }
 
 impl FittedMap {
-    /// Fit the map described by `spec` (oblivious methods ignore the
-    /// training rows; Nystrom samples its landmarks from them).
+    /// Fit the map described by `spec` on in-memory training rows —
+    /// [`fit_source`](FittedMap::fit_source) over a borrowed [`MatSource`].
     pub fn fit(spec: BoundSpec, x_train: &Mat) -> Result<FittedMap, String> {
-        if x_train.cols() != spec.d {
+        Self::fit_source(spec, &MatSource::unlabeled(x_train))
+    }
+
+    /// Fit the map described by `spec` against any
+    /// [`DataSource`](crate::data::DataSource). Oblivious methods never
+    /// read the source; Nystrom gathers its O(m) candidate/pilot rows by
+    /// random access, so even the data-dependent baseline fits without
+    /// materializing n x d.
+    pub fn fit_source(spec: BoundSpec, src: &dyn DataSource) -> Result<FittedMap, String> {
+        if src.dim() != spec.d {
             return Err(format!(
-                "training rows have d={}, spec bound to d={}",
-                x_train.cols(),
+                "training source has d={}, spec bound to d={}",
+                src.dim(),
                 spec.d
             ));
         }
         if matches!(spec.spec.method, Method::Nystrom { .. }) {
-            let feat = spec.spec.build_nystrom(spec.d, x_train)?;
+            let feat = spec.spec.build_nystrom_source(spec.d, src)?;
             let landmarks = feat.landmarks().clone();
             Ok(FittedMap { spec, nystrom_landmarks: Some(landmarks), feat: Box::new(feat) })
         } else {
@@ -113,6 +153,12 @@ impl FittedMap {
         self.nystrom_landmarks.as_ref()
     }
 
+    /// The fitted featurizer itself — what the chunked trainers of
+    /// `data::pipeline` drive directly.
+    pub fn featurizer(&self) -> &dyn Featurizer {
+        self.feat.as_ref()
+    }
+
     /// Featurize raw inputs through the fitted map.
     pub fn featurize(&self, x: &Mat) -> Mat {
         assert_eq!(
@@ -145,21 +191,24 @@ pub struct Envelope {
     pub kind: ModelKind,
     pub map: FittedMap,
     pub state: Json,
-    /// Run metadata recorded at fit time: the global pool width of the
-    /// producing process (`None` for artifacts written before the field
-    /// existed — it is provenance, never required to rebuild the model).
-    pub run_threads: Option<usize>,
+    /// Run metadata recorded at fit time (all fields optional on read).
+    pub run: RunMeta,
 }
 
 /// Serialize the common envelope around a kind-specific `state` object.
 /// Besides the model halves, the envelope records run metadata — the
-/// global pool width of the writing process — so an artifact documents
-/// the execution configuration that produced it.
+/// global pool width of the writing process plus, when announced via
+/// [`set_run_data`], the training dataset name and row count — so an
+/// artifact documents the configuration and data that produced it.
 pub fn envelope(kind: ModelKind, map: &FittedMap, state: &str) -> String {
+    let mut run = format!(r#"{{"threads":{}"#, Pool::global().threads());
+    if let Some((dataset, rows)) = RUN_DATA.lock().expect("run data lock").clone() {
+        run.push_str(&format!(r#","dataset":{},"rows":{rows}"#, json_escape(&dataset)));
+    }
+    run.push('}');
     let mut s = format!(
-        r#"{{"format":{ARTIFACT_FORMAT},"kind":"{}","run":{{"threads":{}}},"spec":{}"#,
+        r#"{{"format":{ARTIFACT_FORMAT},"kind":"{}","run":{run},"spec":{}"#,
         kind.name(),
-        Pool::global().threads(),
         map.spec().to_json()
     );
     if let Some(landmarks) = map.nystrom_landmarks() {
@@ -167,6 +216,33 @@ pub fn envelope(kind: ModelKind, map: &FittedMap, state: &str) -> String {
     }
     s.push_str(&format!(r#","state":{state}}}"#));
     s
+}
+
+/// Minimal JSON string escaping for run metadata (dataset names may be
+/// `file:` paths containing arbitrary characters). Non-ASCII characters
+/// are `\u`-escaped because the in-crate JSON parser reads string bytes
+/// individually (multi-byte UTF-8 would be mangled on the way back);
+/// codepoints above the BMP become U+FFFD — provenance stays readable,
+/// never corrupt.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 || (c as u32) > 0x7e => {
+                let cp = if (c as u32) > 0xFFFF { 0xFFFD } else { c as u32 };
+                out.push_str(&format!("\\u{cp:04x}"));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Parse and validate the common envelope, rebuilding the feature map.
@@ -185,10 +261,17 @@ pub fn parse_envelope(text: &str) -> Result<Envelope, String> {
         Some(v) => Some(mat_from_json(v)?),
         None => None,
     };
-    let run_threads = j.get("run").and_then(|r| r.get("threads")).and_then(|v| v.as_usize());
+    let run = match j.get("run") {
+        Some(r) => RunMeta {
+            threads: r.get("threads").and_then(|v| v.as_usize()),
+            dataset: r.get("dataset").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            rows: r.get("rows").and_then(|v| v.as_usize()),
+        },
+        None => RunMeta::default(),
+    };
     let map = FittedMap::rebuild(spec, landmarks)?;
     let state = req(&j, "state")?.clone();
-    Ok(Envelope { kind, map, state, run_threads })
+    Ok(Envelope { kind, map, state, run })
 }
 
 /// Shortest representation that parses back to exactly the same bits.
@@ -314,15 +397,27 @@ mod tests {
         )
         .bind(2);
         let map = FittedMap::rebuild(spec, None).unwrap();
+        // with announced run data: dataset + rows travel in the envelope
+        set_run_data("elevation", 123);
         let text = envelope(ModelKind::Ridge, &map, r#"{"lambda":0.5,"weights":[]}"#);
         assert!(text.contains(r#""run":{"threads":"#), "{text}");
+        assert!(text.contains(r#""dataset":"elevation","rows":123"#), "{text}");
         let env = parse_envelope(&text).unwrap();
-        assert_eq!(env.run_threads, Some(Pool::global().threads()));
-        // artifacts without the field (older writers) still parse
+        assert_eq!(env.run.threads, Some(Pool::global().threads()));
+        assert_eq!(env.run.dataset.as_deref(), Some("elevation"));
+        assert_eq!(env.run.rows, Some(123));
+        // a file-path dataset name with JSON-hostile characters survives —
+        // including non-ASCII, which must round-trip through \u escapes
+        // (the in-crate parser reads string bytes individually)
+        set_run_data("file:/tmp/we\"ird\\päth.csv", 7);
+        let text2 = envelope(ModelKind::Ridge, &map, r#"{"lambda":0.5,"weights":[]}"#);
+        let env2 = parse_envelope(&text2).unwrap();
+        assert_eq!(env2.run.dataset.as_deref(), Some("file:/tmp/we\"ird\\päth.csv"));
+        // artifacts without the run field (older writers) still parse
         let start = text.find(r#","run""#).unwrap();
         let end = text[start + 1..].find(r#","spec""#).unwrap() + start + 1;
         let stripped = format!("{}{}", &text[..start], &text[end..]);
         let env = parse_envelope(&stripped).unwrap();
-        assert_eq!(env.run_threads, None);
+        assert_eq!(env.run, RunMeta::default());
     }
 }

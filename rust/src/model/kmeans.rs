@@ -4,6 +4,7 @@
 
 use super::artifact::{self, Envelope, FittedMap};
 use super::{Model, ModelKind};
+use crate::data::{pipeline, DataSource};
 use crate::exec::Pool;
 use crate::features::BoundSpec;
 use crate::kmeans::{assign_to_centroids_with, kmeans_with};
@@ -37,6 +38,32 @@ impl KmeansModel {
         let pool = Pool::global();
         let z = map.featurize_with(x, &pool);
         let res = kmeans_with(&z, k, max_iters, seed, &pool);
+        Ok(KmeansModel { map, centroids: res.centroids, objective: res.objective })
+    }
+
+    /// Chunked out-of-core fit over any [`DataSource`]: reservoir-sampled
+    /// initialization, then the streaming mini-batch absorb of
+    /// `data::pipeline::kmeans_chunked` — O(k F) state, feature memory
+    /// bounded by `chunk_rows x F`, bit-invariant to the chunking. (The
+    /// in-memory [`fit`](KmeansModel::fit) keeps full Lloyd iterations,
+    /// which need all feature rows resident; this is the fit that scales
+    /// past RAM.)
+    pub fn fit_source(
+        spec: BoundSpec,
+        src: &dyn DataSource,
+        k: usize,
+        chunk_rows: usize,
+    ) -> Result<KmeansModel, String> {
+        let seed = spec.spec.seed;
+        let map = FittedMap::fit_source(spec, src)?;
+        let (res, _) = pipeline::kmeans_chunked(
+            map.featurizer(),
+            src,
+            k,
+            chunk_rows,
+            seed,
+            &Pool::global(),
+        )?;
         Ok(KmeansModel { map, centroids: res.centroids, objective: res.objective })
     }
 

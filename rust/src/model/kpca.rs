@@ -4,6 +4,7 @@
 
 use super::artifact::{self, Envelope, FittedMap};
 use super::{Model, ModelKind};
+use crate::data::{pipeline, DataSource, MatSource};
 use crate::exec::Pool;
 use crate::features::BoundSpec;
 use crate::kpca::KernelPca;
@@ -15,24 +16,30 @@ pub struct KpcaModel {
 }
 
 impl KpcaModel {
-    /// Featurize the training rows and keep the top-`rank` principal
-    /// directions of the feature covariance.
+    /// Fit on in-memory rows: [`fit_source`](KpcaModel::fit_source) over a
+    /// borrowed [`MatSource`] — the same two-pass streaming pipeline as
+    /// the out-of-core fit, bit-identical to the materialized
+    /// [`KernelPca::fit`].
     pub fn fit(spec: BoundSpec, x: &Mat, rank: usize) -> Result<KpcaModel, String> {
-        if x.rows() < 2 {
-            return Err("kpca needs at least 2 training rows".to_string());
-        }
-        let map = FittedMap::fit(spec, x)?;
-        // training featurization + covariance assembly draw from the
+        Self::fit_source(spec, &MatSource::unlabeled(x), rank, pipeline::DEFAULT_CHUNK_ROWS)
+    }
+
+    /// Chunked fit over any [`DataSource`]: pass 1 streams the
+    /// feature-space mean, pass 2 the centered covariance, keeping the
+    /// top-`rank` principal directions. O(F²) state; feature memory
+    /// bounded by `chunk_rows x F`.
+    pub fn fit_source(
+        spec: BoundSpec,
+        src: &dyn DataSource,
+        rank: usize,
+        chunk_rows: usize,
+    ) -> Result<KpcaModel, String> {
+        let map = FittedMap::fit_source(spec, src)?;
+        // per-chunk featurization + covariance assembly draw from the
         // global pool (bit-identical to serial at any width)
-        let pool = Pool::global();
-        let z = map.featurize_with(x, &pool);
-        if rank == 0 || rank > z.cols() {
-            return Err(format!(
-                "rank {rank} out of range for {} feature dimensions",
-                z.cols()
-            ));
-        }
-        Ok(KpcaModel { pca: KernelPca::fit_with(&z, rank, &pool), map })
+        let (pca, _) =
+            pipeline::kpca_chunked(map.featurizer(), src, rank, chunk_rows, &Pool::global())?;
+        Ok(KpcaModel { pca, map })
     }
 
     pub fn pca(&self) -> &KernelPca {

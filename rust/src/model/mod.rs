@@ -49,7 +49,7 @@ mod kpca;
 mod ridge;
 mod store;
 
-pub use artifact::{FittedMap, ARTIFACT_FORMAT};
+pub use artifact::{set_run_data, FittedMap, RunMeta, ARTIFACT_FORMAT};
 pub use kmeans::KmeansModel;
 pub use kpca::KpcaModel;
 pub use ridge::RidgeModel;
@@ -129,12 +129,21 @@ pub trait Model: Send + Sync {
 
 /// Deserialize any model artifact, dispatching on its `kind` field.
 pub fn from_artifact(text: &str) -> Result<Box<dyn Model>, String> {
+    Ok(from_artifact_with_meta(text)?.0)
+}
+
+/// [`from_artifact`] that also surfaces the artifact's run metadata —
+/// `gzk serve` reads the recorded training dataset/rows to rebuild its
+/// evaluation stream.
+pub fn from_artifact_with_meta(text: &str) -> Result<(Box<dyn Model>, RunMeta), String> {
     let env = artifact::parse_envelope(text)?;
-    match env.kind {
-        ModelKind::Ridge => Ok(Box::new(RidgeModel::from_envelope(env)?)),
-        ModelKind::Kmeans => Ok(Box::new(KmeansModel::from_envelope(env)?)),
-        ModelKind::Kpca => Ok(Box::new(KpcaModel::from_envelope(env)?)),
-    }
+    let run = env.run.clone();
+    let model: Box<dyn Model> = match env.kind {
+        ModelKind::Ridge => Box::new(RidgeModel::from_envelope(env)?),
+        ModelKind::Kmeans => Box::new(KmeansModel::from_envelope(env)?),
+        ModelKind::Kpca => Box::new(KpcaModel::from_envelope(env)?),
+    };
+    Ok((model, run))
 }
 
 #[cfg(test)]

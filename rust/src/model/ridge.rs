@@ -4,6 +4,7 @@
 
 use super::artifact::{self, Envelope, FittedMap};
 use super::{Model, ModelKind};
+use crate::data::{pipeline, DataSource, MatSource};
 use crate::exec::Pool;
 use crate::features::BoundSpec;
 use crate::krr::{FeatureRidge, RidgeStats};
@@ -15,19 +16,35 @@ pub struct RidgeModel {
 }
 
 impl RidgeModel {
-    /// Single-node fit: featurize the training rows through the spec'd map
-    /// and solve the ridge system. Works for every registry method,
-    /// including the data-dependent Nystrom baseline (the fitted landmarks
-    /// travel inside the artifact).
+    /// Single-node fit on in-memory rows:
+    /// [`fit_source`](RidgeModel::fit_source) over a borrowed
+    /// [`MatSource`] — the in-memory path is a consumer of the same
+    /// chunked pipeline as the out-of-core one (and bit-identical to it).
     pub fn fit(spec: BoundSpec, x: &Mat, y: &[f64], lambda: f64) -> Result<RidgeModel, String> {
         if x.rows() != y.len() {
             return Err(format!("{} rows but {} targets", x.rows(), y.len()));
         }
-        let map = FittedMap::fit(spec, x)?;
-        // training featurization + absorb draw from the global pool
+        Self::fit_source(spec, &MatSource::new(x, y), lambda, pipeline::DEFAULT_CHUNK_ROWS)
+    }
+
+    /// Single-pass fit over any [`DataSource`]: per chunk, featurize into
+    /// one reused scratch and fold into `(Z^T Z, Z^T y)`; solve at
+    /// `lambda`. Works for every registry method, including the
+    /// data-dependent Nystrom baseline (its landmark sample is gathered by
+    /// random access; the fitted landmarks travel inside the artifact).
+    /// Peak feature memory is `chunk_rows x F` — never `n x F`.
+    pub fn fit_source(
+        spec: BoundSpec,
+        src: &dyn DataSource,
+        lambda: f64,
+        chunk_rows: usize,
+    ) -> Result<RidgeModel, String> {
+        let map = FittedMap::fit_source(spec, src)?;
+        // per-chunk featurization + absorb draw from the global pool
         // (bit-identical to serial at any width)
-        let z = map.featurize_with(x, &Pool::global());
-        Ok(RidgeModel { ridge: FeatureRidge::fit(&z, y, lambda), map })
+        let (stats, _) =
+            pipeline::ridge_stats(map.featurizer(), src, chunk_rows, &Pool::global())?;
+        Ok(RidgeModel { ridge: stats.solve(lambda), map })
     }
 
     /// Finish reduced sufficient statistics `(Z^T Z, Z^T y, n)` into a

@@ -17,7 +17,7 @@
 //! has no lock), so two simultaneous `save`s can lose a manifest entry.
 //! Run one fitting process per store at a time.
 
-use super::{from_artifact, Model, ModelKind};
+use super::{from_artifact_with_meta, Model, ModelKind, RunMeta};
 use crate::runtime::Json;
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -120,6 +120,12 @@ impl ModelStore {
 
     /// Load the model saved under `name`.
     pub fn load(&self, name: &str) -> Result<Box<dyn Model>, String> {
+        Ok(self.load_with_meta(name)?.0)
+    }
+
+    /// [`load`](ModelStore::load) that also returns the artifact's run
+    /// metadata (training dataset/rows/pool width).
+    pub fn load_with_meta(&self, name: &str) -> Result<(Box<dyn Model>, RunMeta), String> {
         let entries = self.entries()?;
         let entry = entries.iter().find(|e| e.name == name).ok_or_else(|| {
             let have: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
@@ -131,7 +137,8 @@ impl ModelStore {
         })?;
         let path = self.dir.join(&entry.file);
         let text = fs::read_to_string(&path).map_err(|e| format!("read {path:?}: {e}"))?;
-        let model = from_artifact(&text).map_err(|e| format!("{path:?}: {e}"))?;
+        let (model, run) =
+            from_artifact_with_meta(&text).map_err(|e| format!("{path:?}: {e}"))?;
         if model.kind() != entry.kind {
             return Err(format!(
                 "{path:?}: manifest says {} but artifact is {}",
@@ -139,7 +146,7 @@ impl ModelStore {
                 model.kind().name()
             ));
         }
-        Ok(model)
+        Ok((model, run))
     }
 
     fn write_manifest(&self, entries: &[StoreEntry]) -> Result<(), String> {

@@ -70,23 +70,26 @@ fn fit_then_predict_kmeans_and_kpca() {
 fn serve_trains_once_then_loads_the_stored_artifact() {
     let dir = fresh_dir("serve");
     let dir_s = dir.to_str().unwrap();
-    // first run: trains via the one-round protocol, persists, serves the
-    // reloaded artifact
+    // first run: trains via the one-round protocol over the chunked
+    // source, persists, serves the reloaded artifact
     let stdout = run_ok(&[
         "serve", "--n", "600", "--m", "64", "--requests", "100", "--model-dir", dir_s,
     ]);
     assert!(stdout.contains("trained on"), "{stdout}");
     assert!(stdout.contains("saved model"), "{stdout}");
     assert!(stdout.contains("served 100 requests"), "{stdout}");
+    assert!(stdout.contains("held-out MSE"), "{stdout}");
     // second run: same store — must load, never refit (training flags are
-    // dropped: serve rejects them when the stored model is used)
+    // dropped: serve rejects them when the stored model is used). The
+    // artifact records the training dataset + row count, so the stored
+    // path rebuilds the SAME generator's held-out rows and still reports
+    // an honest MSE.
     let stdout = run_ok(&["serve", "--requests", "100", "--model-dir", dir_s]);
     assert!(stdout.contains("no refit"), "{stdout}");
     assert!(!stdout.contains("trained on"), "refit happened: {stdout}");
     assert!(stdout.contains("served 100 requests"), "{stdout}");
-    // the stored path cannot reconstruct the held-out split, so it must
-    // not fabricate a test MSE
-    assert!(stdout.contains("test MSE skipped"), "{stdout}");
+    assert!(stdout.contains("held-out elevation rows"), "{stdout}");
+    assert!(stdout.contains("held-out MSE"), "{stdout}");
     // training flags alongside a stored model are a usage error, not a
     // silent no-op
     let out = bin()
@@ -95,6 +98,113 @@ fn serve_trains_once_then_loads_the_stored_artifact() {
         .unwrap();
     assert_eq!(out.status.code(), Some(2));
     assert!(String::from_utf8_lossy(&out.stderr).contains("--m"), "stderr should name the flag");
+    // ...including the new data-pipeline flags
+    let out = bin()
+        .args(["serve", "--chunk-rows", "64", "--requests", "10", "--model-dir", dir_s])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--chunk-rows"),
+        "stderr should name the flag"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_refuses_a_kmeans_model_by_name() {
+    // serve scores regression; a stored k-means model must be redirected
+    // to `gzk predict`, not silently scored
+    let dir = fresh_dir("serve-kind");
+    let dir_s = dir.to_str().unwrap();
+    run_ok(&[
+        "fit", "--model", "kmeans", "--out", dir_s, "--n", "200", "--d", "3", "--k", "2",
+        "--m", "32", "--name", "clusters",
+    ]);
+    let out = bin()
+        .args(["serve", "--requests", "10", "--model-dir", dir_s, "--name", "clusters"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("predict"), "{out:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fit_and_predict_from_a_csv_file_source() {
+    // the out-of-core file path end to end: write a CSV, fit ridge over it
+    // in 64-row chunks, reload the artifact in a separate process and serve
+    let dir = fresh_dir("csv");
+    let dir_s = dir.to_str().unwrap();
+    let csv = std::env::temp_dir().join(format!("gzk-cli-e2e-{}.csv", std::process::id()));
+    let mut text = String::from("# y = x0 + 2*x1 on a grid\n");
+    for i in 0..300 {
+        let (a, b) = ((i % 17) as f64 / 17.0, (i % 23) as f64 / 23.0);
+        text.push_str(&format!("{a},{b},{}\n", a + 2.0 * b));
+    }
+    std::fs::write(&csv, text).unwrap();
+    let stdout = run_ok(&[
+        "fit", "--model", "ridge", "--out", dir_s, "--data", csv.to_str().unwrap(),
+        "--chunk-rows", "64", "--m", "64", "--workers", "2",
+    ]);
+    assert!(stdout.contains("one-round fit"), "{stdout}");
+    assert!(stdout.contains("test MSE"), "{stdout}");
+    assert!(stdout.contains("saved model"), "{stdout}");
+    // the artifact records where the data came from
+    let artifact = std::fs::read_to_string(dir.join("ridge.model.json")).unwrap();
+    assert!(artifact.contains(r#""dataset":"file:"#), "{artifact}");
+    // a separate process reloads and serves it
+    let stdout = run_ok(&["predict", "--model-dir", dir_s, "--requests", "20"]);
+    assert!(stdout.contains("no refit"), "{stdout}");
+    assert!(stdout.contains("served 20 requests"), "{stdout}");
+    // serve cannot regenerate file data: it must error, naming the source
+    let out = bin().args(["serve", "--requests", "10", "--model-dir", dir_s]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1), "{out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("file:") && stderr.contains("predict"), "{stderr}");
+    // conflicting / malformed data flags are clean usage errors
+    let out = bin()
+        .args(["fit", "--out", dir_s, "--data", csv.to_str().unwrap(), "--dataset", "co2"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let out = bin()
+        .args(["fit", "--out", dir_s, "--data", "/no/such/file.csv"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1), "missing file is a runtime error");
+    let _ = std::fs::remove_file(&csv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fit_streams_any_synthetic_dataset() {
+    // --dataset selects the lazy generator; climate is the d=4 source
+    let dir = fresh_dir("dataset");
+    let dir_s = dir.to_str().unwrap();
+    let stdout = run_ok(&[
+        "fit", "--model", "ridge", "--out", dir_s, "--dataset", "climate", "--n", "500",
+        "--m", "48", "--chunk-rows", "128",
+    ]);
+    assert!(stdout.contains("test MSE"), "{stdout}");
+    let artifact = std::fs::read_to_string(dir.join("ridge.model.json")).unwrap();
+    assert!(artifact.contains(r#""dataset":"climate""#), "{artifact}");
+    assert!(artifact.contains(r#""rows":500"#), "{artifact}");
+    // unknown dataset names are usage errors listing the registry
+    let out = bin()
+        .args(["fit", "--out", dir_s, "--dataset", "no-such-set"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("elevation"), "{out:?}");
+    // --d with a named dataset would be silently ignored (the source fixes
+    // its own dimension) — rejected instead
+    let out = bin()
+        .args(["fit", "--out", dir_s, "--dataset", "climate", "--d", "16"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--d"), "{out:?}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -118,9 +228,10 @@ fn threads_flag_is_global_and_recorded_in_run_metadata() {
         "--threads", "2",
     ]);
     assert!(stdout.contains("saved model"), "{stdout}");
-    // the artifact documents the pool width that produced it
+    // the artifact documents the pool width and training data that
+    // produced it
     let artifact = std::fs::read_to_string(dir.join("ridge.model.json")).unwrap();
-    assert!(artifact.contains(r#""run":{"threads":2}"#), "{artifact}");
+    assert!(artifact.contains(r#""run":{"threads":2,"dataset":"elevation","rows":300"#), "{artifact}");
     // predict accepts the flag too: it configures serving, not training
     let stdout =
         run_ok(&["predict", "--model-dir", dir_s, "--requests", "10", "--threads", "1"]);

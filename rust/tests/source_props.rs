@@ -1,0 +1,149 @@
+//! Chunk-invariance property tests for the out-of-core data pipeline:
+//! for EVERY registry method, a chunked fit (ridge / k-means / KPCA) over
+//! a `DataSource` is **bit-identical** across chunk sizes {1, 17, 64, n}
+//! — and, where a materialized one-shot fit exists (ridge, KPCA), equal
+//! to that fit as well. This is the contract that lets `--chunk-rows`
+//! bound working memory without changing a single bit of any model.
+
+use gzk::data::{pipeline, DataSource, MatSource, SyntheticSource};
+use gzk::exec::Pool;
+use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
+use gzk::kpca::KernelPca;
+use gzk::krr::FeatureRidge;
+use gzk::model::{from_artifact, Model, RidgeModel};
+
+const CHUNKS: [usize; 4] = [1, 17, 64, usize::MAX]; // MAX -> clamped to n
+
+fn spec_for(method: Method, m: usize, seed: u64) -> FeatureSpec {
+    FeatureSpec::new(KernelSpec::Gaussian { bandwidth: 1.1 }, method.tuned(6, 2), m, seed)
+}
+
+#[test]
+fn ridge_chunked_fit_is_bit_identical_to_one_shot_for_every_method() {
+    let n = 64;
+    let src = SyntheticSource::elevation(n, 41);
+    let (x, y) = src.read_range(0, n).unwrap();
+    for method in Method::registry() {
+        let spec = spec_for(method, 48, 7);
+        // data-dependent Nystrom builds from the same gathered sample in
+        // both paths, so it participates in the invariance too
+        let feat = spec.build_with_data(&x);
+        let z = feat.featurize(&x);
+        let reference = FeatureRidge::fit(&z, &y, 0.01);
+        for chunk in CHUNKS {
+            let chunk = chunk.min(n);
+            let (stats, info) =
+                pipeline::ridge_stats(feat.as_ref(), &src, chunk, &Pool::global()).unwrap();
+            let model = stats.solve(0.01);
+            assert_eq!(
+                model.weights,
+                reference.weights,
+                "{}: chunk {chunk} drifted from the one-shot fit",
+                feat.name()
+            );
+            assert_eq!(stats.n, n);
+            // the memory claim: scratch is chunk x F, not n x F
+            assert_eq!(info.peak_z_bytes, chunk * feat.dim() * 8, "{}", feat.name());
+        }
+    }
+}
+
+#[test]
+fn kpca_chunked_fit_is_bit_identical_to_one_shot_for_every_method() {
+    let n = 64;
+    let src = SyntheticSource::protein(n, 42);
+    let (x, _) = src.read_range(0, n).unwrap();
+    for method in Method::registry() {
+        let spec = spec_for(method, 32, 9);
+        let feat = spec.build_with_data(&x);
+        let z = feat.featurize(&x);
+        let reference = KernelPca::fit(&z, 3);
+        for chunk in CHUNKS {
+            let chunk = chunk.min(n);
+            let (pca, _) =
+                pipeline::kpca_chunked(feat.as_ref(), &src, 3, chunk, &Pool::global()).unwrap();
+            assert_eq!(pca.mean(), reference.mean(), "{}: chunk {chunk}", feat.name());
+            assert_eq!(
+                pca.components(),
+                reference.components(),
+                "{}: chunk {chunk}",
+                feat.name()
+            );
+            assert_eq!(
+                pca.eigenvalues,
+                reference.eigenvalues,
+                "{}: chunk {chunk}",
+                feat.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn kmeans_chunked_fit_is_chunk_invariant_for_every_method() {
+    // k-means' one-shot algorithm is Lloyd (inherently multi-pass over
+    // resident features), so the streamed fit's contract is invariance:
+    // any chunking reproduces the whole-source-in-one-chunk fit exactly
+    let n = 64;
+    let src = SyntheticSource::by_name("abalone", n, 43).unwrap();
+    let (x, _) = src.read_range(0, n).unwrap();
+    for method in Method::registry() {
+        let spec = spec_for(method, 32, 11);
+        let feat = spec.build_with_data(&x);
+        let (reference, _) =
+            pipeline::kmeans_chunked(feat.as_ref(), &src, 3, n, 13, &Pool::global()).unwrap();
+        for chunk in CHUNKS {
+            let chunk = chunk.min(n);
+            let (fit, _) =
+                pipeline::kmeans_chunked(feat.as_ref(), &src, 3, chunk, 13, &Pool::global())
+                    .unwrap();
+            assert_eq!(
+                fit.centroids,
+                reference.centroids,
+                "{}: chunk {chunk} drifted",
+                feat.name()
+            );
+            assert_eq!(fit.objective, reference.objective, "{}: chunk {chunk}", feat.name());
+        }
+        assert!(reference.objective.is_finite() && reference.objective >= 0.0);
+    }
+}
+
+#[test]
+fn model_fit_source_artifacts_are_chunk_invariant() {
+    // the full deployable path: fit_source -> artifact -> reload ->
+    // predict is the same model at every chunk size, for a file-free
+    // in-memory source and the lazy generator alike
+    let n = 60;
+    let src = SyntheticSource::climate(n, 44);
+    let (x, y) = src.read_range(0, n).unwrap();
+    let mat = MatSource::new(&x, &y);
+    let spec = spec_for(Method::Gegenbauer { q: 6, s: 2 }, 40, 17).bind(4);
+    let reference = RidgeModel::fit_source(spec.clone(), &src, 1e-3, n).unwrap();
+    let probe = x.row_block(0, 8);
+    for chunk in [1usize, 17, 64] {
+        let a = RidgeModel::fit_source(spec.clone(), &src, 1e-3, chunk).unwrap();
+        let b = RidgeModel::fit_source(spec.clone(), &mat, 1e-3, chunk).unwrap();
+        assert_eq!(a.predict_vec(&probe), reference.predict_vec(&probe), "chunk {chunk}");
+        assert_eq!(b.predict_vec(&probe), reference.predict_vec(&probe), "mat chunk {chunk}");
+        let reloaded = from_artifact(&a.to_artifact()).unwrap();
+        assert_eq!(reloaded.predict(&probe), Model::predict(&a, &probe), "chunk {chunk}");
+    }
+}
+
+#[test]
+fn nystrom_fit_source_matches_in_memory_fit() {
+    // the data-dependent baseline: landmarks gathered by random access
+    // from a lazy source equal the landmarks of the materialized fit
+    use gzk::features::NystromFeatures;
+    use gzk::kernels::Kernel;
+    let n = 50;
+    let src = SyntheticSource::elevation(n, 45);
+    let (x, _) = src.read_range(0, n).unwrap();
+    let from_mat = NystromFeatures::fit(Kernel::Gaussian { bandwidth: 1.0 }, &x, 12, 1e-4, 3);
+    let from_src =
+        NystromFeatures::fit_source(Kernel::Gaussian { bandwidth: 1.0 }, &src, 12, 1e-4, 3)
+            .unwrap();
+    assert_eq!(from_mat.landmarks(), from_src.landmarks());
+    assert_eq!(from_mat.featurize(&x), from_src.featurize(&x));
+}
