@@ -258,7 +258,7 @@ fn serving_bench() -> ServingStats {
     let y: Vec<f64> = (0..512).map(|i| x[(i, 0)]).collect();
     let z = spec.build().featurize(&x);
     let model = FeatureRidge::fit(&z, &y, 1e-3);
-    let svc = PredictionService::start(spec, model, 64, Duration::ZERO);
+    let svc = PredictionService::start(spec, model, 64, Duration::ZERO).expect("start service");
     let client = svc.client();
     let _ = client.predict(x.row(0));
     let n_req = 5000;

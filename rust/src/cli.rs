@@ -90,6 +90,29 @@ impl Args {
         self.switches.iter().any(|s| s == name)
     }
 
+    /// A comma-separated list of positive integers (`--clients 1,8`).
+    /// Entries must be >= 1 — a zero-client trial or a zero-width sweep
+    /// is always a usage mistake, and the error names the flag.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        let Some(v) = self.get(name) else {
+            return Ok(default.to_vec());
+        };
+        let mut out = Vec::new();
+        for part in v.split(',') {
+            let n: usize = part.trim().parse().map_err(|_| {
+                format!(
+                    "flag --{name}: cannot parse {part:?} as an unsigned integer \
+                     (expected a comma-separated list like \"1,8\")"
+                )
+            })?;
+            if n == 0 {
+                return Err(format!("flag --{name}: entries must be >= 1, got {v:?}"));
+            }
+            out.push(n);
+        }
+        Ok(out)
+    }
+
     /// The global `--threads N` flag: how many workers the process-wide
     /// [`exec::Pool`](crate::exec::Pool) uses for every parallel path
     /// (featurize, absorb, k-means, KPCA, the coordinator's worker wave).
@@ -236,6 +259,20 @@ mod tests {
         assert_eq!(a.try_parsed::<usize>("absent", 7, "an unsigned integer").unwrap(), 7);
         let b = parse("serve --m 1024");
         assert_eq!(b.try_parsed::<usize>("m", 512, "an unsigned integer").unwrap(), 1024);
+    }
+
+    #[test]
+    fn usize_list_flag_parses_and_rejects_nonsense() {
+        // absent: the default; present: a comma list, spaces tolerated
+        assert_eq!(parse("loadgen").get_usize_list("clients", &[1, 8]).unwrap(), vec![1, 8]);
+        let a = parse("loadgen --clients 2,4,16");
+        assert_eq!(a.get_usize_list("clients", &[1]).unwrap(), vec![2, 4, 16]);
+        let a = parse("loadgen --clients 7");
+        assert_eq!(a.get_usize_list("clients", &[1]).unwrap(), vec![7]);
+        for bad in ["loadgen --clients 1,x", "loadgen --clients 1,,2", "loadgen --clients 0"] {
+            let e = parse(bad).get_usize_list("clients", &[1]).unwrap_err();
+            assert!(e.contains("--clients"), "{bad}: {e}");
+        }
     }
 
     #[test]

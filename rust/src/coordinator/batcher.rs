@@ -22,10 +22,81 @@ use std::time::{Duration, Instant};
 
 struct Request {
     x: Vec<f64>,
+    /// when the client handed the request to the service — the latency
+    /// histogram measures enqueue → reply-ready, so queue wait and the
+    /// batching window are part of every recorded sample
+    enqueued: Instant,
     reply: Sender<Vec<f64>>,
 }
 
-/// Telemetry the serving bench reads.
+/// Fixed-bucket latency histogram on a 1–2–5 log ladder from 1 µs to 50 s
+/// (plus one overflow bucket). Fixed buckets keep recording O(1) and the
+/// struct `Clone`-cheap, so the serving loop can update it inside the
+/// metrics lock and the network layer can snapshot it per `stats` request;
+/// quantiles are resolved to the upper bound of their bucket (≤ one ladder
+/// step of error — plenty for p50/p95/p99 tail reporting).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    /// one count per `BOUNDS` entry plus the overflow bucket
+    counts: [u64; 25],
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist { counts: [0; 25] }
+    }
+}
+
+impl LatencyHist {
+    /// Bucket upper bounds in seconds: {1, 2, 5} × 10^e for e in -6..=1.
+    pub const BOUNDS: [f64; 24] = [
+        1e-6, 2e-6, 5e-6, 1e-5, 2e-5, 5e-5, 1e-4, 2e-4, 5e-4, 1e-3, 2e-3, 5e-3, 1e-2, 2e-2,
+        5e-2, 1e-1, 2e-1, 5e-1, 1.0, 2.0, 5.0, 1e1, 2e1, 5e1,
+    ];
+
+    /// Count one observation of `secs` into its ladder bucket.
+    pub fn record(&mut self, secs: f64) {
+        let i = Self::BOUNDS
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(Self::BOUNDS.len());
+        self.counts[i] += 1;
+    }
+
+    /// Total number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// The `q`-quantile (`0.0 < q <= 1.0`) in seconds, resolved to the
+    /// upper bound of the bucket it lands in; 0.0 when nothing was
+    /// recorded, and the overflow bucket reports 2× the last bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i < Self::BOUNDS.len() {
+                    Self::BOUNDS[i]
+                } else {
+                    2.0 * Self::BOUNDS[Self::BOUNDS.len() - 1]
+                };
+            }
+        }
+        unreachable!("cumulative count reaches total")
+    }
+}
+
+// the counts array is the ladder plus one overflow bucket, exactly
+const _: () = assert!(LatencyHist::BOUNDS.len() + 1 == 25);
+
+/// Telemetry the serving bench and the network layer's `stats` command
+/// read.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub requests: usize,
@@ -33,28 +104,57 @@ pub struct ServeMetrics {
     /// sum of per-batch sizes (== requests) and of batch latencies
     pub batch_secs_total: f64,
     pub max_batch_seen: usize,
+    /// per-request latency (enqueue → reply ready): p50/p95/p99 via
+    /// [`LatencyHist::quantile`]
+    pub latency: LatencyHist,
 }
 
 /// Client handle: cheap to clone, safe to use from many threads.
 #[derive(Clone)]
 pub struct ServiceClient {
     tx: Sender<Request>,
+    /// the model's input dimension — validated at the client so a
+    /// wrong-length row is an error reply, never a poisoned batch
+    d: usize,
 }
 
 impl ServiceClient {
+    /// The input dimension every request must match.
+    pub fn input_dim(&self) -> usize {
+        self.d
+    }
+
     /// Blocking predict for one point; the model's first output (the
     /// regression value / cluster index / first principal coordinate).
-    pub fn predict(&self, x: &[f64]) -> Result<f64, &'static str> {
+    pub fn predict(&self, x: &[f64]) -> Result<f64, String> {
         self.predict_vec(x).map(|v| v[0])
     }
 
     /// Blocking predict for one point, all `output_dim` values.
-    pub fn predict_vec(&self, x: &[f64]) -> Result<Vec<f64>, &'static str> {
+    pub fn predict_vec(&self, x: &[f64]) -> Result<Vec<f64>, String> {
+        self.submit(x)?
+            .recv()
+            .map_err(|_| "service dropped request".to_string())
+    }
+
+    /// Enqueue one point and return the reply channel without blocking —
+    /// the pipelined form the network layer uses (submit on the reader
+    /// thread, await on the writer thread, so requests from one
+    /// connection can share a batch). The input dimension is validated
+    /// HERE: a wrong-length row never reaches the shared service loop.
+    pub fn submit(&self, x: &[f64]) -> Result<Receiver<Vec<f64>>, String> {
+        if x.len() != self.d {
+            return Err(format!(
+                "input has {} values but the model expects d = {}",
+                x.len(),
+                self.d
+            ));
+        }
         let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(Request { x: x.to_vec(), reply: reply_tx })
-            .map_err(|_| "service stopped")?;
-        reply_rx.recv().map_err(|_| "service dropped request")
+            .send(Request { x: x.to_vec(), enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| "service stopped".to_string())?;
+        Ok(reply_rx)
     }
 }
 
@@ -68,16 +168,17 @@ pub struct PredictionService {
 impl PredictionService {
     /// Spawn the service thread around a trained scalar ridge model (the
     /// one-round protocol's output). Convenience wrapper over
-    /// [`serve`](PredictionService::serve).
+    /// [`serve`](PredictionService::serve). Errors (rather than panics)
+    /// when the spec's feature map cannot be rebuilt — e.g. a
+    /// data-dependent spec with no fitted state.
     pub fn start(
         spec: FeatureSpec,
         model: FeatureRidge,
         max_batch: usize,
         max_wait: Duration,
-    ) -> PredictionService {
-        let map = FittedMap::rebuild(spec, None)
-            .unwrap_or_else(|e| panic!("PredictionService::start: {e}"));
-        Self::serve(Box::new(RidgeModel::from_parts(map, model)), max_batch, max_wait)
+    ) -> Result<PredictionService, String> {
+        let map = FittedMap::rebuild(spec, None)?;
+        Ok(Self::serve(Box::new(RidgeModel::from_parts(map, model)), max_batch, max_wait))
     }
 
     /// Spawn the service thread around **any** fitted model — including
@@ -120,6 +221,15 @@ impl PredictionService {
                         Err(_) => break,
                     }
                 }
+                // Defensive: `ServiceClient::submit` validates the input
+                // dimension, so a mismatched row cannot arrive through the
+                // public API — but if one ever does, drop it (the client's
+                // recv errors) instead of letting `copy_from_slice` panic
+                // and kill the loop every other client shares.
+                pending.retain(|req| req.x.len() == d);
+                if pending.is_empty() {
+                    continue 'serve;
+                }
                 // Run the whole batch through the model at once. The
                 // service loop is a control thread; batch *compute* draws
                 // from the global pool, clamped so single-row requests
@@ -141,6 +251,9 @@ impl PredictionService {
                     m.batches += 1;
                     m.batch_secs_total += dt;
                     m.max_batch_seen = m.max_batch_seen.max(pending.len());
+                    for req in &pending {
+                        m.latency.record(req.enqueued.elapsed().as_secs_f64());
+                    }
                 }
                 for (i, req) in pending.iter().enumerate() {
                     let _ = req.reply.send(out.row(i).to_vec()); // client may have gone away
@@ -148,7 +261,7 @@ impl PredictionService {
                 pending.clear();
             }
         });
-        PredictionService { client: ServiceClient { tx }, metrics, handle: Some(handle) }
+        PredictionService { client: ServiceClient { tx, d }, metrics, handle: Some(handle) }
     }
 
     pub fn client(&self) -> ServiceClient {
@@ -161,11 +274,10 @@ impl PredictionService {
 
     /// Stop the service thread (drops the queue).
     pub fn shutdown(mut self) -> ServeMetrics {
-        // drop our client sender; thread exits when all clients are gone
-        let ServiceClient { tx } = self.client.clone();
-        drop(tx);
-        // replace internal client to drop the original sender
-        self.client = ServiceClient { tx: channel().0 };
+        // replace internal client to drop the original sender; thread
+        // exits when all clients are gone
+        let d = self.client.d;
+        self.client = ServiceClient { tx: channel().0, d };
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -210,7 +322,7 @@ mod tests {
         // reference: direct featurize + predict
         let z = spec.build().featurize(&x);
         let expect = model.predict(&z);
-        let svc = PredictionService::start(spec, model, 8, Duration::from_millis(1));
+        let svc = PredictionService::start(spec, model, 8, Duration::from_millis(1)).unwrap();
         let client = svc.client();
         for i in 0..20 {
             let p = client.predict(x.row(i)).unwrap();
@@ -219,6 +331,65 @@ mod tests {
         let m = svc.metrics();
         assert_eq!(m.requests, 20);
         assert!(m.batches >= 1);
+        // every answered request left one latency sample
+        assert_eq!(m.latency.count(), 20);
+        assert!(m.latency.quantile(0.5) > 0.0);
+    }
+
+    #[test]
+    fn wrong_dimension_is_an_error_reply_and_the_loop_survives() {
+        let (spec, model, x, _) = trained();
+        let svc = PredictionService::start(spec, model, 8, Duration::ZERO).unwrap();
+        let client = svc.client();
+        assert_eq!(client.input_dim(), 2);
+        let err = client.predict_vec(&[1.0, 2.0, 3.0]).unwrap_err();
+        assert!(err.contains("expects d = 2"), "{err}");
+        let err = client.predict_vec(&[]).unwrap_err();
+        assert!(err.contains("0 values"), "{err}");
+        // the shared service loop is still alive and still correct
+        let p = client.predict(x.row(0));
+        assert!(p.is_ok(), "{p:?}");
+        let m = svc.metrics();
+        assert_eq!(m.requests, 1, "rejected requests must not be counted");
+    }
+
+    #[test]
+    fn start_surfaces_rebuild_failure_as_err() {
+        // a data-dependent spec has no fitted state to rebuild from: start
+        // must return Err, not panic inside library code
+        let (_, model, _, _) = trained();
+        let spec = crate::features::FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Nystrom { lambda: 1e-3 },
+            16,
+            3,
+        )
+        .bind(2);
+        let err = PredictionService::start(spec, model, 8, Duration::ZERO).unwrap_err();
+        assert!(err.contains("nystrom"), "{err}");
+    }
+
+    #[test]
+    fn latency_hist_records_and_resolves_quantiles() {
+        let mut h = LatencyHist::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        // 90 fast observations, 10 slow ones: p50 resolves to the fast
+        // bucket's bound, p99 to the slow one's
+        for _ in 0..90 {
+            h.record(1.5e-6); // -> 2us bucket
+        }
+        for _ in 0..10 {
+            h.record(0.3); // -> 0.5s bucket
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(0.5), 2e-6);
+        assert_eq!(h.quantile(0.9), 2e-6);
+        assert_eq!(h.quantile(0.99), 0.5);
+        assert_eq!(h.quantile(1.0), 0.5);
+        // overflow: beyond the last bound still counts, reported as 2x it
+        h.record(1e4);
+        assert_eq!(h.quantile(1.0), 100.0);
     }
 
     #[test]
@@ -226,7 +397,7 @@ mod tests {
         let (spec, model, x, _) = trained();
         let z = spec.build().featurize(&x);
         let expect = model.predict(&z);
-        let svc = PredictionService::start(spec, model, 16, Duration::from_millis(2));
+        let svc = PredictionService::start(spec, model, 16, Duration::from_millis(2)).unwrap();
         let mut joins = Vec::new();
         for t in 0..8 {
             let client = svc.client();
@@ -251,7 +422,7 @@ mod tests {
     #[test]
     fn batches_respect_max_batch() {
         let (spec, model, x, _) = trained();
-        let svc = PredictionService::start(spec, model, 4, Duration::from_millis(5));
+        let svc = PredictionService::start(spec, model, 4, Duration::from_millis(5)).unwrap();
         let client = svc.client();
         let mut joins = Vec::new();
         for i in 0..12 {

@@ -25,7 +25,13 @@
 //!   ([`coordinator`]), and the fitted-model subsystem ([`model`]):
 //!   ridge/k-means/KPCA models that bundle their feature spec with their
 //!   learned state, serialize to versioned JSON artifacts, and persist in
-//!   a [`model::ModelStore`] — fit once, reload and serve anywhere.
+//!   a [`model::ModelStore`] — fit once, reload and serve anywhere; and
+//!   the network front-end ([`server`]): a std-only TCP server speaking
+//!   newline-delimited JSON with multi-model routing over a store,
+//!   manifest-poll hot-reload, bounded admission with backpressure
+//!   replies, and a load-generation harness (`gzk server` /
+//!   `gzk loadgen`) — predictions cross the wire bit-identical to a
+//!   local `Model::predict`.
 //!
 //! Every featurizer — the paper's and all baselines — is described by a
 //! serializable [`features::FeatureSpec`] `(kernel, method, m, seed)` and
@@ -93,6 +99,7 @@ pub mod linalg;
 pub mod model;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod special;
 pub mod spectral;
 pub mod testutil;

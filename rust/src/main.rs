@@ -28,6 +28,27 @@
 //!                                                    silently ignoring them), rebuilding
 //!                                                    its held-out eval stream from the
 //!                                                    dataset recorded in the artifact
+//!   gzk server    --store <dir> [--addr 127.0.0.1:7711] [--max-batch 64]
+//!                 [--max-wait-us 0] [--max-queue 1024] [--poll-ms 200] [--max-conns N]
+//!                                                    TCP model server over a ModelStore:
+//!                                                    newline-delimited JSON protocol
+//!                                                    (predict/models/stats/ping/shutdown),
+//!                                                    multi-model routing by name, manifest
+//!                                                    polled every --poll-ms so a newly
+//!                                                    persisted artifact serves without
+//!                                                    restart; full queues answer with a
+//!                                                    retriable backpressure reply. Runs
+//!                                                    until a client sends shutdown.
+//!   gzk loadgen   --addr <host:port> [--clients 1,8] [--requests 200] [--model N]
+//!                 [--dataset <name>] [--store <dir>] [--seed 1] [--shutdown]
+//!                 [--json-out BENCH_serve.json]
+//!                                                    concurrent load generator: one trial
+//!                                                    per client count, rows drawn from the
+//!                                                    named SyntheticSource; with --store it
+//!                                                    checks every reply bit-identical to a
+//!                                                    local Model::predict; emits throughput
+//!                                                    + p50/p95/p99 per trial to the JSON;
+//!                                                    --shutdown stops the server afterwards
 //!   gzk info                                          artifact manifest summary
 //!
 //! Data flags (fit / serve):
@@ -142,6 +163,8 @@ fn main() {
         "fit" => fit_cmd(&args),
         "predict" => predict_cmd(&args),
         "serve" => serve_demo(&args),
+        "server" => server_cmd(&args),
+        "loadgen" => loadgen_cmd(&args),
         "info" => info(),
         other => {
             eprintln!("unknown subcommand {other:?}; see rust/src/main.rs header for usage");
@@ -749,6 +772,130 @@ fn serve_demo(args: &Args) {
     // persist→reload round trip; don't leave orphans in temp
     if let Some(dir) = scratch {
         let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+/// The L4 network front-end: serve every model in a `ModelStore` over
+/// TCP (newline-delimited JSON), hot-reloading the store manifest so
+/// `gzk fit --out <store>` against a live server is the whole deployment
+/// story. Runs until a client sends the `shutdown` command.
+fn server_cmd(args: &Args) {
+    let dir = args.get("store").unwrap_or_else(|| {
+        usage_error("server requires --store <dir> (a ModelStore written by `gzk fit`)")
+    });
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7711");
+    let max_batch = args.get_usize("max-batch", 64);
+    if max_batch == 0 {
+        usage_error("--max-batch must be >= 1");
+    }
+    let max_queue = args.get_usize("max-queue", 1024);
+    if max_queue == 0 {
+        usage_error("--max-queue must be >= 1");
+    }
+    let poll_ms = args.get_usize("poll-ms", 200);
+    if poll_ms == 0 {
+        usage_error("--poll-ms must be >= 1");
+    }
+    let max_conns = args.get_usize("max-conns", 0); // 0 = pool policy
+    let cfg = gzk::server::ServerConfig {
+        max_batch,
+        max_wait: Duration::from_micros(args.get_usize("max-wait-us", 0) as u64),
+        max_queue,
+        poll: Duration::from_millis(poll_ms as u64),
+        max_conns,
+    };
+    let server = match gzk::server::Server::start(dir, addr, cfg) {
+        Ok(s) => s,
+        Err(e) => fatal_error(&e),
+    };
+    println!(
+        "gzk server listening on {} — models: {} (store {dir:?}, poll {poll_ms}ms, \
+         pool {} threads)",
+        server.local_addr(),
+        server.model_names().join(", "),
+        gzk::exec::Pool::global().threads()
+    );
+    println!(
+        r#"protocol: one JSON object per line, e.g. {{"cmd":"predict","model":"ridge","x":[...]}}; cmds: predict, models, stats, ping, shutdown"#
+    );
+    let final_stats = server.wait();
+    println!("gzk server: shut down cleanly");
+    println!("final stats: {final_stats}");
+}
+
+/// Concurrent load generator against a running `gzk server`: one trial
+/// per `--clients` entry, every reply optionally verified bit-identical
+/// to a local `Model::predict` (via `--store`), results written to
+/// `BENCH_serve.json`.
+fn loadgen_cmd(args: &Args) {
+    let addr = args.get("addr").unwrap_or_else(|| {
+        usage_error("loadgen requires --addr <host:port> (a running `gzk server`)")
+    });
+    let clients = match args.get_usize_list("clients", &[1, 8]) {
+        Ok(c) => c,
+        Err(e) => usage_error(&e),
+    };
+    let requests = args.get_usize("requests", 200);
+    if requests == 0 {
+        usage_error("--requests must be >= 1");
+    }
+    let cfg = gzk::server::LoadgenConfig {
+        addr: addr.to_string(),
+        clients,
+        requests_per_client: requests,
+        dataset: args.get("dataset").map(str::to_string),
+        model: args.get("model").map(str::to_string),
+        store: args.get("store").map(PathBuf::from),
+        seed: args.get_u64("seed", 1),
+        send_shutdown: args.has("shutdown"),
+    };
+    let report = match gzk::server::loadgen::run(&cfg) {
+        Ok(r) => r,
+        Err(e) => fatal_error(&e),
+    };
+    println!(
+        "loadgen against {} — model {:?}, dataset {}, {} requests/client, bit-identity {}",
+        report.addr,
+        report.model,
+        report.dataset,
+        report.requests_per_client,
+        if report.verified {
+            "VERIFIED against the local artifact"
+        } else {
+            "not checked (pass --store <dir>)"
+        }
+    );
+    let mut table = gzk::bench::Table::new(vec![
+        "clients", "req/s", "p50 us", "p95 us", "p99 us", "retries", "mismatches",
+    ]);
+    for t in &report.trials {
+        table.row(vec![
+            format!("{}", t.clients),
+            format!("{:.0}", t.throughput_rps),
+            format!("{:.1}", t.p50_us),
+            format!("{:.1}", t.p95_us),
+            format!("{:.1}", t.p99_us),
+            format!("{}", t.retries),
+            format!("{}", t.mismatches),
+        ]);
+    }
+    table.print();
+    for (t, stats) in report.trials.iter().zip(&report.server_stats) {
+        println!("server stats after {} clients: {stats}", t.clients);
+    }
+    let json_path = PathBuf::from(args.get("json-out").unwrap_or("BENCH_serve.json"));
+    match report.write_json(&json_path) {
+        Ok(()) => println!("wrote {json_path:?}"),
+        Err(e) => fatal_error(&e),
+    }
+    if cfg.send_shutdown {
+        println!("sent shutdown; the server is stopping");
+    }
+    if report.mismatches() > 0 {
+        fatal_error(&format!(
+            "{} replies were NOT bit-identical to the local model",
+            report.mismatches()
+        ));
     }
 }
 

@@ -203,7 +203,7 @@ pub struct Envelope {
 pub fn envelope(kind: ModelKind, map: &FittedMap, state: &str) -> String {
     let mut run = format!(r#"{{"threads":{}"#, Pool::global().threads());
     if let Some((dataset, rows)) = RUN_DATA.lock().expect("run data lock").clone() {
-        run.push_str(&format!(r#","dataset":{},"rows":{rows}"#, json_escape(&dataset)));
+        run.push_str(&format!(r#","dataset":{},"rows":{rows}"#, json_string(&dataset)));
     }
     run.push('}');
     let mut s = format!(
@@ -218,13 +218,14 @@ pub fn envelope(kind: ModelKind, map: &FittedMap, state: &str) -> String {
     s
 }
 
-/// Minimal JSON string escaping for run metadata (dataset names may be
-/// `file:` paths containing arbitrary characters). Non-ASCII characters
+/// The crate's one JSON string-literal writer (run metadata, the store
+/// manifest, the serving wire protocol — dataset names may be `file:`
+/// paths and error replies carry arbitrary text). Non-ASCII characters
 /// are `\u`-escaped because the in-crate JSON parser reads string bytes
 /// individually (multi-byte UTF-8 would be mangled on the way back);
 /// codepoints above the BMP become U+FFFD — provenance stays readable,
 /// never corrupt.
-fn json_escape(s: &str) -> String {
+pub fn json_string(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

@@ -17,6 +17,7 @@
 //! has no lock), so two simultaneous `save`s can lose a manifest entry.
 //! Run one fitting process per store at a time.
 
+use super::artifact::json_string;
 use super::{from_artifact_with_meta, Model, ModelKind, RunMeta};
 use crate::runtime::Json;
 use std::fs;
@@ -191,22 +192,6 @@ fn validate_name(name: &str) -> Result<(), String> {
         ));
     }
     Ok(())
-}
-
-/// Escape a string for JSON (names are validated, but stay defensive).
-fn json_string(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
 }
 
 #[cfg(test)]

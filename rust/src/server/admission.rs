@@ -1,0 +1,129 @@
+//! Bounded admission for the serving front-end: each routed model admits
+//! at most `max_queue` in-flight requests (admitted but not yet
+//! answered). Beyond that the listener replies with a backpressure
+//! error (`"retry":true`) **immediately** instead of letting the
+//! batcher's unbounded mpsc queue absorb an arbitrary backlog — under
+//! overload the server sheds load with bounded latency rather than
+//! growing memory and tail latency without bound.
+//!
+//! The mechanism is a lock-free counter with RAII release: admission is
+//! a CAS increment capped at `max_queue`, and the [`AdmissionGuard`]
+//! decrements on drop — on every exit path, including a client that
+//! disconnects mid-request.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Per-model admission state. Shared (`Arc`) between every connection
+/// thread routing to the model and the `stats` reporter.
+pub struct Admission {
+    max_queue: usize,
+    in_flight: AtomicUsize,
+    rejects: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(max_queue: usize) -> Arc<Admission> {
+        assert!(max_queue >= 1, "admission needs room for at least one request");
+        Arc::new(Admission {
+            max_queue,
+            in_flight: AtomicUsize::new(0),
+            rejects: AtomicU64::new(0),
+        })
+    }
+
+    /// Try to admit one request: `Some(guard)` reserves a queue slot
+    /// until the guard drops; `None` means the queue is full (counted as
+    /// a reject — the caller owes the client a backpressure reply).
+    pub fn try_admit(self: &Arc<Admission>) -> Option<AdmissionGuard> {
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_queue {
+                self.rejects.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(AdmissionGuard { admission: Arc::clone(self) }),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Requests currently admitted and not yet answered.
+    pub fn depth(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn max_queue(&self) -> usize {
+        self.max_queue
+    }
+
+    /// Requests turned away since the route was created.
+    pub fn rejects(&self) -> u64 {
+        self.rejects.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII queue slot: dropping it releases the admission.
+pub struct AdmissionGuard {
+    admission: Arc<Admission>,
+}
+
+impl Drop for AdmissionGuard {
+    fn drop(&mut self) {
+        self.admission.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_the_cap_and_releases_on_drop() {
+        let adm = Admission::new(2);
+        let a = adm.try_admit().expect("slot 1");
+        let _b = adm.try_admit().expect("slot 2");
+        assert_eq!(adm.depth(), 2);
+        assert!(adm.try_admit().is_none(), "third admit must be rejected");
+        assert_eq!(adm.rejects(), 1);
+        drop(a);
+        assert_eq!(adm.depth(), 1);
+        let _c = adm.try_admit().expect("slot freed by the dropped guard");
+        assert_eq!(adm.rejects(), 1, "successful admits are not rejects");
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_the_cap() {
+        let adm = Admission::new(4);
+        let peak = AtomicUsize::new(0);
+        let admitted = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..500 {
+                        if let Some(guard) = adm.try_admit() {
+                            admitted.fetch_add(1, Ordering::Relaxed);
+                            let d = adm.depth();
+                            peak.fetch_max(d, Ordering::Relaxed);
+                            assert!(d <= 4, "depth {d} exceeded the cap");
+                            drop(guard);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::Relaxed) <= 4);
+        assert_eq!(
+            admitted.load(Ordering::Relaxed) as u64 + adm.rejects(),
+            8 * 500,
+            "every attempt either admitted or rejected"
+        );
+        assert_eq!(adm.depth(), 0, "all guards released");
+    }
+}

@@ -1,0 +1,198 @@
+//! TCP accept loop and per-connection reader/writer threads.
+//!
+//! Each accepted connection gets **two** threads: a reader that parses
+//! request lines and dispatches them (routing, admission, batcher submit
+//! — none of which block), and a writer that awaits each dispatched
+//! reply **in request order** and writes it back. Splitting the two is
+//! what makes the protocol pipelined: a client may write many requests
+//! without waiting, and consecutive requests from one connection land in
+//! the same dynamic batch — the same amortization the paper's recurrence
+//! gets from batched rows.
+//!
+//! Concurrency is bounded in two places, both sized from the
+//! [`exec::Pool`](crate::exec::Pool) policy by default: the connection
+//! budget (`max_conns`, default 8× the pool width — beyond it a
+//! connection gets one `"retry":true` line and is closed), and per-model
+//! admission ([`super::admission`]). The batch *compute* itself draws
+//! from the global pool inside `PredictionService`, so reader/writer
+//! threads stay I/O-only — the blocking discipline of DESIGN.md §2b.
+
+use super::router::{Dispatch, Router};
+use super::wire;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+/// State shared by the accept loop, every connection thread, the
+/// hot-reload poller and the [`Server`](super::Server) handle.
+pub(crate) struct Shared {
+    pub router: Router,
+    pub shutdown: AtomicBool,
+    pub active_conns: AtomicUsize,
+    pub max_conns: usize,
+    pub addr: SocketAddr,
+}
+
+impl Shared {
+    /// Begin shutdown exactly once: flip the flag and unblock the
+    /// blocking `accept` with a throwaway self-connection. A wildcard
+    /// bind (`0.0.0.0` / `::`) is not connectable on every platform, so
+    /// the probe targets the matching loopback instead.
+    pub(crate) fn begin_shutdown(&self) {
+        if !self.shutdown.swap(true, Ordering::AcqRel) {
+            let mut addr = self.addr;
+            if addr.ip().is_unspecified() {
+                addr.set_ip(match addr {
+                    SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                });
+            }
+            let _ = TcpStream::connect(addr);
+        }
+    }
+}
+
+/// Accept until shutdown. Runs on the server's accept thread.
+pub(crate) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue, // transient accept failure; keep serving
+        };
+        // connection budget: reply-and-close instead of stalling the
+        // accept queue (a client that sees "retry":true may back off)
+        if shared.active_conns.fetch_add(1, Ordering::AcqRel) >= shared.max_conns {
+            let mut s = &stream;
+            let _ = writeln!(
+                s,
+                "{}",
+                wire::overload_reply(&format!(
+                    "server is at its connection budget ({}); retry after backoff",
+                    shared.max_conns
+                ))
+            );
+            shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+            continue;
+        }
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            handle_conn(stream, &shared);
+            shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+        });
+    }
+}
+
+/// What the reader hands the writer, one entry per request line, in
+/// order.
+enum Outgoing {
+    /// a complete reply line
+    Line(String),
+    /// an admitted predict: await the batcher, then reply
+    Reply { model: String, rx: Receiver<Vec<f64>>, guard: super::admission::AdmissionGuard },
+    /// write the line, then close the connection (shutdown ack)
+    Last(String),
+}
+
+fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_nodelay(true); // request/reply lines, not bulk data
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = channel::<Outgoing>();
+    let reader_shared = Arc::clone(shared);
+    let reader = std::thread::spawn(move || read_loop(reader_stream, &reader_shared, tx));
+    write_loop(stream, rx);
+    let _ = reader.join();
+}
+
+fn read_loop(stream: TcpStream, shared: &Arc<Shared>, out: Sender<Outgoing>) {
+    for line in BufReader::new(stream).lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // client gone / broken pipe
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let outgoing = match wire::parse_request(&line) {
+            Err(e) => Outgoing::Line(wire::error_reply(&e)),
+            Ok(wire::Request::Ping) => Outgoing::Line(wire::ping_reply()),
+            Ok(wire::Request::Models) => Outgoing::Line(shared.router.models_reply()),
+            Ok(wire::Request::Stats) => Outgoing::Line(shared.router.stats_reply()),
+            Ok(wire::Request::Shutdown) => {
+                let _ = out.send(Outgoing::Last(wire::shutdown_reply()));
+                shared.begin_shutdown();
+                break;
+            }
+            Ok(wire::Request::Predict { model, x }) => {
+                match shared.router.dispatch_predict(model.as_deref(), &x) {
+                    Dispatch::Immediate(reply) => Outgoing::Line(reply),
+                    Dispatch::Pending { model, rx, guard } => {
+                        Outgoing::Reply { model, rx, guard }
+                    }
+                }
+            }
+        };
+        if out.send(outgoing).is_err() {
+            break; // writer exited (socket error): stop reading
+        }
+    }
+    // dropping `out` lets the writer drain what is pending, then exit
+}
+
+fn write_loop(stream: TcpStream, rx: Receiver<Outgoing>) {
+    let mut w = BufWriter::new(stream);
+    loop {
+        // Flush only when no reply is immediately ready: pipelined
+        // clients get batched writes, a lone request is never delayed.
+        let next = match rx.try_recv() {
+            Ok(o) => o,
+            Err(TryRecvError::Empty) => {
+                if w.flush().is_err() {
+                    return;
+                }
+                match rx.recv() {
+                    Ok(o) => o,
+                    Err(_) => return, // reader done, everything drained
+                }
+            }
+            Err(TryRecvError::Disconnected) => break,
+        };
+        let mut last = false;
+        let line = match next {
+            Outgoing::Line(l) => l,
+            Outgoing::Last(l) => {
+                last = true;
+                l
+            }
+            Outgoing::Reply { model, rx: reply_rx, guard } => {
+                let line = match reply_rx.recv() {
+                    Ok(y) => wire::predict_reply(&model, &y)
+                        .unwrap_or_else(|e| wire::error_reply(&e)),
+                    Err(_) => {
+                        // the route was swapped out mid-flight and its
+                        // service exited: rare, and retriable by contract
+                        wire::overload_reply(&format!(
+                            "model {model:?} was reloaded mid-request; retry"
+                        ))
+                    }
+                };
+                drop(guard); // release the admission slot with the reply in hand
+                line
+            }
+        };
+        if writeln!(w, "{line}").is_err() {
+            return;
+        }
+        if last {
+            break;
+        }
+    }
+    let _ = w.flush();
+}

@@ -1,0 +1,396 @@
+//! Concurrent load generator for a running `gzk server` — the
+//! measurement harness behind `gzk loadgen`.
+//!
+//! For each requested client count it opens that many TCP connections,
+//! fires `requests_per_client` predict requests per connection (rows
+//! drawn deterministically from a [`SyntheticSource`] — row i is a pure
+//! function of `(dataset, seed, i)`, so a run is reproducible), measures
+//! per-request latency, and aggregates throughput plus p50/p95/p99 from
+//! the raw samples (exact, unlike the server's fixed-bucket histogram —
+//! comparing the two is itself a useful check). With a local `--store`
+//! it also loads the same artifact and checks **every** reply
+//! bit-identical to `Model::predict` — the wire codec's shortest
+//! round-trip floats make that an equality test, not a tolerance.
+//!
+//! Backpressure replies (`"retry":true`) are retried after a short
+//! backoff and counted, so a run against a saturated server degrades to
+//! honest numbers (slower, with a retry count) rather than an error.
+//!
+//! Results are emitted as `BENCH_serve.json` (same convention as the
+//! hotpath bench's `BENCH_hotpath.json`; CI uploads it as an artifact).
+
+use super::wire;
+use crate::data::{DataSource, SyntheticSource};
+use crate::model::{Model, ModelStore};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+/// One blocking request/reply connection to a `gzk server`.
+pub struct ClientConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ClientConn {
+    pub fn connect(addr: &str) -> Result<ClientConn, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect to gzk server {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(
+            stream.try_clone().map_err(|e| format!("clone connection to {addr}: {e}"))?,
+        );
+        Ok(ClientConn { reader, writer: stream })
+    }
+
+    /// Send one request line and read the matching reply line.
+    pub fn roundtrip(&mut self, line: &str) -> Result<wire::Reply, String> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.write_all(b"\n"))
+            .map_err(|e| format!("send request: {e}"))?;
+        let mut reply = String::new();
+        match self.reader.read_line(&mut reply) {
+            Ok(0) => Err("server closed the connection".to_string()),
+            Ok(_) => wire::parse_reply(reply.trim_end()),
+            Err(e) => Err(format!("read reply: {e}")),
+        }
+    }
+}
+
+/// What to run; see the `gzk loadgen` flags in `main.rs`.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    /// client counts to sweep, one trial each (e.g. `[1, 8]`)
+    pub clients: Vec<usize>,
+    pub requests_per_client: usize,
+    /// rows come from this synthetic dataset; `None` = the dataset
+    /// recorded in the artifact (with `store`) or `elevation`
+    pub dataset: Option<String>,
+    /// model to target; `None` = the server's single model
+    pub model: Option<String>,
+    /// local copy of the server's store: enables bit-identity checking
+    pub store: Option<PathBuf>,
+    pub seed: u64,
+    /// send the wire `shutdown` command after the last trial
+    pub send_shutdown: bool,
+}
+
+/// One client-count trial, aggregated over all its connections.
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    pub clients: usize,
+    /// successful predictions (excludes retries)
+    pub requests: usize,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// backpressure replies absorbed by retrying
+    pub retries: usize,
+    /// replies that were NOT bit-identical to the local model (0 unless
+    /// verification found a real divergence)
+    pub mismatches: usize,
+}
+
+/// Everything a run produced; `write_json` emits `BENCH_serve.json`.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub addr: String,
+    pub model: String,
+    pub dataset: String,
+    pub requests_per_client: usize,
+    pub seed: u64,
+    /// bit-identity checking was active (a local store was supplied)
+    pub verified: bool,
+    pub trials: Vec<TrialResult>,
+    /// the server's `stats` reply captured after each trial
+    pub server_stats: Vec<String>,
+}
+
+impl LoadgenReport {
+    pub fn mismatches(&self) -> usize {
+        self.trials.iter().map(|t| t.mismatches).sum()
+    }
+
+    /// Machine-readable results (the CI serving-smoke artifact).
+    pub fn write_json(&self, path: &std::path::Path) -> Result<(), String> {
+        let trials: Vec<String> = self
+            .trials
+            .iter()
+            .map(|t| {
+                format!(
+                    concat!(
+                        r#"{{"clients":{},"requests":{},"wall_secs":{:.4},"throughput_rps":{:.1},"#,
+                        r#""p50_us":{:.2},"p95_us":{:.2},"p99_us":{:.2},"retries":{},"mismatches":{}}}"#
+                    ),
+                    t.clients,
+                    t.requests,
+                    t.wall_secs,
+                    t.throughput_rps,
+                    t.p50_us,
+                    t.p95_us,
+                    t.p99_us,
+                    t.retries,
+                    t.mismatches
+                )
+            })
+            .collect();
+        let text = format!(
+            concat!(
+                r#"{{"format":1,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
+                r#""requests_per_client":{},"seed":{},"verified":{},"trials":[{}]}}"#
+            ),
+            wire::json_string(&self.addr),
+            wire::json_string(&self.model),
+            wire::json_string(&self.dataset),
+            self.requests_per_client,
+            self.seed,
+            self.verified,
+            trials.join(",")
+        );
+        std::fs::write(path, text).map_err(|e| format!("write {path:?}: {e}"))
+    }
+}
+
+/// Row description of one served model from the `models` wire reply.
+struct WireModel {
+    name: String,
+    d: usize,
+}
+
+fn served_models(conn: &mut ClientConn) -> Result<Vec<WireModel>, String> {
+    let reply = conn.roundtrip(&wire::cmd_request("models"))?;
+    if !reply.ok {
+        return Err(reply.error.unwrap_or_else(|| "models command failed".to_string()));
+    }
+    let arr = reply
+        .body
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| "models reply missing models[]".to_string())?;
+    arr.iter()
+        .map(|m| {
+            Ok(WireModel {
+                name: m
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| "models reply entry missing name".to_string())?
+                    .to_string(),
+                d: m.get("d")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| "models reply entry missing d".to_string())?,
+            })
+        })
+        .collect()
+}
+
+/// `sorted[len * num/den]` with the house clamp (see `print_latency_summary`).
+fn pct(sorted: &[f64], num: usize, den: usize) -> f64 {
+    sorted[(sorted.len() * num / den).min(sorted.len() - 1)]
+}
+
+/// Drive the sweep. Per trial: `clients` connections × `requests_per_client`
+/// requests each, all clients released together (barrier) so throughput is
+/// measured under the full concurrency.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
+    if cfg.clients.is_empty() || cfg.requests_per_client == 0 {
+        return Err("loadgen needs at least one client count and one request".to_string());
+    }
+    let mut control = ClientConn::connect(&cfg.addr)?;
+    let served = served_models(&mut control)?;
+    let target = match &cfg.model {
+        Some(name) => served
+            .iter()
+            .find(|m| &m.name == name)
+            .ok_or_else(|| {
+                let have: Vec<&str> = served.iter().map(|m| m.name.as_str()).collect();
+                format!("server does not serve {name:?}; serving: {}", have.join(", "))
+            })?,
+        None => match served.len() {
+            1 => &served[0],
+            0 => return Err("server serves no models".to_string()),
+            _ => {
+                let have: Vec<&str> = served.iter().map(|m| m.name.as_str()).collect();
+                return Err(format!(
+                    "server serves several models ({}); pick one with --model",
+                    have.join(", ")
+                ));
+            }
+        },
+    };
+    let name = target.name.clone();
+    let d = target.d;
+
+    // the local twin for bit-identity checking, plus the recorded
+    // training dataset as the default row generator
+    let (local, recorded_dataset): (Option<Box<dyn Model>>, Option<String>) = match &cfg.store {
+        Some(dir) => {
+            let store = ModelStore::open_existing(dir)?;
+            let (model, meta) = store.load_with_meta(&name)?;
+            if model.feature_spec().d != d {
+                return Err(format!(
+                    "local artifact {name:?} in {dir:?} has d = {} but the server's has d = {d} \
+                     — different stores?",
+                    model.feature_spec().d
+                ));
+            }
+            (Some(model), meta.dataset)
+        }
+        None => (None, None),
+    };
+    let dataset = cfg
+        .dataset
+        .clone()
+        .or_else(|| {
+            // the artifact's recorded dataset, when it is one loadgen can
+            // regenerate (a `file:` path is not)
+            recorded_dataset.filter(|n| SyntheticSource::by_name(n, 1, cfg.seed).is_ok())
+        })
+        .unwrap_or_else(|| "elevation".to_string());
+    let max_clients = *cfg.clients.iter().max().expect("non-empty");
+    let total_rows = max_clients * cfg.requests_per_client;
+    let source = SyntheticSource::by_name(&dataset, total_rows, cfg.seed)?;
+    if source.dim() != d {
+        return Err(format!(
+            "dataset {dataset:?} has input dimension {} but model {name:?} expects d = {d}; \
+             pass a --dataset with matching dimension",
+            source.dim()
+        ));
+    }
+
+    let mut trials = Vec::with_capacity(cfg.clients.len());
+    let mut server_stats = Vec::with_capacity(cfg.clients.len());
+    for &n_clients in &cfg.clients {
+        let trial = run_trial(cfg, &name, n_clients, &source, local.as_deref())?;
+        trials.push(trial);
+        let stats = control.roundtrip(&wire::cmd_request("stats"))?;
+        if !stats.ok {
+            return Err(stats.error.unwrap_or_else(|| "stats command failed".to_string()));
+        }
+        server_stats.push(stats.raw);
+    }
+
+    if cfg.send_shutdown {
+        let reply = control.roundtrip(&wire::cmd_request("shutdown"))?;
+        if !reply.ok {
+            return Err(reply
+                .error
+                .unwrap_or_else(|| "server refused the shutdown command".to_string()));
+        }
+    }
+    Ok(LoadgenReport {
+        addr: cfg.addr.clone(),
+        model: name,
+        dataset,
+        requests_per_client: cfg.requests_per_client,
+        seed: cfg.seed,
+        verified: local.is_some(),
+        trials,
+        server_stats,
+    })
+}
+
+/// What each client thread brings home.
+struct ClientOut {
+    latencies: Vec<f64>,
+    retries: usize,
+    mismatches: usize,
+}
+
+fn run_trial(
+    cfg: &LoadgenConfig,
+    model_name: &str,
+    n_clients: usize,
+    source: &SyntheticSource,
+    local: Option<&dyn Model>,
+) -> Result<TrialResult, String> {
+    let requests = cfg.requests_per_client;
+    let barrier = Barrier::new(n_clients + 1);
+    let mut outs: Vec<Result<ClientOut, String>> = Vec::with_capacity(n_clients);
+    let mut wall = 0.0f64;
+    std::thread::scope(|scope| {
+        let mut joins = Vec::with_capacity(n_clients);
+        for t in 0..n_clients {
+            let barrier = &barrier;
+            let addr = cfg.addr.as_str();
+            joins.push(scope.spawn(move || -> Result<ClientOut, String> {
+                // connect before the barrier: setup cost is not load.
+                // EVERY thread must reach the barrier exactly once — even
+                // on a failed connect — or the whole trial deadlocks.
+                let conn = ClientConn::connect(addr);
+                barrier.wait();
+                let mut conn = conn?;
+                let mut out = ClientOut {
+                    latencies: Vec::with_capacity(requests),
+                    retries: 0,
+                    mismatches: 0,
+                };
+                for r in 0..requests {
+                    let row = t * requests + r;
+                    let (x, _y) = source.read_range(row, row + 1)?;
+                    let line = wire::predict_request(Some(model_name), x.row(0));
+                    let t0 = Instant::now();
+                    let y = loop {
+                        let reply = conn.roundtrip(&line)?;
+                        if reply.ok {
+                            break reply.y()?;
+                        }
+                        if !reply.retry || out.retries >= 10_000 {
+                            return Err(reply
+                                .error
+                                .unwrap_or_else(|| "server error".to_string()));
+                        }
+                        out.retries += 1;
+                        std::thread::sleep(Duration::from_micros(200));
+                    };
+                    out.latencies.push(t0.elapsed().as_secs_f64());
+                    if let Some(model) = local {
+                        let expect = model.predict(&x);
+                        let same = y.len() == expect.cols()
+                            && y.iter()
+                                .zip(expect.row(0))
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                        if !same {
+                            out.mismatches += 1;
+                        }
+                    }
+                }
+                Ok(out)
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        for j in joins {
+            outs.push(j.join().unwrap_or_else(|_| Err("client thread panicked".to_string())));
+        }
+        wall = t0.elapsed().as_secs_f64();
+    });
+
+    let mut latencies = Vec::with_capacity(n_clients * requests);
+    let mut retries = 0;
+    let mut mismatches = 0;
+    for out in outs {
+        let out = out?;
+        latencies.extend(out.latencies);
+        retries += out.retries;
+        mismatches += out.mismatches;
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let total = latencies.len();
+    Ok(TrialResult {
+        clients: n_clients,
+        requests: total,
+        wall_secs: wall,
+        throughput_rps: total as f64 / wall.max(1e-12),
+        p50_us: pct(&latencies, 50, 100) * 1e6,
+        p95_us: pct(&latencies, 95, 100) * 1e6,
+        p99_us: pct(&latencies, 99, 100) * 1e6,
+        retries,
+        mismatches,
+    })
+}

@@ -1,0 +1,201 @@
+//! L4 — the network serving subsystem: a std-only TCP front-end over the
+//! model / batcher / exec stack (DESIGN.md §3c).
+//!
+//! ```text
+//!   TcpListener ── accept loop ──► per-connection reader ─┐ dispatch
+//!                                   per-connection writer ◄┘ (in order)
+//!        │                                  │
+//!        │            wire: newline-delimited JSON (predict / models /
+//!        │                  stats / ping / shutdown)
+//!        ▼                                  ▼
+//!   router: name ──► ModelRoute { PredictionService, Admission }
+//!        ▲               each route = the L3 dynamic batcher over one
+//!        │               artifact; batch compute draws from exec::Pool
+//!   manifest poll: ModelStore/models.json fingerprints → hot-reload
+//! ```
+//!
+//! * [`wire`] — the request/response codec. Floats reuse the artifact
+//!   convention (shortest round-trip formatting), so predictions cross
+//!   the wire **bit-exactly** — `gzk loadgen` verifies replies against a
+//!   local `Model::predict` with equality, not tolerance.
+//! * [`router`] — multi-model routing over a [`ModelStore`] directory
+//!   with manifest-poll hot-reload: persist a new artifact into the
+//!   store (`gzk fit --out <store>`) and the running server serves it
+//!   without restart.
+//! * [`admission`] — bounded per-model queues; overload is answered with
+//!   a `"retry":true` backpressure reply instead of an unbounded queue.
+//! * [`listener`] — accept loop + per-connection reader/writer threads
+//!   (pipelined: consecutive requests from one connection share a
+//!   dynamic batch), connection budget sized from the pool policy.
+//! * [`loadgen`] — the measurement harness behind `gzk loadgen`:
+//!   concurrent clients over real sockets, bit-identity verification,
+//!   `BENCH_serve.json` with throughput + latency percentiles per client
+//!   count.
+//!
+//! [`ModelStore`]: crate::model::ModelStore
+
+pub mod admission;
+pub mod listener;
+pub mod loadgen;
+pub mod router;
+pub mod wire;
+
+pub use loadgen::{ClientConn, LoadgenConfig, LoadgenReport, TrialResult};
+pub use router::{Router, RouterConfig};
+
+use listener::Shared;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serving knobs for [`Server::start`]. The defaults match the CLI's.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// largest dynamic batch per model (the batcher's `max_batch`)
+    pub max_batch: usize,
+    /// extra batching window for bursty low-rate clients (`max_wait`)
+    pub max_wait: Duration,
+    /// per-model bound on admitted-but-unanswered requests
+    pub max_queue: usize,
+    /// how often the store manifest is polled for hot-reload
+    pub poll: Duration,
+    /// connection budget; 0 = size from the pool policy (8× pool width)
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::ZERO,
+            max_queue: 1024,
+            poll: Duration::from_millis(200),
+            max_conns: 0,
+        }
+    }
+}
+
+/// A running TCP model server. Dropping the handle does NOT stop it —
+/// call [`shutdown`](Server::shutdown) (or send the wire `shutdown`
+/// command) and then [`wait`](Server::wait).
+pub struct Server {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept_handle: Option<JoinHandle<()>>,
+    poll_handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Open the store, load every model, bind `addr` (e.g.
+    /// `127.0.0.1:7711`; port 0 picks an ephemeral port — see
+    /// [`local_addr`](Server::local_addr)) and start serving.
+    pub fn start(
+        store_dir: impl Into<PathBuf>,
+        addr: &str,
+        cfg: ServerConfig,
+    ) -> Result<Server, String> {
+        let router = Router::open(
+            store_dir,
+            RouterConfig {
+                max_batch: cfg.max_batch,
+                max_wait: cfg.max_wait,
+                max_queue: cfg.max_queue,
+            },
+        )?;
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local_addr =
+            listener.local_addr().map_err(|e| format!("local addr of {addr}: {e}"))?;
+        let max_conns = if cfg.max_conns > 0 {
+            cfg.max_conns
+        } else {
+            8 * crate::exec::Pool::global().threads()
+        };
+        let shared = Arc::new(Shared {
+            router,
+            shutdown: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            max_conns,
+            addr: local_addr,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_handle =
+            std::thread::spawn(move || listener::accept_loop(listener, accept_shared));
+        let poll_shared = Arc::clone(&shared);
+        let poll = cfg.poll.max(Duration::from_millis(1));
+        let poll_handle = std::thread::spawn(move || poll_loop(&poll_shared, poll));
+        Ok(Server {
+            shared,
+            local_addr,
+            accept_handle: Some(accept_handle),
+            poll_handle: Some(poll_handle),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Names of the models currently served.
+    pub fn model_names(&self) -> Vec<String> {
+        self.shared.router.model_names()
+    }
+
+    /// Ask the server to stop (same effect as the wire `shutdown`
+    /// command); returns immediately — pair with [`wait`](Server::wait).
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+
+    /// Block until the server has shut down (wire `shutdown` command or
+    /// [`shutdown`](Server::shutdown)), drain live connections (bounded
+    /// grace period), and return the final per-model stats reply line.
+    pub fn wait(mut self) -> String {
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.poll_handle.take() {
+            let _ = h.join();
+        }
+        // connections admitted before shutdown finish their in-flight
+        // replies; bound the grace period so wait() always returns
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.shared.active_conns.load(Ordering::Acquire) > 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.shared.router.stats_reply()
+    }
+}
+
+/// Manifest poll: the hot-reload driver. Sleeps in short slices so
+/// shutdown stays prompt even with long poll intervals; reload reports
+/// go to stderr (the server's operational log).
+fn poll_loop(shared: &Arc<Shared>, poll: Duration) {
+    loop {
+        let mut slept = Duration::ZERO;
+        while slept < poll {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let step = (poll - slept).min(Duration::from_millis(25));
+            std::thread::sleep(step);
+            slept += step;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match shared.router.sync(false) {
+            Ok(changes) => {
+                for c in changes {
+                    eprintln!("gzk server: {c}");
+                }
+            }
+            Err(e) => eprintln!("gzk server: store poll failed: {e}"),
+        }
+    }
+}

@@ -1,0 +1,542 @@
+//! Multi-model routing over a [`ModelStore`] directory, with
+//! manifest-poll hot-reload.
+//!
+//! Each manifest entry becomes a [`ModelRoute`]: the loaded model behind
+//! its own [`PredictionService`] batcher (so dynamic batching,
+//! pool-parallel featurization and bit-identical prediction all come from
+//! the existing L3 machinery) plus its own [`Admission`] bound. Routing is
+//! by model name; a request that names no model is routed to the single
+//! served model, and is an error when several are served.
+//!
+//! **Hot-reload contract:** [`Router::sync`] re-reads the manifest and
+//! compares each entry's artifact *fingerprint* (file name, byte length,
+//! mtime). New entries start serving, changed entries are reloaded and
+//! swapped in atomically (requests already in flight finish on the old
+//! model — its service thread exits once its last reply is delivered),
+//! and entries gone from the manifest stop serving. The store's
+//! temp-file + rename write discipline means a poll never observes a
+//! torn artifact, so `gzk fit --out <store>` against a live server is the
+//! whole deployment story. A failed reload keeps the previous route
+//! serving (and is reported, not fatal) — a bad deploy degrades to "old
+//! model keeps serving", never to an outage.
+
+use super::admission::{Admission, AdmissionGuard};
+use super::wire;
+use crate::coordinator::PredictionService;
+use crate::model::{ModelKind, ModelStore};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, SystemTime};
+
+/// Per-route serving knobs (shared by every route the router builds).
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// largest batch the service loop drains per model iteration
+    pub max_batch: usize,
+    /// optional extra batching window for bursty low-rate clients
+    pub max_wait: Duration,
+    /// per-model bound on admitted-but-unanswered requests
+    pub max_queue: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig { max_batch: 64, max_wait: Duration::ZERO, max_queue: 1024 }
+    }
+}
+
+/// What identifies an artifact version on disk. `ModelStore` writes via
+/// temp-file + rename, so any rewrite bumps the mtime (and, for model
+/// artifacts, almost always the byte length); equality of fingerprints is
+/// the router's "nothing to reload" test.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Fingerprint {
+    file: String,
+    len: u64,
+    modified: Option<SystemTime>,
+}
+
+impl Fingerprint {
+    fn of(file: &str, path: &Path) -> Result<Fingerprint, String> {
+        let meta = std::fs::metadata(path).map_err(|e| format!("stat {path:?}: {e}"))?;
+        Ok(Fingerprint { file: file.to_string(), len: meta.len(), modified: meta.modified().ok() })
+    }
+}
+
+/// One served model: its batcher, its admission bound, and the identity
+/// of the artifact it was loaded from.
+struct ModelRoute {
+    name: String,
+    kind: ModelKind,
+    d: usize,
+    feature_dim: usize,
+    output_dim: usize,
+    svc: PredictionService,
+    admission: Arc<Admission>,
+    fingerprint: Fingerprint,
+}
+
+/// How the listener answers a predict request.
+pub enum Dispatch {
+    /// Admitted into a model's batcher: await `rx`, then reply. The guard
+    /// holds the admission slot until the reply is written.
+    Pending { model: String, rx: Receiver<Vec<f64>>, guard: AdmissionGuard },
+    /// Answered without touching a batcher (routing / validation /
+    /// backpressure) — already a complete reply line.
+    Immediate(String),
+}
+
+pub struct Router {
+    store: ModelStore,
+    cfg: RouterConfig,
+    routes: RwLock<BTreeMap<String, Arc<ModelRoute>>>,
+    /// Artifact versions that failed to stat (`None`) or load
+    /// (`Some(fingerprint)`) during a non-strict sync — remembered so a
+    /// bad deploy is reported ONCE and retried only when the file
+    /// changes again, not re-parsed and re-logged on every poll tick.
+    failed: std::sync::Mutex<BTreeMap<String, Option<Fingerprint>>>,
+}
+
+impl Router {
+    /// Open the store and load every manifest entry. Startup is strict:
+    /// an empty store or any unloadable artifact is an error (fail fast
+    /// at deploy time); only the *polling* resync tolerates bad entries.
+    pub fn open(
+        store_dir: impl Into<std::path::PathBuf>,
+        cfg: RouterConfig,
+    ) -> Result<Router, String> {
+        if cfg.max_batch < 1 {
+            return Err("router max_batch must be >= 1".to_string());
+        }
+        if cfg.max_queue < 1 {
+            return Err("router max_queue must be >= 1".to_string());
+        }
+        let store = ModelStore::open_existing(store_dir)?;
+        let router = Router {
+            store,
+            cfg,
+            routes: RwLock::new(BTreeMap::new()),
+            failed: std::sync::Mutex::new(BTreeMap::new()),
+        };
+        router.sync(true)?;
+        if router.routes.read().expect("routes lock").is_empty() {
+            return Err(format!(
+                "store {:?} has no models; run `gzk fit --out <dir>` first",
+                router.store.dir()
+            ));
+        }
+        Ok(router)
+    }
+
+    /// Reconcile the routes with the store manifest; returns one
+    /// human-readable line per change. With `strict` (startup) any
+    /// failure is `Err`; without (the poll loop) a failing entry is
+    /// reported in the change list and the previous route keeps serving.
+    pub fn sync(&self, strict: bool) -> Result<Vec<String>, String> {
+        let entries = self.store.entries()?;
+        let mut changes = Vec::new();
+        // snapshot current fingerprints, then build replacement routes
+        // OUTSIDE the lock (loading an artifact can be slow; requests
+        // keep flowing to the old route meanwhile)
+        let current: BTreeMap<String, Fingerprint> = {
+            let routes = self.routes.read().expect("routes lock");
+            routes.iter().map(|(n, r)| (n.clone(), r.fingerprint.clone())).collect()
+        };
+        let mut fresh: Vec<Arc<ModelRoute>> = Vec::new();
+        for entry in &entries {
+            let path = self.store.dir().join(&entry.file);
+            let fp = match Fingerprint::of(&entry.file, &path) {
+                Ok(fp) => fp,
+                Err(e) => {
+                    if strict {
+                        return Err(e);
+                    }
+                    // report a missing/unstattable artifact once, not on
+                    // every poll tick (`None` marks "stat kept failing")
+                    let already = self
+                        .failed
+                        .lock()
+                        .expect("failed-artifact lock")
+                        .insert(entry.name.clone(), None)
+                        == Some(None);
+                    if !already {
+                        changes.push(format!("route {:?}: skipped ({e})", entry.name));
+                    }
+                    continue;
+                }
+            };
+            if current.get(&entry.name) == Some(&fp) {
+                continue; // unchanged artifact: keep the live route
+            }
+            if self.failed.lock().expect("failed-artifact lock").get(&entry.name)
+                == Some(&Some(fp.clone()))
+            {
+                continue; // this exact version already failed to load
+            }
+            match self.build_route(&entry.name, fp.clone()) {
+                Ok(route) => {
+                    self.failed.lock().expect("failed-artifact lock").remove(&route.name);
+                    changes.push(format!(
+                        "route {:?}: {} ({}, d={}, F={}, out={})",
+                        route.name,
+                        if current.contains_key(&route.name) {
+                            "reloaded changed artifact"
+                        } else {
+                            "serving new artifact"
+                        },
+                        route.kind.name(),
+                        route.d,
+                        route.feature_dim,
+                        route.output_dim
+                    ));
+                    fresh.push(Arc::new(route));
+                }
+                Err(e) => {
+                    if strict {
+                        return Err(format!("load model {:?}: {e}", entry.name));
+                    }
+                    // remember this exact version as bad: retry only when
+                    // the file changes again
+                    self.failed
+                        .lock()
+                        .expect("failed-artifact lock")
+                        .insert(entry.name.clone(), Some(fp));
+                    changes.push(format!(
+                        "route {:?}: load failed, previous version keeps serving ({e})",
+                        entry.name
+                    ));
+                }
+            }
+        }
+        let manifest_names: std::collections::BTreeSet<&str> =
+            entries.iter().map(|e| e.name.as_str()).collect();
+        let mut routes = self.routes.write().expect("routes lock");
+        for route in fresh {
+            routes.insert(route.name.clone(), route);
+        }
+        let stale: Vec<String> = routes
+            .keys()
+            .filter(|n| !manifest_names.contains(n.as_str()))
+            .cloned()
+            .collect();
+        for name in stale {
+            routes.remove(&name);
+            changes.push(format!("route {name:?}: removed (no longer in the store manifest)"));
+        }
+        self.failed
+            .lock()
+            .expect("failed-artifact lock")
+            .retain(|name, _| manifest_names.contains(name.as_str()));
+        Ok(changes)
+    }
+
+    fn build_route(&self, name: &str, fingerprint: Fingerprint) -> Result<ModelRoute, String> {
+        let model = self.store.load(name)?;
+        let kind = model.kind();
+        let d = model.feature_spec().d;
+        let feature_dim = model.feature_spec().feature_dim();
+        let output_dim = model.output_dim();
+        let svc = PredictionService::serve(model, self.cfg.max_batch, self.cfg.max_wait);
+        Ok(ModelRoute {
+            name: name.to_string(),
+            kind,
+            d,
+            feature_dim,
+            output_dim,
+            svc,
+            admission: Admission::new(self.cfg.max_queue),
+            fingerprint,
+        })
+    }
+
+    fn lookup(&self, name: Option<&str>) -> Result<Arc<ModelRoute>, String> {
+        let routes = self.routes.read().expect("routes lock");
+        match name {
+            Some(n) => routes.get(n).cloned().ok_or_else(|| {
+                let have: Vec<&str> = routes.keys().map(String::as_str).collect();
+                format!(
+                    "no model {n:?}; serving: {}",
+                    if have.is_empty() { "none".to_string() } else { have.join(", ") }
+                )
+            }),
+            None => match routes.len() {
+                1 => Ok(routes.values().next().expect("len checked").clone()),
+                0 => Err("no models are being served".to_string()),
+                _ => Err(format!(
+                    "multiple models served ({}); name one with \"model\"",
+                    routes.keys().cloned().collect::<Vec<_>>().join(", ")
+                )),
+            },
+        }
+    }
+
+    /// Route one predict request: resolve the model, validate the input
+    /// dimension, admit against the model's queue bound, submit to its
+    /// batcher. Never blocks — the listener's reader thread calls this,
+    /// and only its *writer* thread awaits replies.
+    pub fn dispatch_predict(&self, model: Option<&str>, x: &[f64]) -> Dispatch {
+        let route = match self.lookup(model) {
+            Ok(r) => r,
+            Err(e) => return Dispatch::Immediate(wire::error_reply(&e)),
+        };
+        if x.len() != route.d {
+            return Dispatch::Immediate(wire::error_reply(&format!(
+                "input has {} values but model {:?} expects d = {}",
+                x.len(),
+                route.name,
+                route.d
+            )));
+        }
+        let Some(guard) = route.admission.try_admit() else {
+            return Dispatch::Immediate(wire::overload_reply(&format!(
+                "model {:?} queue is full ({} in flight); retry after backoff",
+                route.name,
+                route.admission.max_queue()
+            )));
+        };
+        match route.svc.client().submit(x) {
+            Ok(rx) => Dispatch::Pending { model: route.name.clone(), rx, guard },
+            Err(e) => Dispatch::Immediate(wire::error_reply(&e)),
+        }
+    }
+
+    /// Names of the currently served models (sorted).
+    pub fn model_names(&self) -> Vec<String> {
+        self.routes.read().expect("routes lock").keys().cloned().collect()
+    }
+
+    /// The `models` wire reply: one row per served model.
+    pub fn models_reply(&self) -> String {
+        let routes = self.routes.read().expect("routes lock");
+        let rows: Vec<String> = routes
+            .values()
+            .map(|r| {
+                format!(
+                    r#"{{"name":{},"kind":"{}","d":{},"feature_dim":{},"output_dim":{}}}"#,
+                    wire::json_string(&r.name),
+                    r.kind.name(),
+                    r.d,
+                    r.feature_dim,
+                    r.output_dim
+                )
+            })
+            .collect();
+        format!(r#"{{"ok":true,"models":[{}]}}"#, rows.join(","))
+    }
+
+    /// The `stats` wire reply: per-model [`ServeMetrics`] counters,
+    /// latency percentiles from the fixed-bucket histogram, and the
+    /// admission queue state.
+    ///
+    /// [`ServeMetrics`]: crate::coordinator::ServeMetrics
+    pub fn stats_reply(&self) -> String {
+        let routes = self.routes.read().expect("routes lock");
+        let rows: Vec<String> = routes
+            .values()
+            .map(|r| {
+                let m = r.svc.metrics();
+                format!(
+                    concat!(
+                        r#"{{"model":{},"kind":"{}","requests":{},"batches":{},"max_batch_seen":{},"#,
+                        r#""p50_us":{:.1},"p95_us":{:.1},"p99_us":{:.1},"#,
+                        r#""queue_depth":{},"max_queue":{},"rejects":{}}}"#
+                    ),
+                    wire::json_string(&r.name),
+                    r.kind.name(),
+                    m.requests,
+                    m.batches,
+                    m.max_batch_seen,
+                    m.latency.quantile(0.5) * 1e6,
+                    m.latency.quantile(0.95) * 1e6,
+                    m.latency.quantile(0.99) * 1e6,
+                    r.admission.depth(),
+                    r.admission.max_queue(),
+                    r.admission.rejects()
+                )
+            })
+            .collect();
+        format!(r#"{{"ok":true,"stats":[{}]}}"#, rows.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{FeatureSpec, KernelSpec, Method};
+    use crate::linalg::Mat;
+    use crate::model::{Model, RidgeModel};
+    use crate::rng::Rng;
+
+    fn fresh_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("gzk-router-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_ridge(seed: u64) -> RidgeModel {
+        let spec = FeatureSpec::new(
+            KernelSpec::Gaussian { bandwidth: 1.0 },
+            Method::Gegenbauer { q: 5, s: 1 },
+            16,
+            seed,
+        )
+        .bind(2);
+        let mut rng = Rng::new(seed ^ 0xF00);
+        let x = Mat::from_fn(40, 2, |_, _| rng.normal() * 0.5);
+        let y: Vec<f64> = (0..40).map(|i| x[(i, 0)] - x[(i, 1)]).collect();
+        RidgeModel::fit(spec, &x, &y, 1e-3).unwrap()
+    }
+
+    fn recv_y(router: &Router, model: Option<&str>, x: &[f64]) -> Result<Vec<f64>, String> {
+        match router.dispatch_predict(model, x) {
+            Dispatch::Pending { rx, .. } => {
+                rx.recv().map_err(|_| "service dropped request".to_string())
+            }
+            Dispatch::Immediate(line) => Err(line),
+        }
+    }
+
+    #[test]
+    fn routes_validate_and_predict_bit_identically() {
+        let dir = fresh_dir("basic");
+        let store = ModelStore::open(&dir).unwrap();
+        let model = small_ridge(7);
+        store.save("ridge", &model).unwrap();
+        let router = Router::open(&dir, RouterConfig::default()).unwrap();
+        assert_eq!(router.model_names(), vec!["ridge".to_string()]);
+
+        let x = [0.3, -0.8];
+        let expect = Model::predict(&model, &Mat::from_vec(1, 2, x.to_vec()));
+        // named and unnamed routing agree, bit for bit
+        for sel in [Some("ridge"), None] {
+            let y = recv_y(&router, sel, &x).unwrap();
+            assert_eq!(y.len(), 1);
+            assert_eq!(y[0].to_bits(), expect[(0, 0)].to_bits());
+        }
+        // wrong dimension and unknown model are immediate error replies
+        let e = recv_y(&router, None, &[1.0]).unwrap_err();
+        assert!(e.contains("expects d = 2"), "{e}");
+        let e = recv_y(&router, Some("nope"), &x).unwrap_err();
+        assert!(e.contains("no model") && e.contains("ridge"), "{e}");
+        // stats counts the two successful predictions
+        let stats = router.stats_reply();
+        assert!(stats.contains(r#""requests":2"#), "{stats}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sync_adds_reloads_and_removes_routes() {
+        let dir = fresh_dir("sync");
+        let store = ModelStore::open(&dir).unwrap();
+        store.save("a", &small_ridge(1)).unwrap();
+        let router = Router::open(&dir, RouterConfig::default()).unwrap();
+        let x = [0.2, 0.4];
+        let y1 = recv_y(&router, None, &x).unwrap();
+
+        // a second model appears in the store: picked up by sync, and an
+        // unnamed predict now requires a model name
+        store.save("b", &small_ridge(2)).unwrap();
+        let changes = router.sync(false).unwrap();
+        assert_eq!(changes.len(), 1, "{changes:?}");
+        assert!(changes[0].contains("serving new artifact"), "{changes:?}");
+        assert_eq!(router.model_names(), vec!["a".to_string(), "b".to_string()]);
+        let e = recv_y(&router, None, &x).unwrap_err();
+        assert!(e.contains("multiple models"), "{e}");
+        assert!(router.models_reply().contains(r#""name":"b""#));
+
+        // an unchanged store is a no-op sync
+        assert!(router.sync(false).unwrap().is_empty());
+
+        // replacing "a"'s artifact hot-swaps the route: predictions change
+        std::thread::sleep(Duration::from_millis(20)); // ensure a distinct mtime
+        let replacement = small_ridge(99);
+        store.save("a", &replacement).unwrap();
+        let changes = router.sync(false).unwrap();
+        assert!(
+            changes.iter().any(|c| c.contains("reloaded changed artifact")),
+            "{changes:?}"
+        );
+        let y2 = recv_y(&router, Some("a"), &x).unwrap();
+        let expect = Model::predict(&replacement, &Mat::from_vec(1, 2, x.to_vec()));
+        assert_eq!(y2[0].to_bits(), expect[(0, 0)].to_bits());
+        assert_ne!(y1[0].to_bits(), y2[0].to_bits(), "swap must change the served model");
+
+        // dropping "b" from the manifest stops serving it
+        let manifest = std::fs::read_to_string(dir.join("models.json")).unwrap();
+        let pruned = manifest.replace(r#",{"name":"b","kind":"ridge","file":"b.model.json"}"#, "");
+        assert_ne!(manifest, pruned, "test must actually prune the manifest");
+        std::fs::write(dir.join("models.json"), pruned).unwrap();
+        let changes = router.sync(false).unwrap();
+        assert!(changes.iter().any(|c| c.contains("removed")), "{changes:?}");
+        assert_eq!(router.model_names(), vec!["a".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_is_strict_and_polling_is_not() {
+        // empty store: startup refuses
+        let dir = fresh_dir("strict");
+        let _ = ModelStore::open(&dir).unwrap();
+        let err = Router::open(&dir, RouterConfig::default()).unwrap_err();
+        assert!(err.contains("no models"), "{err}");
+
+        // a corrupt artifact: startup refuses ...
+        let store = ModelStore::open(&dir).unwrap();
+        store.save("ok", &small_ridge(3)).unwrap();
+        let router = Router::open(&dir, RouterConfig::default()).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        std::fs::write(dir.join("ok.model.json"), "corrupt{").unwrap();
+        assert!(Router::open(&dir, RouterConfig::default()).is_err());
+        // ... but a live router keeps the previous route serving
+        let changes = router.sync(false).unwrap();
+        assert!(
+            changes.iter().any(|c| c.contains("previous version keeps serving")),
+            "{changes:?}"
+        );
+        // the bad version is remembered: the next poll is silent, not a
+        // re-parse + re-report of the same broken artifact
+        assert!(router.sync(false).unwrap().is_empty());
+        assert!(recv_y(&router, None, &[0.1, 0.2]).is_ok());
+        // a rewritten (changed) artifact is retried and swaps in
+        std::thread::sleep(Duration::from_millis(20));
+        let fixed = small_ridge(8);
+        store.save("ok", &fixed).unwrap();
+        let changes = router.sync(false).unwrap();
+        assert!(changes.iter().any(|c| c.contains("reloaded")), "{changes:?}");
+        let y = recv_y(&router, None, &[0.1, 0.2]).unwrap();
+        let expect = Model::predict(&fixed, &Mat::from_vec(1, 2, vec![0.1, 0.2]));
+        assert_eq!(y[0].to_bits(), expect[(0, 0)].to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_queue_is_a_retriable_overload_reply() {
+        let dir = fresh_dir("overload");
+        let store = ModelStore::open(&dir).unwrap();
+        store.save("ridge", &small_ridge(5)).unwrap();
+        let cfg = RouterConfig { max_queue: 1, ..RouterConfig::default() };
+        let router = Router::open(&dir, cfg).unwrap();
+        let x = [0.1, 0.2];
+        // hold one admitted request un-awaited: the queue (bound 1) is full
+        let first = router.dispatch_predict(None, &x);
+        let Dispatch::Pending { rx, guard, .. } = first else {
+            panic!("first request must be admitted");
+        };
+        match router.dispatch_predict(None, &x) {
+            Dispatch::Immediate(line) => {
+                let reply = wire::parse_reply(&line).unwrap();
+                assert!(!reply.ok && reply.retry, "{line}");
+                assert!(reply.error.unwrap().contains("queue is full"));
+            }
+            Dispatch::Pending { .. } => panic!("second request must be rejected"),
+        }
+        assert!(router.stats_reply().contains(r#""rejects":1"#));
+        // releasing the slot re-admits
+        let _ = rx.recv().unwrap();
+        drop(guard);
+        assert!(matches!(router.dispatch_predict(None, &x), Dispatch::Pending { .. }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,242 @@
+//! Wire codec for the TCP serving protocol: newline-delimited JSON, one
+//! request object per line, replies in request order on the same
+//! connection.
+//!
+//! Request grammar (the full protocol — see DESIGN.md §3c):
+//!
+//! ```text
+//! {"cmd":"predict","x":[1.0,2.0,3.0],"model":"ridge"}   model optional when
+//!                                                        exactly one is served
+//! {"cmd":"models"}      list served models (name, kind, d, output_dim)
+//! {"cmd":"stats"}       per-model ServeMetrics + latency percentiles +
+//!                       admission queue depth / rejects
+//! {"cmd":"ping"}        liveness probe
+//! {"cmd":"shutdown"}    stop the server after acking
+//! ```
+//!
+//! Every reply is one JSON object with an `"ok"` field; errors carry
+//! `"error"` and — for backpressure rejects, the one retriable failure —
+//! `"retry":true`. Floats reuse the model-artifact convention
+//! ([`artifact::fmt_f64`](crate::model::artifact::fmt_f64): shortest
+//! round-trip `{:?}` formatting, parsed back via `str::parse::<f64>`), so
+//! a prediction crosses the wire **bit-exactly** — the loadgen harness
+//! checks replies against a local `Model::predict` with `==`, not a
+//! tolerance.
+
+use crate::model::artifact::{vec_from_json, vec_to_json};
+use crate::runtime::Json;
+
+/// One parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Predict one point; `model` routes between served models and may be
+    /// omitted when the server serves exactly one.
+    Predict { model: Option<String>, x: Vec<f64> },
+    Models,
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+/// Parse one request line. Malformed input is an error *message* (the
+/// listener turns it into an error reply and keeps the connection) —
+/// never a panic, since every byte here is client-controlled.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| format!("malformed request: {e}"))?;
+    let cmd = j
+        .get("cmd")
+        .and_then(|c| c.as_str())
+        .ok_or_else(|| "request missing string field \"cmd\"".to_string())?;
+    match cmd {
+        "predict" => {
+            let x = vec_from_json(
+                j.get("x").ok_or_else(|| "predict request missing \"x\"".to_string())?,
+            )
+            .map_err(|_| "predict \"x\" must be an array of numbers".to_string())?;
+            if x.is_empty() {
+                return Err("predict \"x\" must not be empty".to_string());
+            }
+            // "1e999" parses to inf: refuse it here so a hostile request
+            // can never push a non-finite value into the shared batch
+            if !x.iter().all(|v| v.is_finite()) {
+                return Err("predict \"x\" contains a non-finite value".to_string());
+            }
+            let model = match j.get("model") {
+                None => None,
+                Some(Json::Str(s)) => Some(s.clone()),
+                Some(_) => {
+                    // a non-string model must not silently fall back to
+                    // single-model routing — that would mask a client bug
+                    return Err("predict \"model\" must be a string".to_string());
+                }
+            };
+            Ok(Request::Predict { model, x })
+        }
+        "models" => Ok(Request::Models),
+        "stats" => Ok(Request::Stats),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!(
+            "unknown cmd {other:?}; known: predict, models, stats, ping, shutdown"
+        )),
+    }
+}
+
+/// Build a predict request line (the loadgen client side).
+pub fn predict_request(model: Option<&str>, x: &[f64]) -> String {
+    match model {
+        Some(m) => {
+            format!(r#"{{"cmd":"predict","model":{},"x":{}}}"#, json_string(m), vec_to_json(x))
+        }
+        None => format!(r#"{{"cmd":"predict","x":{}}}"#, vec_to_json(x)),
+    }
+}
+
+/// Build an argument-less command line (`models` / `stats` / `ping` /
+/// `shutdown`).
+pub fn cmd_request(cmd: &str) -> String {
+    format!(r#"{{"cmd":{}}}"#, json_string(cmd))
+}
+
+/// Successful predict reply. Errs (instead of panicking in the artifact
+/// float formatter) if the model produced a non-finite value, so one
+/// pathological prediction degrades to an error reply, not a dead
+/// connection.
+pub fn predict_reply(model: &str, y: &[f64]) -> Result<String, String> {
+    if !y.iter().all(|v| v.is_finite()) {
+        return Err(format!("model {model:?} produced a non-finite prediction"));
+    }
+    Ok(format!(r#"{{"ok":true,"model":{},"y":{}}}"#, json_string(model), vec_to_json(y)))
+}
+
+/// Non-retriable error reply.
+pub fn error_reply(msg: &str) -> String {
+    format!(r#"{{"ok":false,"error":{}}}"#, json_string(msg))
+}
+
+/// Backpressure reply: the admission queue (or the connection budget) is
+/// full. `"retry":true` is the contract that THIS failure — alone — is
+/// safe and sensible to retry after backoff.
+pub fn overload_reply(msg: &str) -> String {
+    format!(r#"{{"ok":false,"error":{},"retry":true}}"#, json_string(msg))
+}
+
+pub fn ping_reply() -> String {
+    r#"{"ok":true,"pong":true}"#.to_string()
+}
+
+pub fn shutdown_reply() -> String {
+    r#"{"ok":true,"stopping":true}"#.to_string()
+}
+
+/// One parsed reply line (the loadgen client side).
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub ok: bool,
+    pub error: Option<String>,
+    /// set on backpressure rejects: retry after backoff is safe
+    pub retry: bool,
+    /// the whole reply object, for command-specific fields
+    pub body: Json,
+    /// the reply line verbatim (the in-crate `Json` has no serializer;
+    /// loadgen embeds server stats in its report as received)
+    pub raw: String,
+}
+
+impl Reply {
+    /// The prediction vector of a predict reply.
+    pub fn y(&self) -> Result<Vec<f64>, String> {
+        if !self.ok {
+            return Err(self.error.clone().unwrap_or_else(|| "server error".to_string()));
+        }
+        vec_from_json(
+            self.body.get("y").ok_or_else(|| "predict reply missing \"y\"".to_string())?,
+        )
+    }
+}
+
+/// Parse one reply line.
+pub fn parse_reply(line: &str) -> Result<Reply, String> {
+    let j = Json::parse(line).map_err(|e| format!("malformed reply: {e}"))?;
+    let ok = match j.get("ok") {
+        Some(Json::Bool(b)) => *b,
+        _ => return Err("reply missing boolean field \"ok\"".to_string()),
+    };
+    let error = j.get("error").and_then(|e| e.as_str()).map(str::to_string);
+    let retry = matches!(j.get("retry"), Some(Json::Bool(true)));
+    Ok(Reply { ok, error, retry, body: j, raw: line.to_string() })
+}
+
+// Reply messages embed arbitrary error text (paths, debug-quoted
+// names); the crate's one JSON string-literal writer lives next to the
+// artifact codec.
+pub(crate) use crate::model::artifact::json_string;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_round_trips_bit_exactly() {
+        // awkward floats: subnormal, negative zero, many digits
+        let x = vec![1.0 / 3.0, -0.0, 5e-324, 1.23456789012345e300];
+        let line = predict_request(Some("ridge"), &x);
+        match parse_request(&line).unwrap() {
+            Request::Predict { model, x: got } => {
+                assert_eq!(model.as_deref(), Some("ridge"));
+                assert_eq!(x.len(), got.len());
+                for (a, b) in x.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        let reply = predict_reply("ridge", &x).unwrap();
+        let parsed = parse_reply(&reply).unwrap();
+        assert!(parsed.ok && !parsed.retry);
+        let y = parsed.y().unwrap();
+        for (a, b) in x.iter().zip(&y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage_without_panicking() {
+        for bad in [
+            "",
+            "not json",
+            "{}",
+            r#"{"cmd":"predict"}"#,
+            r#"{"cmd":"predict","x":[]}"#,
+            r#"{"cmd":"predict","x":["a"]}"#,
+            r#"{"cmd":"predict","x":[1e999]}"#,
+            r#"{"cmd":"predict","x":[1],"model":5}"#,
+            r#"{"cmd":"launch-missiles"}"#,
+            r#"{"cmd":42}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "accepted {bad:?}");
+        }
+        assert_eq!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(parse_request(&cmd_request("stats")).unwrap(), Request::Stats);
+        assert_eq!(parse_request(&cmd_request("shutdown")).unwrap(), Request::Shutdown);
+        // model omitted: route to the single served model
+        match parse_request(r#"{"cmd":"predict","x":[1,2]}"#).unwrap() {
+            Request::Predict { model: None, x } => assert_eq!(x, vec![1.0, 2.0]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_replies_escape_arbitrary_text_and_carry_retry() {
+        let e = error_reply("no model \"a\\b\"\nhave: c");
+        let parsed = parse_reply(&e).unwrap();
+        assert!(!parsed.ok && !parsed.retry);
+        assert_eq!(parsed.error.as_deref(), Some("no model \"a\\b\"\nhave: c"));
+        assert!(parsed.y().is_err());
+        let o = parse_reply(&overload_reply("queue full")).unwrap();
+        assert!(!o.ok && o.retry);
+        // non-finite predictions degrade to an error, not a panic
+        assert!(predict_reply("m", &[f64::NAN]).is_err());
+        assert!(predict_reply("m", &[f64::INFINITY]).is_err());
+    }
+}

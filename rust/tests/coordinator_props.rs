@@ -238,7 +238,8 @@ fn prop_service_answers_every_request_exactly_once() {
             model,
             1 + (c.shard_a % 8),
             Duration::from_micros(300),
-        );
+        )
+        .map_err(|e| format!("start service: {e}"))?;
         // concurrent clients with interleaved indices
         let mut joins = Vec::new();
         for t in 0..3usize {

@@ -1,0 +1,138 @@
+//! Batcher-under-concurrency properties: N client threads × M requests
+//! through ONE `PredictionService`, asserting that no reply is lost,
+//! duplicated or cross-wired, that `max_batch` is respected, and that the
+//! metrics totals are consistent with what the clients observed. This is
+//! the correctness foundation the network serving layer
+//! (`tests/server_e2e.rs`) builds on.
+
+use gzk::coordinator::PredictionService;
+use gzk::features::{FeatureSpec, Featurizer as _, KernelSpec, Method};
+use gzk::krr::FeatureRidge;
+use gzk::linalg::Mat;
+use gzk::rng::Rng;
+use std::time::Duration;
+
+const N_CLIENTS: usize = 8;
+const N_REQUESTS: usize = 40;
+const MAX_BATCH: usize = 4;
+
+fn trained(n: usize) -> (gzk::features::BoundSpec, FeatureRidge, Mat, Vec<f64>) {
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 6, s: 2 },
+        64,
+        33,
+    )
+    .bind(3);
+    let mut rng = Rng::new(44);
+    let x = Mat::from_fn(n, 3, |_, _| rng.normal() * 0.5);
+    let y: Vec<f64> = (0..n).map(|i| x[(i, 0)] - 0.5 * x[(i, 2)]).collect();
+    let z = spec.build().featurize(&x);
+    let model = FeatureRidge::fit(&z, &y, 1e-3);
+    (spec, model, x, y)
+}
+
+#[test]
+fn concurrent_clients_lose_nothing_and_metrics_add_up() {
+    let (spec, model, x, _) = trained(N_CLIENTS * N_REQUESTS);
+    let z = spec.build().featurize(&x);
+    let expect = model.predict(&z);
+    let svc = PredictionService::start(spec, model, MAX_BATCH, Duration::from_micros(200))
+        .expect("start service");
+
+    // Every client owns a disjoint row range and checks each reply
+    // against the direct (unbatched) prediction for EXACTLY that row —
+    // a lost reply hangs recv (caught by the harness), a duplicated or
+    // cross-wired one shows up as a value mismatch.
+    std::thread::scope(|scope| {
+        for t in 0..N_CLIENTS {
+            let client = svc.client();
+            let x = &x;
+            let expect = &expect;
+            scope.spawn(move || {
+                for r in 0..N_REQUESTS {
+                    let i = t * N_REQUESTS + r;
+                    let got = client.predict(x.row(i)).expect("served");
+                    assert_eq!(
+                        got.to_bits(),
+                        expect[i].to_bits(),
+                        "client {t} request {r}: reply for the wrong row"
+                    );
+                }
+            });
+        }
+    });
+
+    let m = svc.metrics();
+    let total = N_CLIENTS * N_REQUESTS;
+    // no lost or duplicated requests: the service counted exactly what
+    // the clients received, and batching never exceeded its bound
+    assert_eq!(m.requests, total);
+    assert!(m.max_batch_seen >= 1 && m.max_batch_seen <= MAX_BATCH, "{}", m.max_batch_seen);
+    assert!(
+        m.batches >= total.div_ceil(MAX_BATCH) && m.batches <= total,
+        "batches {} outside [{}, {total}]",
+        m.batches,
+        total.div_ceil(MAX_BATCH)
+    );
+    // one latency sample per answered request, none negative
+    assert_eq!(m.latency.count(), total as u64);
+    assert!(m.latency.quantile(0.5) > 0.0);
+    assert!(m.latency.quantile(0.99) >= m.latency.quantile(0.5));
+    assert!(m.batch_secs_total > 0.0);
+}
+
+#[test]
+fn mixed_good_and_bad_requests_never_poison_the_batch_loop() {
+    // concurrent clients where every other request has the wrong
+    // dimension: the bad ones error at the client, the good ones are
+    // answered correctly, and the shared loop survives it all
+    let (spec, model, x, _) = trained(64);
+    let z = spec.build().featurize(&x);
+    let expect = model.predict(&z);
+    let svc =
+        PredictionService::start(spec, model, 8, Duration::ZERO).expect("start service");
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let client = svc.client();
+            let x = &x;
+            let expect = &expect;
+            scope.spawn(move || {
+                for r in 0..32usize {
+                    let i = (t * 32 + r) % x.rows();
+                    if r % 2 == 0 {
+                        let got = client.predict(x.row(i)).expect("served");
+                        assert_eq!(got.to_bits(), expect[i].to_bits());
+                    } else {
+                        let wrong = vec![0.0; 2 + (r % 3) * 2]; // 2, 4 or 6 values, never 3
+                        let err = client.predict_vec(&wrong).unwrap_err();
+                        assert!(err.contains("expects d = 3"), "{err}");
+                    }
+                }
+            });
+        }
+    });
+    // only the well-formed half was ever admitted
+    assert_eq!(svc.metrics().requests, 4 * 16);
+}
+
+#[test]
+fn shutdown_after_concurrency_reports_final_metrics() {
+    let (spec, model, x, _) = trained(32);
+    let svc =
+        PredictionService::start(spec, model, 4, Duration::ZERO).expect("start service");
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let client = svc.client();
+            let x = &x;
+            scope.spawn(move || {
+                for r in 0..8usize {
+                    client.predict(x.row((t * 8 + r) % x.rows())).expect("served");
+                }
+            });
+        }
+    });
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 32);
+    assert_eq!(m.latency.count(), 32);
+}

@@ -1,0 +1,329 @@
+//! End-to-end tests of the L4 network serving subsystem, over real
+//! sockets: fit → persist → `Server` → TCP clients receive predictions
+//! **bit-identical** to a direct `Model::predict`; multi-model routing;
+//! manifest-poll hot-reload (new artifact served without restart, changed
+//! artifact swapped in); pipelined requests answered in order;
+//! backpressure replies under a tiny admission bound; and the in-process
+//! loadgen harness (trials at two client counts + `BENCH_serve.json`).
+
+use gzk::features::{FeatureSpec, KernelSpec, Method};
+use gzk::linalg::Mat;
+use gzk::model::{KmeansModel, Model, ModelStore, RidgeModel};
+use gzk::rng::Rng;
+use gzk::server::{wire, ClientConn, LoadgenConfig, Server, ServerConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gzk-server-e2e-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn ridge(d: usize, seed: u64) -> RidgeModel {
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 5, s: 1 },
+        16,
+        seed,
+    )
+    .bind(d);
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let x = Mat::from_fn(50, d, |_, _| rng.normal() * 0.5);
+    let y: Vec<f64> = (0..50).map(|i| x[(i, 0)] + 0.3 * x[(i, d - 1)]).collect();
+    RidgeModel::fit(spec, &x, &y, 1e-3).unwrap()
+}
+
+fn predict_bits(model: &dyn Model, x: &[f64]) -> Vec<u64> {
+    let out = model.predict(&Mat::from_vec(1, x.len(), x.to_vec()));
+    out.row(0).iter().map(|v| v.to_bits()).collect()
+}
+
+fn reply_bits(reply: &wire::Reply) -> Vec<u64> {
+    reply.y().unwrap().iter().map(|v| v.to_bits()).collect()
+}
+
+fn test_config() -> ServerConfig {
+    ServerConfig { poll: Duration::from_millis(25), ..ServerConfig::default() }
+}
+
+#[test]
+fn serves_models_bit_identically_with_full_protocol_coverage() {
+    let dir = fresh_dir("protocol");
+    let store = ModelStore::open(&dir).unwrap();
+    let ridge_model = ridge(2, 11);
+    store.save("ridge", &ridge_model).unwrap();
+    // a second model of a different kind: routing is by name
+    let kspec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 4, s: 1 },
+        12,
+        21,
+    )
+    .bind(2);
+    let mut rng = Rng::new(5);
+    let xk = Mat::from_fn(30, 2, |i, _| {
+        let center = if i % 2 == 0 { 1.0 } else { -1.0 };
+        center + 0.1 * rng.normal()
+    });
+    let kmeans_model = KmeansModel::fit(kspec, &xk, 2, 20).unwrap();
+    store.save("clusters", &kmeans_model).unwrap();
+
+    let server = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    assert_eq!(server.model_names(), vec!["clusters".to_string(), "ridge".to_string()]);
+    let addr = server.local_addr().to_string();
+    let mut conn = ClientConn::connect(&addr).unwrap();
+
+    // ping + models
+    let pong = conn.roundtrip(&wire::cmd_request("ping")).unwrap();
+    assert!(pong.ok, "{pong:?}");
+    let models = conn.roundtrip(&wire::cmd_request("models")).unwrap();
+    assert!(models.ok);
+    assert!(models.raw.contains(r#""name":"ridge""#), "{}", models.raw);
+    assert!(models.raw.contains(r#""name":"clusters""#), "{}", models.raw);
+
+    // predictions on both routes are bit-identical to the local models
+    let probes = [[0.25, -0.7], [1.0, 0.9], [-1.1, 0.05]];
+    for x in &probes {
+        let r = conn.roundtrip(&wire::predict_request(Some("ridge"), x)).unwrap();
+        assert_eq!(reply_bits(&r), predict_bits(&ridge_model, x), "ridge {x:?}");
+        let r = conn.roundtrip(&wire::predict_request(Some("clusters"), x)).unwrap();
+        assert_eq!(reply_bits(&r), predict_bits(&kmeans_model, x), "clusters {x:?}");
+    }
+
+    // error paths keep the connection alive and name the problem
+    let r = conn.roundtrip(&wire::predict_request(None, &probes[0])).unwrap();
+    assert!(!r.ok && r.error.as_deref().unwrap().contains("multiple models"), "{r:?}");
+    let r = conn.roundtrip(&wire::predict_request(Some("nope"), &probes[0])).unwrap();
+    assert!(!r.ok && r.error.as_deref().unwrap().contains("no model"), "{r:?}");
+    let r = conn.roundtrip(&wire::predict_request(Some("ridge"), &[1.0, 2.0, 3.0])).unwrap();
+    assert!(!r.ok && r.error.as_deref().unwrap().contains("expects d = 2"), "{r:?}");
+    let r = conn.roundtrip("this is not json").unwrap();
+    assert!(!r.ok && r.error.as_deref().unwrap().contains("malformed"), "{r:?}");
+
+    // stats: the ridge route served 3 + 0 failed; fields are present
+    let stats = conn.roundtrip(&wire::cmd_request("stats")).unwrap();
+    assert!(stats.ok);
+    for field in
+        ["\"requests\":", "\"p50_us\":", "\"p99_us\":", "\"queue_depth\":", "\"rejects\":"]
+    {
+        assert!(stats.raw.contains(field), "missing {field}: {}", stats.raw);
+    }
+
+    // shutdown is acked, then the server winds down
+    let bye = conn.roundtrip(&wire::cmd_request("shutdown")).unwrap();
+    assert!(bye.ok && bye.raw.contains("stopping"), "{bye:?}");
+    let final_stats = server.wait();
+    assert!(final_stats.contains("\"requests\":"), "{final_stats}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hot_reload_picks_up_new_and_changed_artifacts_without_restart() {
+    let dir = fresh_dir("reload");
+    let store = ModelStore::open(&dir).unwrap();
+    let v1 = ridge(2, 100);
+    store.save("a", &v1).unwrap();
+    let server = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut conn = ClientConn::connect(&addr).unwrap();
+    let x = [0.4, -0.2];
+    let r = conn.roundtrip(&wire::predict_request(Some("a"), &x)).unwrap();
+    assert_eq!(reply_bits(&r), predict_bits(&v1, &x));
+
+    // 1) a NEW artifact persisted into the live store starts serving
+    let b = ridge(2, 200);
+    store.save("b", &b).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = conn.roundtrip(&wire::predict_request(Some("b"), &x)).unwrap();
+        if r.ok {
+            assert_eq!(reply_bits(&r), predict_bits(&b, &x), "hot-added model must match");
+            break;
+        }
+        assert!(Instant::now() < deadline, "poller never served the new artifact: {r:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // 2) REPLACING an artifact swaps the served model (the fingerprint —
+    // length + mtime — changes; sleep past coarse mtime granularity)
+    std::thread::sleep(Duration::from_millis(30));
+    let v2 = ridge(2, 300);
+    assert_ne!(
+        predict_bits(&v1, &x),
+        predict_bits(&v2, &x),
+        "test needs distinguishable models"
+    );
+    store.save("a", &v2).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = conn.roundtrip(&wire::predict_request(Some("a"), &x)).unwrap();
+        let bits = reply_bits(&r);
+        if bits == predict_bits(&v2, &x) {
+            break; // swapped in
+        }
+        assert_eq!(bits, predict_bits(&v1, &x), "reply matches neither version");
+        assert!(Instant::now() < deadline, "poller never swapped the changed artifact");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let dir = fresh_dir("pipeline");
+    let store = ModelStore::open(&dir).unwrap();
+    let model = ridge(2, 7);
+    store.save("ridge", &model).unwrap();
+    let server = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    let addr = server.local_addr();
+
+    // write 30 requests without reading a single reply, then read all 30:
+    // replies must come back in request order (checked by value — every
+    // row has a distinct prediction)
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let rows: Vec<[f64; 2]> = (0..30).map(|i| [0.1 * i as f64, 1.0 - 0.05 * i as f64]).collect();
+    for x in &rows {
+        writeln!(writer, "{}", wire::predict_request(Some("ridge"), x)).unwrap();
+    }
+    writer.flush().unwrap();
+    for (i, x) in rows.iter().enumerate() {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "reply {i} missing");
+        let reply = wire::parse_reply(line.trim_end()).unwrap();
+        assert!(reply.ok, "reply {i}: {reply:?}");
+        assert_eq!(reply_bits(&reply), predict_bits(&model, x), "reply {i} out of order");
+    }
+
+    // concurrent connections stay isolated: 4 clients, disjoint rows
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let addr = addr.to_string();
+            let model = &model;
+            scope.spawn(move || {
+                let mut conn = ClientConn::connect(&addr).unwrap();
+                for r in 0..25usize {
+                    let x = [t as f64 * 0.3 + r as f64 * 0.01, -(r as f64) * 0.02];
+                    let reply =
+                        conn.roundtrip(&wire::predict_request(Some("ridge"), &x)).unwrap();
+                    assert_eq!(reply_bits(&reply), predict_bits(model, &x), "client {t} row {r}");
+                }
+            });
+        }
+    });
+
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiny_admission_bound_sheds_load_with_retriable_replies() {
+    let dir = fresh_dir("backpressure");
+    let store = ModelStore::open(&dir).unwrap();
+    let model = ridge(2, 9);
+    store.save("ridge", &model).unwrap();
+    let cfg = ServerConfig {
+        max_queue: 1,
+        max_batch: 1,
+        poll: Duration::from_millis(25),
+        ..ServerConfig::default()
+    };
+    let server = Server::start(&dir, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr();
+
+    // flood: 50 pipelined requests against a 1-deep queue. Every request
+    // gets exactly one reply, each is either a correct prediction or a
+    // retriable overload — and the reply order still matches the
+    // request order for the admitted ones.
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let rows: Vec<[f64; 2]> = (0..50).map(|i| [0.07 * i as f64, 0.5 - 0.01 * i as f64]).collect();
+    for x in &rows {
+        writeln!(writer, "{}", wire::predict_request(Some("ridge"), x)).unwrap();
+    }
+    writer.flush().unwrap();
+    let (mut oks, mut overloads) = (0usize, 0usize);
+    for (i, x) in rows.iter().enumerate() {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "reply {i} missing");
+        let reply = wire::parse_reply(line.trim_end()).unwrap();
+        if reply.ok {
+            assert_eq!(reply_bits(&reply), predict_bits(&model, x), "reply {i}");
+            oks += 1;
+        } else {
+            assert!(reply.retry, "only overloads may fail here: {reply:?}");
+            overloads += 1;
+        }
+    }
+    assert_eq!(oks + overloads, 50);
+    assert!(oks >= 1, "at least the first request must be admitted");
+    // the server's stats agree with what the client observed
+    let mut conn = ClientConn::connect(&addr.to_string()).unwrap();
+    let stats = conn.roundtrip(&wire::cmd_request("stats")).unwrap();
+    assert!(stats.raw.contains(&format!(r#""rejects":{overloads}"#)), "{}", stats.raw);
+    assert!(stats.raw.contains(&format!(r#""requests":{oks}"#)), "{}", stats.raw);
+
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn loadgen_measures_verifies_and_shuts_down_the_server() {
+    let dir = fresh_dir("loadgen");
+    let store = ModelStore::open(&dir).unwrap();
+    // elevation-compatible input dimension (loadgen's default dataset)
+    let model = ridge(3, 55);
+    store.save("ridge", &model).unwrap();
+    let server = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let cfg = LoadgenConfig {
+        addr,
+        clients: vec![1, 3],
+        requests_per_client: 25,
+        dataset: None, // defaults to elevation (d = 3)
+        model: None,   // the single served model
+        store: Some(dir.clone()),
+        seed: 4,
+        send_shutdown: true,
+    };
+    let report = gzk::server::loadgen::run(&cfg).expect("loadgen run");
+    assert_eq!(report.model, "ridge");
+    assert_eq!(report.dataset, "elevation");
+    assert!(report.verified);
+    assert_eq!(report.mismatches(), 0, "server replies diverged from the local model");
+    assert_eq!(report.trials.len(), 2);
+    for (trial, want_clients) in report.trials.iter().zip([1usize, 3]) {
+        assert_eq!(trial.clients, want_clients);
+        assert_eq!(trial.requests, want_clients * 25);
+        assert!(trial.wall_secs > 0.0 && trial.throughput_rps > 0.0);
+        assert!(trial.p50_us > 0.0 && trial.p50_us <= trial.p99_us);
+    }
+    assert_eq!(report.server_stats.len(), 2);
+    assert!(report.server_stats[1].contains("\"requests\":"), "{}", report.server_stats[1]);
+
+    // the JSON artifact round-trips through the in-crate parser and
+    // reports both client counts
+    let json_path = dir.join("BENCH_serve.json");
+    report.write_json(&json_path).unwrap();
+    let text = std::fs::read_to_string(&json_path).unwrap();
+    let parsed = gzk::runtime::Json::parse(&text).expect("valid JSON");
+    let trials = parsed.get("trials").and_then(|t| t.as_arr()).expect("trials[]");
+    assert_eq!(trials.len(), 2);
+    assert!(trials[0].get("throughput_rps").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert!(trials[1].get("p99_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+    // loadgen's --shutdown already stopped the server
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
