@@ -30,6 +30,7 @@
 //!                                                    dataset recorded in the artifact
 //!   gzk server    --store <dir> [--addr 127.0.0.1:7711] [--max-batch 64]
 //!                 [--max-wait-us 0] [--max-queue 1024] [--poll-ms 200] [--max-conns N]
+//!                 [--idle-s 300] [--allow-remote-shutdown]
 //!                                                    TCP model server over a ModelStore:
 //!                                                    newline-delimited JSON protocol
 //!                                                    (predict/models/stats/ping/shutdown),
@@ -38,7 +39,11 @@
 //!                                                    persisted artifact serves without
 //!                                                    restart; full queues answer with a
 //!                                                    retriable backpressure reply. Runs
-//!                                                    until a client sends shutdown.
+//!                                                    until a client sends shutdown (honored
+//!                                                    from loopback peers only, unless
+//!                                                    --allow-remote-shutdown); connections
+//!                                                    idle past --idle-s are disconnected
+//!                                                    (0 disables).
 //!   gzk loadgen   --addr <host:port> [--clients 1,8] [--requests 200] [--model N]
 //!                 [--dataset <name>] [--store <dir>] [--seed 1] [--shutdown]
 //!                 [--json-out BENCH_serve.json]
@@ -803,6 +808,8 @@ fn server_cmd(args: &Args) {
         max_queue,
         poll: Duration::from_millis(poll_ms as u64),
         max_conns,
+        idle_timeout: Duration::from_secs(args.get_usize("idle-s", 300) as u64),
+        allow_remote_shutdown: args.has("allow-remote-shutdown"),
     };
     let server = match gzk::server::Server::start(dir, addr, cfg) {
         Ok(s) => s,

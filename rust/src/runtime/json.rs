@@ -17,7 +17,7 @@ pub enum Json {
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, String> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -60,9 +60,18 @@ impl Json {
     }
 }
 
+/// Nesting bound. Client-controlled bytes reach this parser over the
+/// serving wire (`server::wire::parse_request`), and every `[`/`{` level
+/// costs a stack frame — unbounded, a few hundred KB of `[` overflows
+/// the reader thread's stack, which aborts the whole process (a stack
+/// overflow is not a catchable panic). 128 is far deeper than any
+/// document this crate produces or accepts.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -88,8 +97,18 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json, String> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(c @ (b'{' | b'[')) => {
+                if self.depth >= MAX_DEPTH {
+                    return Err(format!(
+                        "nesting deeper than {MAX_DEPTH} levels at byte {}",
+                        self.i
+                    ));
+                }
+                self.depth += 1;
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -159,34 +178,48 @@ impl<'a> Parser<'a> {
 
     fn string(&mut self) -> Result<String, String> {
         self.expect(b'"')?;
-        let mut out = String::new();
+        // accumulate raw bytes: the input is already valid UTF-8, and
+        // `"`/`\` are ASCII so they can never split a multi-byte char —
+        // pushing bytes (not `byte as char`, which is Latin-1 and
+        // mangles every non-ASCII char) keeps multi-byte input intact
+        let mut out: Vec<u8> = Vec::new();
         while let Some(c) = self.peek() {
             self.i += 1;
             match c {
-                b'"' => return Ok(out),
+                b'"' => {
+                    return String::from_utf8(out)
+                        .map_err(|_| "invalid UTF-8 in string".to_string());
+                }
                 b'\\' => {
                     let e = self.peek().ok_or("eof in escape")?;
                     self.i += 1;
                     match e {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'n' => out.push('\n'),
-                        b't' => out.push('\t'),
-                        b'r' => out.push('\r'),
-                        b'b' => out.push('\u{8}'),
-                        b'f' => out.push('\u{c}'),
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'b' => out.push(8),
+                        b'f' => out.push(12),
                         b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| "bad \\u")?;
+                            // a truncated escape ("…\u1") must be a parse
+                            // error, not an out-of-bounds slice
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or("bad \\u")?;
                             let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let ch = char::from_u32(cp).unwrap_or('\u{fffd}');
+                            let mut utf8 = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut utf8).as_bytes());
                             self.i += 4;
                         }
                         _ => return Err(format!("bad escape at byte {}", self.i)),
                     }
                 }
-                _ => out.push(c as char),
+                _ => out.push(c),
             }
         }
         Err("unterminated string".into())
@@ -247,6 +280,37 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{} extra").is_err());
         assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn non_ascii_strings_survive_intact() {
+        // multi-byte UTF-8 must pass through byte-exact (per-byte
+        // `as char` casts would mangle it into Latin-1 mojibake)
+        let j = Json::parse("{\"modèle\":\"café ☕ Ψ\"}").unwrap();
+        assert_eq!(j.get("modèle").and_then(|v| v.as_str()), Some("café ☕ Ψ"));
+        // \u escapes decode next to raw multi-byte chars
+        assert_eq!(Json::parse("\"é\\u00e9\"").unwrap().as_str(), Some("éé"));
+    }
+
+    #[test]
+    fn hostile_nesting_is_an_error_not_a_stack_overflow() {
+        // comfortably inside the bound: parses
+        let deep_ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep_ok).is_ok());
+        // far beyond it (this used to abort the process): clean error
+        assert!(Json::parse(&"[".repeat(200_000)).is_err());
+        assert!(Json::parse(&r#"{"a":"#.repeat(100_000)).is_err());
+        let mixed = format!("{}{}", "[".repeat(64), r#"{"k":"#.repeat(100_000));
+        assert!(Json::parse(&mixed).is_err());
+    }
+
+    #[test]
+    fn truncated_unicode_escape_is_an_error_not_a_panic() {
+        for bad in [r#""\u"#, r#""\u1"#, r#""\u12"#, r#""\u123"#, r#""\uZZZZ""#] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // a complete escape still decodes
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap().as_str(), Some("A"));
     }
 
     #[test]

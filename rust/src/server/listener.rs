@@ -16,14 +16,45 @@
 //! admission ([`super::admission`]). The batch *compute* itself draws
 //! from the global pool inside `PredictionService`, so reader/writer
 //! threads stay I/O-only — the blocking discipline of DESIGN.md §2b.
+//!
+//! Because every request byte is client-controlled, the connection
+//! itself is bounded too: a request line may not exceed
+//! [`MAX_LINE_BYTES`] (an overlong line gets an error reply and the
+//! connection closes — there is no way to resynchronize mid-line); the
+//! idle timeout bounds both the gap between reads *and* the assembly of
+//! a single line (a byte-per-interval drip would never trip a plain
+//! SO_RCVTIMEO), so half-open and slow-loris clients release their
+//! `max_conns` slot; the reply queue is a bounded `sync_channel`
+//! (admission bounds predicts, but ping/stats/error replies bypass it —
+//! a flooder that never reads its socket now blocks the reader instead
+//! of growing the queue) and the matching write timeout turns a
+//! permanently-stalled writer into a closed connection. The wire
+//! `shutdown` command is honored only from loopback peers (including
+//! IPv4-mapped loopback on dual-stack binds) unless the server was
+//! started with `allow_remote_shutdown`.
 
 use super::router::{Dispatch, Router};
 use super::wire;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Longest accepted request line (1 MiB — orders of magnitude beyond any
+/// legitimate predict request). Without a cap, a client that streams
+/// bytes without ever sending a newline grows the line buffer without
+/// bound, bypassing both the connection budget and per-model admission.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Per-connection bound on dispatched-but-unwritten replies. Admission
+/// bounds admitted predicts, but the cheap commands (ping/models/stats,
+/// error replies) bypass admission — without this bound, a client that
+/// floods commands and never reads its socket grows the reply queue
+/// without limit. When it fills, the reader blocks, which stops reading
+/// the socket: backpressure, not memory growth.
+const REPLY_QUEUE_BOUND: usize = 256;
 
 /// State shared by the accept loop, every connection thread, the
 /// hot-reload poller and the [`Server`](super::Server) handle.
@@ -33,6 +64,14 @@ pub(crate) struct Shared {
     pub active_conns: AtomicUsize,
     pub max_conns: usize,
     pub addr: SocketAddr,
+    /// close a connection after this long with no request bytes, so a
+    /// silent half-open client cannot pin its reader thread and
+    /// connection-budget slot forever; `None` disables the policy
+    pub idle_timeout: Option<Duration>,
+    /// honor the wire `shutdown` command from non-loopback peers (off by
+    /// default: with `--addr` on a public interface, an unauthenticated
+    /// shutdown would be a one-line remote kill switch)
+    pub allow_remote_shutdown: bool,
 }
 
 impl Shared {
@@ -100,35 +139,156 @@ enum Outgoing {
 
 fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
     let _ = stream.set_nodelay(true); // request/reply lines, not bulk data
+    if let Some(idle) = shared.idle_timeout {
+        // the write twin of the read-side idle policy: a client that
+        // stops draining its socket stalls the writer; past the budget
+        // the write errors, the writer exits, and the blocked reader's
+        // send fails — the connection slot is released, not pinned
+        let _ = stream.set_write_timeout(Some(idle));
+    }
     let reader_stream = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
-    let (tx, rx) = channel::<Outgoing>();
+    let (tx, rx) = sync_channel::<Outgoing>(REPLY_QUEUE_BOUND);
     let reader_shared = Arc::clone(shared);
     let reader = std::thread::spawn(move || read_loop(reader_stream, &reader_shared, tx));
     write_loop(stream, rx);
     let _ = reader.join();
 }
 
-fn read_loop(stream: TcpStream, shared: &Arc<Shared>, out: Sender<Outgoing>) {
-    for line in BufReader::new(stream).lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break, // client gone / broken pipe
+/// Loopback test for the shutdown gate that also recognizes IPv4-mapped
+/// loopback (`::ffff:127.0.0.1`) — what a `127.0.0.1` client looks like
+/// to a dual-stack `[::]` bind.
+fn is_loopback_ip(ip: IpAddr) -> bool {
+    match ip {
+        IpAddr::V4(a) => a.is_loopback(),
+        IpAddr::V6(a) => {
+            if a.is_loopback() {
+                return true;
+            }
+            let o = a.octets();
+            o[..10] == [0u8; 10] && o[10..12] == [0xff, 0xff] && o[12] == 127
+        }
+    }
+}
+
+/// How one bounded line read ended.
+enum LineRead {
+    /// `buf` holds one complete line (no trailing newline)
+    Line,
+    /// clean end of stream with nothing buffered
+    Eof,
+    /// the read-gap timeout fired, or a drip-fed line outlived the
+    /// per-line deadline
+    Idle,
+    /// the line exceeded [`MAX_LINE_BYTES`] with no newline in sight
+    Overlong,
+    /// I/O error: client gone / broken pipe
+    Gone,
+}
+
+/// Read one newline-terminated line into `buf`, enforcing the line cap
+/// and — because SO_RCVTIMEO only bounds the gap between reads, so a
+/// client dripping one byte per interval would never trip it — a
+/// deadline on assembling a single line.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    line_deadline: Option<Duration>,
+) -> LineRead {
+    buf.clear();
+    let mut started: Option<Instant> = None;
+    loop {
+        let chunk = match reader.fill_buf() {
+            Ok(c) if c.is_empty() => {
+                // EOF: a final unterminated line still gets served
+                return if buf.is_empty() { LineRead::Eof } else { LineRead::Line };
+            }
+            Ok(c) => c,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return LineRead::Idle;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue, // EINTR: retry
+            Err(_) => return LineRead::Gone,
         };
-        if line.trim().is_empty() {
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            if buf.len() + pos > MAX_LINE_BYTES {
+                return LineRead::Overlong;
+            }
+            buf.extend_from_slice(&chunk[..pos]);
+            reader.consume(pos + 1);
+            return LineRead::Line;
+        }
+        let n = chunk.len();
+        if buf.len() + n > MAX_LINE_BYTES {
+            return LineRead::Overlong;
+        }
+        buf.extend_from_slice(chunk);
+        reader.consume(n);
+        match (started, line_deadline) {
+            (None, _) => started = Some(Instant::now()),
+            (Some(t0), Some(deadline)) if t0.elapsed() > deadline => return LineRead::Idle,
+            _ => {}
+        }
+    }
+}
+
+fn read_loop(stream: TcpStream, shared: &Arc<Shared>, out: SyncSender<Outgoing>) {
+    let idle = shared.idle_timeout;
+    if let Some(idle) = idle {
+        let _ = stream.set_read_timeout(Some(idle));
+    }
+    let peer_is_loopback = stream.peer_addr().map(|a| is_loopback_ip(a.ip())).unwrap_or(false);
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        match read_line_bounded(&mut reader, &mut buf, idle) {
+            LineRead::Line => {}
+            LineRead::Eof | LineRead::Gone => break,
+            LineRead::Idle => {
+                // tell the client why, then release the budget slot
+                let _ = out.send(Outgoing::Last(wire::error_reply(
+                    "idle timeout; closing connection",
+                )));
+                break;
+            }
+            LineRead::Overlong => {
+                // there is no way to resynchronize mid-line: reply, close
+                let _ = out.send(Outgoing::Last(wire::error_reply(&format!(
+                    "request line exceeds {MAX_LINE_BYTES} bytes; closing connection"
+                ))));
+                break;
+            }
+        }
+        let line = match std::str::from_utf8(&buf) {
+            Ok(l) => l.trim(),
+            Err(_) => {
+                if out.send(Outgoing::Line(wire::error_reply("request is not UTF-8"))).is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
+        if line.is_empty() {
             continue;
         }
-        let outgoing = match wire::parse_request(&line) {
+        let outgoing = match wire::parse_request(line) {
             Err(e) => Outgoing::Line(wire::error_reply(&e)),
             Ok(wire::Request::Ping) => Outgoing::Line(wire::ping_reply()),
             Ok(wire::Request::Models) => Outgoing::Line(shared.router.models_reply()),
             Ok(wire::Request::Stats) => Outgoing::Line(shared.router.stats_reply()),
             Ok(wire::Request::Shutdown) => {
-                let _ = out.send(Outgoing::Last(wire::shutdown_reply()));
-                shared.begin_shutdown();
-                break;
+                if !peer_is_loopback && !shared.allow_remote_shutdown {
+                    Outgoing::Line(wire::error_reply(
+                        "shutdown refused from a non-loopback peer (the server \
+                         must opt in with --allow-remote-shutdown)",
+                    ))
+                } else {
+                    let _ = out.send(Outgoing::Last(wire::shutdown_reply()));
+                    shared.begin_shutdown();
+                    break;
+                }
             }
             Ok(wire::Request::Predict { model, x }) => {
                 match shared.router.dispatch_predict(model.as_deref(), &x) {
@@ -195,4 +355,21 @@ fn write_loop(stream: TcpStream, rx: Receiver<Outgoing>) {
         }
     }
     let _ = w.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_gate_recognizes_plain_and_ipv4_mapped_loopback() {
+        let yes = ["127.0.0.1", "127.8.9.1", "::1", "::ffff:127.0.0.1", "::ffff:127.1.2.3"];
+        for a in yes {
+            assert!(is_loopback_ip(a.parse().unwrap()), "{a} should gate as loopback");
+        }
+        let no = ["10.0.0.1", "8.8.8.8", "::ffff:10.0.0.1", "2001:db8::1", "::"];
+        for a in no {
+            assert!(!is_loopback_ip(a.parse().unwrap()), "{a} must not gate as loopback");
+        }
+    }
 }

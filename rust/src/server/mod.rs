@@ -64,6 +64,12 @@ pub struct ServerConfig {
     pub poll: Duration,
     /// connection budget; 0 = size from the pool policy (8× pool width)
     pub max_conns: usize,
+    /// disconnect a connection after this long with no request bytes
+    /// (releases its budget slot); `Duration::ZERO` disables the policy
+    pub idle_timeout: Duration,
+    /// honor the wire `shutdown` command from non-loopback peers; off by
+    /// default so a non-loopback `--addr` is not a remote kill switch
+    pub allow_remote_shutdown: bool,
 }
 
 impl Default for ServerConfig {
@@ -74,6 +80,8 @@ impl Default for ServerConfig {
             max_queue: 1024,
             poll: Duration::from_millis(200),
             max_conns: 0,
+            idle_timeout: Duration::from_secs(300),
+            allow_remote_shutdown: false,
         }
     }
 }
@@ -119,6 +127,8 @@ impl Server {
             active_conns: AtomicUsize::new(0),
             max_conns,
             addr: local_addr,
+            idle_timeout: (cfg.idle_timeout > Duration::ZERO).then_some(cfg.idle_timeout),
+            allow_remote_shutdown: cfg.allow_remote_shutdown,
         });
         let accept_shared = Arc::clone(&shared);
         let accept_handle =

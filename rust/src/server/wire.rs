@@ -11,8 +11,16 @@
 //! {"cmd":"stats"}       per-model ServeMetrics + latency percentiles +
 //!                       admission queue depth / rejects
 //! {"cmd":"ping"}        liveness probe
-//! {"cmd":"shutdown"}    stop the server after acking
+//! {"cmd":"shutdown"}    stop the server after acking (honored from
+//!                       loopback peers only, unless the server was
+//!                       started with --allow-remote-shutdown)
 //! ```
+//!
+//! Requests are untrusted: a line is capped at
+//! [`listener::MAX_LINE_BYTES`](super::listener::MAX_LINE_BYTES) and the
+//! JSON parser bounds nesting depth, so hostile framing degrades to an
+//! error reply (or a closed connection), never a panic or a stack
+//! overflow.
 //!
 //! Every reply is one JSON object with an `"ok"` field; errors carry
 //! `"error"` and — for backpressure rejects, the one retriable failure —

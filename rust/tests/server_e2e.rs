@@ -121,6 +121,73 @@ fn serves_models_bit_identically_with_full_protocol_coverage() {
 }
 
 #[test]
+fn hostile_request_lines_degrade_to_error_replies_not_a_dead_server() {
+    let dir = fresh_dir("hostile");
+    let store = ModelStore::open(&dir).unwrap();
+    let model = ridge(2, 33);
+    store.save("ridge", &model).unwrap();
+    let server = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // deeply nested JSON: used to recurse to a reader-thread stack
+    // overflow (a process abort); must now be a malformed-request reply
+    // on a connection that stays open
+    let mut conn = ClientConn::connect(&addr).unwrap();
+    let nested = "[".repeat(100_000);
+    let r = conn.roundtrip(&nested).unwrap();
+    assert!(!r.ok && r.error.as_deref().unwrap().contains("malformed"), "{r:?}");
+    // a truncated \u escape: used to slice out of bounds (reader panic)
+    let r = conn.roundtrip(r#"{"cmd":"ping","pad":"\u1"#).unwrap();
+    assert!(!r.ok && r.error.as_deref().unwrap().contains("malformed"), "{r:?}");
+    // the same connection still serves
+    let pong = conn.roundtrip(&wire::cmd_request("ping")).unwrap();
+    assert!(pong.ok, "{pong:?}");
+
+    // a newline-free flood past the line cap: one error reply, then the
+    // server closes the connection (nothing to resynchronize on)
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let chunk = vec![b'x'; 1 << 16];
+    let mut sent = 0usize;
+    while sent <= gzk::server::listener::MAX_LINE_BYTES + (1 << 16) {
+        if writer.write_all(&chunk).is_err() {
+            break; // server already replied and closed; that is the point
+        }
+        sent += chunk.len();
+    }
+    let _ = writer.flush();
+    // the server replies once and closes; our surplus unread bytes may
+    // turn that close into an RST that races the reply, so accept either
+    // a well-formed "exceeds" error or a reset — but never a prediction
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(n) if n > 0 => {
+            let reply = wire::parse_reply(line.trim_end()).unwrap();
+            assert!(
+                !reply.ok && reply.error.as_deref().unwrap().contains("exceeds"),
+                "{reply:?}"
+            );
+            // ... and the connection is closed afterwards
+            line.clear();
+            let _ = reader.read_line(&mut line);
+            assert!(line.is_empty(), "expected EOF, got {line:?}");
+        }
+        _ => {} // connection reset before the reply could be read
+    }
+
+    // the server is still fully alive for new connections
+    let mut conn2 = ClientConn::connect(&addr).unwrap();
+    let x = [0.3, -0.4];
+    let r = conn2.roundtrip(&wire::predict_request(Some("ridge"), &x)).unwrap();
+    assert_eq!(reply_bits(&r), predict_bits(&model, &x));
+
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn hot_reload_picks_up_new_and_changed_artifacts_without_restart() {
     let dir = fresh_dir("reload");
     let store = ModelStore::open(&dir).unwrap();
