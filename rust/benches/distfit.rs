@@ -1,0 +1,132 @@
+//! Bench: the distributed fit over TCP vs the in-process one-round fit —
+//! wall-clock at 1/2/4 workers on loopback, with the merged model
+//! asserted **bit-identical** to the single-process fit at every fleet
+//! size (the distributed tier's correctness contract, measured and
+//! checked in the same run).
+//!
+//! Loopback workers share the machine, so this measures protocol +
+//! scheduling overhead rather than true scale-out; the numbers still
+//! track the serialization cost of shipping F x F Gram frames and the
+//! leader's merge across PRs. Emits a machine-readable
+//! `BENCH_distfit.json` (path overridable via `GZK_BENCH_JSON`; CI
+//! uploads it as an artifact).
+//!
+//! Run: cargo bench --bench distfit
+
+use gzk::bench::{fmt_secs, Table};
+use gzk::coordinator::{fit_one_round_source, Backend};
+use gzk::data::SyntheticSource;
+use gzk::dist::{run_worker, DataSpec, DistLeader, LeaderConfig, WorkerOptions};
+use gzk::features::{FeatureSpec, KernelSpec, Method};
+use std::time::{Duration, Instant};
+
+const N: usize = 20_000;
+const M: usize = 256;
+const CHUNK_ROWS: usize = 2048;
+const LAMBDA: f64 = 1e-2;
+const SEED: u64 = 1;
+
+struct SweepRow {
+    workers: usize,
+    wall_secs: f64,
+    featurize_secs_total: f64,
+    bit_identical: bool,
+}
+
+fn main() {
+    let fspec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 12, s: 2 },
+        M,
+        SEED,
+    );
+    let data = DataSpec { name: "elevation".to_string(), rows: N, seed: SEED };
+    let src = SyntheticSource::by_name(&data.name, N, SEED).expect("elevation source");
+    let spec = fspec.bind(src.dim());
+
+    println!("== distributed fit over TCP vs in-process (n={N}, m={M}, chunk={CHUNK_ROWS}) ==");
+    let t0 = Instant::now();
+    let local = fit_one_round_source(&spec, &src, LAMBDA, 4, CHUNK_ROWS, Backend::Native)
+        .expect("in-process fit");
+    let local_secs = t0.elapsed().as_secs_f64();
+    println!("in-process baseline: {} ({} shards)", fmt_secs(local_secs), local.n_shards);
+
+    let mut sweep = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let cfg = LeaderConfig {
+            n_workers: workers,
+            rows_per_shard: CHUNK_ROWS,
+            register_timeout: Duration::from_secs(30),
+            shard_timeout: Duration::from_secs(120),
+        };
+        let leader = DistLeader::bind("127.0.0.1:0", cfg).expect("bind leader");
+        let addr = leader.local_addr().expect("leader addr").to_string();
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || run_worker(&addr, &WorkerOptions::default()))
+            })
+            .collect();
+        let fit = leader.run(&spec, &data, LAMBDA).expect("distributed fit");
+        for h in handles {
+            h.join().expect("worker thread").expect("worker run");
+        }
+        let bit_identical = fit.model.weights.len() == local.model.weights.len()
+            && fit
+                .model
+                .weights
+                .iter()
+                .zip(&local.model.weights)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(bit_identical, "{workers}-worker fit drifted from the in-process fit");
+        sweep.push(SweepRow {
+            workers,
+            wall_secs: fit.wall_secs,
+            featurize_secs_total: fit.featurize_secs_total,
+            bit_identical,
+        });
+    }
+
+    let mut t = Table::new(vec!["workers", "wall", "featurize CPU", "vs in-process", "bit id"]);
+    for r in &sweep {
+        t.row(vec![
+            format!("{}", r.workers),
+            fmt_secs(r.wall_secs),
+            fmt_secs(r.featurize_secs_total),
+            format!("{:.2}x", local_secs / r.wall_secs),
+            format!("{}", r.bit_identical),
+        ]);
+    }
+    t.print();
+
+    let path = std::env::var("GZK_BENCH_JSON").unwrap_or_else(|_| "BENCH_distfit.json".to_string());
+    let rows: Vec<String> = sweep
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    r#"{{"workers":{},"wall_secs":{:.4},"featurize_secs_total":{:.4},"#,
+                    r#""speedup_vs_local":{:.3},"bit_identical":{}}}"#
+                ),
+                r.workers,
+                r.wall_secs,
+                r.featurize_secs_total,
+                local_secs / r.wall_secs,
+                r.bit_identical
+            )
+        })
+        .collect();
+    let text = format!(
+        concat!(
+            r#"{{"format":1,"bench":"distfit","n":{},"m":{},"chunk_rows":{},"#,
+            r#""local_secs":{:.4},"sweep":[{}]}}"#
+        ),
+        N,
+        M,
+        CHUNK_ROWS,
+        local_secs,
+        rows.join(",")
+    );
+    std::fs::write(&path, text).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("\nwrote {path}");
+}

@@ -113,6 +113,41 @@ impl Args {
         Ok(out)
     }
 
+    /// A comma-separated list of `host:port` addresses (`--replicas
+    /// 127.0.0.1:7701,127.0.0.1:7702`), shared by `gzk proxy --replicas`
+    /// and the loadgen replica sweep. Every entry must carry a non-empty
+    /// host and a non-zero port — an address that "parses" but can never
+    /// be connected to is a usage mistake, and the error names the flag.
+    /// `Ok(empty)` when the flag is absent.
+    pub fn get_addr_list(&self, name: &str) -> Result<Vec<String>, String> {
+        let Some(v) = self.get(name) else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        for part in v.split(',') {
+            let addr = part.trim();
+            let Some((host, port)) = addr.rsplit_once(':') else {
+                return Err(format!(
+                    "flag --{name}: {part:?} is not host:port \
+                     (expected a comma-separated list like \"127.0.0.1:7701,127.0.0.1:7702\")"
+                ));
+            };
+            if host.is_empty() {
+                return Err(format!("flag --{name}: {part:?} has an empty host"));
+            }
+            match port.parse::<u16>() {
+                Ok(p) if p != 0 => {}
+                _ => {
+                    return Err(format!(
+                        "flag --{name}: {part:?} needs a port in 1..=65535, got {port:?}"
+                    ))
+                }
+            }
+            out.push(addr.to_string());
+        }
+        Ok(out)
+    }
+
     /// The global `--threads N` flag: how many workers the process-wide
     /// [`exec::Pool`](crate::exec::Pool) uses for every parallel path
     /// (featurize, absorb, k-means, KPCA, the coordinator's worker wave).
@@ -272,6 +307,28 @@ mod tests {
         for bad in ["loadgen --clients 1,x", "loadgen --clients 1,,2", "loadgen --clients 0"] {
             let e = parse(bad).get_usize_list("clients", &[1]).unwrap_err();
             assert!(e.contains("--clients"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn addr_list_flag_parses_and_rejects_nonsense() {
+        assert!(parse("proxy").get_addr_list("replicas").unwrap().is_empty());
+        let a = parse("proxy --replicas 127.0.0.1:7701,localhost:7702,[::1]:7703");
+        assert_eq!(
+            a.get_addr_list("replicas").unwrap(),
+            vec!["127.0.0.1:7701", "localhost:7702", "[::1]:7703"]
+        );
+        for bad in [
+            "proxy --replicas 127.0.0.1",      // no port
+            "proxy --replicas :7701",          // empty host
+            "proxy --replicas 127.0.0.1:",     // empty port
+            "proxy --replicas 127.0.0.1:0",    // port 0
+            "proxy --replicas 127.0.0.1:port", // non-numeric port
+            "proxy --replicas a:1,,b:2",       // empty entry
+            "proxy --replicas 127.0.0.1:70000",
+        ] {
+            let e = parse(bad).get_addr_list("replicas").unwrap_err();
+            assert!(e.contains("--replicas"), "{bad}: {e}");
         }
     }
 

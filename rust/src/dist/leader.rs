@@ -1,0 +1,510 @@
+//! The `gzk leader` side of the distributed fit: accept worker
+//! registrations, broadcast the job, scatter shard ranges, gather
+//! per-shard statistics, merge in deterministic order, solve.
+//!
+//! ```text
+//!   bind ── accept until n_workers registered (or timeout) ──┐
+//!                                                            ▼
+//!   pending shards ◄── one driver thread per worker: pop, assign,
+//!        ▲              await the stats reply (deadline), validate
+//!        │ repush on death/timeout/protocol violation
+//!        │
+//!   replies (BTreeMap by shard_id, first reply wins) ── missing
+//!   shards recomputed locally ── merge in shard_id order ── solve
+//! ```
+//!
+//! **Failure semantics.** A worker that dies, times out, or violates the
+//! protocol mid-shard has its in-flight range pushed back onto the
+//! pending queue for the surviving workers (the connection is abandoned
+//! — after a reply deadline passes the leader cannot tell a dead worker
+//! from a slow one, so it never accepts a late reply that could race a
+//! reassignment). A worker that *reports* a shard error (source I/O)
+//! stays in the fleet, but its shard goes to leader-local recovery
+//! rather than back on the queue — re-assigning it would loop forever if
+//! the data really is unreadable. Whatever is still missing after the
+//! fleet drains is recomputed by the leader from its own copy of the
+//! source, per shard; [`merge_in_shard_order`] then refuses to finalize
+//! unless exactly every shard is present exactly once.
+//!
+//! **Bit-identity contract.** Per-shard statistics are a pure function
+//! of (spec, source, range) — the feature map is data-oblivious and
+//! every parallel kernel is bit-identical to serial — and float
+//! accumulation order is fixed by merging buffered per-shard stats in
+//! ascending shard_id, exactly like the in-process
+//! [`fit_one_round_source`](crate::coordinator::fit_one_round_source)
+//! clean path. So the distributed fit is **bit-identical** to the
+//! single-process fit for any worker count, any shard interleaving, and
+//! any injected worker death (tested in `tests/dist_e2e.rs`).
+
+use super::wire::{self, DataSpec, DistMsg, WireStats, MAX_FRAME_BYTES};
+use crate::coordinator::ShardRange;
+use crate::exec::Pool;
+use crate::features::Featurizer;
+use crate::krr::{FeatureRidge, RidgeStats};
+use crate::server::listener::{read_line_bounded, LineRead};
+use std::collections::BTreeMap;
+use std::io::{BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Knobs for a [`DistLeader`]; the defaults match the CLI's.
+#[derive(Clone, Copy, Debug)]
+pub struct LeaderConfig {
+    /// fleet size to wait for before scattering
+    pub n_workers: usize,
+    /// rows per shard (the task granularity, like `--chunk-rows`)
+    pub rows_per_shard: usize,
+    /// how long to wait for the fleet to register; if at least one worker
+    /// registered by then, the fit proceeds with the partial fleet
+    pub register_timeout: Duration,
+    /// per-shard reply deadline; past it the worker is abandoned and its
+    /// shard reassigned
+    pub shard_timeout: Duration,
+}
+
+impl Default for LeaderConfig {
+    fn default() -> LeaderConfig {
+        LeaderConfig {
+            n_workers: 2,
+            rows_per_shard: 8192,
+            register_timeout: Duration::from_secs(60),
+            shard_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Outcome of a distributed fit over TCP — the network twin of
+/// [`DistributedFit`](crate::coordinator::DistributedFit), with the
+/// failure-path telemetry the smoke tests and benches assert on.
+pub struct NetFit {
+    pub model: FeatureRidge,
+    pub stats: RidgeStats,
+    pub n_shards: usize,
+    /// workers that actually registered (may be fewer than requested)
+    pub n_workers: usize,
+    /// wall time from scatter start to solve (seconds)
+    pub wall_secs: f64,
+    /// sum of per-shard featurize seconds across the fleet + recovery
+    pub featurize_secs_total: f64,
+    /// shards pushed back after a worker died / timed out / misbehaved
+    pub reassigned_shards: usize,
+    /// shards the leader recomputed locally
+    pub recovered_shards: usize,
+    /// workers abandoned mid-protocol
+    pub dead_workers: usize,
+}
+
+/// One registered worker connection (post-handshake).
+struct WorkerConn {
+    id: usize,
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// A bound leader, not yet running — split from [`DistLeader::run`] so
+/// callers (tests, the CLI) can learn the ephemeral port of an
+/// `addr` like `127.0.0.1:0` before any worker connects.
+pub struct DistLeader {
+    listener: TcpListener,
+    cfg: LeaderConfig,
+}
+
+impl DistLeader {
+    pub fn bind(addr: &str, cfg: LeaderConfig) -> Result<DistLeader, String> {
+        if cfg.n_workers < 1 {
+            return Err("leader needs at least one worker".to_string());
+        }
+        if cfg.rows_per_shard < 1 {
+            return Err("rows_per_shard must be >= 1".to_string());
+        }
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        Ok(DistLeader { listener, cfg })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr, String> {
+        self.listener.local_addr().map_err(|e| format!("local addr: {e}"))
+    }
+
+    /// Run the one-round protocol over the fleet. The leader opens its
+    /// own copy of the source (for validation and lost-shard recovery);
+    /// `data.rows` rows are fitted.
+    pub fn run(
+        &self,
+        spec: &crate::features::BoundSpec,
+        data: &DataSpec,
+        lambda: f64,
+    ) -> Result<NetFit, String> {
+        if !spec.spec.method.is_oblivious() {
+            return Err(format!(
+                "method {} is data-dependent and cannot be broadcast",
+                spec.spec.method.name()
+            ));
+        }
+        let src = data.open()?;
+        if src.dim() != spec.d {
+            return Err(format!(
+                "data source {:?} has d = {} but the spec is bound to d = {}",
+                data.name,
+                src.dim(),
+                spec.d
+            ));
+        }
+        let n = data.rows;
+        if n == 0 {
+            return Err("cannot fit zero rows".to_string());
+        }
+        let f_dim = spec.feature_dim();
+        let conns = self.register_fleet(spec, data)?;
+        let n_registered = conns.len();
+
+        let t0 = Instant::now();
+        let shard_ranges: Vec<ShardRange> = (0..n)
+            .step_by(self.cfg.rows_per_shard)
+            .enumerate()
+            .map(|(sid, lo)| ShardRange {
+                shard_id: sid,
+                lo,
+                hi: (lo + self.cfg.rows_per_shard).min(n),
+            })
+            .collect();
+        let n_shards = shard_ranges.len();
+
+        // pull scheduling: drivers pop the next pending shard, so a slow
+        // worker naturally takes fewer shards and a dead worker's range
+        // goes back on the queue for the survivors
+        let pending = Mutex::new(shard_ranges.clone());
+        // worker-reported shard errors: straight to leader recovery (a
+        // repush would ping-pong forever if the data really is unreadable)
+        let failed = Mutex::new(Vec::<usize>::new());
+        let reassigned = AtomicUsize::new(0);
+        let dead = AtomicUsize::new(0);
+        let (res_tx, res_rx) = mpsc::channel::<WireStats>();
+        std::thread::scope(|scope| {
+            for conn in conns {
+                let res_tx = res_tx.clone();
+                let pending = &pending;
+                let failed = &failed;
+                let reassigned = &reassigned;
+                let dead = &dead;
+                let shard_timeout = self.cfg.shard_timeout;
+                scope.spawn(move || {
+                    if !drive_worker(conn, pending, failed, &res_tx, f_dim, reassigned, shard_timeout)
+                    {
+                        dead.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        drop(res_tx);
+
+        // Gather, deduplicating by shard id: the driver protocol never
+        // accepts a late reply after a reassignment, but the merge still
+        // enforces exactly-once (first reply wins) as a belt-and-braces
+        // guard — a duplicate must never be double-counted.
+        let mut replies: BTreeMap<usize, WireStats> = BTreeMap::new();
+        for reply in res_rx {
+            replies.entry(reply.shard_id).or_insert(reply);
+        }
+
+        let failed = failed.into_inner().expect("failed lock");
+        if !failed.is_empty() {
+            eprintln!(
+                "gzk leader: {} shard(s) failed on workers; recovering locally",
+                failed.len()
+            );
+        }
+
+        // leader-local recovery: recompute whatever is missing, per shard
+        // from zeroed statistics — bit-identical to what a worker would
+        // have produced, so the merge below cannot tell the difference
+        let mut recovered = 0usize;
+        if replies.len() < n_shards {
+            let feat = spec.build();
+            let pool = Pool::global();
+            for t in &shard_ranges {
+                if replies.contains_key(&t.shard_id) {
+                    continue;
+                }
+                let (x, y) = src.read_range(t.lo, t.hi)?;
+                let t1 = Instant::now();
+                let z = feat.featurize_par(&x, &pool);
+                let featurize_secs = t1.elapsed().as_secs_f64();
+                let mut stats = RidgeStats::new(f_dim);
+                stats.absorb_with(&z, &y, &pool);
+                replies.insert(
+                    t.shard_id,
+                    WireStats { shard_id: t.shard_id, worker_id: usize::MAX, featurize_secs, stats },
+                );
+                recovered += 1;
+            }
+        }
+
+        let (merged, featurize_secs_total) = merge_in_shard_order(&replies, n_shards, n, f_dim)?;
+        let model = merged.solve(lambda);
+        Ok(NetFit {
+            model,
+            stats: merged,
+            n_shards,
+            n_workers: n_registered,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            featurize_secs_total,
+            reassigned_shards: reassigned.load(Ordering::Relaxed),
+            recovered_shards: recovered,
+            dead_workers: dead.load(Ordering::Relaxed),
+        })
+    }
+
+    /// Accept-and-handshake until the requested fleet size registered or
+    /// the registration window closes (a partial fleet proceeds; an empty
+    /// one is an error).
+    fn register_fleet(
+        &self,
+        spec: &crate::features::BoundSpec,
+        data: &DataSpec,
+    ) -> Result<Vec<WorkerConn>, String> {
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("nonblocking accept: {e}"))?;
+        let deadline = Instant::now() + self.cfg.register_timeout;
+        let mut conns = Vec::new();
+        while conns.len() < self.cfg.n_workers {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let id = conns.len();
+                    match handshake(stream, id, spec, data, self.cfg.shard_timeout) {
+                        Ok(conn) => conns.push(conn),
+                        Err(e) => eprintln!("gzk leader: rejected peer {peer}: {e}"),
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => continue, // transient accept failure
+            }
+        }
+        if conns.is_empty() {
+            return Err(format!(
+                "no workers registered within {:?} (start `gzk worker --addr <leader>`)",
+                self.cfg.register_timeout
+            ));
+        }
+        if conns.len() < self.cfg.n_workers {
+            eprintln!(
+                "gzk leader: registration window closed with {} of {} workers; proceeding",
+                conns.len(),
+                self.cfg.n_workers
+            );
+        }
+        Ok(conns)
+    }
+}
+
+fn handshake(
+    mut stream: TcpStream,
+    id: usize,
+    spec: &crate::features::BoundSpec,
+    data: &DataSpec,
+    shard_timeout: Duration,
+) -> Result<WorkerConn, String> {
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(shard_timeout))
+        .map_err(|e| format!("set read timeout: {e}"))?;
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| format!("clone worker connection: {e}"))?,
+    );
+    let mut buf = Vec::new();
+    match read_line_bounded(&mut reader, &mut buf, MAX_FRAME_BYTES, Some(shard_timeout)) {
+        LineRead::Line => {}
+        _ => return Err("no registration line".to_string()),
+    }
+    let line = std::str::from_utf8(&buf).map_err(|_| "registration is not UTF-8".to_string())?;
+    match wire::parse_msg(line.trim()) {
+        Ok(DistMsg::Register { .. }) => {}
+        Ok(other) => {
+            let _ = send_line(&mut stream, &wire::error_msg("expected register", None));
+            return Err(format!("expected register, got {other:?}"));
+        }
+        Err(e) => {
+            let _ = send_line(&mut stream, &wire::error_msg(&e, None));
+            return Err(e);
+        }
+    }
+    send_line(&mut stream, &wire::job_msg(id, spec, data))?;
+    Ok(WorkerConn { id, stream, reader })
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) -> Result<(), String> {
+    stream
+        .write_all(line.as_bytes())
+        .and_then(|()| stream.write_all(b"\n"))
+        .map_err(|e| format!("send: {e}"))
+}
+
+/// Drive one worker connection to completion. Returns `false` when the
+/// worker was abandoned mid-protocol (its in-flight shard repushed);
+/// `true` on a clean drain.
+fn drive_worker(
+    mut conn: WorkerConn,
+    pending: &Mutex<Vec<ShardRange>>,
+    failed: &Mutex<Vec<usize>>,
+    res_tx: &mpsc::Sender<WireStats>,
+    f_dim: usize,
+    reassigned: &AtomicUsize,
+    shard_timeout: Duration,
+) -> bool {
+    let mut buf = Vec::new();
+    loop {
+        let task = match pending.lock().expect("pending lock").pop() {
+            Some(t) => t,
+            None => {
+                let _ = send_line(&mut conn.stream, &wire::done_msg());
+                return true;
+            }
+        };
+        let abandon = |task: ShardRange, why: &str| {
+            eprintln!(
+                "gzk leader: worker {} abandoned on shard {} ({why}); reassigning",
+                conn.id, task.shard_id
+            );
+            pending.lock().expect("pending lock").push(task);
+            reassigned.fetch_add(1, Ordering::Relaxed);
+        };
+        if let Err(e) = send_line(&mut conn.stream, &wire::assign_msg(task)) {
+            abandon(task, &e);
+            return false;
+        }
+        match read_reply(&mut conn.reader, &mut buf, shard_timeout) {
+            Ok(DistMsg::Stats(ws)) => {
+                // lockstep validation: the reply must answer exactly the
+                // assignment in flight, with the right shape and row
+                // count — anything else is a protocol violation and the
+                // worker is abandoned (its shard reassigned)
+                let ws = *ws;
+                if ws.shard_id != task.shard_id
+                    || ws.stats.n != task.hi - task.lo
+                    || ws.stats.b.len() != f_dim
+                {
+                    abandon(task, "reply does not match the assignment");
+                    return false;
+                }
+                let _ = res_tx.send(ws);
+            }
+            Ok(DistMsg::Error { error, .. }) => {
+                // the worker is alive but cannot serve this shard; leave
+                // the shard to leader recovery and keep the worker
+                eprintln!(
+                    "gzk leader: worker {} failed shard {} ({error}); leader will recover it",
+                    conn.id, task.shard_id
+                );
+                failed.lock().expect("failed lock").push(task.shard_id);
+            }
+            Ok(_) => {
+                abandon(task, "unexpected message");
+                return false;
+            }
+            Err(e) => {
+                abandon(task, &e);
+                return false;
+            }
+        }
+    }
+}
+
+fn read_reply(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    shard_timeout: Duration,
+) -> Result<DistMsg, String> {
+    match read_line_bounded(reader, buf, MAX_FRAME_BYTES, Some(shard_timeout)) {
+        LineRead::Line => {}
+        LineRead::Eof | LineRead::Gone => return Err("connection dropped".to_string()),
+        LineRead::Idle => return Err("reply deadline passed".to_string()),
+        LineRead::Overlong => return Err(format!("frame over {MAX_FRAME_BYTES} bytes")),
+    }
+    let line = std::str::from_utf8(buf).map_err(|_| "frame is not UTF-8".to_string())?;
+    wire::parse_msg(line.trim())
+}
+
+/// The single reduction: merge buffered per-shard statistics in
+/// ascending shard order (float addition is not order-invariant — fixed
+/// order is what makes the distributed fit bit-identical to the
+/// in-process one). Refuses to finalize unless exactly shards
+/// `0..n_shards` are present and the merged row count matches: a fit
+/// that silently lost rows would be a *wrong model*, not a slow one.
+pub(crate) fn merge_in_shard_order(
+    replies: &BTreeMap<usize, WireStats>,
+    n_shards: usize,
+    expected_rows: usize,
+    f_dim: usize,
+) -> Result<(RidgeStats, f64), String> {
+    if replies.len() != n_shards || replies.keys().next_back() != Some(&(n_shards - 1)) {
+        return Err(format!(
+            "shard-count mismatch: have {} of {n_shards} shards; refusing to finalize",
+            replies.len()
+        ));
+    }
+    let mut merged = RidgeStats::new(f_dim);
+    let mut featurize_secs_total = 0.0;
+    for reply in replies.values() {
+        merged.merge(&reply.stats);
+        featurize_secs_total += reply.featurize_secs;
+    }
+    if merged.n != expected_rows {
+        return Err(format!(
+            "distributed fit absorbed {} of {expected_rows} rows; refusing to finalize",
+            merged.n
+        ));
+    }
+    Ok((merged, featurize_secs_total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(sid: usize, rows: usize) -> WireStats {
+        let mut stats = RidgeStats::new(2);
+        stats.n = rows;
+        stats.b = vec![sid as f64, 1.0];
+        WireStats { shard_id: sid, worker_id: 0, featurize_secs: 0.5, stats }
+    }
+
+    #[test]
+    fn merge_refuses_missing_shards_and_row_mismatch() {
+        // complete set: merges, in order, with summed telemetry
+        let mut replies = BTreeMap::new();
+        for sid in 0..3 {
+            replies.insert(sid, shard(sid, 10));
+        }
+        let (merged, secs) = merge_in_shard_order(&replies, 3, 30, 2).unwrap();
+        assert_eq!(merged.n, 30);
+        assert_eq!(merged.b, vec![3.0, 3.0]);
+        assert!((secs - 1.5).abs() < 1e-12);
+
+        // a missing shard: refuse (the dead-worker path must never
+        // finalize a partial model)
+        replies.remove(&1);
+        let e = merge_in_shard_order(&replies, 3, 30, 2).unwrap_err();
+        assert!(e.contains("shard-count mismatch"), "{e}");
+
+        // a wrong shard id filling the count: still refused
+        replies.insert(7, shard(7, 10));
+        let e = merge_in_shard_order(&replies, 3, 30, 2).unwrap_err();
+        assert!(e.contains("refusing to finalize"), "{e}");
+
+        // right shards, wrong row total: refused
+        let mut replies = BTreeMap::new();
+        for sid in 0..3 {
+            replies.insert(sid, shard(sid, 9));
+        }
+        let e = merge_in_shard_order(&replies, 3, 30, 2).unwrap_err();
+        assert!(e.contains("27 of 30 rows"), "{e}");
+    }
+}

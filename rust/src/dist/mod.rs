@@ -1,0 +1,31 @@
+//! Distributed execution over TCP: the in-process one-round protocol
+//! ([`crate::coordinator`]) lifted across machines, plus a replica proxy
+//! for the serving tier. See DESIGN.md §3d.
+//!
+//! Three process roles, all std-only TCP speaking newline-delimited
+//! JSON:
+//!
+//! - [`worker`] — `gzk worker`: registers with a leader, rebuilds the
+//!   broadcast [`BoundSpec`](crate::features::BoundSpec), opens its own
+//!   [`DataSource`](crate::data::DataSource), answers `ShardRange`
+//!   assignments with per-shard [`RidgeStats`](crate::krr::RidgeStats).
+//! - [`leader`] — `gzk leader`: scatters shards over the registered
+//!   fleet, reassigns on worker death, recovers unreadable shards
+//!   locally, merges in deterministic shard order (bit-identical to
+//!   [`fit_one_round_source`](crate::coordinator::fit_one_round_source)),
+//!   refuses to finalize a partial model.
+//! - [`proxy`] — `gzk proxy`: round-robin load balancer over `gzk
+//!   server` replicas with retry-on-backpressure and eject-and-probe
+//!   replica health.
+//!
+//! The [`wire`] module holds the codec shared by all three.
+
+pub mod leader;
+pub mod proxy;
+pub mod wire;
+pub mod worker;
+
+pub use leader::{DistLeader, LeaderConfig, NetFit};
+pub use proxy::{Proxy, ProxyConfig};
+pub use wire::{DataSpec, DistMsg, WireStats, DIST_PROTO, MAX_FRAME_BYTES};
+pub use worker::{run_worker, WorkerOptions, WorkerReport};

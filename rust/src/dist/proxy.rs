@@ -1,0 +1,389 @@
+//! `gzk proxy` — a thin line-level load balancer in front of N `gzk
+//! server` replicas.
+//!
+//! The proxy speaks the *serving* wire protocol on both sides: a client
+//! connects to the proxy exactly as it would to a server, and every
+//! request line is forwarded verbatim to one replica (round-robin over
+//! the healthy set), the reply line returned verbatim. Three behaviors
+//! make it more than a byte pipe:
+//!
+//! - **Retry on backpressure.** A replica replying `"retry":true`
+//!   (admission or connection-budget overload) is not an error — the
+//!   proxy backs off briefly (doubling, bounded) and retries the *next*
+//!   replica. Only when every attempt is exhausted does the client see an
+//!   overload reply, so N replicas genuinely pool their admission
+//!   capacity.
+//! - **Eject and probe.** A replica that fails at the transport level
+//!   (connect refused, dropped mid-roundtrip) accrues consecutive-failure
+//!   strikes; past the threshold it is ejected from rotation. A prober
+//!   thread periodically sends it a `stats` command and readmits it on
+//!   the first healthy reply — logging the server's uptime, reload count,
+//!   and admission-reject counters, which is where the fleet's health
+//!   telemetry surfaces. If *every* replica is ejected, rotation falls
+//!   back to all of them (pass-through) so a full outage heals without
+//!   waiting a probe period.
+//! - **Shutdown fan-out.** The wire `shutdown` command (loopback-gated,
+//!   same [`is_loopback_ip`] rule as the server) is broadcast best-effort
+//!   to every replica, then shuts the proxy down — one line tears down
+//!   the whole serving tier, which is what the CI smoke job and loadgen
+//!   `--shutdown` rely on.
+//!
+//! The proxy never parses predict bodies (it routes lines, not models),
+//! so it adds microseconds, not a deserialization round-trip.
+
+use crate::server::listener::{is_loopback_ip, read_line_bounded, LineRead, MAX_LINE_BYTES};
+use crate::server::loadgen::ClientConn;
+use crate::server::wire;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Knobs for a [`Proxy`]; the defaults match the CLI's.
+#[derive(Clone, Copy, Debug)]
+pub struct ProxyConfig {
+    /// consecutive transport failures before a replica is ejected
+    pub eject_after: u32,
+    /// how often the prober re-checks ejected replicas
+    pub probe_interval: Duration,
+    /// forwarding attempts per request; 0 = twice the replica count
+    pub attempts: usize,
+    /// close a client connection after this long with no request bytes
+    pub idle_timeout: Option<Duration>,
+    /// honor the wire `shutdown` command from non-loopback peers
+    pub allow_remote_shutdown: bool,
+}
+
+impl Default for ProxyConfig {
+    fn default() -> ProxyConfig {
+        ProxyConfig {
+            eject_after: 3,
+            probe_interval: Duration::from_millis(500),
+            attempts: 0,
+            idle_timeout: Some(Duration::from_secs(300)),
+            allow_remote_shutdown: false,
+        }
+    }
+}
+
+/// Per-replica rotation state.
+struct Replica {
+    addr: String,
+    healthy: AtomicBool,
+    consecutive_failures: AtomicU32,
+    /// requests this replica answered (including `"retry":true` answers)
+    forwarded: AtomicU64,
+}
+
+impl Replica {
+    fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.healthy.store(true, Ordering::Relaxed);
+        self.forwarded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_failure(&self, eject_after: u32) {
+        let strikes = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if strikes >= eject_after && self.healthy.swap(false, Ordering::Relaxed) {
+            eprintln!(
+                "gzk proxy: replica {} ejected after {strikes} consecutive failures",
+                self.addr
+            );
+        }
+    }
+}
+
+struct ProxyShared {
+    replicas: Vec<Replica>,
+    rr: AtomicUsize,
+    shutdown: AtomicBool,
+    active_conns: AtomicUsize,
+    addr: SocketAddr,
+    cfg: ProxyConfig,
+}
+
+impl ProxyShared {
+    fn begin_shutdown(&self) {
+        // flip the flag and poke the blocking accept with a throwaway
+        // self-connection (same dance as the server listener)
+        if !self.shutdown.swap(true, Ordering::AcqRel) {
+            let _ = TcpStream::connect(self.addr);
+        }
+    }
+
+    /// Pick the next replica index, preferring healthy ones; when every
+    /// replica is ejected, rotate over all of them so a total outage
+    /// heals on the first successful forward, not the next probe tick.
+    fn pick(&self) -> usize {
+        let n = self.replicas.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        for off in 0..n {
+            let i = (start + off) % n;
+            if self.replicas[i].healthy.load(Ordering::Relaxed) {
+                return i;
+            }
+        }
+        start % n
+    }
+}
+
+/// A running proxy (accept thread + prober thread).
+pub struct Proxy {
+    shared: Arc<ProxyShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    prober: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Proxy {
+    /// Bind `addr` (port 0 = ephemeral) and start balancing over
+    /// `replicas`.
+    pub fn start(addr: &str, replicas: Vec<String>, cfg: ProxyConfig) -> Result<Proxy, String> {
+        if replicas.is_empty() {
+            return Err("proxy needs at least one replica address".to_string());
+        }
+        if cfg.eject_after < 1 {
+            return Err("eject_after must be >= 1".to_string());
+        }
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let bound = listener.local_addr().map_err(|e| format!("local addr: {e}"))?;
+        let shared = Arc::new(ProxyShared {
+            replicas: replicas
+                .into_iter()
+                .map(|addr| Replica {
+                    addr,
+                    healthy: AtomicBool::new(true),
+                    consecutive_failures: AtomicU32::new(0),
+                    forwarded: AtomicU64::new(0),
+                })
+                .collect(),
+            rr: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            addr: bound,
+            cfg,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || accept_loop(listener, &accept_shared));
+        let prober_shared = Arc::clone(&shared);
+        let prober = std::thread::spawn(move || probe_loop(&prober_shared));
+        Ok(Proxy { shared, accept: Some(accept), prober: Some(prober) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+
+    /// Block until shutdown, then return a one-line forwarding summary
+    /// (per-replica answered counts — the CLI prints it on exit).
+    pub fn wait(mut self) -> String {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.prober.take() {
+            let _ = h.join();
+        }
+        // bounded grace for in-flight client connections to drain
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while self.shared.active_conns.load(Ordering::Acquire) > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let per: Vec<String> = self
+            .shared
+            .replicas
+            .iter()
+            .map(|r| format!("{}={}", r.addr, r.forwarded.load(Ordering::Relaxed)))
+            .collect();
+        format!("forwarded {}", per.join(" "))
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<ProxyShared>) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        shared.active_conns.fetch_add(1, Ordering::AcqRel);
+        let shared = Arc::clone(shared);
+        std::thread::spawn(move || {
+            handle_client(stream, &shared);
+            shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+        });
+    }
+}
+
+/// Re-check ejected replicas with a `stats` roundtrip; a healthy reply
+/// readmits the replica and logs the server-side telemetry (uptime,
+/// reloads, admission rejects) that the stats command now carries.
+fn probe_loop(shared: &Arc<ProxyShared>) {
+    let stats_line = wire::cmd_request("stats");
+    while !shared.shutdown.load(Ordering::Acquire) {
+        std::thread::sleep(shared.cfg.probe_interval);
+        for r in &shared.replicas {
+            if r.healthy.load(Ordering::Relaxed) || shared.shutdown.load(Ordering::Acquire) {
+                continue;
+            }
+            let probe = ClientConn::connect(&r.addr)
+                .and_then(|mut conn| conn.roundtrip(&stats_line));
+            if let Ok(reply) = probe {
+                if reply.ok {
+                    r.consecutive_failures.store(0, Ordering::Relaxed);
+                    r.healthy.store(true, Ordering::Relaxed);
+                    let uptime = reply.body.get("uptime_s").and_then(|v| v.as_f64());
+                    let reloads = reply.body.get("reloads").and_then(|v| v.as_usize());
+                    let rejects = reply.body.get("total_rejects").and_then(|v| v.as_usize());
+                    eprintln!(
+                        "gzk proxy: replica {} readmitted (uptime_s {:?}, reloads {:?}, \
+                         total_rejects {:?})",
+                        r.addr, uptime, reloads, rejects
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn handle_client(stream: TcpStream, shared: &Arc<ProxyShared>) {
+    let _ = stream.set_nodelay(true);
+    if let Some(idle) = shared.cfg.idle_timeout {
+        let _ = stream.set_read_timeout(Some(idle));
+        let _ = stream.set_write_timeout(Some(idle));
+    }
+    let peer_is_loopback = stream.peer_addr().map(|a| is_loopback_ip(a.ip())).unwrap_or(false);
+    let mut writer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = std::io::BufReader::new(stream);
+    let mut buf = Vec::new();
+    // per-connection replica connections, opened lazily and kept for the
+    // life of the client connection (so a pipelining client reuses them)
+    let mut conns: Vec<Option<ClientConn>> = (0..shared.replicas.len()).map(|_| None).collect();
+    let send = |writer: &mut TcpStream, line: &str| {
+        writer.write_all(line.as_bytes()).and_then(|()| writer.write_all(b"\n")).is_ok()
+    };
+    loop {
+        match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES, shared.cfg.idle_timeout) {
+            LineRead::Line => {}
+            LineRead::Eof | LineRead::Gone => return,
+            LineRead::Idle => {
+                let _ = send(&mut writer, &wire::error_reply("idle timeout; closing connection"));
+                return;
+            }
+            LineRead::Overlong => {
+                let _ = send(
+                    &mut writer,
+                    &wire::error_reply(&format!(
+                        "request line exceeds {MAX_LINE_BYTES} bytes; closing connection"
+                    )),
+                );
+                return;
+            }
+        }
+        let line = match std::str::from_utf8(&buf) {
+            Ok(l) => l.trim(),
+            Err(_) => {
+                if !send(&mut writer, &wire::error_reply("request is not UTF-8")) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if line.is_empty() {
+            continue;
+        }
+        // the proxy parses just enough to spot the shutdown command; every
+        // other line (predict, ping, models, stats, even malformed input)
+        // is the replica's to answer
+        if matches!(wire::parse_request(line), Ok(wire::Request::Shutdown)) {
+            if !peer_is_loopback && !shared.cfg.allow_remote_shutdown {
+                if !send(
+                    &mut writer,
+                    &wire::error_reply(
+                        "shutdown refused from a non-loopback peer (the proxy \
+                         must opt in with --allow-remote-shutdown)",
+                    ),
+                ) {
+                    return;
+                }
+                continue;
+            }
+            broadcast_shutdown(shared);
+            let _ = send(&mut writer, &wire::shutdown_reply());
+            shared.begin_shutdown();
+            return;
+        }
+        let reply = forward(shared, &mut conns, line);
+        if !send(&mut writer, &reply) {
+            return;
+        }
+    }
+}
+
+/// Fan the wire `shutdown` out to every replica, best-effort: a replica
+/// that is already down is already shut down.
+fn broadcast_shutdown(shared: &Arc<ProxyShared>) {
+    let line = wire::cmd_request("shutdown");
+    for r in &shared.replicas {
+        if let Ok(mut conn) = ClientConn::connect(&r.addr) {
+            let _ = conn.roundtrip(&line);
+        }
+    }
+}
+
+/// Forward one request line, failing over across replicas: transport
+/// failures strike the replica and move on immediately; `"retry":true`
+/// replies back off briefly (doubling, bounded) and try the next replica.
+fn forward(
+    shared: &Arc<ProxyShared>,
+    conns: &mut [Option<ClientConn>],
+    line: &str,
+) -> String {
+    let attempts = match shared.cfg.attempts {
+        0 => (2 * shared.replicas.len()).max(2),
+        a => a,
+    };
+    let mut backoff = Duration::from_micros(200);
+    for _ in 0..attempts {
+        let i = shared.pick();
+        let replica = &shared.replicas[i];
+        if conns[i].is_none() {
+            match ClientConn::connect(&replica.addr) {
+                Ok(c) => conns[i] = Some(c),
+                Err(_) => {
+                    replica.record_failure(shared.cfg.eject_after);
+                    continue;
+                }
+            }
+        }
+        let conn = conns[i].as_mut().expect("connection just ensured");
+        match conn.roundtrip(line) {
+            Ok(reply) => {
+                replica.record_success();
+                if reply.retry {
+                    // the replica is up but saturated: back off, try the
+                    // next one — this is where replicas pool capacity
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(10));
+                    continue;
+                }
+                return reply.raw;
+            }
+            Err(_) => {
+                conns[i] = None; // the cached connection is poisoned
+                replica.record_failure(shared.cfg.eject_after);
+            }
+        }
+    }
+    wire::overload_reply(&format!("all {} replicas busy or down; retry", shared.replicas.len()))
+}

@@ -1,0 +1,307 @@
+//! Wire codec for the distributed-fit protocol: newline-delimited JSON,
+//! one message object per line, over a plain TCP connection between a
+//! `gzk leader` and its `gzk worker` fleet.
+//!
+//! Message grammar (direction in brackets; see DESIGN.md §3d):
+//!
+//! ```text
+//! {"dist":"register","proto":1}                 [worker -> leader] hello
+//! {"dist":"job","proto":1,"worker":0,
+//!  "spec":{...BoundSpec...},
+//!  "data":{"name":"elevation","rows":4000,"seed":"7"}}
+//!                                               [leader -> worker] broadcast
+//! {"dist":"assign","shard_id":3,"lo":24576,"hi":32768}
+//!                                               [leader -> worker] one task
+//! {"dist":"stats","shard_id":3,"worker":0,"featurize_secs":0.12,
+//!  "n":8192,"yy":41.5,"b":[...],"g":{"rows":F,"cols":F,"data":[...]}}
+//!                                               [worker -> leader] one reply
+//! {"dist":"done"}                               [leader -> worker] no more work
+//! {"dist":"error","error":"...","shard_id":3}   [either] shard_id optional
+//! ```
+//!
+//! The broadcast is the whole point of the protocol: a [`BoundSpec`] is a
+//! few bytes of JSON and every holder rebuilds a bit-identical feature
+//! map from it, so the only bulk payload is the per-shard sufficient
+//! statistics — O(F^2), independent of shard size. Floats reuse the
+//! model-artifact convention ([`fmt_f64`]: shortest round-trip `{:?}`
+//! formatting, parsed back via `str::parse::<f64>`), so `RidgeStats`
+//! cross the wire **bit-exactly** and the leader's merge reproduces the
+//! in-process fit to the last bit.
+//!
+//! Every inbound byte is untrusted: frames are read through the bounded
+//! line reader ([`crate::server::listener::read_line_bounded`]) with the
+//! [`MAX_FRAME_BYTES`] cap (larger than the serving cap — a stats frame
+//! carries an F x F Gram block), the JSON parser bounds nesting depth,
+//! and [`parse_msg`] rejects non-finite floats and mismatched dimensions
+//! — a hostile or buggy peer degrades to a protocol error, never a
+//! poisoned merge or a panic in the float formatter.
+
+use crate::data::{DataSource, FileSource, SyntheticSource};
+use crate::features::BoundSpec;
+use crate::krr::RidgeStats;
+use crate::model::artifact::{json_string, mat_from_json, mat_to_json, vec_from_json, vec_to_json};
+use crate::runtime::Json;
+
+pub use crate::coordinator::ShardRange;
+
+/// Protocol version; a mismatch is a registration error, not a guess.
+pub const DIST_PROTO: usize = 1;
+
+/// Longest accepted dist frame (64 MiB). A stats frame is dominated by
+/// the F x F Gram block at ~20 bytes per float, so this admits feature
+/// budgets up to roughly m = 1800 while still bounding a hostile peer
+/// that streams bytes without a newline.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// The dataset a job reads: every worker opens its **own** source from
+/// this descriptor (shards are row ranges, nothing is copied over the
+/// wire). A name starting with `file:` opens that CSV/GZKBIN01 path —
+/// the shared-filesystem deployment shape — anything else is a
+/// [`SyntheticSource`] name whose row i is a pure function of
+/// `(name, seed, i)` on every machine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DataSpec {
+    pub name: String,
+    /// rows the job consumes: every shard range lies inside `[0, rows)`
+    pub rows: usize,
+    /// generator seed (ignored by `file:` sources)
+    pub seed: u64,
+}
+
+impl DataSpec {
+    /// Open this descriptor as a live source, checking it actually holds
+    /// `rows` rows.
+    pub fn open(&self) -> Result<Box<dyn DataSource>, String> {
+        let src: Box<dyn DataSource> = match self.name.strip_prefix("file:") {
+            Some(path) => Box::new(FileSource::open(path)?),
+            None => Box::new(SyntheticSource::by_name(&self.name, self.rows, self.seed)?),
+        };
+        if src.len() < self.rows {
+            return Err(format!(
+                "data source {:?} holds {} rows but the job needs {}",
+                self.name,
+                src.len(),
+                self.rows
+            ));
+        }
+        Ok(src)
+    }
+
+    fn to_json(&self) -> String {
+        // the seed is a decimal string so the full u64 range survives the
+        // f64-backed JSON number type (same convention as BoundSpec)
+        format!(
+            r#"{{"name":{},"rows":{},"seed":"{}"}}"#,
+            json_string(&self.name),
+            self.rows,
+            self.seed
+        )
+    }
+
+    fn from_json_value(j: &Json) -> Result<DataSpec, String> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "data spec missing string field \"name\"".to_string())?
+            .to_string();
+        if name.is_empty() {
+            return Err("data spec \"name\" must not be empty".to_string());
+        }
+        let rows = j
+            .get("rows")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| "data spec missing integer field \"rows\"".to_string())?;
+        let seed = j
+            .get("seed")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "data spec missing string field \"seed\"".to_string())?
+            .parse::<u64>()
+            .map_err(|_| "data spec \"seed\" must be a decimal u64 string".to_string())?;
+        Ok(DataSpec { name, rows, seed })
+    }
+}
+
+/// A worker's per-shard reply as it crosses the wire.
+#[derive(Clone, Debug)]
+pub struct WireStats {
+    pub shard_id: usize,
+    pub worker_id: usize,
+    /// wall time the worker spent featurizing this shard (seconds)
+    pub featurize_secs: f64,
+    pub stats: RidgeStats,
+}
+
+/// One parsed dist message.
+#[derive(Debug)]
+pub enum DistMsg {
+    Register { proto: usize },
+    Job { worker_id: usize, spec: BoundSpec, data: DataSpec },
+    Assign(ShardRange),
+    Stats(Box<WireStats>),
+    Done,
+    Error { error: String, shard_id: Option<usize> },
+}
+
+pub fn register_msg() -> String {
+    format!(r#"{{"dist":"register","proto":{DIST_PROTO}}}"#)
+}
+
+pub fn job_msg(worker_id: usize, spec: &BoundSpec, data: &DataSpec) -> String {
+    format!(
+        r#"{{"dist":"job","proto":{DIST_PROTO},"worker":{worker_id},"spec":{},"data":{}}}"#,
+        spec.to_json(),
+        data.to_json()
+    )
+}
+
+pub fn assign_msg(t: ShardRange) -> String {
+    format!(
+        r#"{{"dist":"assign","shard_id":{},"lo":{},"hi":{}}}"#,
+        t.shard_id, t.lo, t.hi
+    )
+}
+
+/// Encode a stats reply. Errs (instead of panicking in the artifact
+/// float formatter) if any statistic is non-finite — the worker then
+/// degrades to an error message for this shard and the leader recovers
+/// it locally.
+pub fn stats_msg(s: &WireStats) -> Result<String, String> {
+    let finite = s.featurize_secs.is_finite()
+        && s.stats.yy.is_finite()
+        && s.stats.b.iter().all(|v| v.is_finite())
+        && s.stats.g.data().iter().all(|v| v.is_finite());
+    if !finite {
+        return Err(format!("shard {} produced non-finite statistics", s.shard_id));
+    }
+    Ok(format!(
+        concat!(
+            r#"{{"dist":"stats","shard_id":{},"worker":{},"featurize_secs":{},"#,
+            r#""n":{},"yy":{},"b":{},"g":{}}}"#
+        ),
+        s.shard_id,
+        s.worker_id,
+        crate::model::artifact::fmt_f64(s.featurize_secs),
+        s.stats.n,
+        crate::model::artifact::fmt_f64(s.stats.yy),
+        vec_to_json(&s.stats.b),
+        mat_to_json(&s.stats.g)
+    ))
+}
+
+pub fn done_msg() -> String {
+    r#"{"dist":"done"}"#.to_string()
+}
+
+pub fn error_msg(error: &str, shard_id: Option<usize>) -> String {
+    match shard_id {
+        Some(sid) => {
+            format!(r#"{{"dist":"error","error":{},"shard_id":{sid}}}"#, json_string(error))
+        }
+        None => format!(r#"{{"dist":"error","error":{}}}"#, json_string(error)),
+    }
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| format!("dist message missing integer field {key:?}"))
+}
+
+/// Parse one dist message line. Malformed input is an error *message* —
+/// never a panic, since every byte is peer-controlled. Stats frames are
+/// validated here (finite floats, consistent dimensions) so a lying peer
+/// cannot push a NaN or a shape mismatch into the leader's merge.
+pub fn parse_msg(line: &str) -> Result<DistMsg, String> {
+    let j = Json::parse(line).map_err(|e| format!("malformed dist message: {e}"))?;
+    let tag = j
+        .get("dist")
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| "message missing string field \"dist\"".to_string())?;
+    match tag {
+        "register" => {
+            let proto = req_usize(&j, "proto")?;
+            if proto != DIST_PROTO {
+                return Err(format!("protocol mismatch: peer speaks v{proto}, this is v{DIST_PROTO}"));
+            }
+            Ok(DistMsg::Register { proto })
+        }
+        "job" => {
+            let proto = req_usize(&j, "proto")?;
+            if proto != DIST_PROTO {
+                return Err(format!("protocol mismatch: peer speaks v{proto}, this is v{DIST_PROTO}"));
+            }
+            let worker_id = req_usize(&j, "worker")?;
+            let spec = BoundSpec::from_json_value(
+                j.get("spec").ok_or_else(|| "job missing \"spec\"".to_string())?,
+            )?;
+            let data = DataSpec::from_json_value(
+                j.get("data").ok_or_else(|| "job missing \"data\"".to_string())?,
+            )?;
+            Ok(DistMsg::Job { worker_id, spec, data })
+        }
+        "assign" => {
+            let shard_id = req_usize(&j, "shard_id")?;
+            let lo = req_usize(&j, "lo")?;
+            let hi = req_usize(&j, "hi")?;
+            if lo >= hi {
+                return Err(format!("assign shard {shard_id}: empty range [{lo}, {hi})"));
+            }
+            Ok(DistMsg::Assign(ShardRange { shard_id, lo, hi }))
+        }
+        "stats" => {
+            let shard_id = req_usize(&j, "shard_id")?;
+            let worker_id = req_usize(&j, "worker")?;
+            let featurize_secs = j
+                .get("featurize_secs")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| "stats missing number field \"featurize_secs\"".to_string())?;
+            let n = req_usize(&j, "n")?;
+            let yy = j
+                .get("yy")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| "stats missing number field \"yy\"".to_string())?;
+            let b = vec_from_json(
+                j.get("b").ok_or_else(|| "stats missing \"b\"".to_string())?,
+            )?;
+            let g = mat_from_json(
+                j.get("g").ok_or_else(|| "stats missing \"g\"".to_string())?,
+            )?;
+            if g.rows() != g.cols() || g.rows() != b.len() {
+                return Err(format!(
+                    "stats shard {shard_id}: inconsistent dimensions (g {}x{}, b {})",
+                    g.rows(),
+                    g.cols(),
+                    b.len()
+                ));
+            }
+            // "1e999" parses to inf: refuse it here so a hostile worker can
+            // never poison the merge (fmt_f64 would panic on the way out)
+            let finite = featurize_secs.is_finite()
+                && yy.is_finite()
+                && b.iter().all(|v| v.is_finite())
+                && g.data().iter().all(|v| v.is_finite());
+            if !finite {
+                return Err(format!("stats shard {shard_id}: non-finite statistics"));
+            }
+            Ok(DistMsg::Stats(Box::new(WireStats {
+                shard_id,
+                worker_id,
+                featurize_secs,
+                stats: RidgeStats { g, b, n, yy },
+            })))
+        }
+        "done" => Ok(DistMsg::Done),
+        "error" => {
+            let error = j
+                .get("error")
+                .and_then(|e| e.as_str())
+                .ok_or_else(|| "error message missing string field \"error\"".to_string())?
+                .to_string();
+            let shard_id = j.get("shard_id").and_then(|v| v.as_usize());
+            Ok(DistMsg::Error { error, shard_id })
+        }
+        other => Err(format!(
+            "unknown dist message {other:?}; known: register, job, assign, stats, done, error"
+        )),
+    }
+}

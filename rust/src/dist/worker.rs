@@ -1,0 +1,194 @@
+//! The `gzk worker` process: connect to a leader, receive the broadcast
+//! job, compute per-shard sufficient statistics, stream them back.
+//!
+//! A worker is stateless and data-local: it rebuilds the feature map
+//! from the broadcast [`BoundSpec`] (bit-identical on every machine —
+//! the registry determinism contract) and opens its **own**
+//! [`DataSource`](crate::data::DataSource) from the job's
+//! [`DataSpec`](super::wire::DataSpec); an assignment is three integers.
+//! Inside the process the worker draws the global
+//! [`Pool`](crate::exec::Pool) for featurize and absorb — bit-identical
+//! to the serial path at any width (the PR-3 contract), so a shard's
+//! statistics do not depend on which machine computed them or how many
+//! threads it had. That is the whole bit-identity story: the leader can
+//! merge replies from any mix of workers (or recompute a lost shard
+//! itself) and still reproduce the single-process fit exactly.
+//!
+//! A shard whose source read fails is answered with an error message
+//! (never a fabricated reply); the leader recovers that shard locally,
+//! exactly like the in-process protocol.
+
+use super::wire::{self, DistMsg, MAX_FRAME_BYTES};
+use crate::exec::Pool;
+use crate::features::Featurizer;
+use crate::krr::RidgeStats;
+use crate::server::listener::{read_line_bounded, LineRead};
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Knobs for [`run_worker`]; the defaults match the CLI's.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// connection attempts before giving up (the leader may not be
+    /// listening yet — workers and leader are launched concurrently)
+    pub connect_attempts: usize,
+    /// delay between connection attempts
+    pub connect_delay: Duration,
+    /// give up if the leader is silent for this long (covers the gap
+    /// while the leader waits for the rest of the fleet to register)
+    pub idle_timeout: Duration,
+    /// fault injection for tests: drop the connection (mid-protocol,
+    /// without replying) when the (n+1)-th assignment arrives — the
+    /// network twin of the in-process `Backend::Flaky`
+    pub die_after_shards: Option<usize>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions {
+            connect_attempts: 50,
+            connect_delay: Duration::from_millis(200),
+            idle_timeout: Duration::from_secs(300),
+            die_after_shards: None,
+        }
+    }
+}
+
+/// What a clean worker run reports (the CLI prints it).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerReport {
+    pub worker_id: usize,
+    pub shards: usize,
+    pub rows: usize,
+    pub featurize_secs: f64,
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) -> Result<(), String> {
+    stream
+        .write_all(line.as_bytes())
+        .and_then(|()| stream.write_all(b"\n"))
+        .map_err(|e| format!("send to leader: {e}"))
+}
+
+fn read_msg(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    idle: Duration,
+) -> Result<DistMsg, String> {
+    match read_line_bounded(reader, buf, MAX_FRAME_BYTES, Some(idle)) {
+        LineRead::Line => {}
+        LineRead::Eof | LineRead::Gone => return Err("leader closed the connection".to_string()),
+        LineRead::Idle => return Err("leader went silent (idle timeout)".to_string()),
+        LineRead::Overlong => {
+            return Err(format!("leader sent a frame over {MAX_FRAME_BYTES} bytes"));
+        }
+    }
+    let line = std::str::from_utf8(buf).map_err(|_| "leader frame is not UTF-8".to_string())?;
+    wire::parse_msg(line.trim())
+}
+
+/// Run one worker to completion: register, receive the job, serve
+/// assignments until the leader says done. Returns a summary on a clean
+/// run; any protocol or I/O failure is an `Err` (the CLI exits 1).
+pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport, String> {
+    let mut stream = connect_with_retry(addr, opts)?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(opts.idle_timeout))
+        .map_err(|e| format!("set read timeout: {e}"))?;
+    send_line(&mut stream, &wire::register_msg())?;
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| format!("clone leader connection: {e}"))?,
+    );
+    let mut buf = Vec::new();
+
+    let (worker_id, spec, data) = match read_msg(&mut reader, &mut buf, opts.idle_timeout)? {
+        DistMsg::Job { worker_id, spec, data } => (worker_id, spec, data),
+        DistMsg::Error { error, .. } => return Err(format!("leader rejected registration: {error}")),
+        other => return Err(format!("expected a job after registering, got {other:?}")),
+    };
+    let src = data.open()?;
+    if src.dim() != spec.d {
+        return Err(format!(
+            "data source {:?} has d = {} but the broadcast spec is bound to d = {}",
+            data.name,
+            src.dim(),
+            spec.d
+        ));
+    }
+    let feat = spec.build();
+    let f_dim = spec.feature_dim();
+    let pool = Pool::global();
+    let mut report =
+        WorkerReport { worker_id, shards: 0, rows: 0, featurize_secs: 0.0 };
+
+    loop {
+        let task = match read_msg(&mut reader, &mut buf, opts.idle_timeout)? {
+            DistMsg::Assign(t) => t,
+            DistMsg::Done => return Ok(report),
+            DistMsg::Error { error, .. } => return Err(format!("leader error: {error}")),
+            other => return Err(format!("expected assign/done, got {other:?}")),
+        };
+        if opts.die_after_shards == Some(report.shards) {
+            // fault injection: vanish mid-protocol, assignment unanswered
+            return Ok(report);
+        }
+        if task.hi > src.len() {
+            send_line(
+                &mut stream,
+                &wire::error_msg(
+                    &format!("assigned range [{}, {}) exceeds {} rows", task.lo, task.hi, src.len()),
+                    Some(task.shard_id),
+                ),
+            )?;
+            continue;
+        }
+        let (x, y) = match src.read_range(task.lo, task.hi) {
+            Ok(chunk) => chunk,
+            Err(e) => {
+                // no fabricated reply: report the shard as failed and let
+                // the leader recover it (its own read surfaces a real
+                // source error)
+                send_line(
+                    &mut stream,
+                    &wire::error_msg(&format!("shard read failed: {e}"), Some(task.shard_id)),
+                )?;
+                continue;
+            }
+        };
+        let t0 = Instant::now();
+        let z = feat.featurize_par(&x, &pool);
+        let featurize_secs = t0.elapsed().as_secs_f64();
+        let mut stats = RidgeStats::new(f_dim);
+        stats.absorb_with(&z, &y, &pool);
+        let reply = wire::WireStats {
+            shard_id: task.shard_id,
+            worker_id,
+            featurize_secs,
+            stats,
+        };
+        match wire::stats_msg(&reply) {
+            Ok(line) => send_line(&mut stream, &line)?,
+            Err(e) => send_line(&mut stream, &wire::error_msg(&e, Some(task.shard_id)))?,
+        }
+        report.shards += 1;
+        report.rows += task.hi - task.lo;
+        report.featurize_secs += featurize_secs;
+    }
+}
+
+fn connect_with_retry(addr: &str, opts: &WorkerOptions) -> Result<TcpStream, String> {
+    let attempts = opts.connect_attempts.max(1);
+    let mut last = String::new();
+    for attempt in 0..attempts {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e.to_string(),
+        }
+        if attempt + 1 < attempts {
+            std::thread::sleep(opts.connect_delay);
+        }
+    }
+    Err(format!("connect to leader {addr}: {last} (after {attempts} attempts)"))
+}

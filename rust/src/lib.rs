@@ -31,7 +31,11 @@
 //!   manifest-poll hot-reload, bounded admission with backpressure
 //!   replies, and a load-generation harness (`gzk server` /
 //!   `gzk loadgen`) — predictions cross the wire bit-identical to a
-//!   local `Model::predict`.
+//!   local `Model::predict`; and the distributed tier ([`dist`]): the
+//!   one-round fit lifted over TCP (`gzk leader` / `gzk worker`, merge
+//!   bit-identical to the in-process fit even across worker deaths) and
+//!   a replica load balancer (`gzk proxy`) with retry-on-backpressure
+//!   and eject-and-probe health.
 //!
 //! Every featurizer — the paper's and all baselines — is described by a
 //! serializable [`features::FeatureSpec`] `(kernel, method, m, seed)` and
@@ -88,6 +92,7 @@ pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod exec;
 pub mod experiments;
 pub mod features;

@@ -44,16 +44,52 @@
 //!                                                    --allow-remote-shutdown); connections
 //!                                                    idle past --idle-s are disconnected
 //!                                                    (0 disables).
-//!   gzk loadgen   --addr <host:port> [--clients 1,8] [--requests 200] [--model N]
+//!   gzk loadgen   [--addr <host:port>] [--clients 1,8] [--requests 200] [--model N]
 //!                 [--dataset <name>] [--store <dir>] [--seed 1] [--shutdown]
-//!                 [--json-out BENCH_serve.json]
+//!                 [--replica-sweep 1,2,4] [--json-out BENCH_serve.json]
 //!                                                    concurrent load generator: one trial
 //!                                                    per client count, rows drawn from the
 //!                                                    named SyntheticSource; with --store it
 //!                                                    checks every reply bit-identical to a
 //!                                                    local Model::predict; emits throughput
 //!                                                    + p50/p95/p99 per trial to the JSON;
-//!                                                    --shutdown stops the server afterwards
+//!                                                    --shutdown stops the server afterwards.
+//!                                                    --replica-sweep spins N in-process
+//!                                                    server replicas over --store behind an
+//!                                                    in-process proxy per entry and records
+//!                                                    a replica-scaling section (with a
+//!                                                    sweep, --addr may be omitted)
+//!   gzk worker    --addr <leader host:port> [--connect-retries 50] [--idle-s 300]
+//!                                                    distributed-fit worker: registers with
+//!                                                    a leader, rebuilds the broadcast spec,
+//!                                                    opens its own copy of the dataset, and
+//!                                                    answers shard assignments with
+//!                                                    per-shard sufficient statistics
+//!   gzk leader    --out <dir> [--listen 127.0.0.1:7801] [--workers 2] [--name ridge]
+//!                 [--dataset elevation --n 20000 | --data PATH] [--chunk-rows 8192]
+//!                 [--lambda 1e-2] [--register-timeout-s 60] [--shard-timeout-s 120]
+//!                 [--verify] [--json-out PATH]
+//!                                                    distributed-fit leader: waits for
+//!                                                    --workers registrations, scatters
+//!                                                    shard ranges, reassigns shards from
+//!                                                    dead workers, merges in deterministic
+//!                                                    shard order (bit-identical to the
+//!                                                    in-process fit; --verify asserts it),
+//!                                                    and persists the model into --out for
+//!                                                    `gzk server` replicas to hot-reload
+//!   gzk proxy     --replicas a:p,b:p[,...] [--listen 127.0.0.1:7810] [--probe-ms 500]
+//!                 [--eject-after 3] [--attempts N] [--idle-s 300]
+//!                 [--allow-remote-shutdown]
+//!                                                    replica load balancer: round-robins
+//!                                                    request lines across `gzk server`
+//!                                                    replicas, retries backpressure
+//!                                                    ("retry":true) on the next replica
+//!                                                    with bounded backoff, ejects a replica
+//!                                                    after --eject-after consecutive
+//!                                                    transport failures and probes it back
+//!                                                    in every --probe-ms; the wire shutdown
+//!                                                    command (loopback-gated) fans out to
+//!                                                    every replica
 //!   gzk info                                          artifact manifest summary
 //!
 //! Data flags (fit / serve):
@@ -90,14 +126,14 @@
 //! those flags rather than silently ignoring them.
 
 use gzk::cli::Args;
-use gzk::coordinator::{fit_ridge_source, Backend, PredictionService};
+use gzk::coordinator::{fit_one_round_source, fit_ridge_source, Backend, PredictionService};
 use gzk::data::{pipeline, DataSource, FileSource, InterleavedSplit, SourceSlice, SyntheticSource};
 use gzk::experiments::{fig1, spectral_quality, table1, table2, table3};
 use gzk::features::FeatureSpec;
 use gzk::krr::mse;
 use gzk::model::{
-    set_run_data, validate_model_name, KmeansModel, KpcaModel, Model, ModelKind, ModelStore,
-    RidgeModel,
+    set_run_data, validate_model_name, FittedMap, KmeansModel, KpcaModel, Model, ModelKind,
+    ModelStore, RidgeModel,
 };
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -170,6 +206,9 @@ fn main() {
         "serve" => serve_demo(&args),
         "server" => server_cmd(&args),
         "loadgen" => loadgen_cmd(&args),
+        "worker" => worker_cmd(&args),
+        "leader" => leader_cmd(&args),
+        "proxy" => proxy_cmd(&args),
         "info" => info(),
         other => {
             eprintln!("unknown subcommand {other:?}; see rust/src/main.rs header for usage");
@@ -835,9 +874,17 @@ fn server_cmd(args: &Args) {
 /// to a local `Model::predict` (via `--store`), results written to
 /// `BENCH_serve.json`.
 fn loadgen_cmd(args: &Args) {
-    let addr = args.get("addr").unwrap_or_else(|| {
-        usage_error("loadgen requires --addr <host:port> (a running `gzk server`)")
-    });
+    let replica_sweep = match args.get_usize_list("replica-sweep", &[]) {
+        Ok(s) => s,
+        Err(e) => usage_error(&e),
+    };
+    let addr = args.get("addr");
+    if addr.is_none() && replica_sweep.is_empty() {
+        usage_error(
+            "loadgen requires --addr <host:port> (a running `gzk server`), \
+             --replica-sweep <counts> (self-hosted replica scaling over --store), or both",
+        );
+    }
     let clients = match args.get_usize_list("clients", &[1, 8]) {
         Ok(c) => c,
         Err(e) => usage_error(&e),
@@ -847,7 +894,7 @@ fn loadgen_cmd(args: &Args) {
         usage_error("--requests must be >= 1");
     }
     let cfg = gzk::server::LoadgenConfig {
-        addr: addr.to_string(),
+        addr: addr.unwrap_or("").to_string(),
         clients,
         requests_per_client: requests,
         dataset: args.get("dataset").map(str::to_string),
@@ -855,6 +902,7 @@ fn loadgen_cmd(args: &Args) {
         store: args.get("store").map(PathBuf::from),
         seed: args.get_u64("seed", 1),
         send_shutdown: args.has("shutdown"),
+        replica_sweep,
     };
     let report = match gzk::server::loadgen::run(&cfg) {
         Ok(r) => r,
@@ -862,7 +910,7 @@ fn loadgen_cmd(args: &Args) {
     };
     println!(
         "loadgen against {} — model {:?}, dataset {}, {} requests/client, bit-identity {}",
-        report.addr,
+        if report.addr.is_empty() { "<in-process replica sweep>" } else { &report.addr },
         report.model,
         report.dataset,
         report.requests_per_client,
@@ -872,21 +920,44 @@ fn loadgen_cmd(args: &Args) {
             "not checked (pass --store <dir>)"
         }
     );
-    let mut table = gzk::bench::Table::new(vec![
-        "clients", "req/s", "p50 us", "p95 us", "p99 us", "retries", "mismatches",
-    ]);
-    for t in &report.trials {
-        table.row(vec![
-            format!("{}", t.clients),
-            format!("{:.0}", t.throughput_rps),
-            format!("{:.1}", t.p50_us),
-            format!("{:.1}", t.p95_us),
-            format!("{:.1}", t.p99_us),
-            format!("{}", t.retries),
-            format!("{}", t.mismatches),
+    if !report.trials.is_empty() {
+        let mut table = gzk::bench::Table::new(vec![
+            "clients", "req/s", "p50 us", "p95 us", "p99 us", "retries", "mismatches",
         ]);
+        for t in &report.trials {
+            table.row(vec![
+                format!("{}", t.clients),
+                format!("{:.0}", t.throughput_rps),
+                format!("{:.1}", t.p50_us),
+                format!("{:.1}", t.p95_us),
+                format!("{:.1}", t.p99_us),
+                format!("{}", t.retries),
+                format!("{}", t.mismatches),
+            ]);
+        }
+        table.print();
     }
-    table.print();
+    if !report.replica_trials.is_empty() {
+        println!(
+            "replica-scaling sweep ({} clients through an in-process proxy):",
+            report.replica_trials.first().map(|r| r.trial.clients).unwrap_or(0)
+        );
+        let mut table = gzk::bench::Table::new(vec![
+            "replicas", "req/s", "p50 us", "p95 us", "p99 us", "retries", "mismatches",
+        ]);
+        for r in &report.replica_trials {
+            table.row(vec![
+                format!("{}", r.replicas),
+                format!("{:.0}", r.trial.throughput_rps),
+                format!("{:.1}", r.trial.p50_us),
+                format!("{:.1}", r.trial.p95_us),
+                format!("{:.1}", r.trial.p99_us),
+                format!("{}", r.trial.retries),
+                format!("{}", r.trial.mismatches),
+            ]);
+        }
+        table.print();
+    }
     for (t, stats) in report.trials.iter().zip(&report.server_stats) {
         println!("server stats after {} clients: {stats}", t.clients);
     }
@@ -904,6 +975,249 @@ fn loadgen_cmd(args: &Args) {
             report.mismatches()
         ));
     }
+}
+
+/// One `gzk worker` process: connect to the leader, serve shard
+/// assignments until the fleet drains. Exits 0 on a clean drain, 1 on
+/// any protocol or I/O failure (the leader reassigns the shard either
+/// way).
+fn worker_cmd(args: &Args) {
+    let addr = args
+        .get("addr")
+        .unwrap_or_else(|| usage_error("worker requires --addr <leader host:port>"));
+    let connect_attempts = args.get_usize("connect-retries", 50);
+    if connect_attempts == 0 {
+        usage_error("--connect-retries must be >= 1");
+    }
+    let idle_s = args.get_usize("idle-s", 300);
+    if idle_s == 0 {
+        usage_error("--idle-s must be >= 1 (the worker needs a liveness deadline on the leader)");
+    }
+    let opts = gzk::dist::WorkerOptions {
+        connect_attempts,
+        idle_timeout: Duration::from_secs(idle_s as u64),
+        ..gzk::dist::WorkerOptions::default()
+    };
+    println!("gzk worker connecting to leader {addr}");
+    match gzk::dist::run_worker(addr, &opts) {
+        Ok(r) => println!(
+            "worker {} done: {} shard(s), {} rows, featurize CPU {:.2}s",
+            r.worker_id, r.shards, r.rows, r.featurize_secs
+        ),
+        Err(e) => fatal_error(&e),
+    }
+}
+
+/// The `gzk leader` process: scatter the one-round fit across a worker
+/// fleet over TCP, merge bit-identically to the in-process fit
+/// (`--verify` asserts exactly that), and persist the model into a
+/// ModelStore that `gzk server` replicas hot-reload.
+fn leader_cmd(args: &Args) {
+    let dir = args.get("out").unwrap_or_else(|| {
+        usage_error("leader requires --out <dir> (the ModelStore the fitted model lands in)")
+    });
+    let name = args.get("name").unwrap_or("ridge").to_string();
+    if let Err(e) = validate_model_name(&name) {
+        usage_error(&e);
+    }
+    let n_workers = args.get_usize("workers", 2);
+    if n_workers == 0 {
+        usage_error("--workers must be >= 1");
+    }
+    let chunk_rows = chunk_rows_flag(args);
+    let lambda = args.get_f64("lambda", 1e-2);
+    if !lambda.is_finite() || lambda < 0.0 {
+        usage_error(&format!("flag --lambda: must be a finite non-negative number, got {lambda}"));
+    }
+    let fspec = parse_spec(args, 512);
+    if !fspec.method.is_oblivious() {
+        usage_error(&format!(
+            "--method {} is data-dependent and cannot be broadcast by the \
+             one-round protocol; pick an oblivious method",
+            fspec.method.name()
+        ));
+    }
+    // the job's dataset descriptor: a *name* every worker resolves against
+    // its own filesystem / generator — the leader never ships rows
+    let data = match (args.get("data"), args.get("dataset")) {
+        (Some(_), Some(_)) => {
+            usage_error("--data and --dataset are mutually exclusive (a file brings its own rows)")
+        }
+        (Some(path), None) => {
+            if args.get("n").is_some() {
+                usage_error(
+                    "--n sizes the synthetic generator, but --data reads its shape from \
+                     the file; drop the flag",
+                );
+            }
+            let src = FileSource::open(path).unwrap_or_else(|e| fatal_error(&e));
+            gzk::dist::DataSpec { name: format!("file:{path}"), rows: src.len(), seed: fspec.seed }
+        }
+        (None, dataset) => {
+            if args.get("d").is_some() {
+                usage_error(&format!(
+                    "--d does not apply here: dataset {:?} fixes its own input dimension",
+                    dataset.unwrap_or("elevation")
+                ));
+            }
+            gzk::dist::DataSpec {
+                name: dataset.unwrap_or("elevation").to_string(),
+                rows: args.get_usize("n", 20_000),
+                seed: fspec.seed,
+            }
+        }
+    };
+    // open the leader's own copy up front: a bad descriptor must fail
+    // before the port binds, not after the fleet registered
+    let src = data.open().unwrap_or_else(|e| fatal_error(&e));
+    let spec = fspec.bind(src.dim());
+    let store = match ModelStore::open(dir) {
+        Ok(s) => s,
+        Err(e) => fatal_error(&e),
+    };
+    let cfg = gzk::dist::LeaderConfig {
+        n_workers,
+        rows_per_shard: chunk_rows,
+        register_timeout: Duration::from_secs(args.get_usize("register-timeout-s", 60) as u64),
+        shard_timeout: Duration::from_secs(args.get_usize("shard-timeout-s", 120) as u64),
+    };
+    let listen = args.get("listen").unwrap_or("127.0.0.1:7801");
+    let leader = match gzk::dist::DistLeader::bind(listen, cfg) {
+        Ok(l) => l,
+        Err(e) => fatal_error(&e),
+    };
+    match leader.local_addr() {
+        Ok(a) => println!(
+            "gzk leader listening on {a} — waiting for {n_workers} worker(s) \
+             (`gzk worker --addr {a}`)"
+        ),
+        Err(e) => fatal_error(&e),
+    }
+    println!("spec: {}", spec.to_json());
+    let fit = match leader.run(&spec, &data, lambda) {
+        Ok(f) => f,
+        Err(e) => fatal_error(&e),
+    };
+    println!(
+        "distributed fit: {} rows / {} shards across {} worker(s) in {:.2}s \
+         (featurize CPU {:.2}s; {} reassigned, {} recovered locally, {} dead workers)",
+        fit.stats.n,
+        fit.n_shards,
+        fit.n_workers,
+        fit.wall_secs,
+        fit.featurize_secs_total,
+        fit.reassigned_shards,
+        fit.recovered_shards,
+        fit.dead_workers
+    );
+
+    // --verify: rerun the fit in-process over the same source and demand
+    // bit-identical weights — the distributed tier's correctness claim,
+    // checked end to end (this is what the CI smoke job asserts)
+    let verified = if args.has("verify") {
+        let local = fit_one_round_source(
+            &spec,
+            src.as_ref(),
+            lambda,
+            n_workers,
+            chunk_rows,
+            Backend::Native,
+        )
+        .unwrap_or_else(|e| fatal_error(&e));
+        let same = fit.model.weights.len() == local.model.weights.len()
+            && fit
+                .model
+                .weights
+                .iter()
+                .zip(&local.model.weights)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        if !same {
+            fatal_error("distributed weights are NOT bit-identical to the in-process fit");
+        }
+        println!(
+            "verified: distributed weights bit-identical to the in-process fit ({} floats)",
+            fit.model.weights.len()
+        );
+        true
+    } else {
+        false
+    };
+
+    set_run_data(&data.name, data.rows);
+    let map = FittedMap::rebuild(spec.clone(), None).unwrap_or_else(|e| fatal_error(&e));
+    let model = RidgeModel::from_parts(map, fit.model.clone());
+    match store.save(&name, &model) {
+        Ok(path) => println!("saved model {name:?} to {path:?}"),
+        Err(e) => fatal_error(&e),
+    }
+    if let Some(json_path) = args.get("json-out") {
+        let text = format!(
+            concat!(
+                r#"{{"format":1,"bench":"distfit","mode":"leader","dataset":{},"rows":{},"#,
+                r#""workers":{},"shards":{},"wall_secs":{:.4},"featurize_secs_total":{:.4},"#,
+                r#""reassigned_shards":{},"recovered_shards":{},"dead_workers":{},"verified":{}}}"#
+            ),
+            gzk::model::artifact::json_string(&data.name),
+            fit.stats.n,
+            fit.n_workers,
+            fit.n_shards,
+            fit.wall_secs,
+            fit.featurize_secs_total,
+            fit.reassigned_shards,
+            fit.recovered_shards,
+            fit.dead_workers,
+            verified,
+        );
+        let path = PathBuf::from(json_path);
+        match std::fs::write(&path, text) {
+            Ok(()) => println!("wrote {path:?}"),
+            Err(e) => fatal_error(&format!("write {path:?}: {e}")),
+        }
+    }
+}
+
+/// The `gzk proxy` process: a round-robin load balancer over `gzk
+/// server` replicas with retry-on-backpressure and eject-and-probe
+/// health. Runs until a (loopback) client sends the wire shutdown
+/// command, which fans out to every replica first.
+fn proxy_cmd(args: &Args) {
+    let replicas = match args.get_addr_list("replicas") {
+        Ok(r) => r,
+        Err(e) => usage_error(&e),
+    };
+    if replicas.is_empty() {
+        usage_error("proxy requires --replicas <host:port,...> (running `gzk server` replicas)");
+    }
+    let listen = args.get("listen").unwrap_or("127.0.0.1:7810");
+    let probe_ms = args.get_usize("probe-ms", 500);
+    if probe_ms == 0 {
+        usage_error("--probe-ms must be >= 1");
+    }
+    let eject_after = args.get_usize("eject-after", 3);
+    if eject_after == 0 {
+        usage_error("--eject-after must be >= 1");
+    }
+    let idle_s = args.get_usize("idle-s", 300);
+    let cfg = gzk::dist::ProxyConfig {
+        eject_after: eject_after as u32,
+        probe_interval: Duration::from_millis(probe_ms as u64),
+        attempts: args.get_usize("attempts", 0),
+        idle_timeout: if idle_s == 0 { None } else { Some(Duration::from_secs(idle_s as u64)) },
+        allow_remote_shutdown: args.has("allow-remote-shutdown"),
+    };
+    let proxy = match gzk::dist::Proxy::start(listen, replicas.clone(), cfg) {
+        Ok(p) => p,
+        Err(e) => fatal_error(&e),
+    };
+    println!(
+        "gzk proxy listening on {} — {} replica(s): {}",
+        proxy.local_addr(),
+        replicas.len(),
+        replicas.join(", ")
+    );
+    println!("forwarding the serving protocol; shutdown (loopback) fans out to every replica");
+    let summary = proxy.wait();
+    println!("gzk proxy: shut down cleanly ({summary})");
 }
 
 fn info() {

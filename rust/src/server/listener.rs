@@ -159,8 +159,9 @@ fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
 
 /// Loopback test for the shutdown gate that also recognizes IPv4-mapped
 /// loopback (`::ffff:127.0.0.1`) — what a `127.0.0.1` client looks like
-/// to a dual-stack `[::]` bind.
-fn is_loopback_ip(ip: IpAddr) -> bool {
+/// to a dual-stack `[::]` bind. Shared with the dist proxy, whose wire
+/// `shutdown` fans out to every replica and so gets the same gate.
+pub fn is_loopback_ip(ip: IpAddr) -> bool {
     match ip {
         IpAddr::V4(a) => a.is_loopback(),
         IpAddr::V6(a) => {
@@ -174,7 +175,8 @@ fn is_loopback_ip(ip: IpAddr) -> bool {
 }
 
 /// How one bounded line read ended.
-enum LineRead {
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineRead {
     /// `buf` holds one complete line (no trailing newline)
     Line,
     /// clean end of stream with nothing buffered
@@ -182,19 +184,23 @@ enum LineRead {
     /// the read-gap timeout fired, or a drip-fed line outlived the
     /// per-line deadline
     Idle,
-    /// the line exceeded [`MAX_LINE_BYTES`] with no newline in sight
+    /// the line exceeded `max_len` with no newline in sight
     Overlong,
     /// I/O error: client gone / broken pipe
     Gone,
 }
 
-/// Read one newline-terminated line into `buf`, enforcing the line cap
-/// and — because SO_RCVTIMEO only bounds the gap between reads, so a
+/// Read one newline-terminated line into `buf`, enforcing the `max_len`
+/// cap and — because SO_RCVTIMEO only bounds the gap between reads, so a
 /// client dripping one byte per interval would never trip it — a
-/// deadline on assembling a single line.
-fn read_line_bounded(
-    reader: &mut BufReader<TcpStream>,
+/// deadline on assembling a single line. Generic over [`BufRead`]: the
+/// serving listener reads sockets with [`MAX_LINE_BYTES`], the dist
+/// layer reuses the same bounded reader with its larger frame cap
+/// (per-shard `RidgeStats` frames carry an F×F Gram block).
+pub fn read_line_bounded<R: BufRead>(
+    reader: &mut R,
     buf: &mut Vec<u8>,
+    max_len: usize,
     line_deadline: Option<Duration>,
 ) -> LineRead {
     buf.clear();
@@ -213,7 +219,7 @@ fn read_line_bounded(
             Err(_) => return LineRead::Gone,
         };
         if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
-            if buf.len() + pos > MAX_LINE_BYTES {
+            if buf.len() + pos > max_len {
                 return LineRead::Overlong;
             }
             buf.extend_from_slice(&chunk[..pos]);
@@ -221,7 +227,7 @@ fn read_line_bounded(
             return LineRead::Line;
         }
         let n = chunk.len();
-        if buf.len() + n > MAX_LINE_BYTES {
+        if buf.len() + n > max_len {
             return LineRead::Overlong;
         }
         buf.extend_from_slice(chunk);
@@ -243,7 +249,7 @@ fn read_loop(stream: TcpStream, shared: &Arc<Shared>, out: SyncSender<Outgoing>)
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
     loop {
-        match read_line_bounded(&mut reader, &mut buf, idle) {
+        match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES, idle) {
             LineRead::Line => {}
             LineRead::Eof | LineRead::Gone => break,
             LineRead::Idle => {

@@ -63,6 +63,8 @@ impl ClientConn {
 /// What to run; see the `gzk loadgen` flags in `main.rs`.
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
+    /// server (or proxy) to drive directly; empty = no direct target,
+    /// `replica_sweep` only
     pub addr: String,
     /// client counts to sweep, one trial each (e.g. `[1, 8]`)
     pub clients: Vec<usize>,
@@ -77,6 +79,12 @@ pub struct LoadgenConfig {
     pub seed: u64,
     /// send the wire `shutdown` command after the last trial
     pub send_shutdown: bool,
+    /// replica counts to sweep (e.g. `[1, 2, 4]`): for each count N,
+    /// loadgen spins N in-process `gzk server` replicas over `store`
+    /// (required) behind an in-process proxy, runs one trial at the
+    /// largest client count through the proxy, and tears the tier down —
+    /// the serving twin of the distributed-fit worker sweep
+    pub replica_sweep: Vec<usize>,
 }
 
 /// One client-count trial, aggregated over all its connections.
@@ -97,6 +105,13 @@ pub struct TrialResult {
     pub mismatches: usize,
 }
 
+/// One replica-count entry of the scaling sweep.
+#[derive(Clone, Debug)]
+pub struct ReplicaTrial {
+    pub replicas: usize,
+    pub trial: TrialResult,
+}
+
 /// Everything a run produced; `write_json` emits `BENCH_serve.json`.
 #[derive(Clone, Debug)]
 pub struct LoadgenReport {
@@ -108,42 +123,52 @@ pub struct LoadgenReport {
     /// bit-identity checking was active (a local store was supplied)
     pub verified: bool,
     pub trials: Vec<TrialResult>,
-    /// the server's `stats` reply captured after each trial
+    /// replica-scaling trials (empty unless a sweep was requested)
+    pub replica_trials: Vec<ReplicaTrial>,
+    /// the server's `stats` reply captured after each trial (for sweep
+    /// trials, one replica's stats fetched through the proxy — carrying
+    /// the uptime / reload / cumulative-reject counters)
     pub server_stats: Vec<String>,
 }
 
 impl LoadgenReport {
     pub fn mismatches(&self) -> usize {
-        self.trials.iter().map(|t| t.mismatches).sum()
+        self.trials.iter().map(|t| t.mismatches).sum::<usize>()
+            + self.replica_trials.iter().map(|r| r.trial.mismatches).sum::<usize>()
     }
 
     /// Machine-readable results (the CI serving-smoke artifact).
+    /// Format 2 = format 1 plus the `replica_sweep` section.
     pub fn write_json(&self, path: &std::path::Path) -> Result<(), String> {
-        let trials: Vec<String> = self
-            .trials
+        fn trial_json(t: &TrialResult, prefix: &str) -> String {
+            format!(
+                concat!(
+                    r#"{{{}"clients":{},"requests":{},"wall_secs":{:.4},"throughput_rps":{:.1},"#,
+                    r#""p50_us":{:.2},"p95_us":{:.2},"p99_us":{:.2},"retries":{},"mismatches":{}}}"#
+                ),
+                prefix,
+                t.clients,
+                t.requests,
+                t.wall_secs,
+                t.throughput_rps,
+                t.p50_us,
+                t.p95_us,
+                t.p99_us,
+                t.retries,
+                t.mismatches
+            )
+        }
+        let trials: Vec<String> = self.trials.iter().map(|t| trial_json(t, "")).collect();
+        let sweep: Vec<String> = self
+            .replica_trials
             .iter()
-            .map(|t| {
-                format!(
-                    concat!(
-                        r#"{{"clients":{},"requests":{},"wall_secs":{:.4},"throughput_rps":{:.1},"#,
-                        r#""p50_us":{:.2},"p95_us":{:.2},"p99_us":{:.2},"retries":{},"mismatches":{}}}"#
-                    ),
-                    t.clients,
-                    t.requests,
-                    t.wall_secs,
-                    t.throughput_rps,
-                    t.p50_us,
-                    t.p95_us,
-                    t.p99_us,
-                    t.retries,
-                    t.mismatches
-                )
-            })
+            .map(|r| trial_json(&r.trial, &format!(r#""replicas":{},"#, r.replicas)))
             .collect();
         let text = format!(
             concat!(
-                r#"{{"format":1,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
-                r#""requests_per_client":{},"seed":{},"verified":{},"trials":[{}]}}"#
+                r#"{{"format":2,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
+                r#""requests_per_client":{},"seed":{},"verified":{},"trials":[{}],"#,
+                r#""replica_sweep":[{}]}}"#
             ),
             wire::json_string(&self.addr),
             wire::json_string(&self.model),
@@ -151,7 +176,8 @@ impl LoadgenReport {
             self.requests_per_client,
             self.seed,
             self.verified,
-            trials.join(",")
+            trials.join(","),
+            sweep.join(",")
         );
         std::fs::write(path, text).map_err(|e| format!("write {path:?}: {e}"))
     }
@@ -201,30 +227,39 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
     if cfg.clients.is_empty() || cfg.requests_per_client == 0 {
         return Err("loadgen needs at least one client count and one request".to_string());
     }
-    let mut control = ClientConn::connect(&cfg.addr)?;
-    let served = served_models(&mut control)?;
-    let target = match &cfg.model {
-        Some(name) => served
+    let direct = !cfg.addr.is_empty();
+    if !direct && cfg.replica_sweep.is_empty() {
+        return Err("loadgen needs --addr, --replica-sweep, or both".to_string());
+    }
+    if !cfg.replica_sweep.is_empty() && cfg.store.is_none() {
+        return Err(
+            "the replica sweep spins its own servers and needs --store <model dir>".to_string()
+        );
+    }
+
+    // resolve the target model: ask the live server when there is one,
+    // else (sweep-only) read the store manifest the sweep will serve from
+    let mut control = None;
+    let (name, d) = if direct {
+        let mut conn = ClientConn::connect(&cfg.addr)?;
+        let served = served_models(&mut conn)?;
+        let target = pick_target(&served, cfg.model.as_deref())?;
+        let out = (target.name.clone(), target.d);
+        control = Some(conn);
+        out
+    } else {
+        let dir = cfg.store.as_ref().expect("checked above");
+        let store = ModelStore::open_existing(dir)?;
+        let served: Vec<WireModel> = store
+            .entries()?
             .iter()
-            .find(|m| &m.name == name)
-            .ok_or_else(|| {
-                let have: Vec<&str> = served.iter().map(|m| m.name.as_str()).collect();
-                format!("server does not serve {name:?}; serving: {}", have.join(", "))
-            })?,
-        None => match served.len() {
-            1 => &served[0],
-            0 => return Err("server serves no models".to_string()),
-            _ => {
-                let have: Vec<&str> = served.iter().map(|m| m.name.as_str()).collect();
-                return Err(format!(
-                    "server serves several models ({}); pick one with --model",
-                    have.join(", ")
-                ));
-            }
-        },
+            .map(|e| {
+                Ok(WireModel { name: e.name.clone(), d: store.load(&e.name)?.feature_spec().d })
+            })
+            .collect::<Result<_, String>>()?;
+        let target = pick_target(&served, cfg.model.as_deref())?;
+        (target.name.clone(), target.d)
     };
-    let name = target.name.clone();
-    let d = target.d;
 
     // the local twin for bit-identity checking, plus the recorded
     // training dataset as the default row generator
@@ -264,23 +299,69 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
     }
 
     let mut trials = Vec::with_capacity(cfg.clients.len());
-    let mut server_stats = Vec::with_capacity(cfg.clients.len());
-    for &n_clients in &cfg.clients {
-        let trial = run_trial(cfg, &name, n_clients, &source, local.as_deref())?;
-        trials.push(trial);
-        let stats = control.roundtrip(&wire::cmd_request("stats"))?;
-        if !stats.ok {
-            return Err(stats.error.unwrap_or_else(|| "stats command failed".to_string()));
+    let mut server_stats = Vec::new();
+    if let Some(control) = control.as_mut() {
+        for &n_clients in &cfg.clients {
+            let trial = run_trial(cfg, &cfg.addr, &name, n_clients, &source, local.as_deref())?;
+            trials.push(trial);
+            let stats = control.roundtrip(&wire::cmd_request("stats"))?;
+            if !stats.ok {
+                return Err(stats.error.unwrap_or_else(|| "stats command failed".to_string()));
+            }
+            server_stats.push(stats.raw);
         }
-        server_stats.push(stats.raw);
+    }
+
+    // replica-scaling sweep: an in-process serving tier (N servers + a
+    // proxy, all on loopback ephemeral ports) per requested count, driven
+    // at the largest client count so the single-replica admission bound
+    // is actually contended
+    let mut replica_trials = Vec::with_capacity(cfg.replica_sweep.len());
+    for &n_replicas in &cfg.replica_sweep {
+        if n_replicas == 0 {
+            return Err("replica sweep entries must be >= 1".to_string());
+        }
+        let store_dir = cfg.store.as_ref().expect("checked above");
+        let mut servers = Vec::with_capacity(n_replicas);
+        for _ in 0..n_replicas {
+            servers.push(crate::server::Server::start(
+                store_dir,
+                "127.0.0.1:0",
+                crate::server::ServerConfig::default(),
+            )?);
+        }
+        let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+        let proxy =
+            crate::dist::Proxy::start("127.0.0.1:0", addrs, crate::dist::ProxyConfig::default())?;
+        let proxy_addr = proxy.local_addr().to_string();
+        let trial = run_trial(cfg, &proxy_addr, &name, max_clients, &source, local.as_deref());
+        // capture one replica's stats through the proxy (uptime, reloads,
+        // cumulative rejects) before tearing the tier down
+        if let Ok(t) = &trial {
+            let stats = ClientConn::connect(&proxy_addr)
+                .and_then(|mut c| c.roundtrip(&wire::cmd_request("stats")));
+            if let Ok(stats) = stats {
+                server_stats.push(stats.raw);
+            }
+            replica_trials.push(ReplicaTrial { replicas: n_replicas, trial: t.clone() });
+        }
+        proxy.shutdown();
+        let _ = proxy.wait();
+        for s in servers {
+            s.shutdown();
+            let _ = s.wait();
+        }
+        trial?; // after teardown: a failed sweep trial is still an error
     }
 
     if cfg.send_shutdown {
-        let reply = control.roundtrip(&wire::cmd_request("shutdown"))?;
-        if !reply.ok {
-            return Err(reply
-                .error
-                .unwrap_or_else(|| "server refused the shutdown command".to_string()));
+        if let Some(control) = control.as_mut() {
+            let reply = control.roundtrip(&wire::cmd_request("shutdown"))?;
+            if !reply.ok {
+                return Err(reply
+                    .error
+                    .unwrap_or_else(|| "server refused the shutdown command".to_string()));
+            }
         }
     }
     Ok(LoadgenReport {
@@ -291,8 +372,31 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         seed: cfg.seed,
         verified: local.is_some(),
         trials,
+        replica_trials,
         server_stats,
     })
+}
+
+/// Resolve which served model to target: the named one, or the single
+/// served model when unnamed.
+fn pick_target<'a>(served: &'a [WireModel], want: Option<&str>) -> Result<&'a WireModel, String> {
+    match want {
+        Some(name) => served.iter().find(|m| m.name == name).ok_or_else(|| {
+            let have: Vec<&str> = served.iter().map(|m| m.name.as_str()).collect();
+            format!("server does not serve {name:?}; serving: {}", have.join(", "))
+        }),
+        None => match served.len() {
+            1 => Ok(&served[0]),
+            0 => Err("server serves no models".to_string()),
+            _ => {
+                let have: Vec<&str> = served.iter().map(|m| m.name.as_str()).collect();
+                Err(format!(
+                    "server serves several models ({}); pick one with --model",
+                    have.join(", ")
+                ))
+            }
+        },
+    }
 }
 
 /// What each client thread brings home.
@@ -304,6 +408,7 @@ struct ClientOut {
 
 fn run_trial(
     cfg: &LoadgenConfig,
+    addr: &str,
     model_name: &str,
     n_clients: usize,
     source: &SyntheticSource,
@@ -317,7 +422,6 @@ fn run_trial(
         let mut joins = Vec::with_capacity(n_clients);
         for t in 0..n_clients {
             let barrier = &barrier;
-            let addr = cfg.addr.as_str();
             joins.push(scope.spawn(move || -> Result<ClientOut, String> {
                 // connect before the barrier: setup cost is not load.
                 // EVERY thread must reach the barrier exactly once — even

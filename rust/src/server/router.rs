@@ -26,9 +26,10 @@ use crate::coordinator::PredictionService;
 use crate::model::{ModelKind, ModelStore};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, RwLock};
-use std::time::{Duration, SystemTime};
+use std::time::{Duration, Instant, SystemTime};
 
 /// Per-route serving knobs (shared by every route the router builds).
 #[derive(Clone, Copy, Debug)]
@@ -97,6 +98,17 @@ pub struct Router {
     /// bad deploy is reported ONCE and retried only when the file
     /// changes again, not re-parsed and re-logged on every poll tick.
     failed: std::sync::Mutex<BTreeMap<String, Option<Fingerprint>>>,
+    /// when this router (≈ the server) came up; the `stats` wire reply
+    /// reports it as `uptime_s`
+    started: Instant,
+    /// successful hot-swaps of an already-served route
+    reloads: AtomicU64,
+    /// admission rejects accumulated by *retired* route generations, per
+    /// model. A hot-swap replaces the route — and with it the live
+    /// [`Admission`] counter — so without this ledger every reload would
+    /// silently zero the model's reject history; `stats` reports
+    /// `total_rejects` = retired + live.
+    retired_rejects: std::sync::Mutex<BTreeMap<String, u64>>,
 }
 
 impl Router {
@@ -119,6 +131,9 @@ impl Router {
             cfg,
             routes: RwLock::new(BTreeMap::new()),
             failed: std::sync::Mutex::new(BTreeMap::new()),
+            started: Instant::now(),
+            reloads: AtomicU64::new(0),
+            retired_rejects: std::sync::Mutex::new(BTreeMap::new()),
         };
         router.sync(true)?;
         if router.routes.read().expect("routes lock").is_empty() {
@@ -214,7 +229,10 @@ impl Router {
             entries.iter().map(|e| e.name.as_str()).collect();
         let mut routes = self.routes.write().expect("routes lock");
         for route in fresh {
-            routes.insert(route.name.clone(), route);
+            if let Some(old) = routes.insert(route.name.clone(), route) {
+                self.reloads.fetch_add(1, Ordering::Relaxed);
+                self.retire(&old);
+            }
         }
         let stale: Vec<String> = routes
             .keys()
@@ -222,7 +240,9 @@ impl Router {
             .cloned()
             .collect();
         for name in stale {
-            routes.remove(&name);
+            if let Some(old) = routes.remove(&name) {
+                self.retire(&old);
+            }
             changes.push(format!("route {name:?}: removed (no longer in the store manifest)"));
         }
         self.failed
@@ -230,6 +250,17 @@ impl Router {
             .expect("failed-artifact lock")
             .retain(|name, _| manifest_names.contains(name.as_str()));
         Ok(changes)
+    }
+
+    /// Bank a retired route generation's admission rejects so the
+    /// cumulative `total_rejects` counter survives hot-swaps.
+    fn retire(&self, old: &ModelRoute) {
+        *self
+            .retired_rejects
+            .lock()
+            .expect("retired-rejects lock")
+            .entry(old.name.clone())
+            .or_insert(0) += old.admission.rejects();
     }
 
     fn build_route(&self, name: &str, fingerprint: Fingerprint) -> Result<ModelRoute, String> {
@@ -333,15 +364,22 @@ impl Router {
     /// [`ServeMetrics`]: crate::coordinator::ServeMetrics
     pub fn stats_reply(&self) -> String {
         let routes = self.routes.read().expect("routes lock");
+        let retired = self.retired_rejects.lock().expect("retired-rejects lock");
+        let mut total_rejects = 0u64;
         let rows: Vec<String> = routes
             .values()
             .map(|r| {
                 let m = r.svc.metrics();
+                // cumulative across route generations: the live Admission
+                // counter resets on every hot-swap, the ledger does not
+                let model_total =
+                    retired.get(&r.name).copied().unwrap_or(0) + r.admission.rejects();
+                total_rejects += model_total;
                 format!(
                     concat!(
                         r#"{{"model":{},"kind":"{}","requests":{},"batches":{},"max_batch_seen":{},"#,
                         r#""p50_us":{:.1},"p95_us":{:.1},"p99_us":{:.1},"#,
-                        r#""queue_depth":{},"max_queue":{},"rejects":{}}}"#
+                        r#""queue_depth":{},"max_queue":{},"rejects":{},"total_rejects":{}}}"#
                     ),
                     wire::json_string(&r.name),
                     r.kind.name(),
@@ -353,11 +391,18 @@ impl Router {
                     m.latency.quantile(0.99) * 1e6,
                     r.admission.depth(),
                     r.admission.max_queue(),
-                    r.admission.rejects()
+                    r.admission.rejects(),
+                    model_total
                 )
             })
             .collect();
-        format!(r#"{{"ok":true,"stats":[{}]}}"#, rows.join(","))
+        format!(
+            r#"{{"ok":true,"uptime_s":{:.3},"reloads":{},"total_rejects":{},"stats":[{}]}}"#,
+            self.started.elapsed().as_secs_f64(),
+            self.reloads.load(Ordering::Relaxed),
+            total_rejects,
+            rows.join(",")
+        )
     }
 }
 
@@ -537,6 +582,40 @@ mod tests {
         let _ = rx.recv().unwrap();
         drop(guard);
         assert!(matches!(router.dispatch_predict(None, &x), Dispatch::Pending { .. }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_reports_uptime_reloads_and_swap_surviving_rejects() {
+        let dir = fresh_dir("counters");
+        let store = ModelStore::open(&dir).unwrap();
+        store.save("ridge", &small_ridge(11)).unwrap();
+        let cfg = RouterConfig { max_queue: 1, ..RouterConfig::default() };
+        let router = Router::open(&dir, cfg).unwrap();
+        let stats = router.stats_reply();
+        assert!(stats.contains(r#""uptime_s":"#), "{stats}");
+        assert!(stats.contains(r#""reloads":0"#), "{stats}");
+        assert!(stats.contains(r#""total_rejects":0"#), "{stats}");
+
+        // provoke one admission reject
+        let x = [0.1, 0.2];
+        let Dispatch::Pending { rx, guard, .. } = router.dispatch_predict(None, &x) else {
+            panic!("first request must be admitted");
+        };
+        assert!(matches!(router.dispatch_predict(None, &x), Dispatch::Immediate(_)));
+        let _ = rx.recv().unwrap();
+        drop(guard);
+
+        // hot-swap the route: the live Admission counter is recreated, but
+        // the cumulative ledger keeps the reject history
+        std::thread::sleep(Duration::from_millis(20));
+        store.save("ridge", &small_ridge(12)).unwrap();
+        let changes = router.sync(false).unwrap();
+        assert!(changes.iter().any(|c| c.contains("reloaded")), "{changes:?}");
+        let stats = router.stats_reply();
+        assert!(stats.contains(r#""reloads":1"#), "{stats}");
+        assert!(stats.contains(r#""rejects":0"#), "{stats}");
+        assert!(stats.contains(r#""total_rejects":1"#), "{stats}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,310 @@
+//! End-to-end tests of the distributed tier over real sockets: the TCP
+//! scatter/gather fit is **bit-identical** to the in-process one-round
+//! fit for every oblivious registry method, at any worker count, and
+//! across an injected worker death or a hostile (protocol-violating)
+//! worker; the replica proxy round-robins the serving protocol,
+//! survives a replica death, surfaces the fleet-health stats, and fans
+//! the wire shutdown out; and the loadgen replica sweep drives the whole
+//! tier in-process.
+
+use gzk::coordinator::{fit_one_round_source, Backend};
+use gzk::data::SyntheticSource;
+use gzk::dist::{
+    run_worker, DataSpec, DistLeader, LeaderConfig, NetFit, Proxy, ProxyConfig, WorkerOptions,
+};
+use gzk::features::{BoundSpec, FeatureSpec, KernelSpec, Method};
+use gzk::linalg::Mat;
+use gzk::model::{set_run_data, FittedMap, Model, ModelStore, RidgeModel};
+use gzk::rng::Rng;
+use gzk::server::{wire, ClientConn, LoadgenConfig, Server, ServerConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+const N: usize = 600;
+const CHUNK: usize = 128; // -> 5 shards over N = 600
+const LAMBDA: f64 = 1e-2;
+const SEED: u64 = 1;
+
+/// `set_run_data` writes process-global run metadata that `save` reads;
+/// tests in this binary run concurrently, so the set→save windows must
+/// not interleave or the byte-identity comparison below gets flaky.
+static RUN_DATA_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gzk-dist-e2e-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn elevation_spec(method: Method) -> (BoundSpec, DataSpec) {
+    let fspec = FeatureSpec::new(KernelSpec::Gaussian { bandwidth: 1.0 }, method, 32, SEED);
+    let data = DataSpec { name: "elevation".to_string(), rows: N, seed: SEED };
+    let src = SyntheticSource::by_name(&data.name, N, SEED).expect("elevation");
+    (fspec.bind(src.dim()), data)
+}
+
+/// Run a distributed fit on loopback: a leader on an ephemeral port plus
+/// one thread per entry of `worker_opts` running a real `run_worker`.
+fn net_fit(spec: &BoundSpec, data: &DataSpec, worker_opts: &[WorkerOptions]) -> NetFit {
+    let cfg = LeaderConfig {
+        n_workers: worker_opts.len(),
+        rows_per_shard: CHUNK,
+        register_timeout: Duration::from_secs(30),
+        shard_timeout: Duration::from_secs(30),
+    };
+    let leader = DistLeader::bind("127.0.0.1:0", cfg).expect("bind leader");
+    let addr = leader.local_addr().expect("leader addr").to_string();
+    let handles: Vec<_> = worker_opts
+        .iter()
+        .map(|opts| {
+            let addr = addr.clone();
+            let opts = opts.clone();
+            std::thread::spawn(move || run_worker(&addr, &opts))
+        })
+        .collect();
+    let fit = leader.run(spec, data, LAMBDA).expect("distributed fit");
+    for h in handles {
+        h.join().expect("worker thread").expect("worker run");
+    }
+    fit
+}
+
+fn weight_bits(w: &[f64]) -> Vec<u64> {
+    w.iter().map(|v| v.to_bits()).collect()
+}
+
+fn local_fit(spec: &BoundSpec, data: &DataSpec) -> gzk::coordinator::DistributedFit {
+    let src = SyntheticSource::by_name(&data.name, data.rows, data.seed).expect("source");
+    fit_one_round_source(spec, &src, LAMBDA, 3, CHUNK, Backend::Native).expect("in-process fit")
+}
+
+#[test]
+fn distributed_fit_is_bit_identical_for_every_oblivious_method() {
+    for method in Method::registry() {
+        if !method.is_oblivious() {
+            continue; // data-dependent maps cannot be broadcast
+        }
+        let (spec, data) = elevation_spec(method);
+        let local = local_fit(&spec, &data);
+        let fit = net_fit(&spec, &data, &[WorkerOptions::default(), WorkerOptions::default()]);
+        assert_eq!(fit.stats.n, N);
+        assert_eq!(
+            weight_bits(&fit.model.weights),
+            weight_bits(&local.model.weights),
+            "method {} drifted over TCP",
+            spec.spec.method.name()
+        );
+    }
+}
+
+#[test]
+fn distributed_fit_is_invariant_to_worker_count_and_artifacts_match_bytewise() {
+    let (spec, data) = elevation_spec(Method::Gegenbauer { q: 6, s: 2 });
+    let local = local_fit(&spec, &data);
+    let one = net_fit(&spec, &data, &[WorkerOptions::default()]);
+    let three = net_fit(
+        &spec,
+        &data,
+        &[WorkerOptions::default(), WorkerOptions::default(), WorkerOptions::default()],
+    );
+    assert_eq!(weight_bits(&one.model.weights), weight_bits(&local.model.weights));
+    assert_eq!(weight_bits(&three.model.weights), weight_bits(&local.model.weights));
+
+    // the persisted artifact — not just the weights — is byte-identical,
+    // so a store written by `gzk leader` is indistinguishable from one
+    // written by the in-process fit
+    let (dir_a, dir_b) = (fresh_dir("art-net"), fresh_dir("art-local"));
+    let _guard = RUN_DATA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_run_data(&data.name, data.rows);
+    let net_model = RidgeModel::from_parts(
+        FittedMap::rebuild(spec.clone(), None).expect("rebuild map"),
+        three.model.clone(),
+    );
+    let local_model =
+        RidgeModel::from_parts(FittedMap::rebuild(spec.clone(), None).expect("map"), local.model);
+    let path_a = ModelStore::open(&dir_a).unwrap().save("ridge", &net_model).unwrap();
+    let path_b = ModelStore::open(&dir_b).unwrap().save("ridge", &local_model).unwrap();
+    assert_eq!(
+        std::fs::read(&path_a).unwrap(),
+        std::fs::read(&path_b).unwrap(),
+        "artifact bytes diverged"
+    );
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn leader_reassigns_shards_from_a_worker_that_dies_mid_fit() {
+    let (spec, data) = elevation_spec(Method::Gegenbauer { q: 6, s: 2 });
+    let local = local_fit(&spec, &data);
+    // one worker drops its socket (no reply) when its second assignment
+    // arrives; the survivor absorbs the reassigned shards
+    let dying = WorkerOptions { die_after_shards: Some(1), ..WorkerOptions::default() };
+    let fit = net_fit(&spec, &data, &[dying, WorkerOptions::default()]);
+    assert!(fit.dead_workers >= 1, "the dying worker was never detected");
+    assert!(fit.reassigned_shards >= 1, "its in-flight shard was never reassigned");
+    assert_eq!(
+        weight_bits(&fit.model.weights),
+        weight_bits(&local.model.weights),
+        "a worker death changed the model"
+    );
+}
+
+#[test]
+fn leader_abandons_a_hostile_worker_and_recovers_locally() {
+    let (spec, data) = elevation_spec(Method::Gegenbauer { q: 6, s: 2 });
+    let local = local_fit(&spec, &data);
+    let cfg = LeaderConfig {
+        n_workers: 1,
+        rows_per_shard: CHUNK,
+        register_timeout: Duration::from_secs(30),
+        shard_timeout: Duration::from_secs(30),
+    };
+    let leader = DistLeader::bind("127.0.0.1:0", cfg).expect("bind leader");
+    let addr = leader.local_addr().expect("leader addr").to_string();
+    // a worker that registers correctly, then answers its assignment with
+    // statistics for a different shard — a protocol violation the leader
+    // must refuse (abandon + reassign), never merge
+    let hostile = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&addr).expect("connect");
+        stream.write_all(b"{\"dist\":\"register\",\"proto\":1}\n").expect("register");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("job line");
+        line.clear();
+        reader.read_line(&mut line).expect("assign line");
+        let lie = concat!(
+            "{\"dist\":\"stats\",\"shard_id\":999,\"worker\":0,\"featurize_secs\":0.0,",
+            "\"n\":128,\"yy\":0.0,\"b\":[0.0],\"g\":{\"rows\":1,\"cols\":1,\"data\":[0.0]}}\n"
+        );
+        stream.write_all(lie.as_bytes()).expect("lie");
+        // the leader abandons us: the connection just closes
+        line.clear();
+        let _ = reader.read_line(&mut line);
+    });
+    let fit = leader.run(&spec, &data, LAMBDA).expect("fit survives a hostile worker");
+    hostile.join().expect("hostile thread");
+    assert_eq!(fit.dead_workers, 1);
+    assert!(fit.reassigned_shards >= 1);
+    // with no fleet left, every shard is leader-recovered — and the model
+    // still comes out bit-identical
+    assert_eq!(fit.recovered_shards, fit.n_shards);
+    assert_eq!(weight_bits(&fit.model.weights), weight_bits(&local.model.weights));
+}
+
+// ---------------------------------------------------------------------------
+// proxy + replicated serving
+// ---------------------------------------------------------------------------
+
+fn serving_store(tag: &str) -> (PathBuf, RidgeModel) {
+    let dir = fresh_dir(tag);
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 5, s: 1 },
+        16,
+        11,
+    )
+    .bind(3);
+    let mut rng = Rng::new(0xFEED);
+    let x = Mat::from_fn(60, 3, |_, _| rng.normal() * 0.5);
+    let y: Vec<f64> = (0..60).map(|i| x[(i, 0)] + 0.3 * x[(i, 2)]).collect();
+    let model = RidgeModel::fit(spec, &x, &y, 1e-3).unwrap();
+    let _guard = RUN_DATA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_run_data("elevation", 60);
+    ModelStore::open(&dir).unwrap().save("ridge", &model).unwrap();
+    (dir, model)
+}
+
+fn predict_bits(model: &dyn Model, x: &[f64]) -> Vec<u64> {
+    let out = model.predict(&Mat::from_vec(1, x.len(), x.to_vec()));
+    out.row(0).iter().map(|v| v.to_bits()).collect()
+}
+
+fn test_proxy_config() -> ProxyConfig {
+    ProxyConfig { probe_interval: Duration::from_millis(50), ..ProxyConfig::default() }
+}
+
+#[test]
+fn proxy_balances_replicas_survives_a_death_and_fans_out_shutdown() {
+    let (dir, model) = serving_store("proxy");
+    let cfg = ServerConfig { poll: Duration::from_millis(25), ..ServerConfig::default() };
+    let s1 = Server::start(&dir, "127.0.0.1:0", cfg).unwrap();
+    let s2 = Server::start(&dir, "127.0.0.1:0", cfg).unwrap();
+    let replicas = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+    let proxy = Proxy::start("127.0.0.1:0", replicas, test_proxy_config()).unwrap();
+    let addr = proxy.local_addr().to_string();
+
+    // predictions through the proxy are bit-identical to the local model,
+    // across enough requests that round-robin touches both replicas
+    let mut conn = ClientConn::connect(&addr).unwrap();
+    let probes = [[0.25, -0.7, 0.1], [1.0, 0.9, -0.4], [-1.1, 0.05, 0.6], [0.0, 0.0, 1.0]];
+    for x in probes.iter().cycle().take(12) {
+        let r = conn.roundtrip(&wire::predict_request(Some("ridge"), x)).unwrap();
+        assert!(r.ok, "{r:?}");
+        let bits: Vec<u64> = r.y().unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, predict_bits(&model, x));
+    }
+
+    // the fleet-health stats (uptime, reload count, cumulative rejects)
+    // surface through the proxy — this is what its prober logs
+    let stats = conn.roundtrip(&wire::cmd_request("stats")).unwrap();
+    assert!(stats.ok);
+    for field in ["\"uptime_s\":", "\"reloads\":", "\"total_rejects\":"] {
+        assert!(stats.raw.contains(field), "missing {field}: {}", stats.raw);
+    }
+
+    // kill one replica out from under the proxy: requests keep succeeding
+    // over the survivor (transport failures strike the dead replica out)
+    s1.shutdown();
+    let _ = s1.wait();
+    for x in probes.iter().cycle().take(8) {
+        let r = conn.roundtrip(&wire::predict_request(Some("ridge"), x)).unwrap();
+        assert!(r.ok, "failover lost a request: {r:?}");
+        let bits: Vec<u64> = r.y().unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, predict_bits(&model, x));
+    }
+
+    // one loopback shutdown line tears down the whole tier
+    let bye = conn.roundtrip(&wire::cmd_request("shutdown")).unwrap();
+    assert!(bye.ok, "{bye:?}");
+    let summary = proxy.wait();
+    assert!(summary.contains("forwarded"), "{summary}");
+    let _ = s2.wait(); // the broadcast reached the surviving replica
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn loadgen_replica_sweep_scales_the_serving_tier_in_process() {
+    let (dir, _model) = serving_store("sweep");
+    let cfg = LoadgenConfig {
+        addr: String::new(), // no direct target: sweep only
+        clients: vec![2],
+        requests_per_client: 25,
+        dataset: Some("elevation".to_string()),
+        model: None,
+        store: Some(dir.clone()),
+        seed: 7,
+        send_shutdown: false,
+        replica_sweep: vec![1, 2],
+    };
+    let report = gzk::server::loadgen::run(&cfg).expect("sweep runs");
+    assert!(report.verified, "a store was supplied, so replies must be verified");
+    assert_eq!(report.replica_trials.len(), 2);
+    assert_eq!(report.replica_trials[0].replicas, 1);
+    assert_eq!(report.replica_trials[1].replicas, 2);
+    for r in &report.replica_trials {
+        assert_eq!(r.trial.clients, 2);
+        assert!(r.trial.requests > 0);
+        assert_eq!(r.trial.mismatches, 0, "sweep replies diverged from the artifact");
+    }
+    assert_eq!(report.mismatches(), 0);
+
+    // the JSON lands with the replica section populated
+    let json = dir.join("BENCH_sweep.json");
+    report.write_json(&json).expect("write json");
+    let text = std::fs::read_to_string(&json).unwrap();
+    assert!(text.contains("\"replica_sweep\":[{\"replicas\":1,"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,213 @@
+//! Property tests for the distributed-fit wire codec (`gzk::dist::wire`):
+//! every message round-trips through its JSON line — `RidgeStats` floats
+//! **bit-exactly** — and malformed, hostile, or oversized frames are
+//! rejected as error messages, never panics or silent truncation.
+
+use gzk::data::DataSource;
+use gzk::dist::{DataSpec, DistMsg, WireStats, DIST_PROTO, MAX_FRAME_BYTES};
+use gzk::features::{FeatureSpec, KernelSpec, Method};
+use gzk::krr::RidgeStats;
+use gzk::linalg::Mat;
+use gzk::server::listener::{read_line_bounded, LineRead};
+
+use gzk::dist::wire::{
+    assign_msg, done_msg, error_msg, job_msg, parse_msg, register_msg, stats_msg, ShardRange,
+};
+
+fn bound_spec(d: usize) -> gzk::features::BoundSpec {
+    FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 0.7 },
+        Method::Gegenbauer { q: 6, s: 2 },
+        64,
+        0xDEAD_BEEF_CAFE_F00D,
+    )
+    .bind(d)
+}
+
+/// Floats chosen to break any formatter that is not shortest-round-trip:
+/// a repeating binary fraction, negative zero, the smallest subnormal,
+/// a near-overflow magnitude, and garden-variety negatives.
+fn awkward_floats() -> Vec<f64> {
+    vec![1.0 / 3.0, -0.0, 5e-324, 1.2345e300, -2.5e-17, f64::MAX, f64::MIN_POSITIVE, -1.0]
+}
+
+fn awkward_stats(f_dim: usize) -> WireStats {
+    let vals = awkward_floats();
+    let g = Mat::from_fn(f_dim, f_dim, |i, j| vals[(i * f_dim + j) % vals.len()]);
+    let b: Vec<f64> = (0..f_dim).map(|i| vals[(i + 3) % vals.len()]).collect();
+    WireStats {
+        shard_id: 7,
+        worker_id: 2,
+        featurize_secs: 0.125,
+        stats: RidgeStats { g, b, n: 8192, yy: vals[0] },
+    }
+}
+
+#[test]
+fn register_and_job_round_trip() {
+    match parse_msg(&register_msg()).expect("register parses") {
+        DistMsg::Register { proto } => assert_eq!(proto, DIST_PROTO),
+        other => panic!("expected register, got {other:?}"),
+    }
+    // a peer speaking a different protocol version is rejected at parse
+    let e = parse_msg(r#"{"dist":"register","proto":2}"#).unwrap_err();
+    assert!(e.contains("protocol mismatch"), "{e}");
+
+    // the job broadcast: the spec and the data descriptor both survive,
+    // including a seed above 2^53 (carried as a decimal string — a
+    // f64-backed JSON number would corrupt it)
+    let spec = bound_spec(3);
+    let data = DataSpec { name: "elevation".to_string(), rows: 4000, seed: u64::MAX - 12 };
+    match parse_msg(&job_msg(5, &spec, &data)).expect("job parses") {
+        DistMsg::Job { worker_id, spec: wire_spec, data: wire_data } => {
+            assert_eq!(worker_id, 5);
+            assert_eq!(wire_spec.to_json(), spec.to_json());
+            assert_eq!(wire_data, data);
+        }
+        other => panic!("expected job, got {other:?}"),
+    }
+    let e = parse_msg(r#"{"dist":"job","proto":1,"worker":0}"#).unwrap_err();
+    assert!(e.contains("spec"), "{e}");
+}
+
+#[test]
+fn assign_done_error_round_trip() {
+    let t = ShardRange { shard_id: 3, lo: 24_576, hi: 32_768 };
+    match parse_msg(&assign_msg(t)).expect("assign parses") {
+        DistMsg::Assign(r) => {
+            assert_eq!((r.shard_id, r.lo, r.hi), (t.shard_id, t.lo, t.hi));
+        }
+        other => panic!("expected assign, got {other:?}"),
+    }
+    // an empty (or inverted) range can never be a valid task
+    let e = parse_msg(r#"{"dist":"assign","shard_id":0,"lo":10,"hi":10}"#).unwrap_err();
+    assert!(e.contains("empty range"), "{e}");
+
+    assert!(matches!(parse_msg(&done_msg()), Ok(DistMsg::Done)));
+
+    match parse_msg(&error_msg("disk \"gone\"", Some(4))).expect("error parses") {
+        DistMsg::Error { error, shard_id } => {
+            assert_eq!(error, "disk \"gone\"");
+            assert_eq!(shard_id, Some(4));
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    match parse_msg(&error_msg("no shard", None)).expect("error parses") {
+        DistMsg::Error { shard_id, .. } => assert_eq!(shard_id, None),
+        other => panic!("expected error, got {other:?}"),
+    }
+}
+
+#[test]
+fn stats_round_trip_is_bit_exact() {
+    let original = awkward_stats(4);
+    let line = stats_msg(&original).expect("finite stats encode");
+    let ws = match parse_msg(&line).expect("stats parse") {
+        DistMsg::Stats(ws) => *ws,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    assert_eq!(ws.shard_id, original.shard_id);
+    assert_eq!(ws.worker_id, original.worker_id);
+    assert_eq!(ws.featurize_secs.to_bits(), original.featurize_secs.to_bits());
+    assert_eq!(ws.stats.n, original.stats.n);
+    assert_eq!(ws.stats.yy.to_bits(), original.stats.yy.to_bits());
+    // bit-for-bit, not approximately: the leader's merge reproduces the
+    // in-process fit only if the wire is an identity on floats
+    for (a, b) in ws.stats.b.iter().zip(&original.stats.b) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in ws.stats.g.data().iter().zip(original.stats.g.data()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn encoder_and_parser_both_refuse_non_finite_stats() {
+    // encode side: a NaN statistic degrades to an error, never a panic in
+    // the shortest-round-trip formatter
+    let mut bad = awkward_stats(2);
+    bad.stats.yy = f64::NAN;
+    let e = stats_msg(&bad).unwrap_err();
+    assert!(e.contains("non-finite"), "{e}");
+
+    // parse side: "1e999" is valid JSON that parses to +inf — a hostile
+    // worker must not be able to poison the merge with it
+    let line = concat!(
+        r#"{"dist":"stats","shard_id":0,"worker":0,"featurize_secs":0.1,"n":4,"yy":1e999,"#,
+        r#""b":[1.0,2.0],"g":{"rows":2,"cols":2,"data":[1.0,0.0,0.0,1.0]}}"#
+    );
+    let e = parse_msg(line).unwrap_err();
+    assert!(e.contains("non-finite"), "{e}");
+}
+
+#[test]
+fn parser_rejects_hostile_shapes_and_garbage() {
+    // a non-square Gram, and a Gram/b dimension mismatch
+    let cases = [
+        concat!(
+            r#"{"dist":"stats","shard_id":0,"worker":0,"featurize_secs":0.1,"n":4,"yy":1.0,"#,
+            r#""b":[1.0,2.0],"g":{"rows":2,"cols":3,"data":[0,0,0,0,0,0]}}"#
+        ),
+        concat!(
+            r#"{"dist":"stats","shard_id":0,"worker":0,"featurize_secs":0.1,"n":4,"yy":1.0,"#,
+            r#""b":[1.0,2.0,3.0],"g":{"rows":2,"cols":2,"data":[0,0,0,0]}}"#
+        ),
+    ];
+    for line in cases {
+        let e = parse_msg(line).unwrap_err();
+        assert!(e.contains("inconsistent dimensions"), "{e}");
+    }
+    // garbage lines degrade to error messages, never panics
+    for line in [
+        "",
+        "not json",
+        "{}",
+        r#"{"dist":42}"#,
+        r#"{"dist":"warp"}"#,
+        r#"{"dist":"assign","shard_id":0,"lo":0}"#,
+        r#"{"dist":"stats","shard_id":0}"#,
+        r#"{"dist":"register"}"#,
+        r#"{"dist":"error"}"#,
+    ] {
+        assert!(parse_msg(line).is_err(), "accepted garbage: {line:?}");
+    }
+}
+
+#[test]
+fn bounded_reader_rejects_oversized_frames() {
+    use std::io::Cursor;
+    // a well-formed line under the cap reads back exactly
+    let mut buf = Vec::new();
+    let mut ok = Cursor::new(b"{\"dist\":\"done\"}\nrest".to_vec());
+    assert_eq!(read_line_bounded(&mut ok, &mut buf, 64, None), LineRead::Line);
+    assert_eq!(buf, b"{\"dist\":\"done\"}");
+
+    // a peer streaming bytes with no newline hits the cap, not the heap
+    let mut hostile = Cursor::new(vec![b'x'; 1024]);
+    assert_eq!(read_line_bounded(&mut hostile, &mut buf, 64, None), LineRead::Overlong);
+
+    // EOF with a non-empty buffer still yields the final line; EOF on an
+    // empty stream is a clean end
+    let mut tail = Cursor::new(b"{\"dist\":\"done\"}".to_vec());
+    assert_eq!(read_line_bounded(&mut tail, &mut buf, 64, None), LineRead::Line);
+    let mut empty = Cursor::new(Vec::new());
+    assert_eq!(read_line_bounded(&mut empty, &mut buf, 64, None), LineRead::Eof);
+
+    // the dist cap really is wide enough for a Gram frame the serving cap
+    // would reject (the reason the two limits are distinct constants)
+    assert!(MAX_FRAME_BYTES > gzk::server::listener::MAX_LINE_BYTES);
+}
+
+#[test]
+fn data_spec_open_validates_its_descriptor() {
+    // synthetic descriptors resolve by name with exactly `rows` rows
+    let spec = DataSpec { name: "elevation".to_string(), rows: 100, seed: 3 };
+    let src = spec.open().expect("elevation opens");
+    assert_eq!(src.len(), 100);
+
+    // an unknown generator and a missing file both fail with a message
+    assert!(DataSpec { name: "no-such-set".to_string(), rows: 10, seed: 3 }.open().is_err());
+    assert!(DataSpec { name: "file:/nonexistent/gzk.csv".to_string(), rows: 10, seed: 3 }
+        .open()
+        .is_err());
+}
