@@ -4,15 +4,18 @@
 //! serving batcher's latency under load.
 //!
 //! Besides the human-readable tables, the run emits a machine-readable
-//! `BENCH_hotpath.json` (format 3, path overridable via `GZK_BENCH_JSON`)
+//! `BENCH_hotpath.json` (format 4, path overridable via `GZK_BENCH_JSON`)
 //! with the per-method throughput rows, the serial-vs-parallel
 //! featurize+absorb comparison (threads, speedup, bit-identity check),
 //! the streamed-vs-materialized ridge fit comparison (throughput + peak
 //! feature-scratch bytes: the out-of-core pipeline's memory claim as a
-//! number), and the batcher latency percentiles, so the perf trajectory
-//! is tracked across PRs instead of scraped from stdout — CI uploads the
-//! file as a build artifact. The pool width comes from
-//! `--threads`-equivalent `GZK_THREADS` or the machine.
+//! number), the observability-overhead comparison (the chunked fit with
+//! the metrics registry disabled vs enabled — the obs layer's "read-only
+//! and nearly free" claim as a number), and the batcher latency
+//! percentiles, so the perf trajectory is tracked across PRs instead of
+//! scraped from stdout — CI uploads the file as a build artifact. The
+//! pool width comes from `--threads`-equivalent `GZK_THREADS` or the
+//! machine.
 //!
 //! Run: cargo bench --bench hotpath
 
@@ -250,6 +253,62 @@ fn streaming_bench() -> StreamingStats {
     stats
 }
 
+struct ObsOverheadStats {
+    disabled_secs: f64,
+    enabled_secs: f64,
+    /// (enabled - disabled) / disabled, in percent; can be slightly
+    /// negative from run-to-run noise
+    overhead_pct: f64,
+    bit_identical: bool,
+}
+
+/// The obs layer's cost on the training hot path: the chunked
+/// featurize+absorb fit (n = 8192, m = 512 — the instrumented
+/// `pipeline::ridge_stats` loop with its per-chunk spans and counters)
+/// timed with the metrics registry disabled vs enabled. The contract is
+/// "observability is read-only and nearly free": same bits out, and the
+/// instrumented run within a couple percent of the bare one. The
+/// assertion bound is a loose 10% (shared-CI timer noise); the JSON
+/// records the real number so the trajectory is tracked across PRs.
+fn obs_overhead_bench() -> ObsOverheadStats {
+    println!("\n== observability overhead: chunked fit, registry off vs on (n=8192, m=512) ==");
+    let (n, chunk_rows) = (8192usize, 1024usize);
+    let src = SyntheticSource::elevation(n, 3);
+    let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 12, s: 2 }, 512, 1);
+    let feat = spec.build(3);
+    let pool = Pool::global();
+    let run = || {
+        pipeline::ridge_stats(feat.as_ref(), &src, chunk_rows, &pool).expect("chunked fit").0
+    };
+
+    gzk::obs::registry::set_enabled(false);
+    let t_off = time_it(1, 3, run);
+    let stats_off = run();
+    gzk::obs::registry::set_enabled(true);
+    let t_on = time_it(1, 3, run);
+    let stats_on = run();
+
+    let bit_identical =
+        stats_off.g == stats_on.g && stats_off.b == stats_on.b && stats_off.n == stats_on.n;
+    assert!(bit_identical, "enabling the metrics registry changed the fit");
+    let overhead_pct = (t_on.median - t_off.median) / t_off.median * 100.0;
+    println!(
+        "registry off {}  on {}  -> overhead {overhead_pct:+.2}% (bit identical: {bit_identical})",
+        fmt_secs(t_off.median),
+        fmt_secs(t_on.median)
+    );
+    assert!(
+        overhead_pct < 10.0,
+        "observability overhead {overhead_pct:.2}% blew through the 10% alarm bound"
+    );
+    ObsOverheadStats {
+        disabled_secs: t_off.median,
+        enabled_secs: t_on.median,
+        overhead_pct,
+        bit_identical,
+    }
+}
+
 fn serving_bench() -> ServingStats {
     println!("\n== serving batcher ==");
     let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 12, s: 2 }, 512, 1).bind(3);
@@ -295,6 +354,7 @@ fn write_json(
     methods: &[MethodRow],
     parallel: &ParallelStats,
     streaming: &StreamingStats,
+    obs: &ObsOverheadStats,
     serving: &ServingStats,
 ) {
     let path =
@@ -310,11 +370,12 @@ fn write_json(
         .collect();
     let text = format!(
         concat!(
-            r#"{{"format":3,"bench":"hotpath","methods":[{}],"#,
+            r#"{{"format":4,"bench":"hotpath","methods":[{}],"#,
             r#""parallel":{{"threads":{},"serial_secs":{:e},"par_secs":{:e},"speedup":{:.2},"bit_identical":{}}},"#,
             r#""streaming":{{"n":{},"m":{},"chunk_rows":{},"streamed_secs":{:e},"materialized_secs":{:e},"#,
             r#""streamed_rows_per_s":{:.1},"materialized_rows_per_s":{:.1},"#,
             r#""streamed_peak_z_bytes":{},"materialized_peak_z_bytes":{},"bit_identical":{}}},"#,
+            r#""obs_overhead":{{"disabled_secs":{:e},"enabled_secs":{:e},"overhead_pct":{:.2},"bit_identical":{}}},"#,
             r#""serving":{{"req_per_s":{:.1},"p50_us":{:.2},"p99_us":{:.2},"batches":{},"max_batch":{}}}}}"#
         ),
         method_rows.join(","),
@@ -333,6 +394,10 @@ fn write_json(
         streaming.streamed_peak_z_bytes,
         streaming.materialized_peak_z_bytes,
         streaming.bit_identical,
+        obs.disabled_secs,
+        obs.enabled_secs,
+        obs.overhead_pct,
+        obs.bit_identical,
         serving.req_per_s,
         serving.p50_us,
         serving.p99_us,
@@ -348,6 +413,7 @@ fn main() {
     featurize_bench();
     let parallel = parallel_bench();
     let streaming = streaming_bench();
+    let obs = obs_overhead_bench();
     let serving = serving_bench();
-    write_json(&methods, &parallel, &streaming, &serving);
+    write_json(&methods, &parallel, &streaming, &obs, &serving);
 }

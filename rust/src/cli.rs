@@ -65,11 +65,11 @@ impl Args {
     }
 
     /// Typed flag access for the CLI: malformed input is a *usage* error,
-    /// not a crash — print the flag-naming message and exit(2), never a
-    /// panic backtrace.
+    /// not a crash — emit the flag-naming message as an error-level event
+    /// and exit(2), never a panic backtrace.
     fn parsed<T: std::str::FromStr>(&self, name: &str, default: T, kind: &str) -> T {
         self.try_parsed(name, default, kind).unwrap_or_else(|e| {
-            eprintln!("argument error: {e}");
+            crate::obs::error("cli", &format!("argument error: {e}"), &[]);
             std::process::exit(2);
         })
     }
@@ -170,6 +170,34 @@ impl Args {
                 Ok(Some(n))
             }
         }
+    }
+
+    /// The global `--log-level error|warn|info|debug` flag: the
+    /// structured-event threshold (see [`obs::events`](crate::obs::events)).
+    /// `Ok(None)` when absent — main then falls back to the `GZK_LOG`
+    /// env var and finally `info`. Applies to every subcommand, so it is
+    /// parsed here rather than per command.
+    pub fn log_level(&self) -> Result<Option<crate::obs::Level>, String> {
+        if self.has("log-level") {
+            return Err("flag --log-level requires a value (e.g. --log-level debug)".to_string());
+        }
+        match self.get("log-level") {
+            None => Ok(None),
+            Some(v) => {
+                crate::obs::Level::parse(v).map(Some).map_err(|e| format!("flag --log-level: {e}"))
+            }
+        }
+    }
+
+    /// A global flag that takes a file path (`--log-file`, `--trace-out`):
+    /// `Ok(None)` when absent. The bare-switch form is a usage error —
+    /// a path swallowed by the next `--flag` must not be silently
+    /// dropped.
+    pub fn path_flag(&self, name: &str) -> Result<Option<&str>, String> {
+        if self.has(name) {
+            return Err(format!("flag --{name} requires a value (a file path)"));
+        }
+        Ok(self.get(name))
     }
 
     /// The shared featurizer flag group, parsed once into a `FeatureSpec`:
@@ -344,6 +372,27 @@ mod tests {
         // a bare `--threads` (value swallowed by the next flag) is an error
         let e = parse("serve --threads --m 64").threads().unwrap_err();
         assert!(e.contains("requires a value"), "{e}");
+    }
+
+    #[test]
+    fn log_level_flag_parses_and_rejects_nonsense() {
+        assert_eq!(parse("fit").log_level().unwrap(), None);
+        assert_eq!(
+            parse("fit --log-level debug").log_level().unwrap(),
+            Some(crate::obs::Level::Debug)
+        );
+        let e = parse("fit --log-level loud").log_level().unwrap_err();
+        assert!(e.contains("--log-level") && e.contains("loud"), "{e}");
+        let e = parse("fit --log-level --m 64").log_level().unwrap_err();
+        assert!(e.contains("requires a value"), "{e}");
+    }
+
+    #[test]
+    fn path_flags_require_a_value() {
+        assert_eq!(parse("fit").path_flag("trace-out").unwrap(), None);
+        assert_eq!(parse("fit --trace-out t.json").path_flag("trace-out").unwrap(), Some("t.json"));
+        let e = parse("fit --log-file --m 64").path_flag("log-file").unwrap_err();
+        assert!(e.contains("--log-file") && e.contains("requires a value"), "{e}");
     }
 
     #[test]

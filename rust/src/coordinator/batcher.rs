@@ -16,6 +16,7 @@ use crate::exec::Pool;
 use crate::krr::FeatureRidge;
 use crate::linalg::Mat;
 use crate::model::{FittedMap, Model, RidgeModel};
+use crate::obs::registry;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -49,18 +50,15 @@ impl Default for LatencyHist {
 
 impl LatencyHist {
     /// Bucket upper bounds in seconds: {1, 2, 5} × 10^e for e in -6..=1.
-    pub const BOUNDS: [f64; 24] = [
-        1e-6, 2e-6, 5e-6, 1e-5, 2e-5, 5e-5, 1e-4, 2e-4, 5e-4, 1e-3, 2e-3, 5e-3, 1e-2, 2e-2,
-        5e-2, 1e-1, 2e-1, 5e-1, 1.0, 2.0, 5.0, 1e1, 2e1, 5e1,
-    ];
+    /// The ladder now lives in the observability layer
+    /// ([`registry::LADDER_BOUNDS`]) so every histogram in the process —
+    /// serving latency here, registry hists everywhere else — is
+    /// bucket-for-bucket comparable offline.
+    pub const BOUNDS: [f64; 24] = registry::LADDER_BOUNDS;
 
     /// Count one observation of `secs` into its ladder bucket.
     pub fn record(&mut self, secs: f64) {
-        let i = Self::BOUNDS
-            .iter()
-            .position(|&b| secs <= b)
-            .unwrap_or(Self::BOUNDS.len());
-        self.counts[i] += 1;
+        self.counts[registry::ladder_bucket(secs)] += 1;
     }
 
     /// Total number of recorded observations.
@@ -70,30 +68,16 @@ impl LatencyHist {
 
     /// The `q`-quantile (`0.0 < q <= 1.0`) in seconds, resolved to the
     /// upper bound of the bucket it lands in; 0.0 when nothing was
-    /// recorded, and the overflow bucket reports 2× the last bound.
+    /// recorded, and the overflow bucket reports 2× the last bound
+    /// (shared semantics: [`registry::quantile_of`]).
     pub fn quantile(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut cum = 0u64;
-        for (i, &c) in self.counts.iter().enumerate() {
-            cum += c;
-            if cum >= target {
-                return if i < Self::BOUNDS.len() {
-                    Self::BOUNDS[i]
-                } else {
-                    2.0 * Self::BOUNDS[Self::BOUNDS.len() - 1]
-                };
-            }
-        }
-        unreachable!("cumulative count reaches total")
+        registry::quantile_of(&self.counts, q)
     }
 }
 
 // the counts array is the ladder plus one overflow bucket, exactly
 const _: () = assert!(LatencyHist::BOUNDS.len() + 1 == 25);
+const _: () = assert!(registry::LADDER_CELLS == 25);
 
 /// Telemetry the serving bench and the network layer's `stats` command
 /// read.
@@ -192,6 +176,12 @@ impl PredictionService {
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let metrics_thread = Arc::clone(&metrics);
         let handle = std::thread::spawn(move || {
+            // registry twins of ServeMetrics: process-wide aggregates the
+            // wire `metrics` command exposes (handles registered once,
+            // updated with relaxed atomics — never inside the lock below)
+            let reg_requests = registry::counter("serve.requests");
+            let reg_batches = registry::counter("serve.batches");
+            let reg_latency = registry::hist("serve.latency_s");
             let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
             'serve: loop {
                 // block for the first request of a batch
@@ -245,6 +235,8 @@ impl PredictionService {
                 // the request is guaranteed to be counted (tested by
                 // prop_service_answers_every_request_exactly_once)
                 let dt = t0.elapsed().as_secs_f64();
+                reg_requests.add(pending.len() as u64);
+                reg_batches.inc();
                 {
                     let mut m = metrics_thread.lock().unwrap();
                     m.requests += pending.len();
@@ -252,7 +244,9 @@ impl PredictionService {
                     m.batch_secs_total += dt;
                     m.max_batch_seen = m.max_batch_seen.max(pending.len());
                     for req in &pending {
-                        m.latency.record(req.enqueued.elapsed().as_secs_f64());
+                        let secs = req.enqueued.elapsed().as_secs_f64();
+                        m.latency.record(secs);
+                        reg_latency.record(secs);
                     }
                 }
                 for (i, req) in pending.iter().enumerate() {

@@ -108,12 +108,16 @@ pub fn fit_one_round_source(
     drop(task_txs); // close channels -> workers terminate after draining
 
     // run the worker wave on the shared pool (blocks until it drains)
-    pool.run_jobs(jobs);
+    {
+        let _span = crate::obs::span("fit", "scatter");
+        pool.run_jobs(jobs);
+    }
 
     // The single reduction. Every reply is already buffered, so sort by
     // shard id before merging: float addition is not order-invariant, and
     // mpsc arrival order depends on scheduling — merging in fixed shard
     // order is what makes the fit bitwise reproducible at any pool width.
+    let merge_span = crate::obs::span("fit", "merge");
     let mut replies: Vec<ShardStats> = res_rx.iter().collect();
     replies.sort_by_key(|r| r.shard_id);
     let mut merged = RidgeStats::new(f_dim);
@@ -124,6 +128,7 @@ pub fn fit_one_round_source(
         featurize_secs_total += reply.featurize_secs;
         seen[reply.shard_id] = true;
     }
+    drop(merge_span);
 
     // fault tolerance: recompute missing shards locally. Because the
     // feature map is data-oblivious the leader can produce byte-identical
@@ -134,15 +139,28 @@ pub fn fit_one_round_source(
     let mut recovered_shards = 0;
     if seen.iter().any(|&s| !s) {
         use crate::features::Featurizer;
+        let _span = crate::obs::span("fit", "recover");
         let feat = spec.build();
         for (sid, &(lo, hi)) in shard_ranges.iter().enumerate() {
             if !seen[sid] {
                 let (x, y) = src.read_range(lo, hi)?;
-                let z = feat.featurize_par(&x, &pool);
-                merged.absorb_with(&z, &y, &pool);
+                let z = {
+                    let _span = crate::obs::span("pipeline", "featurize");
+                    feat.featurize_par(&x, &pool)
+                };
+                {
+                    let _span = crate::obs::span("pipeline", "absorb");
+                    merged.absorb_with(&z, &y, &pool);
+                }
                 recovered_shards += 1;
             }
         }
+        crate::obs::counter("fit.shards_recovered").add(recovered_shards as u64);
+        crate::obs::warn(
+            "coordinator.leader",
+            "shard replies missing; recomputed locally",
+            &[("recovered", recovered_shards.into()), ("shards", n_shards.into())],
+        );
     }
     if merged.n != n {
         return Err(format!(
@@ -151,7 +169,10 @@ pub fn fit_one_round_source(
         ));
     }
 
-    let model = merged.solve(lambda);
+    let model = {
+        let _span = crate::obs::span("fit", "solve");
+        merged.solve(lambda)
+    };
     Ok(DistributedFit {
         model,
         stats: merged,

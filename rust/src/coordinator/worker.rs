@@ -22,7 +22,8 @@
 //! Both backends produce the same feature map for the same `FeatureSpec`
 //! (checked in `rust/tests/pjrt_roundtrip.rs`).
 //!
-//! A shard whose source read fails is skipped (with a note on stderr);
+//! A shard whose source read fails is skipped (with a structured warn
+//! event, see [`crate::obs`]);
 //! the leader's missing-shard recovery re-reads it and surfaces the I/O
 //! error if it persists — a reply is never fabricated.
 
@@ -128,19 +129,26 @@ pub fn worker_loop(
             Err(e) => {
                 // no reply: the leader recomputes this range and surfaces
                 // the error if the source really is broken
-                eprintln!(
-                    "worker {}: shard {} read failed ({e}); leaving it to leader recovery",
-                    cfg.worker_id, task.shard_id
+                crate::obs::warn(
+                    "coordinator.worker",
+                    &format!("shard read failed ({e}); leaving it to leader recovery"),
+                    &[("worker", cfg.worker_id.into()), ("shard", task.shard_id.into())],
                 );
                 continue;
             }
         };
         let t0 = Instant::now();
-        let z = backend.featurize(&cfg.spec, &x);
+        let z = {
+            let _span = crate::obs::span("pipeline", "featurize");
+            backend.featurize(&cfg.spec, &x)
+        };
         let featurize_secs = t0.elapsed().as_secs_f64();
         let mut stats = RidgeStats::new(f_dim);
         // serial on purpose: the worker wave is the parallel axis
-        stats.absorb_with(&z, &y, &crate::exec::Pool::serial());
+        {
+            let _span = crate::obs::span("pipeline", "absorb");
+            stats.absorb_with(&z, &y, &crate::exec::Pool::serial());
+        }
         let reply = ShardStats {
             shard_id: task.shard_id,
             worker_id: cfg.worker_id,

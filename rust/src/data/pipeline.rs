@@ -77,10 +77,18 @@ impl ChunkBufs {
             // of a pass, and the first full chunk of the next pass
             self.x = Mat::zeros(c, self.x.cols());
         }
-        src.read_into(lo, hi, &mut self.x, &mut self.y[..c])?;
+        {
+            let _span = crate::obs::span("pipeline", "chunk.read");
+            src.read_into(lo, hi, &mut self.x, &mut self.y[..c])?;
+        }
         let t0 = Instant::now();
-        feat.featurize_par_into(&self.x, &mut self.z[..c * self.f_dim], pool);
+        {
+            let _span = crate::obs::span("pipeline", "featurize");
+            feat.featurize_par_into(&self.x, &mut self.z[..c * self.f_dim], pool);
+        }
         *secs += t0.elapsed().as_secs_f64();
+        crate::obs::counter("pipeline.chunks").inc();
+        crate::obs::counter("pipeline.rows").add(c as u64);
         Ok((&self.x, &self.y[..c], &self.z[..c * self.f_dim]))
     }
 }
@@ -140,6 +148,7 @@ pub fn ridge_stats(
 ) -> Result<(RidgeStats, PipelineInfo), String> {
     let mut stats = RidgeStats::new(feat.dim());
     let info = for_each_chunk(feat, src, chunk_rows, pool, |_, y, z| {
+        let _span = crate::obs::span("pipeline", "absorb");
         stats.absorb_flat_with(z, y, pool)
     })?;
     Ok((stats, info))
@@ -281,7 +290,11 @@ pub fn chunked_mse(
         if x.rows() != c {
             x = Mat::zeros(c, src.dim());
         }
-        src.read_into(lo, hi, &mut x, &mut y[..c])?;
+        {
+            let _span = crate::obs::span("pipeline", "chunk.read");
+            src.read_into(lo, hi, &mut x, &mut y[..c])?;
+        }
+        let _span = crate::obs::span("pipeline", "eval");
         let pred = predict(&x);
         assert_eq!(pred.len(), c, "predictor returned a wrong-sized chunk");
         for (p, t) in pred.iter().zip(&y[..c]) {

@@ -41,6 +41,7 @@ use crate::coordinator::ShardRange;
 use crate::exec::Pool;
 use crate::features::Featurizer;
 use crate::krr::{FeatureRidge, RidgeStats};
+use crate::obs;
 use crate::server::listener::{read_line_bounded, LineRead};
 use std::collections::BTreeMap;
 use std::io::{BufReader, ErrorKind, Write};
@@ -157,8 +158,17 @@ impl DistLeader {
             return Err("cannot fit zero rows".to_string());
         }
         let f_dim = spec.feature_dim();
-        let conns = self.register_fleet(spec, data)?;
+        let conns = {
+            let _span = obs::span("dist", "register");
+            self.register_fleet(spec, data)?
+        };
         let n_registered = conns.len();
+        obs::gauge("dist.leader.workers").set(n_registered as i64);
+        obs::info(
+            "dist.leader",
+            "fleet registered; scattering shards",
+            &[("workers", n_registered.into()), ("rows", n.into())],
+        );
 
         let t0 = Instant::now();
         let shard_ranges: Vec<ShardRange> = (0..n)
@@ -182,6 +192,7 @@ impl DistLeader {
         let reassigned = AtomicUsize::new(0);
         let dead = AtomicUsize::new(0);
         let (res_tx, res_rx) = mpsc::channel::<WireStats>();
+        let scatter_span = obs::span("dist", "scatter");
         std::thread::scope(|scope| {
             for conn in conns {
                 let res_tx = res_tx.clone();
@@ -199,6 +210,7 @@ impl DistLeader {
             }
         });
         drop(res_tx);
+        drop(scatter_span);
 
         // Gather, deduplicating by shard id: the driver protocol never
         // accepts a late reply after a reassignment, but the merge still
@@ -211,9 +223,10 @@ impl DistLeader {
 
         let failed = failed.into_inner().expect("failed lock");
         if !failed.is_empty() {
-            eprintln!(
-                "gzk leader: {} shard(s) failed on workers; recovering locally",
-                failed.len()
+            obs::warn(
+                "dist.leader",
+                "shard(s) failed on workers; recovering locally",
+                &[("failed_shards", failed.len().into())],
             );
         }
 
@@ -222,6 +235,7 @@ impl DistLeader {
         // have produced, so the merge below cannot tell the difference
         let mut recovered = 0usize;
         if replies.len() < n_shards {
+            let _span = obs::span("dist", "recover");
             let feat = spec.build();
             let pool = Pool::global();
             for t in &shard_ranges {
@@ -230,10 +244,16 @@ impl DistLeader {
                 }
                 let (x, y) = src.read_range(t.lo, t.hi)?;
                 let t1 = Instant::now();
-                let z = feat.featurize_par(&x, &pool);
+                let z = {
+                    let _span = obs::span("pipeline", "featurize");
+                    feat.featurize_par(&x, &pool)
+                };
                 let featurize_secs = t1.elapsed().as_secs_f64();
                 let mut stats = RidgeStats::new(f_dim);
-                stats.absorb_with(&z, &y, &pool);
+                {
+                    let _span = obs::span("pipeline", "absorb");
+                    stats.absorb_with(&z, &y, &pool);
+                }
                 replies.insert(
                     t.shard_id,
                     WireStats { shard_id: t.shard_id, worker_id: usize::MAX, featurize_secs, stats },
@@ -242,8 +262,28 @@ impl DistLeader {
             }
         }
 
-        let (merged, featurize_secs_total) = merge_in_shard_order(&replies, n_shards, n, f_dim)?;
-        let model = merged.solve(lambda);
+        let (merged, featurize_secs_total) = {
+            let _span = obs::span("fit", "merge");
+            merge_in_shard_order(&replies, n_shards, n, f_dim)?
+        };
+        let model = {
+            let _span = obs::span("fit", "solve");
+            merged.solve(lambda)
+        };
+        obs::counter("dist.leader.shards_reassigned")
+            .add(reassigned.load(Ordering::Relaxed) as u64);
+        obs::counter("dist.leader.shards_recovered").add(recovered as u64);
+        obs::counter("dist.leader.dead_workers").add(dead.load(Ordering::Relaxed) as u64);
+        obs::info(
+            "dist.leader",
+            "distributed fit merged and solved",
+            &[
+                ("shards", n_shards.into()),
+                ("reassigned", reassigned.load(Ordering::Relaxed).into()),
+                ("recovered", recovered.into()),
+                ("dead_workers", dead.load(Ordering::Relaxed).into()),
+            ],
+        );
         Ok(NetFit {
             model,
             stats: merged,
@@ -276,7 +316,11 @@ impl DistLeader {
                     let id = conns.len();
                     match handshake(stream, id, spec, data, self.cfg.shard_timeout) {
                         Ok(conn) => conns.push(conn),
-                        Err(e) => eprintln!("gzk leader: rejected peer {peer}: {e}"),
+                        Err(e) => obs::warn(
+                            "dist.leader",
+                            &format!("rejected peer: {e}"),
+                            &[("peer", peer.to_string().into())],
+                        ),
                     }
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -295,10 +339,10 @@ impl DistLeader {
             ));
         }
         if conns.len() < self.cfg.n_workers {
-            eprintln!(
-                "gzk leader: registration window closed with {} of {} workers; proceeding",
-                conns.len(),
-                self.cfg.n_workers
+            obs::warn(
+                "dist.leader",
+                "registration window closed with a partial fleet; proceeding",
+                &[("registered", conns.len().into()), ("requested", self.cfg.n_workers.into())],
             );
         }
         Ok(conns)
@@ -360,6 +404,9 @@ fn drive_worker(
     shard_timeout: Duration,
 ) -> bool {
     let mut buf = Vec::new();
+    // assign → reply latency per shard, across the whole fleet; the per-
+    // worker breakdown is in the trace (one driver thread = one trace tid)
+    let reply_hist = obs::hist("dist.leader.shard_reply_s");
     loop {
         let task = match pending.lock().expect("pending lock").pop() {
             Some(t) => t,
@@ -369,13 +416,16 @@ fn drive_worker(
             }
         };
         let abandon = |task: ShardRange, why: &str| {
-            eprintln!(
-                "gzk leader: worker {} abandoned on shard {} ({why}); reassigning",
-                conn.id, task.shard_id
+            obs::warn(
+                "dist.leader",
+                &format!("worker abandoned mid-shard ({why}); reassigning"),
+                &[("worker", conn.id.into()), ("shard", task.shard_id.into())],
             );
             pending.lock().expect("pending lock").push(task);
             reassigned.fetch_add(1, Ordering::Relaxed);
         };
+        let _span = obs::span("dist", &format!("shard {}", task.shard_id));
+        let t0 = Instant::now();
         if let Err(e) = send_line(&mut conn.stream, &wire::assign_msg(task)) {
             abandon(task, &e);
             return false;
@@ -394,14 +444,16 @@ fn drive_worker(
                     abandon(task, "reply does not match the assignment");
                     return false;
                 }
+                reply_hist.record(t0.elapsed().as_secs_f64());
                 let _ = res_tx.send(ws);
             }
             Ok(DistMsg::Error { error, .. }) => {
                 // the worker is alive but cannot serve this shard; leave
                 // the shard to leader recovery and keep the worker
-                eprintln!(
-                    "gzk leader: worker {} failed shard {} ({error}); leader will recover it",
-                    conn.id, task.shard_id
+                obs::warn(
+                    "dist.leader",
+                    &format!("worker failed a shard ({error}); leader will recover it"),
+                    &[("worker", conn.id.into()), ("shard", task.shard_id.into())],
                 );
                 failed.lock().expect("failed lock").push(task.shard_id);
             }

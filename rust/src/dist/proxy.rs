@@ -28,9 +28,19 @@
 //!   the whole serving tier, which is what the CI smoke job and loadgen
 //!   `--shutdown` rely on.
 //!
+//! Two wire commands get special handling beyond shutdown: `metrics` is
+//! answered **locally** (the snapshot describes this proxy process —
+//! including the per-replica `proxy.replica.<addr>.*` counters — and
+//! each replica answers its own); `stats` is forwarded to a replica as
+//! usual and the proxy then splices a `"proxy":{"replicas":[...]}`
+//! section (healthy flag, forwarded / strikes / ejections /
+//! readmissions / retries counters) into the reply, so one stats line
+//! shows both a replica's view and the balancer's.
+//!
 //! The proxy never parses predict bodies (it routes lines, not models),
 //! so it adds microseconds, not a deserialization round-trip.
 
+use crate::obs::{self, Counter};
 use crate::server::listener::{is_loopback_ip, read_line_bounded, LineRead, MAX_LINE_BYTES};
 use crate::server::loadgen::ClientConn;
 use crate::server::wire;
@@ -74,9 +84,29 @@ struct Replica {
     consecutive_failures: AtomicU32,
     /// requests this replica answered (including `"retry":true` answers)
     forwarded: AtomicU64,
+    /// registry twins under `proxy.replica.<addr>.*` — exposed by the
+    /// wire `metrics` snapshot and spliced into the `stats` reply
+    strikes: Counter,
+    ejections: Counter,
+    readmissions: Counter,
+    retries: Counter,
 }
 
 impl Replica {
+    fn new(addr: String) -> Replica {
+        let key = |what: &str| format!("proxy.replica.{addr}.{what}");
+        Replica {
+            healthy: AtomicBool::new(true),
+            consecutive_failures: AtomicU32::new(0),
+            forwarded: AtomicU64::new(0),
+            strikes: obs::counter(&key("strikes")),
+            ejections: obs::counter(&key("ejections")),
+            readmissions: obs::counter(&key("readmissions")),
+            retries: obs::counter(&key("retries")),
+            addr,
+        }
+    }
+
     fn record_success(&self) {
         self.consecutive_failures.store(0, Ordering::Relaxed);
         self.healthy.store(true, Ordering::Relaxed);
@@ -84,13 +114,33 @@ impl Replica {
     }
 
     fn record_failure(&self, eject_after: u32) {
+        self.strikes.inc();
         let strikes = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
         if strikes >= eject_after && self.healthy.swap(false, Ordering::Relaxed) {
-            eprintln!(
-                "gzk proxy: replica {} ejected after {strikes} consecutive failures",
-                self.addr
+            self.ejections.inc();
+            obs::warn(
+                "dist.proxy",
+                "replica ejected after consecutive transport failures",
+                &[("replica", self.addr.as_str().into()), ("strikes", strikes.into())],
             );
         }
+    }
+
+    /// One entry of the `"proxy":{"replicas":[...]}` stats section.
+    fn stats_json(&self) -> String {
+        format!(
+            concat!(
+                r#"{{"addr":{},"healthy":{},"forwarded":{},"strikes":{},"#,
+                r#""ejections":{},"readmissions":{},"retries":{}}}"#
+            ),
+            wire::json_string(&self.addr),
+            self.healthy.load(Ordering::Relaxed),
+            self.forwarded.load(Ordering::Relaxed),
+            self.strikes.get(),
+            self.ejections.get(),
+            self.readmissions.get(),
+            self.retries.get()
+        )
     }
 }
 
@@ -148,15 +198,7 @@ impl Proxy {
         let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
         let bound = listener.local_addr().map_err(|e| format!("local addr: {e}"))?;
         let shared = Arc::new(ProxyShared {
-            replicas: replicas
-                .into_iter()
-                .map(|addr| Replica {
-                    addr,
-                    healthy: AtomicBool::new(true),
-                    consecutive_failures: AtomicU32::new(0),
-                    forwarded: AtomicU64::new(0),
-                })
-                .collect(),
+            replicas: replicas.into_iter().map(Replica::new).collect(),
             rr: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             active_conns: AtomicUsize::new(0),
@@ -239,13 +281,20 @@ fn probe_loop(shared: &Arc<ProxyShared>) {
                 if reply.ok {
                     r.consecutive_failures.store(0, Ordering::Relaxed);
                     r.healthy.store(true, Ordering::Relaxed);
+                    r.readmissions.inc();
                     let uptime = reply.body.get("uptime_s").and_then(|v| v.as_f64());
                     let reloads = reply.body.get("reloads").and_then(|v| v.as_usize());
                     let rejects = reply.body.get("total_rejects").and_then(|v| v.as_usize());
-                    eprintln!(
-                        "gzk proxy: replica {} readmitted (uptime_s {:?}, reloads {:?}, \
-                         total_rejects {:?})",
-                        r.addr, uptime, reloads, rejects
+                    obs::info(
+                        "dist.proxy",
+                        "replica readmitted after a healthy stats probe",
+                        &[
+                            ("replica", r.addr.as_str().into()),
+                            // -1 / null mark fields the probe reply lacked
+                            ("uptime_s", uptime.unwrap_or(f64::NAN).into()),
+                            ("reloads", reloads.map(|v| v as i64).unwrap_or(-1).into()),
+                            ("total_rejects", rejects.map(|v| v as i64).unwrap_or(-1).into()),
+                        ],
                     );
                 }
             }
@@ -302,11 +351,14 @@ fn handle_client(stream: TcpStream, shared: &Arc<ProxyShared>) {
         if line.is_empty() {
             continue;
         }
-        // the proxy parses just enough to spot the shutdown command; every
-        // other line (predict, ping, models, stats, even malformed input)
-        // is the replica's to answer
-        if matches!(wire::parse_request(line), Ok(wire::Request::Shutdown)) {
+        // the proxy parses just enough to spot shutdown (fan-out),
+        // metrics (answered locally) and stats (forwarded, then
+        // augmented); every other line (predict, ping, models, even
+        // malformed input) is the replica's to answer verbatim
+        let parsed = wire::parse_request(line);
+        if matches!(parsed, Ok(wire::Request::Shutdown)) {
             if !peer_is_loopback && !shared.cfg.allow_remote_shutdown {
+                obs::warn("dist.proxy", "shutdown refused from a non-loopback peer", &[]);
                 if !send(
                     &mut writer,
                     &wire::error_reply(
@@ -318,16 +370,45 @@ fn handle_client(stream: TcpStream, shared: &Arc<ProxyShared>) {
                 }
                 continue;
             }
+            obs::info("dist.proxy", "wire shutdown accepted; fanning out to replicas", &[]);
             broadcast_shutdown(shared);
             let _ = send(&mut writer, &wire::shutdown_reply());
             shared.begin_shutdown();
             return;
         }
-        let reply = forward(shared, &mut conns, line);
+        if matches!(parsed, Ok(wire::Request::Metrics)) {
+            // never forwarded: the snapshot describes THIS process; each
+            // replica answers its own `metrics`
+            if !send(&mut writer, &wire::metrics_reply()) {
+                return;
+            }
+            continue;
+        }
+        let mut reply = forward(shared, &mut conns, line);
+        if matches!(parsed, Ok(wire::Request::Stats)) {
+            reply = splice_proxy_stats(shared, reply);
+        }
         if !send(&mut writer, &reply) {
             return;
         }
     }
+}
+
+/// Splice the proxy's own per-replica section into a forwarded `stats`
+/// reply: insert `,"proxy":{"replicas":[...]}` before the closing brace
+/// of the (replica-formatted) JSON object, leaving the replica's floats
+/// byte-for-byte untouched — the crate has no JSON serializer, and
+/// re-encoding could perturb them.
+fn splice_proxy_stats(shared: &Arc<ProxyShared>, reply: String) -> String {
+    if !(reply.len() > 2 && reply.starts_with('{') && reply.ends_with('}')) {
+        return reply; // not a non-empty object: pass through untouched
+    }
+    let per: Vec<String> = shared.replicas.iter().map(Replica::stats_json).collect();
+    format!(
+        "{},\"proxy\":{{\"replicas\":[{}]}}}}",
+        &reply[..reply.len() - 1],
+        per.join(",")
+    )
 }
 
 /// Fan the wire `shutdown` out to every replica, best-effort: a replica
@@ -373,6 +454,7 @@ fn forward(
                 if reply.retry {
                     // the replica is up but saturated: back off, try the
                     // next one — this is where replicas pool capacity
+                    replica.retries.inc();
                     std::thread::sleep(backoff);
                     backoff = (backoff * 2).min(Duration::from_millis(10));
                     continue;

@@ -22,6 +22,7 @@ use super::wire::{self, DistMsg, MAX_FRAME_BYTES};
 use crate::exec::Pool;
 use crate::features::Featurizer;
 use crate::krr::RidgeStats;
+use crate::obs;
 use crate::server::listener::{read_line_bounded, LineRead};
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
@@ -108,6 +109,11 @@ pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport, Stri
         DistMsg::Error { error, .. } => return Err(format!("leader rejected registration: {error}")),
         other => return Err(format!("expected a job after registering, got {other:?}")),
     };
+    obs::info(
+        "dist.worker",
+        "registered with the leader; job received",
+        &[("worker", worker_id.into()), ("dataset", data.name.as_str().into())],
+    );
     let src = data.open()?;
     if src.dim() != spec.d {
         return Err(format!(
@@ -144,12 +150,18 @@ pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport, Stri
             )?;
             continue;
         }
+        let shard_span = obs::span("dist", &format!("shard {}", task.shard_id));
         let (x, y) = match src.read_range(task.lo, task.hi) {
             Ok(chunk) => chunk,
             Err(e) => {
                 // no fabricated reply: report the shard as failed and let
                 // the leader recover it (its own read surfaces a real
                 // source error)
+                obs::warn(
+                    "dist.worker",
+                    &format!("shard read failed: {e}"),
+                    &[("worker", worker_id.into()), ("shard", task.shard_id.into())],
+                );
                 send_line(
                     &mut stream,
                     &wire::error_msg(&format!("shard read failed: {e}"), Some(task.shard_id)),
@@ -158,10 +170,17 @@ pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport, Stri
             }
         };
         let t0 = Instant::now();
-        let z = feat.featurize_par(&x, &pool);
+        let z = {
+            let _span = obs::span("pipeline", "featurize");
+            feat.featurize_par(&x, &pool)
+        };
         let featurize_secs = t0.elapsed().as_secs_f64();
         let mut stats = RidgeStats::new(f_dim);
-        stats.absorb_with(&z, &y, &pool);
+        {
+            let _span = obs::span("pipeline", "absorb");
+            stats.absorb_with(&z, &y, &pool);
+        }
+        drop(shard_span);
         let reply = wire::WireStats {
             shard_id: task.shard_id,
             worker_id,
@@ -175,6 +194,16 @@ pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport, Stri
         report.shards += 1;
         report.rows += task.hi - task.lo;
         report.featurize_secs += featurize_secs;
+        obs::debug(
+            "dist.worker",
+            "shard done",
+            &[
+                ("worker", worker_id.into()),
+                ("shard", task.shard_id.into()),
+                ("rows", (task.hi - task.lo).into()),
+                ("featurize_secs", featurize_secs.into()),
+            ],
+        );
     }
 }
 

@@ -57,10 +57,13 @@ fn default_threads() -> usize {
             // a mistyped pin (GZK_THREADS=0, garbage, empty) must not
             // silently run at machine width — that would fake out e.g.
             // the CI matrix leg that pins the suite serial
-            _ => eprintln!(
-                "warning: GZK_THREADS={v:?} is not a positive integer; \
-                 using all {} cores",
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            _ => crate::obs::warn(
+                "exec",
+                &format!("GZK_THREADS={v:?} is not a positive integer; using all cores"),
+                &[(
+                    "cores",
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).into(),
+                )],
             ),
         }
     }
@@ -204,6 +207,10 @@ impl Pool {
     /// its worker loops — jobs may own channels and run for the whole
     /// wave, which the row-scatter primitives must never do.
     pub fn run_jobs(&self, jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
+        // one span + one counter bump per *wave*, not per job — waves are
+        // coarse by contract, so this stays off the hot path
+        let _span = crate::obs::span("exec", "jobs");
+        crate::obs::counter("exec.jobs").add(jobs.len() as u64);
         if self.threads <= 1 || jobs.len() <= 1 {
             for job in jobs {
                 job();

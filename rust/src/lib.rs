@@ -9,10 +9,13 @@
 //!   linear algebra ([`linalg`]), the parallel execution engine ([`exec`]:
 //!   one thread pool + row-scatter primitives every layer draws from, with
 //!   bit-identical results at every thread count), exact kernels
-//!   ([`kernels`]), and the data layer ([`data`]): synthetic generators
+//!   ([`kernels`]), the data layer ([`data`]): synthetic generators
 //!   plus the chunked out-of-core pipeline ([`data::DataSource`] /
 //!   [`data::pipeline`]) every fit path consumes — working memory bounded
-//!   by the chunk, never by n, bit-invariant to the chunking.
+//!   by the chunk, never by n, bit-invariant to the chunking — and the
+//!   observability layer ([`obs`]): a lock-free metrics registry,
+//!   leveled structured events, and trace spans instrumenting every
+//!   layer above without perturbing any result.
 //! * **The paper's contribution** — random Gegenbauer features for the
 //!   Generalized Zonal Kernel family ([`features::gegenbauer`]), baselines
 //!   ([`features`]), the spec-driven registry that constructs them all
@@ -102,6 +105,7 @@ pub mod kpca;
 pub mod krr;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod server;

@@ -33,7 +33,7 @@
 //!                 [--idle-s 300] [--allow-remote-shutdown]
 //!                                                    TCP model server over a ModelStore:
 //!                                                    newline-delimited JSON protocol
-//!                                                    (predict/models/stats/ping/shutdown),
+//!                                                    (predict/models/stats/metrics/ping/shutdown),
 //!                                                    multi-model routing by name, manifest
 //!                                                    polled every --poll-ms so a newly
 //!                                                    persisted artifact serves without
@@ -117,6 +117,26 @@
 //!                  result is bit-identical at every width. Model
 //!                  artifacts record the width — and the training dataset
 //!                  name + row count — in their run metadata.
+//!   --log-level L  structured-event threshold: error|warn|info|debug
+//!                  (default info; GZK_LOG env var is the no-CLI
+//!                  override). Diagnostics are one newline-JSON record
+//!                  per event on stderr, e.g. {"ts":...,"level":"warn",
+//!                  "target":"dist.leader","msg":"...","shard":7}.
+//!   --log-file P   write event records to file P instead of stderr.
+//!   --trace-out P  collect scoped trace spans (featurize / absorb /
+//!                  solve / chunk I/O / scatter / merge / shard stages)
+//!                  and write them as Chrome trace-event JSON to P on a
+//!                  clean exit — load the file in chrome://tracing or
+//!                  Perfetto. Tracing is off (one atomic load per
+//!                  would-be span) unless this flag is given.
+//!
+//! Observability (see DESIGN.md "Observability"): every process keeps a
+//! global metrics registry (counters/gauges/latency histograms named
+//! like `pipeline.rows`, `dist.leader.shards_reassigned`,
+//! `proxy.replica.<addr>.ejections`); `gzk server` and `gzk proxy`
+//! answer the wire `metrics` command with one consistent JSON snapshot
+//! of it. Instrumentation is read-only: every fit stays bit-identical
+//! with logging, metrics and tracing enabled.
 //!
 //! Subcommands that build a single featurizer (`fit`, `serve`, `leverage`)
 //! share one flag group — `--kernel/--method/--m/--seed` plus tuning knobs —
@@ -142,7 +162,7 @@ fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("argument error: {e}");
+            gzk::obs::error("cli", &format!("argument error: {e}"), &[]);
             std::process::exit(2);
         }
     };
@@ -154,6 +174,36 @@ fn main() {
         }
         Ok(None) => {}
         Err(e) => usage_error(&e),
+    }
+    // the global observability flags: event threshold + sink and span
+    // collection are process-wide, configured before any subcommand runs
+    match args.log_level() {
+        Ok(Some(level)) => gzk::obs::events::set_level(level),
+        Ok(None) => {
+            if let Ok(v) = std::env::var("GZK_LOG") {
+                match gzk::obs::Level::parse(&v) {
+                    Ok(level) => gzk::obs::events::set_level(level),
+                    Err(e) => usage_error(&format!("GZK_LOG: {e}")),
+                }
+            }
+        }
+        Err(e) => usage_error(&e),
+    }
+    match args.path_flag("log-file") {
+        Ok(Some(path)) => {
+            if let Err(e) = gzk::obs::events::set_log_file(path) {
+                fatal_error(&e);
+            }
+        }
+        Ok(None) => {}
+        Err(e) => usage_error(&e),
+    }
+    let trace_out = match args.path_flag("trace-out") {
+        Ok(t) => t.map(str::to_string),
+        Err(e) => usage_error(&e),
+    };
+    if trace_out.is_some() {
+        gzk::obs::trace::enable();
     }
     match args.subcommand.as_str() {
         "fig1" => {
@@ -211,22 +261,34 @@ fn main() {
         "proxy" => proxy_cmd(&args),
         "info" => info(),
         other => {
-            eprintln!("unknown subcommand {other:?}; see rust/src/main.rs header for usage");
-            std::process::exit(2);
+            usage_error(&format!(
+                "unknown subcommand {other:?}; see rust/src/main.rs header for usage"
+            ));
         }
+    }
+    // subcommands that exit through std::process::exit (server shutdown,
+    // error paths) skip this — the trace covers clean runs, which is
+    // what `gzk fit --trace-out` is for
+    if let Some(path) = trace_out {
+        if let Err(e) = gzk::obs::trace::write_chrome_trace(&path) {
+            fatal_error(&e);
+        }
+        println!("wrote trace {path:?}");
     }
 }
 
-/// Usage mistakes exit(2) with a plain message — never a panic backtrace.
+/// Usage mistakes exit(2) with an error-level event record — never a
+/// panic backtrace. The `argument error: ` message prefix is part of the
+/// CLI contract (cli_e2e greps it) and survives the JSON wrapping.
 fn usage_error(msg: &str) -> ! {
-    eprintln!("argument error: {msg}");
+    gzk::obs::error("cli", &format!("argument error: {msg}"), &[]);
     std::process::exit(2);
 }
 
 /// Runtime failures (I/O, corrupt artifacts, fit errors) exit(1) — distinct
 /// from the exit(2) usage contract so scripts can tell them apart.
 fn fatal_error(msg: &str) -> ! {
-    eprintln!("error: {msg}");
+    gzk::obs::error("cli", &format!("error: {msg}"), &[]);
     std::process::exit(1);
 }
 
@@ -298,11 +360,10 @@ fn reject_stored_serve_flags(args: &Args, store_dir: &std::path::Path) {
 fn reject_sweep_flags(args: &Args, subcommand: &str, flags: &[&str]) {
     for f in flags {
         if args.get(f).is_some() {
-            eprintln!(
-                "argument error: --{f} does not apply to {subcommand} \
+            usage_error(&format!(
+                "--{f} does not apply to {subcommand} \
                  (it sweeps the method registry with its own kernels)"
-            );
-            std::process::exit(2);
+            ));
         }
     }
 }
@@ -862,7 +923,7 @@ fn server_cmd(args: &Args) {
         gzk::exec::Pool::global().threads()
     );
     println!(
-        r#"protocol: one JSON object per line, e.g. {{"cmd":"predict","model":"ridge","x":[...]}}; cmds: predict, models, stats, ping, shutdown"#
+        r#"protocol: one JSON object per line, e.g. {{"cmd":"predict","model":"ridge","x":[...]}}; cmds: predict, models, stats, metrics, ping, shutdown"#
     );
     let final_stats = server.wait();
     println!("gzk server: shut down cleanly");

@@ -1,0 +1,244 @@
+//! Leveled structured event log: one newline-JSON record per event,
+//! written to stderr by default or to the file installed by
+//! [`set_log_file`] (the `--log-file` flag).
+//!
+//! Record schema (one object per line, fields after `msg` are
+//! event-specific):
+//!
+//! ```text
+//! {"ts":1754555555.123456,"level":"warn","target":"dist.leader",
+//!  "msg":"worker 3 abandoned on shard 7 (died); reassigning",
+//!  "worker":3,"shard":7}
+//! ```
+//!
+//! `ts` is unix seconds with fractional part; `target` is a dotted
+//! component path mirroring the registry naming scheme. The threshold
+//! defaults to [`Level::Info`] and is set from `--log-level` or the
+//! `GZK_LOG` env var. Emission must never take the process down: write
+//! errors (closed stderr, full disk) are swallowed.
+
+use std::fs::File;
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Event severity; ordered so a threshold admits itself and everything
+/// more severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a `--log-level` / `GZK_LOG` value (case-insensitive).
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => {
+                Err(format!("unknown log level {other:?}; known: error, warn, info, debug"))
+            }
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the emission threshold: events strictly less severe are dropped.
+pub fn set_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+static SINK: Mutex<Option<File>> = Mutex::new(None);
+
+/// Route all events to `path` (created/truncated) instead of stderr.
+pub fn set_log_file(path: &str) -> Result<(), String> {
+    let file = File::create(path).map_err(|e| format!("open log file {path:?}: {e}"))?;
+    *SINK.lock().expect("log sink lock") = Some(file);
+    Ok(())
+}
+
+/// A typed event field value; call sites build them through the `From`
+/// impls (`("shard", shard_id.into())`).
+pub enum Field {
+    U(u64),
+    I(i64),
+    F(f64),
+    B(bool),
+    S(String),
+}
+
+impl Field {
+    fn to_json(&self) -> String {
+        match self {
+            Field::U(v) => v.to_string(),
+            Field::I(v) => v.to_string(),
+            Field::F(v) if v.is_finite() => format!("{v:?}"),
+            Field::F(_) => "null".to_string(),
+            Field::B(v) => v.to_string(),
+            Field::S(v) => json_string(v),
+        }
+    }
+}
+
+impl From<u64> for Field {
+    fn from(v: u64) -> Field {
+        Field::U(v)
+    }
+}
+
+impl From<u32> for Field {
+    fn from(v: u32) -> Field {
+        Field::U(u64::from(v))
+    }
+}
+
+impl From<usize> for Field {
+    fn from(v: usize) -> Field {
+        Field::U(v as u64)
+    }
+}
+
+impl From<i64> for Field {
+    fn from(v: i64) -> Field {
+        Field::I(v)
+    }
+}
+
+impl From<f64> for Field {
+    fn from(v: f64) -> Field {
+        Field::F(v)
+    }
+}
+
+impl From<bool> for Field {
+    fn from(v: bool) -> Field {
+        Field::B(v)
+    }
+}
+
+impl From<&str> for Field {
+    fn from(v: &str) -> Field {
+        Field::S(v.to_string())
+    }
+}
+
+impl From<String> for Field {
+    fn from(v: String) -> Field {
+        Field::S(v)
+    }
+}
+
+/// Emit one event record if `level` clears the threshold.
+pub fn event(level: Level, target: &str, msg: &str, fields: &[(&str, Field)]) {
+    if (level as u8) > THRESHOLD.load(Ordering::Relaxed) {
+        return;
+    }
+    let ts = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let mut line = format!(
+        "{{\"ts\":{ts:.6},\"level\":\"{}\",\"target\":{},\"msg\":{}",
+        level.name(),
+        json_string(target),
+        json_string(msg)
+    );
+    for (key, value) in fields {
+        line.push(',');
+        line.push_str(&json_string(key));
+        line.push(':');
+        line.push_str(&value.to_json());
+    }
+    line.push('}');
+    let mut sink = SINK.lock().expect("log sink lock");
+    match sink.as_mut() {
+        Some(file) => {
+            let _ = writeln!(file, "{line}");
+        }
+        None => {
+            let _ = writeln!(std::io::stderr().lock(), "{line}");
+        }
+    }
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, Field)]) {
+    event(Level::Error, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, Field)]) {
+    event(Level::Warn, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, Field)]) {
+    event(Level::Info, target, msg, fields);
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, Field)]) {
+    event(Level::Debug, target, msg, fields);
+}
+
+/// Minimal JSON string escaper. Deliberately duplicated from the model
+/// artifact codec: obs sits below every other layer and must not
+/// depend upward.
+pub(crate) fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 || (c as u32) > 0x7e => {
+                let cp = if (c as u32) > 0xFFFF { 0xFFFD } else { c as u32 };
+                out.push_str(&format!("\\u{cp:04x}"));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("error").unwrap(), Level::Error);
+        assert_eq!(Level::parse("WARN").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("Info").unwrap(), Level::Info);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        let err = Level::parse("loud").unwrap_err();
+        assert!(err.contains("known: error, warn, info, debug"), "{err}");
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn fields_serialize_as_json_values() {
+        assert_eq!(Field::from(7u64).to_json(), "7");
+        assert_eq!(Field::from(-3i64).to_json(), "-3");
+        assert_eq!(Field::from(1.5f64).to_json(), "1.5");
+        assert_eq!(Field::from(f64::NAN).to_json(), "null");
+        assert_eq!(Field::from(true).to_json(), "true");
+        assert_eq!(Field::from("a\"b").to_json(), "\"a\\\"b\"");
+    }
+}

@@ -1,0 +1,317 @@
+//! Global lock-free metrics registry.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Hist`]) wrap `Arc`'d atomic
+//! cells: an update is one relaxed atomic RMW, no lock. The name →
+//! handle map sits behind a `Mutex` that is touched only at
+//! registration and snapshot time, never on a hot path — call
+//! [`counter`]/[`gauge`]/[`hist`] once and keep the handle. With the
+//! registry disabled ([`set_enabled`]) every update costs exactly one
+//! relaxed atomic load (the bench's instrumentation-overhead section
+//! measures both states on the featurize+absorb hot path).
+//!
+//! Naming scheme: dotted lowercase paths, `<layer>.<thing>[.<detail>]`
+//! — e.g. `exec.jobs`, `pipeline.rows`, `dist.leader.shards_reassigned`,
+//! `proxy.replica.127.0.0.1:7711.ejections`, `serve.requests`. Dynamic
+//! segments (replica addresses) are allowed, which is why names are
+//! `String`s rather than `&'static str`.
+//!
+//! Histograms record **seconds** on the shared 1-2-5 log ladder
+//! ([`LADDER_BOUNDS`], 1 µs … 50 s plus one overflow cell) — the ladder
+//! PR 5 introduced for serving latency, hoisted here so every histogram
+//! in the process is offline-comparable bucket for bucket.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::events::json_string;
+
+/// Histogram bucket upper bounds in seconds: {1, 2, 5} × 10^e for e in
+/// -6..=1.
+pub const LADDER_BOUNDS: [f64; 24] = [
+    1e-6, 2e-6, 5e-6, 1e-5, 2e-5, 5e-5, 1e-4, 2e-4, 5e-4, 1e-3, 2e-3, 5e-3, 1e-2, 2e-2, 5e-2,
+    1e-1, 2e-1, 5e-1, 1.0, 2.0, 5.0, 1e1, 2e1, 5e1,
+];
+
+/// Cells per histogram: one per ladder bound plus one overflow cell.
+pub const LADDER_CELLS: usize = LADDER_BOUNDS.len() + 1;
+
+/// The ladder cell `v` (seconds) falls in; the last cell is overflow.
+pub fn ladder_bucket(v: f64) -> usize {
+    LADDER_BOUNDS.iter().position(|&b| v <= b).unwrap_or(LADDER_BOUNDS.len())
+}
+
+/// Shared quantile semantics for ladder histograms: the `q`-quantile
+/// (`0.0 < q <= 1.0`) resolves to the **upper bound** of the bucket the
+/// target rank lands in (≤ one ladder step of error); 0.0 when nothing
+/// was recorded, and the overflow cell reports 2× the last bound.
+pub fn quantile_of(counts: &[u64; LADDER_CELLS], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return if i < LADDER_BOUNDS.len() {
+                LADDER_BOUNDS[i]
+            } else {
+                2.0 * LADDER_BOUNDS[LADDER_BOUNDS.len() - 1]
+            };
+        }
+    }
+    unreachable!("cumulative count reaches total")
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Whether updates are recorded — one relaxed load, the hot-path gate.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Globally enable/disable recording. Snapshots keep working while
+/// disabled; the handles simply stop counting.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Monotonic counter; clone freely, updates are relaxed atomic adds.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value-wins signed gauge (queue depths, fleet sizes).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add(&self, delta: i64) {
+        if enabled() {
+            self.0.fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistCells {
+    counts: [AtomicU64; LADDER_CELLS],
+}
+
+/// Fixed-bucket histogram of seconds on the shared 1-2-5 ladder;
+/// recording is one relaxed atomic add into the value's cell.
+#[derive(Clone)]
+pub struct Hist(Arc<HistCells>);
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist(Arc::new(HistCells { counts: std::array::from_fn(|_| AtomicU64::new(0)) }))
+    }
+}
+
+impl Hist {
+    /// Count one observation of `secs` into its ladder cell.
+    pub fn record(&self, secs: f64) {
+        if enabled() {
+            self.0.counts[ladder_bucket(secs)].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A point-in-time copy of the cell counts.
+    pub fn counts(&self) -> [u64; LADDER_CELLS] {
+        std::array::from_fn(|i| self.0.counts[i].load(Ordering::Relaxed))
+    }
+
+    /// Total observations recorded so far.
+    pub fn total(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+
+    /// Bucket-upper-bound quantile — see [`quantile_of`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_of(&self.counts(), q)
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Hist(Hist),
+}
+
+fn metrics() -> &'static Mutex<BTreeMap<String, Metric>> {
+    static METRICS: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    METRICS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Register-or-fetch the counter named `name`. A name already taken by
+/// a different metric kind yields a detached (unregistered) handle —
+/// the caller still counts, the snapshot just cannot show it.
+pub fn counter(name: &str) -> Counter {
+    let mut map = metrics().lock().expect("metrics registry lock");
+    match map.entry(name.to_string()).or_insert_with(|| Metric::Counter(Counter::default())) {
+        Metric::Counter(c) => c.clone(),
+        _ => Counter::default(),
+    }
+}
+
+/// Register-or-fetch the gauge named `name` (see [`counter`]).
+pub fn gauge(name: &str) -> Gauge {
+    let mut map = metrics().lock().expect("metrics registry lock");
+    match map.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Gauge::default())) {
+        Metric::Gauge(g) => g.clone(),
+        _ => Gauge::default(),
+    }
+}
+
+/// Register-or-fetch the histogram named `name` (see [`counter`]).
+pub fn hist(name: &str) -> Hist {
+    let mut map = metrics().lock().expect("metrics registry lock");
+    match map.entry(name.to_string()).or_insert_with(|| Metric::Hist(Hist::default())) {
+        Metric::Hist(h) => h.clone(),
+        _ => Hist::default(),
+    }
+}
+
+/// One consistent JSON document of every registered metric: the map
+/// lock is held for the whole walk, so a registration cannot interleave
+/// with the snapshot (individual cells are relaxed loads — exact once
+/// the writers have quiesced, tested by the 8-thread property test).
+///
+/// Shape:
+/// `{"enabled":true,"ladder_bounds_s":[...],"counters":{...},
+///   "gauges":{...},"hists":{"name":{"total":N,"p50_s":...,"p95_s":...,
+///   "p99_s":...,"counts":[...]}}}`
+pub fn snapshot_json() -> String {
+    let map = metrics().lock().expect("metrics registry lock");
+    let mut counters = Vec::new();
+    let mut gauges = Vec::new();
+    let mut hists = Vec::new();
+    for (name, metric) in map.iter() {
+        match metric {
+            Metric::Counter(c) => counters.push(format!("{}:{}", json_string(name), c.get())),
+            Metric::Gauge(g) => gauges.push(format!("{}:{}", json_string(name), g.get())),
+            Metric::Hist(h) => {
+                let counts = h.counts();
+                let total: u64 = counts.iter().sum();
+                let cells: Vec<String> = counts.iter().map(u64::to_string).collect();
+                hists.push(format!(
+                    "{}:{{\"total\":{},\"p50_s\":{:?},\"p95_s\":{:?},\"p99_s\":{:?},\"counts\":[{}]}}",
+                    json_string(name),
+                    total,
+                    quantile_of(&counts, 0.5),
+                    quantile_of(&counts, 0.95),
+                    quantile_of(&counts, 0.99),
+                    cells.join(",")
+                ));
+            }
+        }
+    }
+    let bounds: Vec<String> = LADDER_BOUNDS.iter().map(|b| format!("{b:?}")).collect();
+    format!(
+        "{{\"enabled\":{},\"ladder_bounds_s\":[{}],\"counters\":{{{}}},\"gauges\":{{{}}},\"hists\":{{{}}}}}",
+        enabled(),
+        bounds.join(","),
+        counters.join(","),
+        gauges.join(","),
+        hists.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `set_enabled` is process-global, so the tests that flip it or
+    /// assert exact counts must not interleave.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().expect("registry test lock")
+    }
+
+    #[test]
+    fn ladder_edges_are_exact() {
+        // 1 µs is the FIRST bucket (bounds are inclusive upper bounds)
+        assert_eq!(ladder_bucket(1e-6), 0);
+        assert_eq!(ladder_bucket(1.5e-6), 1);
+        // 50 s is the last bounded bucket; anything beyond overflows
+        assert_eq!(ladder_bucket(5e1), LADDER_BOUNDS.len() - 1);
+        assert_eq!(ladder_bucket(50.0001), LADDER_BOUNDS.len());
+        assert_eq!(ladder_bucket(f64::INFINITY), LADDER_BOUNDS.len());
+        // zero and negative land in the first cell, never panic
+        assert_eq!(ladder_bucket(0.0), 0);
+        assert_eq!(ladder_bucket(-1.0), 0);
+    }
+
+    #[test]
+    fn hist_quantiles_match_the_serving_semantics() {
+        let _guard = test_lock();
+        let h = hist("test.registry.hist_quantiles");
+        assert_eq!(h.quantile(0.5), 0.0, "empty hist reports 0");
+        for _ in 0..90 {
+            h.record(1.5e-6); // -> 2 µs bucket
+        }
+        for _ in 0..10 {
+            h.record(0.3); // -> 0.5 s bucket
+        }
+        assert_eq!(h.total(), 100);
+        assert_eq!(h.quantile(0.5), 2e-6);
+        assert_eq!(h.quantile(0.99), 0.5);
+        h.record(1e4); // overflow reports 2x the last bound
+        assert_eq!(h.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn disabled_registry_stops_counting_but_keeps_snapshotting() {
+        let _guard = test_lock();
+        let c = counter("test.registry.disabled_counter");
+        c.add(3);
+        set_enabled(false);
+        c.add(100);
+        set_enabled(true);
+        c.inc();
+        assert_eq!(c.get(), 4);
+        assert!(snapshot_json().contains("\"test.registry.disabled_counter\":4"));
+    }
+
+    #[test]
+    fn same_name_returns_the_same_cell_and_kind_clash_detaches() {
+        let _guard = test_lock();
+        let a = counter("test.registry.shared");
+        let b = counter("test.registry.shared");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        // a gauge under a counter's name must not panic or corrupt it
+        let g = gauge("test.registry.shared");
+        g.set(-7);
+        assert_eq!(a.get(), 2);
+        assert!(snapshot_json().contains("\"test.registry.shared\":2"));
+    }
+}

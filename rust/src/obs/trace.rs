@@ -1,0 +1,199 @@
+//! Scoped trace spans → Chrome trace-event JSON.
+//!
+//! A [`Span`] is an RAII timer: created via [`span`], it records
+//! (name, category, thread, start, duration) into a **per-thread**
+//! buffer when dropped — no locking on the hot path. Buffers drain into
+//! a global list when their thread exits (every compute thread in this
+//! crate is scoped, so all spans are collected before a fit returns) or
+//! when [`write_chrome_trace`] flushes the calling thread explicitly.
+//!
+//! Tracing is off by default: until [`enable`] is called (the CLI does
+//! so for `--trace-out`), creating a span costs one relaxed atomic load
+//! and allocates nothing. The written file is the Chrome trace-event
+//! format — open it in `chrome://tracing` or Perfetto:
+//!
+//! ```text
+//! {"traceEvents":[{"name":"featurize","cat":"pipeline","ph":"X",
+//!                  "ts":1234,"dur":567,"pid":1,"tid":2}, ...]}
+//! ```
+//!
+//! Span naming convention: short stage verbs scoped by category —
+//! `cat:"pipeline"` for `chunk.read`/`featurize`/`absorb`/`eval`,
+//! `cat:"fit"` for `scatter`/`merge`/`solve`/`recover`, `cat:"dist"`
+//! for `register`/`scatter`/`shard N`/`recover`, `cat:"exec"` for
+//! `jobs`.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::events::json_string;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ORIGIN: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static DONE: Mutex<Vec<SpanRec>> = Mutex::new(Vec::new());
+
+struct SpanRec {
+    name: String,
+    cat: &'static str,
+    tid: u64,
+    ts_us: u64,
+    dur_us: u64,
+}
+
+/// Turn span collection on (idempotent). The first call pins the
+/// timeline origin; all `ts` values are microseconds since it.
+pub fn enable() {
+    ORIGIN.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Whether spans are being collected — one relaxed load.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+struct LocalBuf {
+    tid: u64,
+    recs: Vec<SpanRec>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        if !self.recs.is_empty() {
+            if let Ok(mut done) = DONE.lock() {
+                done.append(&mut self.recs);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        recs: Vec::new(),
+    });
+}
+
+/// An in-flight scoped timer; recording happens on drop. With tracing
+/// disabled this is `None` — no allocation, no clock read.
+pub struct Span(Option<OpenSpan>);
+
+struct OpenSpan {
+    name: String,
+    cat: &'static str,
+    start: Instant,
+}
+
+/// Open a span; it records when the returned guard drops.
+pub fn span(cat: &'static str, name: &str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(OpenSpan { name: name.to_string(), cat, start: Instant::now() }))
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(open) = self.0.take() else {
+            return;
+        };
+        let origin = *ORIGIN.get().expect("tracing enabled implies an origin");
+        let rec = SpanRec {
+            name: open.name,
+            cat: open.cat,
+            tid: 0, // assigned below from the thread-local
+            ts_us: open.start.duration_since(origin).as_micros() as u64,
+            dur_us: open.start.elapsed().as_micros() as u64,
+        };
+        LOCAL.with(|local| {
+            let mut buf = local.borrow_mut();
+            let tid = buf.tid;
+            buf.recs.push(SpanRec { tid, ..rec });
+        });
+    }
+}
+
+/// Drain the calling thread's buffer into the global list (scoped
+/// worker threads drain automatically at exit; the main thread calls
+/// this through [`write_chrome_trace`]).
+pub fn flush_thread() {
+    LOCAL.with(|local| {
+        let mut buf = local.borrow_mut();
+        if !buf.recs.is_empty() {
+            if let Ok(mut done) = DONE.lock() {
+                done.append(&mut buf.recs);
+            }
+        }
+    });
+}
+
+/// Write everything collected so far as one Chrome trace-event JSON
+/// document at `path`.
+pub fn write_chrome_trace(path: &str) -> Result<(), String> {
+    flush_thread();
+    let mut done = DONE.lock().map_err(|_| "trace buffer poisoned".to_string())?;
+    done.sort_by_key(|r| (r.ts_us, r.tid));
+    let events: Vec<String> = done
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
+                json_string(&r.name),
+                r.cat,
+                r.ts_us,
+                r.dur_us,
+                r.tid
+            )
+        })
+        .collect();
+    let doc = format!("{{\"traceEvents\":[{}]}}\n", events.join(","));
+    std::fs::write(path, doc).map_err(|e| format!("write trace {path:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_free_and_record_nothing() {
+        // tracing starts disabled in the test process unless another
+        // test enabled it; either way a dropped span must never panic
+        let s = span("test", "noop");
+        drop(s);
+    }
+
+    #[test]
+    fn spans_record_and_the_trace_is_valid_json() {
+        enable();
+        {
+            let _outer = span("test", "trace.outer");
+            let _inner = span("test", "trace.inner");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                let _s = span("test", "trace.worker");
+            });
+        });
+        let path = std::env::temp_dir()
+            .join(format!("gzk-trace-unit-{}.json", std::process::id()));
+        write_chrome_trace(path.to_str().expect("utf-8 temp path")).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::runtime::Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+        let names: Vec<&str> =
+            events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+        for want in ["trace.outer", "trace.inner", "trace.worker"] {
+            assert!(names.contains(&want), "missing span {want:?} in {names:?}");
+        }
+        for e in events {
+            assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
+            assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+            assert!(e.get("dur").and_then(|d| d.as_f64()).is_some());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

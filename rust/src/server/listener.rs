@@ -106,6 +106,12 @@ pub(crate) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         // connection budget: reply-and-close instead of stalling the
         // accept queue (a client that sees "retry":true may back off)
         if shared.active_conns.fetch_add(1, Ordering::AcqRel) >= shared.max_conns {
+            crate::obs::counter("server.conns_rejected").inc();
+            crate::obs::warn(
+                "server.listener",
+                "connection rejected: at the connection budget",
+                &[("max_conns", shared.max_conns.into())],
+            );
             let mut s = &stream;
             let _ = writeln!(
                 s,
@@ -284,13 +290,20 @@ fn read_loop(stream: TcpStream, shared: &Arc<Shared>, out: SyncSender<Outgoing>)
             Ok(wire::Request::Ping) => Outgoing::Line(wire::ping_reply()),
             Ok(wire::Request::Models) => Outgoing::Line(shared.router.models_reply()),
             Ok(wire::Request::Stats) => Outgoing::Line(shared.router.stats_reply()),
+            Ok(wire::Request::Metrics) => Outgoing::Line(wire::metrics_reply()),
             Ok(wire::Request::Shutdown) => {
                 if !peer_is_loopback && !shared.allow_remote_shutdown {
+                    crate::obs::warn(
+                        "server.listener",
+                        "shutdown refused from a non-loopback peer",
+                        &[],
+                    );
                     Outgoing::Line(wire::error_reply(
                         "shutdown refused from a non-loopback peer (the server \
                          must opt in with --allow-remote-shutdown)",
                     ))
                 } else {
+                    crate::obs::info("server.listener", "wire shutdown accepted", &[]);
                     let _ = out.send(Outgoing::Last(wire::shutdown_reply()));
                     shared.begin_shutdown();
                     break;

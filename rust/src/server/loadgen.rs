@@ -138,7 +138,11 @@ impl LoadgenReport {
     }
 
     /// Machine-readable results (the CI serving-smoke artifact).
-    /// Format 2 = format 1 plus the `replica_sweep` section.
+    /// Format 2 = format 1 plus the `replica_sweep` section; format 3
+    /// adds `latency_semantics` — loadgen percentiles are exact order
+    /// statistics, while the embedded `server_stats` percentiles are
+    /// bucket upper bounds on the recorded `bucket_ladder_s` (see
+    /// [`pct`] and `Router::stats_reply`).
     pub fn write_json(&self, path: &std::path::Path) -> Result<(), String> {
         fn trial_json(t: &TrialResult, prefix: &str) -> String {
             format!(
@@ -164,10 +168,17 @@ impl LoadgenReport {
             .iter()
             .map(|r| trial_json(&r.trial, &format!(r#""replicas":{},"#, r.replicas)))
             .collect();
+        let ladder: Vec<String> = crate::obs::registry::LADDER_BOUNDS
+            .iter()
+            .map(|b| format!("{b:?}"))
+            .collect();
         let text = format!(
             concat!(
-                r#"{{"format":2,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
-                r#""requests_per_client":{},"seed":{},"verified":{},"trials":[{}],"#,
+                r#"{{"format":3,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
+                r#""requests_per_client":{},"seed":{},"verified":{},"#,
+                r#""latency_semantics":{{"trials":"exact order statistics","#,
+                r#""server_stats":"bucket upper bound on bucket_ladder_s"}},"#,
+                r#""bucket_ladder_s":[{}],"trials":[{}],"#,
                 r#""replica_sweep":[{}]}}"#
             ),
             wire::json_string(&self.addr),
@@ -176,6 +187,7 @@ impl LoadgenReport {
             self.requests_per_client,
             self.seed,
             self.verified,
+            ladder.join(","),
             trials.join(","),
             sweep.join(",")
         );
@@ -216,6 +228,14 @@ fn served_models(conn: &mut ClientConn) -> Result<Vec<WireModel>, String> {
 }
 
 /// `sorted[len * num/den]` with the house clamp (see `print_latency_summary`).
+///
+/// **Percentile semantics** (the counterpart of `Router::stats_reply`):
+/// loadgen keeps every latency sample and reports the **exact** order
+/// statistic — no bucketing. The server's `stats` percentiles come from
+/// the fixed 1-2-5 ladder and quantize **up** to their bucket's upper
+/// bound, so for the same traffic `server p50 >= loadgen p50` by up to
+/// one ladder step (~2–2.5×). Both conventions, plus the ladder itself,
+/// are recorded in `BENCH_serve.json` so the two reports reconcile.
 fn pct(sorted: &[f64], num: usize, den: usize) -> f64 {
     sorted[(sorted.len() * num / den).min(sorted.len() - 1)]
 }

@@ -184,7 +184,7 @@ impl Server {
 
 /// Manifest poll: the hot-reload driver. Sleeps in short slices so
 /// shutdown stays prompt even with long poll intervals; reload reports
-/// go to stderr (the server's operational log).
+/// are info-level obs events (the server's operational log).
 fn poll_loop(shared: &Arc<Shared>, poll: Duration) {
     loop {
         let mut slept = Duration::ZERO;
@@ -202,10 +202,12 @@ fn poll_loop(shared: &Arc<Shared>, poll: Duration) {
         match shared.router.sync(false) {
             Ok(changes) => {
                 for c in changes {
-                    eprintln!("gzk server: {c}");
+                    crate::obs::info("server.reload", &c, &[]);
                 }
             }
-            Err(e) => eprintln!("gzk server: store poll failed: {e}"),
+            Err(e) => {
+                crate::obs::warn("server.reload", &format!("store poll failed: {e}"), &[]);
+            }
         }
     }
 }

@@ -361,6 +361,18 @@ impl Router {
     /// latency percentiles from the fixed-bucket histogram, and the
     /// admission queue state.
     ///
+    /// **Percentile semantics** (see also `loadgen::pct`, the client
+    /// side): `p50_us`/`p95_us`/`p99_us` here come from the fixed 1-2-5
+    /// bucket ladder ([`LADDER_BOUNDS`](crate::obs::registry::LADDER_BOUNDS))
+    /// and resolve to the **upper bound of the bucket** the rank lands
+    /// in — up to one ladder step (~2–2.5×) above the true order
+    /// statistic, by design (O(1) recording, bounded memory, cheap
+    /// snapshots). The loadgen harness instead keeps every sample and
+    /// reports **exact** order statistics, so its percentiles are
+    /// `<=` the server's for the same traffic; compare them knowing the
+    /// server quantizes up. `BENCH_serve.json` records the ladder so the
+    /// two are reconcilable offline.
+    ///
     /// [`ServeMetrics`]: crate::coordinator::ServeMetrics
     pub fn stats_reply(&self) -> String {
         let routes = self.routes.read().expect("routes lock");

@@ -10,6 +10,11 @@
 //! {"cmd":"models"}      list served models (name, kind, d, output_dim)
 //! {"cmd":"stats"}       per-model ServeMetrics + latency percentiles +
 //!                       admission queue depth / rejects
+//! {"cmd":"metrics"}     one consistent JSON snapshot of the process-wide
+//!                       observability registry (counters, gauges,
+//!                       latency histograms — see the `obs` module);
+//!                       answered locally by both `gzk server` and
+//!                       `gzk proxy`, never forwarded
 //! {"cmd":"ping"}        liveness probe
 //! {"cmd":"shutdown"}    stop the server after acking (honored from
 //!                       loopback peers only, unless the server was
@@ -42,6 +47,7 @@ pub enum Request {
     Predict { model: Option<String>, x: Vec<f64> },
     Models,
     Stats,
+    Metrics,
     Ping,
     Shutdown,
 }
@@ -82,10 +88,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         }
         "models" => Ok(Request::Models),
         "stats" => Ok(Request::Stats),
+        "metrics" => Ok(Request::Metrics),
         "ping" => Ok(Request::Ping),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!(
-            "unknown cmd {other:?}; known: predict, models, stats, ping, shutdown"
+            "unknown cmd {other:?}; known: predict, models, stats, metrics, ping, shutdown"
         )),
     }
 }
@@ -131,6 +138,12 @@ pub fn overload_reply(msg: &str) -> String {
 
 pub fn ping_reply() -> String {
     r#"{"ok":true,"pong":true}"#.to_string()
+}
+
+/// Reply to `metrics`: the process-wide registry snapshot, embedded
+/// verbatim (it is already one consistent JSON object).
+pub fn metrics_reply() -> String {
+    format!(r#"{{"ok":true,"metrics":{}}}"#, crate::obs::registry::snapshot_json())
 }
 
 pub fn shutdown_reply() -> String {
@@ -226,6 +239,7 @@ mod tests {
         }
         assert_eq!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), Request::Ping);
         assert_eq!(parse_request(&cmd_request("stats")).unwrap(), Request::Stats);
+        assert_eq!(parse_request(&cmd_request("metrics")).unwrap(), Request::Metrics);
         assert_eq!(parse_request(&cmd_request("shutdown")).unwrap(), Request::Shutdown);
         // model omitted: route to the single served model
         match parse_request(r#"{"cmd":"predict","x":[1,2]}"#).unwrap() {
@@ -243,6 +257,10 @@ mod tests {
         assert!(parsed.y().is_err());
         let o = parse_reply(&overload_reply("queue full")).unwrap();
         assert!(!o.ok && o.retry);
+        // the metrics reply embeds the registry snapshot as valid JSON
+        let m = parse_reply(&metrics_reply()).unwrap();
+        assert!(m.ok);
+        assert!(m.body.get("metrics").and_then(|j| j.get("counters")).is_some());
         // non-finite predictions degrade to an error, not a panic
         assert!(predict_reply("m", &[f64::NAN]).is_err());
         assert!(predict_reply("m", &[f64::INFINITY]).is_err());

@@ -254,6 +254,27 @@ fn proxy_balances_replicas_survives_a_death_and_fans_out_shutdown() {
     for field in ["\"uptime_s\":", "\"reloads\":", "\"total_rejects\":"] {
         assert!(stats.raw.contains(field), "missing {field}: {}", stats.raw);
     }
+    // the proxy splices its own per-replica counters into the same reply
+    let proxy_stats = stats.body.get("proxy").expect("stats reply carries a proxy section");
+    let replica_rows = proxy_stats.get("replicas").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(replica_rows.len(), 2);
+    for row in replica_rows {
+        for field in ["addr", "healthy", "forwarded", "strikes", "ejections", "retries"] {
+            assert!(row.get(field).is_some(), "replica row missing {field}: {}", stats.raw);
+        }
+    }
+
+    // `metrics` is answered by the proxy itself, never forwarded: the
+    // snapshot names this proxy's per-replica registry counters
+    let metrics = conn.roundtrip(&wire::cmd_request("metrics")).unwrap();
+    assert!(metrics.ok, "{metrics:?}");
+    let snap = metrics.body.get("metrics").expect("metrics reply carries a snapshot");
+    assert!(snap.get("counters").is_some() && snap.get("ladder_bounds_s").is_some());
+    assert!(
+        metrics.raw.contains("proxy.replica."),
+        "per-replica counters missing from: {}",
+        metrics.raw
+    );
 
     // kill one replica out from under the proxy: requests keep succeeding
     // over the survivor (transport failures strike the dead replica out)

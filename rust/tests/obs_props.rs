@@ -1,0 +1,185 @@
+//! Observability-layer properties: the registry under concurrent
+//! writers, the 1-2-5 histogram ladder at its edges, and — through the
+//! actual `gzk` binary — the "instrumentation is read-only" contract:
+//! a fit run with `--trace-out` produces a byte-identical artifact AND
+//! a valid Chrome trace, and CLI errors land in `--log-file` as
+//! parseable newline-JSON events.
+
+use gzk::obs::registry;
+use gzk::runtime::Json;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gzk"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gzk-obs-props-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn registry_snapshot_is_consistent_under_concurrent_writers() {
+    // 8 threads hammer one counter, one gauge and one histogram; every
+    // update must land and the snapshot must stay one valid JSON document
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 5_000;
+    let c = registry::counter("obsprops.hits");
+    let g = registry::gauge("obsprops.level");
+    let h = registry::hist("obsprops.lat_s");
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let (c, g, h) = (c.clone(), g.clone(), h.clone());
+            scope.spawn(move || {
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    g.add(if t % 2 == 0 { 1 } else { -1 });
+                    h.record(1e-6 * (i % 100 + 1) as f64);
+                }
+            });
+        }
+        // snapshots taken mid-flight must always parse
+        for _ in 0..20 {
+            let snap = registry::snapshot_json();
+            Json::parse(&snap).unwrap_or_else(|e| panic!("mid-flight snapshot invalid: {e}"));
+        }
+    });
+    assert_eq!(c.get(), (THREADS as u64) * PER_THREAD);
+    assert_eq!(g.get(), 0, "paired +1/-1 updates must cancel");
+    assert_eq!(h.total(), (THREADS as u64) * PER_THREAD);
+    let snap = Json::parse(&registry::snapshot_json()).expect("final snapshot parses");
+    let hits = snap
+        .get("counters")
+        .and_then(|c| c.get("obsprops.hits"))
+        .and_then(Json::as_f64)
+        .expect("counter in snapshot");
+    assert_eq!(hits as u64, (THREADS as u64) * PER_THREAD);
+}
+
+#[test]
+fn histogram_ladder_edges_round_trip() {
+    let h = registry::hist("obsprops.edges");
+    // exactly on the lowest bound: first cell, and its quantile reports
+    // that bound
+    h.record(1e-6);
+    assert_eq!(h.counts()[0], 1);
+    assert_eq!(h.quantile(0.5), registry::LADDER_BOUNDS[0]);
+    // exactly on the highest bound: last real cell, not overflow
+    h.record(50.0);
+    assert_eq!(h.counts()[registry::LADDER_CELLS - 2], 1);
+    // past the top: the overflow cell, reported as 2x the last bound
+    h.record(100.0);
+    assert_eq!(h.counts()[registry::LADDER_CELLS - 1], 1);
+    assert_eq!(h.quantile(1.0), 2.0 * registry::LADDER_BOUNDS[registry::LADDER_BOUNDS.len() - 1]);
+    // below the bottom still lands in the first cell
+    h.record(1e-9);
+    assert_eq!(h.counts()[0], 2);
+    assert_eq!(h.total(), 4);
+    // and the bucket function agrees with where the records landed
+    assert_eq!(registry::ladder_bucket(1e-6), 0);
+    assert_eq!(registry::ladder_bucket(50.0), registry::LADDER_CELLS - 2);
+    assert_eq!(registry::ladder_bucket(100.0), registry::LADDER_CELLS - 1);
+}
+
+#[test]
+fn traced_fit_is_bit_identical_and_the_trace_parses() {
+    // the acceptance check for "observability is read-only": the same fit
+    // with and without --trace-out must produce byte-identical artifacts,
+    // and the trace must be a valid Chrome trace-event document covering
+    // the fit stages
+    let plain = fresh_dir("plain");
+    let traced = fresh_dir("traced");
+    let trace_path = std::env::temp_dir()
+        .join(format!("gzk-obs-props-{}-trace.json", std::process::id()));
+    let fit = |dir: &PathBuf, extra: &[&str]| {
+        let mut args = vec![
+            "fit", "--model", "ridge", "--out", dir.to_str().unwrap(), "--n", "400", "--m",
+            "64", "--workers", "2", "--chunk-rows", "128", "--seed", "7",
+        ];
+        args.extend_from_slice(extra);
+        let out = bin().args(&args).output().expect("spawn gzk");
+        assert!(
+            out.status.success(),
+            "gzk {args:?} failed\nstderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    fit(&plain, &[]);
+    let stdout = fit(&traced, &["--trace-out", trace_path.to_str().unwrap()]);
+    assert!(stdout.contains("wrote trace"), "{stdout}");
+
+    let a = std::fs::read(plain.join("ridge.model.json")).expect("plain artifact");
+    let b = std::fs::read(traced.join("ridge.model.json")).expect("traced artifact");
+    assert_eq!(a, b, "tracing perturbed the fit artifact");
+
+    let text = std::fs::read_to_string(&trace_path).expect("trace file");
+    let doc = Json::parse(&text).expect("trace is valid JSON");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "trace has no spans");
+    let names: Vec<String> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str).map(str::to_string))
+        .collect();
+    for expected in ["featurize", "absorb", "solve", "scatter", "merge", "chunk.read"] {
+        assert!(names.iter().any(|n| n == expected), "no {expected:?} span in {names:?}");
+    }
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        assert!(e.get("cat").and_then(Json::as_str).is_some());
+    }
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_dir_all(&plain);
+    let _ = std::fs::remove_dir_all(&traced);
+}
+
+#[test]
+fn cli_errors_land_in_the_log_file_as_json_events() {
+    let log_path =
+        std::env::temp_dir().join(format!("gzk-obs-props-{}-events.log", std::process::id()));
+    let _ = std::fs::remove_file(&log_path);
+    // a malformed flag after --log-file took effect: the usage error is a
+    // structured event in the file, not bare stderr text (--out must be
+    // valid — fit checks it before parsing the featurizer flag group)
+    let out_dir = fresh_dir("logfile");
+    let out = bin()
+        .args([
+            "fit",
+            "--log-file",
+            log_path.to_str().unwrap(),
+            "--out",
+            out_dir.to_str().unwrap(),
+            "--m",
+            "10k24",
+        ])
+        .output()
+        .expect("spawn gzk");
+    assert_eq!(out.status.code(), Some(2));
+    let text = std::fs::read_to_string(&log_path).expect("log file written");
+    let line = text.lines().next().expect("at least one event");
+    let ev = Json::parse(line).expect("event line is valid JSON");
+    assert_eq!(ev.get("level").and_then(Json::as_str), Some("error"));
+    let msg = ev.get("msg").and_then(Json::as_str).expect("msg field");
+    assert!(msg.contains("argument error") && msg.contains("--m"), "{msg}");
+    assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+    let _ = std::fs::remove_file(&log_path);
+    let _ = std::fs::remove_dir_all(&out_dir);
+
+    // a bogus GZK_LOG value is a usage error naming the env var
+    let out = bin().args(["fit", "--n", "50"]).env("GZK_LOG", "loud").output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("GZK_LOG"), "{stderr}");
+
+    // --log-level filters: at error level an info-emitting run stays quiet
+    let out = bin()
+        .args(["fit", "--log-level", "bogus"])
+        .output()
+        .expect("spawn");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--log-level"));
+}
