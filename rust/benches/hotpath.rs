@@ -1,11 +1,16 @@
 //! Bench: hot-path microbenchmarks for the §Perf pass — featurization
 //! throughput for every method in the registry, the native Gegenbauer
-//! config sweep vs a pure-matmul roofline of equal flop count, plus the
-//! serving batcher's latency under load.
+//! config sweep vs a pure-matmul roofline of equal flop count, the
+//! microkernel GFLOP/s section (every hot linalg kernel vs its frozen
+//! pre-microkernel counterpart, bit-identity asserted) with the MR×NR×KC
+//! tile-geometry sweep, plus the serving batcher's latency under load.
 //!
 //! Besides the human-readable tables, the run emits a machine-readable
-//! `BENCH_hotpath.json` (format 4, path overridable via `GZK_BENCH_JSON`)
-//! with the per-method throughput rows, the serial-vs-parallel
+//! `BENCH_hotpath.json` (format 5, path overridable via `GZK_BENCH_JSON`)
+//! with the per-method throughput rows, the per-kernel GFLOP/s rows
+//! (naive vs microkernel, speedup ≥2x asserted for matmul/syrk) and the
+//! tile sweep (the run fails if the compiled-in default geometry is more
+//! than 10% behind the sweep winner), the serial-vs-parallel
 //! featurize+absorb comparison (threads, speedup, bit-identity check),
 //! the streamed-vs-materialized ridge fit comparison (throughput + peak
 //! feature-scratch bytes: the out-of-core pipeline's memory claim as a
@@ -25,6 +30,7 @@ use gzk::data::{pipeline, DataSource, SyntheticSource};
 use gzk::exec::Pool;
 use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use gzk::krr::{FeatureRidge, RidgeStats};
+use gzk::linalg::microkernel::{self, matmul_with_tile, naive};
 use gzk::linalg::Mat;
 use gzk::rng::Rng;
 use std::time::Duration;
@@ -60,7 +66,10 @@ fn registry_bench() -> Vec<MethodRow> {
     for method in Method::registry() {
         let spec = FeatureSpec::new(gaussian(), method.tuned(12, 2), budget, 1);
         let feat = spec.build_with_data(&x);
-        let timing = time_it(1, 5, || feat.featurize(&x));
+        // 3 warmup calls: one is not enough to fault in the feature
+        // scratch and settle the frequency governor, and a cold first
+        // timed rep skews a 5-rep median
+        let timing = time_it(3, 5, || feat.featurize(&x));
         let rows_per_s = n as f64 / timing.median;
         t.row(vec![
             feat.name().to_string(),
@@ -111,18 +120,222 @@ fn featurize_bench() {
     let feat = spec.build(d);
     let mut rng = Rng::new(3);
     let x = Mat::from_fn(n, d, |_, _| rng.normal() * 0.5);
-    let tf = time_it(1, 5, || feat.featurize(&x));
+    let tf = time_it(3, 5, || feat.featurize(&x));
     let flops_feat = (n * m * (d + 3 * q + 2 * q * s)) as f64;
     let k = (flops_feat / (2.0 * (n * m) as f64)).ceil() as usize;
     let a = Mat::from_fn(n, k, |_, _| rng.normal());
     let b = Mat::from_fn(k, m, |_, _| rng.normal());
-    let tm = time_it(1, 5, || a.matmul(&b));
+    let tm = time_it(3, 5, || a.matmul(&b));
     println!(
         "\nroofline: featurize {} vs equal-flop matmul {} -> efficiency {:.2}x",
         fmt_secs(tf.median),
         fmt_secs(tm.median),
         tm.median / tf.median
     );
+}
+
+struct GflopRow {
+    kernel: &'static str,
+    shape: String,
+    flops: f64,
+    naive_secs: f64,
+    micro_secs: f64,
+    naive_gflops: f64,
+    micro_gflops: f64,
+    speedup: f64,
+    bit_identical: bool,
+}
+
+/// One kernel of the GFLOP/s section: median-time the frozen pre-PR
+/// kernel and the microkernel on the same operands, assert the outputs
+/// bit-identical, and convert to GFLOP/s.
+fn gflop_row<T: PartialEq>(
+    kernel: &'static str,
+    shape: String,
+    flops: f64,
+    old: impl Fn() -> T,
+    new: impl Fn() -> T,
+) -> GflopRow {
+    let bit_identical = old() == new();
+    assert!(bit_identical, "{kernel}: microkernel drifted from the pre-PR kernel");
+    let tn = time_it(2, 3, &old);
+    let tm = time_it(2, 3, &new);
+    GflopRow {
+        kernel,
+        shape,
+        flops,
+        naive_secs: tn.median,
+        micro_secs: tm.median,
+        naive_gflops: flops / tn.median / 1e9,
+        micro_gflops: flops / tm.median / 1e9,
+        speedup: tn.median / tm.median,
+        bit_identical,
+    }
+}
+
+/// Every hot linalg kernel vs its frozen pre-microkernel counterpart at
+/// the paper-scale shape (n = 8192, F = 512), in GFLOP/s. Bit-identity
+/// is asserted per kernel — the speedup must come from scheduling the
+/// same arithmetic, never from reassociating it — and serial ↔ parallel
+/// identity is asserted on the real bench shapes. The ≥2x floor on
+/// matmul/syrk is the PR's acceptance bar.
+fn gflops_bench(pool: &Pool) -> Vec<GflopRow> {
+    println!("\n== microkernel GFLOP/s vs pre-microkernel kernels (n=8192, F=512) ==");
+    let (n, f) = (8192usize, 512usize);
+    let mut rng = Rng::new(9);
+    let a = Mat::from_fn(n, f, |_, _| rng.normal());
+    let b = Mat::from_fn(f, f, |_, _| rng.normal());
+    let a2 = a.row_block(0, 2048);
+    let c2 = Mat::from_fn(2048, f, |_, _| rng.normal());
+    let x: Vec<f64> = (0..f).map(|_| rng.normal()).collect();
+
+    // serial ↔ parallel bit-identity on the bench shapes themselves
+    assert!(a.matmul_p(&b, pool) == a.matmul(&b), "matmul parallel drifted from serial");
+    let mut g_ser = Mat::zeros(f, f);
+    a.syrk_into(&mut g_ser);
+    let mut g_par = Mat::zeros(f, f);
+    a.syrk_into_p(&mut g_par, pool);
+    assert!(g_ser == g_par, "syrk parallel drifted from serial");
+
+    let rows = vec![
+        gflop_row(
+            "matmul",
+            format!("({n}x{f})*({f}x{f})"),
+            2.0 * (n * f * f) as f64,
+            || naive::matmul_p(&a, &b, pool),
+            || a.matmul_p(&b, pool),
+        ),
+        gflop_row(
+            "matmul_nt",
+            format!("(2048x{f})*(2048x{f})^T"),
+            2.0 * (2048 * 2048 * f) as f64,
+            || naive::matmul_nt_p(&a2, &c2, pool),
+            || a2.matmul_nt_p(&c2, pool),
+        ),
+        gflop_row(
+            "matmul_tn",
+            format!("({n}x{f})^T*({n}x{f})"),
+            2.0 * (n * f * f) as f64,
+            || naive::matmul_tn_p(&a, &a, pool),
+            || a.matmul_tn_p(&a, pool),
+        ),
+        gflop_row(
+            "syrk",
+            format!("z^T z, z={n}x{f}"),
+            (n * f * (f + 1)) as f64,
+            || {
+                let mut g = Mat::zeros(f, f);
+                naive::syrk_flat_into_p(a.data(), f, &mut g, pool);
+                g
+            },
+            || {
+                let mut g = Mat::zeros(f, f);
+                a.syrk_into_p(&mut g, pool);
+                g
+            },
+        ),
+        gflop_row(
+            // serial on both sides: matvec is memory-bound and the row
+            // should show the register-blocking win, not the pool width
+            "matvec",
+            format!("({n}x{f})*x serial"),
+            2.0 * (n * f) as f64,
+            || naive::matvec(&a, &x),
+            || a.matvec(&x),
+        ),
+    ];
+
+    let mut t = Table::new(vec!["kernel", "shape", "old GF/s", "new GF/s", "speedup"]);
+    for r in &rows {
+        t.row(vec![
+            r.kernel.to_string(),
+            r.shape.clone(),
+            format!("{:.2}", r.naive_gflops),
+            format!("{:.2}", r.micro_gflops),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    t.print();
+    for r in &rows {
+        if r.kernel == "matmul" || r.kernel == "syrk" {
+            assert!(
+                r.speedup >= 2.0,
+                "{}: microkernel speedup {:.2}x is below the 2x acceptance floor",
+                r.kernel,
+                r.speedup
+            );
+        }
+    }
+    rows
+}
+
+struct TileSweepRow {
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    secs: f64,
+    gflops: f64,
+    is_default: bool,
+}
+
+fn matmul_tiled(mr: usize, nr: usize, a: &Mat, b: &Mat, kc: usize, pool: &Pool) -> Mat {
+    match (mr, nr) {
+        (4, 4) => matmul_with_tile::<4, 4>(a, b, kc, pool),
+        (8, 4) => matmul_with_tile::<8, 4>(a, b, kc, pool),
+        (8, 8) => matmul_with_tile::<8, 8>(a, b, kc, pool),
+        _ => unreachable!("unswept tile geometry {mr}x{nr}"),
+    }
+}
+
+/// Sweep the register-tile geometry (MR×NR) and the k cache depth (KC)
+/// over matmul at n = 4096, F = 512, asserting every geometry produces
+/// the exact default-path bits, and fail the run if the compiled-in
+/// default is more than 10% behind the sweep winner — the default must
+/// be re-tuned, not merely documented, when hardware moves.
+fn tile_sweep_bench(pool: &Pool) -> Vec<TileSweepRow> {
+    println!("\n== tile-geometry sweep: matmul (n=4096, F=512) ==");
+    let (n, f) = (4096usize, 512usize);
+    let mut rng = Rng::new(10);
+    let a = Mat::from_fn(n, f, |_, _| rng.normal());
+    let b = Mat::from_fn(f, f, |_, _| rng.normal());
+    let want = a.matmul_p(&b, pool);
+    let flops = 2.0 * (n * f * f) as f64;
+    let mut rows = Vec::new();
+    let mut t = Table::new(vec!["tile", "kc", "GF/s", "time/call"]);
+    for (mr, nr) in [(4usize, 4usize), (8, 4), (8, 8)] {
+        for kc in [128usize, 256, 512] {
+            let got = matmul_tiled(mr, nr, &a, &b, kc, pool);
+            assert!(got == want, "{mr}x{nr} kc={kc} drifted from the default path");
+            let timing = time_it(1, 3, || matmul_tiled(mr, nr, &a, &b, kc, pool));
+            let gflops = flops / timing.median / 1e9;
+            let is_default =
+                (mr, nr, kc) == (microkernel::MR, microkernel::NR, microkernel::KC);
+            t.row(vec![
+                format!("{mr}x{nr}"),
+                kc.to_string(),
+                format!("{gflops:.2}"),
+                fmt_secs(timing.median),
+            ]);
+            rows.push(TileSweepRow { mr, nr, kc, secs: timing.median, gflops, is_default });
+        }
+    }
+    t.print();
+    let best = rows.iter().map(|r| r.gflops).fold(0.0, f64::max);
+    let default =
+        rows.iter().find(|r| r.is_default).expect("default geometry missing from sweep");
+    println!(
+        "default {}x{} kc={} at {:.2} GF/s vs sweep winner {best:.2} GF/s",
+        default.mr, default.nr, default.kc, default.gflops
+    );
+    assert!(
+        default.gflops >= 0.90 * best,
+        "default tile {}x{} kc={} ({:.2} GF/s) is >10% behind the sweep winner ({best:.2} GF/s)",
+        default.mr,
+        default.nr,
+        default.kc,
+        default.gflops
+    );
+    rows
 }
 
 struct ParallelStats {
@@ -352,6 +565,8 @@ fn serving_bench() -> ServingStats {
 /// Emit the machine-readable results (CI uploads this as an artifact).
 fn write_json(
     methods: &[MethodRow],
+    gflops: &[GflopRow],
+    tiles: &[TileSweepRow],
     parallel: &ParallelStats,
     streaming: &StreamingStats,
     obs: &ObsOverheadStats,
@@ -368,9 +583,45 @@ fn write_json(
             )
         })
         .collect();
+    let gflop_rows: Vec<String> = gflops
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    r#"{{"kernel":"{}","shape":"{}","flops":{:e},"#,
+                    r#""naive_secs":{:e},"micro_secs":{:e},"#,
+                    r#""naive_gflops":{:.2},"micro_gflops":{:.2},"#,
+                    r#""speedup":{:.2},"bit_identical":{}}}"#
+                ),
+                r.kernel,
+                r.shape,
+                r.flops,
+                r.naive_secs,
+                r.micro_secs,
+                r.naive_gflops,
+                r.micro_gflops,
+                r.speedup,
+                r.bit_identical
+            )
+        })
+        .collect();
+    let tile_rows: Vec<String> = tiles
+        .iter()
+        .map(|r| {
+            format!(
+                r#"{{"mr":{},"nr":{},"kc":{},"secs":{:e},"gflops":{:.2},"default":{}}}"#,
+                r.mr, r.nr, r.kc, r.secs, r.gflops, r.is_default
+            )
+        })
+        .collect();
+    let winner_gflops = tiles.iter().map(|r| r.gflops).fold(0.0, f64::max);
+    let default_gflops =
+        tiles.iter().find(|r| r.is_default).map(|r| r.gflops).unwrap_or(0.0);
     let text = format!(
         concat!(
-            r#"{{"format":4,"bench":"hotpath","methods":[{}],"#,
+            r#"{{"format":5,"bench":"hotpath","methods":[{}],"#,
+            r#""gflops":[{}],"#,
+            r#""tile_sweep":{{"rows":[{}],"default_gflops":{:.2},"winner_gflops":{:.2}}},"#,
             r#""parallel":{{"threads":{},"serial_secs":{:e},"par_secs":{:e},"speedup":{:.2},"bit_identical":{}}},"#,
             r#""streaming":{{"n":{},"m":{},"chunk_rows":{},"streamed_secs":{:e},"materialized_secs":{:e},"#,
             r#""streamed_rows_per_s":{:.1},"materialized_rows_per_s":{:.1},"#,
@@ -379,6 +630,10 @@ fn write_json(
             r#""serving":{{"req_per_s":{:.1},"p50_us":{:.2},"p99_us":{:.2},"batches":{},"max_batch":{}}}}}"#
         ),
         method_rows.join(","),
+        gflop_rows.join(","),
+        tile_rows.join(","),
+        default_gflops,
+        winner_gflops,
         parallel.threads,
         parallel.serial_secs,
         parallel.par_secs,
@@ -411,9 +666,12 @@ fn write_json(
 fn main() {
     let methods = registry_bench();
     featurize_bench();
+    let pool = Pool::global();
+    let gflops = gflops_bench(&pool);
+    let tiles = tile_sweep_bench(&pool);
     let parallel = parallel_bench();
     let streaming = streaming_bench();
     let obs = obs_overhead_bench();
     let serving = serving_bench();
-    write_json(&methods, &parallel, &streaming, &obs, &serving);
+    write_json(&methods, &gflops, &tiles, &parallel, &streaming, &obs, &serving);
 }

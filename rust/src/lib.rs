@@ -6,7 +6,9 @@
 //!
 //! * **Substrates** — everything the paper's system depends on, built from
 //!   scratch: special functions ([`special`]), a PRNG ([`rng`]), dense
-//!   linear algebra ([`linalg`]), the parallel execution engine ([`exec`]:
+//!   linear algebra ([`linalg`], its hot products running on the
+//!   register-blocked, cache-tiled [`linalg::microkernel`] engine),
+//!   the parallel execution engine ([`exec`]:
 //!   one thread pool + row-scatter primitives every layer draws from, with
 //!   bit-identical results at every thread count), exact kernels
 //!   ([`kernels`]), the data layer ([`data`]): synthetic generators

@@ -1,15 +1,20 @@
-//! Row-major dense f64 matrix with blocked kernels.
+//! Row-major dense f64 matrix over the microkernel engine.
 //!
-//! Every hot kernel (`matmul` / `matmul_nt` / `matmul_tn` / `syrk_into` /
-//! `matvec`) is written as a *block body* over a contiguous range of
-//! output rows; the serial entry point runs the body once over the whole
-//! range and the `_p` variant scatters disjoint ranges across a
-//! [`Pool`](crate::exec::Pool). Because each output cell is produced by
-//! exactly one worker running the exact serial inner loop — the reduction
-//! order per output tile is fixed — the parallel kernels are
-//! **bit-identical** to the serial ones for every thread count
-//! (property-tested in `tests/exec_props.rs`).
+//! The hot products (`matmul` / `matmul_nt` / `matmul_tn` / `syrk_into` /
+//! `matvec`) keep their PR-3 block-body shape — the serial entry point is
+//! the `_p` variant on [`Pool::serial`], and the `_p` variant scatters
+//! disjoint output-row ranges across a [`Pool`](crate::exec::Pool) — but
+//! the block body itself is now the register-blocked, cache-tiled
+//! [`microkernel`](super::microkernel) engine (DESIGN.md §2d): packed
+//! operand panels, an MR×NR accumulator tile in locals for the
+//! autovectorizer, and KC-deep k tiling. All tiling lives *inside* the
+//! per-cell ownership boundary — each output cell has exactly one owner
+//! and a fixed k-ascending reduction order — so the parallel kernels
+//! remain **bit-identical** to the serial ones at every thread count
+//! (property-tested in `tests/exec_props.rs` and, 0 ULP against the
+//! frozen pre-microkernel kernels, in `tests/linalg_props.rs`).
 
+use super::microkernel::{self, Gemm};
 use crate::exec::Pool;
 
 /// Dense row-major matrix.
@@ -88,37 +93,30 @@ impl Mat {
         Mat::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
     }
 
+    /// Cache-blocked transpose: TB×TB tiles keep both the source rows and
+    /// the destination columns inside a handful of cache lines, instead of
+    /// striding a full output column per source row.
     pub fn transpose(&self) -> Mat {
+        const TB: usize = 32;
         let mut out = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out[(j, i)] = self[(i, j)];
+        for i0 in (0..self.rows).step_by(TB) {
+            let i1 = (i0 + TB).min(self.rows);
+            for j0 in (0..self.cols).step_by(TB) {
+                let j1 = (j0 + TB).min(self.cols);
+                for i in i0..i1 {
+                    let row = &self.data[i * self.cols + j0..i * self.cols + j1];
+                    let mut o = j0 * self.rows + i;
+                    for &v in row {
+                        out.data[o] = v;
+                        o += self.rows;
+                    }
+                }
             }
         }
         out
     }
 
-    /// Output rows [lo, hi) of self * other into `block` (a (hi-lo) x n
-    /// slice of the product). i-k-j loop order: streams `other` rows,
-    /// accumulates into out rows in fixed k-ascending order.
-    fn matmul_block(&self, other: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
-        let (k, n) = (self.cols, other.cols);
-        for i in lo..hi {
-            let a_row = self.row(i);
-            let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
-            for (kk, &aik) in a_row.iter().enumerate().take(k) {
-                if aik == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in out_row.iter_mut().zip(b_row) {
-                    *o += aik * b;
-                }
-            }
-        }
-    }
-
-    /// self * other, blocked over k for cache friendliness.
+    /// self * other through the microkernel engine.
     pub fn matmul(&self, other: &Mat) -> Mat {
         self.matmul_p(other, &Pool::serial())
     }
@@ -129,27 +127,9 @@ impl Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, n) = (self.rows, other.cols);
         let mut out = Mat::zeros(m, n);
-        pool.par_chunks(m, &mut out.data, |lo, hi, block| {
-            self.matmul_block(other, lo, hi, block)
-        });
+        let gemm = Gemm::matmul(self, other);
+        pool.par_chunks(m, &mut out.data, |lo, hi, block| gemm.run_default(lo, hi, block));
         out
-    }
-
-    /// Output rows [lo, hi) of self * other^T into `block`.
-    fn matmul_nt_block(&self, other: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
-        let (n, k) = (other.rows, self.cols);
-        for i in lo..hi {
-            let a = self.row(i);
-            let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
-            for j in 0..n {
-                let b = other.row(j);
-                let mut acc = 0.0;
-                for t in 0..k {
-                    acc += a[t] * b[t];
-                }
-                out_row[j] = acc;
-            }
-        }
     }
 
     /// self * other^T — the featurizer's shape (rows x rows dot products).
@@ -162,31 +142,9 @@ impl Mat {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
         let (m, n) = (self.rows, other.rows);
         let mut out = Mat::zeros(m, n);
-        pool.par_chunks(m, &mut out.data, |lo, hi, block| {
-            self.matmul_nt_block(other, lo, hi, block)
-        });
+        let gemm = Gemm::matmul_nt(self, other);
+        pool.par_chunks(m, &mut out.data, |lo, hi, block| gemm.run_default(lo, hi, block));
         out
-    }
-
-    /// Output rows [lo, hi) of self^T * other into `block`. The reduction
-    /// over t runs in fixed ascending order for every cell, so any row
-    /// partition of the output yields bit-identical results.
-    fn matmul_tn_block(&self, other: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
-        let (k, n) = (self.rows, other.cols);
-        for t in 0..k {
-            let a = self.row(t);
-            let b = other.row(t);
-            for i in lo..hi {
-                let ai = a[i];
-                if ai == 0.0 {
-                    continue;
-                }
-                let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
-                for (o, &bj) in out_row.iter_mut().zip(b) {
-                    *o += ai * bj;
-                }
-            }
-        }
     }
 
     /// self^T * other (k x m)(k x n) -> (m x n); used for Z^T Z reductions.
@@ -199,9 +157,8 @@ impl Mat {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
         let (m, n) = (self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        pool.par_chunks(m, &mut out.data, |lo, hi, block| {
-            self.matmul_tn_block(other, lo, hi, block)
-        });
+        let gemm = Gemm::matmul_tn(self, other);
+        pool.par_chunks(m, &mut out.data, |lo, hi, block| gemm.run_default(lo, hi, block));
         out
     }
 
@@ -236,27 +193,46 @@ impl Mat {
     pub fn matvec_p(&self, x: &[f64], pool: &Pool) -> Vec<f64> {
         assert_eq!(self.cols, x.len());
         let mut out = vec![0.0; self.rows];
-        pool.par_chunks(self.rows, &mut out, |lo, _hi, block| {
-            for (r, o) in block.iter_mut().enumerate() {
-                *o = self.row(lo + r).iter().zip(x).map(|(&a, &b)| a * b).sum();
-            }
+        pool.par_chunks(self.rows, &mut out, |lo, hi, block| {
+            microkernel::matvec_block(&self.data, self.cols, x, lo, hi, block)
         });
         out
     }
 
     /// self^T x (length rows) -> length cols.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_t_p(x, &Pool::serial())
+    }
+
+    /// Parallel [`matvec_t`](Mat::matvec_t): output *columns* scattered
+    /// across the pool. Each worker streams every row of `self` but only
+    /// touches its own column range, so per output cell the reduction
+    /// over rows runs in the same ascending order (with the same `xi == 0`
+    /// skip) as the serial kernel — bit-identical at every thread count.
+    pub fn matvec_t_p(&self, x: &[f64], pool: &Pool) -> Vec<f64> {
         assert_eq!(self.rows, x.len());
         let mut out = vec![0.0; self.cols];
+        if self.cols == 0 {
+            return out;
+        }
+        pool.par_chunks(self.cols, &mut out, |lo, hi, block| {
+            self.matvec_t_block(x, lo, hi, block)
+        });
+        out
+    }
+
+    /// Output columns [lo, hi) of self^T x — the shared serial/parallel
+    /// block body of [`matvec_t`](Mat::matvec_t).
+    fn matvec_t_block(&self, x: &[f64], lo: usize, hi: usize, out: &mut [f64]) {
         for (i, &xi) in x.iter().enumerate() {
             if xi == 0.0 {
                 continue;
             }
-            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+            let row = &self.row(i)[lo..hi];
+            for (o, &a) in out.iter_mut().zip(row) {
                 *o += xi * a;
             }
         }
-        out
     }
 
     pub fn add_assign(&mut self, other: &Mat) {
@@ -292,8 +268,17 @@ impl Mat {
             .fold(0.0, f64::max)
     }
 
-    /// Operator (spectral) norm via power iteration on self^T self.
+    /// Operator (spectral) norm via power iteration on self^T self,
+    /// sized-to-shape pool (see [`Pool::for_rows`]).
     pub fn op_norm_est(&self, iters: usize) -> f64 {
+        self.op_norm_est_p(iters, &Pool::for_rows(self.rows.max(self.cols)))
+    }
+
+    /// [`op_norm_est`](Mat::op_norm_est) on an explicit pool: both halves
+    /// of the iteration run the pooled matvec / matvec_t kernels, which
+    /// are bit-identical to serial, so the estimate does not depend on
+    /// the pool width.
+    pub fn op_norm_est_p(&self, iters: usize, pool: &Pool) -> f64 {
         let n = self.cols;
         if n == 0 || self.rows == 0 {
             return 0.0;
@@ -301,8 +286,8 @@ impl Mat {
         let mut v: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 + 0.1).collect();
         let mut norm = 0.0;
         for _ in 0..iters {
-            let av = self.matvec(&v);
-            let atav = self.matvec_t(&av);
+            let av = self.matvec_p(&v, pool);
+            let atav = self.matvec_t_p(&av, pool);
             norm = atav.iter().map(|x| x * x).sum::<f64>().sqrt();
             if norm < 1e-300 {
                 return 0.0;
@@ -315,30 +300,12 @@ impl Mat {
     }
 }
 
-/// Accumulate output rows [lo, hi) of the rank-k update z^T z into `block`
-/// (upper triangle only; per-cell reduction over the rows of `z` in fixed
-/// ascending order), where `z` is a flat row-major buffer of `f`-wide rows.
-fn syrk_flat_block(z: &[f64], f: usize, lo: usize, hi: usize, block: &mut [f64]) {
-    for zrow in z.chunks_exact(f) {
-        for i in lo..hi {
-            let zi = zrow[i];
-            if zi == 0.0 {
-                continue;
-            }
-            let out_row = &mut block[(i - lo) * f..(i - lo) * f + f];
-            // only upper triangle, mirrored below
-            for j in i..f {
-                out_row[j] += zi * zrow[j];
-            }
-        }
-    }
-}
-
 /// [`Mat::syrk_into_p`] over a flat row-major buffer of `f`-wide rows —
 /// the out-of-core chunk path accumulates `Z^T Z` straight from its reused
 /// scratch slice without wrapping it in a `Mat`. Because each output cell
-/// accumulates over the rows of `z` in fixed ascending order, feeding the
-/// same rows in any chunking produces bit-identical sums (the
+/// accumulates over the rows of `z` in fixed ascending order (tiling never
+/// crosses the per-cell boundary — see the microkernel module docs),
+/// feeding the same rows in any chunking produces bit-identical sums (the
 /// chunk-invariance contract of `data::pipeline`).
 pub fn syrk_flat_into_p(z: &[f64], f: usize, out: &mut Mat, pool: &Pool) {
     assert_eq!(out.rows, f, "syrk: output shape mismatch");
@@ -347,10 +314,9 @@ pub fn syrk_flat_into_p(z: &[f64], f: usize, out: &mut Mat, pool: &Pool) {
         return;
     }
     assert_eq!(z.len() % f, 0, "syrk: buffer is not a whole number of rows");
+    let gemm = Gemm::syrk(z, f);
     let bounds = triangle_bounds(f, pool.threads());
-    pool.scatter_rows(&bounds, &mut out.data, |lo, hi, block| {
-        syrk_flat_block(z, f, lo, hi, block)
-    });
+    pool.scatter_rows(&bounds, &mut out.data, |lo, hi, block| gemm.run_default(lo, hi, block));
 }
 
 /// Partition `0..f` into at most `parts` contiguous ranges of ~equal
@@ -358,7 +324,7 @@ pub fn syrk_flat_into_p(z: &[f64], f: usize, out: &mut Mat, pool: &Pool) {
 /// row counts would leave the first worker with most of the work). The
 /// partition only affects load balance, never values — each cell is
 /// computed identically in any chunk.
-fn triangle_bounds(f: usize, parts: usize) -> Vec<usize> {
+pub(crate) fn triangle_bounds(f: usize, parts: usize) -> Vec<usize> {
     let parts = parts.clamp(1, f.max(1));
     let total = (f * (f + 1)) as f64 / 2.0;
     let mut bounds = Vec::with_capacity(parts + 1);
@@ -457,6 +423,24 @@ mod tests {
     }
 
     #[test]
+    fn blocked_transpose_exact() {
+        // shapes that exercise whole tiles, partial edge tiles and the
+        // degenerate thin cases of the 32x32-blocked transpose
+        for (r, c) in [(1usize, 1usize), (3, 97), (32, 32), (33, 31), (70, 5), (64, 64)] {
+            let a = Mat::from_fn(r, c, |i, j| (i * c + j) as f64 + 0.25);
+            let t = a.transpose();
+            assert_eq!(t.rows(), c);
+            assert_eq!(t.cols(), r);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(a[(i, j)].to_bits(), t[(j, i)].to_bits(), "({i},{j}) r={r} c={c}");
+                }
+            }
+            assert_eq!(a, t.transpose(), "double transpose r={r} c={c}");
+        }
+    }
+
+    #[test]
     fn op_norm_of_diagonal() {
         let mut m = Mat::zeros(4, 4);
         m[(0, 0)] = 3.0;
@@ -464,6 +448,18 @@ mod tests {
         m[(2, 2)] = 2.0;
         let est = m.op_norm_est(50);
         assert!((est - 7.0).abs() < 1e-6, "{est}");
+    }
+
+    #[test]
+    fn op_norm_pool_invariant() {
+        let mut rng = Rng::new(11);
+        let a = random(&mut rng, 40, 23);
+        let serial = a.op_norm_est_p(25, &Pool::serial());
+        for threads in [2usize, 3, 8] {
+            let est = a.op_norm_est_p(25, &Pool::new(threads));
+            assert_eq!(serial.to_bits(), est.to_bits(), "threads={threads}");
+        }
+        assert_eq!(serial.to_bits(), a.op_norm_est(25).to_bits());
     }
 
     #[test]
@@ -504,10 +500,12 @@ mod tests {
         let b = random(&mut rng, 7, 11);
         let c = random(&mut rng, 17, 7);
         let x: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let xt: Vec<f64> = (0..13).map(|_| rng.normal()).collect();
         let serial_mm = a.matmul(&b);
         let serial_nt = a.matmul_nt(&c);
         let serial_tn = a.matmul_tn(&a);
         let serial_mv = a.matvec(&x);
+        let serial_mvt = a.matvec_t(&xt);
         let mut serial_g = Mat::zeros(7, 7);
         a.syrk_into(&mut serial_g);
         for threads in [1usize, 2, 3, 5, 8, 32] {
@@ -516,6 +514,7 @@ mod tests {
             assert_eq!(serial_nt, a.matmul_nt_p(&c, &pool), "matmul_nt threads={threads}");
             assert_eq!(serial_tn, a.matmul_tn_p(&a, &pool), "matmul_tn threads={threads}");
             assert_eq!(serial_mv, a.matvec_p(&x, &pool), "matvec threads={threads}");
+            assert_eq!(serial_mvt, a.matvec_t_p(&xt, &pool), "matvec_t threads={threads}");
             let mut g = Mat::zeros(7, 7);
             a.syrk_into_p(&mut g, &pool);
             assert_eq!(serial_g, g, "syrk threads={threads}");

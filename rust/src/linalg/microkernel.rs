@@ -1,0 +1,614 @@
+//! Register-blocked, cache-tiled microkernel engine for the dense hot
+//! path (DESIGN.md §2d).
+//!
+//! Every dense product in the system — `matmul` / `matmul_nt` /
+//! `matmul_tn` / SYRK / `matvec` — funnels into [`Gemm`]: one driver that
+//! views each operand as a K×W panel in k-major orientation ([`Panel`]),
+//! packs the operand panels contiguously, and updates the output through
+//! an MR×NR register tile ([`tile_kernel`]) whose inner loop streams the
+//! packed panels with `chunks_exact`, so the autovectorizer emits packed
+//! multiply/add over the NR accumulator lanes.
+//!
+//! **Why tiling preserves bit-identity.** The PR-3 contract — parallel
+//! kernels bit-identical to serial at every thread count, and the
+//! `data::pipeline` chunk-invariance contract on top — pins, for every
+//! output cell, a single owner and a fixed k-ascending reduction order.
+//! The microkernels keep both invariants by construction:
+//!
+//! * Register blocking groups *cells* (an MR×NR tile of independent
+//!   accumulators), never the reduction: each accumulator still receives
+//!   its `a[k] * b[k]` contributions one at a time in ascending k. SIMD
+//!   lanes run across the NR output columns, so vector width cannot
+//!   change any cell's rounding sequence.
+//! * Cache tiling over k (KC-deep panels) spills the accumulator tile to
+//!   the output cell between panels and reloads it for the next one.
+//!   An f64 store/load is exact, so `(((c + p0) + p1) + p2)…` is the same
+//!   value chain whether the accumulator lives in a register for the
+//!   whole reduction or round-trips through memory at panel boundaries.
+//!   The same argument is what already made SYRK bit-invariant to the
+//!   pipeline's `chunk_rows`.
+//! * Remainder edges (rows past the last MR tile, columns past the last
+//!   NR panel, diagonal-straddling SYRK tiles) run a scalar tail that
+//!   performs the *identical* per-cell operation sequence — load cell,
+//!   ascending multiply-adds, store cell — so a cell's bits do not depend
+//!   on which worker's tile grid it lands in. That is what keeps the
+//!   parallel row partition (whose tile grid is aligned to each worker's
+//!   `lo`, not to row 0) bit-identical to the serial kernel.
+//! * Packing is a pure copy; it never reassociates anything.
+//!
+//! **The `== 0.0` skips are gone — symmetrically.** The pre-microkernel
+//! `matmul`/`matmul_tn`/SYRK bodies skipped zero multiplier entries; a
+//! branch per k step would defeat the vectorizer, so both the serial and
+//! the parallel path (one body serves both) now add every `a[k] * b[k]`
+//! term. For finite inputs this is bit-exact with the skipping kernels:
+//! the skipped terms are `±0.0 * b` = `±0.0`, and `acc + ±0.0 == acc`
+//! for every accumulator reachable from a `+0.0` start (a running sum
+//! seeded at `+0.0` can never become `-0.0`). Only non-finite inputs
+//! (where `0.0 * inf` is `NaN`) could observe the difference; every data
+//! path validates finiteness at the boundary. The frozen pre-PR kernels
+//! live on in [`naive`] as the property-test reference and the bench
+//! baseline, and `tests/linalg_props.rs` asserts 0-ULP agreement across
+//! shape sweeps, thread counts, tile geometries and KC depths.
+//!
+//! The default geometry is [`MR`]×[`NR`] with [`KC`]-deep panels — sized
+//! for the baseline x86-64 target (16 SIMD registers: a 4×4 f64 tile
+//! leaves room for the broadcast and panel loads). `benches/hotpath.rs`
+//! sweeps MR×NR ∈ {4×4, 8×4, 8×8} × KC ∈ {128, 256, 512} through
+//! [`matmul_with_tile`] and fails if this default is not within 10% of
+//! the sweep winner on the bench host.
+
+use super::matrix::triangle_bounds;
+use crate::exec::Pool;
+use crate::linalg::Mat;
+
+/// Default register-tile rows (accumulator tile height).
+pub const MR: usize = 4;
+/// Default register-tile columns (accumulator tile width — the SIMD axis).
+pub const NR: usize = 4;
+/// Default k-panel depth: `KC * NR * 8` bytes of packed B per panel stay
+/// cache-resident while a row block streams over them.
+pub const KC: usize = 256;
+
+/// One GEMM operand, viewed as a K×W matrix in k-major orientation: the
+/// reduction index `kk` runs over K, the panel index `w` over W output
+/// rows (the A operand) or output columns (the B operand).
+#[derive(Clone, Copy)]
+enum Panel<'a> {
+    /// Panel entries are *rows* of a row-major (W_total × K) matrix:
+    /// element `(kk, w)` is `data[w * k + kk]`. Packing transposes.
+    Rows { data: &'a [f64], k: usize },
+    /// Panel entries are *columns* of a row-major (K × stride) matrix:
+    /// element `(kk, w)` is `data[kk * stride + w]`. Already k-major;
+    /// packing gathers contiguous row segments.
+    Cols { data: &'a [f64], stride: usize },
+}
+
+impl Panel<'_> {
+    #[inline(always)]
+    fn at(&self, kk: usize, w: usize) -> f64 {
+        match *self {
+            Panel::Rows { data, k } => data[w * k + kk],
+            Panel::Cols { data, stride } => data[kk * stride + w],
+        }
+    }
+
+    /// Append the `W`-wide panel starting at `w0`, rows `kc0 .. kc0+kcl`
+    /// of the reduction, to `out` in k-major layout (`out[kk * W + w]`).
+    fn pack_append<const W: usize>(&self, w0: usize, kc0: usize, kcl: usize, out: &mut Vec<f64>) {
+        let base = out.len();
+        match *self {
+            Panel::Rows { data, k } => {
+                out.resize(base + kcl * W, 0.0);
+                let dst = &mut out[base..];
+                for w in 0..W {
+                    let row = &data[(w0 + w) * k + kc0..(w0 + w) * k + kc0 + kcl];
+                    for (kk, &v) in row.iter().enumerate() {
+                        dst[kk * W + w] = v;
+                    }
+                }
+            }
+            Panel::Cols { data, stride } => {
+                out.reserve(kcl * W);
+                for kk in kc0..kc0 + kcl {
+                    let s = kk * stride + w0;
+                    out.extend_from_slice(&data[s..s + W]);
+                }
+            }
+        }
+    }
+
+    /// Pack panels `[p0, p1)` (each `W` wide, at `w0 = p * W`) for the
+    /// `kc0 .. kc0+kcl` reduction window, back to back.
+    fn pack_range<const W: usize>(
+        &self,
+        p0: usize,
+        p1: usize,
+        kc0: usize,
+        kcl: usize,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        for p in p0..p1 {
+            self.pack_append::<W>(p * W, kc0, kcl, out);
+        }
+    }
+}
+
+/// The MR×NR register microkernel: load the output tile, stream the two
+/// packed panels in lockstep over the `kcl` reduction steps, store the
+/// tile back. `apack` is `kcl × MRV` k-major, `bpack` is `kcl × NRV`
+/// k-major, `c` points at the tile's top-left cell with row stride `ldc`.
+///
+/// The `chunks_exact` iteration hands the optimizer fixed-size rows, the
+/// MRV×NRV accumulator array lives in registers after unrolling, and the
+/// NRV-wide inner loop is the packed-SIMD axis. Per accumulator the
+/// reduction is a plain ascending `acc += a * b` chain — exactly the
+/// scalar kernels' order.
+#[inline]
+fn tile_kernel<const MRV: usize, const NRV: usize>(
+    apack: &[f64],
+    bpack: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f64; NRV]; MRV];
+    for (arow, crow) in acc.iter_mut().zip(c.chunks(ldc)) {
+        arow.copy_from_slice(&crow[..NRV]);
+    }
+    for (ap, bp) in apack.chunks_exact(MRV).zip(bpack.chunks_exact(NRV)) {
+        for (&av, arow) in ap.iter().zip(acc.iter_mut()) {
+            for (cv, &bv) in arow.iter_mut().zip(bp) {
+                *cv += av * bv;
+            }
+        }
+    }
+    for (arow, crow) in acc.iter().zip(c.chunks_mut(ldc)) {
+        crow[..NRV].copy_from_slice(arow);
+    }
+}
+
+/// A dense product `C += A^T-view · B-view` over k-major operand panels —
+/// the one engine behind `matmul`, `matmul_nt`, `matmul_tn` and SYRK.
+///
+/// A `Gemm` is a cheap borrowed descriptor; [`Gemm::run_default`] is the
+/// block body handed to [`Pool::par_chunks`] / [`Pool::scatter_rows`] by
+/// the `Mat` entry points, computing output rows `[lo, hi)` of the
+/// product into `block` (accumulating — callers zero fresh outputs).
+pub struct Gemm<'a> {
+    a: Panel<'a>,
+    b: Panel<'a>,
+    /// Reduction depth K.
+    kdim: usize,
+    /// Output width (columns of C).
+    n: usize,
+    /// SYRK mode: only cells of the upper triangle (`j >= i`) are
+    /// computed; everything below the diagonal is left untouched.
+    upper: bool,
+}
+
+impl<'a> Gemm<'a> {
+    /// `a * b` — output row i is a row of `a` (m × k), operand B is
+    /// `b` (k × n) in natural k-major orientation.
+    pub fn matmul(a: &'a Mat, b: &'a Mat) -> Gemm<'a> {
+        Gemm {
+            a: Panel::Rows { data: a.data(), k: a.cols() },
+            b: Panel::Cols { data: b.data(), stride: b.cols() },
+            kdim: a.cols(),
+            n: b.cols(),
+            upper: false,
+        }
+    }
+
+    /// `a * b^T` — both operands are row panels reduced over their
+    /// (shared) column count.
+    pub fn matmul_nt(a: &'a Mat, b: &'a Mat) -> Gemm<'a> {
+        Gemm {
+            a: Panel::Rows { data: a.data(), k: a.cols() },
+            b: Panel::Rows { data: b.data(), k: b.cols() },
+            kdim: a.cols(),
+            n: b.rows(),
+            upper: false,
+        }
+    }
+
+    /// `a^T * b` — both operands are column panels of k-row matrices.
+    pub fn matmul_tn(a: &'a Mat, b: &'a Mat) -> Gemm<'a> {
+        Gemm {
+            a: Panel::Cols { data: a.data(), stride: a.cols() },
+            b: Panel::Cols { data: b.data(), stride: b.cols() },
+            kdim: a.rows(),
+            n: b.cols(),
+            upper: false,
+        }
+    }
+
+    /// `z^T z` (upper triangle) over a flat row-major buffer of `f`-wide
+    /// rows — the ridge/KPCA Gram accumulation. `z.len()` must be a whole
+    /// number of rows and `f > 0` (asserted by the `Mat` entry points).
+    pub fn syrk(z: &'a [f64], f: usize) -> Gemm<'a> {
+        Gemm {
+            a: Panel::Cols { data: z, stride: f },
+            b: Panel::Cols { data: z, stride: f },
+            kdim: z.len() / f,
+            n: f,
+            upper: true,
+        }
+    }
+
+    /// [`Gemm::run`] at the default [`MR`]×[`NR`]×[`KC`] geometry.
+    #[inline]
+    pub fn run_default(&self, lo: usize, hi: usize, block: &mut [f64]) {
+        self.run::<MR, NR>(KC, lo, hi, block);
+    }
+
+    /// Compute output rows `[lo, hi)` into `block` (a `(hi-lo) × n`
+    /// row-major slice), accumulating onto whatever `block` holds, with
+    /// an explicit MRV×NRV register tile and `kc`-deep cache panels.
+    /// Bit-identical for every (MRV, NRV, kc) — tiling never changes a
+    /// cell's reduction order (module docs).
+    pub fn run<const MRV: usize, const NRV: usize>(
+        &self,
+        kc: usize,
+        lo: usize,
+        hi: usize,
+        block: &mut [f64],
+    ) {
+        let n = self.n;
+        debug_assert!(MRV > 0 && NRV > 0);
+        debug_assert_eq!(block.len(), (hi - lo) * n);
+        if lo >= hi || n == 0 || self.kdim == 0 {
+            return;
+        }
+        let kc = kc.max(1);
+        // panel range: [p0, p1) are the NRV-wide B panels any full tile
+        // of this row block can touch (SYRK tiles never reach left of
+        // the diagonal, so panels below lo's are dead weight)
+        let p1 = n / NRV;
+        let p0 = if self.upper { (lo / NRV).min(p1) } else { 0 };
+        let has_tiles = hi - lo >= MRV && p0 < p1;
+        let mut bpack: Vec<f64> = Vec::new();
+        let mut apack: Vec<f64> = Vec::new();
+        let mut kc0 = 0usize;
+        while kc0 < self.kdim {
+            let kcl = kc.min(self.kdim - kc0);
+            if has_tiles {
+                self.b.pack_range::<NRV>(p0, p1, kc0, kcl, &mut bpack);
+            }
+            let mut i0 = lo;
+            while i0 < hi {
+                if i0 + MRV <= hi {
+                    apack.clear();
+                    self.a.pack_append::<MRV>(i0, kc0, kcl, &mut apack);
+                    for p in p0..p1 {
+                        let j0 = p * NRV;
+                        if self.upper && j0 + NRV - 1 < i0 {
+                            continue; // tile entirely below the diagonal
+                        }
+                        if !self.upper || j0 >= i0 + MRV - 1 {
+                            let bp = &bpack[(p - p0) * kcl * NRV..][..kcl * NRV];
+                            let c0 = (i0 - lo) * n + j0;
+                            tile_kernel::<MRV, NRV>(&apack, bp, &mut block[c0..], n);
+                        } else {
+                            // diagonal-straddling SYRK tile: per-cell
+                            // scalar with the j >= i guard
+                            for ii in 0..MRV {
+                                let i = i0 + ii;
+                                for j in j0.max(i)..j0 + NRV {
+                                    self.cell(i, j, kc0, kcl, &mut block[(i - lo) * n + j]);
+                                }
+                            }
+                        }
+                    }
+                    // columns past the last full NRV panel
+                    for j in p1 * NRV..n {
+                        for ii in 0..MRV {
+                            let i = i0 + ii;
+                            if self.upper && j < i {
+                                continue;
+                            }
+                            self.cell(i, j, kc0, kcl, &mut block[(i - lo) * n + j]);
+                        }
+                    }
+                    i0 += MRV;
+                } else {
+                    // rows past the last full MRV tile of this range
+                    self.tail_row(i0, kc0, kcl, lo, block);
+                    i0 += 1;
+                }
+            }
+            kc0 += kcl;
+        }
+    }
+
+    /// One output cell, one `kc`-window: load, ascending multiply-adds,
+    /// store — the exact operation sequence of [`tile_kernel`] for a
+    /// single accumulator, so edge cells match tile cells bit for bit.
+    #[inline]
+    fn cell(&self, i: usize, j: usize, kc0: usize, kcl: usize, c: &mut f64) {
+        let mut acc = *c;
+        for kk in kc0..kc0 + kcl {
+            acc += self.at_a(kk, i) * self.b.at(kk, j);
+        }
+        *c = acc;
+    }
+
+    #[inline(always)]
+    fn at_a(&self, kk: usize, w: usize) -> f64 {
+        self.a.at(kk, w)
+    }
+
+    /// A full output row below the MRV tile grid. When B is a k-major
+    /// column panel the row streams B rows axpy-style (each cell's
+    /// memory accumulator receives its terms in the same ascending
+    /// order — an exact spill per step); a row-panel B keeps the
+    /// cache-friendly per-cell dot instead.
+    fn tail_row(&self, i: usize, kc0: usize, kcl: usize, lo: usize, block: &mut [f64]) {
+        let n = self.n;
+        let jstart = if self.upper { i.min(n) } else { 0 };
+        match self.b {
+            Panel::Cols { data, stride } => {
+                let crow = &mut block[(i - lo) * n + jstart..(i - lo) * n + n];
+                for kk in kc0..kc0 + kcl {
+                    let av = self.a.at(kk, i);
+                    let brow = &data[kk * stride + jstart..kk * stride + n];
+                    for (c, &bv) in crow.iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+            }
+            Panel::Rows { .. } => {
+                for j in jstart..n {
+                    self.cell(i, j, kc0, kcl, &mut block[(i - lo) * n + j]);
+                }
+            }
+        }
+    }
+}
+
+/// `a * b` with an explicit tile geometry — the bench's tile-sweep entry
+/// point. Bit-identical to [`Mat::matmul`] for every (MRV, NRV, kc).
+pub fn matmul_with_tile<const MRV: usize, const NRV: usize>(
+    a: &Mat,
+    b: &Mat,
+    kc: usize,
+    pool: &Pool,
+) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    let gemm = Gemm::matmul(a, b);
+    pool.par_chunks(m, out.data_mut(), |lo, hi, block| {
+        gemm.run::<MRV, NRV>(kc, lo, hi, block)
+    });
+    out
+}
+
+/// `out += z^T z` (upper triangle) with an explicit tile geometry.
+/// Bit-identical to [`Mat::syrk_into_p`] for every (MRV, NRV, kc).
+pub fn syrk_with_tile<const MRV: usize, const NRV: usize>(
+    z: &Mat,
+    kc: usize,
+    pool: &Pool,
+    out: &mut Mat,
+) {
+    let f = z.cols();
+    assert_eq!(out.rows(), f, "syrk: output shape mismatch");
+    assert_eq!(out.cols(), f, "syrk: output shape mismatch");
+    if f == 0 {
+        return;
+    }
+    let gemm = Gemm::syrk(z.data(), f);
+    let bounds = triangle_bounds(f, pool.threads());
+    pool.scatter_rows(&bounds, out.data_mut(), |lo, hi, block| {
+        gemm.run::<MRV, NRV>(kc, lo, hi, block)
+    });
+}
+
+/// `matvec` block body: rows `[lo, hi)` of `A x`. Four independent
+/// accumulator chains hide the add latency and share the streamed `x`;
+/// each chain is the exact sequential dot of the scalar kernel, so the
+/// 4-row grouping (like every other tiling here) cannot change bits.
+pub(crate) fn matvec_block(
+    data: &[f64],
+    cols: usize,
+    x: &[f64],
+    lo: usize,
+    hi: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), hi - lo);
+    let x = &x[..cols];
+    const RB: usize = 4;
+    let mut i = lo;
+    while i + RB <= hi {
+        let r0 = &data[i * cols..(i + 1) * cols];
+        let r1 = &data[(i + 1) * cols..(i + 2) * cols];
+        let r2 = &data[(i + 2) * cols..(i + 3) * cols];
+        let r3 = &data[(i + 3) * cols..(i + 4) * cols];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for t in 0..cols {
+            let xv = x[t];
+            a0 += r0[t] * xv;
+            a1 += r1[t] * xv;
+            a2 += r2[t] * xv;
+            a3 += r3[t] * xv;
+        }
+        out[i - lo] = a0;
+        out[i - lo + 1] = a1;
+        out[i - lo + 2] = a2;
+        out[i - lo + 3] = a3;
+        i += RB;
+    }
+    while i < hi {
+        let row = &data[i * cols..(i + 1) * cols];
+        let mut acc = 0.0f64;
+        for (&a, &b) in row.iter().zip(x) {
+            acc += a * b;
+        }
+        out[i - lo] = acc;
+        i += 1;
+    }
+}
+
+/// The pre-microkernel kernels, frozen verbatim (including their
+/// `== 0.0` skip branches): the 0-ULP reference for
+/// `tests/linalg_props.rs` and the baseline the hotpath bench's GFLOP/s
+/// section measures the microkernels against. Not used by any fit or
+/// serve path.
+pub mod naive {
+    use super::triangle_bounds;
+    use crate::exec::Pool;
+    use crate::linalg::Mat;
+
+    fn matmul_block(a: &Mat, b: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
+        let (k, n) = (a.cols(), b.cols());
+        for i in lo..hi {
+            let a_row = a.row(i);
+            let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
+            for (kk, &aik) in a_row.iter().enumerate().take(k) {
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data()[kk * n..(kk + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += aik * bv;
+                }
+            }
+        }
+    }
+
+    /// Pre-PR `a * b` (serial).
+    pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+        matmul_p(a, b, &Pool::serial())
+    }
+
+    /// Pre-PR `a * b`, output rows scattered across the pool.
+    pub fn matmul_p(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+        let (m, n) = (a.rows(), b.cols());
+        let mut out = Mat::zeros(m, n);
+        pool.par_chunks(m, out.data_mut(), |lo, hi, block| matmul_block(a, b, lo, hi, block));
+        out
+    }
+
+    fn matmul_nt_block(a: &Mat, b: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
+        let (n, k) = (b.rows(), a.cols());
+        for i in lo..hi {
+            let ar = a.row(i);
+            let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let br = b.row(j);
+                let mut acc = 0.0;
+                for t in 0..k {
+                    acc += ar[t] * br[t];
+                }
+                *o = acc;
+            }
+        }
+    }
+
+    /// Pre-PR `a * b^T` (serial).
+    pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+        matmul_nt_p(a, b, &Pool::serial())
+    }
+
+    /// Pre-PR `a * b^T`, output rows scattered across the pool.
+    pub fn matmul_nt_p(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+        let (m, n) = (a.rows(), b.rows());
+        let mut out = Mat::zeros(m, n);
+        pool.par_chunks(m, out.data_mut(), |lo, hi, block| matmul_nt_block(a, b, lo, hi, block));
+        out
+    }
+
+    fn matmul_tn_block(a: &Mat, b: &Mat, lo: usize, hi: usize, block: &mut [f64]) {
+        let (k, n) = (a.rows(), b.cols());
+        for t in 0..k {
+            let ar = a.row(t);
+            let br = b.row(t);
+            for i in lo..hi {
+                let ai = ar[i];
+                if ai == 0.0 {
+                    continue;
+                }
+                let out_row = &mut block[(i - lo) * n..(i - lo + 1) * n];
+                for (o, &bj) in out_row.iter_mut().zip(br) {
+                    *o += ai * bj;
+                }
+            }
+        }
+    }
+
+    /// Pre-PR `a^T * b` (serial).
+    pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+        matmul_tn_p(a, b, &Pool::serial())
+    }
+
+    /// Pre-PR `a^T * b`, output rows scattered across the pool.
+    pub fn matmul_tn_p(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
+        assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+        let (m, n) = (a.cols(), b.cols());
+        let mut out = Mat::zeros(m, n);
+        pool.par_chunks(m, out.data_mut(), |lo, hi, block| matmul_tn_block(a, b, lo, hi, block));
+        out
+    }
+
+    fn syrk_flat_block(z: &[f64], f: usize, lo: usize, hi: usize, block: &mut [f64]) {
+        for zrow in z.chunks_exact(f) {
+            for i in lo..hi {
+                let zi = zrow[i];
+                if zi == 0.0 {
+                    continue;
+                }
+                let out_row = &mut block[(i - lo) * f..(i - lo) * f + f];
+                for j in i..f {
+                    out_row[j] += zi * zrow[j];
+                }
+            }
+        }
+    }
+
+    /// Pre-PR `out += z^T z` (upper triangle) over a flat buffer.
+    pub fn syrk_flat_into_p(z: &[f64], f: usize, out: &mut Mat, pool: &Pool) {
+        assert_eq!(out.rows(), f, "syrk: output shape mismatch");
+        assert_eq!(out.cols(), f, "syrk: output shape mismatch");
+        if f == 0 {
+            return;
+        }
+        assert_eq!(z.len() % f, 0, "syrk: buffer is not a whole number of rows");
+        let bounds = triangle_bounds(f, pool.threads());
+        pool.scatter_rows(&bounds, out.data_mut(), |lo, hi, block| {
+            syrk_flat_block(z, f, lo, hi, block)
+        });
+    }
+
+    /// Pre-PR `out += z^T z` over a `Mat` (serial).
+    pub fn syrk_into(z: &Mat, out: &mut Mat) {
+        syrk_flat_into_p(z.data(), z.cols(), out, &Pool::serial());
+    }
+
+    /// Pre-PR `A x` (serial).
+    pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+        assert_eq!(a.cols(), x.len());
+        let mut out = Vec::with_capacity(a.rows());
+        for i in 0..a.rows() {
+            out.push(a.row(i).iter().zip(x).map(|(&av, &b)| av * b).sum());
+        }
+        out
+    }
+
+    /// Pre-PR `A^T x` (serial).
+    pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+        assert_eq!(a.rows(), x.len());
+        let mut out = vec![0.0; a.cols()];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &av) in out.iter_mut().zip(a.row(i)) {
+                *o += xi * av;
+            }
+        }
+        out
+    }
+}

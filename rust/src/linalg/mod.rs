@@ -1,7 +1,8 @@
 //! Dense linear-algebra substrate (built from scratch; no external BLAS).
 //!
 //! [`Mat`] is a row-major f64 matrix with the operations the rest of the
-//! system needs: blocked matmul / syrk (each with a `_p` variant that
+//! system needs: matmul / syrk / matvec running on the register-blocked,
+//! cache-tiled [`microkernel`] engine (each with a `_p` variant that
 //! scatters output rows across an [`exec::Pool`](crate::exec::Pool) and is
 //! bit-identical to the serial kernel at every thread count), Cholesky
 //! factorization and SPD solves, a cyclic Jacobi symmetric eigensolver,
@@ -13,6 +14,7 @@ mod eigen;
 mod fft;
 mod fwht;
 mod matrix;
+pub mod microkernel;
 
 pub use cholesky::Cholesky;
 pub use eigen::sym_eigen;

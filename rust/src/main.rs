@@ -113,7 +113,9 @@
 //!                  cores; GZK_THREADS env var is the no-CLI override).
 //!                  Every parallel path — featurize, Z^T Z absorb, k-means
 //!                  assignment, KPCA, the coordinator's worker wave, the
-//!                  serving batcher — draws from this one pool, and every
+//!                  serving batcher — draws from this one pool, runs its
+//!                  dense products on the register-blocked SIMD
+//!                  microkernel engine (DESIGN.md §2d), and every
 //!                  result is bit-identical at every width. Model
 //!                  artifacts record the width — and the training dataset
 //!                  name + row count — in their run metadata.

@@ -1,0 +1,243 @@
+//! Property tests for the microkernel contract (DESIGN.md §2d).
+//!
+//! The register-blocked, cache-tiled kernels must be **bit-identical** —
+//! 0 ULP, not approximately equal — to the frozen pre-microkernel
+//! kernels (`linalg::microkernel::naive`) on every shape, including the
+//! awkward ones that exercise every remainder path: single cells, prime
+//! dims, and tile±1 around the MR/NR boundaries. On top of that sits the
+//! PR-3 ownership contract (serial ↔ parallel bit-identity at every
+//! thread count), invariance to the tile geometry itself (any MR×NR×KC
+//! must produce the same bits), and the `data::pipeline` chunk-invariance
+//! contract for SYRK accumulation.
+//!
+//! The matrices deliberately contain exact zeros: the naive kernels skip
+//! `== 0.0` multipliers and the microkernels do not, and these tests pin
+//! the claim that adding the skipped `±0.0` terms never changes a sum.
+
+use gzk::exec::Pool;
+use gzk::linalg::microkernel::{matmul_with_tile, naive, syrk_with_tile};
+use gzk::linalg::{syrk_flat_into_p, Mat};
+use gzk::rng::Rng;
+
+/// Shape sweep around the register-tile boundaries: 1, primes, MR/NR −1,
+/// exact, +1, and an off-tile large prime.
+const DIMS: [usize; 8] = [1, 3, 4, 5, 7, 8, 9, 97];
+/// Cheaper subset for the cubic sweeps of the secondary kernels.
+const SUB: [usize; 5] = [1, 3, 5, 8, 97];
+
+fn random(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+/// ~30% exact zeros so the naive kernels' `== 0.0` skip branches fire.
+fn random_sparse(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| {
+        let v = rng.normal();
+        if v.abs() < 0.4 {
+            0.0
+        } else {
+            v
+        }
+    })
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, ctx: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{ctx}: shape");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: cell {i}: {x} vs {y}");
+    }
+}
+
+fn assert_bits_eq_vec(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: entry {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn matmul_matches_naive_to_0_ulp() {
+    let mut rng = Rng::new(0x5eed_0001);
+    for m in DIMS {
+        for k in DIMS {
+            for n in DIMS {
+                let a = random_sparse(&mut rng, m, k);
+                let b = random_sparse(&mut rng, k, n);
+                let ctx = format!("matmul m={m} k={k} n={n}");
+                assert_bits_eq(&a.matmul(&b), &naive::matmul(&a, &b), &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn matmul_nt_matches_naive_to_0_ulp() {
+    let mut rng = Rng::new(0x5eed_0002);
+    for m in SUB {
+        for k in SUB {
+            for n in SUB {
+                let a = random_sparse(&mut rng, m, k);
+                let b = random_sparse(&mut rng, n, k);
+                let ctx = format!("matmul_nt m={m} k={k} n={n}");
+                assert_bits_eq(&a.matmul_nt(&b), &naive::matmul_nt(&a, &b), &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn matmul_tn_matches_naive_to_0_ulp() {
+    let mut rng = Rng::new(0x5eed_0003);
+    for m in SUB {
+        for k in SUB {
+            for n in SUB {
+                let a = random_sparse(&mut rng, k, m);
+                let b = random_sparse(&mut rng, k, n);
+                let ctx = format!("matmul_tn m={m} k={k} n={n}");
+                assert_bits_eq(&a.matmul_tn(&b), &naive::matmul_tn(&a, &b), &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn syrk_matches_naive_to_0_ulp_and_accumulates() {
+    let mut rng = Rng::new(0x5eed_0004);
+    for rows in DIMS {
+        for f in DIMS {
+            let z = random_sparse(&mut rng, rows, f);
+            let ctx = format!("syrk rows={rows} f={f}");
+            let mut got = Mat::zeros(f, f);
+            z.syrk_into(&mut got);
+            let mut want = Mat::zeros(f, f);
+            naive::syrk_into(&z, &mut want);
+            assert_bits_eq(&got, &want, &ctx);
+            // accumulating a second update composes identically too
+            z.syrk_into(&mut got);
+            naive::syrk_into(&z, &mut want);
+            assert_bits_eq(&got, &want, &format!("{ctx} (accumulated)"));
+        }
+    }
+}
+
+#[test]
+fn matvec_matches_naive_to_0_ulp() {
+    let mut rng = Rng::new(0x5eed_0005);
+    for m in DIMS {
+        for n in DIMS {
+            let a = random_sparse(&mut rng, m, n);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let xt: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let ctx = format!("matvec m={m} n={n}");
+            assert_bits_eq_vec(&a.matvec(&x), &naive::matvec(&a, &x), &ctx);
+            let ctx = format!("matvec_t m={m} n={n}");
+            assert_bits_eq_vec(&a.matvec_t(&xt), &naive::matvec_t(&a, &xt), &ctx);
+        }
+    }
+}
+
+#[test]
+fn serial_parallel_bit_identity_across_threads() {
+    let mut rng = Rng::new(0x5eed_0006);
+    // straddle the MR/NR tile boundaries and the worker-chunk boundaries
+    for (m, k, n) in [(1usize, 1usize, 1usize), (5, 3, 9), (31, 33, 32), (97, 41, 64)] {
+        let a = random_sparse(&mut rng, m, k);
+        let b = random_sparse(&mut rng, k, n);
+        let bt = random_sparse(&mut rng, n, k);
+        let at = random_sparse(&mut rng, k, m);
+        let z = random_sparse(&mut rng, m, n);
+        let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let xt: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let mm = a.matmul(&b);
+        let nt = a.matmul_nt(&bt);
+        let tn = at.matmul_tn(&b);
+        let mv = a.matvec(&x);
+        let mvt = a.matvec_t(&xt);
+        let mut g = Mat::zeros(n, n);
+        z.syrk_into(&mut g);
+        for threads in [1usize, 2, 3, 8] {
+            let pool = Pool::new(threads);
+            let ctx = format!("m={m} k={k} n={n} threads={threads}");
+            assert_bits_eq(&mm, &a.matmul_p(&b, &pool), &format!("matmul {ctx}"));
+            assert_bits_eq(&nt, &a.matmul_nt_p(&bt, &pool), &format!("matmul_nt {ctx}"));
+            assert_bits_eq(&tn, &at.matmul_tn_p(&b, &pool), &format!("matmul_tn {ctx}"));
+            assert_bits_eq_vec(&mv, &a.matvec_p(&x, &pool), &format!("matvec {ctx}"));
+            assert_bits_eq_vec(&mvt, &a.matvec_t_p(&xt, &pool), &format!("matvec_t {ctx}"));
+            let mut gp = Mat::zeros(n, n);
+            z.syrk_into_p(&mut gp, &pool);
+            assert_bits_eq(&g, &gp, &format!("syrk {ctx}"));
+        }
+    }
+}
+
+#[test]
+fn tile_geometry_never_changes_bits() {
+    let mut rng = Rng::new(0x5eed_0007);
+    let a = random_sparse(&mut rng, 37, 29);
+    let b = random_sparse(&mut rng, 29, 41);
+    let want = a.matmul(&b);
+    let z = random_sparse(&mut rng, 45, 33);
+    let mut gwant = Mat::zeros(33, 33);
+    z.syrk_into(&mut gwant);
+    for threads in [1usize, 3] {
+        let pool = Pool::new(threads);
+        for kc in [1usize, 3, 128, 1024] {
+            let ctx = format!("threads={threads} kc={kc}");
+            let got = matmul_with_tile::<4, 4>(&a, &b, kc, &pool);
+            assert_bits_eq(&want, &got, &format!("4x4 {ctx}"));
+            let got = matmul_with_tile::<8, 4>(&a, &b, kc, &pool);
+            assert_bits_eq(&want, &got, &format!("8x4 {ctx}"));
+            let got = matmul_with_tile::<8, 8>(&a, &b, kc, &pool);
+            assert_bits_eq(&want, &got, &format!("8x8 {ctx}"));
+            let mut g44 = Mat::zeros(33, 33);
+            syrk_with_tile::<4, 4>(&z, kc, &pool, &mut g44);
+            assert_bits_eq(&gwant, &g44, &format!("syrk 4x4 {ctx}"));
+            let mut g88 = Mat::zeros(33, 33);
+            syrk_with_tile::<8, 8>(&z, kc, &pool, &mut g88);
+            assert_bits_eq(&gwant, &g88, &format!("syrk 8x8 {ctx}"));
+        }
+    }
+}
+
+/// The `data::pipeline` contract: accumulating `Z^T Z` from any row
+/// chunking of the same stream must give bit-identical sums.
+#[test]
+fn syrk_chunk_invariance() {
+    let mut rng = Rng::new(0x5eed_0008);
+    let (rows, f) = (57usize, 19usize);
+    let z = random_sparse(&mut rng, rows, f);
+    let mut oneshot = Mat::zeros(f, f);
+    syrk_flat_into_p(z.data(), f, &mut oneshot, &Pool::serial());
+    for threads in [1usize, 3] {
+        let pool = Pool::new(threads);
+        for chunk in [1usize, 5, 19, rows] {
+            let mut acc = Mat::zeros(f, f);
+            for start in (0..rows).step_by(chunk) {
+                let end = (start + chunk).min(rows);
+                syrk_flat_into_p(&z.data()[start * f..end * f], f, &mut acc, &pool);
+            }
+            assert_bits_eq(&oneshot, &acc, &format!("chunk={chunk} threads={threads}"));
+        }
+    }
+}
+
+#[test]
+fn degenerate_shapes() {
+    // zero-depth reduction: output must be exactly zero, not NaN
+    let a = Mat::zeros(4, 0);
+    let b = Mat::zeros(0, 3);
+    let c = a.matmul(&b);
+    assert_eq!((c.rows(), c.cols()), (4, 3));
+    assert!(c.data().iter().all(|v| v.to_bits() == 0));
+    // zero-width output
+    let d = Mat::zeros(3, 5).matmul(&Mat::zeros(5, 0));
+    assert_eq!((d.rows(), d.cols()), (3, 0));
+    // empty SYRK buffer accumulates nothing
+    let mut g = Mat::zeros(6, 6);
+    syrk_flat_into_p(&[], 6, &mut g, &Pool::serial());
+    assert!(g.data().iter().all(|v| v.to_bits() == 0));
+    // 1x1 end to end
+    let s = Mat::from_vec(1, 1, vec![3.0]);
+    assert_eq!(s.matmul(&s).data(), &[9.0]);
+    assert_eq!(s.matvec(&[2.0]), vec![6.0]);
+}
