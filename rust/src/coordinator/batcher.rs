@@ -21,6 +21,12 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Rung after a reply is sent — how the event-loop listener learns a
+/// reply is ready without blocking a thread per in-flight request (it
+/// wakes its `poll(2)` loop; see `server::mux`). Must be cheap and must
+/// never block: it runs on the service thread, inside the batch loop.
+pub type ReplyNotify = Arc<dyn Fn() + Send + Sync>;
+
 struct Request {
     x: Vec<f64>,
     /// when the client handed the request to the service — the latency
@@ -28,6 +34,8 @@ struct Request {
     /// batching window are part of every recorded sample
     enqueued: Instant,
     reply: Sender<Vec<f64>>,
+    /// optional doorbell rung after `reply` is sent
+    notify: Option<ReplyNotify>,
 }
 
 /// Fixed-bucket latency histogram on a 1–2–5 log ladder from 1 µs to 50 s
@@ -127,6 +135,19 @@ impl ServiceClient {
     /// connection can share a batch). The input dimension is validated
     /// HERE: a wrong-length row never reaches the shared service loop.
     pub fn submit(&self, x: &[f64]) -> Result<Receiver<Vec<f64>>, String> {
+        self.submit_notify(x, None)
+    }
+
+    /// [`submit`](ServiceClient::submit) with an optional doorbell: the
+    /// service rings `notify` right after the reply lands in the channel.
+    /// The event-loop listener passes a closure that wakes the loop
+    /// owning the connection, so a ready reply interrupts its `poll(2)`
+    /// instead of waiting out the sweep timeout.
+    pub fn submit_notify(
+        &self,
+        x: &[f64],
+        notify: Option<ReplyNotify>,
+    ) -> Result<Receiver<Vec<f64>>, String> {
         if x.len() != self.d {
             return Err(format!(
                 "input has {} values but the model expects d = {}",
@@ -136,7 +157,7 @@ impl ServiceClient {
         }
         let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(Request { x: x.to_vec(), enqueued: Instant::now(), reply: reply_tx })
+            .send(Request { x: x.to_vec(), enqueued: Instant::now(), reply: reply_tx, notify })
             .map_err(|_| "service stopped".to_string())?;
         Ok(reply_rx)
     }
@@ -251,6 +272,9 @@ impl PredictionService {
                 }
                 for (i, req) in pending.iter().enumerate() {
                     let _ = req.reply.send(out.row(i).to_vec()); // client may have gone away
+                    if let Some(bell) = &req.notify {
+                        bell(); // wake the event loop that owns this reply
+                    }
                 }
                 pending.clear();
             }

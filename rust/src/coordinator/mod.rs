@@ -47,7 +47,7 @@ pub mod protocol;
 pub mod streaming;
 pub mod worker;
 
-pub use batcher::{LatencyHist, PredictionService, ServeMetrics, ServiceClient};
+pub use batcher::{LatencyHist, PredictionService, ReplyNotify, ServeMetrics, ServiceClient};
 pub use leader::{
     fit_one_round, fit_one_round_source, fit_ridge, fit_ridge_source, DistributedFit,
 };

@@ -37,10 +37,20 @@
 //! readmissions / retries counters) into the reply, so one stats line
 //! shows both a replica's view and the balancer's.
 //!
+//! A client that negotiates the **binary frame mode** (`{"cmd":"binary"}`
+//! — see [`frame`]) is acked locally and the connection switches to a
+//! frame relay: each request frame is forwarded **verbatim** (bytes, not
+//! re-encoded) to a replica connection the proxy upgraded to binary on
+//! first use, and the reply frame is returned verbatim. Only the status
+//! byte is peeked, so `ST_RETRY` replies get the same backoff-and-failover
+//! treatment as JSON `"retry":true` — the frame path keeps capacity
+//! pooling without ever decoding a float.
+//!
 //! The proxy never parses predict bodies (it routes lines, not models),
 //! so it adds microseconds, not a deserialization round-trip.
 
 use crate::obs::{self, Counter};
+use crate::server::frame;
 use crate::server::listener::{is_loopback_ip, read_line_bounded, LineRead, MAX_LINE_BYTES};
 use crate::server::loadgen::ClientConn;
 use crate::server::wire;
@@ -384,6 +394,16 @@ fn handle_client(stream: TcpStream, shared: &Arc<ProxyShared>) {
             }
             continue;
         }
+        if matches!(parsed, Ok(wire::Request::Binary)) {
+            // ack locally, then relay frames until the client hangs up.
+            // The cached JSON-mode replica connections stay JSON; the
+            // relay upgrades its own on first use.
+            if !send(&mut writer, &wire::binary_reply()) {
+                return;
+            }
+            binary_relay(shared, &mut reader, &mut writer);
+            return;
+        }
         let mut reply = forward(shared, &mut conns, line);
         if matches!(parsed, Ok(wire::Request::Stats)) {
             reply = splice_proxy_stats(shared, reply);
@@ -392,6 +412,86 @@ fn handle_client(stream: TcpStream, shared: &Arc<ProxyShared>) {
             return;
         }
     }
+}
+
+/// Relay binary frames after a client's upgrade: request frames in,
+/// reply frames out, both verbatim. Runs until the client disconnects
+/// or breaks framing (the SO_RCVTIMEO idle timeout set on the socket
+/// also surfaces here, as a read error mid-header).
+fn binary_relay(
+    shared: &Arc<ProxyShared>,
+    reader: &mut std::io::BufReader<TcpStream>,
+    writer: &mut TcpStream,
+) {
+    let mut conns: Vec<Option<ClientConn>> = (0..shared.replicas.len()).map(|_| None).collect();
+    loop {
+        let req = match frame::read_frame(reader) {
+            Ok(Some(f)) => f,
+            // clean EOF at a frame boundary, or hostile/truncated
+            // framing (bad magic, oversized, idle mid-frame): close —
+            // same discipline as the server's frame path
+            Ok(None) | Err(_) => return,
+        };
+        let reply = forward_frame(shared, &mut conns, &req);
+        if writer.write_all(&reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Forward one request frame verbatim, failing over across replicas —
+/// the frame twin of [`forward`]. Replica connections are upgraded to
+/// binary on first use and cached; only the reply's status byte is
+/// inspected (`ST_RETRY` → back off, try the next replica), never the
+/// payload, so predictions stay byte-for-byte the replica's.
+fn forward_frame(
+    shared: &Arc<ProxyShared>,
+    conns: &mut [Option<ClientConn>],
+    req: &[u8],
+) -> Vec<u8> {
+    let attempts = match shared.cfg.attempts {
+        0 => (2 * shared.replicas.len()).max(2),
+        a => a,
+    };
+    let mut backoff = Duration::from_micros(200);
+    for _ in 0..attempts {
+        let i = shared.pick();
+        let replica = &shared.replicas[i];
+        if conns[i].is_none() {
+            let upgraded = ClientConn::connect(&replica.addr).and_then(|mut c| {
+                c.upgrade_binary()?;
+                Ok(c)
+            });
+            match upgraded {
+                Ok(c) => conns[i] = Some(c),
+                Err(_) => {
+                    replica.record_failure(shared.cfg.eject_after);
+                    continue;
+                }
+            }
+        }
+        let conn = conns[i].as_mut().expect("connection just ensured");
+        match conn.roundtrip_frame(req) {
+            Ok(reply) => {
+                replica.record_success();
+                if frame::reply_status(&reply) == Some(frame::ST_RETRY) {
+                    replica.retries.inc();
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(10));
+                    continue;
+                }
+                return reply;
+            }
+            Err(_) => {
+                conns[i] = None; // the cached connection is poisoned
+                replica.record_failure(shared.cfg.eject_after);
+            }
+        }
+    }
+    frame::frame(&frame::status_payload(
+        frame::ST_RETRY,
+        &format!("all {} replicas busy or down; retry", shared.replicas.len()),
+    ))
 }
 
 /// Splice the proxy's own per-replica section into a forwarded `stats`

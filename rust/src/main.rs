@@ -30,15 +30,24 @@
 //!                                                    dataset recorded in the artifact
 //!   gzk server    --store <dir> [--addr 127.0.0.1:7711] [--max-batch 64]
 //!                 [--max-wait-us 0] [--max-queue 1024] [--poll-ms 200] [--max-conns N]
-//!                 [--idle-s 300] [--allow-remote-shutdown]
+//!                 [--event-loops N] [--idle-s 300] [--allow-remote-shutdown]
 //!                                                    TCP model server over a ModelStore:
 //!                                                    newline-delimited JSON protocol
-//!                                                    (predict/models/stats/metrics/ping/shutdown),
-//!                                                    multi-model routing by name, manifest
-//!                                                    polled every --poll-ms so a newly
-//!                                                    persisted artifact serves without
-//!                                                    restart; full queues answer with a
-//!                                                    retriable backpressure reply. Runs
+//!                                                    (predict/models/stats/metrics/ping/
+//!                                                    binary/shutdown), multi-model routing
+//!                                                    by name, manifest polled every
+//!                                                    --poll-ms so a newly persisted
+//!                                                    artifact serves without restart; full
+//!                                                    queues answer with a retriable
+//!                                                    backpressure reply. Connections are
+//!                                                    multiplexed over --event-loops
+//!                                                    poll(2)-driven threads (default: pool
+//!                                                    width clamped to 4), so thread count
+//!                                                    stays flat into the 10k-connection
+//!                                                    range; a client may negotiate
+//!                                                    length-prefixed binary frames
+//!                                                    ({"cmd":"binary"}) and skip JSON on
+//!                                                    the predict path, bit-exactly. Runs
 //!                                                    until a client sends shutdown (honored
 //!                                                    from loopback peers only, unless
 //!                                                    --allow-remote-shutdown); connections
@@ -46,13 +55,19 @@
 //!                                                    (0 disables).
 //!   gzk loadgen   [--addr <host:port>] [--clients 1,8] [--requests 200] [--model N]
 //!                 [--dataset <name>] [--store <dir>] [--seed 1] [--shutdown]
-//!                 [--replica-sweep 1,2,4] [--json-out BENCH_serve.json]
+//!                 [--binary | --wire-compare] [--replica-sweep 1,2,4]
+//!                 [--json-out BENCH_serve.json]
 //!                                                    concurrent load generator: one trial
 //!                                                    per client count, rows drawn from the
 //!                                                    named SyntheticSource; with --store it
 //!                                                    checks every reply bit-identical to a
 //!                                                    local Model::predict; emits throughput
 //!                                                    + p50/p95/p99 per trial to the JSON;
+//!                                                    --binary runs the trials over the
+//!                                                    negotiated frame protocol instead of
+//!                                                    JSON lines; --wire-compare runs BOTH
+//!                                                    per client count and cross-checks
+//!                                                    every reply's bits between the two;
 //!                                                    --shutdown stops the server afterwards.
 //!                                                    --replica-sweep spins N in-process
 //!                                                    server replicas over --store behind an
@@ -904,6 +919,7 @@ fn server_cmd(args: &Args) {
         usage_error("--poll-ms must be >= 1");
     }
     let max_conns = args.get_usize("max-conns", 0); // 0 = pool policy
+    let event_loops = args.get_usize("event-loops", 0); // 0 = pool policy
     let cfg = gzk::server::ServerConfig {
         max_batch,
         max_wait: Duration::from_micros(args.get_usize("max-wait-us", 0) as u64),
@@ -912,20 +928,27 @@ fn server_cmd(args: &Args) {
         max_conns,
         idle_timeout: Duration::from_secs(args.get_usize("idle-s", 300) as u64),
         allow_remote_shutdown: args.has("allow-remote-shutdown"),
+        event_loops,
     };
     let server = match gzk::server::Server::start(dir, addr, cfg) {
         Ok(s) => s,
         Err(e) => fatal_error(&e),
     };
+    let n_loops = if event_loops > 0 {
+        event_loops
+    } else {
+        gzk::exec::Pool::global().threads().clamp(1, 4)
+    };
     println!(
         "gzk server listening on {} — models: {} (store {dir:?}, poll {poll_ms}ms, \
-         pool {} threads)",
+         pool {} threads, {n_loops} event loop{})",
         server.local_addr(),
         server.model_names().join(", "),
-        gzk::exec::Pool::global().threads()
+        gzk::exec::Pool::global().threads(),
+        if n_loops == 1 { "" } else { "s" }
     );
     println!(
-        r#"protocol: one JSON object per line, e.g. {{"cmd":"predict","model":"ridge","x":[...]}}; cmds: predict, models, stats, metrics, ping, shutdown"#
+        r#"protocol: one JSON object per line, e.g. {{"cmd":"predict","model":"ridge","x":[...]}}; cmds: predict, models, stats, metrics, ping, binary, shutdown"#
     );
     let final_stats = server.wait();
     println!("gzk server: shut down cleanly");
@@ -956,6 +979,12 @@ fn loadgen_cmd(args: &Args) {
     if requests == 0 {
         usage_error("--requests must be >= 1");
     }
+    let wire = match (args.has("binary"), args.has("wire-compare")) {
+        (true, true) => usage_error("--binary and --wire-compare are mutually exclusive"),
+        (true, false) => gzk::server::WireMode::Binary,
+        (false, true) => gzk::server::WireMode::Compare,
+        (false, false) => gzk::server::WireMode::Json,
+    };
     let cfg = gzk::server::LoadgenConfig {
         addr: addr.unwrap_or("").to_string(),
         clients,
@@ -966,6 +995,7 @@ fn loadgen_cmd(args: &Args) {
         seed: args.get_u64("seed", 1),
         send_shutdown: args.has("shutdown"),
         replica_sweep,
+        wire,
     };
     let report = match gzk::server::loadgen::run(&cfg) {
         Ok(r) => r,
@@ -985,17 +1015,20 @@ fn loadgen_cmd(args: &Args) {
     );
     if !report.trials.is_empty() {
         let mut table = gzk::bench::Table::new(vec![
-            "clients", "req/s", "p50 us", "p95 us", "p99 us", "retries", "mismatches",
+            "clients", "wire", "req/s", "p50 us", "p95 us", "p99 us", "retries", "mismatches",
         ]);
         for t in &report.trials {
+            // in compare mode a binary trial's row folds the cross-check
+            // against its JSON twin into the mismatch column
             table.row(vec![
                 format!("{}", t.clients),
+                t.wire.to_string(),
                 format!("{:.0}", t.throughput_rps),
                 format!("{:.1}", t.p50_us),
                 format!("{:.1}", t.p95_us),
                 format!("{:.1}", t.p99_us),
                 format!("{}", t.retries),
-                format!("{}", t.mismatches),
+                format!("{}", t.mismatches + t.cross_mismatches),
             ]);
         }
         table.print();
@@ -1021,8 +1054,19 @@ fn loadgen_cmd(args: &Args) {
         }
         table.print();
     }
-    for (t, stats) in report.trials.iter().zip(&report.server_stats) {
-        println!("server stats after {} clients: {stats}", t.clients);
+    // one stats line per client count (compare mode has two trials per
+    // count but still one stats capture); sweep-only runs have no direct
+    // captures to label
+    if !report.trials.is_empty() {
+        for (n, stats) in cfg.clients.iter().zip(&report.server_stats) {
+            println!("server stats after {n} clients: {stats}");
+        }
+    }
+    if let Some(n) = report.admission_rejected_total {
+        println!(
+            "admission cross-check: registry rejected_total = {n}, consistent with the \
+             stats reply"
+        );
     }
     let json_path = PathBuf::from(args.get("json-out").unwrap_or("BENCH_serve.json"));
     match report.write_json(&json_path) {

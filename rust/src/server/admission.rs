@@ -20,15 +20,26 @@ pub struct Admission {
     max_queue: usize,
     in_flight: AtomicUsize,
     rejects: AtomicU64,
+    /// the obs-registry twin of `rejects`: `server.admission.<model>.
+    /// rejected_total`. The registry counter is process-global and
+    /// name-keyed, so unlike the per-route `rejects` field it survives
+    /// hot-swaps (a reload builds a fresh `Admission` but resolves the
+    /// same counter) and shows up in the wire `metrics` snapshot.
+    rejected_total: crate::obs::registry::Counter,
 }
 
 impl Admission {
-    pub fn new(max_queue: usize) -> Arc<Admission> {
+    /// `name` is the model the bound belongs to; it keys the registry
+    /// counter so rejects are attributable per model in `metrics`.
+    pub fn new(name: &str, max_queue: usize) -> Arc<Admission> {
         assert!(max_queue >= 1, "admission needs room for at least one request");
         Arc::new(Admission {
             max_queue,
             in_flight: AtomicUsize::new(0),
             rejects: AtomicU64::new(0),
+            rejected_total: crate::obs::counter(&format!(
+                "server.admission.{name}.rejected_total"
+            )),
         })
     }
 
@@ -40,6 +51,7 @@ impl Admission {
         loop {
             if cur >= self.max_queue {
                 self.rejects.fetch_add(1, Ordering::Relaxed);
+                self.rejected_total.inc();
                 return None;
             }
             match self.in_flight.compare_exchange_weak(
@@ -86,7 +98,8 @@ mod tests {
 
     #[test]
     fn admits_up_to_the_cap_and_releases_on_drop() {
-        let adm = Admission::new(2);
+        let adm = Admission::new("adm-test-cap", 2);
+        let obs_before = crate::obs::counter("server.admission.adm-test-cap.rejected_total").get();
         let a = adm.try_admit().expect("slot 1");
         let _b = adm.try_admit().expect("slot 2");
         assert_eq!(adm.depth(), 2);
@@ -96,11 +109,14 @@ mod tests {
         assert_eq!(adm.depth(), 1);
         let _c = adm.try_admit().expect("slot freed by the dropped guard");
         assert_eq!(adm.rejects(), 1, "successful admits are not rejects");
+        // the registry twin counted the same reject under the model's name
+        let obs_after = crate::obs::counter("server.admission.adm-test-cap.rejected_total").get();
+        assert_eq!(obs_after - obs_before, 1);
     }
 
     #[test]
     fn concurrent_admission_never_exceeds_the_cap() {
-        let adm = Admission::new(4);
+        let adm = Admission::new("adm-test-concurrent", 4);
         let peak = AtomicUsize::new(0);
         let admitted = AtomicUsize::new(0);
         std::thread::scope(|scope| {

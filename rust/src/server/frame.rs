@@ -1,0 +1,422 @@
+//! Length-prefixed binary frames for the serving wire — the optional
+//! per-connection fast path negotiated with the JSON `{"cmd":"binary"}`
+//! upgrade (see [`super::wire`]).
+//!
+//! Frame layout, both directions, little-endian throughout (the same
+//! float convention as the `GZKBIN01` dataset format in
+//! [`crate::data`] — an `f64` crosses the wire as its 8 raw LE bytes, so
+//! bit-exactness is free, no shortest-round-trip formatting needed):
+//!
+//! ```text
+//! magic "GZF1" (4 bytes) | payload_len u32 LE | payload (payload_len bytes)
+//!
+//! request payload:
+//!   op u8: 1 = predict | 2 = ping
+//!   predict: model_len u16 LE | model utf8 (0 bytes = the single served
+//!            model) | count u32 LE | count x f64 LE
+//! reply payload:
+//!   status u8: 0 = ok | 1 = error | 2 = overload ("retry":true twin)
+//!              | 3 = pong
+//!   ok:           count u32 LE | count x f64 LE
+//!   error/retry:  utf8 message (the rest of the payload)
+//!   pong:         empty
+//! ```
+//!
+//! The payload cap is [`MAX_FRAME_PAYLOAD`] (= the JSON line cap: the
+//! two modes bound a hostile client identically — the dist layer's
+//! "cap every length you read off the wire" discipline,
+//! [`crate::dist::wire::MAX_FRAME_BYTES`]). A length prefix beyond the
+//! cap, a wrong magic, or a malformed payload each degrade to an error
+//! reply or a closed connection, never an allocation sized by the
+//! attacker: [`scan`] rejects the header *before* any payload buffer
+//! exists.
+
+use super::listener::MAX_LINE_BYTES;
+
+/// Frame magic: "GZK Frame v1". A JSON client that accidentally writes a
+/// line to a frame-mode connection fails the magic check on byte one.
+pub const MAGIC: [u8; 4] = *b"GZF1";
+
+/// Header bytes preceding every payload: magic + u32 length.
+pub const HEADER_BYTES: usize = 8;
+
+/// Largest accepted payload — the JSON line cap, so switching modes
+/// never widens the hostile-input surface.
+pub const MAX_FRAME_PAYLOAD: usize = MAX_LINE_BYTES;
+
+/// Request op: predict one point.
+pub const OP_PREDICT: u8 = 1;
+/// Request op: liveness probe.
+pub const OP_PING: u8 = 2;
+
+/// Reply status: prediction follows.
+pub const ST_OK: u8 = 0;
+/// Reply status: non-retriable error, utf8 message follows.
+pub const ST_ERR: u8 = 1;
+/// Reply status: backpressure — retry after backoff is safe (the binary
+/// twin of the JSON `"retry":true` contract).
+pub const ST_RETRY: u8 = 2;
+/// Reply status: pong.
+pub const ST_PONG: u8 = 3;
+
+/// What [`scan`] found at the head of a receive buffer.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Scan {
+    /// not enough bytes yet for a verdict; keep reading
+    Incomplete,
+    /// one complete frame of `total` bytes (header + payload) is buffered
+    Frame { total: usize },
+    /// the buffer does not start with [`MAGIC`] — unrecoverable framing
+    BadMagic,
+    /// the length prefix exceeds [`MAX_FRAME_PAYLOAD`]
+    Oversized(usize),
+}
+
+/// Classify the head of `buf` without allocating. Magic bytes are
+/// checked as soon as they arrive (a flood of garbage is rejected at
+/// byte one, not after 8), and an oversized length prefix is rejected
+/// from the header alone — no payload buffer is ever sized by it.
+pub fn scan(buf: &[u8]) -> Scan {
+    let probe = buf.len().min(MAGIC.len());
+    if buf[..probe] != MAGIC[..probe] {
+        return Scan::BadMagic;
+    }
+    if buf.len() < HEADER_BYTES {
+        return Scan::Incomplete;
+    }
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Scan::Oversized(len);
+    }
+    let total = HEADER_BYTES + len;
+    if buf.len() < total {
+        return Scan::Incomplete;
+    }
+    Scan::Frame { total }
+}
+
+/// Wrap a payload in a framed header. Panics (programmer error, not
+/// client input) if the payload exceeds the cap — every in-crate payload
+/// builder stays far below it.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME_PAYLOAD, "frame payload exceeds the wire cap");
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// The payload slice of a complete frame (as returned by [`scan`] /
+/// [`read_frame`]).
+pub fn payload(frame: &[u8]) -> &[u8] {
+    &frame[HEADER_BYTES..]
+}
+
+/// One parsed request payload.
+#[derive(Debug, PartialEq)]
+pub enum FrameRequest {
+    Predict { model: Option<String>, x: Vec<f64> },
+    Ping,
+}
+
+/// One parsed reply payload.
+#[derive(Debug, PartialEq)]
+pub enum FrameReply {
+    Ok { y: Vec<f64> },
+    Err { msg: String, retry: bool },
+    Pong,
+}
+
+/// Build a predict request payload (the client side).
+pub fn predict_payload(model: Option<&str>, x: &[f64]) -> Vec<u8> {
+    let m = model.unwrap_or("").as_bytes();
+    assert!(m.len() <= u16::MAX as usize, "model name exceeds the u16 length field");
+    let mut p = Vec::with_capacity(1 + 2 + m.len() + 4 + 8 * x.len());
+    p.push(OP_PREDICT);
+    p.extend_from_slice(&(m.len() as u16).to_le_bytes());
+    p.extend_from_slice(m);
+    p.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    for v in x {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+/// Build a ping request payload.
+pub fn ping_payload() -> Vec<u8> {
+    vec![OP_PING]
+}
+
+/// Build an ok reply payload carrying the prediction vector.
+pub fn ok_payload(y: &[f64]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(1 + 4 + 8 * y.len());
+    p.push(ST_OK);
+    p.extend_from_slice(&(y.len() as u32).to_le_bytes());
+    for v in y {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+/// Build an error ([`ST_ERR`]) or backpressure ([`ST_RETRY`]) reply
+/// payload.
+pub fn status_payload(status: u8, msg: &str) -> Vec<u8> {
+    debug_assert!(status == ST_ERR || status == ST_RETRY);
+    let mut m = msg.as_bytes();
+    if m.len() > MAX_FRAME_PAYLOAD - 1 {
+        m = &m[..MAX_FRAME_PAYLOAD - 1]; // truncate, never overflow the cap
+    }
+    let mut p = Vec::with_capacity(1 + m.len());
+    p.push(status);
+    p.extend_from_slice(m);
+    p
+}
+
+/// Build a pong reply payload.
+pub fn pong_payload() -> Vec<u8> {
+    vec![ST_PONG]
+}
+
+/// The status byte of a complete reply frame, if it has one.
+pub fn reply_status(frame: &[u8]) -> Option<u8> {
+    frame.get(HEADER_BYTES).copied()
+}
+
+/// Parse a request payload. Every byte is client-controlled: lengths are
+/// cross-checked against the actual payload size before any slice, and a
+/// non-finite float is refused exactly like the JSON parser refuses
+/// `1e999` — frame mode must never widen what can reach the shared
+/// batch.
+pub fn parse_request(p: &[u8]) -> Result<FrameRequest, String> {
+    match p.first().copied() {
+        None => Err("empty frame payload".to_string()),
+        Some(OP_PING) => {
+            if p.len() != 1 {
+                return Err("ping frame carries unexpected payload bytes".to_string());
+            }
+            Ok(FrameRequest::Ping)
+        }
+        Some(OP_PREDICT) => {
+            if p.len() < 3 {
+                return Err("predict frame truncated before the model length".to_string());
+            }
+            let mlen = u16::from_le_bytes([p[1], p[2]]) as usize;
+            let xs_at = 3 + mlen;
+            if p.len() < xs_at + 4 {
+                return Err("predict frame truncated before the value count".to_string());
+            }
+            let model = match std::str::from_utf8(&p[3..xs_at]) {
+                Ok("") => None,
+                Ok(m) => Some(m.to_string()),
+                Err(_) => return Err("predict frame model name is not UTF-8".to_string()),
+            };
+            let count =
+                u32::from_le_bytes([p[xs_at], p[xs_at + 1], p[xs_at + 2], p[xs_at + 3]]) as usize;
+            let body = &p[xs_at + 4..];
+            if body.len() != 8 * count {
+                return Err(format!(
+                    "predict frame declares {count} values but carries {} bytes",
+                    body.len()
+                ));
+            }
+            if count == 0 {
+                return Err("predict frame \"x\" must not be empty".to_string());
+            }
+            let x: Vec<f64> = body
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+                .collect();
+            if !x.iter().all(|v| v.is_finite()) {
+                return Err("predict frame \"x\" contains a non-finite value".to_string());
+            }
+            Ok(FrameRequest::Predict { model, x })
+        }
+        Some(op) => Err(format!("unknown frame op {op}; known: 1 = predict, 2 = ping")),
+    }
+}
+
+/// Parse a reply payload (the client side).
+pub fn parse_reply(p: &[u8]) -> Result<FrameReply, String> {
+    match p.first().copied() {
+        None => Err("empty reply frame payload".to_string()),
+        Some(ST_PONG) => Ok(FrameReply::Pong),
+        Some(ST_OK) => {
+            if p.len() < 5 {
+                return Err("ok reply frame truncated before the value count".to_string());
+            }
+            let count = u32::from_le_bytes([p[1], p[2], p[3], p[4]]) as usize;
+            let body = &p[5..];
+            if body.len() != 8 * count {
+                return Err(format!(
+                    "ok reply frame declares {count} values but carries {} bytes",
+                    body.len()
+                ));
+            }
+            let y = body
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+                .collect();
+            Ok(FrameReply::Ok { y })
+        }
+        Some(st @ (ST_ERR | ST_RETRY)) => {
+            let msg = String::from_utf8_lossy(&p[1..]).into_owned();
+            Ok(FrameReply::Err { msg, retry: st == ST_RETRY })
+        }
+        Some(st) => Err(format!("unknown reply frame status {st}")),
+    }
+}
+
+/// Read one complete frame from a blocking reader (the client /
+/// proxy-upstream side; the server's event loop uses [`scan`] over its
+/// nonblocking receive buffer instead). `Ok(None)` is a clean EOF **at a
+/// frame boundary**; EOF mid-frame is an error. The length prefix is
+/// validated against the cap before the payload buffer is allocated.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Option<Vec<u8>>, String> {
+    let mut header = [0u8; HEADER_BYTES];
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("read frame header: {e}")),
+        }
+    }
+    header[0] = first[0];
+    r.read_exact(&mut header[1..]).map_err(|e| format!("read frame header: {e}"))?;
+    if header[..4] != MAGIC {
+        return Err("bad frame magic".to_string());
+    }
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(format!("frame payload of {len} bytes exceeds the {MAX_FRAME_PAYLOAD} cap"));
+    }
+    let mut buf = vec![0u8; HEADER_BYTES + len];
+    buf[..HEADER_BYTES].copy_from_slice(&header);
+    r.read_exact(&mut buf[HEADER_BYTES..]).map_err(|e| format!("read frame payload: {e}"))?;
+    Ok(Some(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_frames_round_trip_bit_exactly() {
+        // awkward floats: subnormal, negative zero, many digits — raw LE
+        // bytes make bit-exactness trivially true; assert it anyway
+        let x = [1.0 / 3.0, -0.0, 5e-324, 1.23456789012345e300];
+        let f = frame(&predict_payload(Some("ridge"), &x));
+        let Scan::Frame { total } = scan(&f) else { panic!("complete frame must scan") };
+        assert_eq!(total, f.len());
+        match parse_request(payload(&f)).unwrap() {
+            FrameRequest::Predict { model, x: got } => {
+                assert_eq!(model.as_deref(), Some("ridge"));
+                assert_eq!(got.len(), x.len());
+                for (a, b) in x.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // unnamed model = single-model routing, same as JSON's omitted field
+        match parse_request(&predict_payload(None, &x)).unwrap() {
+            FrameRequest::Predict { model: None, .. } => {}
+            other => panic!("{other:?}"),
+        }
+        let r = frame(&ok_payload(&x));
+        match parse_reply(payload(&r)).unwrap() {
+            FrameReply::Ok { y } => {
+                for (a, b) in x.iter().zip(&y) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(reply_status(&r), Some(ST_OK));
+        assert_eq!(parse_request(&ping_payload()).unwrap(), FrameRequest::Ping);
+        assert_eq!(parse_reply(&pong_payload()).unwrap(), FrameReply::Pong);
+    }
+
+    #[test]
+    fn status_replies_carry_the_retry_contract() {
+        match parse_reply(&status_payload(ST_RETRY, "queue full")).unwrap() {
+            FrameReply::Err { msg, retry } => {
+                assert!(retry);
+                assert_eq!(msg, "queue full");
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_reply(&status_payload(ST_ERR, "no model \"x\"")).unwrap() {
+            FrameReply::Err { msg, retry } => {
+                assert!(!retry);
+                assert_eq!(msg, "no model \"x\"");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn scan_rejects_hostile_headers_before_any_allocation() {
+        assert_eq!(scan(b""), Scan::Incomplete);
+        assert_eq!(scan(b"GZ"), Scan::Incomplete); // magic prefix still possible
+        assert_eq!(scan(b"GZF1\x01\x00"), Scan::Incomplete); // header incomplete
+        assert_eq!(scan(b"JSON"), Scan::BadMagic);
+        assert_eq!(scan(b"{\"cmd\":\"ping\"}"), Scan::BadMagic); // a stray JSON line
+        // an attacker-controlled length prefix: rejected from the header,
+        // no payload buffer is ever sized by it
+        let mut huge = Vec::from(MAGIC);
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(scan(&huge), Scan::Oversized(u32::MAX as usize));
+        // a frame arriving byte by byte stays Incomplete until whole
+        let full = frame(&ping_payload());
+        for cut in 0..full.len() {
+            assert_eq!(scan(&full[..cut]), Scan::Incomplete, "cut at {cut}");
+        }
+        assert_eq!(scan(&full), Scan::Frame { total: full.len() });
+    }
+
+    #[test]
+    fn malformed_payloads_are_errors_not_panics() {
+        for bad in [
+            &[] as &[u8],
+            &[OP_PREDICT],                               // truncated before model len
+            &[OP_PREDICT, 5, 0, b'a'],                   // model shorter than declared
+            &[OP_PREDICT, 0, 0, 2, 0, 0, 0],             // count without values
+            &[OP_PREDICT, 0, 0, 0, 0, 0, 0],             // empty x
+            &[OP_PREDICT, 0, 0, 1, 0, 0, 0, 1, 2, 3],    // 3 bytes for 1 f64
+            &[OP_PING, 9],                               // ping with payload
+            &[99],                                       // unknown op
+        ] {
+            assert!(parse_request(bad).is_err(), "accepted {bad:?}");
+        }
+        // non-finite x refused, same as the JSON parser's 1e999 rule
+        let mut p = vec![OP_PREDICT, 0, 0, 1, 0, 0, 0];
+        p.extend_from_slice(&f64::NAN.to_le_bytes());
+        assert!(parse_request(&p).unwrap_err().contains("non-finite"));
+        for bad in [&[] as &[u8], &[ST_OK], &[ST_OK, 2, 0, 0, 0, 1], &[77]] {
+            assert!(parse_reply(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn read_frame_handles_eof_and_caps() {
+        let f = frame(&predict_payload(None, &[1.5, -2.5]));
+        let mut two = Vec::new();
+        two.extend_from_slice(&f);
+        two.extend_from_slice(&f);
+        let mut r = std::io::Cursor::new(two);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), f);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), f);
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at a boundary");
+        // EOF mid-frame is an error, not a silent None
+        let mut cut = std::io::Cursor::new(f[..f.len() - 3].to_vec());
+        assert!(read_frame(&mut cut).is_err());
+        // oversized prefix rejected before allocation
+        let mut huge = Vec::from(MAGIC);
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = std::io::Cursor::new(huge);
+        assert!(read_frame(&mut r).unwrap_err().contains("exceeds"));
+    }
+}

@@ -1,44 +1,35 @@
-//! TCP accept loop and per-connection reader/writer threads.
+//! TCP accept loop and the state the serving tier shares.
 //!
-//! Each accepted connection gets **two** threads: a reader that parses
-//! request lines and dispatches them (routing, admission, batcher submit
-//! — none of which block), and a writer that awaits each dispatched
-//! reply **in request order** and writes it back. Splitting the two is
-//! what makes the protocol pipelined: a client may write many requests
-//! without waiting, and consecutive requests from one connection land in
-//! the same dynamic batch — the same amortization the paper's recurrence
-//! gets from batched rows.
+//! Connections are **not** handled here anymore: the accept loop's only
+//! job is the connection budget and handing each accepted socket to one
+//! of the event loops (round-robin — see [`super::mux`]), which own the
+//! per-connection state machines. Thread count is O(event-loops +
+//! exec pool), independent of connection count; that is what lifts the
+//! realistic concurrency ceiling from hundreds (two OS threads per
+//! connection) to the 1k–10k range the C10K bench sweeps.
 //!
 //! Concurrency is bounded in two places, both sized from the
 //! [`exec::Pool`](crate::exec::Pool) policy by default: the connection
 //! budget (`max_conns`, default 8× the pool width — beyond it a
 //! connection gets one `"retry":true` line and is closed), and per-model
 //! admission ([`super::admission`]). The batch *compute* itself draws
-//! from the global pool inside `PredictionService`, so reader/writer
+//! from the global pool inside `PredictionService`, so event-loop
 //! threads stay I/O-only — the blocking discipline of DESIGN.md §2b.
 //!
-//! Because every request byte is client-controlled, the connection
-//! itself is bounded too: a request line may not exceed
-//! [`MAX_LINE_BYTES`] (an overlong line gets an error reply and the
-//! connection closes — there is no way to resynchronize mid-line); the
-//! idle timeout bounds both the gap between reads *and* the assembly of
-//! a single line (a byte-per-interval drip would never trip a plain
-//! SO_RCVTIMEO), so half-open and slow-loris clients release their
-//! `max_conns` slot; the reply queue is a bounded `sync_channel`
-//! (admission bounds predicts, but ping/stats/error replies bypass it —
-//! a flooder that never reads its socket now blocks the reader instead
-//! of growing the queue) and the matching write timeout turns a
-//! permanently-stalled writer into a closed connection. The wire
-//! `shutdown` command is honored only from loopback peers (including
-//! IPv4-mapped loopback on dual-stack binds) unless the server was
-//! started with `allow_remote_shutdown`.
+//! Every hardening bound on client-controlled bytes (the 1 MiB line
+//! cap, the idle/assembly deadlines, reply backpressure, the
+//! loopback-gated `shutdown`) lives on in the event loops — the mux
+//! module doc maps each bound to its state transition. This module
+//! keeps the bounded line reader itself ([`read_line_bounded`]), which
+//! the dist layer's blocking sockets still use with their own frame
+//! cap.
 
-use super::router::{Dispatch, Router};
+use super::mux::LoopHandle;
+use super::router::Router;
 use super::wire;
-use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use std::io::{BufRead, ErrorKind, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -46,18 +37,11 @@ use std::time::{Duration, Instant};
 /// legitimate predict request). Without a cap, a client that streams
 /// bytes without ever sending a newline grows the line buffer without
 /// bound, bypassing both the connection budget and per-model admission.
+/// The binary frame mode caps its payloads at the same bound.
 pub const MAX_LINE_BYTES: usize = 1 << 20;
 
-/// Per-connection bound on dispatched-but-unwritten replies. Admission
-/// bounds admitted predicts, but the cheap commands (ping/models/stats,
-/// error replies) bypass admission — without this bound, a client that
-/// floods commands and never reads its socket grows the reply queue
-/// without limit. When it fills, the reader blocks, which stops reading
-/// the socket: backpressure, not memory growth.
-const REPLY_QUEUE_BOUND: usize = 256;
-
-/// State shared by the accept loop, every connection thread, the
-/// hot-reload poller and the [`Server`](super::Server) handle.
+/// State shared by the accept loop, the event loops, the hot-reload
+/// poller and the [`Server`](super::Server) handle.
 pub(crate) struct Shared {
     pub router: Router,
     pub shutdown: AtomicBool,
@@ -65,18 +49,22 @@ pub(crate) struct Shared {
     pub max_conns: usize,
     pub addr: SocketAddr,
     /// close a connection after this long with no request bytes, so a
-    /// silent half-open client cannot pin its reader thread and
-    /// connection-budget slot forever; `None` disables the policy
+    /// silent half-open client cannot pin its connection-budget slot
+    /// forever; `None` disables the policy
     pub idle_timeout: Option<Duration>,
     /// honor the wire `shutdown` command from non-loopback peers (off by
     /// default: with `--addr` on a public interface, an unauthenticated
     /// shutdown would be a one-line remote kill switch)
     pub allow_remote_shutdown: bool,
+    /// the event loops; the accept loop deals connections round-robin
+    /// and `begin_shutdown` rings every waker
+    pub loops: Vec<Arc<LoopHandle>>,
 }
 
 impl Shared {
-    /// Begin shutdown exactly once: flip the flag and unblock the
-    /// blocking `accept` with a throwaway self-connection. A wildcard
+    /// Begin shutdown exactly once: flip the flag, unblock the blocking
+    /// `accept` with a throwaway self-connection, and wake every event
+    /// loop so each drains its in-flight replies and exits. A wildcard
     /// bind (`0.0.0.0` / `::`) is not connectable on every platform, so
     /// the probe targets the matching loopback instead.
     pub(crate) fn begin_shutdown(&self) {
@@ -89,12 +77,16 @@ impl Shared {
                 });
             }
             let _ = TcpStream::connect(addr);
+            for l in &self.loops {
+                l.wake();
+            }
         }
     }
 }
 
 /// Accept until shutdown. Runs on the server's accept thread.
 pub(crate) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut next = 0usize;
     for conn in listener.incoming() {
         if shared.shutdown.load(Ordering::Acquire) {
             break;
@@ -124,43 +116,11 @@ pub(crate) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             shared.active_conns.fetch_sub(1, Ordering::AcqRel);
             continue;
         }
-        let shared = Arc::clone(&shared);
-        std::thread::spawn(move || {
-            handle_conn(stream, &shared);
-            shared.active_conns.fetch_sub(1, Ordering::AcqRel);
-        });
+        // round-robin across the event loops; the loop owns the
+        // connection (and its budget slot) from here
+        shared.loops[next % shared.loops.len()].enqueue_conn(stream);
+        next = next.wrapping_add(1);
     }
-}
-
-/// What the reader hands the writer, one entry per request line, in
-/// order.
-enum Outgoing {
-    /// a complete reply line
-    Line(String),
-    /// an admitted predict: await the batcher, then reply
-    Reply { model: String, rx: Receiver<Vec<f64>>, guard: super::admission::AdmissionGuard },
-    /// write the line, then close the connection (shutdown ack)
-    Last(String),
-}
-
-fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
-    let _ = stream.set_nodelay(true); // request/reply lines, not bulk data
-    if let Some(idle) = shared.idle_timeout {
-        // the write twin of the read-side idle policy: a client that
-        // stops draining its socket stalls the writer; past the budget
-        // the write errors, the writer exits, and the blocked reader's
-        // send fails — the connection slot is released, not pinned
-        let _ = stream.set_write_timeout(Some(idle));
-    }
-    let reader_stream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let (tx, rx) = sync_channel::<Outgoing>(REPLY_QUEUE_BOUND);
-    let reader_shared = Arc::clone(shared);
-    let reader = std::thread::spawn(move || read_loop(reader_stream, &reader_shared, tx));
-    write_loop(stream, rx);
-    let _ = reader.join();
 }
 
 /// Loopback test for the shutdown gate that also recognizes IPv4-mapped
@@ -200,9 +160,10 @@ pub enum LineRead {
 /// cap and — because SO_RCVTIMEO only bounds the gap between reads, so a
 /// client dripping one byte per interval would never trip it — a
 /// deadline on assembling a single line. Generic over [`BufRead`]: the
-/// serving listener reads sockets with [`MAX_LINE_BYTES`], the dist
-/// layer reuses the same bounded reader with its larger frame cap
-/// (per-shard `RidgeStats` frames carry an F×F Gram block).
+/// dist layer reads its blocking sockets with its own frame cap
+/// (per-shard `RidgeStats` frames carry an F×F Gram block); the serving
+/// listener's event loops enforce the same bounds on their nonblocking
+/// receive buffers instead (see [`super::mux`]).
 pub fn read_line_bounded<R: BufRead>(
     reader: &mut R,
     buf: &mut Vec<u8>,
@@ -244,136 +205,6 @@ pub fn read_line_bounded<R: BufRead>(
             _ => {}
         }
     }
-}
-
-fn read_loop(stream: TcpStream, shared: &Arc<Shared>, out: SyncSender<Outgoing>) {
-    let idle = shared.idle_timeout;
-    if let Some(idle) = idle {
-        let _ = stream.set_read_timeout(Some(idle));
-    }
-    let peer_is_loopback = stream.peer_addr().map(|a| is_loopback_ip(a.ip())).unwrap_or(false);
-    let mut reader = BufReader::new(stream);
-    let mut buf = Vec::new();
-    loop {
-        match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES, idle) {
-            LineRead::Line => {}
-            LineRead::Eof | LineRead::Gone => break,
-            LineRead::Idle => {
-                // tell the client why, then release the budget slot
-                let _ = out.send(Outgoing::Last(wire::error_reply(
-                    "idle timeout; closing connection",
-                )));
-                break;
-            }
-            LineRead::Overlong => {
-                // there is no way to resynchronize mid-line: reply, close
-                let _ = out.send(Outgoing::Last(wire::error_reply(&format!(
-                    "request line exceeds {MAX_LINE_BYTES} bytes; closing connection"
-                ))));
-                break;
-            }
-        }
-        let line = match std::str::from_utf8(&buf) {
-            Ok(l) => l.trim(),
-            Err(_) => {
-                if out.send(Outgoing::Line(wire::error_reply("request is not UTF-8"))).is_err() {
-                    break;
-                }
-                continue;
-            }
-        };
-        if line.is_empty() {
-            continue;
-        }
-        let outgoing = match wire::parse_request(line) {
-            Err(e) => Outgoing::Line(wire::error_reply(&e)),
-            Ok(wire::Request::Ping) => Outgoing::Line(wire::ping_reply()),
-            Ok(wire::Request::Models) => Outgoing::Line(shared.router.models_reply()),
-            Ok(wire::Request::Stats) => Outgoing::Line(shared.router.stats_reply()),
-            Ok(wire::Request::Metrics) => Outgoing::Line(wire::metrics_reply()),
-            Ok(wire::Request::Shutdown) => {
-                if !peer_is_loopback && !shared.allow_remote_shutdown {
-                    crate::obs::warn(
-                        "server.listener",
-                        "shutdown refused from a non-loopback peer",
-                        &[],
-                    );
-                    Outgoing::Line(wire::error_reply(
-                        "shutdown refused from a non-loopback peer (the server \
-                         must opt in with --allow-remote-shutdown)",
-                    ))
-                } else {
-                    crate::obs::info("server.listener", "wire shutdown accepted", &[]);
-                    let _ = out.send(Outgoing::Last(wire::shutdown_reply()));
-                    shared.begin_shutdown();
-                    break;
-                }
-            }
-            Ok(wire::Request::Predict { model, x }) => {
-                match shared.router.dispatch_predict(model.as_deref(), &x) {
-                    Dispatch::Immediate(reply) => Outgoing::Line(reply),
-                    Dispatch::Pending { model, rx, guard } => {
-                        Outgoing::Reply { model, rx, guard }
-                    }
-                }
-            }
-        };
-        if out.send(outgoing).is_err() {
-            break; // writer exited (socket error): stop reading
-        }
-    }
-    // dropping `out` lets the writer drain what is pending, then exit
-}
-
-fn write_loop(stream: TcpStream, rx: Receiver<Outgoing>) {
-    let mut w = BufWriter::new(stream);
-    loop {
-        // Flush only when no reply is immediately ready: pipelined
-        // clients get batched writes, a lone request is never delayed.
-        let next = match rx.try_recv() {
-            Ok(o) => o,
-            Err(TryRecvError::Empty) => {
-                if w.flush().is_err() {
-                    return;
-                }
-                match rx.recv() {
-                    Ok(o) => o,
-                    Err(_) => return, // reader done, everything drained
-                }
-            }
-            Err(TryRecvError::Disconnected) => break,
-        };
-        let mut last = false;
-        let line = match next {
-            Outgoing::Line(l) => l,
-            Outgoing::Last(l) => {
-                last = true;
-                l
-            }
-            Outgoing::Reply { model, rx: reply_rx, guard } => {
-                let line = match reply_rx.recv() {
-                    Ok(y) => wire::predict_reply(&model, &y)
-                        .unwrap_or_else(|e| wire::error_reply(&e)),
-                    Err(_) => {
-                        // the route was swapped out mid-flight and its
-                        // service exited: rare, and retriable by contract
-                        wire::overload_reply(&format!(
-                            "model {model:?} was reloaded mid-request; retry"
-                        ))
-                    }
-                };
-                drop(guard); // release the admission slot with the reply in hand
-                line
-            }
-        };
-        if writeln!(w, "{line}").is_err() {
-            return;
-        }
-        if last {
-            break;
-        }
-    }
-    let _ = w.flush();
 }
 
 #[cfg(test)]

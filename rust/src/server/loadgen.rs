@@ -12,21 +12,44 @@
 //! bit-identical to `Model::predict` — the wire codec's shortest
 //! round-trip floats make that an equality test, not a tolerance.
 //!
-//! Backpressure replies (`"retry":true`) are retried after a short
-//! backoff and counted, so a run against a saturated server degrades to
-//! honest numbers (slower, with a retry count) rather than an error.
+//! The [`WireMode`] picks the protocol: plain JSON lines, the binary
+//! frame mode (each connection upgrades with `{"cmd":"binary"}` before
+//! the measured window), or **compare** — a JSON trial and a binary
+//! trial per client count, with every reply's raw bit pattern
+//! cross-checked between the two (`cross_mismatches`), the direct proof
+//! that frame mode changes latency but never a single output bit.
+//!
+//! Backpressure replies (`"retry":true` / `ST_RETRY` frames) are
+//! retried after a short backoff and counted, so a run against a
+//! saturated server degrades to honest numbers (slower, with a retry
+//! count) rather than an error. After the direct trials the harness
+//! also fetches the server's `metrics` snapshot and cross-checks the
+//! per-model `server.admission.<model>.rejected_total` registry counter
+//! against the `stats` reply's cumulative reject count.
 //!
 //! Results are emitted as `BENCH_serve.json` (same convention as the
 //! hotpath bench's `BENCH_hotpath.json`; CI uploads it as an artifact).
 
-use super::wire;
+use super::{frame, sys, wire};
 use crate::data::{DataSource, SyntheticSource};
 use crate::model::{Model, ModelStore};
-use std::io::{BufRead, BufReader, Write};
+use crate::runtime::Json;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::Barrier;
 use std::time::{Duration, Instant};
+
+/// Which protocol the measured requests use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// newline-delimited JSON (the default)
+    Json,
+    /// length-prefixed binary frames (each connection upgrades first)
+    Binary,
+    /// both, one trial each per client count, reply bits cross-checked
+    Compare,
+}
 
 /// One blocking request/reply connection to a `gzk server`.
 pub struct ClientConn {
@@ -58,6 +81,36 @@ impl ClientConn {
             Err(e) => Err(format!("read reply: {e}")),
         }
     }
+
+    /// Negotiate the binary frame mode: after the ack, every byte on
+    /// this connection is framed.
+    pub fn upgrade_binary(&mut self) -> Result<(), String> {
+        let reply = self.roundtrip(&wire::cmd_request("binary"))?;
+        if reply.ok && matches!(reply.body.get("binary"), Some(Json::Bool(true))) {
+            Ok(())
+        } else {
+            Err(reply
+                .error
+                .unwrap_or_else(|| "server did not ack the binary upgrade".to_string()))
+        }
+    }
+
+    /// Write one complete frame (header included).
+    pub fn send_frame(&mut self, frame_bytes: &[u8]) -> Result<(), String> {
+        self.writer.write_all(frame_bytes).map_err(|e| format!("send frame: {e}"))
+    }
+
+    /// Read one complete reply frame.
+    pub fn read_frame(&mut self) -> Result<Vec<u8>, String> {
+        frame::read_frame(&mut self.reader)?
+            .ok_or_else(|| "server closed the connection".to_string())
+    }
+
+    /// Send one frame and read the matching reply frame.
+    pub fn roundtrip_frame(&mut self, frame_bytes: &[u8]) -> Result<Vec<u8>, String> {
+        self.send_frame(frame_bytes)?;
+        self.read_frame()
+    }
 }
 
 /// What to run; see the `gzk loadgen` flags in `main.rs`.
@@ -85,12 +138,33 @@ pub struct LoadgenConfig {
     /// largest client count through the proxy, and tears the tier down —
     /// the serving twin of the distributed-fit worker sweep
     pub replica_sweep: Vec<usize>,
+    /// protocol for the measured requests
+    pub wire: WireMode,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: String::new(),
+            clients: vec![1],
+            requests_per_client: 100,
+            dataset: None,
+            model: None,
+            store: None,
+            seed: 1,
+            send_shutdown: false,
+            replica_sweep: Vec::new(),
+            wire: WireMode::Json,
+        }
+    }
 }
 
 /// One client-count trial, aggregated over all its connections.
 #[derive(Clone, Debug)]
 pub struct TrialResult {
     pub clients: usize,
+    /// protocol this trial ran over: `"json"` or `"binary"`
+    pub wire: &'static str,
     /// successful predictions (excludes retries)
     pub requests: usize,
     pub wall_secs: f64,
@@ -103,6 +177,9 @@ pub struct TrialResult {
     /// replies that were NOT bit-identical to the local model (0 unless
     /// verification found a real divergence)
     pub mismatches: usize,
+    /// compare mode only: replies whose bit pattern differed from the
+    /// matching request of this trial's JSON twin
+    pub cross_mismatches: usize,
 }
 
 /// One replica-count entry of the scaling sweep.
@@ -122,6 +199,7 @@ pub struct LoadgenReport {
     pub seed: u64,
     /// bit-identity checking was active (a local store was supplied)
     pub verified: bool,
+    pub wire_mode: WireMode,
     pub trials: Vec<TrialResult>,
     /// replica-scaling trials (empty unless a sweep was requested)
     pub replica_trials: Vec<ReplicaTrial>,
@@ -129,12 +207,21 @@ pub struct LoadgenReport {
     /// trials, one replica's stats fetched through the proxy — carrying
     /// the uptime / reload / cumulative-reject counters)
     pub server_stats: Vec<String>,
+    /// the target model's `server.admission.<model>.rejected_total`
+    /// registry counter, fetched over the wire `metrics` command after
+    /// the direct trials and cross-checked against the `stats` reply
+    /// (`None` when there was no direct target or the registry was off)
+    pub admission_rejected_total: Option<u64>,
 }
 
 impl LoadgenReport {
     pub fn mismatches(&self) -> usize {
-        self.trials.iter().map(|t| t.mismatches).sum::<usize>()
-            + self.replica_trials.iter().map(|r| r.trial.mismatches).sum::<usize>()
+        self.trials.iter().map(|t| t.mismatches + t.cross_mismatches).sum::<usize>()
+            + self
+                .replica_trials
+                .iter()
+                .map(|r| r.trial.mismatches + r.trial.cross_mismatches)
+                .sum::<usize>()
     }
 
     /// Machine-readable results (the CI serving-smoke artifact).
@@ -142,16 +229,22 @@ impl LoadgenReport {
     /// adds `latency_semantics` — loadgen percentiles are exact order
     /// statistics, while the embedded `server_stats` percentiles are
     /// bucket upper bounds on the recorded `bucket_ladder_s` (see
-    /// [`pct`] and `Router::stats_reply`).
+    /// [`pct`] and `Router::stats_reply`); format 4 adds the per-trial
+    /// `wire` / `cross_mismatches` fields (the JSON-vs-binary frame
+    /// comparison) plus the top-level `wire_mode` and
+    /// `admission_rejected_total`.
     pub fn write_json(&self, path: &std::path::Path) -> Result<(), String> {
         fn trial_json(t: &TrialResult, prefix: &str) -> String {
             format!(
                 concat!(
-                    r#"{{{}"clients":{},"requests":{},"wall_secs":{:.4},"throughput_rps":{:.1},"#,
-                    r#""p50_us":{:.2},"p95_us":{:.2},"p99_us":{:.2},"retries":{},"mismatches":{}}}"#
+                    r#"{{{}"clients":{},"wire":"{}","requests":{},"wall_secs":{:.4},"#,
+                    r#""throughput_rps":{:.1},"#,
+                    r#""p50_us":{:.2},"p95_us":{:.2},"p99_us":{:.2},"retries":{},"#,
+                    r#""mismatches":{},"cross_mismatches":{}}}"#
                 ),
                 prefix,
                 t.clients,
+                t.wire,
                 t.requests,
                 t.wall_secs,
                 t.throughput_rps,
@@ -159,7 +252,8 @@ impl LoadgenReport {
                 t.p95_us,
                 t.p99_us,
                 t.retries,
-                t.mismatches
+                t.mismatches,
+                t.cross_mismatches
             )
         }
         let trials: Vec<String> = self.trials.iter().map(|t| trial_json(t, "")).collect();
@@ -172,10 +266,20 @@ impl LoadgenReport {
             .iter()
             .map(|b| format!("{b:?}"))
             .collect();
+        let wire_mode = match self.wire_mode {
+            WireMode::Json => "json",
+            WireMode::Binary => "binary",
+            WireMode::Compare => "compare",
+        };
+        let rejected = match self.admission_rejected_total {
+            Some(n) => n.to_string(),
+            None => "null".to_string(),
+        };
         let text = format!(
             concat!(
-                r#"{{"format":3,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
-                r#""requests_per_client":{},"seed":{},"verified":{},"#,
+                r#"{{"format":4,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
+                r#""requests_per_client":{},"seed":{},"verified":{},"wire_mode":"{}","#,
+                r#""admission_rejected_total":{},"#,
                 r#""latency_semantics":{{"trials":"exact order statistics","#,
                 r#""server_stats":"bucket upper bound on bucket_ladder_s"}},"#,
                 r#""bucket_ladder_s":[{}],"trials":[{}],"#,
@@ -187,6 +291,8 @@ impl LoadgenReport {
             self.requests_per_client,
             self.seed,
             self.verified,
+            wire_mode,
+            rejected,
             ladder.join(","),
             trials.join(","),
             sweep.join(",")
@@ -256,6 +362,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
             "the replica sweep spins its own servers and needs --store <model dir>".to_string()
         );
     }
+    let max_clients = *cfg.clients.iter().max().expect("non-empty");
+    // one socket per client plus the control conn and slack; doubled so
+    // an in-process replica sweep (whose servers also hold fds) fits
+    sys::raise_nofile_limit(2 * max_clients as u64 + 256);
 
     // resolve the target model: ask the live server when there is one,
     // else (sweep-only) read the store manifest the sweep will serve from
@@ -307,7 +417,6 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
             recorded_dataset.filter(|n| SyntheticSource::by_name(n, 1, cfg.seed).is_ok())
         })
         .unwrap_or_else(|| "elevation".to_string());
-    let max_clients = *cfg.clients.iter().max().expect("non-empty");
     let total_rows = max_clients * cfg.requests_per_client;
     let source = SyntheticSource::by_name(&dataset, total_rows, cfg.seed)?;
     if source.dim() != d {
@@ -318,12 +427,32 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         ));
     }
 
+    let ctx =
+        TrialCtx { cfg, model_name: &name, source: &source, local: local.as_deref() };
     let mut trials = Vec::with_capacity(cfg.clients.len());
     let mut server_stats = Vec::new();
     if let Some(control) = control.as_mut() {
         for &n_clients in &cfg.clients {
-            let trial = run_trial(cfg, &cfg.addr, &name, n_clients, &source, local.as_deref())?;
-            trials.push(trial);
+            match cfg.wire {
+                WireMode::Json => {
+                    let (t, _) = run_trial(&ctx, &cfg.addr, n_clients, false, false)?;
+                    trials.push(t);
+                }
+                WireMode::Binary => {
+                    let (t, _) = run_trial(&ctx, &cfg.addr, n_clients, true, false)?;
+                    trials.push(t);
+                }
+                WireMode::Compare => {
+                    // identical rows over both protocols; the reply bit
+                    // patterns must agree request for request
+                    let (tj, bits_json) = run_trial(&ctx, &cfg.addr, n_clients, false, true)?;
+                    let (mut tb, bits_bin) = run_trial(&ctx, &cfg.addr, n_clients, true, true)?;
+                    tb.cross_mismatches =
+                        bits_json.iter().zip(&bits_bin).filter(|(a, b)| a != b).count();
+                    trials.push(tj);
+                    trials.push(tb);
+                }
+            }
             let stats = control.roundtrip(&wire::cmd_request("stats"))?;
             if !stats.ok {
                 return Err(stats.error.unwrap_or_else(|| "stats command failed".to_string()));
@@ -332,10 +461,19 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         }
     }
 
+    // admission-counter cross-check: the registry twin must cover what
+    // the router's own stats report (see check_admission_counter)
+    let mut admission_rejected_total = None;
+    if let Some(control) = control.as_mut() {
+        let last_stats = server_stats.last().map(String::as_str);
+        admission_rejected_total = check_admission_counter(control, &name, last_stats)?;
+    }
+
     // replica-scaling sweep: an in-process serving tier (N servers + a
     // proxy, all on loopback ephemeral ports) per requested count, driven
     // at the largest client count so the single-replica admission bound
     // is actually contended
+    let sweep_binary = cfg.wire == WireMode::Binary;
     let mut replica_trials = Vec::with_capacity(cfg.replica_sweep.len());
     for &n_replicas in &cfg.replica_sweep {
         if n_replicas == 0 {
@@ -354,10 +492,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         let proxy =
             crate::dist::Proxy::start("127.0.0.1:0", addrs, crate::dist::ProxyConfig::default())?;
         let proxy_addr = proxy.local_addr().to_string();
-        let trial = run_trial(cfg, &proxy_addr, &name, max_clients, &source, local.as_deref());
+        let trial = run_trial(&ctx, &proxy_addr, max_clients, sweep_binary, false);
         // capture one replica's stats through the proxy (uptime, reloads,
         // cumulative rejects) before tearing the tier down
-        if let Ok(t) = &trial {
+        if let Ok((t, _)) = &trial {
             let stats = ClientConn::connect(&proxy_addr)
                 .and_then(|mut c| c.roundtrip(&wire::cmd_request("stats")));
             if let Ok(stats) = stats {
@@ -391,10 +529,66 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         requests_per_client: cfg.requests_per_client,
         seed: cfg.seed,
         verified: local.is_some(),
+        wire_mode: cfg.wire,
         trials,
         replica_trials,
         server_stats,
+        admission_rejected_total,
     })
+}
+
+/// Fetch `server.admission.<model>.rejected_total` from the wire
+/// `metrics` snapshot and require it covers the cumulative reject count
+/// the `stats` reply reports for the model. `Ok(None)` when the server's
+/// registry is disabled (nothing to cross-check).
+fn check_admission_counter(
+    control: &mut ClientConn,
+    model: &str,
+    last_stats: Option<&str>,
+) -> Result<Option<u64>, String> {
+    let metrics = control.roundtrip(&wire::cmd_request("metrics"))?;
+    if !metrics.ok {
+        return Err(metrics.error.unwrap_or_else(|| "metrics command failed".to_string()));
+    }
+    let snapshot = metrics
+        .body
+        .get("metrics")
+        .ok_or_else(|| "metrics reply missing the registry snapshot".to_string())?;
+    if !matches!(snapshot.get("enabled"), Some(Json::Bool(true))) {
+        return Ok(None);
+    }
+    let counter_name = format!("server.admission.{model}.rejected_total");
+    let counter =
+        snapshot.get("counters").and_then(|c| c.get(&counter_name)).and_then(|v| v.as_f64());
+    // the stats reply's per-model cumulative count (retired + live)
+    let stats_total = last_stats
+        .and_then(|raw| Json::parse(raw).ok())
+        .and_then(|j| {
+            j.get("stats")?.as_arr()?.iter().find_map(|row| {
+                (row.get("model")?.as_str()? == model)
+                    .then(|| row.get("total_rejects")?.as_f64())
+                    .flatten()
+            })
+        })
+        .unwrap_or(0.0) as u64;
+    let counter = match counter {
+        Some(v) => v as u64,
+        // a proxy answers `metrics` locally and its snapshot has no
+        // server-side admission counters: absence is "nothing to
+        // cross-check", not an error (the e2e tests and CI assert
+        // presence where the target is known to be a server)
+        None => return Ok(None),
+    };
+    // >= rather than ==: the registry is process-global, so other routers
+    // for the same model name (an earlier in-process replica sweep, a
+    // prior server in the same test process) add to the same counter
+    if counter < stats_total {
+        return Err(format!(
+            "admission counter cross-check failed: registry {counter_name:?} = {counter} but \
+             the stats reply counts {stats_total} rejects for model {model:?}"
+        ));
+    }
+    Ok(Some(counter))
 }
 
 /// Resolve which served model to target: the named one, or the single
@@ -419,22 +613,80 @@ fn pick_target<'a>(served: &'a [WireModel], want: Option<&str>) -> Result<&'a Wi
     }
 }
 
+/// What every trial shares; bundled so [`run_trial`] stays callable with
+/// the per-trial knobs (target address, client count, protocol) alone.
+struct TrialCtx<'a> {
+    cfg: &'a LoadgenConfig,
+    model_name: &'a str,
+    source: &'a SyntheticSource,
+    local: Option<&'a dyn Model>,
+}
+
 /// What each client thread brings home.
 struct ClientOut {
     latencies: Vec<f64>,
     retries: usize,
     mismatches: usize,
+    /// reply bit patterns in request order (compare mode only)
+    ys: Vec<Vec<u64>>,
 }
 
-fn run_trial(
-    cfg: &LoadgenConfig,
-    addr: &str,
+/// One predict round-trip with the retry-on-backpressure loop, over
+/// whichever protocol the connection runs.
+fn predict_roundtrip(
+    conn: &mut ClientConn,
     model_name: &str,
+    x: &[f64],
+    binary: bool,
+    retries: &mut usize,
+) -> Result<Vec<f64>, String> {
+    if binary {
+        let req = frame::frame(&frame::predict_payload(Some(model_name), x));
+        loop {
+            let reply = conn.roundtrip_frame(&req)?;
+            match frame::parse_reply(frame::payload(&reply))? {
+                frame::FrameReply::Ok { y } => return Ok(y),
+                frame::FrameReply::Err { msg, retry } => {
+                    if !retry || *retries >= 10_000 {
+                        return Err(msg);
+                    }
+                    *retries += 1;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                frame::FrameReply::Pong => {
+                    return Err("unexpected pong reply to a predict frame".to_string());
+                }
+            }
+        }
+    } else {
+        let line = wire::predict_request(Some(model_name), x);
+        loop {
+            let reply = conn.roundtrip(&line)?;
+            if reply.ok {
+                return reply.y();
+            }
+            if !reply.retry || *retries >= 10_000 {
+                return Err(reply.error.unwrap_or_else(|| "server error".to_string()));
+            }
+            *retries += 1;
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+/// One trial: `n_clients` connections × `requests_per_client` requests.
+/// With `collect`, the second return value holds every reply's bit
+/// pattern indexed `client * requests + request` — what compare mode
+/// diffs across protocols.
+fn run_trial(
+    ctx: &TrialCtx<'_>,
+    addr: &str,
     n_clients: usize,
-    source: &SyntheticSource,
-    local: Option<&dyn Model>,
-) -> Result<TrialResult, String> {
-    let requests = cfg.requests_per_client;
+    binary: bool,
+    collect: bool,
+) -> Result<(TrialResult, Vec<Vec<u64>>), String> {
+    let requests = ctx.cfg.requests_per_client;
+    let (model_name, source, local) = (ctx.model_name, ctx.source, ctx.local);
     let barrier = Barrier::new(n_clients + 1);
     let mut outs: Vec<Result<ClientOut, String>> = Vec::with_capacity(n_clients);
     let mut wall = 0.0f64;
@@ -442,50 +694,66 @@ fn run_trial(
         let mut joins = Vec::with_capacity(n_clients);
         for t in 0..n_clients {
             let barrier = &barrier;
-            joins.push(scope.spawn(move || -> Result<ClientOut, String> {
-                // connect before the barrier: setup cost is not load.
-                // EVERY thread must reach the barrier exactly once — even
-                // on a failed connect — or the whole trial deadlocks.
-                let conn = ClientConn::connect(addr);
-                barrier.wait();
-                let mut conn = conn?;
-                let mut out = ClientOut {
-                    latencies: Vec::with_capacity(requests),
-                    retries: 0,
-                    mismatches: 0,
-                };
-                for r in 0..requests {
-                    let row = t * requests + r;
-                    let (x, _y) = source.read_range(row, row + 1)?;
-                    let line = wire::predict_request(Some(model_name), x.row(0));
-                    let t0 = Instant::now();
-                    let y = loop {
-                        let reply = conn.roundtrip(&line)?;
-                        if reply.ok {
-                            break reply.y()?;
+            // small explicit stacks: a 1k–10k client sweep would reserve
+            // gigabytes of address space on default 8 MiB stacks
+            let join = std::thread::Builder::new()
+                .stack_size(512 << 10)
+                .spawn_scoped(scope, move || -> Result<ClientOut, String> {
+                    // connect (and upgrade) before the barrier: setup cost
+                    // is not load. EVERY thread must reach the barrier
+                    // exactly once — even on a failed connect — or the
+                    // whole trial deadlocks.
+                    let conn = ClientConn::connect(addr).and_then(|mut c| {
+                        if binary {
+                            c.upgrade_binary()?;
                         }
-                        if !reply.retry || out.retries >= 10_000 {
-                            return Err(reply
-                                .error
-                                .unwrap_or_else(|| "server error".to_string()));
-                        }
-                        out.retries += 1;
-                        std::thread::sleep(Duration::from_micros(200));
+                        Ok(c)
+                    });
+                    barrier.wait();
+                    let mut conn = conn?;
+                    let mut out = ClientOut {
+                        latencies: Vec::with_capacity(requests),
+                        retries: 0,
+                        mismatches: 0,
+                        ys: Vec::new(),
                     };
-                    out.latencies.push(t0.elapsed().as_secs_f64());
-                    if let Some(model) = local {
-                        let expect = model.predict(&x);
-                        let same = y.len() == expect.cols()
-                            && y.iter()
-                                .zip(expect.row(0))
-                                .all(|(a, b)| a.to_bits() == b.to_bits());
-                        if !same {
-                            out.mismatches += 1;
+                    for r in 0..requests {
+                        let row = t * requests + r;
+                        let (x, _y) = source.read_range(row, row + 1)?;
+                        let t0 = Instant::now();
+                        let y = predict_roundtrip(
+                            &mut conn,
+                            model_name,
+                            x.row(0),
+                            binary,
+                            &mut out.retries,
+                        )?;
+                        out.latencies.push(t0.elapsed().as_secs_f64());
+                        if let Some(model) = local {
+                            let expect = model.predict(&x);
+                            let same = y.len() == expect.cols()
+                                && y.iter()
+                                    .zip(expect.row(0))
+                                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                            if !same {
+                                out.mismatches += 1;
+                            }
+                        }
+                        if collect {
+                            out.ys.push(y.iter().map(|v| v.to_bits()).collect());
                         }
                     }
-                }
-                Ok(out)
-            }));
+                    Ok(out)
+                })
+                .map_err(|e| format!("spawn loadgen client thread: {e}"));
+            match join {
+                Ok(j) => joins.push(j),
+                Err(e) => outs.push(Err(e)),
+            }
+        }
+        // threads that failed to even spawn still owe the barrier a wait
+        for _ in joins.len()..n_clients {
+            barrier.wait();
         }
         barrier.wait();
         let t0 = Instant::now();
@@ -498,16 +766,19 @@ fn run_trial(
     let mut latencies = Vec::with_capacity(n_clients * requests);
     let mut retries = 0;
     let mut mismatches = 0;
+    let mut bits = Vec::new();
     for out in outs {
         let out = out?;
         latencies.extend(out.latencies);
         retries += out.retries;
         mismatches += out.mismatches;
+        bits.extend(out.ys);
     }
     latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
     let total = latencies.len();
-    Ok(TrialResult {
+    let trial = TrialResult {
         clients: n_clients,
+        wire: if binary { "binary" } else { "json" },
         requests: total,
         wall_secs: wall,
         throughput_rps: total as f64 / wall.max(1e-12),
@@ -516,5 +787,7 @@ fn run_trial(
         p99_us: pct(&latencies, 99, 100) * 1e6,
         retries,
         mismatches,
-    })
+        cross_mismatches: 0,
+    };
+    Ok((trial, bits))
 }

@@ -2,45 +2,59 @@
 //! model / batcher / exec stack (DESIGN.md §3c).
 //!
 //! ```text
-//!   TcpListener ── accept loop ──► per-connection reader ─┐ dispatch
-//!                                   per-connection writer ◄┘ (in order)
-//!        │                                  │
+//!   TcpListener ── accept loop ──► event loop 0..N  (poll(2) readiness;
+//!        │          round-robin      each loop owns per-connection
+//!        │                           state machines: rbuf → parse →
+//!        │                           dispatch → ordered replies → wbuf)
 //!        │            wire: newline-delimited JSON (predict / models /
-//!        │                  stats / ping / shutdown)
+//!        │                  stats / metrics / ping / shutdown), or —
+//!        │                  after {"cmd":"binary"} — length-prefixed
+//!        │                  binary frames (bit-exact raw LE f64)
 //!        ▼                                  ▼
 //!   router: name ──► ModelRoute { PredictionService, Admission }
 //!        ▲               each route = the L3 dynamic batcher over one
-//!        │               artifact; batch compute draws from exec::Pool
+//!        │               artifact; batch compute draws from exec::Pool;
+//!        │               ready replies ring the owning loop's waker
 //!   manifest poll: ModelStore/models.json fingerprints → hot-reload
 //! ```
 //!
-//! * [`wire`] — the request/response codec. Floats reuse the artifact
-//!   convention (shortest round-trip formatting), so predictions cross
-//!   the wire **bit-exactly** — `gzk loadgen` verifies replies against a
-//!   local `Model::predict` with equality, not tolerance.
+//! * [`wire`] — the JSON request/response codec. Floats reuse the
+//!   artifact convention (shortest round-trip formatting), so
+//!   predictions cross the wire **bit-exactly** — `gzk loadgen` verifies
+//!   replies against a local `Model::predict` with equality, not
+//!   tolerance.
+//! * [`frame`] — the optional binary frame codec (negotiated per
+//!   connection): length-prefixed, little-endian raw f64 payloads, the
+//!   same 1 MiB cap as the JSON line.
 //! * [`router`] — multi-model routing over a [`ModelStore`] directory
 //!   with manifest-poll hot-reload: persist a new artifact into the
 //!   store (`gzk fit --out <store>`) and the running server serves it
 //!   without restart.
 //! * [`admission`] — bounded per-model queues; overload is answered with
 //!   a `"retry":true` backpressure reply instead of an unbounded queue.
-//! * [`listener`] — accept loop + per-connection reader/writer threads
-//!   (pipelined: consecutive requests from one connection share a
-//!   dynamic batch), connection budget sized from the pool policy.
+//! * [`listener`] — accept loop (connection budget, round-robin deal to
+//!   the event loops) + the bounded line reader the dist layer shares.
+//! * [`mux`] — the event loops: nonblocking sockets, `poll(2)`
+//!   readiness via [`sys`], per-connection state machines, reply-ready
+//!   doorbells. Thread count is O(event-loops), not O(connections).
+//! * [`sys`] — the thin std-only FFI shim (`poll(2)`, `RLIMIT_NOFILE`).
 //! * [`loadgen`] — the measurement harness behind `gzk loadgen`:
-//!   concurrent clients over real sockets, bit-identity verification,
-//!   `BENCH_serve.json` with throughput + latency percentiles per client
-//!   count.
+//!   concurrent clients over real sockets (JSON, binary, or both for
+//!   cross-checking), bit-identity verification, `BENCH_serve.json` with
+//!   throughput + latency percentiles per client count.
 //!
 //! [`ModelStore`]: crate::model::ModelStore
 
 pub mod admission;
+pub mod frame;
 pub mod listener;
 pub mod loadgen;
+pub mod mux;
 pub mod router;
+pub mod sys;
 pub mod wire;
 
-pub use loadgen::{ClientConn, LoadgenConfig, LoadgenReport, TrialResult};
+pub use loadgen::{ClientConn, LoadgenConfig, LoadgenReport, TrialResult, WireMode};
 pub use router::{Router, RouterConfig};
 
 use listener::Shared;
@@ -70,6 +84,10 @@ pub struct ServerConfig {
     /// honor the wire `shutdown` command from non-loopback peers; off by
     /// default so a non-loopback `--addr` is not a remote kill switch
     pub allow_remote_shutdown: bool,
+    /// event-loop threads multiplexing the connections; 0 = size from
+    /// the pool policy (pool width, clamped to [1, 4] — loops are
+    /// I/O-bound, a handful multiplexes thousands of connections)
+    pub event_loops: usize,
 }
 
 impl Default for ServerConfig {
@@ -82,6 +100,7 @@ impl Default for ServerConfig {
             max_conns: 0,
             idle_timeout: Duration::from_secs(300),
             allow_remote_shutdown: false,
+            event_loops: 0,
         }
     }
 }
@@ -94,6 +113,7 @@ pub struct Server {
     local_addr: SocketAddr,
     accept_handle: Option<JoinHandle<()>>,
     poll_handle: Option<JoinHandle<()>>,
+    loop_handles: Vec<JoinHandle<()>>,
 }
 
 impl Server {
@@ -121,6 +141,22 @@ impl Server {
         } else {
             8 * crate::exec::Pool::global().threads()
         };
+        let n_loops = if cfg.event_loops > 0 {
+            cfg.event_loops
+        } else {
+            crate::exec::Pool::global().threads().clamp(1, 4)
+        };
+        // the budget plus waker pairs, listener, store and slack; a
+        // best-effort raise so a 1k–10k connection budget is actually
+        // reachable past the usual 1024-fd soft default
+        sys::raise_nofile_limit(max_conns as u64 + 64);
+        let mut loops = Vec::with_capacity(n_loops);
+        let mut wake_rxs = Vec::with_capacity(n_loops);
+        for _ in 0..n_loops {
+            let (handle, wake_rx) = mux::LoopHandle::new()?;
+            loops.push(handle);
+            wake_rxs.push(wake_rx);
+        }
         let shared = Arc::new(Shared {
             router,
             shutdown: AtomicBool::new(false),
@@ -129,7 +165,17 @@ impl Server {
             addr: local_addr,
             idle_timeout: (cfg.idle_timeout > Duration::ZERO).then_some(cfg.idle_timeout),
             allow_remote_shutdown: cfg.allow_remote_shutdown,
+            loops,
         });
+        let loop_handles = wake_rxs
+            .into_iter()
+            .enumerate()
+            .map(|(idx, wake_rx)| {
+                let shared = Arc::clone(&shared);
+                let handle = Arc::clone(&shared.loops[idx]);
+                std::thread::spawn(move || mux::event_loop(idx, shared, handle, wake_rx))
+            })
+            .collect();
         let accept_shared = Arc::clone(&shared);
         let accept_handle =
             std::thread::spawn(move || listener::accept_loop(listener, accept_shared));
@@ -141,6 +187,7 @@ impl Server {
             local_addr,
             accept_handle: Some(accept_handle),
             poll_handle: Some(poll_handle),
+            loop_handles,
         })
     }
 
@@ -161,8 +208,9 @@ impl Server {
     }
 
     /// Block until the server has shut down (wire `shutdown` command or
-    /// [`shutdown`](Server::shutdown)), drain live connections (bounded
-    /// grace period), and return the final per-model stats reply line.
+    /// [`shutdown`](Server::shutdown)), drain live connections (the
+    /// event loops flush in-flight replies under a bounded grace
+    /// period), and return the final per-model stats reply line.
     pub fn wait(mut self) -> String {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
@@ -170,8 +218,10 @@ impl Server {
         if let Some(h) = self.poll_handle.take() {
             let _ = h.join();
         }
-        // connections admitted before shutdown finish their in-flight
-        // replies; bound the grace period so wait() always returns
+        for h in self.loop_handles.drain(..) {
+            let _ = h.join();
+        }
+        // belt and braces: the loops already drained their connections
         let deadline = Instant::now() + Duration::from_secs(5);
         while self.shared.active_conns.load(Ordering::Acquire) > 0
             && Instant::now() < deadline

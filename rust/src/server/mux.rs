@@ -1,0 +1,805 @@
+//! Event-driven connection multiplexing: the C10K half of the serving
+//! tier (DESIGN.md §3c).
+//!
+//! The thread-per-connection listener capped realistic concurrency at
+//! hundreds of clients (two OS threads per accept). Here a small fixed
+//! pool of event-loop threads drives every connection through
+//! nonblocking sockets and level-triggered readiness polling
+//! ([`sys::poll_fds`]): the accept loop hands each new connection to a
+//! loop round-robin, and the loop owns a [`Conn`] state machine per
+//! connection — receive buffer, ordered reply queue, write buffer,
+//! deadlines. Thread count is O(event-loops), independent of connection
+//! count.
+//!
+//! Every hardening bound of the thread-per-connection design survives as
+//! a state transition (the PR-5 invariants, re-verified by
+//! `tests/server_e2e.rs`):
+//!
+//! * **line/frame cap** — a newline-free flood trips the
+//!   [`MAX_LINE_BYTES`] check on the receive buffer (and a hostile frame
+//!   length prefix is rejected from its header by [`frame::scan`]):
+//!   error reply, then close. No way to resynchronize mid-line.
+//! * **slow-loris** — `last_read` bounds the gap between reads and
+//!   `assembly_start` bounds how long one request may take to assemble;
+//!   either deadline queues the idle-timeout reply and closes.
+//! * **flooder that never reads** — replies stop being *read* from the
+//!   socket? The write buffer grows to its high-water mark, the loop
+//!   stops polling the connection for readability (backpressure instead
+//!   of memory growth), and a write side that makes no progress for the
+//!   idle timeout is closed outright.
+//! * **reply-queue bound** — at [`REPLY_QUEUE_BOUND`] dispatched-but-
+//!   unwritten replies the connection also stops being read, the moral
+//!   equivalent of the old reader thread blocking on its full
+//!   `sync_channel`.
+//! * **loopback-gated shutdown** — unchanged: the wire `shutdown` is
+//!   honored only from loopback peers unless the server opted in.
+//!
+//! Replies stay **in request order**: dispatched predicts join a
+//! per-connection [`VecDeque`] and only the *front* entry's channel is
+//! polled; completed replies behind a still-pending head wait their
+//! turn. A ready reply does not wait for a poll timeout either — every
+//! dispatch carries a [`ReplyNotify`] doorbell that wakes the owning
+//! loop (a byte through its loopback waker pair) the moment the batcher
+//! sends the reply.
+
+use super::admission::AdmissionGuard;
+use super::frame;
+use super::listener::{is_loopback_ip, Shared, MAX_LINE_BYTES};
+use super::sys::{self, PollFd, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+use super::wire;
+use super::router::Dispatch;
+use crate::coordinator::ReplyNotify;
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-connection bound on dispatched-but-unwritten replies. Admission
+/// bounds admitted predicts, but the cheap commands (ping/models/stats,
+/// error replies) bypass admission — without this bound, a client that
+/// floods commands and never reads its socket grows the reply queue
+/// without limit. At the bound the connection stops being polled for
+/// readability: backpressure, not memory growth.
+pub(crate) const REPLY_QUEUE_BOUND: usize = 256;
+
+/// Stop reading a connection whose unwritten reply bytes reach this
+/// high-water mark (the buffered twin of the reply-queue bound, for
+/// replies that are large rather than many).
+const WBUF_HIGH_WATER: usize = MAX_LINE_BYTES;
+
+/// How long a shutting-down loop keeps flushing in-flight replies
+/// before closing whatever is left.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// Largest poll timeout: the sweep tick that backstops deadlines and any
+/// doorbell lost to a crashed service thread.
+const MAX_POLL_MS: i32 = 250;
+
+/// One event loop's mailbox: how the accept loop (new connections), the
+/// batcher doorbells (ready replies) and shutdown reach a thread that is
+/// parked inside `poll(2)`. The waker is a nonblocking loopback TCP pair
+/// built entirely from std — the write end lives here, the read end is
+/// fd 0 of the loop's poll set.
+pub(crate) struct LoopHandle {
+    inbox: Mutex<Vec<TcpStream>>,
+    wake_tx: Mutex<TcpStream>,
+}
+
+impl LoopHandle {
+    /// Build the handle and its waker pair; the returned stream is the
+    /// read end the loop polls.
+    pub(crate) fn new() -> Result<(Arc<LoopHandle>, TcpStream), String> {
+        let (tx, rx) = loopback_pair()?;
+        Ok((Arc::new(LoopHandle { inbox: Mutex::new(Vec::new()), wake_tx: Mutex::new(tx) }), rx))
+    }
+
+    /// Interrupt the loop's poll. One byte through the waker; a full
+    /// send buffer (`WouldBlock`) means a wake is already pending, which
+    /// is all a wake means — never block, never fail.
+    pub(crate) fn wake(&self) {
+        if let Ok(mut tx) = self.wake_tx.lock() {
+            let _ = tx.write(&[1]);
+        }
+    }
+
+    /// Hand a freshly accepted connection to this loop.
+    pub(crate) fn enqueue_conn(&self, stream: TcpStream) {
+        self.inbox.lock().expect("loop inbox lock").push(stream);
+        self.wake();
+    }
+}
+
+/// A connected nonblocking loopback pair. TCP instead of a pipe keeps
+/// the crate std-only; accepting until the peer matches our connect's
+/// local address guards against a foreign process racing onto the
+/// ephemeral port.
+fn loopback_pair() -> Result<(TcpStream, TcpStream), String> {
+    let l = TcpListener::bind("127.0.0.1:0").map_err(|e| format!("bind waker: {e}"))?;
+    let addr = l.local_addr().map_err(|e| format!("waker addr: {e}"))?;
+    let tx = TcpStream::connect(addr).map_err(|e| format!("connect waker: {e}"))?;
+    let local = tx.local_addr().map_err(|e| format!("waker local addr: {e}"))?;
+    loop {
+        let (rx, peer) = l.accept().map_err(|e| format!("accept waker: {e}"))?;
+        if peer != local {
+            continue; // someone else's connect; not our waker
+        }
+        tx.set_nonblocking(true).map_err(|e| format!("waker nonblocking: {e}"))?;
+        rx.set_nonblocking(true).map_err(|e| format!("waker nonblocking: {e}"))?;
+        return Ok((tx, rx));
+    }
+}
+
+#[cfg(unix)]
+fn raw_fd(s: &TcpStream) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd(_s: &TcpStream) -> i32 {
+    -1 // the poll shim reports Unsupported before the fd matters
+}
+
+/// One entry of a connection's ordered reply queue.
+enum PendingOut {
+    /// reply bytes ready to move into the write buffer
+    Ready(Vec<u8>),
+    /// an admitted predict: poll `rx`; the guard holds the admission
+    /// slot until the reply is serialized. `binary` is the connection's
+    /// mode *at dispatch time*, so predicts pipelined ahead of a
+    /// `binary` upgrade still get the JSON replies they asked for.
+    Await { model: String, rx: Receiver<Vec<f64>>, guard: AdmissionGuard, binary: bool },
+    /// close once everything queued before this marker is flushed
+    Close,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    fd: i32,
+    peer_loopback: bool,
+    /// negotiated frame mode (`{"cmd":"binary"}` flips it)
+    binary: bool,
+    /// bytes read but not yet parsed into a request
+    rbuf: Vec<u8>,
+    /// serialized replies not yet written; `wpos` marks the write cursor
+    wbuf: Vec<u8>,
+    wpos: usize,
+    pending: VecDeque<PendingOut>,
+    /// peer closed its write side (EOF); finish owed replies, then close
+    read_closed: bool,
+    /// a Close marker is queued: stop reading, drain, close
+    close_queued: bool,
+    /// reap this connection at the next sweep
+    dead: bool,
+    last_read: Instant,
+    /// when the (incomplete) request at the head of `rbuf` started
+    /// assembling — the slow-loris deadline
+    assembly_start: Option<Instant>,
+    last_write_progress: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Result<Conn, String> {
+        let _ = stream.set_nodelay(true); // request/reply lines, not bulk data
+        stream.set_nonblocking(true).map_err(|e| format!("nonblocking: {e}"))?;
+        let peer_loopback = stream.peer_addr().map(|a| is_loopback_ip(a.ip())).unwrap_or(false);
+        let fd = raw_fd(&stream);
+        let now = Instant::now();
+        Ok(Conn {
+            stream,
+            fd,
+            peer_loopback,
+            binary: false,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            read_closed: false,
+            close_queued: false,
+            dead: false,
+            last_read: now,
+            assembly_start: None,
+            last_write_progress: now,
+        })
+    }
+
+    fn unwritten(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Queue one reply in order.
+    fn queue(&mut self, bytes: Vec<u8>) {
+        self.pending.push_back(PendingOut::Ready(bytes));
+    }
+
+    /// Queue a final reply followed by the close marker; reading stops.
+    fn queue_last(&mut self, bytes: Vec<u8>) {
+        if self.close_queued {
+            return; // the first close wins; never stack duplicates
+        }
+        self.pending.push_back(PendingOut::Ready(bytes));
+        self.pending.push_back(PendingOut::Close);
+        self.close_queued = true;
+    }
+
+    /// An error reply in the connection's current wire mode.
+    fn error_bytes(&self, msg: &str) -> Vec<u8> {
+        if self.binary {
+            frame::frame(&frame::status_payload(frame::ST_ERR, msg))
+        } else {
+            json_line(&wire::error_reply(msg))
+        }
+    }
+
+    /// May this connection's socket be polled for readability?
+    fn wants_read(&self) -> bool {
+        !self.read_closed
+            && !self.close_queued
+            && self.pending.len() < REPLY_QUEUE_BOUND
+            && self.unwritten() < WBUF_HIGH_WATER
+    }
+
+    fn poll_events(&self, shutting: bool) -> i16 {
+        let mut ev = 0i16;
+        if self.wants_read() && !shutting {
+            ev |= POLLIN;
+        }
+        if self.unwritten() > 0 {
+            ev |= POLLOUT;
+        }
+        ev // ERR/HUP/NVAL are reported even with no requested events
+    }
+
+    /// The soonest instant a deadline could fire for this connection.
+    fn next_deadline(&self, idle: Duration) -> Option<Instant> {
+        let mut soonest: Option<Instant> = None;
+        let mut push = |t: Instant| {
+            soonest = Some(match soonest {
+                Some(s) if s <= t => s,
+                _ => t,
+            });
+        };
+        if !self.close_queued && !self.read_closed {
+            push(self.last_read + idle);
+            if let Some(t0) = self.assembly_start {
+                push(t0 + idle);
+            }
+        }
+        if self.unwritten() > 0 {
+            push(self.last_write_progress + idle);
+        }
+        soonest
+    }
+}
+
+fn json_line(line: &str) -> Vec<u8> {
+    let mut b = Vec::with_capacity(line.len() + 1);
+    b.extend_from_slice(line.as_bytes());
+    b.push(b'\n');
+    b
+}
+
+/// Convert an `Dispatch::Immediate` JSON reply (routing error, admission
+/// overload, submit failure — a successful predict is always `Pending`)
+/// into the equivalent reply frame, preserving the retry contract.
+fn immediate_frame(line: &str) -> Vec<u8> {
+    let payload = match wire::parse_reply(line) {
+        Ok(r) => {
+            let msg = r.error.unwrap_or_else(|| "server error".to_string());
+            frame::status_payload(if r.retry { frame::ST_RETRY } else { frame::ST_ERR }, &msg)
+        }
+        Err(_) => frame::status_payload(frame::ST_ERR, "server error"),
+    };
+    frame::frame(&payload)
+}
+
+/// What one event loop carries into its per-connection helpers.
+struct LoopCtx {
+    shared: Arc<Shared>,
+    /// the loop's doorbell, handed to every dispatched predict
+    bell: ReplyNotify,
+    binary_upgrades: crate::obs::registry::Counter,
+    frames_in: crate::obs::registry::Counter,
+}
+
+/// One event loop: owns its connections start to finish. `idx` names the
+/// loop's per-loop metrics; `wake_rx` is the read end of the waker pair.
+pub(crate) fn event_loop(
+    idx: usize,
+    shared: Arc<Shared>,
+    handle: Arc<LoopHandle>,
+    mut wake_rx: TcpStream,
+) {
+    let conns_gauge = crate::obs::gauge(&format!("server.loop{idx}.conns"));
+    let wakeups = crate::obs::counter(&format!("server.loop{idx}.wakeups"));
+    let ctx = LoopCtx {
+        shared: Arc::clone(&shared),
+        bell: Arc::new({
+            let h = Arc::clone(&handle);
+            move || h.wake()
+        }),
+        binary_upgrades: crate::obs::counter("server.binary_upgrades"),
+        frames_in: crate::obs::counter("server.frames.requests"),
+    };
+    let wake_fd = raw_fd(&wake_rx);
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut shutdown_since: Option<Instant> = None;
+    loop {
+        // admit connections the accept loop queued
+        let fresh: Vec<TcpStream> =
+            handle.inbox.lock().expect("loop inbox lock").drain(..).collect();
+        for s in fresh {
+            match Conn::new(s) {
+                Ok(c) => conns.push(c),
+                Err(_) => {
+                    // dead on arrival: release its budget slot
+                    shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+        }
+
+        let shutting = shared.shutdown.load(Ordering::Acquire);
+        if shutting && shutdown_since.is_none() {
+            shutdown_since = Some(Instant::now());
+        }
+        let drain_expired = shutdown_since.map(|t| t.elapsed() > DRAIN_GRACE).unwrap_or(false);
+
+        // sweep every connection: pump ready replies, flush, deadlines
+        let now = Instant::now();
+        for c in conns.iter_mut() {
+            service(c, &ctx);
+            enforce_deadlines(c, &shared, now);
+            if shutting && (drain_expired || (c.pending.is_empty() && c.unwritten() == 0)) {
+                c.dead = true; // drained (or out of grace): close
+            }
+        }
+        conns.retain(|c| {
+            if c.dead {
+                shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+                false
+            } else {
+                true
+            }
+        });
+        conns_gauge.set(conns.len() as i64);
+        if shutting && conns.is_empty() {
+            return;
+        }
+
+        // poll the waker + every connection (index i+1 = conns[i]; the
+        // set is rebuilt each iteration, nothing mutates it mid-poll)
+        let mut pfds = Vec::with_capacity(conns.len() + 1);
+        pfds.push(PollFd { fd: wake_fd, events: POLLIN, revents: 0 });
+        for c in &conns {
+            pfds.push(PollFd { fd: c.fd, events: c.poll_events(shutting), revents: 0 });
+        }
+        let timeout = poll_timeout(&conns, &shared, shutting);
+        match sys::poll_fds(&mut pfds, timeout) {
+            Ok(0) => continue, // sweep tick: deadlines re-checked above
+            Ok(_) => wakeups.inc(),
+            Err(_) => {
+                // unsupported target or transient failure: degrade to a
+                // slow sweep instead of a busy loop
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        }
+        if pfds[0].revents & POLLIN != 0 {
+            drain_waker(&mut wake_rx);
+        }
+        for (c, pfd) in conns.iter_mut().zip(&pfds[1..]) {
+            let re = pfd.revents;
+            if re & (POLLERR | POLLNVAL) != 0 {
+                c.dead = true;
+                continue;
+            }
+            if re & POLLIN != 0 {
+                read_ready(c, &ctx);
+            } else if re & POLLHUP != 0 {
+                // hangup with nothing left to read: flush what is owed
+                c.read_closed = true;
+            }
+            if re & POLLOUT != 0 {
+                flush(c);
+            }
+        }
+    }
+}
+
+/// Swallow queued wake bytes; level-triggered poll would otherwise spin
+/// on them forever.
+fn drain_waker(wake_rx: &mut TcpStream) {
+    let mut buf = [0u8; 64];
+    loop {
+        match wake_rx.read(&mut buf) {
+            Ok(0) => return, // wake_tx outlives the loop; treat as spurious
+            Ok(_) => continue,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            _ => return,
+        }
+    }
+}
+
+/// Smallest poll timeout that keeps every connection deadline honest,
+/// clamped to `[1, MAX_POLL_MS]` ms.
+fn poll_timeout(conns: &[Conn], shared: &Shared, shutting: bool) -> i32 {
+    if shutting {
+        return 10; // drain fast
+    }
+    let mut timeout = MAX_POLL_MS;
+    if let Some(idle) = shared.idle_timeout {
+        let now = Instant::now();
+        for c in conns {
+            if let Some(deadline) = c.next_deadline(idle) {
+                let ms = deadline.saturating_duration_since(now).as_millis() as i32;
+                timeout = timeout.min(ms.max(1));
+            }
+        }
+    }
+    timeout
+}
+
+/// Pump ready replies into the write buffer, flush, and — if
+/// backpressure lifted — resume parsing bytes already buffered.
+fn service(c: &mut Conn, ctx: &LoopCtx) {
+    if c.dead {
+        return;
+    }
+    pump(c);
+    flush(c);
+    if !c.dead && !c.close_queued && !c.rbuf.is_empty() && c.wants_read() {
+        process_rbuf(c, ctx);
+        pump(c);
+        flush(c);
+    }
+    // EOF with a final unterminated JSON line still gets served (the
+    // bounded line reader did the same at EOF); an incomplete frame at
+    // EOF is just dropped
+    if c.read_closed && !c.close_queued && !c.binary && !c.rbuf.is_empty() {
+        let line = std::mem::take(&mut c.rbuf);
+        c.assembly_start = None;
+        handle_line(c, &line, ctx);
+        pump(c);
+        flush(c);
+    }
+    // nothing more will arrive and nothing is owed: close
+    if c.read_closed && c.pending.is_empty() && c.unwritten() == 0 {
+        c.dead = true;
+    }
+}
+
+/// Apply the idle/assembly/write-stall deadlines (see the module doc's
+/// hardening map).
+fn enforce_deadlines(c: &mut Conn, shared: &Shared, now: Instant) {
+    let Some(idle) = shared.idle_timeout else { return };
+    if c.dead {
+        return;
+    }
+    if !c.close_queued && !c.read_closed {
+        let read_gap = now.duration_since(c.last_read) >= idle;
+        let assembly =
+            c.assembly_start.map(|t0| now.duration_since(t0) >= idle).unwrap_or(false);
+        if read_gap || assembly {
+            // tell the client why, then release the budget slot
+            let reply = c.error_bytes("idle timeout; closing connection");
+            c.queue_last(reply);
+            pump(c);
+            flush(c);
+        }
+    }
+    if c.unwritten() > 0 && now.duration_since(c.last_write_progress) >= idle {
+        c.dead = true; // the write twin: a stalled reader of our replies
+    }
+}
+
+/// What [`pump`] decided to do with the queue head (computed first, so
+/// the borrow of the head ends before the queue is mutated).
+enum PumpAction {
+    TakeReady,
+    Reply(Vec<f64>),
+    Reloaded,
+}
+
+/// Move completed replies, **in request order**, from the pending queue
+/// into the write buffer. Only the head is ever polled; a completed
+/// reply behind a pending head waits its turn.
+fn pump(c: &mut Conn) {
+    loop {
+        let drained = c.unwritten() == 0;
+        let action = match c.pending.front_mut() {
+            None => return,
+            Some(PendingOut::Ready(_)) => PumpAction::TakeReady,
+            Some(PendingOut::Close) => {
+                if drained {
+                    c.dead = true; // final reply flushed: close now
+                }
+                return; // nothing after a Close marker matters
+            }
+            Some(PendingOut::Await { rx, .. }) => match rx.try_recv() {
+                Err(TryRecvError::Empty) => return, // head still cooking
+                Ok(y) => PumpAction::Reply(y),
+                Err(TryRecvError::Disconnected) => PumpAction::Reloaded,
+            },
+        };
+        if drained {
+            // the stall clock measures progress on a non-empty buffer
+            c.last_write_progress = Instant::now();
+        }
+        match (action, c.pending.pop_front()) {
+            (PumpAction::TakeReady, Some(PendingOut::Ready(bytes))) => {
+                c.wbuf.extend_from_slice(&bytes);
+            }
+            (PumpAction::Reply(y), Some(PendingOut::Await { model, guard, binary, .. })) => {
+                let bytes = if binary {
+                    if y.iter().all(|v| v.is_finite()) {
+                        frame::frame(&frame::ok_payload(&y))
+                    } else {
+                        frame::frame(&frame::status_payload(
+                            frame::ST_ERR,
+                            &format!("model {model:?} produced a non-finite prediction"),
+                        ))
+                    }
+                } else {
+                    json_line(
+                        &wire::predict_reply(&model, &y).unwrap_or_else(|e| wire::error_reply(&e)),
+                    )
+                };
+                c.wbuf.extend_from_slice(&bytes);
+                drop(guard); // release the admission slot with the reply in hand
+            }
+            (PumpAction::Reloaded, Some(PendingOut::Await { model, guard, binary, .. })) => {
+                // the route was swapped out mid-flight and its service
+                // exited: rare, and retriable by contract
+                let msg = format!("model {model:?} was reloaded mid-request; retry");
+                let bytes = if binary {
+                    frame::frame(&frame::status_payload(frame::ST_RETRY, &msg))
+                } else {
+                    json_line(&wire::overload_reply(&msg))
+                };
+                c.wbuf.extend_from_slice(&bytes);
+                drop(guard);
+            }
+            _ => unreachable!("pump action computed from the same queue head"),
+        }
+    }
+}
+
+/// Write as much of the write buffer as the socket accepts right now.
+fn flush(c: &mut Conn) {
+    while c.wpos < c.wbuf.len() {
+        match (&c.stream).write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => {
+                c.wpos += n;
+                c.last_write_progress = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    c.wbuf.clear();
+    c.wpos = 0;
+    if matches!(c.pending.front(), Some(PendingOut::Close)) {
+        c.dead = true; // everything before the marker is on the wire
+    }
+}
+
+/// The socket reported readable: pull a bounded number of chunks into
+/// the receive buffer and parse. Bounded so one firehose connection
+/// cannot monopolize its loop — fairness across the poll set.
+fn read_ready(c: &mut Conn, ctx: &LoopCtx) {
+    let mut buf = [0u8; 16 * 1024];
+    for _ in 0..4 {
+        match (&c.stream).read(&mut buf) {
+            Ok(0) => {
+                c.read_closed = true;
+                break;
+            }
+            Ok(n) => {
+                c.last_read = Instant::now();
+                if c.rbuf.is_empty() {
+                    c.assembly_start = Some(c.last_read);
+                }
+                c.rbuf.extend_from_slice(&buf[..n]);
+                if n < buf.len() {
+                    break; // drained the socket
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    process_rbuf(c, ctx);
+    pump(c);
+    flush(c);
+}
+
+/// Parse as many complete requests as the receive buffer holds,
+/// honoring the caps and the backpressure bounds. Handles the
+/// mid-buffer mode switch: bytes pipelined behind a `binary` upgrade
+/// line are parsed as frames.
+fn process_rbuf(c: &mut Conn, ctx: &LoopCtx) {
+    loop {
+        if c.dead || c.close_queued || c.pending.len() >= REPLY_QUEUE_BOUND {
+            break; // backpressure: the rest of rbuf waits
+        }
+        if c.binary {
+            match frame::scan(&c.rbuf) {
+                frame::Scan::Incomplete => break,
+                frame::Scan::BadMagic => {
+                    let reply = c.error_bytes("bad frame magic; closing connection");
+                    c.queue_last(reply);
+                    break;
+                }
+                frame::Scan::Oversized(n) => {
+                    let reply = c.error_bytes(&format!(
+                        "frame payload of {n} bytes exceeds the {} cap; closing connection",
+                        frame::MAX_FRAME_PAYLOAD
+                    ));
+                    c.queue_last(reply);
+                    break;
+                }
+                frame::Scan::Frame { total } => {
+                    let f: Vec<u8> = c.rbuf.drain(..total).collect();
+                    ctx.frames_in.inc();
+                    handle_frame(c, frame::payload(&f), ctx);
+                }
+            }
+        } else {
+            match c.rbuf.iter().position(|&b| b == b'\n') {
+                Some(pos) if pos > MAX_LINE_BYTES => {
+                    let reply = c.error_bytes(&format!(
+                        "request line exceeds {MAX_LINE_BYTES} bytes; closing connection"
+                    ));
+                    c.queue_last(reply);
+                    break;
+                }
+                Some(pos) => {
+                    let line: Vec<u8> = c.rbuf.drain(..=pos).take(pos).collect();
+                    handle_line(c, &line, ctx);
+                }
+                None => {
+                    if c.rbuf.len() > MAX_LINE_BYTES {
+                        // no way to resynchronize mid-line: reply, close
+                        let reply = c.error_bytes(&format!(
+                            "request line exceeds {MAX_LINE_BYTES} bytes; closing connection"
+                        ));
+                        c.queue_last(reply);
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    // the assembly deadline tracks the (incomplete) head request only
+    c.assembly_start = if c.rbuf.is_empty() { None } else { c.assembly_start };
+}
+
+/// Dispatch one JSON request line — the same arms the thread-per-
+/// connection reader had, plus the `binary` upgrade.
+fn handle_line(c: &mut Conn, raw: &[u8], ctx: &LoopCtx) {
+    let line = match std::str::from_utf8(raw) {
+        Ok(l) => l.trim(),
+        Err(_) => {
+            c.queue(json_line(&wire::error_reply("request is not UTF-8")));
+            return;
+        }
+    };
+    if line.is_empty() {
+        return;
+    }
+    let shared = &ctx.shared;
+    match wire::parse_request(line) {
+        Err(e) => c.queue(json_line(&wire::error_reply(&e))),
+        Ok(wire::Request::Ping) => c.queue(json_line(&wire::ping_reply())),
+        Ok(wire::Request::Models) => c.queue(json_line(&shared.router.models_reply())),
+        Ok(wire::Request::Stats) => c.queue(json_line(&shared.router.stats_reply())),
+        Ok(wire::Request::Metrics) => c.queue(json_line(&wire::metrics_reply())),
+        Ok(wire::Request::Binary) => {
+            // the ack is the LAST JSON line; every later byte is framed
+            c.queue(json_line(&wire::binary_reply()));
+            c.binary = true;
+            ctx.binary_upgrades.inc();
+        }
+        Ok(wire::Request::Shutdown) => {
+            if !c.peer_loopback && !shared.allow_remote_shutdown {
+                crate::obs::warn(
+                    "server.listener",
+                    "shutdown refused from a non-loopback peer",
+                    &[],
+                );
+                c.queue(json_line(&wire::error_reply(
+                    "shutdown refused from a non-loopback peer (the server \
+                     must opt in with --allow-remote-shutdown)",
+                )));
+            } else {
+                crate::obs::info("server.listener", "wire shutdown accepted", &[]);
+                c.queue_last(json_line(&wire::shutdown_reply()));
+                shared.begin_shutdown();
+            }
+        }
+        Ok(wire::Request::Predict { model, x }) => {
+            match shared.router.dispatch_predict_notify(
+                model.as_deref(),
+                &x,
+                Some(Arc::clone(&ctx.bell)),
+            ) {
+                Dispatch::Immediate(reply) => c.queue(json_line(&reply)),
+                Dispatch::Pending { model, rx, guard } => {
+                    c.pending.push_back(PendingOut::Await { model, rx, guard, binary: false });
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one binary frame. A malformed payload is an error frame and
+/// the connection survives — parity with how a malformed JSON line is
+/// answered.
+fn handle_frame(c: &mut Conn, payload: &[u8], ctx: &LoopCtx) {
+    match frame::parse_request(payload) {
+        Err(e) => {
+            let reply = c.error_bytes(&e);
+            c.queue(reply);
+        }
+        Ok(frame::FrameRequest::Ping) => c.queue(frame::frame(&frame::pong_payload())),
+        Ok(frame::FrameRequest::Predict { model, x }) => {
+            match ctx.shared.router.dispatch_predict_notify(
+                model.as_deref(),
+                &x,
+                Some(Arc::clone(&ctx.bell)),
+            ) {
+                Dispatch::Immediate(reply) => c.queue(immediate_frame(&reply)),
+                Dispatch::Pending { model, rx, guard } => {
+                    c.pending.push_back(PendingOut::Await { model, rx, guard, binary: true });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waker_bytes_interrupt_a_poll_and_drain_clean() {
+        let (handle, mut rx) = LoopHandle::new().unwrap();
+        let fd = raw_fd(&rx);
+        let mut fds = [PollFd { fd, events: POLLIN, revents: 0 }];
+        assert_eq!(sys::poll_fds(&mut fds, 20).unwrap(), 0, "no wake pending yet");
+        handle.wake();
+        handle.wake(); // coalescing is fine; blocking is not
+        assert_eq!(sys::poll_fds(&mut fds, 5_000).unwrap(), 1);
+        drain_waker(&mut rx);
+        fds[0].revents = 0;
+        assert_eq!(sys::poll_fds(&mut fds, 20).unwrap(), 0, "drained: level low again");
+    }
+
+    #[test]
+    fn enqueued_connections_arrive_with_a_wake() {
+        let (handle, rx) = LoopHandle::new().unwrap();
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let c = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        handle.enqueue_conn(c);
+        assert_eq!(handle.inbox.lock().unwrap().len(), 1);
+        let fd = raw_fd(&rx);
+        let mut fds = [PollFd { fd, events: POLLIN, revents: 0 }];
+        assert_eq!(sys::poll_fds(&mut fds, 5_000).unwrap(), 1, "enqueue must wake the loop");
+    }
+}

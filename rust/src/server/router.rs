@@ -277,7 +277,7 @@ impl Router {
             feature_dim,
             output_dim,
             svc,
-            admission: Admission::new(self.cfg.max_queue),
+            admission: Admission::new(name, self.cfg.max_queue),
             fingerprint,
         })
     }
@@ -308,6 +308,19 @@ impl Router {
     /// batcher. Never blocks — the listener's reader thread calls this,
     /// and only its *writer* thread awaits replies.
     pub fn dispatch_predict(&self, model: Option<&str>, x: &[f64]) -> Dispatch {
+        self.dispatch_predict_notify(model, x, None)
+    }
+
+    /// [`dispatch_predict`](Router::dispatch_predict) with an optional
+    /// reply doorbell, forwarded to the batcher: the event-loop listener
+    /// passes a closure that wakes the loop owning the connection the
+    /// moment its reply is ready.
+    pub fn dispatch_predict_notify(
+        &self,
+        model: Option<&str>,
+        x: &[f64],
+        notify: Option<crate::coordinator::ReplyNotify>,
+    ) -> Dispatch {
         let route = match self.lookup(model) {
             Ok(r) => r,
             Err(e) => return Dispatch::Immediate(wire::error_reply(&e)),
@@ -327,7 +340,7 @@ impl Router {
                 route.admission.max_queue()
             )));
         };
-        match route.svc.client().submit(x) {
+        match route.svc.client().submit_notify(x, notify) {
             Ok(rx) => Dispatch::Pending { model: route.name.clone(), rx, guard },
             Err(e) => Dispatch::Immediate(wire::error_reply(&e)),
         }

@@ -1,0 +1,186 @@
+//! Thin std-only FFI shim over the two OS facilities the event-driven
+//! listener needs and std does not expose: readiness polling
+//! (`poll(2)`) and the file-descriptor resource limit
+//! (`getrlimit`/`setrlimit` with `RLIMIT_NOFILE`).
+//!
+//! This is deliberately the *whole* FFI surface of the serving tier: no
+//! epoll/kqueue (poll is portable across unix and fine at the 1k–10k
+//! connection scale the C10K bench targets — the per-call fd-array walk
+//! is microseconds against network latencies), no pipes or eventfd (the
+//! event loops wake each other through a loopback TCP socketpair built
+//! entirely from std — see `mux::LoopHandle`), no fcntl (std's
+//! `set_nonblocking` covers the sockets). Everything here is
+//! `#[repr(C)]` structs + constants transcribed from POSIX, cfg-gated
+//! where Linux and the BSD family (macOS) disagree (`nfds_t`,
+//! `RLIMIT_NOFILE`).
+//!
+//! On non-unix targets the crate still compiles: [`poll_fds`] reports
+//! `Unsupported` (the event-loop server is a unix subsystem; the rest of
+//! the crate — fitting, artifacts, the dist layer's blocking sockets —
+//! has no FFI at all).
+
+/// One pollable descriptor: mirrors `struct pollfd`. `events` is what to
+/// wait for, `revents` what the kernel reported.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+/// Data may be read without blocking.
+pub const POLLIN: i16 = 0x001;
+/// Data may be written without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (always reported, never requested).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (always reported, never requested).
+pub const POLLHUP: i16 = 0x010;
+/// The fd is not open (always reported, never requested).
+pub const POLLNVAL: i16 = 0x020;
+
+#[cfg(unix)]
+mod imp {
+    use super::PollFd;
+
+    // `nfds_t`: `unsigned long` on Linux glibc/musl, `unsigned int` on
+    // the BSD family (macOS included).
+    #[cfg(target_os = "macos")]
+    type Nfds = std::ffi::c_uint;
+    #[cfg(not(target_os = "macos"))]
+    type Nfds = std::ffi::c_ulong;
+
+    // `RLIMIT_NOFILE`: 7 on Linux, 8 on the BSD family.
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: std::ffi::c_int = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: std::ffi::c_int = 8;
+
+    /// `struct rlimit`: `rlim_t` is `unsigned long` on the platforms we
+    /// target (64-bit on every 64-bit unix).
+    #[repr(C)]
+    struct RLimit {
+        cur: std::ffi::c_ulong,
+        max: std::ffi::c_ulong,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: std::ffi::c_int) -> std::ffi::c_int;
+        fn getrlimit(resource: std::ffi::c_int, rlim: *mut RLimit) -> std::ffi::c_int;
+        fn setrlimit(resource: std::ffi::c_int, rlim: *const RLimit) -> std::ffi::c_int;
+    }
+
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                continue; // EINTR: retry with the same timeout
+            }
+            return Err(err);
+        }
+    }
+
+    pub fn raise_nofile(want: u64) -> u64 {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return 0;
+        }
+        let cur = lim.cur as u64;
+        let hard = lim.max as u64;
+        if cur >= want {
+            return cur; // already enough headroom
+        }
+        // unprivileged processes may raise the soft limit up to the hard
+        // limit, no further — clamp instead of failing
+        let target = want.min(hard);
+        let req = RLimit { cur: target as std::ffi::c_ulong, max: lim.max };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &req) } == 0 {
+            target
+        } else {
+            cur
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    use super::PollFd;
+
+    pub fn poll_fds(_fds: &mut [PollFd], _timeout_ms: i32) -> std::io::Result<usize> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "readiness polling requires a unix target",
+        ))
+    }
+
+    pub fn raise_nofile(_want: u64) -> u64 {
+        u64::MAX // no rlimit concept; report "plenty"
+    }
+}
+
+/// Block until a descriptor in `fds` is ready, the timeout expires
+/// (`Ok(0)`), or an error other than EINTR occurs. `timeout_ms < 0`
+/// blocks indefinitely. EINTR is retried internally — callers never see
+/// it.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+    imp::poll_fds(fds, timeout_ms)
+}
+
+/// Best-effort: raise the soft `RLIMIT_NOFILE` to at least `want`
+/// descriptors (clamped to the hard limit — unprivileged processes
+/// cannot exceed it). Returns the soft limit after the attempt; both the
+/// server (sized from its connection budget) and loadgen (sized from the
+/// largest client count) call this so a 1k–10k connection sweep does not
+/// die on the usual 1024-fd default.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    imp::raise_nofile(want)
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn poll_reports_readability_exactly_when_bytes_are_pending() {
+        let (mut a, b) = pair();
+        let mut fds = [PollFd { fd: b.as_raw_fd(), events: POLLIN, revents: 0 }];
+        // nothing written yet: a short poll times out with 0 ready fds
+        assert_eq!(poll_fds(&mut fds, 20).unwrap(), 0);
+        assert_eq!(fds[0].revents, 0);
+        a.write_all(b"x").unwrap();
+        a.flush().unwrap();
+        // readable now; a generous timeout returns promptly
+        assert_eq!(poll_fds(&mut fds, 5_000).unwrap(), 1);
+        assert_ne!(fds[0].revents & POLLIN, 0, "revents {:#x}", fds[0].revents);
+        // an idle socket with send-buffer room is immediately writable
+        let mut wfds = [PollFd { fd: b.as_raw_fd(), events: POLLOUT, revents: 0 }];
+        assert_eq!(poll_fds(&mut wfds, 5_000).unwrap(), 1);
+        assert_ne!(wfds[0].revents & POLLOUT, 0);
+    }
+
+    #[test]
+    fn nofile_limit_raises_are_monotone_and_clamped() {
+        let before = raise_nofile_limit(0); // read the current soft limit
+        assert!(before > 0, "process must have a nonzero fd limit");
+        let after = raise_nofile_limit(before); // no-op: already there
+        assert!(after >= before);
+        // an absurd request clamps to the hard limit instead of failing
+        let clamped = raise_nofile_limit(u64::MAX);
+        assert!(clamped >= after);
+    }
+}

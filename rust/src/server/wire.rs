@@ -16,6 +16,11 @@
 //!                       answered locally by both `gzk server` and
 //!                       `gzk proxy`, never forwarded
 //! {"cmd":"ping"}        liveness probe
+//! {"cmd":"binary"}      switch THIS connection to length-prefixed
+//!                       binary frames after the ack (see
+//!                       [`super::frame`]); predict requests/replies
+//!                       then skip JSON entirely while staying
+//!                       bit-exact (raw little-endian f64 bytes)
 //! {"cmd":"shutdown"}    stop the server after acking (honored from
 //!                       loopback peers only, unless the server was
 //!                       started with --allow-remote-shutdown)
@@ -49,6 +54,8 @@ pub enum Request {
     Stats,
     Metrics,
     Ping,
+    /// switch this connection to binary frame mode after the ack
+    Binary,
     Shutdown,
 }
 
@@ -90,9 +97,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "stats" => Ok(Request::Stats),
         "metrics" => Ok(Request::Metrics),
         "ping" => Ok(Request::Ping),
+        "binary" => Ok(Request::Binary),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!(
-            "unknown cmd {other:?}; known: predict, models, stats, metrics, ping, shutdown"
+            "unknown cmd {other:?}; known: predict, models, stats, metrics, ping, binary, \
+             shutdown"
         )),
     }
 }
@@ -138,6 +147,12 @@ pub fn overload_reply(msg: &str) -> String {
 
 pub fn ping_reply() -> String {
     r#"{"ok":true,"pong":true}"#.to_string()
+}
+
+/// Ack for the `binary` upgrade: the LAST JSON line on the connection —
+/// every byte after it is framed (see [`super::frame`]).
+pub fn binary_reply() -> String {
+    r#"{"ok":true,"binary":true}"#.to_string()
 }
 
 /// Reply to `metrics`: the process-wide registry snapshot, embedded
@@ -238,6 +253,7 @@ mod tests {
             assert!(parse_request(bad).is_err(), "accepted {bad:?}");
         }
         assert_eq!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(parse_request(r#"{"cmd":"binary"}"#).unwrap(), Request::Binary);
         assert_eq!(parse_request(&cmd_request("stats")).unwrap(), Request::Stats);
         assert_eq!(parse_request(&cmd_request("metrics")).unwrap(), Request::Metrics);
         assert_eq!(parse_request(&cmd_request("shutdown")).unwrap(), Request::Shutdown);

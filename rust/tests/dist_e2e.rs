@@ -304,11 +304,10 @@ fn loadgen_replica_sweep_scales_the_serving_tier_in_process() {
         clients: vec![2],
         requests_per_client: 25,
         dataset: Some("elevation".to_string()),
-        model: None,
         store: Some(dir.clone()),
         seed: 7,
-        send_shutdown: false,
         replica_sweep: vec![1, 2],
+        ..LoadgenConfig::default()
     };
     let report = gzk::server::loadgen::run(&cfg).expect("sweep runs");
     assert!(report.verified, "a store was supplied, so replies must be verified");

@@ -3,14 +3,20 @@
 //! **bit-identical** to a direct `Model::predict`; multi-model routing;
 //! manifest-poll hot-reload (new artifact served without restart, changed
 //! artifact swapped in); pipelined requests answered in order;
-//! backpressure replies under a tiny admission bound; and the in-process
-//! loadgen harness (trials at two client counts + `BENCH_serve.json`).
+//! backpressure replies under a tiny admission bound; the negotiated
+//! binary frame mode (bit-identical to JSON, hostile frames close the
+//! connection but never the server, the dist proxy relays frames
+//! verbatim); a 1000-connection smoke on the event-loop multiplexer with
+//! a bounded thread count; and the in-process loadgen harness (trials at
+//! two client counts, JSON-vs-binary cross-check, `BENCH_serve.json`).
 
+use gzk::dist::{Proxy, ProxyConfig};
 use gzk::features::{FeatureSpec, KernelSpec, Method};
 use gzk::linalg::Mat;
 use gzk::model::{KmeansModel, Model, ModelStore, RidgeModel};
 use gzk::rng::Rng;
-use gzk::server::{wire, ClientConn, LoadgenConfig, Server, ServerConfig};
+use gzk::server::frame::{self, FrameReply};
+use gzk::server::{wire, ClientConn, LoadgenConfig, Server, ServerConfig, WireMode};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
@@ -363,6 +369,7 @@ fn loadgen_measures_verifies_and_shuts_down_the_server() {
         store: Some(dir.clone()),
         seed: 4,
         send_shutdown: true,
+        ..LoadgenConfig::default()
     };
     let report = gzk::server::loadgen::run(&cfg).expect("loadgen run");
     assert_eq!(report.model, "ridge");
@@ -389,6 +396,282 @@ fn loadgen_measures_verifies_and_shuts_down_the_server() {
     assert_eq!(trials.len(), 2);
     assert!(trials[0].get("throughput_rps").and_then(|v| v.as_f64()).unwrap() > 0.0);
     assert!(trials[1].get("p99_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+
+    // loadgen's --shutdown already stopped the server
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn binary_frames_round_trip_bit_identically_with_json() {
+    let dir = fresh_dir("binary");
+    let store = ModelStore::open(&dir).unwrap();
+    let model = ridge(2, 77);
+    store.save("ridge", &model).unwrap();
+    let server = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut bin = ClientConn::connect(&addr).unwrap();
+    bin.upgrade_binary().unwrap();
+    let mut json = ClientConn::connect(&addr).unwrap();
+
+    // ping → pong over frames
+    let pong = bin.roundtrip_frame(&frame::frame(&frame::ping_payload())).unwrap();
+    assert!(matches!(frame::parse_reply(frame::payload(&pong)).unwrap(), FrameReply::Pong));
+
+    // awkward floats included: subnormal, negative zero
+    let probes = [[0.25, -0.7], [1.0, 0.9], [-1.1, 0.05], [5e-324, -0.0]];
+    for x in &probes {
+        let req = frame::frame(&frame::predict_payload(Some("ridge"), x));
+        let reply = bin.roundtrip_frame(&req).unwrap();
+        let y = match frame::parse_reply(frame::payload(&reply)).unwrap() {
+            FrameReply::Ok { y } => y,
+            other => panic!("expected an ok frame, got {other:?}"),
+        };
+        let bits: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, predict_bits(&model, x), "binary {x:?}");
+        // ... and identical to the same request over a JSON connection
+        let jr = json.roundtrip(&wire::predict_request(Some("ridge"), x)).unwrap();
+        assert_eq!(bits, reply_bits(&jr), "binary vs JSON {x:?}");
+    }
+
+    // request errors stay frames and keep the connection serving
+    let req = frame::frame(&frame::predict_payload(Some("nope"), &probes[0]));
+    let reply = bin.roundtrip_frame(&req).unwrap();
+    match frame::parse_reply(frame::payload(&reply)).unwrap() {
+        FrameReply::Err { msg, retry } => {
+            assert!(msg.contains("no model") && !retry, "{msg}");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    let pong = bin.roundtrip_frame(&frame::frame(&frame::ping_payload())).unwrap();
+    assert_eq!(frame::reply_status(&pong), Some(frame::ST_PONG));
+
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hostile_frames_close_the_connection_but_never_the_server() {
+    let dir = fresh_dir("hostile-frames");
+    let store = ModelStore::open(&dir).unwrap();
+    let model = ridge(2, 88);
+    store.save("ridge", &model).unwrap();
+    let server = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // garbage magic: one error frame naming the problem, then close
+    let mut c = ClientConn::connect(&addr).unwrap();
+    c.upgrade_binary().unwrap();
+    c.send_frame(b"XXXXXXXXXXXXXXXX").unwrap();
+    let reply = c.read_frame().unwrap();
+    match frame::parse_reply(frame::payload(&reply)).unwrap() {
+        FrameReply::Err { msg, .. } => assert!(msg.contains("magic"), "{msg}"),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    assert!(c.read_frame().is_err(), "connection must close after bad magic");
+
+    // an oversized length prefix is rejected from the header alone — the
+    // payload is never awaited, let alone allocated
+    let mut c = ClientConn::connect(&addr).unwrap();
+    c.upgrade_binary().unwrap();
+    let mut evil = Vec::from(frame::MAGIC);
+    evil.extend_from_slice(&0x7FFF_FFFFu32.to_le_bytes());
+    c.send_frame(&evil).unwrap();
+    let reply = c.read_frame().unwrap();
+    match frame::parse_reply(frame::payload(&reply)).unwrap() {
+        FrameReply::Err { msg, .. } => assert!(msg.contains("exceeds"), "{msg}"),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    assert!(c.read_frame().is_err(), "connection must close after an oversized prefix");
+
+    // a truncated frame followed by a disconnect is server-side cleanup
+    let mut c = ClientConn::connect(&addr).unwrap();
+    c.upgrade_binary().unwrap();
+    let mut partial = Vec::from(frame::MAGIC);
+    partial.extend_from_slice(&100u32.to_le_bytes());
+    partial.extend_from_slice(&[0u8; 10]); // 10 of the promised 100 bytes
+    c.send_frame(&partial).unwrap();
+    drop(c);
+
+    // the server is fully alive afterwards, over both protocols
+    let mut c = ClientConn::connect(&addr).unwrap();
+    let x = [0.3, -0.4];
+    let r = c.roundtrip(&wire::predict_request(Some("ridge"), &x)).unwrap();
+    assert_eq!(reply_bits(&r), predict_bits(&model, &x));
+    c.upgrade_binary().unwrap();
+    let reply =
+        c.roundtrip_frame(&frame::frame(&frame::predict_payload(Some("ridge"), &x))).unwrap();
+    match frame::parse_reply(frame::payload(&reply)).unwrap() {
+        FrameReply::Ok { y } => {
+            let bits: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits, predict_bits(&model, &x));
+        }
+        other => panic!("expected an ok frame, got {other:?}"),
+    }
+
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[cfg(target_os = "linux")]
+fn proc_thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+#[test]
+fn a_thousand_concurrent_connections_multiplex_on_a_bounded_thread_count() {
+    let dir = fresh_dir("c1k");
+    let store = ModelStore::open(&dir).unwrap();
+    let model = ridge(2, 99);
+    store.save("ridge", &model).unwrap();
+
+    // fd budget in THIS process: 2 per client `ClientConn` (stream +
+    // BufReader clone) plus 1 server-side per connection; scale the
+    // count down if the hard limit will not cover 1000
+    let limit = gzk::server::sys::raise_nofile_limit(8192);
+    let n_conns: usize = if limit >= 4096 { 1000 } else { 200 };
+
+    #[cfg(target_os = "linux")]
+    let threads_before = proc_thread_count();
+
+    let cfg = ServerConfig {
+        max_conns: n_conns + 200,
+        poll: Duration::from_millis(100),
+        ..ServerConfig::default()
+    };
+    let server = Server::start(&dir, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // open every connection up front and keep all of them alive
+    let mut conns = Vec::with_capacity(n_conns);
+    for i in 0..n_conns {
+        match ClientConn::connect(&addr) {
+            Ok(c) => conns.push(c),
+            Err(e) => panic!("connect {i}/{n_conns}: {e}"),
+        }
+    }
+
+    // thread count is O(event loops + pool), not O(connections): the old
+    // two-threads-per-connection design would show up as 2000+ here.
+    // (Other tests in this binary run concurrently and spawn their own
+    // servers, so the bound is loose — the claim it checks is the order
+    // of growth, not an exact census.)
+    #[cfg(target_os = "linux")]
+    {
+        let delta = proc_thread_count().saturating_sub(threads_before);
+        assert!(
+            delta < 200,
+            "serving {n_conns} connections grew the process by {delta} threads"
+        );
+    }
+
+    // every 5th connection predicts on its own distinct inputs: a reply
+    // lost, duplicated, or cross-wired between connections cannot pass
+    for (i, conn) in conns.iter_mut().enumerate().filter(|(i, _)| i % 5 == 0) {
+        let x = [0.001 * i as f64, 1.0 - 0.0005 * i as f64];
+        let r = conn.roundtrip(&wire::predict_request(Some("ridge"), &x)).unwrap();
+        assert_eq!(reply_bits(&r), predict_bits(&model, &x), "conn {i}");
+    }
+    // ... and every connection is still alive and answers a ping
+    for (i, conn) in conns.iter_mut().enumerate() {
+        let pong = conn.roundtrip(&wire::cmd_request("ping")).unwrap();
+        assert!(pong.ok, "conn {i} lost its ping: {pong:?}");
+    }
+
+    drop(conns);
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn proxy_relays_binary_frames_verbatim_across_replicas() {
+    let dir = fresh_dir("proxy-binary");
+    let store = ModelStore::open(&dir).unwrap();
+    let model = ridge(2, 123);
+    store.save("ridge", &model).unwrap();
+    let s1 = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    let s2 = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+    let replicas = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+    let proxy = Proxy::start("127.0.0.1:0", replicas, ProxyConfig::default()).unwrap();
+    let addr = proxy.local_addr().to_string();
+
+    let mut conn = ClientConn::connect(&addr).unwrap();
+    conn.upgrade_binary().unwrap();
+    // enough requests that round-robin touches both replicas; replies
+    // stay bit-identical to the local model through the relay
+    let probes = [[0.25, -0.7], [1.0, 0.9], [-1.1, 0.05], [0.0, 1.0]];
+    for x in probes.iter().cycle().take(10) {
+        let req = frame::frame(&frame::predict_payload(Some("ridge"), x));
+        let reply = conn.roundtrip_frame(&req).unwrap();
+        let y = match frame::parse_reply(frame::payload(&reply)).unwrap() {
+            FrameReply::Ok { y } => y,
+            other => panic!("expected an ok frame through the proxy, got {other:?}"),
+        };
+        let bits: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, predict_bits(&model, x), "{x:?}");
+    }
+    let pong = conn.roundtrip_frame(&frame::frame(&frame::ping_payload())).unwrap();
+    assert_eq!(frame::reply_status(&pong), Some(frame::ST_PONG));
+
+    proxy.shutdown();
+    let _ = proxy.wait();
+    s1.shutdown();
+    s2.shutdown();
+    let _ = s1.wait();
+    let _ = s2.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn loadgen_wire_compare_proves_json_and_binary_bit_identical() {
+    let dir = fresh_dir("wire-compare");
+    let store = ModelStore::open(&dir).unwrap();
+    // elevation-compatible input dimension (loadgen's default dataset)
+    let model = ridge(3, 44);
+    store.save("ridge", &model).unwrap();
+    let server = Server::start(&dir, "127.0.0.1:0", test_config()).unwrap();
+
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        clients: vec![2],
+        requests_per_client: 15,
+        store: Some(dir.clone()),
+        seed: 9,
+        send_shutdown: true,
+        wire: WireMode::Compare,
+        ..LoadgenConfig::default()
+    };
+    let report = gzk::server::loadgen::run(&cfg).expect("loadgen compare run");
+    assert_eq!(report.trials.len(), 2, "one JSON + one binary trial");
+    assert_eq!(report.trials[0].wire, "json");
+    assert_eq!(report.trials[1].wire, "binary");
+    assert_eq!(report.mismatches(), 0);
+    assert_eq!(report.trials[1].cross_mismatches, 0, "JSON and binary replies diverged");
+    // the server ran in-process, so its admission registry counter is in
+    // OUR registry and the cross-check must have engaged
+    assert!(report.admission_rejected_total.is_some(), "registry cross-check must engage");
+
+    // format-4 artifact: the wire + cross-check fields round-trip the
+    // in-crate parser
+    let json_path = dir.join("BENCH_serve.json");
+    report.write_json(&json_path).unwrap();
+    let text = std::fs::read_to_string(&json_path).unwrap();
+    let parsed = gzk::runtime::Json::parse(&text).expect("valid JSON");
+    assert_eq!(parsed.get("format").and_then(|v| v.as_usize()), Some(4));
+    assert_eq!(parsed.get("wire_mode").and_then(|v| v.as_str()), Some("compare"));
+    let trials = parsed.get("trials").and_then(|t| t.as_arr()).expect("trials[]");
+    assert_eq!(trials.len(), 2);
+    assert_eq!(trials[1].get("wire").and_then(|v| v.as_str()), Some("binary"));
+    assert_eq!(trials[1].get("cross_mismatches").and_then(|v| v.as_usize()), Some(0));
 
     // loadgen's --shutdown already stopped the server
     server.wait();
