@@ -22,6 +22,14 @@
 //! pool width comes from `--threads`-equivalent `GZK_THREADS` or the
 //! machine.
 //!
+//! A second artifact, `BENCH_serve.json` (loadgen format 5), records the
+//! serve-path tracing overhead: the same socket loadgen run untraced vs
+//! traced (per-request trace-ID minting + serve/loadgen span recording),
+//! p50s compared under a 10% alarm bound and stored in the report's
+//! `trace_overhead` section. That section runs last — `trace::enable()`
+//! is process-global with no off switch, so it must not leak span
+//! recording into the other sections' timings.
+//!
 //! Run: cargo bench --bench hotpath
 
 use gzk::bench::{fmt_secs, time_it, Table};
@@ -32,7 +40,10 @@ use gzk::features::{FeatureSpec, Featurizer, KernelSpec, Method};
 use gzk::krr::{FeatureRidge, RidgeStats};
 use gzk::linalg::microkernel::{self, matmul_with_tile, naive};
 use gzk::linalg::Mat;
+use gzk::model::{set_run_data, ModelStore, RidgeModel};
 use gzk::rng::Rng;
+use gzk::server::loadgen::{self, TraceOverhead};
+use gzk::server::{LoadgenConfig, Server, ServerConfig};
 use std::time::Duration;
 
 fn gaussian() -> KernelSpec {
@@ -562,6 +573,68 @@ fn serving_bench() -> ServingStats {
     }
 }
 
+/// Serve-path tracing overhead, written to `BENCH_serve.json` (loadgen
+/// format 5): the same socket loadgen trial against an in-process
+/// server, untraced vs traced — the traced pass mints a trace ID per
+/// request and records serve/loadgen spans. MUST run after every other
+/// section: `trace::enable()` is process-global with no off switch, so
+/// span recording would otherwise leak into their timings.
+fn serve_trace_overhead_bench() {
+    println!("\n== serve tracing overhead: loadgen untraced vs traced (4 clients) ==");
+    let dir = std::env::temp_dir().join(format!("gzk-bench-serve-trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = FeatureSpec::new(gaussian(), Method::Gegenbauer { q: 5, s: 1 }, 64, 11).bind(3);
+    let mut rng = Rng::new(0xBEEF);
+    let x = Mat::from_fn(256, 3, |_, _| rng.normal() * 0.5);
+    let y: Vec<f64> = (0..256).map(|i| x[(i, 0)] + 0.3 * x[(i, 2)]).collect();
+    let model = RidgeModel::fit(spec, &x, &y, 1e-3).expect("fit serve model");
+    set_run_data("elevation", 256);
+    ModelStore::open(&dir).expect("open store").save("ridge", &model).expect("save model");
+
+    let server =
+        Server::start(&dir, "127.0.0.1:0", ServerConfig::default()).expect("start server");
+    let cfg = |traced: bool| LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        clients: vec![4],
+        requests_per_client: 300,
+        dataset: Some("elevation".to_string()),
+        store: Some(dir.clone()),
+        traced,
+        ..LoadgenConfig::default()
+    };
+    // warm-up trial: connection setup, page cache, the admission ladder
+    loadgen::run(&cfg(false)).expect("warm-up loadgen");
+    let off = loadgen::run(&cfg(false)).expect("untraced loadgen");
+    gzk::obs::trace::enable();
+    let mut on = loadgen::run(&cfg(true)).expect("traced loadgen");
+    server.shutdown();
+    let _ = server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // both passes bit-verify against the local model twin: tracing is
+    // read-only on the serve path
+    assert_eq!(off.mismatches(), 0, "untraced replies drifted from the local model");
+    assert_eq!(on.mismatches(), 0, "traced replies drifted from the local model");
+    let (p50_us_off, p50_us_on) = (off.trials[0].p50_us, on.trials[0].p50_us);
+    let delta_us = p50_us_on - p50_us_off;
+    let overhead_frac = delta_us / p50_us_off;
+    println!(
+        "p50 untraced {p50_us_off:.1}us  traced {p50_us_on:.1}us  -> overhead {:+.2}%",
+        overhead_frac * 100.0
+    );
+    // 10% alarm bound, with a 25us absolute floor so loopback scheduling
+    // jitter on a microsecond-scale p50 cannot trip it
+    assert!(
+        overhead_frac < 0.10 || delta_us < 25.0,
+        "serve tracing overhead {:.2}% ({delta_us:.1}us) blew through the 10% alarm bound",
+        overhead_frac * 100.0
+    );
+    on.trace_overhead = Some(TraceOverhead { p50_us_off, p50_us_on, overhead_frac });
+    let path = std::env::var("GZK_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    on.write_json(std::path::Path::new(&path)).expect("write serve bench json");
+    println!("wrote {path}");
+}
+
 /// Emit the machine-readable results (CI uploads this as an artifact).
 fn write_json(
     methods: &[MethodRow],
@@ -674,4 +747,6 @@ fn main() {
     let obs = obs_overhead_bench();
     let serving = serving_bench();
     write_json(&methods, &gflops, &tiles, &parallel, &streaming, &obs, &serving);
+    // last on purpose: enables process-global tracing (see its doc)
+    serve_trace_overhead_bench();
 }

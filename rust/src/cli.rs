@@ -148,6 +148,28 @@ impl Args {
         Ok(out)
     }
 
+    /// A comma-separated list of file paths (`gzk trace-merge --inputs
+    /// proxy.json,server.json`). Entries must be non-empty — an empty
+    /// segment is a typo, not a path; `Ok(empty)` when the flag is
+    /// absent, so the caller owns the "how many are required" rule.
+    pub fn get_path_list(&self, name: &str) -> Result<Vec<std::path::PathBuf>, String> {
+        if self.has(name) {
+            return Err(format!("flag --{name} requires a value (comma-separated file paths)"));
+        }
+        let Some(v) = self.get(name) else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        for part in v.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                return Err(format!("flag --{name}: empty path entry in {v:?}"));
+            }
+            out.push(std::path::PathBuf::from(p));
+        }
+        Ok(out)
+    }
+
     /// The global `--threads N` flag: how many workers the process-wide
     /// [`exec::Pool`](crate::exec::Pool) uses for every parallel path
     /// (featurize, absorb, k-means, KPCA, the coordinator's worker wave).
@@ -358,6 +380,30 @@ mod tests {
             let e = parse(bad).get_addr_list("replicas").unwrap_err();
             assert!(e.contains("--replicas"), "{bad}: {e}");
         }
+    }
+
+    #[test]
+    fn path_list_flag_parses_and_rejects_nonsense() {
+        assert!(parse("trace-merge").get_path_list("inputs").unwrap().is_empty());
+        // one argv token; spaces around commas are trimmed
+        let a = Args::parse(vec![
+            "trace-merge".into(),
+            "--inputs".into(),
+            "a.json, b.json ,dir/c.json".into(),
+        ])
+        .unwrap();
+        assert_eq!(
+            a.get_path_list("inputs").unwrap(),
+            vec![
+                std::path::PathBuf::from("a.json"),
+                std::path::PathBuf::from("b.json"),
+                std::path::PathBuf::from("dir/c.json")
+            ]
+        );
+        let e = parse("trace-merge --inputs a.json,,b.json").get_path_list("inputs").unwrap_err();
+        assert!(e.contains("--inputs") && e.contains("empty"), "{e}");
+        let e = parse("trace-merge --inputs --out m.json").get_path_list("inputs").unwrap_err();
+        assert!(e.contains("requires a value"), "{e}");
     }
 
     #[test]

@@ -158,9 +158,16 @@ impl DistLeader {
             return Err("cannot fit zero rows".to_string());
         }
         let f_dim = spec.feature_dim();
+        // one distributed trace ID per run (when tracing is on): stamped
+        // on the job broadcast and every assignment, adopted by every
+        // worker, echoed on stats — the join key `gzk trace-merge` uses
+        // to stitch leader and worker trace files into one timeline
+        let run_tid =
+            if obs::trace::enabled() { obs::trace::mint_trace_id() } else { 0 };
+        let _trace_ctx = obs::trace::with_trace(run_tid);
         let conns = {
             let _span = obs::span("dist", "register");
-            self.register_fleet(spec, data)?
+            self.register_fleet(spec, data, run_tid)?
         };
         let n_registered = conns.len();
         obs::gauge("dist.leader.workers").set(n_registered as i64);
@@ -202,8 +209,19 @@ impl DistLeader {
                 let dead = &dead;
                 let shard_timeout = self.cfg.shard_timeout;
                 scope.spawn(move || {
-                    if !drive_worker(conn, pending, failed, &res_tx, f_dim, reassigned, shard_timeout)
-                    {
+                    // ambient trace is thread-local: re-establish the run's
+                    // ID on each driver thread so its shard spans stitch
+                    let _trace_ctx = obs::trace::with_trace(run_tid);
+                    if !drive_worker(
+                        conn,
+                        pending,
+                        failed,
+                        &res_tx,
+                        f_dim,
+                        reassigned,
+                        shard_timeout,
+                        run_tid,
+                    ) {
                         dead.fetch_add(1, Ordering::Relaxed);
                     }
                 });
@@ -256,7 +274,13 @@ impl DistLeader {
                 }
                 replies.insert(
                     t.shard_id,
-                    WireStats { shard_id: t.shard_id, worker_id: usize::MAX, featurize_secs, stats },
+                    WireStats {
+                        shard_id: t.shard_id,
+                        worker_id: usize::MAX,
+                        featurize_secs,
+                        tid: run_tid,
+                        stats,
+                    },
                 );
                 recovered += 1;
             }
@@ -304,6 +328,7 @@ impl DistLeader {
         &self,
         spec: &crate::features::BoundSpec,
         data: &DataSpec,
+        run_tid: u64,
     ) -> Result<Vec<WorkerConn>, String> {
         self.listener
             .set_nonblocking(true)
@@ -314,7 +339,7 @@ impl DistLeader {
             match self.listener.accept() {
                 Ok((stream, peer)) => {
                     let id = conns.len();
-                    match handshake(stream, id, spec, data, self.cfg.shard_timeout) {
+                    match handshake(stream, id, spec, data, self.cfg.shard_timeout, run_tid) {
                         Ok(conn) => conns.push(conn),
                         Err(e) => obs::warn(
                             "dist.leader",
@@ -355,6 +380,7 @@ fn handshake(
     spec: &crate::features::BoundSpec,
     data: &DataSpec,
     shard_timeout: Duration,
+    run_tid: u64,
 ) -> Result<WorkerConn, String> {
     let _ = stream.set_nodelay(true);
     stream
@@ -380,7 +406,7 @@ fn handshake(
             return Err(e);
         }
     }
-    send_line(&mut stream, &wire::job_msg(id, spec, data))?;
+    send_line(&mut stream, &wire::job_msg(id, spec, data, run_tid))?;
     Ok(WorkerConn { id, stream, reader })
 }
 
@@ -394,6 +420,7 @@ fn send_line(stream: &mut TcpStream, line: &str) -> Result<(), String> {
 /// Drive one worker connection to completion. Returns `false` when the
 /// worker was abandoned mid-protocol (its in-flight shard repushed);
 /// `true` on a clean drain.
+#[allow(clippy::too_many_arguments)]
 fn drive_worker(
     mut conn: WorkerConn,
     pending: &Mutex<Vec<ShardRange>>,
@@ -402,6 +429,7 @@ fn drive_worker(
     f_dim: usize,
     reassigned: &AtomicUsize,
     shard_timeout: Duration,
+    run_tid: u64,
 ) -> bool {
     let mut buf = Vec::new();
     // assign → reply latency per shard, across the whole fleet; the per-
@@ -426,7 +454,7 @@ fn drive_worker(
         };
         let _span = obs::span("dist", &format!("shard {}", task.shard_id));
         let t0 = Instant::now();
-        if let Err(e) = send_line(&mut conn.stream, &wire::assign_msg(task)) {
+        if let Err(e) = send_line(&mut conn.stream, &wire::assign_msg(task, run_tid)) {
             abandon(task, &e);
             return false;
         }
@@ -525,7 +553,7 @@ mod tests {
         let mut stats = RidgeStats::new(2);
         stats.n = rows;
         stats.b = vec![sid as f64, 1.0];
-        WireStats { shard_id: sid, worker_id: 0, featurize_secs: 0.5, stats }
+        WireStats { shard_id: sid, worker_id: 0, featurize_secs: 0.5, tid: 0, stats }
     }
 
     #[test]

@@ -28,23 +28,37 @@
 //!   the whole serving tier, which is what the CI smoke job and loadgen
 //!   `--shutdown` rely on.
 //!
-//! Two wire commands get special handling beyond shutdown: `metrics` is
-//! answered **locally** (the snapshot describes this proxy process —
-//! including the per-replica `proxy.replica.<addr>.*` counters — and
-//! each replica answers its own); `stats` is forwarded to a replica as
-//! usual and the proxy then splices a `"proxy":{"replicas":[...]}`
-//! section (healthy flag, forwarded / strikes / ejections /
-//! readmissions / retries counters) into the reply, so one stats line
-//! shows both a replica's view and the balancer's.
+//! Three wire commands get special handling beyond shutdown: `metrics`
+//! and `flightrec` are answered **locally** (the registry snapshot and
+//! the crash-ring dump describe this proxy process — each replica
+//! answers its own); `stats` is forwarded to a replica as usual and the
+//! proxy then splices a `"proxy":{"replicas":[...]}` section (healthy
+//! flag, forwarded / strikes / ejections / readmissions / retries
+//! counters) into the reply, so one stats line shows both a replica's
+//! view and the balancer's.
+//!
+//! **Tracing.** The proxy is a trace *ingress*: with tracing enabled
+//! (`--trace-out`), a predict line that arrives without a `"tid"` gets
+//! one minted here and injected before forwarding — the only rewrite
+//! the proxy ever performs, and only when tracing is on — while a
+//! client-minted tid is adopted as-is. Either way the forward is timed
+//! as a `proxy/forward` span under that tid, so `gzk trace-merge`
+//! stitches the proxy hop between the client's span and the replica's.
+//! Replies are never rewritten (they carry no tid by design), so the
+//! byte-for-byte reply contract survives tracing. On the frame path the
+//! client's GZF2 header carries the tid; the proxy never mints there.
 //!
 //! A client that negotiates the **binary frame mode** (`{"cmd":"binary"}`
-//! — see [`frame`]) is acked locally and the connection switches to a
-//! frame relay: each request frame is forwarded **verbatim** (bytes, not
-//! re-encoded) to a replica connection the proxy upgraded to binary on
-//! first use, and the reply frame is returned verbatim. Only the status
-//! byte is peeked, so `ST_RETRY` replies get the same backoff-and-failover
-//! treatment as JSON `"retry":true` — the frame path keeps capacity
-//! pooling without ever decoding a float.
+//! or the v2 offer `{"cmd":"binary","v":2}` — see [`frame`]) is acked
+//! locally and the connection switches to a frame relay: each request
+//! frame is forwarded **verbatim** (bytes, not re-encoded) to a replica
+//! connection the proxy upgraded to binary (offering v2) on first use,
+//! and the reply frame is returned verbatim. A GZF2 request headed for a
+//! replica that declined v2 is re-headed as GZF1 (payload untouched; the
+//! tid is dropped on that hop — old replicas interoperate, just
+//! untraced). Only the status byte is peeked, so `ST_RETRY` replies get
+//! the same backoff-and-failover treatment as JSON `"retry":true` — the
+//! frame path keeps capacity pooling without ever decoding a float.
 //!
 //! The proxy never parses predict bodies (it routes lines, not models),
 //! so it adds microseconds, not a deserialization round-trip.
@@ -269,6 +283,11 @@ fn accept_loop(listener: TcpListener, shared: &Arc<ProxyShared>) {
         let shared = Arc::clone(shared);
         std::thread::spawn(move || {
             handle_client(stream, &shared);
+            // drain this thread's trace buffer before releasing the
+            // connection count: `Proxy::wait` gates on it, and the CLI
+            // writes the trace file right after `wait` returns —
+            // detached threads get no join to run their TLS drains
+            obs::trace::flush_thread();
             shared.active_conns.fetch_sub(1, Ordering::AcqRel);
         });
     }
@@ -394,17 +413,45 @@ fn handle_client(stream: TcpStream, shared: &Arc<ProxyShared>) {
             }
             continue;
         }
-        if matches!(parsed, Ok(wire::Request::Binary)) {
-            // ack locally, then relay frames until the client hangs up.
-            // The cached JSON-mode replica connections stay JSON; the
-            // relay upgrades its own on first use.
-            if !send(&mut writer, &wire::binary_reply()) {
+        if matches!(parsed, Ok(wire::Request::Flightrec)) {
+            // like metrics: the crash ring describes THIS process
+            if !send(&mut writer, &wire::flightrec_reply()) {
+                return;
+            }
+            continue;
+        }
+        if let Ok(wire::Request::Binary { v2 }) = parsed {
+            // ack locally (echoing the v2 offer when made), then relay
+            // frames until the client hangs up. The cached JSON-mode
+            // replica connections stay JSON; the relay upgrades its own
+            // on first use.
+            let ack = if v2 { wire::binary_reply_v2() } else { wire::binary_reply() };
+            if !send(&mut writer, &ack) {
                 return;
             }
             binary_relay(shared, &mut reader, &mut writer);
             return;
         }
-        let mut reply = forward(shared, &mut conns, line);
+        // trace ingress: adopt the client's tid, or mint one here when
+        // tracing is on and the predict arrived untraced — injected
+        // before the closing brace, the proxy's only request rewrite
+        let mut tid = 0u64;
+        let mut traced_line = None;
+        if let Ok(wire::Request::Predict { tid: req_tid, .. }) = &parsed {
+            if obs::trace::enabled() {
+                tid = *req_tid;
+                if tid == 0 {
+                    tid = obs::trace::mint_trace_id();
+                    let body = &line[..line.len() - 1]; // parsed => ends in '}'
+                    traced_line = Some(format!("{body},\"tid\":\"{tid}\"}}"));
+                }
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let mut reply = forward(shared, &mut conns, traced_line.as_deref().unwrap_or(line));
+        if tid != 0 {
+            obs::trace::record_since("proxy", "forward", tid, t0);
+        }
         if matches!(parsed, Ok(wire::Request::Stats)) {
             reply = splice_proxy_stats(shared, reply);
         }
@@ -423,7 +470,8 @@ fn binary_relay(
     reader: &mut std::io::BufReader<TcpStream>,
     writer: &mut TcpStream,
 ) {
-    let mut conns: Vec<Option<ClientConn>> = (0..shared.replicas.len()).map(|_| None).collect();
+    let mut conns: Vec<Option<(ClientConn, bool)>> =
+        (0..shared.replicas.len()).map(|_| None).collect();
     loop {
         let req = match frame::read_frame(reader) {
             Ok(Some(f)) => f,
@@ -432,7 +480,14 @@ fn binary_relay(
             // same discipline as the server's frame path
             Ok(None) | Err(_) => return,
         };
+        // a GZF2 header carries the client-minted tid; time the forward
+        // under it (the proxy never mints on the frame path)
+        let tid = frame::frame_tid(&req);
+        let t0 = std::time::Instant::now();
         let reply = forward_frame(shared, &mut conns, &req);
+        if tid != 0 {
+            obs::trace::record_since("proxy", "forward", tid, t0);
+        }
         if writer.write_all(&reply).is_err() {
             return;
         }
@@ -441,12 +496,15 @@ fn binary_relay(
 
 /// Forward one request frame verbatim, failing over across replicas —
 /// the frame twin of [`forward`]. Replica connections are upgraded to
-/// binary on first use and cached; only the reply's status byte is
-/// inspected (`ST_RETRY` → back off, try the next replica), never the
-/// payload, so predictions stay byte-for-byte the replica's.
+/// binary (offering GZF2) on first use and cached with the negotiated
+/// version; a GZF2 request headed for a replica still on GZF1 is
+/// re-headed (payload byte-for-byte, tid dropped on that hop). Only the
+/// reply's status byte is inspected (`ST_RETRY` → back off, try the
+/// next replica), never the payload, so predictions stay byte-for-byte
+/// the replica's.
 fn forward_frame(
     shared: &Arc<ProxyShared>,
-    conns: &mut [Option<ClientConn>],
+    conns: &mut [Option<(ClientConn, bool)>],
     req: &[u8],
 ) -> Vec<u8> {
     let attempts = match shared.cfg.attempts {
@@ -459,8 +517,8 @@ fn forward_frame(
         let replica = &shared.replicas[i];
         if conns[i].is_none() {
             let upgraded = ClientConn::connect(&replica.addr).and_then(|mut c| {
-                c.upgrade_binary()?;
-                Ok(c)
+                let v2 = c.upgrade_binary_v2()?;
+                Ok((c, v2))
             });
             match upgraded {
                 Ok(c) => conns[i] = Some(c),
@@ -470,8 +528,15 @@ fn forward_frame(
                 }
             }
         }
-        let conn = conns[i].as_mut().expect("connection just ensured");
-        match conn.roundtrip_frame(req) {
+        let (conn, v2) = conns[i].as_mut().expect("connection just ensured");
+        let downgraded;
+        let send: &[u8] = if !*v2 && req.starts_with(&frame::MAGIC2) {
+            downgraded = frame::frame(frame::payload(req));
+            &downgraded
+        } else {
+            req
+        };
+        match conn.roundtrip_frame(send) {
             Ok(reply) => {
                 replica.record_success();
                 if frame::reply_status(&reply) == Some(frame::ST_RETRY) {

@@ -19,6 +19,15 @@
 //! {"dist":"error","error":"...","shard_id":3}   [either] shard_id optional
 //! ```
 //!
+//! Job, assign and stats messages additionally accept an **optional**
+//! `"tid":"N"` field — the distributed trace ID as a u64 decimal string
+//! (the seed convention; the f64-backed JSON number is exact only to
+//! 2^53). The leader mints one ID per run when tracing is on and stamps
+//! every job/assign; workers echo it on stats and adopt it as their
+//! ambient trace so shard spans land in the fleet timeline. Untraced
+//! (tid 0) messages omit the field entirely, so their bytes — and an
+//! old peer's view of the protocol — are unchanged.
+//!
 //! The broadcast is the whole point of the protocol: a [`BoundSpec`] is a
 //! few bytes of JSON and every holder rebuilds a bit-identical feature
 //! map from it, so the only bulk payload is the per-shard sufficient
@@ -128,15 +137,19 @@ pub struct WireStats {
     pub worker_id: usize,
     /// wall time the worker spent featurizing this shard (seconds)
     pub featurize_secs: f64,
+    /// echoed distributed trace ID (0 = untraced run)
+    pub tid: u64,
     pub stats: RidgeStats,
 }
 
-/// One parsed dist message.
+/// One parsed dist message. `tid` fields are the run's distributed
+/// trace ID (0 = untraced) — observability metadata only, never part of
+/// the computation.
 #[derive(Debug)]
 pub enum DistMsg {
     Register { proto: usize },
-    Job { worker_id: usize, spec: BoundSpec, data: DataSpec },
-    Assign(ShardRange),
+    Job { worker_id: usize, spec: BoundSpec, data: DataSpec, tid: u64 },
+    Assign(ShardRange, u64),
     Stats(Box<WireStats>),
     Done,
     Error { error: String, shard_id: Option<usize> },
@@ -146,18 +159,42 @@ pub fn register_msg() -> String {
     format!(r#"{{"dist":"register","proto":{DIST_PROTO}}}"#)
 }
 
-pub fn job_msg(worker_id: usize, spec: &BoundSpec, data: &DataSpec) -> String {
+/// The optional trace-ID wire fragment: empty for an untraced run so
+/// the untraced bytes are unchanged from protocol v1 without the field.
+fn tid_fragment(tid: u64) -> String {
+    if tid == 0 {
+        String::new()
+    } else {
+        format!(r#","tid":"{tid}""#)
+    }
+}
+
+fn parse_tid(j: &Json) -> Result<u64, String> {
+    match j.get("tid") {
+        None => Ok(0),
+        Some(v) => v
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| "\"tid\" must be a u64 decimal string".to_string()),
+    }
+}
+
+pub fn job_msg(worker_id: usize, spec: &BoundSpec, data: &DataSpec, tid: u64) -> String {
     format!(
-        r#"{{"dist":"job","proto":{DIST_PROTO},"worker":{worker_id},"spec":{},"data":{}}}"#,
+        r#"{{"dist":"job","proto":{DIST_PROTO},"worker":{worker_id},"spec":{},"data":{}{}}}"#,
         spec.to_json(),
-        data.to_json()
+        data.to_json(),
+        tid_fragment(tid)
     )
 }
 
-pub fn assign_msg(t: ShardRange) -> String {
+pub fn assign_msg(t: ShardRange, tid: u64) -> String {
     format!(
-        r#"{{"dist":"assign","shard_id":{},"lo":{},"hi":{}}}"#,
-        t.shard_id, t.lo, t.hi
+        r#"{{"dist":"assign","shard_id":{},"lo":{},"hi":{}{}}}"#,
+        t.shard_id,
+        t.lo,
+        t.hi,
+        tid_fragment(tid)
     )
 }
 
@@ -176,7 +213,7 @@ pub fn stats_msg(s: &WireStats) -> Result<String, String> {
     Ok(format!(
         concat!(
             r#"{{"dist":"stats","shard_id":{},"worker":{},"featurize_secs":{},"#,
-            r#""n":{},"yy":{},"b":{},"g":{}}}"#
+            r#""n":{},"yy":{},"b":{},"g":{}{}}}"#
         ),
         s.shard_id,
         s.worker_id,
@@ -184,7 +221,8 @@ pub fn stats_msg(s: &WireStats) -> Result<String, String> {
         s.stats.n,
         crate::model::artifact::fmt_f64(s.stats.yy),
         vec_to_json(&s.stats.b),
-        mat_to_json(&s.stats.g)
+        mat_to_json(&s.stats.g),
+        tid_fragment(s.tid)
     ))
 }
 
@@ -237,7 +275,7 @@ pub fn parse_msg(line: &str) -> Result<DistMsg, String> {
             let data = DataSpec::from_json_value(
                 j.get("data").ok_or_else(|| "job missing \"data\"".to_string())?,
             )?;
-            Ok(DistMsg::Job { worker_id, spec, data })
+            Ok(DistMsg::Job { worker_id, spec, data, tid: parse_tid(&j)? })
         }
         "assign" => {
             let shard_id = req_usize(&j, "shard_id")?;
@@ -246,7 +284,7 @@ pub fn parse_msg(line: &str) -> Result<DistMsg, String> {
             if lo >= hi {
                 return Err(format!("assign shard {shard_id}: empty range [{lo}, {hi})"));
             }
-            Ok(DistMsg::Assign(ShardRange { shard_id, lo, hi }))
+            Ok(DistMsg::Assign(ShardRange { shard_id, lo, hi }, parse_tid(&j)?))
         }
         "stats" => {
             let shard_id = req_usize(&j, "shard_id")?;
@@ -287,6 +325,7 @@ pub fn parse_msg(line: &str) -> Result<DistMsg, String> {
                 shard_id,
                 worker_id,
                 featurize_secs,
+                tid: parse_tid(&j)?,
                 stats: RidgeStats { g, b, n, yy },
             })))
         }

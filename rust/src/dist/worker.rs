@@ -104,11 +104,18 @@ pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport, Stri
     );
     let mut buf = Vec::new();
 
-    let (worker_id, spec, data) = match read_msg(&mut reader, &mut buf, opts.idle_timeout)? {
-        DistMsg::Job { worker_id, spec, data } => (worker_id, spec, data),
-        DistMsg::Error { error, .. } => return Err(format!("leader rejected registration: {error}")),
-        other => return Err(format!("expected a job after registering, got {other:?}")),
-    };
+    let (worker_id, spec, data, job_tid) =
+        match read_msg(&mut reader, &mut buf, opts.idle_timeout)? {
+            DistMsg::Job { worker_id, spec, data, tid } => (worker_id, spec, data, tid),
+            DistMsg::Error { error, .. } => {
+                return Err(format!("leader rejected registration: {error}"))
+            }
+            other => return Err(format!("expected a job after registering, got {other:?}")),
+        };
+    // adopt the run's trace ID as this thread's ambient trace: every
+    // shard/featurize/absorb span below inherits it and stitches into
+    // the leader's timeline via `gzk trace-merge`
+    let _trace_ctx = obs::trace::with_trace(job_tid);
     obs::info(
         "dist.worker",
         "registered with the leader; job received",
@@ -130,8 +137,8 @@ pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport, Stri
         WorkerReport { worker_id, shards: 0, rows: 0, featurize_secs: 0.0 };
 
     loop {
-        let task = match read_msg(&mut reader, &mut buf, opts.idle_timeout)? {
-            DistMsg::Assign(t) => t,
+        let (task, task_tid) = match read_msg(&mut reader, &mut buf, opts.idle_timeout)? {
+            DistMsg::Assign(t, tid) => (t, tid),
             DistMsg::Done => return Ok(report),
             DistMsg::Error { error, .. } => return Err(format!("leader error: {error}")),
             other => return Err(format!("expected assign/done, got {other:?}")),
@@ -185,6 +192,7 @@ pub fn run_worker(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport, Stri
             shard_id: task.shard_id,
             worker_id,
             featurize_secs,
+            tid: if task_tid != 0 { task_tid } else { job_tid },
             stats,
         };
         match wire::stats_msg(&reply) {

@@ -33,8 +33,9 @@
 //!                 [--event-loops N] [--idle-s 300] [--allow-remote-shutdown]
 //!                                                    TCP model server over a ModelStore:
 //!                                                    newline-delimited JSON protocol
-//!                                                    (predict/models/stats/metrics/ping/
-//!                                                    binary/shutdown), multi-model routing
+//!                                                    (predict/models/stats/metrics/
+//!                                                    flightrec/ping/binary/shutdown),
+//!                                                    multi-model routing
 //!                                                    by name, manifest polled every
 //!                                                    --poll-ms so a newly persisted
 //!                                                    artifact serves without restart; full
@@ -55,7 +56,7 @@
 //!                                                    (0 disables).
 //!   gzk loadgen   [--addr <host:port>] [--clients 1,8] [--requests 200] [--model N]
 //!                 [--dataset <name>] [--store <dir>] [--seed 1] [--shutdown]
-//!                 [--binary | --wire-compare] [--replica-sweep 1,2,4]
+//!                 [--binary | --wire-compare] [--replica-sweep 1,2,4] [--traced]
 //!                 [--json-out BENCH_serve.json]
 //!                                                    concurrent load generator: one trial
 //!                                                    per client count, rows drawn from the
@@ -73,7 +74,13 @@
 //!                                                    server replicas over --store behind an
 //!                                                    in-process proxy per entry and records
 //!                                                    a replica-scaling section (with a
-//!                                                    sweep, --addr may be omitted)
+//!                                                    sweep, --addr may be omitted).
+//!                                                    --traced mints a u64 trace ID per
+//!                                                    request (carried as the JSON "tid"
+//!                                                    field or the GZF2 frame-header slot,
+//!                                                    negotiated) so server-side spans
+//!                                                    stitch into one distributed timeline;
+//!                                                    replies stay bit-identical either way
 //!   gzk worker    --addr <leader host:port> [--connect-retries 50] [--idle-s 300]
 //!                                                    distributed-fit worker: registers with
 //!                                                    a leader, rebuilds the broadcast spec,
@@ -105,6 +112,30 @@
 //!                                                    in every --probe-ms; the wire shutdown
 //!                                                    command (loopback-gated) fans out to
 //!                                                    every replica
+//!   gzk top       --targets a:p[,b:p...] [--interval-ms 2000] [--once]
+//!                 [--json-out TOP.json]
+//!                                                    live fleet monitor: polls the wire
+//!                                                    `metrics` command on every target
+//!                                                    (`gzk server` or `gzk proxy`), diffs
+//!                                                    counters between polls into rates,
+//!                                                    and renders a per-model table —
+//!                                                    req/s, latency p50/p95/p99, queue
+//!                                                    depth, admission rejects/s, open
+//!                                                    connections. --once takes exactly
+//!                                                    two polls one interval apart and
+//!                                                    exits (for scripts/CI); --json-out
+//!                                                    appends every tick to a JSON
+//!                                                    document for machine consumption
+//!   gzk trace-merge --inputs a.json,b.json[,...] [--out TRACE_merged.json]
+//!                                                    merge per-process --trace-out files
+//!                                                    (e.g. proxy + server + loadgen from
+//!                                                    one traced run) into a single
+//!                                                    Perfetto/Chrome timeline: each input
+//!                                                    keeps its process lane, clocks are
+//!                                                    normalized by midpoint alignment of
+//!                                                    shared trace IDs, and spans from the
+//!                                                    same request share one `args.trace`
+//!                                                    ID across processes
 //!   gzk info                                          artifact manifest summary
 //!
 //! Data flags (fit / serve):
@@ -139,13 +170,27 @@
 //!                  override). Diagnostics are one newline-JSON record
 //!                  per event on stderr, e.g. {"ts":...,"level":"warn",
 //!                  "target":"dist.leader","msg":"...","shard":7}.
-//!   --log-file P   write event records to file P instead of stderr.
+//!   --log-file P   write event records to file P instead of stderr. The
+//!                  sink is size-capped: when the file would exceed
+//!                  --log-cap-bytes it is rotated to P.1 (one generation)
+//!                  and a fresh P is started.
+//!   --log-cap-bytes N
+//!                  rotation threshold for --log-file (default 64 MiB).
 //!   --trace-out P  collect scoped trace spans (featurize / absorb /
-//!                  solve / chunk I/O / scatter / merge / shard stages)
-//!                  and write them as Chrome trace-event JSON to P on a
-//!                  clean exit — load the file in chrome://tracing or
-//!                  Perfetto. Tracing is off (one atomic load per
-//!                  would-be span) unless this flag is given.
+//!                  solve / chunk I/O / scatter / merge / shard stages,
+//!                  plus per-request serve spans when requests carry a
+//!                  trace ID) and write them as Chrome trace-event JSON
+//!                  to P on a clean exit — load the file in
+//!                  chrome://tracing or Perfetto, or stitch several
+//!                  processes' files with `gzk trace-merge`. Tracing is
+//!                  off (one atomic load per would-be span) unless this
+//!                  flag is given.
+//!   --flightrec P  arm the crash flight recorder: the last 256 event
+//!                  records are kept in a fixed in-process ring and
+//!                  dumped to P as one JSON document whenever an
+//!                  error-level event fires; `gzk server` / `gzk proxy`
+//!                  also answer the wire `flightrec` command with the
+//!                  live ring.
 //!
 //! Observability (see DESIGN.md "Observability"): every process keeps a
 //! global metrics registry (counters/gauges/latency histograms named
@@ -206,12 +251,34 @@ fn main() {
         }
         Err(e) => usage_error(&e),
     }
+    let log_cap = if args.has("log-cap-bytes") || args.get("log-cap-bytes").is_some() {
+        let cap = args.get_u64("log-cap-bytes", 0);
+        if cap == 0 {
+            usage_error("--log-cap-bytes must be >= 1 (bytes before the log file rotates)");
+        }
+        Some(cap)
+    } else {
+        None
+    };
     match args.path_flag("log-file") {
         Ok(Some(path)) => {
-            if let Err(e) = gzk::obs::events::set_log_file(path) {
+            let set = match log_cap {
+                Some(cap) => gzk::obs::events::set_log_file_capped(path, cap),
+                None => gzk::obs::events::set_log_file(path),
+            };
+            if let Err(e) = set {
                 fatal_error(&e);
             }
         }
+        Ok(None) => {
+            if log_cap.is_some() {
+                usage_error("--log-cap-bytes needs --log-file <path> (it caps the file sink)");
+            }
+        }
+        Err(e) => usage_error(&e),
+    }
+    match args.path_flag("flightrec") {
+        Ok(Some(path)) => gzk::obs::flightrec::set_dump_path(path),
         Ok(None) => {}
         Err(e) => usage_error(&e),
     }
@@ -221,6 +288,9 @@ fn main() {
     };
     if trace_out.is_some() {
         gzk::obs::trace::enable();
+        // the process lane label in a merged timeline ("gzk proxy",
+        // "gzk server", ...) — set before any span is recorded
+        gzk::obs::trace::set_process_name(&format!("gzk {}", args.subcommand));
     }
     match args.subcommand.as_str() {
         "fig1" => {
@@ -276,6 +346,8 @@ fn main() {
         "worker" => worker_cmd(&args),
         "leader" => leader_cmd(&args),
         "proxy" => proxy_cmd(&args),
+        "top" => top_cmd(&args),
+        "trace-merge" => trace_merge_cmd(&args),
         "info" => info(),
         other => {
             usage_error(&format!(
@@ -283,9 +355,9 @@ fn main() {
             ));
         }
     }
-    // subcommands that exit through std::process::exit (server shutdown,
-    // error paths) skip this — the trace covers clean runs, which is
-    // what `gzk fit --trace-out` is for
+    // error paths exit through std::process::exit and skip this — the
+    // trace covers clean runs: a fit, or a server/proxy that was shut
+    // down over the wire (its trace is what `gzk trace-merge` stitches)
     if let Some(path) = trace_out {
         if let Err(e) = gzk::obs::trace::write_chrome_trace(&path) {
             fatal_error(&e);
@@ -948,7 +1020,7 @@ fn server_cmd(args: &Args) {
         if n_loops == 1 { "" } else { "s" }
     );
     println!(
-        r#"protocol: one JSON object per line, e.g. {{"cmd":"predict","model":"ridge","x":[...]}}; cmds: predict, models, stats, metrics, ping, binary, shutdown"#
+        r#"protocol: one JSON object per line, e.g. {{"cmd":"predict","model":"ridge","x":[...]}}; cmds: predict, models, stats, metrics, flightrec, ping, binary, shutdown"#
     );
     let final_stats = server.wait();
     println!("gzk server: shut down cleanly");
@@ -996,6 +1068,7 @@ fn loadgen_cmd(args: &Args) {
         send_shutdown: args.has("shutdown"),
         replica_sweep,
         wire,
+        traced: args.has("traced"),
     };
     let report = match gzk::server::loadgen::run(&cfg) {
         Ok(r) => r,
@@ -1325,6 +1398,61 @@ fn proxy_cmd(args: &Args) {
     println!("forwarding the serving protocol; shutdown (loopback) fans out to every replica");
     let summary = proxy.wait();
     println!("gzk proxy: shut down cleanly ({summary})");
+}
+
+/// The `gzk top` live fleet monitor: poll the wire `metrics` command on
+/// every `--targets` address, diff counters between polls into rates,
+/// and render a per-model table (plus `--json-out` for scripts).
+fn top_cmd(args: &Args) {
+    let targets = match args.get_addr_list("targets") {
+        Ok(t) => t,
+        Err(e) => usage_error(&e),
+    };
+    if targets.is_empty() {
+        usage_error(
+            "top requires --targets <host:port,...> (running `gzk server` / `gzk proxy` \
+             addresses)",
+        );
+    }
+    let interval_ms = args.get_usize("interval-ms", 2000);
+    if interval_ms == 0 {
+        usage_error("--interval-ms must be >= 1");
+    }
+    let cfg = gzk::server::top::TopConfig {
+        targets,
+        interval: Duration::from_millis(interval_ms as u64),
+        once: args.has("once"),
+        json_out: args.get("json-out").map(PathBuf::from),
+    };
+    let mut print_tick = |s: &str| print!("{s}");
+    if let Err(e) = gzk::server::top::run_top(&cfg, &mut print_tick) {
+        fatal_error(&e);
+    }
+}
+
+/// The `gzk trace-merge` stitcher: merge several processes' `--trace-out`
+/// files into one Perfetto/Chrome timeline (clocks normalized via shared
+/// trace IDs — see DESIGN.md §3e).
+fn trace_merge_cmd(args: &Args) {
+    let inputs = match args.get_path_list("inputs") {
+        Ok(i) => i,
+        Err(e) => usage_error(&e),
+    };
+    if inputs.len() < 2 {
+        usage_error(
+            "trace-merge requires --inputs <a.json,b.json,...> — at least two --trace-out \
+             files to stitch",
+        );
+    }
+    let out = PathBuf::from(args.get("out").unwrap_or("TRACE_merged.json"));
+    let doc = match gzk::obs::merge::merge_traces(&inputs) {
+        Ok(d) => d,
+        Err(e) => fatal_error(&e),
+    };
+    match std::fs::write(&out, &doc) {
+        Ok(()) => println!("wrote merged trace {out:?} ({} input files)", inputs.len()),
+        Err(e) => fatal_error(&format!("write {out:?}: {e}")),
+    }
 }
 
 fn info() {

@@ -64,12 +64,63 @@ pub fn set_level(level: Level) {
     THRESHOLD.store(level as u8, Ordering::Relaxed);
 }
 
-static SINK: Mutex<Option<File>> = Mutex::new(None);
+/// Default `--log-file` rotation cap (bytes); override per process with
+/// [`set_log_file_capped`] (the `--log-cap-bytes` flag).
+pub const DEFAULT_LOG_CAP_BYTES: u64 = 64 << 20;
 
-/// Route all events to `path` (created/truncated) instead of stderr.
+/// The installed `--log-file` sink with its size-capped rotation state.
+struct LogSink {
+    file: File,
+    path: String,
+    written: u64,
+    cap: u64,
+}
+
+impl LogSink {
+    /// Write one event line, rotating first if it would push the file
+    /// past the cap: the current file moves to `<path>.1` (replacing any
+    /// previous `.1`) and the triggering line lands in the fresh file —
+    /// rotation never loses the rotating write.
+    fn write_line(&mut self, line: &str) {
+        let len = line.len() as u64 + 1;
+        if self.written + len > self.cap && self.written > 0 {
+            let _ = self.file.flush();
+            let _ = std::fs::rename(&self.path, format!("{}.1", self.path));
+            match File::create(&self.path) {
+                Ok(f) => {
+                    self.file = f;
+                    self.written = 0;
+                }
+                Err(_) => {
+                    // keep writing to the renamed handle rather than
+                    // dropping the event
+                }
+            }
+        }
+        if writeln!(self.file, "{line}").is_ok() {
+            self.written += len;
+        }
+    }
+}
+
+static SINK: Mutex<Option<LogSink>> = Mutex::new(None);
+
+/// Route all events to `path` (created/truncated) instead of stderr,
+/// rotating at the default cap.
 pub fn set_log_file(path: &str) -> Result<(), String> {
+    set_log_file_capped(path, DEFAULT_LOG_CAP_BYTES)
+}
+
+/// [`set_log_file`] with an explicit rotation cap in bytes: once the
+/// file would exceed it, it is renamed to `<path>.1` and a fresh file
+/// takes over (one generation of history is kept).
+pub fn set_log_file_capped(path: &str, cap: u64) -> Result<(), String> {
+    if cap == 0 {
+        return Err("log rotation cap must be >= 1 byte".to_string());
+    }
     let file = File::create(path).map_err(|e| format!("open log file {path:?}: {e}"))?;
-    *SINK.lock().expect("log sink lock") = Some(file);
+    *SINK.lock().expect("log sink lock") =
+        Some(LogSink { file, path: path.to_string(), written: 0, cap });
     Ok(())
 }
 
@@ -166,11 +217,15 @@ pub fn event(level: Level, target: &str, msg: &str, fields: &[(&str, Field)]) {
         line.push_str(&value.to_json());
     }
     line.push('}');
+    // every emitted event also lands in the crash flight recorder; an
+    // error-level event additionally triggers its on-error dump
+    super::flightrec::record(&line);
+    if level == Level::Error {
+        super::flightrec::dump_on_error();
+    }
     let mut sink = SINK.lock().expect("log sink lock");
     match sink.as_mut() {
-        Some(file) => {
-            let _ = writeln!(file, "{line}");
-        }
+        Some(sink) => sink.write_line(&line),
         None => {
             let _ = writeln!(std::io::stderr().lock(), "{line}");
         }
@@ -230,6 +285,60 @@ mod tests {
         let err = Level::parse("loud").unwrap_err();
         assert!(err.contains("known: error, warn, info, debug"), "{err}");
         assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn log_rotation_never_loses_the_rotating_write() {
+        // drive a LogSink directly (the global SINK is process-wide and
+        // other tests' events would interleave): a tiny cap forces many
+        // rotations, and every recent line must survive in the live file
+        // or the .1 generation — in particular the write that triggered
+        // each rotation lands in the fresh file, never in the void
+        let path = std::env::temp_dir()
+            .join(format!("gzk-events-rotate-{}.log", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let rotated = format!("{path_s}.1");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&rotated);
+        let mut sink = LogSink {
+            file: File::create(&path_s).unwrap(),
+            path: path_s.clone(),
+            written: 0,
+            cap: 200,
+        };
+        let total = 40;
+        for i in 0..total {
+            sink.write_line(&format!("{{\"msg\":\"rotate line {i:03}\"}}"));
+        }
+        drop(sink);
+        let live = std::fs::read_to_string(&path).unwrap_or_default();
+        let old = std::fs::read_to_string(&rotated).unwrap_or_default();
+        assert!(
+            live.len() as u64 <= 200,
+            "live log {} bytes exceeds the 200-byte cap",
+            live.len()
+        );
+        assert!(!old.is_empty(), "a 40-line run at cap 200 must have rotated");
+        // the write that triggered the last rotation is the first line of
+        // the fresh file — present, not lost
+        assert!(
+            live.contains(&format!("rotate line {:03}", total - 1)),
+            "the final (rotating) write must land in the fresh file: {live:?}"
+        );
+        // survivors form a contiguous tail of the sequence: rotation
+        // drops only the oldest generation, never a line in the middle
+        let both = format!("{old}{live}");
+        let survivors: Vec<usize> = (0..total)
+            .filter(|i| both.contains(&format!("rotate line {i:03}")))
+            .collect();
+        let oldest = survivors[0];
+        assert_eq!(
+            survivors,
+            (oldest..total).collect::<Vec<_>>(),
+            "rotation lost a line in the middle of the tail"
+        );
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&rotated);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Crash/error flight recorder: a fixed-size ring of the most recent
+//! event lines, per process.
+//!
+//! Every event record that clears the log threshold is also appended
+//! here (see [`super::events::event`]); the ring keeps the last
+//! [`SLOTS`] of them so that when something goes wrong the process can
+//! answer "what happened just before?" without debug-level logging
+//! having been on. Two ways out:
+//!
+//! * **on demand** — the wire `flightrec` command (answered locally by
+//!   both `gzk server` and `gzk proxy`, like `metrics`) returns
+//!   [`dump_json`];
+//! * **on error** — when an error-level event fires and a dump path was
+//!   installed ([`set_dump_path`], the `--flightrec <path>` flag), the
+//!   ring is dumped there (latest error wins — the file is a snapshot
+//!   of the moments before the most recent error).
+//!
+//! Writers are wait-free: a slot index is claimed with one atomic
+//! fetch-add and the slot is filled under a `try_lock` — a contended
+//! slot (another writer mid-replace, or a dump mid-read) drops the
+//! record and counts it in `dropped` rather than blocking the event
+//! path. std has no lock-free box swap, so per-slot mutexes with
+//! try-lock-skip are the honest std-only approximation: no caller ever
+//! waits, at the cost of a counted drop under contention.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Ring capacity: the last this-many event lines are kept.
+pub const SLOTS: usize = 256;
+
+static HEAD: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static DUMP_PATH: OnceLock<String> = OnceLock::new();
+
+struct Slot {
+    seq: u64,
+    line: String,
+}
+
+fn ring() -> &'static Vec<Mutex<Option<Slot>>> {
+    static RING: OnceLock<Vec<Mutex<Option<Slot>>>> = OnceLock::new();
+    RING.get_or_init(|| (0..SLOTS).map(|_| Mutex::new(None)).collect())
+}
+
+/// Append one already-formatted event line (a JSON object) to the ring.
+/// Wait-free; drops (and counts) the record if the slot is contended.
+pub fn record(line: &str) {
+    let seq = HEAD.fetch_add(1, Ordering::Relaxed);
+    let slot = &ring()[(seq % SLOTS as u64) as usize];
+    match slot.try_lock() {
+        Ok(mut s) => *s = Some(Slot { seq, line: line.to_string() }),
+        Err(_) => {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Install the on-error dump path (first caller wins; the CLI's
+/// `--flightrec <path>` flag). Without it, error-level events trigger
+/// no dump and the ring is reachable only over the wire.
+pub fn set_dump_path(path: &str) {
+    let _ = DUMP_PATH.set(path.to_string());
+}
+
+/// Dump the ring to the installed path, if any — called by the event
+/// layer on every error-level event. Write errors are swallowed (the
+/// recorder must never take the process down with it).
+pub fn dump_on_error() {
+    if let Some(path) = DUMP_PATH.get() {
+        let _ = std::fs::write(path, dump_json() + "\n");
+    }
+}
+
+/// The ring as one JSON document: recent event lines in append order,
+/// plus the global sequence cursor and the contended-drop count.
+///
+/// ```text
+/// {"next_seq":412,"dropped":0,"events":[{...},{...}, ...]}
+/// ```
+pub fn dump_json() -> String {
+    let mut entries: Vec<(u64, String)> = Vec::with_capacity(SLOTS);
+    for slot in ring() {
+        // try_lock on the read side too: skipping a slot a writer holds
+        // beats stalling it
+        if let Ok(s) = slot.try_lock() {
+            if let Some(rec) = s.as_ref() {
+                entries.push((rec.seq, rec.line.clone()));
+            }
+        }
+    }
+    entries.sort_by_key(|(seq, _)| *seq);
+    let lines: Vec<String> = entries.into_iter().map(|(_, line)| line).collect();
+    format!(
+        "{{\"next_seq\":{},\"dropped\":{},\"events\":[{}]}}",
+        HEAD.load(Ordering::Relaxed),
+        DROPPED.load(Ordering::Relaxed),
+        lines.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Json;
+
+    #[test]
+    fn ring_keeps_the_most_recent_records_in_order() {
+        // other tests share the global ring, so assert only about our
+        // own markers: write more than SLOTS of them, then the dump must
+        // hold a contiguous, ordered suffix ending at the newest
+        let total = SLOTS + 40;
+        for i in 0..total {
+            record(&format!("{{\"marker\":\"flightrec-{i:04}\"}}"));
+        }
+        let dump = dump_json();
+        let doc = Json::parse(&dump).expect("dump is one valid JSON document");
+        assert!(doc.get("next_seq").and_then(Json::as_f64).is_some());
+        let events = doc.get("events").and_then(Json::as_arr).expect("events array");
+        let ours: Vec<usize> = events
+            .iter()
+            .filter_map(|e| e.get("marker").and_then(Json::as_str))
+            .filter_map(|m| m.strip_prefix("flightrec-")?.parse().ok())
+            .collect();
+        assert!(!ours.is_empty(), "ring lost every marker");
+        assert!(
+            ours.contains(&(total - 1)),
+            "the newest marker must be in the ring: {ours:?}"
+        );
+        let mut sorted = ours.clone();
+        sorted.sort_unstable();
+        assert_eq!(ours, sorted, "dump must present records in append order");
+        assert!(ours.len() <= SLOTS, "ring exceeded its capacity");
+    }
+
+    #[test]
+    fn concurrent_writers_never_block_and_the_dump_stays_valid() {
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                scope.spawn(move || {
+                    for i in 0..500 {
+                        record(&format!("{{\"w\":{t},\"i\":{i}}}"));
+                    }
+                });
+            }
+            for _ in 0..10 {
+                let dump = dump_json();
+                Json::parse(&dump).unwrap_or_else(|e| panic!("mid-flight dump invalid: {e}"));
+            }
+        });
+        Json::parse(&dump_json()).expect("final dump valid");
+    }
+}

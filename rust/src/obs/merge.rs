@@ -1,0 +1,289 @@
+//! `gzk trace-merge`: stitch per-process `--trace-out` files into one
+//! Perfetto timeline, joined on the distributed trace IDs.
+//!
+//! Each process writes trace timestamps in microseconds since its own
+//! monotonic origin, plus the wall-clock micros at which that origin
+//! was pinned (`origin_unix_us` — see [`super::trace`]). Merging is a
+//! two-step clock normalization:
+//!
+//! 1. **Baseline**: file *k*'s spans are shifted by
+//!    `origin_unix_us[k] − origin_unix_us[0]`, which places every file
+//!    on file 0's clock up to wall-clock error (NTP skew, coarse clock
+//!    granularity — often hundreds of µs, which is visible at request
+//!    timescales).
+//! 2. **Trace-ID refinement** (the ping-round-trip rule): a request
+//!    span on the client/proxy side *encloses* the matching server-side
+//!    span for the same trace ID, and the enclosing minus the enclosed
+//!    duration is the network round-trip. Assuming the two legs are
+//!    symmetric — exactly the assumption behind normalizing clocks
+//!    against a ping RTT — the midpoints of the two spans coincide in
+//!    true time. For every trace ID shared with already-placed files
+//!    the midpoint misalignment is computed and the **median** over all
+//!    shared IDs is applied as the file's clock correction (median, so
+//!    a straggling outlier request cannot skew the alignment).
+//!
+//! The merged document gives each input file its own `pid` (with a
+//! `process_name` metadata record naming the source process and file),
+//! shifts every timestamp so the earliest span sits at 0, and keeps the
+//! `args.trace` join keys — load it in Perfetto and a traced predict
+//! shows as nested spans across proxy and replica rows.
+//!
+//! This is an offline tool over trace files, not instrumentation, so —
+//! unlike the recording half of the obs layer — it may lean on the
+//! runtime JSON parser.
+
+use crate::runtime::Json;
+use std::path::Path;
+
+use super::events::json_string;
+
+/// One span parsed back out of a trace file.
+struct Ev {
+    name: String,
+    cat: String,
+    tid: u64,
+    trace: Option<u64>,
+    /// µs since the owning file's origin (f64: merged values are shifted
+    /// by wall-clock deltas that need not be integral)
+    ts: f64,
+    dur: f64,
+}
+
+/// One parsed input file.
+struct TraceFile {
+    label: String,
+    origin_unix_us: f64,
+    events: Vec<Ev>,
+    /// correction applied to place this file on the common clock
+    shift: f64,
+}
+
+fn parse_file(path: &Path) -> Result<TraceFile, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("parse {path:?}: {e}"))?;
+    let origin_unix_us =
+        doc.get("origin_unix_us").and_then(Json::as_f64).unwrap_or(0.0);
+    let pname = doc
+        .get("process_name")
+        .and_then(Json::as_str)
+        .unwrap_or("gzk")
+        .to_string();
+    let pid = doc.get("process_pid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let file_name =
+        path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    let label = format!("{pname} [{pid}] ({file_name})");
+    let raw = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{path:?}: no traceEvents array"))?;
+    let mut events = Vec::with_capacity(raw.len());
+    for e in raw {
+        // only complete spans participate; metadata records are rebuilt
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        events.push(Ev {
+            name: e.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            cat: e.get("cat").and_then(Json::as_str).unwrap_or("").to_string(),
+            tid: e.get("tid").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            trace: e
+                .get("args")
+                .and_then(|a| a.get("trace"))
+                .and_then(Json::as_str)
+                .and_then(|s| s.parse::<u64>().ok()),
+            ts: e.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
+            dur: e.get("dur").and_then(Json::as_f64).unwrap_or(0.0),
+        });
+    }
+    Ok(TraceFile { label, origin_unix_us, events, shift: 0.0 })
+}
+
+/// For every trace ID, the midpoint of its longest already-placed span
+/// (the longest span for an ID is the outermost — the enclosing side).
+fn midpoints_by_trace(files: &[TraceFile]) -> std::collections::BTreeMap<u64, (f64, f64)> {
+    let mut out: std::collections::BTreeMap<u64, (f64, f64)> = std::collections::BTreeMap::new();
+    for f in files {
+        for e in &f.events {
+            let Some(t) = e.trace else { continue };
+            let mid = e.ts + f.shift + e.dur / 2.0;
+            match out.get(&t) {
+                Some(&(_, dur)) if dur >= e.dur => {}
+                _ => {
+                    out.insert(t, (mid, e.dur));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Merge `inputs` into one Chrome trace-event document (returned as a
+/// string; the CLI writes it to `--out`).
+pub fn merge_traces(inputs: &[std::path::PathBuf]) -> Result<String, String> {
+    if inputs.len() < 2 {
+        return Err("trace-merge needs at least two --inputs files".to_string());
+    }
+    let mut files = Vec::with_capacity(inputs.len());
+    for path in inputs {
+        files.push(parse_file(path)?);
+    }
+    let base = files[0].origin_unix_us;
+    for k in 1..files.len() {
+        // step 1: wall-clock baseline
+        files[k].shift = files[k].origin_unix_us - base;
+        // step 2: median midpoint correction over trace IDs shared with
+        // the files already placed (file 0 is the reference clock)
+        let placed = midpoints_by_trace(&files[..k]);
+        let mut corrections: Vec<f64> = Vec::new();
+        for e in &files[k].events {
+            let Some(t) = e.trace else { continue };
+            let Some(&(ref_mid, _)) = placed.get(&t) else { continue };
+            let own_mid = e.ts + files[k].shift + e.dur / 2.0;
+            corrections.push(ref_mid - own_mid);
+        }
+        if !corrections.is_empty() {
+            corrections.sort_by(|a, b| a.partial_cmp(b).expect("finite corrections"));
+            files[k].shift += corrections[corrections.len() / 2];
+        }
+    }
+    // rebase so the earliest span lands at ts = 0
+    let t0 = files
+        .iter()
+        .flat_map(|f| f.events.iter().map(move |e| e.ts + f.shift))
+        .fold(f64::INFINITY, f64::min);
+    let t0 = if t0.is_finite() { t0 } else { 0.0 };
+
+    let mut out: Vec<String> = Vec::new();
+    for (k, f) in files.iter().enumerate() {
+        let pid = k + 1;
+        out.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"args\":{{\"name\":{}}}}}",
+            json_string(&f.label)
+        ));
+        for e in &f.events {
+            let args = match e.trace {
+                Some(t) => format!(",\"args\":{{\"trace\":\"{t}\"}}"),
+                None => String::new(),
+            };
+            out.push(format!(
+                "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{:.1},\"dur\":{:.1},\"pid\":{pid},\"tid\":{}{}}}",
+                json_string(&e.name),
+                json_string(&e.cat),
+                (e.ts + f.shift - t0).max(0.0),
+                e.dur,
+                e.tid,
+                args
+            ));
+        }
+    }
+    Ok(format!("{{\"traceEvents\":[{}]}}\n", out.join(",")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_trace(
+        tag: &str,
+        origin_unix_us: u64,
+        name: &str,
+        spans: &[(&str, u64, u64, u64)], // (name, trace, ts, dur)
+    ) -> std::path::PathBuf {
+        let events: Vec<String> = spans
+            .iter()
+            .map(|(n, trace, ts, dur)| {
+                let args = if *trace != 0 {
+                    format!(",\"args\":{{\"trace\":\"{trace}\"}}")
+                } else {
+                    String::new()
+                };
+                format!(
+                    "{{\"name\":\"{n}\",\"cat\":\"t\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{dur},\"pid\":1,\"tid\":1{args}}}"
+                )
+            })
+            .collect();
+        let doc = format!(
+            "{{\"origin_unix_us\":{origin_unix_us},\"process_pid\":7,\"process_name\":\"{name}\",\"traceEvents\":[{}]}}",
+            events.join(",")
+        );
+        let path = std::env::temp_dir()
+            .join(format!("gzk-merge-unit-{}-{tag}.json", std::process::id()));
+        std::fs::write(&path, doc).unwrap();
+        path
+    }
+
+    #[test]
+    fn shared_trace_ids_align_midpoints_across_skewed_clocks() {
+        // proxy: a 1000µs request span for trace 42 starting at ts=100.
+        // server: the matching 600µs span — its true midpoint equals the
+        // proxy span's midpoint (symmetric legs), but the server's file
+        // carries a wall-clock origin that is 500µs off true. The merge
+        // must recover the alignment from the trace ID, not the origins.
+        let proxy = write_trace("proxy", 1_000_000, "gzk proxy", &[("forward", 42, 100, 1000)]);
+        // true server origin: proxy origin + 1000µs; the file lies by +500
+        // (origin_unix_us = 1_001_500). In server-local time the span
+        // midpoint is at 300µs (ts=0, dur=600) → true midpoint should be
+        // proxy ts 600 (=100+1000/2).
+        let server = write_trace("server", 1_001_500, "gzk server", &[("predict", 42, 0, 600)]);
+        let merged = merge_traces(&[proxy.clone(), server.clone()]).unwrap();
+        let doc = Json::parse(&merged).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let find = |name: &str| -> (f64, f64) {
+            let e = events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("no {name} span in the merge"));
+            (
+                e.get("ts").and_then(Json::as_f64).unwrap(),
+                e.get("dur").and_then(Json::as_f64).unwrap(),
+            )
+        };
+        let (p_ts, p_dur) = find("forward");
+        let (s_ts, s_dur) = find("predict");
+        let p_mid = p_ts + p_dur / 2.0;
+        let s_mid = s_ts + s_dur / 2.0;
+        assert!(
+            (p_mid - s_mid).abs() < 1e-6,
+            "midpoints must align: proxy {p_mid} vs server {s_mid}"
+        );
+        // the server span nests inside the proxy span on the timeline
+        assert!(s_ts >= p_ts && s_ts + s_dur <= p_ts + p_dur, "span must nest");
+        // both files kept their trace join key and got distinct pids
+        let pids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| e.get("pid").and_then(Json::as_f64).unwrap() as u64)
+            .collect();
+        assert_eq!(pids.len(), 2, "each input file gets its own pid");
+        let _ = std::fs::remove_file(&proxy);
+        let _ = std::fs::remove_file(&server);
+    }
+
+    #[test]
+    fn merge_without_shared_traces_falls_back_to_wall_clock() {
+        let a = write_trace("wc-a", 2_000_000, "gzk a", &[("alpha", 0, 0, 100)]);
+        let b = write_trace("wc-b", 2_000_300, "gzk b", &[("beta", 0, 0, 100)]);
+        let merged = merge_traces(&[a.clone(), b.clone()]).unwrap();
+        let doc = Json::parse(&merged).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let ts_of = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .and_then(|e| e.get("ts").and_then(Json::as_f64))
+                .unwrap()
+        };
+        // b's origin is 300µs later, so beta sits 300µs after alpha
+        assert!((ts_of("beta") - ts_of("alpha") - 300.0).abs() < 1e-6);
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+    }
+
+    #[test]
+    fn merge_rejects_a_single_input() {
+        let a = write_trace("single", 1, "gzk", &[]);
+        let err = merge_traces(std::slice::from_ref(&a)).unwrap_err();
+        assert!(err.contains("at least two"), "{err}");
+        let _ = std::fs::remove_file(&a);
+    }
+}

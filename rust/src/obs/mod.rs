@@ -1,28 +1,37 @@
 //! Observability layer (L0): a global metrics registry, leveled
-//! structured events, and scoped trace spans — shared by every layer
-//! from the exec-pool job waves to the dist fleet.
+//! structured events, distributed-trace spans, and a crash flight
+//! recorder — shared by every layer from the exec-pool job waves to the
+//! dist fleet.
 //!
-//! Three independent channels, all std-only and all **read-only with
-//! respect to results**: instrumentation never touches the data being
-//! computed, so the bit-identity contracts of the parallel, chunked and
+//! Independent channels, all std-only and all **read-only with respect
+//! to results**: instrumentation never touches the data being computed,
+//! so the bit-identity contracts of the parallel, chunked and
 //! distributed fits hold with everything enabled (tested in
-//! `tests/obs_props.rs`).
+//! `tests/obs_props.rs` and `tests/trace_e2e.rs`).
 //!
 //! - [`registry`] — named counters, gauges and fixed-bucket histograms
 //!   behind lock-free atomic cells; one consistent JSON snapshot backs
-//!   the wire `metrics` command on `gzk server` and `gzk proxy`. A
-//!   disabled registry costs one relaxed atomic load per update.
+//!   the wire `metrics` command on `gzk server` and `gzk proxy` (and so
+//!   the `gzk top` fleet monitor). A disabled registry costs one
+//!   relaxed atomic load per update.
 //! - [`events`] — leveled (error/warn/info/debug) newline-JSON records
-//!   to stderr or the `--log-file` target, replacing bare `eprintln`
-//!   diagnostics so worker-death/reassignment and replica-ejection
-//!   stories are machine-parseable. Threshold via `--log-level` or
-//!   `GZK_LOG` (default `info`).
+//!   to stderr or the `--log-file` target (size-capped rotation to
+//!   `<path>.1`), replacing bare `eprintln` diagnostics so
+//!   worker-death/reassignment and replica-ejection stories are
+//!   machine-parseable. Threshold via `--log-level` or `GZK_LOG`
+//!   (default `info`).
 //! - [`trace`] — RAII spans recorded into per-thread buffers and dumped
-//!   as Chrome trace-event JSON by `--trace-out` (load the file in
-//!   `chrome://tracing` or Perfetto to see featurize/absorb/solve/
-//!   chunk-I/O/scatter/merge stages on a timeline).
+//!   as Chrome trace-event JSON by `--trace-out`, now carrying a
+//!   distributed request/trace ID minted at ingress so per-process
+//!   files stitch into one fleet timeline via `gzk trace-merge`
+//!   ([`merge`]).
+//! - [`flightrec`] — a fixed-size wait-free ring of the most recent
+//!   event lines, dumped as JSON on error-level events and on demand
+//!   via the wire `flightrec` command.
 
 pub mod events;
+pub mod flightrec;
+pub mod merge;
 pub mod registry;
 pub mod trace;
 

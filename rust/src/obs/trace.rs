@@ -1,11 +1,28 @@
-//! Scoped trace spans → Chrome trace-event JSON.
+//! Scoped trace spans → Chrome trace-event JSON, with distributed
+//! request/trace IDs for cross-process stitching.
 //!
 //! A [`Span`] is an RAII timer: created via [`span`], it records
-//! (name, category, thread, start, duration) into a **per-thread**
-//! buffer when dropped — no locking on the hot path. Buffers drain into
-//! a global list when their thread exits (every compute thread in this
-//! crate is scoped, so all spans are collected before a fit returns) or
-//! when [`write_chrome_trace`] flushes the calling thread explicitly.
+//! (name, category, thread, trace, start, duration) into a
+//! **per-thread** buffer when dropped — no locking on the hot path.
+//! Buffers drain into a global list when their thread exits, when they
+//! grow past [`DRAIN_SPANS`] records, or after [`DRAIN_INTERVAL`] since
+//! the last drain (so `--trace-out` is usable on a long-lived server
+//! whose event-loop threads never exit), or when [`write_chrome_trace`]
+//! flushes the calling thread explicitly.
+//!
+//! **Trace IDs.** [`mint_trace_id`] returns a compact u64 request ID:
+//! random high 32 bits (drawn once per process from the crate [`Rng`]
+//! seeded off the clock and pid, so two processes minting concurrently
+//! collide with probability ~2⁻³²) | a per-process counter in the low
+//! 32 bits. 0 means "untraced". The ID is minted at ingress (loadgen or
+//! the proxy), carried request-direction-only on the wire (JSON `"tid"`
+//! field / GZF2 frame header slot / dist `"tid"` fields — replies never
+//! carry it, so traced replies stay byte-identical to untraced ones),
+//! and attached to spans two ways: explicitly via [`record_since`], or
+//! ambiently via [`with_trace`] — an RAII guard that sets the calling
+//! thread's current trace so nested spans (a worker's featurize/absorb
+//! under its shard) inherit it. `gzk trace-merge` joins the per-process
+//! trace files on these IDs.
 //!
 //! Tracing is off by default: until [`enable`] is called (the CLI does
 //! so for `--trace-out`), creating a span costs one relaxed atomic load
@@ -13,32 +30,59 @@
 //! format — open it in `chrome://tracing` or Perfetto:
 //!
 //! ```text
-//! {"traceEvents":[{"name":"featurize","cat":"pipeline","ph":"X",
-//!                  "ts":1234,"dur":567,"pid":1,"tid":2}, ...]}
+//! {"origin_unix_us":1754555555123456,"process_pid":4242,
+//!  "process_name":"gzk server",
+//!  "traceEvents":[{"name":"featurize","cat":"pipeline","ph":"X",
+//!                  "ts":1234,"dur":567,"pid":1,"tid":2,
+//!                  "args":{"trace":"81985529216486895"}}, ...]}
 //! ```
+//!
+//! `origin_unix_us` (wall-clock micros when the monotonic origin was
+//! pinned) and the process fields are what `gzk trace-merge` uses to
+//! place files from different processes on one timeline.
 //!
 //! Span naming convention: short stage verbs scoped by category —
 //! `cat:"pipeline"` for `chunk.read`/`featurize`/`absorb`/`eval`,
 //! `cat:"fit"` for `scatter`/`merge`/`solve`/`recover`, `cat:"dist"`
 //! for `register`/`scatter`/`shard N`/`recover`, `cat:"exec"` for
-//! `jobs`.
+//! `jobs`, `cat:"serve"`/`cat:"proxy"` for per-request predict spans.
+//!
+//! [`Rng`]: crate::rng::Rng
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
-use std::time::Instant;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use super::events::json_string;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static ORIGIN: OnceLock<Instant> = OnceLock::new();
+/// Wall-clock micros at the instant ORIGIN was pinned — the cross-file
+/// baseline for `gzk trace-merge`.
+static ORIGIN_UNIX_US: OnceLock<u64> = OnceLock::new();
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 static DONE: Mutex<Vec<SpanRec>> = Mutex::new(Vec::new());
+static PROCESS_NAME: OnceLock<String> = OnceLock::new();
+
+/// Drain a thread's span buffer once it holds this many records.
+pub const DRAIN_SPANS: usize = 128;
+/// ... or once this long has passed since its last drain, whichever
+/// comes first (checked at span-record time — no timer thread).
+pub const DRAIN_INTERVAL_US: u64 = 1_000_000;
+
+/// High 32 bits of every trace ID this process mints.
+static TRACE_HIGH: OnceLock<u64> = OnceLock::new();
+/// Low-32-bit per-process mint counter (starts at 1 so the first ID is
+/// never 0 even under an all-zero random draw).
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
 
 struct SpanRec {
     name: String,
     cat: &'static str,
     tid: u64,
+    /// distributed request/trace ID; 0 = untraced
+    trace: u64,
     ts_us: u64,
     dur_us: u64,
 }
@@ -46,7 +90,15 @@ struct SpanRec {
 /// Turn span collection on (idempotent). The first call pins the
 /// timeline origin; all `ts` values are microseconds since it.
 pub fn enable() {
-    ORIGIN.get_or_init(Instant::now);
+    ORIGIN.get_or_init(|| {
+        ORIGIN_UNIX_US.get_or_init(|| {
+            SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_micros() as u64)
+                .unwrap_or(0)
+        });
+        Instant::now()
+    });
     ENABLED.store(true, Ordering::Relaxed);
 }
 
@@ -55,9 +107,83 @@ pub fn enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
 }
 
+/// Name this process in the written trace (the CLI passes its
+/// subcommand); first caller wins.
+pub fn set_process_name(name: &str) {
+    let _ = PROCESS_NAME.set(name.to_string());
+}
+
+/// Mint a new nonzero request/trace ID: random high 32 bits (fixed per
+/// process) | per-process counter low 32 bits.
+pub fn mint_trace_id() -> u64 {
+    let high = *TRACE_HIGH.get_or_init(|| {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let seed = nanos ^ (u64::from(std::process::id()) << 32) ^ 0x6765_676b_5f74_6964;
+        crate::rng::Rng::new(seed).next_u64() & 0xffff_ffff_0000_0000
+    });
+    let low = NEXT_TRACE.fetch_add(1, Ordering::Relaxed) & 0xffff_ffff;
+    let id = high | low;
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+thread_local! {
+    /// The trace ID ambient spans on this thread inherit; 0 = none.
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
+}
+
+/// RAII guard from [`with_trace`]; restores the previous ambient trace
+/// ID on drop (guards nest).
+pub struct TraceCtx {
+    prev: u64,
+}
+
+/// Set the calling thread's ambient trace ID until the guard drops —
+/// spans opened inside inherit it (a dist worker wraps its shard work
+/// in the job's trace this way).
+pub fn with_trace(trace: u64) -> TraceCtx {
+    let prev = CURRENT_TRACE.with(|c| c.replace(trace));
+    TraceCtx { prev }
+}
+
+impl Drop for TraceCtx {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT_TRACE.with(|c| c.set(prev));
+    }
+}
+
+/// The calling thread's ambient trace ID (0 = none).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(Cell::get)
+}
+
 struct LocalBuf {
     tid: u64,
     recs: Vec<SpanRec>,
+    /// `ts_us` of the last drain, for the periodic-drain policy
+    last_drain_us: u64,
+}
+
+impl LocalBuf {
+    fn push(&mut self, rec: SpanRec) {
+        let now_us = rec.ts_us.saturating_add(rec.dur_us);
+        self.recs.push(rec);
+        if self.recs.len() >= DRAIN_SPANS
+            || now_us.saturating_sub(self.last_drain_us) >= DRAIN_INTERVAL_US
+        {
+            if let Ok(mut done) = DONE.lock() {
+                done.append(&mut self.recs);
+            }
+            self.last_drain_us = now_us;
+        }
+    }
 }
 
 impl Drop for LocalBuf {
@@ -74,6 +200,7 @@ thread_local! {
     static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf {
         tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
         recs: Vec::new(),
+        last_drain_us: 0,
     });
 }
 
@@ -84,15 +211,22 @@ pub struct Span(Option<OpenSpan>);
 struct OpenSpan {
     name: String,
     cat: &'static str,
+    trace: u64,
     start: Instant,
 }
 
-/// Open a span; it records when the returned guard drops.
+/// Open a span; it records when the returned guard drops. The span
+/// carries the thread's ambient trace ID (see [`with_trace`]).
 pub fn span(cat: &'static str, name: &str) -> Span {
     if !enabled() {
         return Span(None);
     }
-    Span(Some(OpenSpan { name: name.to_string(), cat, start: Instant::now() }))
+    Span(Some(OpenSpan {
+        name: name.to_string(),
+        cat,
+        trace: current_trace(),
+        start: Instant::now(),
+    }))
 }
 
 impl Drop for Span {
@@ -105,15 +239,44 @@ impl Drop for Span {
             name: open.name,
             cat: open.cat,
             tid: 0, // assigned below from the thread-local
+            trace: open.trace,
             ts_us: open.start.duration_since(origin).as_micros() as u64,
             dur_us: open.start.elapsed().as_micros() as u64,
         };
         LOCAL.with(|local| {
             let mut buf = local.borrow_mut();
             let tid = buf.tid;
-            buf.recs.push(SpanRec { tid, ..rec });
+            buf.push(SpanRec { tid, ..rec });
         });
     }
+}
+
+/// Record a completed span from an explicit start instant and trace ID
+/// — for paths where a request's start and completion happen in
+/// different stack frames (the mux event loop opens no RAII guard; it
+/// remembers the dispatch instant and records here when the reply
+/// pumps out). No-op with tracing disabled.
+pub fn record_since(cat: &'static str, name: &str, trace: u64, start: Instant) {
+    if !enabled() {
+        return;
+    }
+    let origin = *ORIGIN.get().expect("tracing enabled implies an origin");
+    let rec = SpanRec {
+        name: name.to_string(),
+        cat,
+        tid: 0,
+        trace,
+        ts_us: start
+            .checked_duration_since(origin)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0),
+        dur_us: start.elapsed().as_micros() as u64,
+    };
+    LOCAL.with(|local| {
+        let mut buf = local.borrow_mut();
+        let tid = buf.tid;
+        buf.push(SpanRec { tid, ..rec });
+    });
 }
 
 /// Drain the calling thread's buffer into the global list (scoped
@@ -131,7 +294,8 @@ pub fn flush_thread() {
 }
 
 /// Write everything collected so far as one Chrome trace-event JSON
-/// document at `path`.
+/// document at `path`, with the wall-clock origin and process identity
+/// `gzk trace-merge` joins on.
 pub fn write_chrome_trace(path: &str) -> Result<(), String> {
     flush_thread();
     let mut done = DONE.lock().map_err(|_| "trace buffer poisoned".to_string())?;
@@ -139,17 +303,30 @@ pub fn write_chrome_trace(path: &str) -> Result<(), String> {
     let events: Vec<String> = done
         .iter()
         .map(|r| {
+            let args = if r.trace != 0 {
+                format!(",\"args\":{{\"trace\":\"{}\"}}", r.trace)
+            } else {
+                String::new()
+            };
             format!(
-                "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
+                "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}{}}}",
                 json_string(&r.name),
                 r.cat,
                 r.ts_us,
                 r.dur_us,
-                r.tid
+                r.tid,
+                args
             )
         })
         .collect();
-    let doc = format!("{{\"traceEvents\":[{}]}}\n", events.join(","));
+    let origin_unix_us = ORIGIN_UNIX_US.get().copied().unwrap_or(0);
+    let name = PROCESS_NAME.get().map(String::as_str).unwrap_or("gzk");
+    let doc = format!(
+        "{{\"origin_unix_us\":{origin_unix_us},\"process_pid\":{},\"process_name\":{},\"traceEvents\":[{}]}}\n",
+        std::process::id(),
+        json_string(name),
+        events.join(",")
+    );
     std::fs::write(path, doc).map_err(|e| format!("write trace {path:?}: {e}"))
 }
 
@@ -166,9 +343,35 @@ mod tests {
     }
 
     #[test]
+    fn minted_trace_ids_are_nonzero_and_unique() {
+        let a = mint_trace_id();
+        let b = mint_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b, "consecutive mints must differ in the counter bits");
+        assert_eq!(a >> 32, b >> 32, "one process keeps one random high half");
+    }
+
+    #[test]
+    fn ambient_trace_ctx_nests_and_restores() {
+        assert_eq!(current_trace(), 0);
+        {
+            let _outer = with_trace(7);
+            assert_eq!(current_trace(), 7);
+            {
+                let _inner = with_trace(9);
+                assert_eq!(current_trace(), 9);
+            }
+            assert_eq!(current_trace(), 7);
+        }
+        assert_eq!(current_trace(), 0);
+    }
+
+    #[test]
     fn spans_record_and_the_trace_is_valid_json() {
         enable();
         {
+            let _g = with_trace(0x1234);
             let _outer = span("test", "trace.outer");
             let _inner = span("test", "trace.inner");
             std::thread::sleep(std::time::Duration::from_millis(1));
@@ -178,22 +381,60 @@ mod tests {
                 let _s = span("test", "trace.worker");
             });
         });
+        record_since("test", "trace.since", 0x1234, Instant::now());
         let path = std::env::temp_dir()
             .join(format!("gzk-trace-unit-{}.json", std::process::id()));
         write_chrome_trace(path.to_str().expect("utf-8 temp path")).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = crate::runtime::Json::parse(&text).unwrap();
+        assert!(doc.get("origin_unix_us").and_then(|v| v.as_f64()).is_some());
+        assert!(doc.get("process_pid").and_then(|v| v.as_f64()).is_some());
         let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
         let names: Vec<&str> =
             events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
-        for want in ["trace.outer", "trace.inner", "trace.worker"] {
+        for want in ["trace.outer", "trace.inner", "trace.worker", "trace.since"] {
             assert!(names.contains(&want), "missing span {want:?} in {names:?}");
         }
         for e in events {
             assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
             assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
             assert!(e.get("dur").and_then(|d| d.as_f64()).is_some());
+            if e.get("name").and_then(|n| n.as_str()) == Some("trace.outer") {
+                let trace = e
+                    .get("args")
+                    .and_then(|a| a.get("trace"))
+                    .and_then(|t| t.as_str())
+                    .expect("traced span carries args.trace");
+                assert_eq!(trace, "4660"); // 0x1234 as decimal string
+            }
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn buffers_drain_before_thread_exit_once_past_the_size_trigger() {
+        enable();
+        // a long-lived thread records DRAIN_SPANS spans and parks; the
+        // spans must be visible in the global list while it still lives
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+        let h = std::thread::spawn(move || {
+            for i in 0..DRAIN_SPANS {
+                let _s = span("test", &format!("drain.{i}"));
+            }
+            ready_tx.send(()).unwrap();
+            rx.recv().unwrap(); // park until the assertion ran
+        });
+        ready_rx.recv().unwrap();
+        {
+            let done = DONE.lock().unwrap();
+            let drained = done.iter().filter(|r| r.name.starts_with("drain.")).count();
+            assert!(
+                drained >= DRAIN_SPANS,
+                "only {drained} of {DRAIN_SPANS} spans drained while the thread lives"
+            );
+        }
+        tx.send(()).unwrap();
+        h.join().unwrap();
     }
 }

@@ -26,6 +26,10 @@ pub struct Admission {
     /// hot-swaps (a reload builds a fresh `Admission` but resolves the
     /// same counter) and shows up in the wire `metrics` snapshot.
     rejected_total: crate::obs::registry::Counter,
+    /// registry twin of `in_flight`: `server.admission.<model>.
+    /// queue_depth` — the live depth `gzk top` reads off the wire
+    /// `metrics` snapshot
+    depth_gauge: crate::obs::registry::Gauge,
 }
 
 impl Admission {
@@ -40,6 +44,7 @@ impl Admission {
             rejected_total: crate::obs::counter(&format!(
                 "server.admission.{name}.rejected_total"
             )),
+            depth_gauge: crate::obs::gauge(&format!("server.admission.{name}.queue_depth")),
         })
     }
 
@@ -60,7 +65,10 @@ impl Admission {
                 Ordering::AcqRel,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return Some(AdmissionGuard { admission: Arc::clone(self) }),
+                Ok(_) => {
+                    self.depth_gauge.set(cur as i64 + 1);
+                    return Some(AdmissionGuard { admission: Arc::clone(self) });
+                }
                 Err(now) => cur = now,
             }
         }
@@ -88,7 +96,8 @@ pub struct AdmissionGuard {
 
 impl Drop for AdmissionGuard {
     fn drop(&mut self) {
-        self.admission.in_flight.fetch_sub(1, Ordering::AcqRel);
+        let prev = self.admission.in_flight.fetch_sub(1, Ordering::AcqRel);
+        self.admission.depth_gauge.set(prev as i64 - 1);
     }
 }
 

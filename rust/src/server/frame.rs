@@ -8,7 +8,8 @@
 //! bit-exactness is free, no shortest-round-trip formatting needed):
 //!
 //! ```text
-//! magic "GZF1" (4 bytes) | payload_len u32 LE | payload (payload_len bytes)
+//! GZF1: magic "GZF1" (4 bytes) | payload_len u32 LE | payload
+//! GZF2: magic "GZF2" (4 bytes) | payload_len u32 LE | tid u64 LE | payload
 //!
 //! request payload:
 //!   op u8: 1 = predict | 2 = ping
@@ -30,6 +31,15 @@
 //! reply or a closed connection, never an allocation sized by the
 //! attacker: [`scan`] rejects the header *before* any payload buffer
 //! exists.
+//!
+//! **GZF2** (negotiated with `{"cmd":"binary","v":2}` — see
+//! [`super::wire`]) widens the request header by a fixed 8-byte
+//! little-endian distributed trace ID slot (0 = untraced). The payload
+//! grammar is unchanged, and the ID is observability metadata only —
+//! the reply to a GZF2 request is a plain GZF1 frame with bytes
+//! identical to the untraced case. A server that acked `"v":2` stays
+//! liberal and accepts both magics on the same connection; a client
+//! whose upgrade ack came back without `"v":2` must stick to GZF1.
 
 use super::listener::MAX_LINE_BYTES;
 
@@ -37,8 +47,14 @@ use super::listener::MAX_LINE_BYTES;
 /// line to a frame-mode connection fails the magic check on byte one.
 pub const MAGIC: [u8; 4] = *b"GZF1";
 
-/// Header bytes preceding every payload: magic + u32 length.
+/// Frame magic: "GZK Frame v2" — the trace-carrying header.
+pub const MAGIC2: [u8; 4] = *b"GZF2";
+
+/// Header bytes preceding a GZF1 payload: magic + u32 length.
 pub const HEADER_BYTES: usize = 8;
+
+/// Header bytes preceding a GZF2 payload: magic + u32 length + u64 tid.
+pub const HEADER2_BYTES: usize = 16;
 
 /// Largest accepted payload — the JSON line cap, so switching modes
 /// never widens the hostile-input surface.
@@ -64,9 +80,11 @@ pub const ST_PONG: u8 = 3;
 pub enum Scan {
     /// not enough bytes yet for a verdict; keep reading
     Incomplete,
-    /// one complete frame of `total` bytes (header + payload) is buffered
-    Frame { total: usize },
-    /// the buffer does not start with [`MAGIC`] — unrecoverable framing
+    /// one complete frame of `total` bytes is buffered; the payload
+    /// starts at `header` and `tid` is the trace ID (0 for GZF1)
+    Frame { total: usize, header: usize, tid: u64 },
+    /// the buffer starts with neither [`MAGIC`] nor [`MAGIC2`] —
+    /// unrecoverable framing
     BadMagic,
     /// the length prefix exceeds [`MAX_FRAME_PAYLOAD`]
     Oversized(usize),
@@ -74,25 +92,41 @@ pub enum Scan {
 
 /// Classify the head of `buf` without allocating. Magic bytes are
 /// checked as soon as they arrive (a flood of garbage is rejected at
-/// byte one, not after 8), and an oversized length prefix is rejected
-/// from the header alone — no payload buffer is ever sized by it.
+/// byte one, not after 8 — GZF1 and GZF2 share the first three bytes,
+/// so the verdict is only deferred to byte four between the two), and
+/// an oversized length prefix is rejected from the header alone — no
+/// payload buffer is ever sized by it.
 pub fn scan(buf: &[u8]) -> Scan {
     let probe = buf.len().min(MAGIC.len());
-    if buf[..probe] != MAGIC[..probe] {
+    let v2 = if buf[..probe] == MAGIC[..probe] {
+        // could still become GZF2 at byte four, but as a *prefix* the
+        // two are indistinguishable until then; treat as GZF1-so-far
+        false
+    } else if buf[..probe] == MAGIC2[..probe] {
+        true
+    } else {
         return Scan::BadMagic;
-    }
-    if buf.len() < HEADER_BYTES {
+    };
+    let header = if v2 { HEADER2_BYTES } else { HEADER_BYTES };
+    if buf.len() < header {
         return Scan::Incomplete;
     }
     let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
     if len > MAX_FRAME_PAYLOAD {
         return Scan::Oversized(len);
     }
-    let total = HEADER_BYTES + len;
+    let tid = if v2 {
+        u64::from_le_bytes([
+            buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+        ])
+    } else {
+        0
+    };
+    let total = header + len;
     if buf.len() < total {
         return Scan::Incomplete;
     }
-    Scan::Frame { total }
+    Scan::Frame { total, header, tid }
 }
 
 /// Wrap a payload in a framed header. Panics (programmer error, not
@@ -107,10 +141,39 @@ pub fn frame(payload: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Wrap a payload in a GZF2 header carrying `tid`. `tid` 0 degrades to
+/// a plain GZF1 frame so an untraced request is byte-identical whether
+/// it went through the traced builder or not.
+pub fn frame_traced(payload: &[u8], tid: u64) -> Vec<u8> {
+    if tid == 0 {
+        return frame(payload);
+    }
+    assert!(payload.len() <= MAX_FRAME_PAYLOAD, "frame payload exceeds the wire cap");
+    let mut out = Vec::with_capacity(HEADER2_BYTES + payload.len());
+    out.extend_from_slice(&MAGIC2);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&tid.to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
 /// The payload slice of a complete frame (as returned by [`scan`] /
-/// [`read_frame`]).
+/// [`read_frame`]) — magic-aware, so both GZF1 and GZF2 frames work.
 pub fn payload(frame: &[u8]) -> &[u8] {
-    &frame[HEADER_BYTES..]
+    if frame.len() >= 4 && frame[..4] == MAGIC2 {
+        &frame[HEADER2_BYTES..]
+    } else {
+        &frame[HEADER_BYTES..]
+    }
+}
+
+/// The trace ID of a complete frame (0 for GZF1).
+pub fn frame_tid(frame: &[u8]) -> u64 {
+    if frame.len() >= HEADER2_BYTES && frame[..4] == MAGIC2 {
+        u64::from_le_bytes(frame[8..16].try_into().expect("8-byte tid slot"))
+    } else {
+        0
+    }
 }
 
 /// One parsed request payload.
@@ -178,9 +241,14 @@ pub fn pong_payload() -> Vec<u8> {
     vec![ST_PONG]
 }
 
-/// The status byte of a complete reply frame, if it has one.
+/// The status byte of a complete reply frame, if it has one. Replies
+/// are always GZF1, but the check is magic-aware for symmetry.
 pub fn reply_status(frame: &[u8]) -> Option<u8> {
-    frame.get(HEADER_BYTES).copied()
+    if frame.len() >= 4 && frame[..4] == MAGIC2 {
+        frame.get(HEADER2_BYTES).copied()
+    } else {
+        frame.get(HEADER_BYTES).copied()
+    }
 }
 
 /// Parse a request payload. Every byte is client-controlled: lengths are
@@ -285,14 +353,18 @@ pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Option<Vec<u8>>, String
     }
     header[0] = first[0];
     r.read_exact(&mut header[1..]).map_err(|e| format!("read frame header: {e}"))?;
-    if header[..4] != MAGIC {
+    let header_len = if header[..4] == MAGIC {
+        HEADER_BYTES
+    } else if header[..4] == MAGIC2 {
+        HEADER2_BYTES
+    } else {
         return Err("bad frame magic".to_string());
-    }
+    };
     let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
     if len > MAX_FRAME_PAYLOAD {
         return Err(format!("frame payload of {len} bytes exceeds the {MAX_FRAME_PAYLOAD} cap"));
     }
-    let mut buf = vec![0u8; HEADER_BYTES + len];
+    let mut buf = vec![0u8; header_len + len];
     buf[..HEADER_BYTES].copy_from_slice(&header);
     r.read_exact(&mut buf[HEADER_BYTES..]).map_err(|e| format!("read frame payload: {e}"))?;
     Ok(Some(buf))
@@ -308,8 +380,12 @@ mod tests {
         // bytes make bit-exactness trivially true; assert it anyway
         let x = [1.0 / 3.0, -0.0, 5e-324, 1.23456789012345e300];
         let f = frame(&predict_payload(Some("ridge"), &x));
-        let Scan::Frame { total } = scan(&f) else { panic!("complete frame must scan") };
+        let Scan::Frame { total, header, tid } = scan(&f) else {
+            panic!("complete frame must scan")
+        };
         assert_eq!(total, f.len());
+        assert_eq!(header, HEADER_BYTES);
+        assert_eq!(tid, 0);
         match parse_request(payload(&f)).unwrap() {
             FrameRequest::Predict { model, x: got } => {
                 assert_eq!(model.as_deref(), Some("ridge"));
@@ -374,7 +450,54 @@ mod tests {
         for cut in 0..full.len() {
             assert_eq!(scan(&full[..cut]), Scan::Incomplete, "cut at {cut}");
         }
-        assert_eq!(scan(&full), Scan::Frame { total: full.len() });
+        assert_eq!(
+            scan(&full),
+            Scan::Frame { total: full.len(), header: HEADER_BYTES, tid: 0 }
+        );
+    }
+
+    #[test]
+    fn gzf2_frames_carry_the_tid_and_interoperate_with_gzf1() {
+        let x = [1.5, -2.5, 5e-324];
+        let p = predict_payload(Some("ridge"), &x);
+        let tid = 0xfeed_beef_0000_0042_u64;
+        let f2 = frame_traced(&p, tid);
+        assert_eq!(&f2[..4], &MAGIC2);
+        // scan: same payload, wider header, tid recovered exactly
+        match scan(&f2) {
+            Scan::Frame { total, header, tid: got } => {
+                assert_eq!(total, f2.len());
+                assert_eq!(header, HEADER2_BYTES);
+                assert_eq!(got, tid);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(frame_tid(&f2), tid);
+        assert_eq!(frame_tid(&frame(&p)), 0);
+        // byte-by-byte arrival stays Incomplete until whole (the header
+        // verdict defers between GZF1/GZF2 only at byte four)
+        for cut in 0..f2.len() {
+            assert_eq!(scan(&f2[..cut]), Scan::Incomplete, "cut at {cut}");
+        }
+        // payload() is magic-aware: both framings parse to the same request
+        assert_eq!(payload(&f2), &p[..]);
+        assert_eq!(payload(&frame(&p)), &p[..]);
+        assert_eq!(parse_request(payload(&f2)).unwrap(), parse_request(&p).unwrap());
+        // tid 0 degrades to a plain GZF1 frame, byte-identical
+        assert_eq!(frame_traced(&p, 0), frame(&p));
+        // read_frame accepts both magics and returns the whole frame
+        let mut both = frame(&p);
+        both.extend_from_slice(&f2);
+        let mut r = std::io::Cursor::new(both);
+        let a = read_frame(&mut r).unwrap().unwrap();
+        let b = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(a, frame(&p));
+        assert_eq!(b, f2);
+        assert!(read_frame(&mut r).unwrap().is_none());
+        // reply_status peeks through either header width
+        let reply = frame(&status_payload(ST_RETRY, "queue full"));
+        assert_eq!(reply_status(&reply), Some(ST_RETRY));
+        assert_eq!(reply_status(&frame_traced(&status_payload(ST_RETRY, "q"), 7)), Some(ST_RETRY));
     }
 
     #[test]

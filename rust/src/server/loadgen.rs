@@ -95,6 +95,21 @@ impl ClientConn {
         }
     }
 
+    /// Negotiate binary frames while *offering* the GZF2 traced-frame
+    /// header (`{"cmd":"binary","v":2}`). Returns whether the peer acked
+    /// v2; an older peer ignores the offer, the connection stays GZF1,
+    /// and the caller must not send GZF2 frames on it.
+    pub fn upgrade_binary_v2(&mut self) -> Result<bool, String> {
+        let reply = self.roundtrip(&wire::binary_request_v2())?;
+        if reply.ok && matches!(reply.body.get("binary"), Some(Json::Bool(true))) {
+            Ok(matches!(reply.body.get("v"), Some(Json::Num(v)) if *v == 2.0))
+        } else {
+            Err(reply
+                .error
+                .unwrap_or_else(|| "server did not ack the binary upgrade".to_string()))
+        }
+    }
+
     /// Write one complete frame (header included).
     pub fn send_frame(&mut self, frame_bytes: &[u8]) -> Result<(), String> {
         self.writer.write_all(frame_bytes).map_err(|e| format!("send frame: {e}"))
@@ -140,6 +155,11 @@ pub struct LoadgenConfig {
     pub replica_sweep: Vec<usize>,
     /// protocol for the measured requests
     pub wire: WireMode,
+    /// mint a trace ID per request and carry it on the wire (`"tid"` on
+    /// JSON lines, the GZF2 header in binary mode when the server acks
+    /// v2) — replies are tid-free either way, so the bit-identity check
+    /// runs unchanged
+    pub traced: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -155,6 +175,7 @@ impl Default for LoadgenConfig {
             send_shutdown: false,
             replica_sweep: Vec::new(),
             wire: WireMode::Json,
+            traced: false,
         }
     }
 }
@@ -189,6 +210,17 @@ pub struct ReplicaTrial {
     pub trial: TrialResult,
 }
 
+/// Serve-path tracing cost (format 5): median latency with per-request
+/// trace IDs minted and spans recorded, against the same trial with
+/// tracing off. Filled by the hotpath bench's obs-overhead section.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceOverhead {
+    pub p50_us_off: f64,
+    pub p50_us_on: f64,
+    /// `(on - off) / off` — the bench bounds this below 0.10
+    pub overhead_frac: f64,
+}
+
 /// Everything a run produced; `write_json` emits `BENCH_serve.json`.
 #[derive(Clone, Debug)]
 pub struct LoadgenReport {
@@ -200,6 +232,8 @@ pub struct LoadgenReport {
     /// bit-identity checking was active (a local store was supplied)
     pub verified: bool,
     pub wire_mode: WireMode,
+    /// requests carried per-request trace IDs (see `LoadgenConfig::traced`)
+    pub traced: bool,
     pub trials: Vec<TrialResult>,
     /// replica-scaling trials (empty unless a sweep was requested)
     pub replica_trials: Vec<ReplicaTrial>,
@@ -212,6 +246,9 @@ pub struct LoadgenReport {
     /// the direct trials and cross-checked against the `stats` reply
     /// (`None` when there was no direct target or the registry was off)
     pub admission_rejected_total: Option<u64>,
+    /// tracing-on vs tracing-off serve latency (`None` unless the
+    /// hotpath bench's obs-overhead section measured it)
+    pub trace_overhead: Option<TraceOverhead>,
 }
 
 impl LoadgenReport {
@@ -232,7 +269,9 @@ impl LoadgenReport {
     /// [`pct`] and `Router::stats_reply`); format 4 adds the per-trial
     /// `wire` / `cross_mismatches` fields (the JSON-vs-binary frame
     /// comparison) plus the top-level `wire_mode` and
-    /// `admission_rejected_total`.
+    /// `admission_rejected_total`; format 5 adds the top-level `traced`
+    /// flag and the `trace_overhead` section (tracing-on vs tracing-off
+    /// serve p50, measured by the hotpath bench; `null` when unmeasured).
     pub fn write_json(&self, path: &std::path::Path) -> Result<(), String> {
         fn trial_json(t: &TrialResult, prefix: &str) -> String {
             format!(
@@ -275,11 +314,18 @@ impl LoadgenReport {
             Some(n) => n.to_string(),
             None => "null".to_string(),
         };
+        let overhead = match &self.trace_overhead {
+            Some(o) => format!(
+                r#"{{"p50_us_off":{:.2},"p50_us_on":{:.2},"overhead_frac":{:.4}}}"#,
+                o.p50_us_off, o.p50_us_on, o.overhead_frac
+            ),
+            None => "null".to_string(),
+        };
         let text = format!(
             concat!(
-                r#"{{"format":4,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
+                r#"{{"format":5,"bench":"serve","addr":{},"model":{},"dataset":{},"#,
                 r#""requests_per_client":{},"seed":{},"verified":{},"wire_mode":"{}","#,
-                r#""admission_rejected_total":{},"#,
+                r#""traced":{},"admission_rejected_total":{},"trace_overhead":{},"#,
                 r#""latency_semantics":{{"trials":"exact order statistics","#,
                 r#""server_stats":"bucket upper bound on bucket_ladder_s"}},"#,
                 r#""bucket_ladder_s":[{}],"trials":[{}],"#,
@@ -292,7 +338,9 @@ impl LoadgenReport {
             self.seed,
             self.verified,
             wire_mode,
+            self.traced,
             rejected,
+            overhead,
             ladder.join(","),
             trials.join(","),
             sweep.join(",")
@@ -530,10 +578,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         seed: cfg.seed,
         verified: local.is_some(),
         wire_mode: cfg.wire,
+        traced: cfg.traced,
         trials,
         replica_trials,
         server_stats,
         admission_rejected_total,
+        trace_overhead: None,
     })
 }
 
@@ -632,20 +682,30 @@ struct ClientOut {
 }
 
 /// One predict round-trip with the retry-on-backpressure loop, over
-/// whichever protocol the connection runs.
+/// whichever protocol the connection runs. `tid == 0` builds the exact
+/// untraced bytes (the traced builders degrade byte-identically at 0);
+/// a nonzero tid rides the `"tid"` field / GZF2 header and closes a
+/// `loadgen/predict` span on success.
 fn predict_roundtrip(
     conn: &mut ClientConn,
     model_name: &str,
     x: &[f64],
     binary: bool,
+    tid: u64,
     retries: &mut usize,
 ) -> Result<Vec<f64>, String> {
+    let t0 = Instant::now();
     if binary {
-        let req = frame::frame(&frame::predict_payload(Some(model_name), x));
+        let req = frame::frame_traced(&frame::predict_payload(Some(model_name), x), tid);
         loop {
             let reply = conn.roundtrip_frame(&req)?;
             match frame::parse_reply(frame::payload(&reply))? {
-                frame::FrameReply::Ok { y } => return Ok(y),
+                frame::FrameReply::Ok { y } => {
+                    if tid != 0 {
+                        crate::obs::trace::record_since("loadgen", "predict", tid, t0);
+                    }
+                    return Ok(y);
+                }
                 frame::FrameReply::Err { msg, retry } => {
                     if !retry || *retries >= 10_000 {
                         return Err(msg);
@@ -659,10 +719,13 @@ fn predict_roundtrip(
             }
         }
     } else {
-        let line = wire::predict_request(Some(model_name), x);
+        let line = wire::predict_request_traced(Some(model_name), x, tid);
         loop {
             let reply = conn.roundtrip(&line)?;
             if reply.ok {
+                if tid != 0 {
+                    crate::obs::trace::record_since("loadgen", "predict", tid, t0);
+                }
                 return reply.y();
             }
             if !reply.retry || *retries >= 10_000 {
@@ -686,6 +749,7 @@ fn run_trial(
     collect: bool,
 ) -> Result<(TrialResult, Vec<Vec<u64>>), String> {
     let requests = ctx.cfg.requests_per_client;
+    let traced = ctx.cfg.traced;
     let (model_name, source, local) = (ctx.model_name, ctx.source, ctx.local);
     let barrier = Barrier::new(n_clients + 1);
     let mut outs: Vec<Result<ClientOut, String>> = Vec::with_capacity(n_clients);
@@ -704,13 +768,22 @@ fn run_trial(
                     // exactly once — even on a failed connect — or the
                     // whole trial deadlocks.
                     let conn = ClientConn::connect(addr).and_then(|mut c| {
+                        let mut v2 = false;
                         if binary {
-                            c.upgrade_binary()?;
+                            if traced {
+                                // offer GZF2; a peer that declines keeps
+                                // the connection GZF1 and this client's
+                                // requests go out untraced (tid 0)
+                                v2 = c.upgrade_binary_v2()?;
+                            } else {
+                                c.upgrade_binary()?;
+                            }
                         }
-                        Ok(c)
+                        Ok((c, v2))
                     });
                     barrier.wait();
-                    let mut conn = conn?;
+                    let (mut conn, v2) = conn?;
+                    let mint = traced && (!binary || v2);
                     let mut out = ClientOut {
                         latencies: Vec::with_capacity(requests),
                         retries: 0,
@@ -720,12 +793,15 @@ fn run_trial(
                     for r in 0..requests {
                         let row = t * requests + r;
                         let (x, _y) = source.read_range(row, row + 1)?;
+                        let tid =
+                            if mint { crate::obs::trace::mint_trace_id() } else { 0 };
                         let t0 = Instant::now();
                         let y = predict_roundtrip(
                             &mut conn,
                             model_name,
                             x.row(0),
                             binary,
+                            tid,
                             &mut out.retries,
                         )?;
                         out.latencies.push(t0.elapsed().as_secs_f64());

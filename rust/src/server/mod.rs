@@ -42,6 +42,10 @@
 //!   concurrent clients over real sockets (JSON, binary, or both for
 //!   cross-checking), bit-identity verification, `BENCH_serve.json` with
 //!   throughput + latency percentiles per client count.
+//! * [`top`] — the live fleet monitor behind `gzk top`: polls the wire
+//!   `metrics` command across `--targets`, diffs counters into rates,
+//!   renders per-model throughput / ladder percentiles / queue depth /
+//!   admission rejects, optionally as machine-readable `--json-out`.
 //!
 //! [`ModelStore`]: crate::model::ModelStore
 
@@ -52,6 +56,7 @@ pub mod loadgen;
 pub mod mux;
 pub mod router;
 pub mod sys;
+pub mod top;
 pub mod wire;
 
 pub use loadgen::{ClientConn, LoadgenConfig, LoadgenReport, TrialResult, WireMode};

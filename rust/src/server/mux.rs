@@ -151,7 +151,18 @@ enum PendingOut {
     /// slot until the reply is serialized. `binary` is the connection's
     /// mode *at dispatch time*, so predicts pipelined ahead of a
     /// `binary` upgrade still get the JSON replies they asked for.
-    Await { model: String, rx: Receiver<Vec<f64>>, guard: AdmissionGuard, binary: bool },
+    /// `tid` is the request's distributed trace ID (0 = untraced),
+    /// `queued` when it was dispatched, and `hist` the route's latency
+    /// histogram — all observability-only, none touch the reply bytes.
+    Await {
+        model: String,
+        rx: Receiver<Vec<f64>>,
+        guard: AdmissionGuard,
+        binary: bool,
+        tid: u64,
+        queued: Instant,
+        hist: crate::obs::Hist,
+    },
     /// close once everything queued before this marker is flushed
     Close,
 }
@@ -533,7 +544,15 @@ fn pump(c: &mut Conn) {
             (PumpAction::TakeReady, Some(PendingOut::Ready(bytes))) => {
                 c.wbuf.extend_from_slice(&bytes);
             }
-            (PumpAction::Reply(y), Some(PendingOut::Await { model, guard, binary, .. })) => {
+            (
+                PumpAction::Reply(y),
+                Some(PendingOut::Await { model, guard, binary, tid, queued, hist }),
+            ) => {
+                hist.record(queued.elapsed().as_secs_f64());
+                if tid != 0 {
+                    // stitchable serve-side span: dispatch to reply-ready
+                    crate::obs::trace::record_since("serve", "predict", tid, queued);
+                }
                 let bytes = if binary {
                     if y.iter().all(|v| v.is_finite()) {
                         frame::frame(&frame::ok_payload(&y))
@@ -654,10 +673,13 @@ fn process_rbuf(c: &mut Conn, ctx: &LoopCtx) {
                     c.queue_last(reply);
                     break;
                 }
-                frame::Scan::Frame { total } => {
+                frame::Scan::Frame { total, header, tid } => {
+                    // liberal acceptance: a GZF2 frame is honored whether
+                    // or not the upgrade ack negotiated v2 — the tid slot
+                    // is pure metadata and the payload grammar is shared
                     let f: Vec<u8> = c.rbuf.drain(..total).collect();
                     ctx.frames_in.inc();
-                    handle_frame(c, frame::payload(&f), ctx);
+                    handle_frame(c, &f[header..], tid, ctx);
                 }
             }
         } else {
@@ -710,9 +732,12 @@ fn handle_line(c: &mut Conn, raw: &[u8], ctx: &LoopCtx) {
         Ok(wire::Request::Models) => c.queue(json_line(&shared.router.models_reply())),
         Ok(wire::Request::Stats) => c.queue(json_line(&shared.router.stats_reply())),
         Ok(wire::Request::Metrics) => c.queue(json_line(&wire::metrics_reply())),
-        Ok(wire::Request::Binary) => {
-            // the ack is the LAST JSON line; every later byte is framed
-            c.queue(json_line(&wire::binary_reply()));
+        Ok(wire::Request::Flightrec) => c.queue(json_line(&wire::flightrec_reply())),
+        Ok(wire::Request::Binary { v2 }) => {
+            // the ack is the LAST JSON line; every later byte is framed.
+            // a v2 ask is acked with "v":2 — the client may then send
+            // GZF2 trace-carrying frames
+            c.queue(json_line(&if v2 { wire::binary_reply_v2() } else { wire::binary_reply() }));
             c.binary = true;
             ctx.binary_upgrades.inc();
         }
@@ -733,25 +758,33 @@ fn handle_line(c: &mut Conn, raw: &[u8], ctx: &LoopCtx) {
                 shared.begin_shutdown();
             }
         }
-        Ok(wire::Request::Predict { model, x }) => {
+        Ok(wire::Request::Predict { model, x, tid }) => {
             match shared.router.dispatch_predict_notify(
                 model.as_deref(),
                 &x,
                 Some(Arc::clone(&ctx.bell)),
             ) {
                 Dispatch::Immediate(reply) => c.queue(json_line(&reply)),
-                Dispatch::Pending { model, rx, guard } => {
-                    c.pending.push_back(PendingOut::Await { model, rx, guard, binary: false });
+                Dispatch::Pending { model, rx, guard, hist } => {
+                    c.pending.push_back(PendingOut::Await {
+                        model,
+                        rx,
+                        guard,
+                        binary: false,
+                        tid,
+                        queued: Instant::now(),
+                        hist,
+                    });
                 }
             }
         }
     }
 }
 
-/// Dispatch one binary frame. A malformed payload is an error frame and
-/// the connection survives — parity with how a malformed JSON line is
-/// answered.
-fn handle_frame(c: &mut Conn, payload: &[u8], ctx: &LoopCtx) {
+/// Dispatch one binary frame (`tid` from the GZF2 header slot, 0 for
+/// GZF1). A malformed payload is an error frame and the connection
+/// survives — parity with how a malformed JSON line is answered.
+fn handle_frame(c: &mut Conn, payload: &[u8], tid: u64, ctx: &LoopCtx) {
     match frame::parse_request(payload) {
         Err(e) => {
             let reply = c.error_bytes(&e);
@@ -765,8 +798,16 @@ fn handle_frame(c: &mut Conn, payload: &[u8], ctx: &LoopCtx) {
                 Some(Arc::clone(&ctx.bell)),
             ) {
                 Dispatch::Immediate(reply) => c.queue(immediate_frame(&reply)),
-                Dispatch::Pending { model, rx, guard } => {
-                    c.pending.push_back(PendingOut::Await { model, rx, guard, binary: true });
+                Dispatch::Pending { model, rx, guard, hist } => {
+                    c.pending.push_back(PendingOut::Await {
+                        model,
+                        rx,
+                        guard,
+                        binary: true,
+                        tid,
+                        queued: Instant::now(),
+                        hist,
+                    });
                 }
             }
         }

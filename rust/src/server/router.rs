@@ -67,7 +67,9 @@ impl Fingerprint {
 }
 
 /// One served model: its batcher, its admission bound, and the identity
-/// of the artifact it was loaded from.
+/// of the artifact it was loaded from. The registry handles survive
+/// hot-swaps (the registry dedups by name, so a reloaded route gets the
+/// same underlying cells and the counters stay cumulative).
 struct ModelRoute {
     name: String,
     kind: ModelKind,
@@ -77,13 +79,27 @@ struct ModelRoute {
     svc: PredictionService,
     admission: Arc<Admission>,
     fingerprint: Fingerprint,
+    /// `server.predict.<name>.requests_total` — admitted predicts; the
+    /// `gzk top` monitor diffs it into a per-model throughput rate
+    req_counter: crate::obs::Counter,
+    /// `server.predict.<name>.latency_s` — dispatch-to-reply wall time
+    /// on the ladder histogram, so the metrics snapshot (and `gzk top`)
+    /// gets per-model p50/p95/p99
+    lat_hist: crate::obs::Hist,
 }
 
 /// How the listener answers a predict request.
 pub enum Dispatch {
     /// Admitted into a model's batcher: await `rx`, then reply. The guard
-    /// holds the admission slot until the reply is written.
-    Pending { model: String, rx: Receiver<Vec<f64>>, guard: AdmissionGuard },
+    /// holds the admission slot until the reply is written; `hist` is the
+    /// route's latency histogram for the listener to record
+    /// dispatch-to-reply time into.
+    Pending {
+        model: String,
+        rx: Receiver<Vec<f64>>,
+        guard: AdmissionGuard,
+        hist: crate::obs::Hist,
+    },
     /// Answered without touching a batcher (routing / validation /
     /// backpressure) — already a complete reply line.
     Immediate(String),
@@ -279,6 +295,8 @@ impl Router {
             svc,
             admission: Admission::new(name, self.cfg.max_queue),
             fingerprint,
+            req_counter: crate::obs::counter(&format!("server.predict.{name}.requests_total")),
+            lat_hist: crate::obs::hist(&format!("server.predict.{name}.latency_s")),
         })
     }
 
@@ -341,7 +359,15 @@ impl Router {
             )));
         };
         match route.svc.client().submit_notify(x, notify) {
-            Ok(rx) => Dispatch::Pending { model: route.name.clone(), rx, guard },
+            Ok(rx) => {
+                route.req_counter.inc();
+                Dispatch::Pending {
+                    model: route.name.clone(),
+                    rx,
+                    guard,
+                    hist: route.lat_hist.clone(),
+                }
+            }
             Err(e) => Dispatch::Immediate(wire::error_reply(&e)),
         }
     }

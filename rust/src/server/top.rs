@@ -1,0 +1,387 @@
+//! `gzk top` — a live fleet monitor over the wire `metrics` command.
+//!
+//! Each tick polls every `--targets` address (servers and/or proxies),
+//! pulls the registry snapshot the `metrics` command carries, and diffs
+//! the counters against the previous tick to turn cumulative totals
+//! into **rates**: per-model throughput (`server.predict.<model>.
+//! requests_total`), admission rejects per second, live queue depth
+//! (the `server.admission.<model>.queue_depth` gauge) and the ladder
+//! p50/p95/p99 straight from the `server.predict.<model>.latency_s`
+//! histogram. One row per (target, model) renders as a fixed-width
+//! table; `--json-out` additionally rewrites a machine-readable
+//! document after every tick (`{"format":1,"monitor":"top",...}` — the
+//! CI smoke jobs assert its rate fields). `--once` takes exactly two
+//! polls one interval apart, renders the single diff, and exits — the
+//! scriptable mode; without it the monitor runs until interrupted.
+//!
+//! Like every observability surface in the crate, `top` is strictly
+//! read-only: it sends only the `metrics` command, which mutates
+//! nothing, so watching a fleet cannot perturb what it serves (beyond
+//! servicing the poll itself). A target that fails to answer renders as
+//! a `down` row and keeps its slot — a replica rebooting mid-watch
+//! reappears on the next tick.
+
+use super::loadgen::ClientConn;
+use super::wire;
+use crate::runtime::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Knobs for [`run_top`]; the defaults match the CLI's.
+#[derive(Clone, Debug)]
+pub struct TopConfig {
+    /// addresses to poll (servers or proxies; each answers `metrics`
+    /// about itself)
+    pub targets: Vec<String>,
+    /// time between polls (the rate window)
+    pub interval: Duration,
+    /// two polls, one rendered diff, exit (the scriptable mode)
+    pub once: bool,
+    /// rewrite a machine-readable snapshot here after every tick
+    pub json_out: Option<std::path::PathBuf>,
+}
+
+impl Default for TopConfig {
+    fn default() -> TopConfig {
+        TopConfig {
+            targets: Vec::new(),
+            interval: Duration::from_secs(2),
+            once: false,
+            json_out: None,
+        }
+    }
+}
+
+/// One target's registry snapshot, flattened for diffing.
+#[derive(Clone, Debug, Default)]
+struct Snap {
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    /// name -> (total, p50_s, p95_s, p99_s)
+    hists: BTreeMap<String, (f64, f64, f64, f64)>,
+}
+
+/// One rendered (target, model) row.
+#[derive(Clone, Debug)]
+struct ModelRow {
+    model: String,
+    requests_total: f64,
+    rps: f64,
+    p50_s: f64,
+    p95_s: f64,
+    p99_s: f64,
+    queue_depth: f64,
+    rejects_ps: f64,
+}
+
+fn num_map(j: Option<&Json>) -> BTreeMap<String, f64> {
+    match j {
+        Some(Json::Obj(m)) => {
+            m.iter().filter_map(|(k, v)| Some((k.clone(), v.as_f64()?))).collect()
+        }
+        _ => BTreeMap::new(),
+    }
+}
+
+fn parse_snapshot(body: &Json) -> Result<Snap, String> {
+    let m = body.get("metrics").ok_or_else(|| "metrics reply missing snapshot".to_string())?;
+    let hists = match m.get("hists") {
+        Some(Json::Obj(h)) => h
+            .iter()
+            .filter_map(|(k, v)| {
+                Some((
+                    k.clone(),
+                    (
+                        v.get("total")?.as_f64()?,
+                        v.get("p50_s")?.as_f64()?,
+                        v.get("p95_s")?.as_f64()?,
+                        v.get("p99_s")?.as_f64()?,
+                    ),
+                ))
+            })
+            .collect(),
+        _ => BTreeMap::new(),
+    };
+    Ok(Snap { counters: num_map(m.get("counters")), gauges: num_map(m.get("gauges")), hists })
+}
+
+fn fetch_snapshot(addr: &str) -> Result<Snap, String> {
+    let mut conn = ClientConn::connect(addr)?;
+    let reply = conn.roundtrip(&wire::cmd_request("metrics"))?;
+    if !reply.ok {
+        return Err(reply.error.unwrap_or_else(|| "metrics command failed".to_string()));
+    }
+    parse_snapshot(&reply.body)
+}
+
+/// Diff two snapshots of one target into per-model rows. Models are
+/// discovered from the `server.predict.<model>.requests_total` counter
+/// namespace of the *current* snapshot (a model hot-loaded between
+/// ticks appears with its full count as the delta).
+fn model_rows(prev: &Snap, cur: &Snap, dt_s: f64) -> Vec<ModelRow> {
+    const PREFIX: &str = "server.predict.";
+    const SUFFIX: &str = ".requests_total";
+    let dt = dt_s.max(1e-9);
+    let mut rows = Vec::new();
+    for (name, &total) in &cur.counters {
+        let Some(model) = name.strip_prefix(PREFIX).and_then(|r| r.strip_suffix(SUFFIX)) else {
+            continue;
+        };
+        let before = prev.counters.get(name).copied().unwrap_or(0.0);
+        let rej_name = format!("server.admission.{model}.rejected_total");
+        let rej_now = cur.counters.get(&rej_name).copied().unwrap_or(0.0);
+        let rej_before = prev.counters.get(&rej_name).copied().unwrap_or(0.0);
+        let (_, p50, p95, p99) = cur
+            .hists
+            .get(&format!("server.predict.{model}.latency_s"))
+            .copied()
+            .unwrap_or((0.0, 0.0, 0.0, 0.0));
+        rows.push(ModelRow {
+            model: model.to_string(),
+            requests_total: total,
+            rps: (total - before).max(0.0) / dt,
+            p50_s: p50,
+            p95_s: p95,
+            p99_s: p99,
+            queue_depth: cur
+                .gauges
+                .get(&format!("server.admission.{model}.queue_depth"))
+                .copied()
+                .unwrap_or(0.0),
+            rejects_ps: (rej_now - rej_before).max(0.0) / dt,
+        });
+    }
+    rows
+}
+
+/// Sum of the per-event-loop connection gauges (`server.loop<i>.conns`).
+fn conns_of(snap: &Snap) -> f64 {
+    snap.gauges
+        .iter()
+        .filter(|(k, _)| k.starts_with("server.loop") && k.ends_with(".conns"))
+        .map(|(_, v)| v)
+        .sum()
+}
+
+fn render_tick(
+    out: &mut String,
+    targets: &[String],
+    polls: &[Result<Snap, String>],
+    prevs: &[Result<Snap, String>],
+    dt_s: f64,
+) {
+    out.push_str(&format!(
+        "{:<22} {:<14} {:>10} {:>9} {:>9} {:>9} {:>6} {:>7} {:>6}\n",
+        "target", "model", "rps", "p50_ms", "p95_ms", "p99_ms", "queue", "rej/s", "conns"
+    ));
+    for (i, addr) in targets.iter().enumerate() {
+        let (cur, prev) = (&polls[i], &prevs[i]);
+        let (cur, prev) = match (cur, prev) {
+            (Ok(c), Ok(p)) => (c, p),
+            (Ok(c), Err(_)) => (c, c), // just came up: rates unknown, show 0
+            (Err(e), _) => {
+                out.push_str(&format!("{addr:<22} down: {e}\n"));
+                continue;
+            }
+        };
+        let rows = model_rows(prev, cur, dt_s);
+        if rows.is_empty() {
+            out.push_str(&format!("{:<22} {:<14} (no served models)\n", addr, "-"));
+            continue;
+        }
+        let conns = conns_of(cur);
+        for r in rows {
+            out.push_str(&format!(
+                "{:<22} {:<14} {:>10.1} {:>9.2} {:>9.2} {:>9.2} {:>6.0} {:>7.1} {:>6.0}\n",
+                addr,
+                r.model,
+                r.rps,
+                r.p50_s * 1e3,
+                r.p95_s * 1e3,
+                r.p99_s * 1e3,
+                r.queue_depth,
+                r.rejects_ps,
+                conns
+            ));
+        }
+    }
+}
+
+fn tick_json(
+    targets: &[String],
+    polls: &[Result<Snap, String>],
+    prevs: &[Result<Snap, String>],
+    elapsed_s: f64,
+    dt_s: f64,
+) -> String {
+    let per: Vec<String> = targets
+        .iter()
+        .enumerate()
+        .map(|(i, addr)| {
+            let addr_json = wire::json_string(addr);
+            let (cur, prev) = match (&polls[i], &prevs[i]) {
+                (Ok(c), Ok(p)) => (c, p),
+                (Ok(c), Err(_)) => (c, c),
+                (Err(e), _) => {
+                    return format!(
+                        r#"{{"addr":{addr_json},"ok":false,"error":{}}}"#,
+                        wire::json_string(e)
+                    );
+                }
+            };
+            let models: Vec<String> = model_rows(prev, cur, dt_s)
+                .iter()
+                .map(|r| {
+                    format!(
+                        concat!(
+                            r#"{{"model":{},"requests_total":{:.0},"rps":{:.2},"#,
+                            r#""p50_s":{:?},"p95_s":{:?},"p99_s":{:?},"#,
+                            r#""queue_depth":{:.0},"rejects_ps":{:.2}}}"#
+                        ),
+                        wire::json_string(&r.model),
+                        r.requests_total,
+                        r.rps,
+                        r.p50_s,
+                        r.p95_s,
+                        r.p99_s,
+                        r.queue_depth,
+                        r.rejects_ps
+                    )
+                })
+                .collect();
+            format!(
+                r#"{{"addr":{addr_json},"ok":true,"conns":{:.0},"models":[{}]}}"#,
+                conns_of(cur),
+                models.join(",")
+            )
+        })
+        .collect();
+    format!(
+        r#"{{"elapsed_s":{elapsed_s:.3},"window_s":{dt_s:.3},"targets":[{}]}}"#,
+        per.join(",")
+    )
+}
+
+/// Drive the monitor; rendered ticks go to `print` (the CLI passes a
+/// stdout printer — injected so tests capture output without a TTY).
+/// Returns after one diff with `once`, else loops until the process is
+/// interrupted.
+pub fn run_top(cfg: &TopConfig, print: &mut dyn FnMut(&str)) -> Result<(), String> {
+    if cfg.targets.is_empty() {
+        return Err("top needs at least one --targets address".to_string());
+    }
+    if cfg.interval.is_zero() {
+        return Err("top needs a nonzero --interval".to_string());
+    }
+    let t0 = Instant::now();
+    let mut prevs: Vec<Result<Snap, String>> =
+        cfg.targets.iter().map(|a| fetch_snapshot(a)).collect();
+    let mut prev_at = Instant::now();
+    let mut ticks: Vec<String> = Vec::new();
+    loop {
+        std::thread::sleep(cfg.interval);
+        let polls: Vec<Result<Snap, String>> =
+            cfg.targets.iter().map(|a| fetch_snapshot(a)).collect();
+        let now = Instant::now();
+        let dt_s = now.duration_since(prev_at).as_secs_f64();
+        let mut text = String::new();
+        render_tick(&mut text, &cfg.targets, &polls, &prevs, dt_s);
+        print(&text);
+        if let Some(path) = &cfg.json_out {
+            ticks.push(tick_json(
+                &cfg.targets,
+                &polls,
+                &prevs,
+                t0.elapsed().as_secs_f64(),
+                dt_s,
+            ));
+            // rewritten whole every tick so the file is always a complete
+            // document, even when the monitor is killed mid-watch
+            let doc = format!(
+                r#"{{"format":1,"monitor":"top","interval_s":{:.3},"polls":[{}]}}"#,
+                cfg.interval.as_secs_f64(),
+                ticks.join(",")
+            );
+            std::fs::write(path, doc).map_err(|e| format!("write {path:?}: {e}"))?;
+        }
+        if cfg.once {
+            return Ok(());
+        }
+        prevs = polls;
+        prev_at = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(requests: f64, rejects: f64, depth: f64) -> Snap {
+        let mut s = Snap::default();
+        s.counters.insert("server.predict.elev.requests_total".to_string(), requests);
+        s.counters.insert("server.admission.elev.rejected_total".to_string(), rejects);
+        s.gauges.insert("server.admission.elev.queue_depth".to_string(), depth);
+        s.gauges.insert("server.loop0.conns".to_string(), 3.0);
+        s.gauges.insert("server.loop1.conns".to_string(), 2.0);
+        s.hists.insert(
+            "server.predict.elev.latency_s".to_string(),
+            (requests, 2e-4, 1e-3, 2e-3),
+        );
+        s
+    }
+
+    #[test]
+    fn counter_diffs_become_rates_and_hists_pass_through() {
+        let rows = model_rows(&snap(100.0, 4.0, 1.0), &snap(350.0, 9.0, 2.0), 2.5);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.model, "elev");
+        assert!((r.rps - 100.0).abs() < 1e-9, "Δ250 over 2.5 s, got {}", r.rps);
+        assert!((r.rejects_ps - 2.0).abs() < 1e-9);
+        assert_eq!(r.queue_depth, 2.0);
+        assert_eq!((r.p50_s, r.p95_s, r.p99_s), (2e-4, 1e-3, 2e-3));
+        assert_eq!(conns_of(&snap(0.0, 0.0, 0.0)), 5.0);
+
+        // a model absent from the previous tick (hot-loaded) attributes
+        // its whole count to the window rather than going negative
+        let rows = model_rows(&Snap::default(), &snap(50.0, 0.0, 0.0), 1.0);
+        assert!((rows[0].rps - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tick_json_carries_rate_fields_and_down_targets() {
+        let targets = vec!["a:1".to_string(), "b:2".to_string()];
+        let polls = vec![Ok(snap(10.0, 0.0, 0.0)), Err("refused".to_string())];
+        let prevs = vec![Ok(snap(0.0, 0.0, 0.0)), Err("refused".to_string())];
+        let doc = tick_json(&targets, &polls, &prevs, 1.0, 1.0);
+        let j = Json::parse(&doc).expect("tick json parses");
+        let ts = j.get("targets").and_then(|t| t.as_arr()).expect("targets array");
+        assert_eq!(ts.len(), 2);
+        let m = ts[0].get("models").and_then(|m| m.as_arr()).expect("models array");
+        assert_eq!(m[0].get("rps").and_then(Json::as_f64), Some(10.0));
+        assert!(m[0].get("p95_s").and_then(Json::as_f64).is_some());
+        assert_eq!(ts[1].get("ok"), Some(&Json::Bool(false)));
+
+        // the rendered table shows the down target without panicking
+        let mut text = String::new();
+        render_tick(&mut text, &targets, &polls, &prevs, 1.0);
+        assert!(text.contains("down: refused"), "{text}");
+        assert!(text.contains("elev"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_parser_reads_the_registry_shape() {
+        let body = Json::parse(concat!(
+            r#"{"metrics":{"enabled":true,"counters":{"server.predict.m.requests_total":7},"#,
+            r#""gauges":{"server.admission.m.queue_depth":1},"#,
+            r#""hists":{"server.predict.m.latency_s":"#,
+            r#"{"total":7,"p50_s":0.0002,"p95_s":0.001,"p99_s":0.002,"counts":[7]}}}}"#
+        ))
+        .expect("test body parses");
+        let s = parse_snapshot(&body).expect("snapshot parses");
+        assert_eq!(s.counters["server.predict.m.requests_total"], 7.0);
+        assert_eq!(s.hists["server.predict.m.latency_s"].3, 0.002);
+        let rows = model_rows(&Snap::default(), &s, 7.0);
+        assert!((rows[0].rps - 1.0).abs() < 1e-9);
+    }
+}

@@ -2,11 +2,18 @@
 //! request object per line, replies in request order on the same
 //! connection.
 //!
-//! Request grammar (the full protocol — see DESIGN.md §3c):
+//! Request grammar (the full protocol — see DESIGN.md §3c/§3e):
 //!
 //! ```text
 //! {"cmd":"predict","x":[1.0,2.0,3.0],"model":"ridge"}   model optional when
 //!                                                        exactly one is served
+//!     ... ,"tid":"81985529216486895"}   optional distributed trace ID
+//!                       (u64 as a decimal string — the dist-wire
+//!                       convention, since the in-crate JSON number is
+//!                       an f64 and exact only to 2^53); minted at
+//!                       ingress, echoed into every span the request
+//!                       touches, never echoed in the reply (replies
+//!                       stay byte-identical traced or not)
 //! {"cmd":"models"}      list served models (name, kind, d, output_dim)
 //! {"cmd":"stats"}       per-model ServeMetrics + latency percentiles +
 //!                       admission queue depth / rejects
@@ -15,12 +22,21 @@
 //!                       latency histograms — see the `obs` module);
 //!                       answered locally by both `gzk server` and
 //!                       `gzk proxy`, never forwarded
+//! {"cmd":"flightrec"}   dump the crash flight recorder ring (recent
+//!                       event lines); answered locally, like metrics
 //! {"cmd":"ping"}        liveness probe
 //! {"cmd":"binary"}      switch THIS connection to length-prefixed
 //!                       binary frames after the ack (see
 //!                       [`super::frame`]); predict requests/replies
 //!                       then skip JSON entirely while staying
-//!                       bit-exact (raw little-endian f64 bytes)
+//!                       bit-exact (raw little-endian f64 bytes).
+//!                       "v":2 requests the GZF2 trace-carrying frame
+//!                       header: a server that understands it acks with
+//!                       "v":2 and the client may then send GZF2 frames;
+//!                       an old server ignores the field and acks
+//!                       without it, so the client sticks to GZF1 —
+//!                       version negotiation keeps old and new peers
+//!                       interoperable in both directions
 //! {"cmd":"shutdown"}    stop the server after acking (honored from
 //!                       loopback peers only, unless the server was
 //!                       started with --allow-remote-shutdown)
@@ -48,15 +64,32 @@ use crate::runtime::Json;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Predict one point; `model` routes between served models and may be
-    /// omitted when the server serves exactly one.
-    Predict { model: Option<String>, x: Vec<f64> },
+    /// omitted when the server serves exactly one. `tid` is the optional
+    /// distributed trace ID (0 = untraced) — observability metadata only,
+    /// it never changes routing, batching, or the reply bytes.
+    Predict { model: Option<String>, x: Vec<f64>, tid: u64 },
     Models,
     Stats,
     Metrics,
+    Flightrec,
     Ping,
-    /// switch this connection to binary frame mode after the ack
-    Binary,
+    /// switch this connection to binary frame mode after the ack; `v2`
+    /// means the client asked for GZF2 trace-carrying frames
+    Binary { v2: bool },
     Shutdown,
+}
+
+/// Parse an optional `"tid"` field: a u64 as a decimal string. Absent →
+/// 0 (untraced). Present-but-invalid is a hard error — a garbled trace
+/// ID must surface at the sender, not silently drop tracing.
+fn parse_tid(j: &Json) -> Result<u64, String> {
+    match j.get("tid") {
+        None => Ok(0),
+        Some(Json::Str(s)) => {
+            s.parse::<u64>().map_err(|_| format!("\"tid\" is not a u64 decimal string: {s:?}"))
+        }
+        Some(_) => Err("\"tid\" must be a u64 decimal string".to_string()),
+    }
 }
 
 /// Parse one request line. Malformed input is an error *message* (the
@@ -91,17 +124,27 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                     return Err("predict \"model\" must be a string".to_string());
                 }
             };
-            Ok(Request::Predict { model, x })
+            Ok(Request::Predict { model, x, tid: parse_tid(&j)? })
         }
         "models" => Ok(Request::Models),
         "stats" => Ok(Request::Stats),
         "metrics" => Ok(Request::Metrics),
+        "flightrec" => Ok(Request::Flightrec),
         "ping" => Ok(Request::Ping),
-        "binary" => Ok(Request::Binary),
+        "binary" => {
+            let v2 = match j.get("v") {
+                None => false,
+                Some(v) if v.as_f64() == Some(2.0) => true,
+                Some(_) => {
+                    return Err("binary \"v\" must be 2 (the only negotiable version)".to_string())
+                }
+            };
+            Ok(Request::Binary { v2 })
+        }
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!(
-            "unknown cmd {other:?}; known: predict, models, stats, metrics, ping, binary, \
-             shutdown"
+            "unknown cmd {other:?}; known: predict, models, stats, metrics, flightrec, ping, \
+             binary, shutdown"
         )),
     }
 }
@@ -114,6 +157,18 @@ pub fn predict_request(model: Option<&str>, x: &[f64]) -> String {
         }
         None => format!(r#"{{"cmd":"predict","x":{}}}"#, vec_to_json(x)),
     }
+}
+
+/// [`predict_request`] carrying a distributed trace ID (`tid` 0 falls
+/// back to the untraced line — the two must stay byte-identical so a
+/// "traced" client with tracing disabled perturbs nothing).
+pub fn predict_request_traced(model: Option<&str>, x: &[f64], tid: u64) -> String {
+    let mut line = predict_request(model, x);
+    if tid != 0 {
+        line.truncate(line.len() - 1);
+        line.push_str(&format!(r#","tid":"{tid}"}}"#));
+    }
+    line
 }
 
 /// Build an argument-less command line (`models` / `stats` / `ping` /
@@ -155,10 +210,29 @@ pub fn binary_reply() -> String {
     r#"{"ok":true,"binary":true}"#.to_string()
 }
 
+/// Ack for a `{"cmd":"binary","v":2}` upgrade from a server that speaks
+/// GZF2: the echoed `"v":2` is the client's licence to send
+/// trace-carrying frames.
+pub fn binary_reply_v2() -> String {
+    r#"{"ok":true,"binary":true,"v":2}"#.to_string()
+}
+
+/// The `binary` upgrade line requesting GZF2 frames.
+pub fn binary_request_v2() -> String {
+    r#"{"cmd":"binary","v":2}"#.to_string()
+}
+
 /// Reply to `metrics`: the process-wide registry snapshot, embedded
 /// verbatim (it is already one consistent JSON object).
 pub fn metrics_reply() -> String {
     format!(r#"{{"ok":true,"metrics":{}}}"#, crate::obs::registry::snapshot_json())
+}
+
+/// Reply to `flightrec`: the crash flight recorder ring, embedded
+/// verbatim (already one JSON object — see
+/// [`crate::obs::flightrec::dump_json`]).
+pub fn flightrec_reply() -> String {
+    format!(r#"{{"ok":true,"flightrec":{}}}"#, crate::obs::flightrec::dump_json())
 }
 
 pub fn shutdown_reply() -> String {
@@ -218,8 +292,9 @@ mod tests {
         let x = vec![1.0 / 3.0, -0.0, 5e-324, 1.23456789012345e300];
         let line = predict_request(Some("ridge"), &x);
         match parse_request(&line).unwrap() {
-            Request::Predict { model, x: got } => {
+            Request::Predict { model, x: got, tid } => {
                 assert_eq!(model.as_deref(), Some("ridge"));
+                assert_eq!(tid, 0, "no tid field parses as untraced");
                 assert_eq!(x.len(), got.len());
                 for (a, b) in x.iter().zip(&got) {
                     assert_eq!(a.to_bits(), b.to_bits());
@@ -247,21 +322,53 @@ mod tests {
             r#"{"cmd":"predict","x":["a"]}"#,
             r#"{"cmd":"predict","x":[1e999]}"#,
             r#"{"cmd":"predict","x":[1],"model":5}"#,
+            r#"{"cmd":"predict","x":[1],"tid":7}"#,
+            r#"{"cmd":"predict","x":[1],"tid":"not-a-number"}"#,
+            r#"{"cmd":"predict","x":[1],"tid":"-3"}"#,
+            r#"{"cmd":"binary","v":3}"#,
+            r#"{"cmd":"binary","v":"2"}"#,
             r#"{"cmd":"launch-missiles"}"#,
             r#"{"cmd":42}"#,
         ] {
             assert!(parse_request(bad).is_err(), "accepted {bad:?}");
         }
         assert_eq!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), Request::Ping);
-        assert_eq!(parse_request(r#"{"cmd":"binary"}"#).unwrap(), Request::Binary);
+        assert_eq!(
+            parse_request(r#"{"cmd":"binary"}"#).unwrap(),
+            Request::Binary { v2: false }
+        );
+        assert_eq!(parse_request(&binary_request_v2()).unwrap(), Request::Binary { v2: true });
         assert_eq!(parse_request(&cmd_request("stats")).unwrap(), Request::Stats);
         assert_eq!(parse_request(&cmd_request("metrics")).unwrap(), Request::Metrics);
+        assert_eq!(parse_request(&cmd_request("flightrec")).unwrap(), Request::Flightrec);
         assert_eq!(parse_request(&cmd_request("shutdown")).unwrap(), Request::Shutdown);
         // model omitted: route to the single served model
         match parse_request(r#"{"cmd":"predict","x":[1,2]}"#).unwrap() {
-            Request::Predict { model: None, x } => assert_eq!(x, vec![1.0, 2.0]),
+            Request::Predict { model: None, x, tid: 0 } => assert_eq!(x, vec![1.0, 2.0]),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn traced_requests_carry_the_tid_and_untraced_lines_are_identical() {
+        let x = [1.5, -2.5];
+        // tid 0 → byte-identical to the untraced builder
+        assert_eq!(predict_request_traced(Some("m"), &x, 0), predict_request(Some("m"), &x));
+        let line = predict_request_traced(Some("m"), &x, 0x0123_4567_89ab_cdef);
+        match parse_request(&line).unwrap() {
+            Request::Predict { tid, .. } => assert_eq!(tid, 0x0123_4567_89ab_cdef),
+            other => panic!("{other:?}"),
+        }
+        // a u64 above 2^53 survives the decimal-string convention exactly
+        let big = u64::MAX;
+        match parse_request(&predict_request_traced(None, &x, big)).unwrap() {
+            Request::Predict { tid, .. } => assert_eq!(tid, big),
+            other => panic!("{other:?}"),
+        }
+        // the flightrec reply embeds the ring dump as valid JSON
+        let f = parse_reply(&flightrec_reply()).unwrap();
+        assert!(f.ok);
+        assert!(f.body.get("flightrec").and_then(|j| j.get("next_seq")).is_some());
     }
 
     #[test]

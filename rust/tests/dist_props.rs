@@ -39,6 +39,7 @@ fn awkward_stats(f_dim: usize) -> WireStats {
         shard_id: 7,
         worker_id: 2,
         featurize_secs: 0.125,
+        tid: 0,
         stats: RidgeStats { g, b, n: 8192, yy: vals[0] },
     }
 }
@@ -58,12 +59,22 @@ fn register_and_job_round_trip() {
     // f64-backed JSON number would corrupt it)
     let spec = bound_spec(3);
     let data = DataSpec { name: "elevation".to_string(), rows: 4000, seed: u64::MAX - 12 };
-    match parse_msg(&job_msg(5, &spec, &data)).expect("job parses") {
-        DistMsg::Job { worker_id, spec: wire_spec, data: wire_data } => {
+    match parse_msg(&job_msg(5, &spec, &data, 0)).expect("job parses") {
+        DistMsg::Job { worker_id, spec: wire_spec, data: wire_data, tid } => {
             assert_eq!(worker_id, 5);
             assert_eq!(wire_spec.to_json(), spec.to_json());
             assert_eq!(wire_data, data);
+            // an untraced job carries no tid key at all — old peers see
+            // byte-identical frames
+            assert_eq!(tid, 0);
+            assert!(!job_msg(5, &spec, &data, 0).contains("tid"));
         }
+        other => panic!("expected job, got {other:?}"),
+    }
+    // a traced job round-trips a full-width u64 (decimal string on the
+    // wire — a f64-backed JSON number would corrupt it)
+    match parse_msg(&job_msg(5, &spec, &data, u64::MAX - 7)).expect("traced job parses") {
+        DistMsg::Job { tid, .. } => assert_eq!(tid, u64::MAX - 7),
         other => panic!("expected job, got {other:?}"),
     }
     let e = parse_msg(r#"{"dist":"job","proto":1,"worker":0}"#).unwrap_err();
@@ -73,10 +84,15 @@ fn register_and_job_round_trip() {
 #[test]
 fn assign_done_error_round_trip() {
     let t = ShardRange { shard_id: 3, lo: 24_576, hi: 32_768 };
-    match parse_msg(&assign_msg(t)).expect("assign parses") {
-        DistMsg::Assign(r) => {
+    match parse_msg(&assign_msg(t, 0)).expect("assign parses") {
+        DistMsg::Assign(r, tid) => {
             assert_eq!((r.shard_id, r.lo, r.hi), (t.shard_id, t.lo, t.hi));
+            assert_eq!(tid, 0);
         }
+        other => panic!("expected assign, got {other:?}"),
+    }
+    match parse_msg(&assign_msg(t, 0xF00D_F00D_F00D_F00D)).expect("traced assign parses") {
+        DistMsg::Assign(_, tid) => assert_eq!(tid, 0xF00D_F00D_F00D_F00D),
         other => panic!("expected assign, got {other:?}"),
     }
     // an empty (or inverted) range can never be a valid task
@@ -108,6 +124,8 @@ fn stats_round_trip_is_bit_exact() {
     };
     assert_eq!(ws.shard_id, original.shard_id);
     assert_eq!(ws.worker_id, original.worker_id);
+    assert_eq!(ws.tid, 0);
+    assert!(!line.contains("tid"), "untraced stats must not grow a tid key");
     assert_eq!(ws.featurize_secs.to_bits(), original.featurize_secs.to_bits());
     assert_eq!(ws.stats.n, original.stats.n);
     assert_eq!(ws.stats.yy.to_bits(), original.stats.yy.to_bits());
@@ -118,6 +136,15 @@ fn stats_round_trip_is_bit_exact() {
     }
     for (a, b) in ws.stats.g.data().iter().zip(original.stats.g.data()) {
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // a traced reply echoes the run's trace ID at full u64 width
+    let mut traced = awkward_stats(2);
+    traced.tid = u64::MAX - 1;
+    let traced_line = stats_msg(&traced).expect("traced stats encode");
+    match parse_msg(&traced_line).expect("traced stats parse") {
+        DistMsg::Stats(ws) => assert_eq!(ws.tid, u64::MAX - 1),
+        other => panic!("expected stats, got {other:?}"),
     }
 }
 

@@ -1,0 +1,263 @@
+//! End-to-end distributed tracing through real processes: a traced
+//! `predict` sent through a `gzk proxy` into a `gzk server` replica must
+//! (a) leave spans carrying the SAME trace ID in both processes'
+//! `--trace-out` files, over the JSON wire and over GZF2 binary frames,
+//! (b) produce replies byte-identical to the untraced twin of every
+//! request (tracing is read-only on the wire), and (c) stitch into one
+//! Perfetto timeline via the `gzk trace-merge` subcommand, with each
+//! process on its own lane.
+
+use gzk::features::{FeatureSpec, KernelSpec, Method};
+use gzk::linalg::Mat;
+use gzk::model::{set_run_data, Model, ModelStore, RidgeModel};
+use gzk::rng::Rng;
+use gzk::runtime::Json;
+use gzk::server::{frame, wire, ClientConn};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gzk"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gzk-trace-e2e-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn tmp_file(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gzk-trace-e2e-{}-{tag}", std::process::id()))
+}
+
+/// Fit a small ridge model into a fresh store (the replica's fleet).
+fn serving_store(tag: &str) -> (PathBuf, RidgeModel) {
+    let dir = fresh_dir(tag);
+    let spec = FeatureSpec::new(
+        KernelSpec::Gaussian { bandwidth: 1.0 },
+        Method::Gegenbauer { q: 5, s: 1 },
+        16,
+        11,
+    )
+    .bind(3);
+    let mut rng = Rng::new(0xFEED);
+    let x = Mat::from_fn(60, 3, |_, _| rng.normal() * 0.5);
+    let y: Vec<f64> = (0..60).map(|i| x[(i, 0)] + 0.3 * x[(i, 2)]).collect();
+    let model = RidgeModel::fit(spec, &x, &y, 1e-3).unwrap();
+    set_run_data("elevation", 60);
+    ModelStore::open(&dir).unwrap().save("ridge", &model).unwrap();
+    (dir, model)
+}
+
+/// Kill the child on panic so a failed assertion never leaks a listener.
+struct ChildGuard(Option<Child>);
+
+impl ChildGuard {
+    fn wait(&mut self) -> std::process::ExitStatus {
+        self.0.take().expect("child already waited").wait().expect("wait on child")
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        if let Some(mut c) = self.0.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn spawn_gzk(args: &[&str]) -> ChildGuard {
+    let child = bin()
+        .args(args)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap_or_else(|e| panic!("spawn gzk {args:?}: {e}"));
+    ChildGuard(Some(child))
+}
+
+fn wait_listening(addr: &str) {
+    for _ in 0..400 {
+        if TcpStream::connect(addr).is_ok() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    panic!("{addr} never started listening");
+}
+
+/// Spans in a `--trace-out` document carrying `args.trace == tid`.
+fn span_names_for_trace(doc: &Json, tid: u64) -> Vec<String> {
+    let want = format!("{tid}");
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array")
+        .iter()
+        .filter(|e| {
+            e.get("args").and_then(|a| a.get("trace")).and_then(Json::as_str)
+                == Some(want.as_str())
+        })
+        .filter_map(|e| e.get("name").and_then(Json::as_str).map(str::to_string))
+        .collect()
+}
+
+#[test]
+fn traced_predicts_stitch_across_proxy_and_replica_and_replies_stay_bit_identical() {
+    let (dir, model) = serving_store("stitch");
+    let server_trace = tmp_file("server-trace.json");
+    let proxy_trace = tmp_file("proxy-trace.json");
+    let merged = tmp_file("merged-trace.json");
+    for f in [&server_trace, &proxy_trace, &merged] {
+        let _ = std::fs::remove_file(f);
+    }
+
+    // pid-derived ports: unique per test process, no listener collisions
+    // between concurrently running test binaries
+    let base = 21000 + (std::process::id() % 30000) as u16;
+    let server_addr = format!("127.0.0.1:{base}");
+    let proxy_addr = format!("127.0.0.1:{}", base + 1);
+
+    let mut server = spawn_gzk(&[
+        "server",
+        "--store",
+        dir.to_str().unwrap(),
+        "--addr",
+        &server_addr,
+        "--poll-ms",
+        "50",
+        "--trace-out",
+        server_trace.to_str().unwrap(),
+    ]);
+    wait_listening(&server_addr);
+    let mut proxy = spawn_gzk(&[
+        "proxy",
+        "--replicas",
+        &server_addr,
+        "--listen",
+        &proxy_addr,
+        "--trace-out",
+        proxy_trace.to_str().unwrap(),
+    ]);
+    wait_listening(&proxy_addr);
+
+    // two client-minted trace IDs: one rides the JSON "tid" field, one
+    // the GZF2 frame-header slot
+    const TID_JSON: u64 = 0x5EED_0000_0000_0001;
+    const TID_BIN: u64 = 0x5EED_0000_0000_0002;
+    let x = [0.25, -0.7, 0.1];
+    let local_bits: Vec<u64> = {
+        let out = model.predict(&Mat::from_vec(1, x.len(), x.to_vec()));
+        out.row(0).iter().map(|v| v.to_bits()).collect()
+    };
+
+    // --- JSON wire: traced and untraced replies are byte-identical ---
+    let mut conn = ClientConn::connect(&proxy_addr).unwrap();
+    let plain = conn.roundtrip(&wire::predict_request(Some("ridge"), &x)).unwrap();
+    assert!(plain.ok, "{plain:?}");
+    let traced =
+        conn.roundtrip(&wire::predict_request_traced(Some("ridge"), &x, TID_JSON)).unwrap();
+    assert!(traced.ok, "{traced:?}");
+    assert_eq!(plain.raw, traced.raw, "a JSON reply must never reveal its request's trace ID");
+    let bits: Vec<u64> = traced.y().unwrap().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(bits, local_bits, "traced predict drifted from the local model");
+
+    // --- binary wire: the proxy negotiates GZF2 (v2) and the traced
+    // frame's reply is byte-identical to the untraced GZF1 twin ---
+    let mut bconn = ClientConn::connect(&proxy_addr).unwrap();
+    let v2 = bconn.upgrade_binary_v2().unwrap();
+    assert!(v2, "a new proxy must ack the v2 binary offer");
+    let payload = frame::predict_payload(Some("ridge"), &x);
+    let plain_frame = bconn.roundtrip_frame(&frame::frame(&payload)).unwrap();
+    assert_eq!(frame::reply_status(&plain_frame), Some(frame::ST_OK));
+    let traced_frame = bconn.roundtrip_frame(&frame::frame_traced(&payload, TID_BIN)).unwrap();
+    assert_eq!(
+        plain_frame, traced_frame,
+        "a binary reply must never reveal its request's trace ID"
+    );
+
+    // tear the tier down over the wire: the proxy fans shutdown out to
+    // the replica, both processes exit cleanly and write their traces
+    let bye = conn.roundtrip(&wire::cmd_request("shutdown")).unwrap();
+    assert!(bye.ok, "{bye:?}");
+    drop(conn);
+    drop(bconn);
+    assert!(proxy.wait().success(), "proxy exited uncleanly");
+    assert!(server.wait().success(), "server exited uncleanly");
+
+    // --- both processes hold spans for BOTH client-minted trace IDs ---
+    let proxy_doc = Json::parse(&std::fs::read_to_string(&proxy_trace).unwrap()).unwrap();
+    let server_doc = Json::parse(&std::fs::read_to_string(&server_trace).unwrap()).unwrap();
+    assert_eq!(proxy_doc.get("process_name").and_then(Json::as_str), Some("gzk proxy"));
+    assert_eq!(server_doc.get("process_name").and_then(Json::as_str), Some("gzk server"));
+    for tid in [TID_JSON, TID_BIN] {
+        let fwd = span_names_for_trace(&proxy_doc, tid);
+        assert!(
+            fwd.iter().any(|n| n == "forward"),
+            "proxy trace lacks a forward span for {tid:#x}: {fwd:?}"
+        );
+        let srv = span_names_for_trace(&server_doc, tid);
+        assert!(
+            srv.iter().any(|n| n == "predict"),
+            "server trace lacks a predict span for {tid:#x}: {srv:?}"
+        );
+    }
+    // the untraced JSON predict was minted a trace ID at the proxy
+    // ingress: some forwarded span beyond the two client-minted ones
+    let proxy_events = proxy_doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let (t_json, t_bin) = (TID_JSON.to_string(), TID_BIN.to_string());
+    let minted = proxy_events
+        .iter()
+        .filter_map(|e| e.get("args").and_then(|a| a.get("trace")).and_then(Json::as_str))
+        .filter(|t| *t != t_json.as_str() && *t != t_bin.as_str())
+        .count();
+    assert!(minted >= 1, "the proxy never minted an ingress trace ID for the untraced predict");
+
+    // --- `gzk trace-merge` stitches the two files into one timeline ---
+    let out = bin()
+        .args([
+            "trace-merge",
+            "--inputs",
+            &format!("{},{}", proxy_trace.display(), server_trace.display()),
+            "--out",
+            merged.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn gzk trace-merge");
+    assert!(
+        out.status.success(),
+        "trace-merge failed\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let merged_doc = Json::parse(&std::fs::read_to_string(&merged).unwrap()).unwrap();
+    let events = merged_doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    // each input file became its own process lane
+    let lanes: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+        .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+        .collect();
+    assert!(lanes.iter().any(|l| l.contains("gzk proxy")), "{lanes:?}");
+    assert!(lanes.iter().any(|l| l.contains("gzk server")), "{lanes:?}");
+    // and every client-minted trace ID spans BOTH lanes of the merge
+    for tid in [TID_JSON, TID_BIN] {
+        let want = format!("{tid}");
+        let pids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter(|e| {
+                e.get("args").and_then(|a| a.get("trace")).and_then(Json::as_str)
+                    == Some(want.as_str())
+            })
+            .filter_map(|e| e.get("pid").and_then(Json::as_f64))
+            .map(|p| p as u64)
+            .collect();
+        assert_eq!(pids.len(), 2, "trace {tid:#x} must appear in both processes' lanes");
+    }
+
+    for f in [&server_trace, &proxy_trace, &merged] {
+        let _ = std::fs::remove_file(f);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
